@@ -1,0 +1,96 @@
+//! Noise study (extension §10): what NISQ noise does to DQuLearn, and
+//! what the noise-aware co-Manager recovers.
+//!
+//! 1. Accuracy-vs-noise curve: train the classifier on progressively
+//!    noisier simulated backends.
+//! 2. Mixed pool: ideal + noisy workers; paper's CRU-only scheduling vs
+//!    the noise-aware policy (`ManagerConfig::noise_aware_alpha`).
+//! 3. Checkpoint round-trip of the best model.
+//!
+//! ```bash
+//! cargo run --release --example noise_study
+//! ```
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::InProcCluster;
+use dqulearn::coordinator::ManagerConfig;
+use dqulearn::data::Dataset;
+use dqulearn::model::checkpoint;
+use dqulearn::model::optimizer::Optimizer;
+use dqulearn::model::quclassi::LossKind;
+use dqulearn::model::{QuClassiModel, TrainConfig, Trainer};
+use dqulearn::qsim::NoiseModel;
+use dqulearn::util::Rng;
+
+fn train_on(cluster: &InProcCluster, seed: u64) -> Result<(QuClassiModel, f64), String> {
+    let cfg = QuClassiConfig::new(5, 1)?;
+    let ds = Dataset::binary_pair(None, 3, 9, 16, 42);
+    let mut model = QuClassiModel::new(cfg, &mut Rng::new(seed));
+    let report = Trainer::new(TrainConfig {
+        epochs: 10,
+        optimizer: Optimizer::adam(0.05),
+        train_classical: true,
+        classical_lr_scale: 0.1,
+        seed: 7,
+        early_stop_acc: None,
+        loss: LossKind::Generative,
+    })
+    .train(&mut model, &ds, cluster)?;
+    Ok((model, report.test_accuracy))
+}
+
+fn main() -> Result<(), String> {
+    // --- 1. accuracy vs noise level (mean over 3 model seeds: finite-
+    //        shot-style gradient noise makes single runs high-variance) ---
+    println!("== accuracy vs backend noise (q5l1, 3-vs-9, generative loss, 3 seeds) ==");
+    println!("{:>22} {:>10}", "noise (p1/p2/readout)", "mean acc");
+    for (label, noise) in [
+        ("ideal", None),
+        ("0.001/0.01/0.02", Some(NoiseModel::nisq())),
+        ("0.005/0.05/0.05", Some(NoiseModel { p1: 0.005, p2: 0.05, readout: 0.05 })),
+        ("0.02/0.20/0.10", Some(NoiseModel { p1: 0.02, p2: 0.20, readout: 0.10 })),
+    ] {
+        let mut acc_sum = 0.0;
+        for seed in [42u64, 43, 44] {
+            let mut builder = InProcCluster::builder().workers(&[5, 5]);
+            if let Some(nm) = noise {
+                builder = builder.noise(nm);
+            }
+            let cluster = builder.build()?;
+            let (_m, acc) = train_on(&cluster, seed)?;
+            cluster.shutdown();
+            acc_sum += acc;
+        }
+        println!("{label:>22} {:>10.2}", acc_sum / 3.0);
+    }
+    println!("(small-sample accuracies are coarse — {:.2} steps — but ideal backends sit at the top;\n  gradient corruption from gate noise is the impact the paper's Discussion anticipates)", 1.0/6.0);
+
+    // --- 2. mixed pool: CRU-only vs noise-aware scheduling ---
+    println!("\n== mixed pool (2 ideal + 2 noisy workers): scheduling policy ==");
+    let heavy = NoiseModel { p1: 0.01, p2: 0.10, readout: 0.08 };
+    let profiles: [(usize, Option<NoiseModel>); 4] =
+        [(5, None), (5, None), (5, Some(heavy)), (5, Some(heavy))];
+    let mut best: Option<(QuClassiModel, f64)> = None;
+    for (label, alpha) in [("CRU-only (paper)", None), ("noise-aware α=1.0", Some(1.0))] {
+        let cluster = InProcCluster::builder()
+            .workers_with_noise(&profiles)
+            .manager_config(ManagerConfig { noise_aware_alpha: alpha, ..Default::default() })
+            .build()?;
+        let (model, acc) = train_on(&cluster, 42)?;
+        cluster.shutdown();
+        println!("{label:>22} test acc {acc:.2}");
+        if best.as_ref().map(|(_, b)| acc > *b).unwrap_or(true) {
+            best = Some((model, acc));
+        }
+    }
+
+    // --- 3. checkpoint the best model ---
+    let (model, acc) = best.unwrap();
+    let path = std::env::temp_dir().join("dqulearn_noise_study.ckpt.json");
+    checkpoint::save(&model, &path)?;
+    let restored = checkpoint::load(&path)?;
+    assert_eq!(model.theta[0], restored.theta[0]);
+    println!("\ncheckpointed best model (acc {acc:.2}) to {} and verified reload", path.display());
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}

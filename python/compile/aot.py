@@ -1,0 +1,110 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (NOT ``lowered.compile()`` / ``.serialize()``) is the
+interchange format: jax >= 0.5 serializes HloModuleProto with 64-bit
+instruction ids, which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs, per (qubits, layers) configuration:
+
+    artifacts/quclassi_q{q}_l{l}.hlo.txt      — circuit-bank evaluator
+    artifacts/quclassi_q{q}_l{l}.grad.hlo.txt — fused param-shift gradient
+    artifacts/manifest.json                   — machine-readable index
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+GRAD_DATA_BATCH = 8  # data points per fused-gradient call
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text.
+
+    ``as_hlo_text(True)`` = print_large_constants: the default printer
+    elides constants above ~10 elements as ``{...}``, which the text
+    parser silently reads back as zeros (observed as all-zero gradients
+    for the q7/l3 artifact, whose shift-coefficient vector has 14
+    entries).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_fidelity(n_qubits: int, n_layers: int) -> str:
+    fn = model.make_fidelity_fn(n_qubits, n_layers, use_pallas=True)
+    n_p = ref.n_params(n_qubits, n_layers)
+    n_d = ref.n_features(n_qubits)
+    thetas = jax.ShapeDtypeStruct((model.BATCH, n_p), jnp.float32)
+    data = jax.ShapeDtypeStruct((model.BATCH, n_d), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(thetas, data))
+
+
+def lower_grad_bank(n_qubits: int, n_layers: int) -> str:
+    fn = model.make_grad_bank_fn(n_qubits, n_layers, use_pallas=True)
+    n_p = ref.n_params(n_qubits, n_layers)
+    n_d = ref.n_features(n_qubits)
+    theta = jax.ShapeDtypeStruct((n_p,), jnp.float32)
+    data = jax.ShapeDtypeStruct((GRAD_DATA_BATCH, n_d), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(theta, data))
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "batch": model.BATCH, "grad_data_batch": GRAD_DATA_BATCH,
+                "artifacts": []}
+    for q, l in model.CONFIGS:
+        meta = model.config_meta(q, l)
+
+        text = lower_fidelity(q, l)
+        path = os.path.join(out_dir, meta["name"] + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["path"] = os.path.basename(path)
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+
+        gtext = lower_grad_bank(q, l)
+        gpath = os.path.join(out_dir, meta["name"] + ".grad.hlo.txt")
+        with open(gpath, "w") as f:
+            f.write(gtext)
+        meta["grad_path"] = os.path.basename(gpath)
+        meta["grad_data_batch"] = GRAD_DATA_BATCH
+        meta["grad_sha256"] = hashlib.sha256(gtext.encode()).hexdigest()
+
+        manifest["artifacts"].append(meta)
+        print(f"lowered {meta['name']}: P={meta['n_params']} D={meta['n_features']} "
+              f"fid={len(text)}B grad={len(gtext)}B")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} configs)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,330 @@
+"""Pure-jnp batched statevector oracle.
+
+This module is the correctness reference (the "oracle") for the Pallas
+kernels in ``statevector.py`` and for the Rust ``qsim`` simulator. It is
+deliberately written in the most transparent style possible: complex64
+statevectors of shape ``[B, 2**q]`` and explicit einsum contractions.
+
+Qubit convention (shared by every layer of the stack, including Rust):
+**big-endian** — qubit 0 is the most significant bit of the state index.
+The amplitude index of basis state ``|b_0 b_1 ... b_{q-1}>`` is
+``sum_k b_k * 2**(q-1-k)``.
+
+QuClassi register layout for a ``q``-qubit configuration (q odd):
+
+    qubit 0                  : ancilla (swap test)
+    qubits 1 .. S            : variational "class state" register
+    qubits S+1 .. 2S         : data register
+    with S = (q - 1) // 2
+
+All gates accept *batched* angles ``theta: f32[B]`` so that a whole
+parameter-shift circuit bank evaluates in a single call.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INV_SQRT2 = 0.7071067811865476
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+
+def zero_state(batch: int, n_qubits: int) -> jnp.ndarray:
+    """|0...0> for every batch element: complex64[B, 2**q]."""
+    n = 2**n_qubits
+    state = jnp.zeros((batch, n), dtype=jnp.complex64)
+    return state.at[:, 0].set(1.0 + 0.0j)
+
+
+# ---------------------------------------------------------------------------
+# generic gate application
+# ---------------------------------------------------------------------------
+
+
+def apply_1q(state: jnp.ndarray, gate: jnp.ndarray, qubit: int, n_qubits: int) -> jnp.ndarray:
+    """Apply a (possibly batched) single-qubit gate.
+
+    ``gate`` is ``complex[2, 2]`` or ``complex[B, 2, 2]``.
+    """
+    b = state.shape[0]
+    left = 2**qubit
+    st = state.reshape(b, left, 2, -1)
+    if gate.ndim == 2:
+        out = jnp.einsum("ij,bljr->blir", gate, st)
+    else:
+        out = jnp.einsum("bij,bljr->blir", gate, st)
+    return out.reshape(b, 2**n_qubits)
+
+
+def apply_2q(
+    state: jnp.ndarray, gate: jnp.ndarray, q0: int, q1: int, n_qubits: int
+) -> jnp.ndarray:
+    """Apply a (possibly batched) two-qubit gate to qubits (q0, q1), q0 < q1.
+
+    ``gate`` is ``complex[4, 4]`` or ``complex[B, 4, 4]`` acting on the
+    ordered pair (q0, q1): row/col index = 2*b(q0) + b(q1).
+    """
+    assert q0 < q1, "apply_2q expects q0 < q1"
+    b = state.shape[0]
+    a = 2**q0
+    m = 2 ** (q1 - q0 - 1)
+    st = state.reshape(b, a, 2, m, 2, -1)
+    g = gate.reshape(*gate.shape[:-2], 2, 2, 2, 2)  # [.., i0, i1, j0, j1]
+    if gate.ndim == 2:
+        out = jnp.einsum("ikjl,bajmlr->baimkr", g, st)
+    else:
+        out = jnp.einsum("bikjl,bajmlr->baimkr", g, st)
+    return out.reshape(b, 2**n_qubits)
+
+
+# ---------------------------------------------------------------------------
+# concrete gates (batched angles)
+# ---------------------------------------------------------------------------
+
+
+def _c(x):
+    return x.astype(jnp.complex64)
+
+
+def ry_matrix(theta: jnp.ndarray) -> jnp.ndarray:
+    """Ry(theta): f32[B] -> complex64[B, 2, 2]."""
+    c = jnp.cos(theta / 2)
+    s = jnp.sin(theta / 2)
+    row0 = jnp.stack([c, -s], axis=-1)
+    row1 = jnp.stack([s, c], axis=-1)
+    return _c(jnp.stack([row0, row1], axis=-2))
+
+
+def rz_matrix(theta: jnp.ndarray) -> jnp.ndarray:
+    """Rz(theta) = diag(e^{-i t/2}, e^{i t/2})."""
+    half = theta / 2
+    e_m = jnp.cos(half) - 1j * jnp.sin(half)
+    e_p = jnp.cos(half) + 1j * jnp.sin(half)
+    z = jnp.zeros_like(e_m)
+    row0 = jnp.stack([e_m, z], axis=-1)
+    row1 = jnp.stack([z, e_p], axis=-1)
+    return jnp.stack([row0, row1], axis=-2).astype(jnp.complex64)
+
+
+def ryy_matrix(theta: jnp.ndarray) -> jnp.ndarray:
+    """Ryy(theta) = exp(-i theta/2 Y(x)Y)."""
+    c = _c(jnp.cos(theta / 2))
+    is_ = 1j * jnp.sin(theta / 2).astype(jnp.complex64)
+    z = jnp.zeros_like(c)
+    rows = [
+        jnp.stack([c, z, z, is_], axis=-1),
+        jnp.stack([z, c, -is_, z], axis=-1),
+        jnp.stack([z, -is_, c, z], axis=-1),
+        jnp.stack([is_, z, z, c], axis=-1),
+    ]
+    return jnp.stack(rows, axis=-2)
+
+
+def rzz_matrix(theta: jnp.ndarray) -> jnp.ndarray:
+    """Rzz(theta) = diag(e^{-it/2}, e^{it/2}, e^{it/2}, e^{-it/2})."""
+    half = theta / 2
+    e_m = jnp.cos(half) - 1j * jnp.sin(half)
+    e_p = jnp.cos(half) + 1j * jnp.sin(half)
+    z = jnp.zeros_like(e_m)
+    rows = [
+        jnp.stack([e_m, z, z, z], axis=-1),
+        jnp.stack([z, e_p, z, z], axis=-1),
+        jnp.stack([z, z, e_p, z], axis=-1),
+        jnp.stack([z, z, z, e_m], axis=-1),
+    ]
+    return jnp.stack(rows, axis=-2).astype(jnp.complex64)
+
+
+def cry_matrix(theta: jnp.ndarray) -> jnp.ndarray:
+    """CRY: control = first qubit of the pair."""
+    c = _c(jnp.cos(theta / 2))
+    s = _c(jnp.sin(theta / 2))
+    one = jnp.ones_like(c)
+    z = jnp.zeros_like(c)
+    rows = [
+        jnp.stack([one, z, z, z], axis=-1),
+        jnp.stack([z, one, z, z], axis=-1),
+        jnp.stack([z, z, c, -s], axis=-1),
+        jnp.stack([z, z, s, c], axis=-1),
+    ]
+    return jnp.stack(rows, axis=-2)
+
+
+def crz_matrix(theta: jnp.ndarray) -> jnp.ndarray:
+    """CRZ: control = first qubit of the pair."""
+    half = theta / 2
+    e_m = jnp.cos(half) - 1j * jnp.sin(half)
+    e_p = jnp.cos(half) + 1j * jnp.sin(half)
+    one = jnp.ones_like(e_m)
+    z = jnp.zeros_like(e_m)
+    rows = [
+        jnp.stack([one, z, z, z], axis=-1),
+        jnp.stack([z, one, z, z], axis=-1),
+        jnp.stack([z, z, e_m, z], axis=-1),
+        jnp.stack([z, z, z, e_p], axis=-1),
+    ]
+    return jnp.stack(rows, axis=-2).astype(jnp.complex64)
+
+
+H_MATRIX = jnp.array(
+    [[INV_SQRT2, INV_SQRT2], [INV_SQRT2, -INV_SQRT2]], dtype=jnp.complex64
+)
+
+
+def apply_h(state: jnp.ndarray, qubit: int, n_qubits: int) -> jnp.ndarray:
+    return apply_1q(state, H_MATRIX, qubit, n_qubits)
+
+
+def apply_ry(state, theta, qubit, n_qubits):
+    return apply_1q(state, ry_matrix(theta), qubit, n_qubits)
+
+
+def apply_rz(state, theta, qubit, n_qubits):
+    return apply_1q(state, rz_matrix(theta), qubit, n_qubits)
+
+
+def apply_ryy(state, theta, q0, q1, n_qubits):
+    return apply_2q(state, ryy_matrix(theta), q0, q1, n_qubits)
+
+
+def apply_rzz(state, theta, q0, q1, n_qubits):
+    return apply_2q(state, rzz_matrix(theta), q0, q1, n_qubits)
+
+
+def _swap_pair_order(g: jnp.ndarray) -> jnp.ndarray:
+    """Reorder a 4x4 two-qubit gate from pair (a, b) to pair (b, a)."""
+    perm = jnp.array([0, 2, 1, 3])
+    return g[..., perm, :][..., :, perm]
+
+
+def apply_cry(state, theta, control, target, n_qubits):
+    if control < target:
+        return apply_2q(state, cry_matrix(theta), control, target, n_qubits)
+    return apply_2q(state, _swap_pair_order(cry_matrix(theta)), target, control, n_qubits)
+
+
+def apply_crz(state, theta, control, target, n_qubits):
+    if control < target:
+        return apply_2q(state, crz_matrix(theta), control, target, n_qubits)
+    return apply_2q(state, _swap_pair_order(crz_matrix(theta)), target, control, n_qubits)
+
+
+def apply_cswap(state: jnp.ndarray, control: int, a: int, b: int, n_qubits: int) -> jnp.ndarray:
+    """Fredkin gate: swap qubits (a, b) where ``control`` is |1>.
+
+    Implemented as an amplitude-index permutation — exact and cheap.
+    """
+    bsz = state.shape[0]
+    n = 2**n_qubits
+    idx = jnp.arange(n)
+    cb = n_qubits - 1 - control
+    ab = n_qubits - 1 - a
+    bb = n_qubits - 1 - b
+    c_set = (idx >> cb) & 1
+    bit_a = (idx >> ab) & 1
+    bit_b = (idx >> bb) & 1
+    swapped = idx ^ ((bit_a ^ bit_b) * ((1 << ab) | (1 << bb)))
+    src = jnp.where(c_set == 1, swapped, idx)
+    return state[:, src].reshape(bsz, n)
+
+
+def prob_qubit0_zero(state: jnp.ndarray, n_qubits: int) -> jnp.ndarray:
+    """P(qubit 0 = |0>) per batch element."""
+    b = state.shape[0]
+    st = state.reshape(b, 2, 2 ** (n_qubits - 1))
+    return jnp.sum(jnp.abs(st[:, 0, :]) ** 2, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# QuClassi circuit (reference implementation of the L2 model)
+# ---------------------------------------------------------------------------
+
+
+def quclassi_layout(n_qubits: int):
+    """Return (S, state_qubits, data_qubits) for the register layout."""
+    assert n_qubits % 2 == 1 and n_qubits >= 3, "need odd qubit count >= 3"
+    s = (n_qubits - 1) // 2
+    return s, list(range(1, s + 1)), list(range(s + 1, 2 * s + 1))
+
+
+def n_params(n_qubits: int, n_layers: int) -> int:
+    """Trainable parameter count for a (q, l) configuration."""
+    s = (n_qubits - 1) // 2
+    total = 2 * s  # layer 1: Ry + Rz on each state qubit
+    if n_layers >= 2:
+        total += 2 * (s - 1)  # Ryy + Rzz on adjacent pairs
+    if n_layers >= 3:
+        total += 2 * (s - 1)  # CRY + CRZ on adjacent pairs
+    return total
+
+
+def n_features(n_qubits: int) -> int:
+    """Classical features consumed by the data encoder (2 per data qubit)."""
+    return n_qubits - 1  # == 2 * S
+
+
+def controlled_param_mask(n_qubits: int, n_layers: int):
+    """Boolean mask over the parameter vector: True for CRY/CRZ params.
+
+    Controlled rotations have generator eigenvalues {0, ±1/2} (frequency
+    gaps 1/2 AND 1), so the two-term ±π/2 parameter-shift rule is *biased*
+    for them; the exact gradient needs the four-term rule
+    ``c+·[f(θ+π/2)−f(θ−π/2)] − c−·[f(θ+3π/2)−f(θ−3π/2)]`` with
+    ``c± = (√2 ± 1)/(4√2)``. Plain rotations (Ry/Rz/Ryy/Rzz) have gap 1
+    only and keep the textbook two-term rule.
+    """
+    s = (n_qubits - 1) // 2
+    mask = [False] * n_params(n_qubits, n_layers)
+    if n_layers >= 3:
+        for k in range(2 * (s - 1)):
+            mask[2 * s + 2 * (s - 1) + k] = True
+    return mask
+
+
+def fidelity_batch(thetas: jnp.ndarray, data: jnp.ndarray, n_qubits: int, n_layers: int):
+    """Reference QuClassi swap-test fidelity.
+
+    thetas: f32[B, P]   (P = n_params(q, l))
+    data:   f32[B, D]   (D = n_features(q) — encoder angles)
+    returns f32[B]      fidelity estimate = 2*P(anc=0) - 1
+    """
+    b = thetas.shape[0]
+    s, state_qs, data_qs = quclassi_layout(n_qubits)
+    st = zero_state(b, n_qubits)
+
+    # --- data encoding: Ry(x_{2i}) Rz(x_{2i+1}) on data qubit i ---
+    for i, q in enumerate(data_qs):
+        st = apply_ry(st, data[:, 2 * i], q, n_qubits)
+        st = apply_rz(st, data[:, 2 * i + 1], q, n_qubits)
+
+    # --- variational layers on the state register ---
+    p = 0
+    for q in state_qs:  # layer 1: single-qubit unitary
+        st = apply_ry(st, thetas[:, p], q, n_qubits)
+        st = apply_rz(st, thetas[:, p + 1], q, n_qubits)
+        p += 2
+    if n_layers >= 2:  # layer 2: dual-qubit unitary
+        for i in range(s - 1):
+            q0, q1 = state_qs[i], state_qs[i + 1]
+            st = apply_ryy(st, thetas[:, p], q0, q1, n_qubits)
+            st = apply_rzz(st, thetas[:, p + 1], q0, q1, n_qubits)
+            p += 2
+    if n_layers >= 3:  # layer 3: entanglement unitary
+        for i in range(s - 1):
+            q0, q1 = state_qs[i], state_qs[i + 1]
+            st = apply_cry(st, thetas[:, p], q0, q1, n_qubits)
+            st = apply_crz(st, thetas[:, p + 1], q0, q1, n_qubits)
+            p += 2
+    assert p == n_params(n_qubits, n_layers)
+
+    # --- swap test ---
+    st = apply_h(st, 0, n_qubits)
+    for sq, dq in zip(state_qs, data_qs):
+        st = apply_cswap(st, 0, sq, dq, n_qubits)
+    st = apply_h(st, 0, n_qubits)
+    p0 = prob_qubit0_zero(st, n_qubits)
+    return 2.0 * p0 - 1.0

@@ -1,0 +1,120 @@
+"""L2 — the QuClassi variational fidelity model (build-time JAX).
+
+One jitted function per (qubits, layers) configuration:
+
+    fidelity_batch(thetas: f32[B, P], data: f32[B, D]) -> (fid: f32[B],)
+
+It is the *circuit-bank evaluator*: the Rust coordinator packs up to B
+independent parameter-shift circuits (possibly from different clients —
+this is what multi-tenant batching executes) into one call. The function
+body delegates the statevector evolution to the fused L1 Pallas kernel.
+
+A second entry point, ``grad_bank``, fuses the parameter-shift rule
+on-device: given ONE parameter vector and a batch of data points it
+evaluates the unshifted fidelity and all 2P shifted fidelities in a single
+XLA program, returning fidelities and gradients. This is the L2
+optimization documented in EXPERIMENTS.md §Perf (it removes the O(P)
+host-side bank round-trips for the common "one theta, many data" case).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import statevector as sv
+
+# AOT batch size: the Rust runtime pads every bank to a multiple of this.
+BATCH = 32
+
+# The six paper configurations: qC in {5, 7} x nL in {1, 2, 3}.
+CONFIGS = [(q, l) for q in (5, 7) for l in (1, 2, 3)]
+
+
+def make_fidelity_fn(n_qubits: int, n_layers: int, use_pallas: bool = True, block=None):
+    """Build the circuit-bank evaluator for one configuration.
+
+    Returns ``fn(thetas[B, P], data[B, D]) -> (fid[B],)`` — a 1-tuple, the
+    calling convention of the AOT artifact (``return_tuple=True``).
+    """
+
+    def fn(thetas, data):
+        if use_pallas:
+            fid = sv.fused_fidelity(thetas, data, n_qubits, n_layers, block=block)
+        else:
+            fid = ref.fidelity_batch(thetas, data, n_qubits, n_layers)
+        return (fid,)
+
+    return fn
+
+
+def make_grad_bank_fn(n_qubits: int, n_layers: int, use_pallas: bool = True):
+    """Build the fused parameter-shift gradient evaluator.
+
+    ``fn(theta[P], data[B, D]) -> (fid[B], grads[B, P])``
+
+    Internally expands to a bank of B * (4P + 1) circuits evaluated by the
+    same fused kernel. Plain rotations (Ry/Rz/Ryy/Rzz, frequency gap 1)
+    use the textbook two-term rule
+    ``dfid/dθ = (fid(+π/2) − fid(−π/2)) / 2``; controlled rotations
+    (CRY/CRZ, generator eigenvalues {0, ±1/2}) need the exact four-term
+    rule ``c₊·[f(θ+π/2)−f(θ−π/2)] − c₋·[f(θ+3π/2)−f(θ−3π/2)]`` with
+    ``c± = (√2 ± 1)/(4√2)``. The bank keeps a uniform 4P+1 layout (both
+    shift families for every param) so shapes stay static; the per-param
+    coefficients select the right rule.
+    """
+    n_p = ref.n_params(n_qubits, n_layers)
+    ctrl = jnp.asarray(ref.controlled_param_mask(n_qubits, n_layers))
+    sqrt2 = 2.0**0.5
+    c_plus = jnp.where(ctrl, (sqrt2 + 1.0) / (4.0 * sqrt2), 0.5).astype(jnp.float32)
+    c_minus = jnp.where(ctrl, (sqrt2 - 1.0) / (4.0 * sqrt2), 0.0).astype(jnp.float32)
+
+    def fn(theta, data):
+        b = data.shape[0]
+        eye1 = jnp.eye(n_p, dtype=jnp.float32) * (jnp.pi / 2)
+        eye3 = jnp.eye(n_p, dtype=jnp.float32) * (3 * jnp.pi / 2)
+        # bank of parameter vectors: [4P + 1, P]
+        bank = jnp.concatenate(
+            [
+                theta[None, :],
+                theta[None, :] + eye1,
+                theta[None, :] - eye1,
+                theta[None, :] + eye3,
+                theta[None, :] - eye3,
+            ],
+            axis=0,
+        )
+        k = bank.shape[0]  # 4P + 1
+        # tile over data: every data point sees every shifted vector
+        thetas = jnp.tile(bank, (b, 1))  # [B*(4P+1), P]
+        datas = jnp.repeat(data, k, axis=0)  # [B*(4P+1), D]
+        if use_pallas:
+            # Single grid step (block = whole bank): the multi-step grid
+            # lowers to an HLO while-loop that xla_extension 0.5.1
+            # miscompiles for the q7/l3 shape (grads silently zero) —
+            # one step sidesteps it and is faster anyway (DESIGN.md §9).
+            fids = sv.fused_fidelity(thetas, datas, n_qubits, n_layers, block=b * k)
+        else:
+            fids = ref.fidelity_batch(thetas, datas, n_qubits, n_layers)
+        fids = fids.reshape(b, k)
+        fid0 = fids[:, 0]
+        p1 = fids[:, 1 : 1 + n_p]
+        m1 = fids[:, 1 + n_p : 1 + 2 * n_p]
+        p3 = fids[:, 1 + 2 * n_p : 1 + 3 * n_p]
+        m3 = fids[:, 1 + 3 * n_p :]
+        grads = c_plus[None, :] * (p1 - m1) - c_minus[None, :] * (p3 - m3)
+        return (fid0, grads)
+
+    return fn
+
+
+def config_meta(n_qubits: int, n_layers: int) -> dict:
+    """Manifest record for one configuration (consumed by the Rust runtime)."""
+    return {
+        "name": f"quclassi_q{n_qubits}_l{n_layers}",
+        "qubits": n_qubits,
+        "layers": n_layers,
+        "n_params": ref.n_params(n_qubits, n_layers),
+        "n_features": ref.n_features(n_qubits),
+        "batch": BATCH,
+    }

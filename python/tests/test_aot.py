@@ -1,0 +1,84 @@
+"""AOT artifact structure: HLO text well-formedness, manifest, determinism."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out))
+    return str(out), manifest
+
+
+class TestHloText:
+    def test_entry_computation_present(self, built):
+        out, manifest = built
+        for meta in manifest["artifacts"]:
+            text = open(os.path.join(out, meta["path"])).read()
+            assert "ENTRY" in text, meta["name"]
+            assert "HloModule" in text
+
+    def test_io_shapes(self, built):
+        out, manifest = built
+        for meta in manifest["artifacts"]:
+            text = open(os.path.join(out, meta["path"])).read()
+            b, p, d = meta["batch"], meta["n_params"], meta["n_features"]
+            assert f"f32[{b},{p}]" in text, f"{meta['name']}: thetas param shape"
+            assert f"f32[{b},{d}]" in text, f"{meta['name']}: data param shape"
+            # tuple-wrapped scalar-vector output
+            assert f"(f32[{b}]" in text, f"{meta['name']}: output shape"
+
+    def test_grad_artifact_shapes(self, built):
+        out, manifest = built
+        for meta in manifest["artifacts"]:
+            text = open(os.path.join(out, meta["grad_path"])).read()
+            p, d = meta["n_params"], meta["n_features"]
+            gb = meta["grad_data_batch"]
+            assert f"f32[{p}]" in text
+            assert f"f32[{gb},{d}]" in text
+
+    def test_no_custom_calls(self, built):
+        """interpret=True must lower to plain HLO the CPU client can run."""
+        out, manifest = built
+        for meta in manifest["artifacts"]:
+            text = open(os.path.join(out, meta["path"])).read()
+            assert "custom-call" not in text.lower(), meta["name"]
+
+
+class TestManifest:
+    def test_covers_all_configs(self, built):
+        _, manifest = built
+        names = {m["name"] for m in manifest["artifacts"]}
+        assert names == {f"quclassi_q{q}_l{l}" for q, l in model.CONFIGS}
+
+    def test_counts_consistent(self, built):
+        _, manifest = built
+        for meta in manifest["artifacts"]:
+            assert meta["n_params"] == ref.n_params(meta["qubits"], meta["layers"])
+            assert meta["n_features"] == ref.n_features(meta["qubits"])
+
+    def test_sha_matches_files(self, built):
+        import hashlib
+
+        out, manifest = built
+        for meta in manifest["artifacts"]:
+            text = open(os.path.join(out, meta["path"])).read()
+            assert hashlib.sha256(text.encode()).hexdigest() == meta["sha256"]
+
+    def test_manifest_json_round_trip(self, built):
+        out, manifest = built
+        on_disk = json.load(open(os.path.join(out, "manifest.json")))
+        assert on_disk == manifest
+
+
+class TestDeterminism:
+    def test_lowering_is_deterministic(self):
+        a = aot.lower_fidelity(5, 1)
+        b = aot.lower_fidelity(5, 1)
+        assert a == b

@@ -1,0 +1,140 @@
+"""L2 correctness: fused Pallas circuit vs oracle, gradients, invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import statevector as sv
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.uniform(-np.pi, np.pi, shape).astype(np.float32))
+
+
+class TestFusedCircuit:
+    @pytest.mark.parametrize("q,l", model.CONFIGS)
+    def test_matches_oracle(self, q, l):
+        rng = np.random.default_rng(q * 10 + l)
+        p, d = ref.n_params(q, l), ref.n_features(q)
+        th, da = _rand(rng, (16, p)), _rand(rng, (16, d))
+        want = np.asarray(ref.fidelity_batch(th, da, q, l))
+        got = np.asarray(sv.fused_fidelity(th, da, q, l))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    @pytest.mark.parametrize("q,l", model.CONFIGS)
+    def test_blocked_grid_matches_single_block(self, q, l):
+        """Grid over the batch must not change results at block seams."""
+        rng = np.random.default_rng(q + l)
+        p, d = ref.n_params(q, l), ref.n_features(q)
+        th, da = _rand(rng, (32, p)), _rand(rng, (32, d))
+        whole = np.asarray(sv.fused_fidelity(th, da, q, l, block=32))
+        blocked = np.asarray(sv.fused_fidelity(th, da, q, l, block=8))
+        np.testing.assert_allclose(blocked, whole, atol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(
+        st.sampled_from(model.CONFIGS),
+        st.integers(min_value=0, max_value=2**31 - 1),
+        st.sampled_from([1, 2, 4, 8]),
+    )
+    def test_hypothesis_sweep(self, cfg, seed, batch):
+        q, l = cfg
+        rng = np.random.default_rng(seed)
+        p, d = ref.n_params(q, l), ref.n_features(q)
+        th, da = _rand(rng, (batch, p)), _rand(rng, (batch, d))
+        want = np.asarray(ref.fidelity_batch(th, da, q, l))
+        got = np.asarray(sv.fused_fidelity(th, da, q, l))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    @settings(**SETTINGS)
+    @given(st.sampled_from(model.CONFIGS), st.integers(min_value=0, max_value=2**31 - 1))
+    def test_fidelity_in_unit_interval(self, cfg, seed):
+        """Swap-test estimate = |<a|b>|^2 must lie in [0, 1]."""
+        q, l = cfg
+        rng = np.random.default_rng(seed)
+        p, d = ref.n_params(q, l), ref.n_features(q)
+        fid = np.asarray(sv.fused_fidelity(_rand(rng, (8, p)), _rand(rng, (8, d)), q, l))
+        assert np.all(fid >= -1e-5) and np.all(fid <= 1.0 + 1e-5)
+
+    @pytest.mark.parametrize("q", [5, 7])
+    def test_layer1_self_fidelity_is_one(self, q):
+        """With one layer, state prep == data encoding, so fid(x, x) = 1."""
+        rng = np.random.default_rng(0)
+        p = ref.n_params(q, 1)
+        th = _rand(rng, (8, p))
+        fid = np.asarray(sv.fused_fidelity(th, th, q, 1))
+        np.testing.assert_allclose(fid, 1.0, atol=1e-5)
+
+    @pytest.mark.parametrize("q", [5, 7])
+    def test_layer1_symmetry(self, q):
+        """fid(theta, x) == fid(x, theta) for the single-qubit-unitary layer."""
+        rng = np.random.default_rng(1)
+        p = ref.n_params(q, 1)
+        a, b = _rand(rng, (8, p)), _rand(rng, (8, p))
+        f_ab = np.asarray(sv.fused_fidelity(a, b, q, 1))
+        f_ba = np.asarray(sv.fused_fidelity(b, a, q, 1))
+        np.testing.assert_allclose(f_ab, f_ba, atol=1e-5)
+
+
+class TestGradBank:
+    @pytest.mark.parametrize("q,l", model.CONFIGS)
+    def test_param_shift_matches_finite_difference(self, q, l):
+        rng = np.random.default_rng(q * 7 + l)
+        p, d = ref.n_params(q, l), ref.n_features(q)
+        theta = _rand(rng, (p,))
+        data = _rand(rng, (3, d))
+        fid, grads = model.make_grad_bank_fn(q, l)(theta, data)
+        # unshifted fidelity agrees with the oracle
+        want = np.asarray(ref.fidelity_batch(jnp.tile(theta, (3, 1)), data, q, l))
+        np.testing.assert_allclose(np.asarray(fid), want, atol=1e-5)
+        eps = 1e-3
+        for pi in range(p):
+            tp, tm = theta.at[pi].add(eps), theta.at[pi].add(-eps)
+            fd = (
+                np.asarray(ref.fidelity_batch(jnp.tile(tp, (3, 1)), data, q, l))
+                - np.asarray(ref.fidelity_batch(jnp.tile(tm, (3, 1)), data, q, l))
+            ) / (2 * eps)
+            np.testing.assert_allclose(np.asarray(grads)[:, pi], fd, atol=5e-3)
+
+    def test_gradient_zero_at_optimum(self):
+        """At fid = 1 (layer 1, theta == data) the gradient vanishes."""
+        q = 5
+        p = ref.n_params(q, 1)
+        theta = jnp.asarray(np.linspace(0.1, 1.0, p), jnp.float32)
+        data = jnp.tile(theta, (2, 1))
+        fid, grads = model.make_grad_bank_fn(q, 1)(theta, data)
+        np.testing.assert_allclose(np.asarray(fid), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(grads), 0.0, atol=1e-4)
+
+
+class TestConfigMeta:
+    def test_param_counts_match_paper_structure(self):
+        # S=2: layer1 -> 4, +layer2 -> +2, +layer3 -> +2
+        assert ref.n_params(5, 1) == 4
+        assert ref.n_params(5, 2) == 6
+        assert ref.n_params(5, 3) == 8
+        # S=3: layer1 -> 6, +layer2 -> +4, +layer3 -> +4
+        assert ref.n_params(7, 1) == 6
+        assert ref.n_params(7, 2) == 10
+        assert ref.n_params(7, 3) == 14
+
+    def test_feature_counts(self):
+        assert ref.n_features(5) == 4
+        assert ref.n_features(7) == 6
+
+    def test_meta_record(self):
+        m = model.config_meta(7, 3)
+        assert m["name"] == "quclassi_q7_l3"
+        assert m["n_params"] == 14 and m["n_features"] == 6
+        assert m["batch"] == model.BATCH
+
+    def test_layout(self):
+        s, state_qs, data_qs = ref.quclassi_layout(5)
+        assert s == 2 and state_qs == [1, 2] and data_qs == [3, 4]
+        s, state_qs, data_qs = ref.quclassi_layout(7)
+        assert s == 3 and state_qs == [1, 2, 3] and data_qs == [4, 5, 6]

@@ -1,0 +1,80 @@
+//! Regenerates the paper's **accuracy comparison** (§IV-B): QuClassi
+//! classification accuracy on the four MNIST pairs, distributed
+//! (2 workers) vs non-distributed, with the paper's reported accuracies
+//! alongside. The paper's claim is a delta under 2%; in this stack the
+//! distributed execution is bitwise-identical to local execution, so the
+//! delta is exactly 0 when seeds match (asserted), and we also report a
+//! cross-seed run where only the *model init* differs.
+//!
+//! ```bash
+//! cargo bench --bench accuracy_table
+//! ```
+
+use dqulearn::benchlib::Table;
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::InProcCluster;
+use dqulearn::data::Dataset;
+use dqulearn::model::exec::QsimExecutor;
+use dqulearn::model::optimizer::Optimizer;
+use dqulearn::model::quclassi::LossKind;
+use dqulearn::model::{QuClassiModel, TrainConfig, Trainer};
+use dqulearn::util::Rng;
+
+const PAPER: &[((u8, u8), f64)] =
+    &[((3, 9), 97.5), ((3, 8), 96.2), ((3, 6), 98.1), ((1, 5), 98.6)];
+
+fn train_once(
+    pair: (u8, u8),
+    distributed: bool,
+    model_seed: u64,
+) -> Result<f64, String> {
+    let config = QuClassiConfig::new(5, 1)?;
+    let dataset = Dataset::binary_pair(None, pair.0, pair.1, 24, 42);
+    let tc = TrainConfig {
+        epochs: 14,
+        optimizer: Optimizer::adam(0.05),
+        train_classical: true,
+        classical_lr_scale: 0.1,
+        seed: 7,
+        early_stop_acc: None,
+        loss: LossKind::Discriminative,
+    };
+    let mut model = QuClassiModel::new(config, &mut Rng::new(model_seed));
+    let report = if distributed {
+        let cluster = InProcCluster::builder().workers(&[5, 5]).build()?;
+        let r = Trainer::new(tc).train(&mut model, &dataset, &cluster)?;
+        cluster.shutdown();
+        r
+    } else {
+        Trainer::new(tc).train(&mut model, &dataset, &QsimExecutor)?
+    };
+    Ok(report.test_accuracy * 100.0)
+}
+
+fn main() {
+    println!("== Accuracy comparison (paper §IV-B): distributed vs non-distributed ==");
+    let mut table = Table::new(&[
+        "pair", "distributed %", "baseline %", "delta %", "paper dist. %", "cross-seed dist. %",
+    ]);
+    for &((a, b), paper_acc) in PAPER {
+        let dist = train_once((a, b), true, 21).expect("distributed run");
+        let base = train_once((a, b), false, 21).expect("baseline run");
+        // same data/trainer seeds, different model init — the residual
+        // variation a real redeployment would see
+        let cross = train_once((a, b), true, 77).expect("cross-seed run");
+        let delta = (dist - base).abs();
+        table.row(&[
+            format!("{a}/{b}"),
+            format!("{dist:.1}"),
+            format!("{base:.1}"),
+            format!("{delta:.2}"),
+            format!("{paper_acc:.1}"),
+            format!("{cross:.1}"),
+        ]);
+        assert!(delta < 2.0, "pair {a}/{b}: delta {delta:.2}% exceeds the paper's 2% bound");
+        assert!(dist >= 75.0, "pair {a}/{b}: distributed accuracy {dist:.1}% too low to be credible");
+    }
+    print!("{}", table.render());
+    println!("\nall pairs: |distributed - baseline| < 2% (paper's claim), high absolute accuracy");
+    println!("(absolute accuracies differ from the paper's: synthetic MNIST stand-in, 24 samples/class — see DESIGN.md §3)");
+}

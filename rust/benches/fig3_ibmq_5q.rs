@@ -1,0 +1,63 @@
+//! Regenerates **Figure 3** (paper §IV-C1): one client training a
+//! 5-qubit QuClassi on IBM-Q cloud backends (uncontrolled environment),
+//! sweeping 1/2/3 variational layers × 1/2/4 workers. Prints runtime per
+//! epoch (Fig 3a) and circuits per second (Fig 3b), side by side with
+//! the paper's reported values and normalized speedups.
+//!
+//! ```bash
+//! cargo bench --bench fig3_ibmq_5q
+//! ```
+
+mod fig_common;
+
+use dqulearn::env::scenarios::ibmq_figure;
+use dqulearn::env::Calibration;
+use fig_common::{assert_trends, render_comparison, PaperPoint};
+
+/// Paper Fig. 3 values (read from §IV-C1's prose).
+const PAPER: &[PaperPoint] = &[
+    (1, 1, Some(94.7), Some(15.2)),
+    (1, 2, None, Some(16.9)),
+    (1, 4, Some(73.1), Some(19.7)),
+    (2, 1, Some(467.9), Some(6.2)),
+    (2, 2, None, Some(6.4)),
+    (2, 4, Some(418.6), Some(6.6)),
+    (3, 1, Some(749.8), Some(5.9)),
+    (3, 2, Some(651.7), Some(6.6)),
+    (3, 4, Some(569.8), Some(7.6)),
+];
+
+fn main() {
+    let calib = Calibration::qiskit_like();
+    let rows = ibmq_figure(5, &calib, 7);
+    println!(
+        "{}",
+        render_comparison(
+            "Figure 3: 5-qubit IBM-Q backends, uncontrolled environment (DES)",
+            &rows,
+            PAPER
+        )
+    );
+    assert_trends(&rows);
+    println!("trend check passed: more workers -> lower runtime, higher circuits/sec\n");
+
+    // Variance across seeds (the environment is 'uncontrolled'): report
+    // the spread the jitter model produces for the densest point.
+    let spreads: Vec<f64> = (0..5)
+        .map(|s| {
+            ibmq_figure(5, &calib, 100 + s)
+                .iter()
+                .find(|r| r.layers == 3 && r.workers == 4)
+                .unwrap()
+                .runtime
+        })
+        .collect();
+    let mean = spreads.iter().sum::<f64>() / spreads.len() as f64;
+    let max_dev = spreads.iter().map(|x| (x - mean).abs()).fold(0.0, f64::max);
+    println!(
+        "uncontrolled-variance check (3L/4W, 5 seeds): mean {:.1}s, max dev {:.1}s ({:.1}%)",
+        mean,
+        max_dev,
+        100.0 * max_dev / mean
+    );
+}

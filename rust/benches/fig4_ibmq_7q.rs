@@ -1,0 +1,54 @@
+//! Regenerates **Figure 4** (paper §IV-C1): the 7-qubit IBM-Q
+//! (uncontrolled) experiments — same sweep as Figure 3 at the wider
+//! circuit configuration (2016/4032/6048 circuits per epoch).
+//!
+//! ```bash
+//! cargo bench --bench fig4_ibmq_7q
+//! ```
+
+mod fig_common;
+
+use dqulearn::env::scenarios::ibmq_figure;
+use dqulearn::env::Calibration;
+use fig_common::{assert_trends, render_comparison, PaperPoint};
+
+/// Paper Fig. 4 values (§IV-C1 prose).
+const PAPER: &[PaperPoint] = &[
+    (1, 1, Some(163.0), Some(12.4)),
+    (1, 2, None, Some(13.5)),
+    (1, 4, Some(134.3), Some(15.0)),
+    (2, 1, Some(566.5), Some(7.1)),
+    (2, 2, None, Some(7.2)),
+    (2, 4, Some(510.8), Some(7.9)),
+    (3, 1, Some(1366.1), Some(4.4)),
+    (3, 2, Some(1303.9), Some(4.6)),
+    (3, 4, Some(1246.5), Some(4.8)),
+];
+
+fn main() {
+    let calib = Calibration::qiskit_like();
+    let rows = ibmq_figure(7, &calib, 11);
+    println!(
+        "{}",
+        render_comparison(
+            "Figure 4: 7-qubit IBM-Q backends, uncontrolled environment (DES)",
+            &rows,
+            PAPER
+        )
+    );
+    assert_trends(&rows);
+    println!("trend check passed: more workers -> lower runtime, higher circuits/sec\n");
+
+    // Cross-figure check the paper highlights: 7-qubit circuits are
+    // slower per circuit than 5-qubit ones at equal depth.
+    let five = ibmq_figure(5, &calib, 11);
+    for layers in [1usize, 2, 3] {
+        let cps5 = five.iter().find(|r| r.layers == layers && r.workers == 1).unwrap().cps;
+        let cps7 = rows.iter().find(|r| r.layers == layers && r.workers == 1).unwrap().cps;
+        assert!(
+            cps7 < cps5,
+            "layers {layers}: 7q should be slower per circuit than 5q ({cps7} !< {cps5})"
+        );
+        println!("width check L{layers}: 5Q {cps5:.2} c/s vs 7Q {cps7:.2} c/s ✓");
+    }
+}

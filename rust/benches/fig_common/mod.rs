@@ -1,0 +1,81 @@
+//! Shared helpers for the figure-regeneration benches: the paper's
+//! reported numbers and the side-by-side comparison renderer.
+//!
+//! We are NOT expected to match absolute seconds (the substrate is a
+//! calibrated DES, not the authors' IBM-Q/GCP testbed); what must hold is
+//! the *shape*: who wins, roughly by how much, and where the effect
+//! saturates. Each bench prints paper-vs-ours with speedup ratios so the
+//! comparison is mechanical.
+
+use dqulearn::benchlib::Table;
+use dqulearn::env::scenarios::FigureRow;
+
+/// One paper datapoint: (layers, workers, runtime_s, circuits_per_sec).
+/// `None` where the paper does not state the number.
+pub type PaperPoint = (usize, usize, Option<f64>, Option<f64>);
+
+/// Render ours-vs-paper, plus normalized speedups (runtime(W)/runtime(1))
+/// which are the shape-preserving quantity.
+pub fn render_comparison(title: &str, ours: &[FigureRow], paper: &[PaperPoint]) -> String {
+    let mut out = format!("== {title} ==\n");
+    let mut table = Table::new(&[
+        "layers", "workers", "circuits", "ours runtime(s)", "ours c/s", "paper runtime(s)",
+        "paper c/s", "ours rt/W1", "paper rt/W1",
+    ]);
+    for r in ours {
+        let p = paper
+            .iter()
+            .find(|(l, w, _, _)| *l == r.layers && *w == r.workers)
+            .copied()
+            .unwrap_or((r.layers, r.workers, None, None));
+        let ours_w1 = ours
+            .iter()
+            .find(|o| o.layers == r.layers && o.workers == 1)
+            .map(|o| o.runtime)
+            .unwrap_or(r.runtime);
+        let paper_w1 = paper
+            .iter()
+            .find(|(l, w, rt, _)| *l == r.layers && *w == 1 && rt.is_some())
+            .and_then(|(_, _, rt, _)| *rt);
+        let fmt_opt = |x: Option<f64>| x.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into());
+        let paper_ratio = match (p.2, paper_w1) {
+            (Some(rt), Some(w1)) => format!("{:.2}", rt / w1),
+            _ => "-".into(),
+        };
+        table.row(&[
+            r.layers.to_string(),
+            r.workers.to_string(),
+            r.circuits.to_string(),
+            format!("{:.1}", r.runtime),
+            format!("{:.2}", r.cps),
+            fmt_opt(p.2),
+            fmt_opt(p.3),
+            format!("{:.2}", r.runtime / ours_w1),
+            paper_ratio,
+        ]);
+    }
+    out.push_str(&table.render());
+    out
+}
+
+/// Shape assertions shared by Figs 3-5: runtime monotonically decreasing
+/// and throughput increasing in the worker count, per layer series.
+pub fn assert_trends(ours: &[FigureRow]) {
+    for layers in [1usize, 2, 3] {
+        let series: Vec<&FigureRow> = ours.iter().filter(|r| r.layers == layers).collect();
+        for pair in series.windows(2) {
+            assert!(
+                pair[1].runtime < pair[0].runtime,
+                "layers {layers}: runtime did not improve {} -> {} workers",
+                pair[0].workers,
+                pair[1].workers
+            );
+            assert!(
+                pair[1].cps > pair[0].cps,
+                "layers {layers}: throughput did not improve {} -> {} workers",
+                pair[0].workers,
+                pair[1].workers
+            );
+        }
+    }
+}

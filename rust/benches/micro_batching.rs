@@ -1,0 +1,72 @@
+//! Ablation: the co-Manager's dispatch batching policy (EXPERIMENTS.md
+//! §Perf L3). `max_batch = 1` reproduces the paper's per-circuit
+//! assignment; larger batches amortize dispatch/RPC/PJRT-padding costs
+//! against scheduling granularity.
+//!
+//! ```bash
+//! cargo bench --bench micro_batching
+//! ```
+
+use std::time::Instant;
+
+use dqulearn::benchlib::Table;
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::InProcCluster;
+use dqulearn::coordinator::ManagerConfig;
+use dqulearn::model::exec::CircuitExecutor;
+use dqulearn::util::Rng;
+
+fn run_with_batch(max_batch: usize, use_pjrt: bool, n: usize) -> (f64, u64) {
+    let mut builder = InProcCluster::builder()
+        .workers(&[5, 5])
+        .manager_config(ManagerConfig { max_batch, ..Default::default() });
+    if use_pjrt && std::path::Path::new("artifacts/manifest.json").exists() {
+        builder = builder.artifacts("artifacts");
+    }
+    let cluster = builder.build().expect("cluster");
+    let cfg = QuClassiConfig::new(5, 2).unwrap();
+    let mut rng = Rng::new(9);
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+        .map(|_| {
+            (
+                (0..cfg.n_params()).map(|_| rng.f32()).collect(),
+                (0..cfg.n_features()).map(|_| rng.f32()).collect(),
+            )
+        })
+        .collect();
+    // warmup (compile caches etc.)
+    let _ = cluster.execute_bank(&cfg, &pairs[..32.min(n)]).unwrap();
+    let t0 = Instant::now();
+    let fids = cluster.execute_bank(&cfg, &pairs).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(fids.len(), n);
+    let dispatches = cluster.manager.stats().dispatches;
+    cluster.shutdown();
+    (n as f64 / secs, dispatches)
+}
+
+fn main() {
+    let n = 2048;
+    let have_pjrt = std::path::Path::new("artifacts/manifest.json").exists();
+    println!("== dispatch batching ablation (2 workers, q5l2, {n} circuits) ==");
+    let mut table = Table::new(&["max_batch", "backend", "circuits/s", "dispatches"]);
+    let mut best = (0usize, 0.0f64);
+    for &mb in &[1usize, 4, 8, 16, 32, 64] {
+        let (cps, disp) = run_with_batch(mb, have_pjrt, n);
+        if cps > best.1 {
+            best = (mb, cps);
+        }
+        table.row(&[
+            mb.to_string(),
+            if have_pjrt { "pjrt" } else { "qsim" }.to_string(),
+            format!("{cps:.0}"),
+            disp.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nbest batch: {} ({:.0} circuits/s). max_batch=1 is the paper's per-circuit \
+         assignment; the adopted default is 32 (the artifact batch).",
+        best.0, best.1
+    );
+}

@@ -1,0 +1,55 @@
+//! Microbenchmarks for the Rust statevector simulator (the worker's
+//! fallback backend and the PJRT cross-check oracle).
+//!
+//! ```bash
+//! cargo bench --bench micro_qsim
+//! ```
+
+use dqulearn::benchlib::{BenchConfig, Bencher};
+use dqulearn::circuit::{build_quclassi, builder::simulate_fidelity, QuClassiConfig};
+use dqulearn::qsim::State;
+use dqulearn::util::Rng;
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig::default());
+    let mut rng = Rng::new(1);
+
+    // single gates across widths
+    for nq in [5usize, 7, 10, 14] {
+        let mut st = State::zero(nq);
+        st.apply_h(0);
+        b.bench(&format!("ry gate q={nq}"), || {
+            st.apply_ry(0.3, nq / 2);
+        });
+        b.bench(&format!("rz gate q={nq}"), || {
+            st.apply_rz(0.3, nq / 2);
+        });
+        b.bench(&format!("cswap gate q={nq}"), || {
+            st.apply_cswap(0, 1, nq - 1);
+        });
+    }
+
+    // full QuClassi circuits (the per-circuit cost the DES calibrates)
+    for cfg in QuClassiConfig::paper_configs() {
+        let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
+        let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
+        b.bench(&format!("full circuit q={} l={}", cfg.qubits, cfg.layers), || {
+            std::hint::black_box(simulate_fidelity(&cfg, &thetas, &data));
+        });
+    }
+
+    // gate-list construction alone (allocation cost on the worker path)
+    let cfg = QuClassiConfig::new(7, 3).unwrap();
+    let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
+    let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
+    b.bench("gate-list build q=7 l=3", || {
+        std::hint::black_box(build_quclassi(&cfg, &thetas, &data));
+    });
+
+    print!("{}", b.report());
+    // circuits/sec summary for the DES calibration table
+    println!("\nimplied single-core circuit throughput:");
+    for r in b.results().iter().filter(|r| r.name.starts_with("full circuit")) {
+        println!("  {:<28} {:>10.0} circuits/s", r.name, r.throughput_per_sec());
+    }
+}

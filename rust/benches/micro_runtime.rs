@@ -1,0 +1,92 @@
+//! Microbenchmarks for the PJRT artifact runtime — per-execution latency,
+//! batched throughput per configuration, and the fused-gradient path.
+//! These numbers calibrate the DES (`Calibration::from_measured`) and are
+//! the L1/L2 perf baseline recorded in EXPERIMENTS.md §Perf.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench micro_runtime
+//! ```
+
+use dqulearn::benchlib::{BenchConfig, Bencher, Table};
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::model::exec::{CircuitExecutor, QsimExecutor};
+use dqulearn::runtime::PjrtEngine;
+use dqulearn::util::Rng;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ not built; run `make artifacts` first. skipping.");
+        return;
+    }
+    let engine = PjrtEngine::load(dir).expect("engine load");
+    let mut b = Bencher::new(BenchConfig::default());
+    let mut rng = Rng::new(2);
+
+    let mut calib = Table::new(&["config", "pjrt us/circuit (batch 32)", "qsim us/circuit", "ratio"]);
+    for cfg in QuClassiConfig::paper_configs() {
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..32)
+            .map(|_| {
+                (
+                    (0..cfg.n_params()).map(|_| rng.f32()).collect(),
+                    (0..cfg.n_features()).map(|_| rng.f32()).collect(),
+                )
+            })
+            .collect();
+        let name = format!("q{}l{}", cfg.qubits, cfg.layers);
+        let r_pjrt = b
+            .bench(&format!("pjrt execute 32x {name}"), || {
+                std::hint::black_box(engine.execute(&cfg, &pairs).unwrap());
+            })
+            .clone();
+        let r_qsim = b
+            .bench(&format!("qsim execute 32x {name}"), || {
+                std::hint::black_box(QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+            })
+            .clone();
+        let pjrt_us = r_pjrt.summary.mean * 1e6 / 32.0;
+        let qsim_us = r_qsim.summary.mean * 1e6 / 32.0;
+        calib.row(&[
+            name,
+            format!("{pjrt_us:.1}"),
+            format!("{qsim_us:.1}"),
+            format!("{:.2}x", pjrt_us / qsim_us),
+        ]);
+    }
+
+    // single-circuit latency (the interactive path)
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let single = vec![(vec![0.3f32; 4], vec![0.7f32; 4])];
+    b.bench("pjrt execute 1x q5l1 (padded to 32)", || {
+        std::hint::black_box(engine.execute(&cfg, &single).unwrap());
+    });
+
+    // fused on-device gradient vs host-assembled bank
+    let cfg = QuClassiConfig::new(5, 2).unwrap();
+    let theta: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
+    let data: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..cfg.n_features()).map(|_| rng.f32()).collect())
+        .collect();
+    b.bench("pjrt fused grad (8 samples, q5l2)", || {
+        std::hint::black_box(engine.execute_grad(&cfg, &theta, &data).unwrap());
+    });
+    let bank = dqulearn::circuit::CircuitBank::new(cfg, &theta);
+    b.bench("pjrt host-assembled grad (8 samples, q5l2)", || {
+        for d in &data {
+            let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+                bank.entries().iter().map(|e| (e.thetas.clone(), d.clone())).collect();
+            let fids = engine.execute(&cfg, &pairs).unwrap();
+            std::hint::black_box(bank.assemble(&fids));
+        }
+    });
+
+    print!("{}", b.report());
+    println!("\nDES calibration table (per-circuit cost on this machine):");
+    print!("{}", calib.render());
+    let stats = engine.stats();
+    println!(
+        "\nengine totals: {} executions, {} circuits ({} padded)",
+        stats.executions, stats.circuits, stats.padded_circuits
+    );
+    engine.shutdown();
+}

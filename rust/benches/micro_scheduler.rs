@@ -1,0 +1,65 @@
+//! Microbenchmarks for Algorithm 2's workload assignment — the
+//! co-Manager hot path — including the linear-scan vs binary-heap
+//! ablation (DESIGN.md §10).
+//!
+//! ```bash
+//! cargo bench --bench micro_scheduler
+//! ```
+
+use dqulearn::benchlib::{BenchConfig, Bencher};
+use dqulearn::coordinator::registry::Registry;
+use dqulearn::coordinator::scheduler::{self, SchedulerKind};
+use dqulearn::util::Rng;
+
+fn registry_of(n: usize, seed: u64) -> Registry {
+    let mut rng = Rng::new(seed);
+    let mut reg = Registry::new(5.0);
+    for _ in 0..n {
+        let mq = [5, 7, 10, 15, 20][rng.index(5)];
+        let id = reg.register(mq, rng.f64(), 0.0);
+        // random occupancy
+        let occ = rng.index(mq);
+        if occ > 0 {
+            let _ = reg.reserve(id, id, occ);
+        }
+    }
+    reg
+}
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig::default());
+
+    for n in [4usize, 16, 64, 256, 1024] {
+        let reg = registry_of(n, 3);
+        b.bench(&format!("select linear-scan W={n}"), || {
+            std::hint::black_box(scheduler::select_with(SchedulerKind::LinearScan, &reg, 5));
+        });
+        b.bench(&format!("select heap        W={n}"), || {
+            std::hint::black_box(scheduler::select_with(SchedulerKind::Heap, &reg, 5));
+        });
+    }
+
+    // full assign/release cycle (what one circuit costs the manager)
+    let mut reg = registry_of(16, 5);
+    let mut job = 10_000u64;
+    b.bench("assign+release cycle W=16", || {
+        if let Some(w) = scheduler::select(&reg, 5) {
+            reg.reserve(w, job, 5).unwrap();
+            reg.release(w, job);
+            job += 1;
+        }
+    });
+
+    // heartbeat processing cost
+    let mut reg2 = registry_of(64, 7);
+    let ids: Vec<u64> = reg2.workers().map(|w| w.id).collect();
+    let mut i = 0;
+    b.bench("heartbeat update W=64", || {
+        let id = ids[i % ids.len()];
+        let _ = reg2.heartbeat(id, 0.4, 1.0);
+        i += 1;
+    });
+
+    print!("{}", b.report());
+    println!("\n(the paper's pool sizes are W <= 4: linear scan is optimal there;\n the heap variant only matters past hundreds of workers)");
+}

@@ -1,0 +1,68 @@
+//! Microbenchmarks for the wire substrate: JSON encode/decode and frame
+//! round-trips — the per-message cost of the manager↔worker RPC.
+//!
+//! ```bash
+//! cargo bench --bench micro_wire
+//! ```
+
+use dqulearn::benchlib::{BenchConfig, Bencher};
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::coordinator::job::CircuitJob;
+use dqulearn::net::frame::{read_frame, write_frame};
+use dqulearn::wire::{self, Value};
+
+fn sample_job(i: u64) -> CircuitJob {
+    let config = QuClassiConfig::new(7, 3).unwrap();
+    CircuitJob {
+        id: i,
+        client: 1,
+        bank: 2,
+        index: i as usize,
+        config,
+        thetas: (0..config.n_params()).map(|p| p as f32 * 0.1).collect(),
+        data: (0..config.n_features()).map(|d| d as f32 * 0.2).collect(),
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig::default());
+
+    // single-job encode/decode
+    let job = sample_job(1);
+    b.bench("job -> wire Value", || {
+        std::hint::black_box(job.to_wire());
+    });
+    let encoded = job.to_wire();
+    b.bench("wire Value -> json string", || {
+        std::hint::black_box(wire::to_string(&encoded));
+    });
+    let json = wire::to_string(&encoded);
+    b.bench("json parse", || {
+        std::hint::black_box(wire::parse(&json).unwrap());
+    });
+    b.bench("wire Value -> job", || {
+        std::hint::black_box(CircuitJob::from_wire(&encoded).unwrap());
+    });
+
+    // a full 32-circuit execute request (the dispatch unit)
+    let batch: Vec<Value> = (0..32).map(|i| sample_job(i).to_wire()).collect();
+    let request = Value::obj().with("op", "execute").with("circuits", batch);
+    let request_json = wire::to_string(&request);
+    println!("32-circuit execute request: {} bytes as json\n", request_json.len());
+    b.bench("encode 32-circuit request", || {
+        std::hint::black_box(wire::to_string(&request));
+    });
+    b.bench("parse 32-circuit request", || {
+        std::hint::black_box(wire::parse(&request_json).unwrap());
+    });
+
+    // framed round trip through a buffer (what the socket sees)
+    b.bench("frame write+read 32-circuit request", || {
+        let mut buf = Vec::with_capacity(request_json.len() + 4);
+        write_frame(&mut buf, &request).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        std::hint::black_box(read_frame(&mut cur).unwrap());
+    });
+
+    print!("{}", b.report());
+}

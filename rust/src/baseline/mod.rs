@@ -1,0 +1,81 @@
+//! Non-distributed baseline (the paper's comparison point).
+//!
+//! "We initially compare its accuracy with the non-distributed version to
+//! verify its effectiveness" (§IV-B). The baseline is Algorithm 1 run
+//! against a single local simulator with no co-Manager, no RPC, and no
+//! concurrency — exactly what QuClassi does on one machine.
+
+use crate::circuit::QuClassiConfig;
+use crate::data::Dataset;
+use crate::model::exec::{CountingExecutor, QsimExecutor};
+use crate::model::{QuClassiModel, TrainConfig, TrainReport, Trainer};
+use crate::util::Rng;
+
+/// Result of one baseline run.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub report: TrainReport,
+    pub circuits_executed: u64,
+}
+
+/// Train the QuClassi classifier on one machine (no distribution).
+pub fn train_single_machine(
+    config: QuClassiConfig,
+    dataset: &Dataset,
+    train_config: TrainConfig,
+    model_seed: u64,
+) -> Result<BaselineResult, String> {
+    let mut rng = Rng::new(model_seed);
+    let mut model = QuClassiModel::new(config, &mut rng);
+    let exec = CountingExecutor::new(QsimExecutor);
+    let trainer = Trainer::new(train_config);
+    let report = trainer.train(&mut model, dataset, &exec)?;
+    Ok(BaselineResult { report, circuits_executed: exec.circuits() })
+}
+
+/// Accuracy comparison row: distributed vs non-distributed (paper §IV-B
+/// reports deltas under 2%).
+#[derive(Debug, Clone)]
+pub struct AccuracyComparison {
+    pub pair: (u8, u8),
+    pub distributed_acc: f64,
+    pub baseline_acc: f64,
+}
+
+impl AccuracyComparison {
+    pub fn delta(&self) -> f64 {
+        (self.distributed_acc - self.baseline_acc).abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::optimizer::Optimizer;
+    use crate::model::quclassi::LossKind;
+
+    #[test]
+    fn baseline_trains_and_counts() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let ds = Dataset::binary_pair(None, 1, 5, 10, 3);
+        let tc = TrainConfig {
+            epochs: 3,
+            optimizer: Optimizer::adam(0.1),
+            train_classical: true,
+            classical_lr_scale: 0.1,
+            seed: 11,
+            early_stop_acc: None,
+            loss: LossKind::Discriminative,
+        };
+        let result = train_single_machine(cfg, &ds, tc, 21).unwrap();
+        assert_eq!(result.report.epochs.len(), 3);
+        assert!(result.circuits_executed > 0);
+        assert!(result.report.final_train_accuracy() > 0.5);
+    }
+
+    #[test]
+    fn comparison_delta() {
+        let c = AccuracyComparison { pair: (3, 9), distributed_acc: 0.975, baseline_acc: 0.99 };
+        assert!((c.delta() - 0.015).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,250 @@
+//! Criterion-like micro-benchmark harness (std-only substrate).
+//!
+//! Warmup, adaptive iteration targeting a fixed measurement window,
+//! outlier-robust statistics, and aligned table output. Bench binaries
+//! (`rust/benches/*.rs`, `harness = false`) use this for microbenchmarks
+//! and plain stdout tables for paper-figure regeneration.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Max wall-clock samples collected per benchmark.
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 200,
+        }
+    }
+}
+
+/// Quick config for very slow end-to-end benches.
+impl BenchConfig {
+    pub fn fast() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            max_samples: 30,
+        }
+    }
+}
+
+/// One benchmark's results (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean * 1e9
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        1.0 / self.summary.mean
+    }
+}
+
+/// A group of benchmarks printed as one table.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Bencher {
+        Bencher { config, results: Vec::new() }
+    }
+
+    /// Run `f` repeatedly; `f` is one logical iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + estimate the per-iteration cost.
+        let warmup_start = Instant::now();
+        let mut warmup_iters: u64 = 0;
+        while warmup_start.elapsed() < self.config.warmup {
+            f();
+            warmup_iters += 1;
+        }
+        let est = warmup_start.elapsed().as_secs_f64() / warmup_iters.max(1) as f64;
+
+        // Choose iterations per sample so one sample is ~1% of the window
+        // (bounded below by 1), then sample until the window closes.
+        let target_sample = self.config.measure.as_secs_f64() / 100.0;
+        let iters = ((target_sample / est).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let window = Instant::now();
+        while window.elapsed() < self.config.measure && samples.len() < self.config.max_samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        if samples.is_empty() {
+            // pathologically slow iteration: one forced sample
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            summary: Summary::of(&samples),
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Render the collected results as an aligned table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>10}\n",
+            "benchmark", "mean", "p50", "p90", "samples"
+        ));
+        out.push_str(&"-".repeat(95));
+        out.push('\n');
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12} {:>10}\n",
+                r.name,
+                fmt_ns(r.summary.mean * 1e9),
+                fmt_ns(r.summary.p50 * 1e9),
+                fmt_ns(r.summary.p90 * 1e9),
+                r.summary.count,
+            ));
+        }
+        out
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.1} ns")
+    }
+}
+
+/// Simple fixed-width table builder for paper-figure output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(50),
+            max_samples: 50,
+        });
+        let r = b.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.count >= 1);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_samples: 10,
+        });
+        b.bench("alpha", || {
+            std::hint::black_box(1 + 1);
+        });
+        let rep = b.report();
+        assert!(rep.contains("alpha"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["workers", "runtime(s)"]);
+        t.row(&["1".into(), "94.7".into()]);
+        t.row(&["4".into(), "73.1".into()]);
+        let s = t.render();
+        assert!(s.contains("workers"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

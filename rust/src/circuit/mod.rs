@@ -1,0 +1,19 @@
+//! Circuit IR, the QuClassi circuit builder, and parameter-shift banks.
+//!
+//! * [`spec`] — the (qubits, layers) configuration: register layout,
+//!   parameter/feature counts (mirrors `python/compile/kernels/ref.py`).
+//! * [`builder`] — concrete gate-list construction for one
+//!   (theta, data) pair: data encoding → variational layers → swap test.
+//! * [`bank`] — Algorithm 1's circuit bank: shifted parameter vectors for
+//!   the parameter-shift rule and gradient assembly from the returned
+//!   fidelities.
+
+pub mod bank;
+pub mod builder;
+pub mod spec;
+pub mod transpile;
+
+pub use bank::{CircuitBank, ShiftKind};
+pub use builder::build_quclassi;
+pub use spec::QuClassiConfig;
+pub use transpile::optimize;

@@ -1,0 +1,156 @@
+//! QuClassi circuit configuration (mirrors `ref.quclassi_layout`).
+
+use crate::wire::Value;
+
+/// A (qubits, layers) configuration of the QuClassi variational circuit.
+///
+/// Register layout for `q` total qubits (q odd, >= 3):
+/// qubit 0 = swap-test ancilla, qubits `1..=S` = variational state
+/// register, qubits `S+1..=2S` = data register, with `S = (q-1)/2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QuClassiConfig {
+    pub qubits: usize,
+    pub layers: usize,
+}
+
+impl QuClassiConfig {
+    pub fn new(qubits: usize, layers: usize) -> Result<QuClassiConfig, String> {
+        if qubits < 3 || qubits % 2 == 0 {
+            return Err(format!("qubits must be odd and >= 3, got {qubits}"));
+        }
+        if !(1..=3).contains(&layers) {
+            return Err(format!("layers must be 1..=3, got {layers}"));
+        }
+        Ok(QuClassiConfig { qubits, layers })
+    }
+
+    /// The six configurations evaluated by the paper.
+    pub fn paper_configs() -> Vec<QuClassiConfig> {
+        let mut v = Vec::new();
+        for q in [5, 7] {
+            for l in [1, 2, 3] {
+                v.push(QuClassiConfig { qubits: q, layers: l });
+            }
+        }
+        v
+    }
+
+    /// S — size of the state (and data) register.
+    pub fn s(&self) -> usize {
+        (self.qubits - 1) / 2
+    }
+
+    pub fn state_qubits(&self) -> Vec<usize> {
+        (1..=self.s()).collect()
+    }
+
+    pub fn data_qubits(&self) -> Vec<usize> {
+        (self.s() + 1..=2 * self.s()).collect()
+    }
+
+    /// Trainable parameter count.
+    pub fn n_params(&self) -> usize {
+        let s = self.s();
+        let mut total = 2 * s;
+        if self.layers >= 2 {
+            total += 2 * (s - 1);
+        }
+        if self.layers >= 3 {
+            total += 2 * (s - 1);
+        }
+        total
+    }
+
+    /// Input feature count (2 encoder angles per data qubit).
+    pub fn n_features(&self) -> usize {
+        2 * self.s()
+    }
+
+    /// Qubit demand as seen by the co-Manager scheduler.
+    pub fn qubit_demand(&self) -> usize {
+        self.qubits
+    }
+
+    /// True for parameter indices driven through CRY/CRZ (these need the
+    /// four-term shift rule; see `bank`).
+    pub fn controlled_param_mask(&self) -> Vec<bool> {
+        let s = self.s();
+        let mut mask = vec![false; self.n_params()];
+        if self.layers >= 3 {
+            let start = 2 * s + 2 * (s - 1);
+            for m in mask.iter_mut().skip(start) {
+                *m = true;
+            }
+        }
+        mask
+    }
+
+    /// Artifact base name (matches `python/compile/model.py::config_meta`).
+    pub fn artifact_name(&self) -> String {
+        format!("quclassi_q{}_l{}", self.qubits, self.layers)
+    }
+
+    pub fn to_wire(&self) -> Value {
+        Value::obj().with("qubits", self.qubits).with("layers", self.layers)
+    }
+
+    pub fn from_wire(v: &Value) -> Result<QuClassiConfig, String> {
+        QuClassiConfig::new(v.req_usize("qubits")?, v.req_usize("layers")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_param_counts() {
+        // Matches python tests: q5 -> 4/6/8, q7 -> 6/10/14.
+        let counts: Vec<usize> = QuClassiConfig::paper_configs()
+            .iter()
+            .map(|c| c.n_params())
+            .collect();
+        assert_eq!(counts, vec![4, 6, 8, 6, 10, 14]);
+    }
+
+    #[test]
+    fn feature_counts() {
+        assert_eq!(QuClassiConfig::new(5, 1).unwrap().n_features(), 4);
+        assert_eq!(QuClassiConfig::new(7, 1).unwrap().n_features(), 6);
+    }
+
+    #[test]
+    fn register_layout() {
+        let c = QuClassiConfig::new(7, 2).unwrap();
+        assert_eq!(c.s(), 3);
+        assert_eq!(c.state_qubits(), vec![1, 2, 3]);
+        assert_eq!(c.data_qubits(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(QuClassiConfig::new(4, 1).is_err()); // even
+        assert!(QuClassiConfig::new(1, 1).is_err()); // too small
+        assert!(QuClassiConfig::new(5, 0).is_err());
+        assert!(QuClassiConfig::new(5, 4).is_err());
+    }
+
+    #[test]
+    fn controlled_mask_covers_layer3_only() {
+        let c = QuClassiConfig::new(5, 3).unwrap();
+        assert_eq!(c.controlled_param_mask(), vec![false, false, false, false, false, false, true, true]);
+        let c2 = QuClassiConfig::new(5, 2).unwrap();
+        assert!(c2.controlled_param_mask().iter().all(|&m| !m));
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(QuClassiConfig::new(7, 3).unwrap().artifact_name(), "quclassi_q7_l3");
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        let c = QuClassiConfig::new(5, 2).unwrap();
+        assert_eq!(QuClassiConfig::from_wire(&c.to_wire()).unwrap(), c);
+    }
+}

@@ -1,0 +1,261 @@
+//! Peephole circuit optimization (extension — the paper cites relaxed
+//! peephole optimization [Liu et al., CGO'21] among the compiler work
+//! its stack builds on).
+//!
+//! Local rewrites that preserve the circuit's unitary action:
+//!
+//! * merge adjacent same-axis rotations on the same operand(s):
+//!   `Ry(a) Ry(b) -> Ry(a+b)` (likewise Rz/Rx/Ryy/Rzz/CRY/CRZ);
+//! * drop rotations with angle ≡ 0 (mod 4π — the rotation period);
+//! * cancel adjacent self-inverse pairs: `H H`, `CX CX`, `CSWAP CSWAP`.
+//!
+//! Rewrites only fire when the two gates are adjacent *on their operand
+//! qubits* — an intervening gate on a disjoint qubit set does not block
+//! merging (commutation through disjoint supports).
+//!
+//! The worker's qsim backend applies this before simulation; the QuClassi
+//! circuits contain mergeable pairs whenever a data angle or parameter
+//! lands on the same qubit axis twice.
+
+use crate::qsim::gates::Gate;
+
+const TWO_PI: f64 = 2.0 * std::f64::consts::PI;
+
+/// Is `theta` equivalent to a no-op rotation (angle ≡ 0 mod 4π)?
+fn is_noop_angle(theta: f64) -> bool {
+    // Rotations have period 4π (they act on half angles); 2π flips the
+    // global phase only, which is unobservable — treat 2π as no-op too.
+    let r = theta.rem_euclid(TWO_PI);
+    r.abs() < 1e-12 || (TWO_PI - r).abs() < 1e-12
+}
+
+/// Can `a` and `b` merge into one gate (same kind, same operands)?
+fn mergeable(a: &Gate, b: &Gate) -> bool {
+    use Gate::*;
+    match (a, b) {
+        (Rx { q: q1, .. }, Rx { q: q2, .. })
+        | (Ry { q: q1, .. }, Ry { q: q2, .. })
+        | (Rz { q: q1, .. }, Rz { q: q2, .. }) => q1 == q2,
+        (Ryy { q0: a0, q1: a1, .. }, Ryy { q0: b0, q1: b1, .. })
+        | (Rzz { q0: a0, q1: a1, .. }, Rzz { q0: b0, q1: b1, .. }) => a0 == b0 && a1 == b1,
+        (
+            Cry { control: c1, target: t1, .. },
+            Cry { control: c2, target: t2, .. },
+        )
+        | (
+            Crz { control: c1, target: t1, .. },
+            Crz { control: c2, target: t2, .. },
+        ) => c1 == c2 && t1 == t2,
+        _ => false,
+    }
+}
+
+/// Do two gates act on disjoint qubit sets (and therefore commute)?
+fn disjoint(a: &Gate, b: &Gate) -> bool {
+    let qa = a.qubits();
+    b.qubits().iter().all(|q| !qa.contains(q))
+}
+
+/// Are `a` and `b` an adjacent self-inverse pair?
+fn cancels(a: &Gate, b: &Gate) -> bool {
+    use Gate::*;
+    match (a, b) {
+        (H { q: q1 }, H { q: q2 }) => q1 == q2,
+        (Cx { control: c1, target: t1 }, Cx { control: c2, target: t2 }) => c1 == c2 && t1 == t2,
+        (
+            Cswap { control: c1, a: a1, b: b1 },
+            Cswap { control: c2, a: a2, b: b2 },
+        ) => c1 == c2 && a1 == a2 && b1 == b2,
+        _ => false,
+    }
+}
+
+/// One optimization pass; returns (rewritten gates, number of rewrites).
+fn pass(gates: &[Gate]) -> (Vec<Gate>, usize) {
+    let mut out: Vec<Gate> = Vec::with_capacity(gates.len());
+    let mut rewrites = 0;
+    'next: for g in gates {
+        // Look backwards through `out` for a partner, stopping at the
+        // first gate that shares a qubit without matching.
+        for i in (0..out.len()).rev() {
+            let prev = &out[i];
+            if mergeable(prev, g) {
+                let merged = prev.with_theta(prev.theta().unwrap() + g.theta().unwrap());
+                rewrites += 1;
+                if is_noop_angle(merged.theta().unwrap()) {
+                    out.remove(i);
+                } else {
+                    out[i] = merged;
+                }
+                continue 'next;
+            }
+            if cancels(prev, g) {
+                out.remove(i);
+                rewrites += 1;
+                continue 'next;
+            }
+            if !disjoint(prev, g) {
+                break; // blocked: a non-commuting gate intervenes
+            }
+        }
+        // No partner: keep, unless it is itself a no-op rotation.
+        if g.theta().map(is_noop_angle).unwrap_or(false) {
+            rewrites += 1;
+            continue;
+        }
+        out.push(g.clone());
+    }
+    (out, rewrites)
+}
+
+/// Optimize until fixpoint; returns the rewritten circuit.
+pub fn optimize(gates: &[Gate]) -> Vec<Gate> {
+    let mut current = gates.to_vec();
+    loop {
+        let (next, rewrites) = pass(&current);
+        if rewrites == 0 {
+            return next;
+        }
+        current = next;
+    }
+}
+
+/// Rewrite statistics for observability / the transpile bench.
+pub fn optimize_with_stats(gates: &[Gate]) -> (Vec<Gate>, usize) {
+    let before = gates.len();
+    let out = optimize(gates);
+    (out.clone(), before - out.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::{build_quclassi, QuClassiConfig};
+    use crate::qsim::State;
+    use crate::util::Rng;
+
+    /// Equivalence oracle: both circuits act identically on random states.
+    fn assert_equivalent(a: &[Gate], b: &[Gate], nq: usize) {
+        let mut rng = Rng::new(99);
+        for _ in 0..4 {
+            let mut amps: Vec<crate::qsim::C64> = (0..1usize << nq)
+                .map(|_| crate::qsim::C64::new(rng.normal(), rng.normal()))
+                .collect();
+            let norm = amps.iter().map(|x| x.norm_sq()).sum::<f64>().sqrt();
+            for x in &mut amps {
+                *x = x.scale(1.0 / norm);
+            }
+            let mut sa = State::from_amps(amps.clone());
+            let mut sb = State::from_amps(amps);
+            sa.run(a);
+            sb.run(b);
+            for (x, y) in sa.amps().iter().zip(sb.amps().iter()) {
+                assert!(
+                    (x.re - y.re).abs() < 1e-9 && (x.im - y.im).abs() < 1e-9,
+                    "circuits diverge"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merges_same_axis_rotations() {
+        let gates = vec![Gate::Ry { q: 1, theta: 0.3 }, Gate::Ry { q: 1, theta: 0.4 }];
+        let opt = optimize(&gates);
+        assert_eq!(opt, vec![Gate::Ry { q: 1, theta: 0.7 }]);
+        assert_equivalent(&gates, &opt, 2);
+    }
+
+    #[test]
+    fn merge_through_disjoint_gate() {
+        let gates = vec![
+            Gate::Rz { q: 0, theta: 0.5 },
+            Gate::Ry { q: 1, theta: 0.2 }, // disjoint: commutes past
+            Gate::Rz { q: 0, theta: 0.25 },
+        ];
+        let opt = optimize(&gates);
+        assert_eq!(opt.len(), 2);
+        assert_equivalent(&gates, &opt, 2);
+    }
+
+    #[test]
+    fn blocked_by_overlapping_gate() {
+        let gates = vec![
+            Gate::Ry { q: 0, theta: 0.5 },
+            Gate::H { q: 0 }, // same qubit: blocks the merge
+            Gate::Ry { q: 0, theta: 0.25 },
+        ];
+        let opt = optimize(&gates);
+        assert_eq!(opt.len(), 3);
+        assert_equivalent(&gates, &opt, 1);
+    }
+
+    #[test]
+    fn cancels_double_h_and_cx() {
+        let gates = vec![
+            Gate::H { q: 0 },
+            Gate::H { q: 0 },
+            Gate::Cx { control: 0, target: 1 },
+            Gate::Cx { control: 0, target: 1 },
+        ];
+        assert!(optimize(&gates).is_empty());
+    }
+
+    #[test]
+    fn opposite_rotations_vanish() {
+        let gates = vec![Gate::Cry { control: 0, target: 1, theta: 0.8 },
+                         Gate::Cry { control: 0, target: 1, theta: -0.8 }];
+        assert!(optimize(&gates).is_empty());
+    }
+
+    #[test]
+    fn drops_zero_angle_gates() {
+        let gates = vec![
+            Gate::Ry { q: 0, theta: 0.0 },
+            Gate::Rzz { q0: 0, q1: 1, theta: 2.0 * TWO_PI },
+            Gate::Rz { q: 1, theta: 0.5 },
+        ];
+        let opt = optimize(&gates);
+        assert_eq!(opt, vec![Gate::Rz { q: 1, theta: 0.5 }]);
+    }
+
+    #[test]
+    fn quclassi_circuits_stay_equivalent() {
+        // Property: for every paper config, the optimized circuit acts
+        // identically to the original.
+        let mut rng = Rng::new(3);
+        for cfg in QuClassiConfig::paper_configs() {
+            let thetas: Vec<f32> =
+                (0..cfg.n_params()).map(|_| rng.range_f64(-3.0, 3.0) as f32).collect();
+            let data: Vec<f32> =
+                (0..cfg.n_features()).map(|_| rng.range_f64(-3.0, 3.0) as f32).collect();
+            let gates = build_quclassi(&cfg, &thetas, &data);
+            let opt = optimize(&gates);
+            assert!(opt.len() <= gates.len());
+            assert_equivalent(&gates, &opt, cfg.qubits);
+        }
+    }
+
+    #[test]
+    fn fixpoint_enables_cascades() {
+        // Ry(a) Ry(-a) leaves H H adjacent -> everything vanishes.
+        let gates = vec![
+            Gate::H { q: 0 },
+            Gate::Ry { q: 0, theta: 0.4 },
+            Gate::Ry { q: 0, theta: -0.4 },
+            Gate::H { q: 0 },
+        ];
+        assert!(optimize(&gates).is_empty());
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = Rng::new(8);
+        let cfg = QuClassiConfig::new(7, 3).unwrap();
+        let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
+        let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
+        let once = optimize(&build_quclassi(&cfg, &thetas, &data));
+        let twice = optimize(&once);
+        assert_eq!(once, twice);
+    }
+}

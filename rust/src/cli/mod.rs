@@ -1,0 +1,295 @@
+//! From-scratch command-line parsing (std-only substrate for `clap`).
+//!
+//! Declarative subcommand + flag/option specs with generated `--help`,
+//! type-checked value access, and unknown-argument errors.
+
+use std::collections::BTreeMap;
+
+/// An option/flag specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A subcommand specification.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> CommandSpec {
+        CommandSpec { name, about, opts: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> CommandSpec {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> CommandSpec {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> CommandSpec {
+        self.opts.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+}
+
+/// A parsed command line.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected a number, got '{s}'"))),
+        }
+    }
+
+    /// Parse a comma-separated list of integers ("5,10,15,20").
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|_| CliError(format!("--{name}: bad integer '{p}'")))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+/// Parse failure with a user-facing message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// The application spec: name, version, subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub version: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        if args.is_empty() {
+            return Err(CliError(self.usage()));
+        }
+        let cmd_name = &args[0];
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError(self.usage()));
+        }
+        if cmd_name == "--version" {
+            return Err(CliError(format!("{} {}", self.name, self.version)));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError(format!("unknown command '{cmd_name}'\n\n{}", self.usage())))?;
+
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for opt in &spec.opts {
+            if let Some(d) = opt.default {
+                values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.command_usage(spec)));
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                // --name=value form
+                let (name, inline_val) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let opt = spec
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| {
+                        CliError(format!("unknown option '--{name}'\n\n{}", self.command_usage(spec)))
+                    })?;
+                if opt.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                        }
+                    };
+                    values.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("flag --{name} takes no value")));
+                    }
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { command: spec.name.to_string(), values, flags, positional })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} {} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+            self.name, self.version, self.about, self.name);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun '<COMMAND> --help' for command options.");
+        out
+    }
+
+    pub fn command_usage(&self, spec: &CommandSpec) -> String {
+        let mut out = format!("{} {} — {}\n\nOPTIONS:\n", self.name, spec.name, spec.about);
+        for o in &spec.opts {
+            let val = if o.takes_value { " <VALUE>" } else { "" };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            out.push_str(&format!("  --{:<22} {}{}\n", format!("{}{val}", o.name), o.help, def));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "dqulearn",
+            version: "0.1.0",
+            about: "test",
+            commands: vec![
+                CommandSpec::new("train", "train a model")
+                    .opt_default("qubits", "qubit count", "5")
+                    .opt("pair", "digit pair")
+                    .flag("verbose", "chatty"),
+                CommandSpec::new("worker", "run worker").opt("manager", "manager addr"),
+            ],
+        }
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed, CliError> {
+        app().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parse(&["train"]).unwrap();
+        assert_eq!(p.get("qubits"), Some("5"));
+        assert_eq!(p.get("pair"), None);
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let p = parse(&["train", "--qubits", "7", "--pair=3,9", "--verbose"]).unwrap();
+        assert_eq!(p.get_usize("qubits").unwrap(), Some(7));
+        assert_eq!(p.get("pair"), Some("3,9"));
+        assert!(p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn usize_list() {
+        let p = parse(&["train", "--pair", "5, 10,15"]).unwrap();
+        assert_eq!(p.get_usize_list("pair").unwrap(), Some(vec![5, 10, 15]));
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(parse(&["nope"]).is_err());
+        assert!(parse(&["train", "--bogus"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&["train", "--qubits"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        assert!(parse(&["train", "--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn bad_int_reports_option() {
+        let p = parse(&["train", "--qubits", "five"]).unwrap();
+        let err = p.get_usize("qubits").unwrap_err();
+        assert!(err.0.contains("qubits"));
+    }
+
+    #[test]
+    fn help_lists_commands() {
+        let err = parse(&["--help"]).unwrap_err();
+        assert!(err.0.contains("train"));
+        assert!(err.0.contains("worker"));
+    }
+}

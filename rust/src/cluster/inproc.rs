@@ -1,0 +1,245 @@
+//! In-process cluster: the full co-Manager + worker stack on threads.
+//!
+//! Used by tests, the quickstart example, and calibration runs. Workers
+//! execute through their configured backend (PJRT artifacts or qsim);
+//! the manager code path is byte-for-byte the one used over TCP — only
+//! the `WorkerChannel` is a direct call instead of an RPC.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::circuit::QuClassiConfig;
+use crate::coordinator::{Manager, ManagerConfig, WorkerChannel};
+use crate::model::exec::{CircuitExecutor, CircuitPair};
+use crate::qsim::NoiseModel;
+use crate::worker::WorkerBackend;
+
+/// Direct-call worker channel wrapping a backend.
+struct InProcChannel {
+    backend: WorkerBackend,
+}
+
+impl WorkerChannel for InProcChannel {
+    fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        self.backend.execute(config, pairs)
+    }
+}
+
+/// Builder for an in-process cluster.
+pub struct InProcClusterBuilder {
+    worker_qubits: Vec<usize>,
+    /// Per-worker noise models (heterogeneous pools; extension §10).
+    worker_noise: Vec<Option<NoiseModel>>,
+    artifacts: Option<PathBuf>,
+    manager_config: ManagerConfig,
+    noise: Option<NoiseModel>,
+}
+
+/// A running in-process cluster.
+pub struct InProcCluster {
+    pub manager: Manager,
+    client: u64,
+}
+
+impl InProcCluster {
+    pub fn builder() -> InProcClusterBuilder {
+        InProcClusterBuilder {
+            worker_qubits: vec![5],
+            worker_noise: Vec::new(),
+            artifacts: None,
+            manager_config: ManagerConfig::default(),
+            noise: None,
+        }
+    }
+}
+
+impl InProcClusterBuilder {
+    /// One worker per entry, each with the given max qubits.
+    pub fn workers(mut self, qubits: &[usize]) -> Self {
+        self.worker_qubits = qubits.to_vec();
+        self
+    }
+
+    /// Use PJRT backends loading artifacts from this directory.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    pub fn manager_config(mut self, cfg: ManagerConfig) -> Self {
+        self.manager_config = cfg;
+        self
+    }
+
+    /// Give every worker a noisy simulator backend (extension).
+    pub fn noise(mut self, noise: NoiseModel) -> Self {
+        self.noise = Some(noise);
+        self
+    }
+
+    /// Heterogeneous pool: per-worker (qubits, noise model) profiles.
+    pub fn workers_with_noise(mut self, profiles: &[(usize, Option<NoiseModel>)]) -> Self {
+        self.worker_qubits = profiles.iter().map(|(q, _)| *q).collect();
+        self.worker_noise = profiles.iter().map(|(_, n)| *n).collect();
+        self
+    }
+
+    pub fn build(self) -> Result<InProcCluster, String> {
+        let manager = Manager::new(self.manager_config);
+        for (i, &mq) in self.worker_qubits.iter().enumerate() {
+            let per_worker = self.worker_noise.get(i).copied().flatten().or(self.noise);
+            let backend = match (&per_worker, &self.artifacts) {
+                (Some(nm), _) => WorkerBackend::NoisyQsim(*nm, 0x5EED + i as u64),
+                (None, Some(dir)) => WorkerBackend::auto(dir),
+                (None, None) => WorkerBackend::Qsim,
+            };
+            // report gate-error magnitude as the noise estimate
+            let noise_level = per_worker.map(|n| n.p2).unwrap_or(0.0);
+            manager.register_worker_profile(mq, 0.0, noise_level, Arc::new(InProcChannel { backend }));
+        }
+        let client = manager.new_client();
+        Ok(InProcCluster { manager, client })
+    }
+}
+
+impl InProcCluster {
+    /// A new client session (multi-tenant use).
+    pub fn new_client(&self) -> u64 {
+        self.manager.new_client()
+    }
+
+    pub fn shutdown(&self) {
+        self.manager.shutdown();
+    }
+}
+
+/// The cluster is itself a [`CircuitExecutor`]: the Trainer runs
+/// distributed without code changes.
+impl CircuitExecutor for InProcCluster {
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        self.manager.execute_bank(self.client, *config, pairs)
+    }
+
+    fn describe(&self) -> String {
+        format!("in-proc cluster ({} workers)", self.manager.worker_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::model::exec::QsimExecutor;
+    use crate::model::optimizer::Optimizer;
+    use crate::model::quclassi::LossKind;
+use crate::model::{QuClassiModel, TrainConfig, Trainer};
+    use crate::util::Rng;
+
+    #[test]
+    fn cluster_matches_local_execution() {
+        let cluster = InProcCluster::builder().workers(&[5, 5]).build().unwrap();
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let mut rng = Rng::new(11);
+        let pairs: Vec<CircuitPair> = (0..25)
+            .map(|_| {
+                (
+                    (0..cfg.n_params()).map(|_| rng.f32()).collect(),
+                    (0..cfg.n_features()).map(|_| rng.f32()).collect(),
+                )
+            })
+            .collect();
+        let dist = cluster.execute_bank(&cfg, &pairs).unwrap();
+        let local = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+        assert_eq!(dist, local);
+        cluster.shutdown();
+    }
+
+    /// The paper's central accuracy claim: distributed training reaches
+    /// (almost) the same accuracy as the non-distributed baseline — here
+    /// they are bitwise-identical computations, so accuracies match when
+    /// seeds match.
+    #[test]
+    fn distributed_training_equals_baseline() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let ds = Dataset::binary_pair(None, 3, 9, 10, 5);
+        let tc = TrainConfig {
+            epochs: 3,
+            optimizer: Optimizer::adam(0.1),
+            train_classical: false,
+            classical_lr_scale: 0.1,
+            seed: 3,
+            early_stop_acc: None,
+            loss: LossKind::Discriminative,
+        };
+
+        let mut m1 = QuClassiModel::new(cfg, &mut Rng::new(9));
+        let baseline = Trainer::new(tc.clone()).train(&mut m1, &ds, &QsimExecutor).unwrap();
+
+        let cluster = InProcCluster::builder().workers(&[5, 5]).build().unwrap();
+        let mut m2 = QuClassiModel::new(cfg, &mut Rng::new(9));
+        let distributed = Trainer::new(tc).train(&mut m2, &ds, &cluster).unwrap();
+
+        assert_eq!(m1.theta[0], m2.theta[0], "theta_A diverged");
+        assert!(
+            (baseline.final_train_accuracy() - distributed.final_train_accuracy()).abs() < 1e-9
+        );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn heterogeneous_workers_multi_tenant() {
+        // workers 5/10/15/20 qubits — the paper's multi-tenant pool
+        let cluster = InProcCluster::builder().workers(&[5, 10, 15, 20]).build().unwrap();
+        let cfg5 = QuClassiConfig::new(5, 1).unwrap();
+        let cfg7 = QuClassiConfig::new(7, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let mk = |cfg: &QuClassiConfig, rng: &mut Rng, n: usize| -> Vec<CircuitPair> {
+            (0..n)
+                .map(|_| {
+                    (
+                        (0..cfg.n_params()).map(|_| rng.f32()).collect(),
+                        (0..cfg.n_features()).map(|_| rng.f32()).collect(),
+                    )
+                })
+                .collect()
+        };
+        let p5 = mk(&cfg5, &mut rng, 16);
+        let p7 = mk(&cfg7, &mut rng, 16);
+        let c5 = cluster.manager.clone();
+        let c7 = cluster.manager.clone();
+        let p5c = p5.clone();
+        let p7c = p7.clone();
+        let t5 = std::thread::spawn(move || c5.execute_bank(c5.new_client(), cfg5, &p5c).unwrap());
+        let t7 = std::thread::spawn(move || c7.execute_bank(c7.new_client(), cfg7, &p7c).unwrap());
+        let got5 = t5.join().unwrap();
+        let got7 = t7.join().unwrap();
+        assert_eq!(got5, QsimExecutor.execute_bank(&cfg5, &p5).unwrap());
+        assert_eq!(got7, QsimExecutor.execute_bank(&cfg7, &p7).unwrap());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn noisy_cluster_produces_different_fidelities() {
+        let clean = InProcCluster::builder().workers(&[5]).build().unwrap();
+        let noisy = InProcCluster::builder()
+            .workers(&[5])
+            .noise(NoiseModel { p1: 0.2, p2: 0.3, readout: 0.1 })
+            .build()
+            .unwrap();
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let pairs: Vec<CircuitPair> = vec![(vec![0.4; 6], vec![0.9; 4]); 6];
+        let a = clean.execute_bank(&cfg, &pairs).unwrap();
+        let b = noisy.execute_bank(&cfg, &pairs).unwrap();
+        assert_ne!(a, b);
+        clean.shutdown();
+        noisy.shutdown();
+    }
+}

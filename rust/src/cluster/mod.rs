@@ -1,0 +1,13 @@
+//! Cluster assembly: wire the co-Manager, workers, and clients together.
+//!
+//! * [`inproc`] — manager + N worker threads in one process (tests,
+//!   quickstart, benches). Runs the identical manager/scheduler code;
+//!   only the transport differs.
+//! * [`tcp`] — the distributed deployment: the manager's RPC server,
+//!   the manager→worker RPC channel, and the remote client.
+
+pub mod inproc;
+pub mod tcp;
+
+pub use inproc::{InProcCluster, InProcClusterBuilder};
+pub use tcp::{serve_manager, RemoteClient};

@@ -1,0 +1,284 @@
+//! Distributed deployment over TCP: manager RPC server, manager→worker
+//! channel, and the remote client.
+//!
+//! Message flow (all framed JSON, `net::rpc` envelope):
+//!
+//! ```text
+//! worker  -> manager : register {max_qubits, addr, cru} -> {worker_id}
+//! worker  -> manager : heartbeat {worker_id, cru}
+//! client  -> manager : submit_bank {client, qubits, layers, circuits} -> {bank}
+//! client  -> manager : wait_bank {bank} -> {fids}
+//! manager -> worker  : execute {circuits} -> {fids}
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::circuit::QuClassiConfig;
+use crate::coordinator::job::CircuitJob;
+use crate::coordinator::{Manager, WorkerChannel};
+use crate::model::exec::{CircuitExecutor, CircuitPair};
+use crate::net::{RpcClient, RpcServer};
+use crate::wire::Value;
+
+/// Manager→worker channel over RPC.
+struct RpcWorkerChannel {
+    client: RpcClient,
+}
+
+impl WorkerChannel for RpcWorkerChannel {
+    fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        let circuits: Vec<Value> = pairs
+            .iter()
+            .enumerate()
+            .map(|(i, (thetas, data))| {
+                CircuitJob {
+                    id: i as u64,
+                    client: 0,
+                    bank: 0,
+                    index: i,
+                    config: *config,
+                    thetas: thetas.clone(),
+                    data: data.clone(),
+                }
+                .to_wire()
+            })
+            .collect();
+        let resp = self
+            .client
+            .call("execute", Value::obj().with("circuits", circuits))
+            .map_err(|e| format!("worker rpc: {e}"))?;
+        resp.req_f32_vec("fids")
+    }
+}
+
+/// Expose a [`Manager`] on a TCP address. Returns the server handle
+/// (drop to stop accepting).
+pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServer> {
+    let handler = move |op: &str, params: &Value| -> Result<Value, String> {
+        match op {
+            "register" => {
+                let max_qubits = params.req_usize("max_qubits")?;
+                let addr = params.req_str("addr")?.to_string();
+                let cru = params.req_f64("cru").unwrap_or(0.0);
+                let rpc = RpcClient::connect(addr.as_str(), Duration::from_secs(5))
+                    .map_err(|e| format!("dial worker back: {e}"))?;
+                let id = manager.register_worker(
+                    max_qubits,
+                    cru,
+                    Arc::new(RpcWorkerChannel { client: rpc }),
+                );
+                Ok(Value::obj().with("worker_id", id))
+            }
+            "heartbeat" => {
+                let id = params.req_u64("worker_id")?;
+                let cru = params.req_f64("cru").unwrap_or(0.0);
+                manager.heartbeat(id, cru)?;
+                Ok(Value::obj())
+            }
+            "new_client" => Ok(Value::obj().with("client", manager.new_client())),
+            "submit_bank" => {
+                let client = params.req_u64("client")?;
+                let config =
+                    QuClassiConfig::new(params.req_usize("qubits")?, params.req_usize("layers")?)?;
+                let circuits = params.req_arr("circuits")?;
+                let mut pairs = Vec::with_capacity(circuits.len());
+                for c in circuits {
+                    let thetas = c.req_f32_vec("thetas")?;
+                    let data = c.req_f32_vec("data")?;
+                    pairs.push((thetas, data));
+                }
+                let bank = manager.submit_bank(client, config, &pairs)?;
+                Ok(Value::obj().with("bank", bank))
+            }
+            "wait_bank" => {
+                let bank = params.req_u64("bank")?;
+                let fids = manager.wait_bank(bank)?;
+                Ok(Value::obj().with("fids", fids.as_slice()))
+            }
+            "stats" => {
+                let s = manager.stats();
+                Ok(Value::obj()
+                    .with("submitted", s.submitted)
+                    .with("completed", s.completed)
+                    .with("dispatches", s.dispatches)
+                    .with("requeues", s.requeues)
+                    .with("evictions", s.evictions)
+                    .with("workers", manager.worker_count())
+                    .with("queue", manager.queue_len()))
+            }
+            other => Err(format!("manager: unknown op '{other}'")),
+        }
+    };
+    RpcServer::serve(listen, Arc::new(handler))
+}
+
+/// A client connected to a remote manager; implements
+/// [`CircuitExecutor`] so training code is deployment-agnostic.
+pub struct RemoteClient {
+    rpc: RpcClient,
+    client_id: u64,
+}
+
+impl RemoteClient {
+    pub fn connect(manager_addr: &str) -> Result<RemoteClient, String> {
+        let rpc = RpcClient::connect(manager_addr, Duration::from_secs(5))
+            .map_err(|e| format!("connect manager: {e}"))?;
+        let resp = rpc.call("new_client", Value::obj()).map_err(|e| e.to_string())?;
+        let client_id = resp.req_u64("client")?;
+        Ok(RemoteClient { rpc, client_id })
+    }
+
+    pub fn client_id(&self) -> u64 {
+        self.client_id
+    }
+
+    pub fn manager_stats(&self) -> Result<Value, String> {
+        self.rpc.call("stats", Value::obj()).map_err(|e| e.to_string())
+    }
+}
+
+impl CircuitExecutor for RemoteClient {
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        let circuits: Vec<Value> = pairs
+            .iter()
+            .map(|(t, d)| Value::obj().with("thetas", t.as_slice()).with("data", d.as_slice()))
+            .collect();
+        let resp = self
+            .rpc
+            .call(
+                "submit_bank",
+                Value::obj()
+                    .with("client", self.client_id)
+                    .with("qubits", config.qubits)
+                    .with("layers", config.layers)
+                    .with("circuits", circuits),
+            )
+            .map_err(|e| e.to_string())?;
+        let bank = resp.req_u64("bank")?;
+        let resp = self
+            .rpc
+            .call("wait_bank", Value::obj().with("bank", bank))
+            .map_err(|e| e.to_string())?;
+        resp.req_f32_vec("fids")
+    }
+
+    fn describe(&self) -> String {
+        format!("remote client #{}", self.client_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ManagerConfig;
+    use crate::model::exec::QsimExecutor;
+    use crate::util::Rng;
+    use crate::worker::{WorkerHandle, WorkerOptions};
+
+    /// Full TCP round trip: manager server, two real worker processes
+    /// (threads), remote client — the paper's deployment in miniature.
+    #[test]
+    fn tcp_cluster_end_to_end() {
+        let manager = Manager::new(ManagerConfig {
+            heartbeat_period: 0.2,
+            ..Default::default()
+        });
+        let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mk_worker = |mq: usize| {
+            WorkerHandle::start(
+                &addr,
+                WorkerOptions {
+                    max_qubits: mq,
+                    artifact_dir: "/nonexistent".into(), // qsim backend
+                    heartbeat_period: 0.1,
+                    listen: "127.0.0.1:0".to_string(),
+                },
+            )
+            .unwrap()
+        };
+        let mut w1 = mk_worker(5);
+        let mut w2 = mk_worker(10);
+
+        let client = RemoteClient::connect(&addr).unwrap();
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let mut rng = Rng::new(2);
+        let pairs: Vec<CircuitPair> = (0..12)
+            .map(|_| {
+                (
+                    (0..cfg.n_params()).map(|_| rng.f32()).collect(),
+                    (0..cfg.n_features()).map(|_| rng.f32()).collect(),
+                )
+            })
+            .collect();
+        let fids = client.execute_bank(&cfg, &pairs).unwrap();
+        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+
+        let stats = client.manager_stats().unwrap();
+        assert_eq!(stats.req_u64("completed").unwrap(), 12);
+        assert_eq!(stats.req_u64("workers").unwrap(), 2);
+
+        w1.stop();
+        w2.stop();
+        manager.shutdown();
+    }
+
+    /// Kill a worker mid-run: heartbeats stop, the manager evicts it, and
+    /// the system completes on the survivor (fault tolerance).
+    #[test]
+    fn worker_failure_is_tolerated() {
+        let manager = Manager::new(ManagerConfig {
+            heartbeat_period: 0.1,
+            max_batch: 2,
+            ..Default::default()
+        });
+        let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut w1 = WorkerHandle::start(
+            &addr,
+            WorkerOptions {
+                max_qubits: 5,
+                artifact_dir: "/nonexistent".into(),
+                heartbeat_period: 0.05,
+                listen: "127.0.0.1:0".to_string(),
+            },
+        )
+        .unwrap();
+        // stop w1's heartbeats immediately; it will be evicted
+        w1.stop();
+
+        let survivor = WorkerHandle::start(
+            &addr,
+            WorkerOptions {
+                max_qubits: 5,
+                artifact_dir: "/nonexistent".into(),
+                heartbeat_period: 0.05,
+                listen: "127.0.0.1:0".to_string(),
+            },
+        )
+        .unwrap();
+
+        let client = RemoteClient::connect(&addr).unwrap();
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs: Vec<CircuitPair> = vec![(vec![0.2; 4], vec![0.4; 4]); 8];
+        let fids = client.execute_bank(&cfg, &pairs).unwrap();
+        assert_eq!(fids.len(), 8);
+        // eventually only the survivor remains registered
+        std::thread::sleep(Duration::from_millis(600));
+        assert_eq!(manager.worker_count(), 1);
+
+        drop(survivor);
+        manager.shutdown();
+    }
+}

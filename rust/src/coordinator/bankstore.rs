@@ -1,0 +1,163 @@
+//! Result collection: banks of circuits submitted by clients, filled in
+//! as workers complete them, awaited by blocking clients.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// One submitted bank awaiting its fidelities.
+#[derive(Debug)]
+struct BankState {
+    fids: Vec<Option<f32>>,
+    remaining: usize,
+    failed: Option<String>,
+}
+
+/// Thread-safe store of in-flight banks.
+#[derive(Debug, Default)]
+pub struct BankStore {
+    inner: Mutex<HashMap<u64, BankState>>,
+    cv: Condvar,
+}
+
+impl BankStore {
+    pub fn new() -> BankStore {
+        BankStore::default()
+    }
+
+    /// Open a new bank expecting `size` results.
+    pub fn open(&self, bank: u64, size: usize) {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        let prev = g.insert(bank, BankState { fids: vec![None; size], remaining: size, failed: None });
+        debug_assert!(prev.is_none(), "bank id reuse");
+    }
+
+    /// Record one completed circuit.
+    pub fn complete(&self, bank: u64, index: usize, fid: f32) {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        if let Some(b) = g.get_mut(&bank) {
+            if b.fids[index].is_none() {
+                b.fids[index] = Some(fid);
+                b.remaining -= 1;
+                if b.remaining == 0 {
+                    self.cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Mark a whole bank as failed (e.g. unschedulable circuit).
+    pub fn fail(&self, bank: u64, reason: String) {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        if let Some(b) = g.get_mut(&bank) {
+            b.failed = Some(reason);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until the bank completes (or fails / times out); removes it.
+    pub fn wait(&self, bank: u64, timeout: Duration) -> Result<Vec<f32>, String> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        loop {
+            match g.get(&bank) {
+                None => return Err(format!("unknown bank {bank}")),
+                Some(b) if b.failed.is_some() => {
+                    let reason = b.failed.clone().unwrap();
+                    g.remove(&bank);
+                    return Err(reason);
+                }
+                Some(b) if b.remaining == 0 => {
+                    let b = g.remove(&bank).unwrap();
+                    return Ok(b.fids.into_iter().map(|f| f.unwrap()).collect());
+                }
+                Some(_) => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        g.remove(&bank);
+                        return Err(format!("bank {bank} timed out"));
+                    }
+                    let (guard, _t) = self
+                        .cv
+                        .wait_timeout(g, deadline - now)
+                        .expect("bankstore poisoned");
+                    g = guard;
+                }
+            }
+        }
+    }
+
+    /// Progress of a bank: (done, total), if it exists.
+    pub fn progress(&self, bank: u64) -> Option<(usize, usize)> {
+        let g = self.inner.lock().expect("bankstore poisoned");
+        g.get(&bank).map(|b| (b.fids.len() - b.remaining, b.fids.len()))
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().expect("bankstore poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn complete_then_wait() {
+        let s = BankStore::new();
+        s.open(1, 3);
+        s.complete(1, 0, 0.1);
+        s.complete(1, 2, 0.3);
+        s.complete(1, 1, 0.2);
+        let fids = s.wait(1, Duration::from_millis(100)).unwrap();
+        assert_eq!(fids, vec![0.1, 0.2, 0.3]);
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn wait_blocks_until_completion() {
+        let s = Arc::new(BankStore::new());
+        s.open(5, 2);
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || s2.wait(5, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(30));
+        s.complete(5, 1, 0.9);
+        s.complete(5, 0, 0.8);
+        assert_eq!(t.join().unwrap().unwrap(), vec![0.8, 0.9]);
+    }
+
+    #[test]
+    fn timeout_reported() {
+        let s = BankStore::new();
+        s.open(2, 1);
+        let err = s.wait(2, Duration::from_millis(20)).unwrap_err();
+        assert!(err.contains("timed out"));
+    }
+
+    #[test]
+    fn failure_propagates() {
+        let s = BankStore::new();
+        s.open(3, 2);
+        s.fail(3, "no capacity".into());
+        let err = s.wait(3, Duration::from_millis(100)).unwrap_err();
+        assert!(err.contains("no capacity"));
+    }
+
+    #[test]
+    fn duplicate_completion_ignored() {
+        let s = BankStore::new();
+        s.open(4, 2);
+        s.complete(4, 0, 0.5);
+        s.complete(4, 0, 0.6); // ignored
+        assert_eq!(s.progress(4), Some((1, 2)));
+        s.complete(4, 1, 0.7);
+        assert_eq!(s.wait(4, Duration::from_millis(50)).unwrap(), vec![0.5, 0.7]);
+    }
+
+    #[test]
+    fn unknown_bank_errors() {
+        let s = BankStore::new();
+        assert!(s.wait(42, Duration::from_millis(10)).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Circuit jobs: the co-Manager's unit of distribution.
+
+use crate::circuit::QuClassiConfig;
+use crate::wire::Value;
+
+/// Globally unique circuit identifier.
+pub type JobId = u64;
+
+/// One independent circuit submitted by a client: a (theta, data) pair
+/// under a configuration, tagged with its bank for result routing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CircuitJob {
+    pub id: JobId,
+    pub client: u64,
+    pub bank: u64,
+    /// Position of this circuit inside its bank.
+    pub index: usize,
+    pub config: QuClassiConfig,
+    pub thetas: Vec<f32>,
+    pub data: Vec<f32>,
+}
+
+impl CircuitJob {
+    /// Qubit demand as seen by Algorithm 2 (`D_{c_i}`).
+    pub fn demand(&self) -> usize {
+        self.config.qubit_demand()
+    }
+
+    pub fn to_wire(&self) -> Value {
+        Value::obj()
+            .with("id", self.id)
+            .with("client", self.client)
+            .with("bank", self.bank)
+            .with("index", self.index)
+            .with("qubits", self.config.qubits)
+            .with("layers", self.config.layers)
+            .with("thetas", self.thetas.as_slice())
+            .with("data", self.data.as_slice())
+    }
+
+    pub fn from_wire(v: &Value) -> Result<CircuitJob, String> {
+        let config = QuClassiConfig::new(v.req_usize("qubits")?, v.req_usize("layers")?)?;
+        let thetas = v.req_f32_vec("thetas")?;
+        let data = v.req_f32_vec("data")?;
+        if thetas.len() != config.n_params() {
+            return Err(format!(
+                "job theta arity {} != {}",
+                thetas.len(),
+                config.n_params()
+            ));
+        }
+        if data.len() != config.n_features() {
+            return Err(format!("job data arity {} != {}", data.len(), config.n_features()));
+        }
+        Ok(CircuitJob {
+            id: v.req_u64("id")?,
+            client: v.req_u64("client")?,
+            bank: v.req_u64("bank")?,
+            index: v.req_usize("index")?,
+            config,
+            thetas,
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_job() -> CircuitJob {
+        CircuitJob {
+            id: 7,
+            client: 1,
+            bank: 3,
+            index: 2,
+            config: QuClassiConfig::new(5, 1).unwrap(),
+            thetas: vec![0.1, 0.2, 0.3, 0.4],
+            data: vec![1.0, 1.1, 1.2, 1.3],
+        }
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        let j = sample_job();
+        let back = CircuitJob::from_wire(&j.to_wire()).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn demand_equals_config_qubits() {
+        assert_eq!(sample_job().demand(), 5);
+    }
+
+    #[test]
+    fn rejects_arity_mismatch() {
+        let mut w = sample_job().to_wire();
+        w.set("thetas", vec![0.1f32, 0.2].as_slice());
+        assert!(CircuitJob::from_wire(&w).is_err());
+    }
+}

@@ -1,0 +1,645 @@
+//! The co-Manager service: queueing, Algorithm-2 assignment, dispatch,
+//! result routing, liveness, and multi-client bookkeeping.
+//!
+//! Transport-agnostic: workers are reached through the [`WorkerChannel`]
+//! trait (TCP RPC in distributed mode, direct calls in `--in-proc` mode);
+//! clients interact through [`Manager`] methods (wrapped by the RPC
+//! server in `cluster::tcp`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::bankstore::BankStore;
+use super::job::{CircuitJob, JobId};
+use super::registry::{Registry, WorkerId};
+use super::scheduler;
+use crate::circuit::QuClassiConfig;
+use crate::model::exec::CircuitPair;
+use crate::util::{Clock, SystemClock};
+
+/// How the manager reaches a worker's executor.
+pub trait WorkerChannel: Send + Sync {
+    fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String>;
+}
+
+/// Manager tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ManagerConfig {
+    /// Heartbeat period in seconds (paper: 5 s; configurable).
+    pub heartbeat_period: f64,
+    /// Max circuits packed into one dispatch to a worker (the artifact
+    /// batch is 32; 1 reproduces the paper's per-circuit assignment).
+    pub max_batch: usize,
+    /// Pending-queue backpressure limit (submits block above this).
+    pub max_queue: usize,
+    /// Bank wait timeout.
+    pub wait_timeout: Duration,
+    /// Noise-aware selection weight (extension §10): `Some(alpha)` ranks
+    /// candidates by `alpha * noise + (1-alpha) * CRU`; `None` is the
+    /// paper's CRU-only rule.
+    pub noise_aware_alpha: Option<f64>,
+}
+
+impl Default for ManagerConfig {
+    fn default() -> Self {
+        ManagerConfig {
+            heartbeat_period: 5.0,
+            max_batch: 32,
+            max_queue: 100_000,
+            wait_timeout: Duration::from_secs(600),
+            noise_aware_alpha: None,
+        }
+    }
+}
+
+/// Aggregate counters.
+#[derive(Debug, Clone, Default)]
+pub struct ManagerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub dispatches: u64,
+    pub requeues: u64,
+    pub evictions: u64,
+}
+
+struct Inner {
+    cfg: ManagerConfig,
+    clock: Arc<dyn Clock>,
+    registry: Mutex<Registry>,
+    queue: Mutex<VecDeque<CircuitJob>>,
+    /// Signaled on: new work, capacity freed, shutdown.
+    work_cv: Condvar,
+    /// Signaled when queue length drops (backpressure release).
+    space_cv: Condvar,
+    banks: BankStore,
+    channels: Mutex<HashMap<WorkerId, Arc<dyn WorkerChannel>>>,
+    in_flight: Mutex<HashMap<JobId, CircuitJob>>,
+    /// Dispatch batches keyed by their qubit-reservation id (the head
+    /// job), for eviction-time re-queueing of whole batches.
+    batches: Mutex<HashMap<JobId, Vec<JobId>>>,
+    stats: Mutex<ManagerStats>,
+    next_bank: AtomicU64,
+    next_job: AtomicU64,
+    next_client: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// The co-Manager. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct Manager {
+    inner: Arc<Inner>,
+}
+
+impl Manager {
+    pub fn new(cfg: ManagerConfig) -> Manager {
+        Self::with_clock(cfg, Arc::new(SystemClock::new()))
+    }
+
+    pub fn with_clock(cfg: ManagerConfig, clock: Arc<dyn Clock>) -> Manager {
+        let m = Manager {
+            inner: Arc::new(Inner {
+                cfg,
+                clock,
+                registry: Mutex::new(Registry::new(5.0)),
+                queue: Mutex::new(VecDeque::new()),
+                work_cv: Condvar::new(),
+                space_cv: Condvar::new(),
+                banks: BankStore::new(),
+                channels: Mutex::new(HashMap::new()),
+                in_flight: Mutex::new(HashMap::new()),
+                batches: Mutex::new(HashMap::new()),
+                stats: Mutex::new(ManagerStats::default()),
+                next_bank: AtomicU64::new(1),
+                next_job: AtomicU64::new(1),
+                next_client: AtomicU64::new(1),
+                stop: AtomicBool::new(false),
+            }),
+        };
+        {
+            let mut reg = m.inner.registry.lock().unwrap();
+            reg.heartbeat_period = m.inner.cfg.heartbeat_period;
+        }
+        // Scheduler loop.
+        let m2 = m.clone();
+        std::thread::Builder::new()
+            .name("co-manager".into())
+            .spawn(move || m2.scheduler_loop())
+            .expect("spawn co-manager");
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // worker-facing API
+    // ------------------------------------------------------------------
+
+    /// Quantum Worker Registration (Algorithm 2 lines 2-6).
+    pub fn register_worker(
+        &self,
+        max_qubits: usize,
+        cru: f64,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> WorkerId {
+        self.register_worker_profile(max_qubits, cru, 0.0, channel)
+    }
+
+    /// Registration with a reported noise estimate (extension §10).
+    pub fn register_worker_profile(
+        &self,
+        max_qubits: usize,
+        cru: f64,
+        noise: f64,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> WorkerId {
+        let now = self.inner.clock.now();
+        let id = self
+            .inner
+            .registry
+            .lock()
+            .unwrap()
+            .register_with_noise(max_qubits, cru, noise, now);
+        self.inner.channels.lock().unwrap().insert(id, channel);
+        self.inner.work_cv.notify_all();
+        id
+    }
+
+    /// Periodic heartbeat (Algorithm 2 lines 7-11): liveness + CRU. The
+    /// manager's own reserve/release bookkeeping remains authoritative
+    /// for occupied qubits (worker self-reports race with in-pipe RPCs).
+    pub fn heartbeat(&self, worker: WorkerId, cru: f64) -> Result<(), String> {
+        let now = self.inner.clock.now();
+        self.inner.registry.lock().unwrap().heartbeat(worker, cru, now)
+    }
+
+    // ------------------------------------------------------------------
+    // client-facing API
+    // ------------------------------------------------------------------
+
+    /// Allocate a client id (multi-tenant session).
+    pub fn new_client(&self) -> u64 {
+        self.inner.next_client.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a bank of circuits; returns the bank id immediately.
+    /// Blocks when the pending queue is above the backpressure limit.
+    pub fn submit_bank(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<u64, String> {
+        if pairs.is_empty() {
+            return Err("empty bank".to_string());
+        }
+        for (t, d) in pairs {
+            if t.len() != config.n_params() || d.len() != config.n_features() {
+                return Err("bank arity mismatch".to_string());
+            }
+        }
+        let bank = self.inner.next_bank.fetch_add(1, Ordering::Relaxed);
+        self.inner.banks.open(bank, pairs.len());
+
+        // Backpressure: wait for queue space.
+        let mut q = self.inner.queue.lock().unwrap();
+        while q.len() + pairs.len() > self.inner.cfg.max_queue {
+            if self.inner.stop.load(Ordering::Relaxed) {
+                return Err("manager stopped".to_string());
+            }
+            let (guard, _) = self
+                .inner
+                .space_cv
+                .wait_timeout(q, Duration::from_millis(100))
+                .unwrap();
+            q = guard;
+        }
+        for (index, (thetas, data)) in pairs.iter().enumerate() {
+            let id = self.inner.next_job.fetch_add(1, Ordering::Relaxed);
+            q.push_back(CircuitJob {
+                id,
+                client,
+                bank,
+                index,
+                config,
+                thetas: thetas.clone(),
+                data: data.clone(),
+            });
+        }
+        self.inner.stats.lock().unwrap().submitted += pairs.len() as u64;
+        drop(q);
+        self.inner.work_cv.notify_all();
+        Ok(bank)
+    }
+
+    /// Block until a bank completes.
+    pub fn wait_bank(&self, bank: u64) -> Result<Vec<f32>, String> {
+        self.inner.banks.wait(bank, self.inner.cfg.wait_timeout)
+    }
+
+    /// Convenience: submit + wait.
+    pub fn execute_bank(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        let bank = self.submit_bank(client, config, pairs)?;
+        self.wait_bank(bank)
+    }
+
+    pub fn stats(&self) -> ManagerStats {
+        self.inner.stats.lock().unwrap().clone()
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.inner.registry.lock().unwrap().len()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        self.inner.work_cv.notify_all();
+        self.inner.space_cv.notify_all();
+    }
+
+    // ------------------------------------------------------------------
+    // scheduler loop (Algorithm 2 line 14-20 + dispatch)
+    // ------------------------------------------------------------------
+
+    fn scheduler_loop(&self) {
+        while !self.inner.stop.load(Ordering::Relaxed) {
+            // Liveness pass: evict stale workers, re-queue their circuits.
+            self.evict_and_requeue();
+
+            // Take the next schedulable batch.
+            let batch = self.next_assignment();
+            match batch {
+                Some((worker, config, jobs)) => self.dispatch(worker, config, jobs),
+                None => {
+                    // Nothing schedulable: wait for work/capacity.
+                    let q = self.inner.queue.lock().unwrap();
+                    let _ = self
+                        .inner
+                        .work_cv
+                        .wait_timeout(q, Duration::from_millis(20))
+                        .unwrap();
+                }
+            }
+        }
+    }
+
+    fn evict_and_requeue(&self) {
+        let now = self.inner.clock.now();
+        let evicted = self.inner.registry.lock().unwrap().evict_stale(now);
+        if evicted.is_empty() {
+            return;
+        }
+        let mut in_flight = self.inner.in_flight.lock().unwrap();
+        let mut q = self.inner.queue.lock().unwrap();
+        let mut stats = self.inner.stats.lock().unwrap();
+        let mut batches = self.inner.batches.lock().unwrap();
+        for (wid, orphan_keys) in evicted {
+            stats.evictions += 1;
+            self.inner.channels.lock().unwrap().remove(&wid);
+            for key in orphan_keys {
+                // each orphaned reservation is a whole dispatch batch
+                let members = batches.remove(&key).unwrap_or_else(|| vec![key]);
+                for job_id in members {
+                    if let Some(job) = in_flight.remove(&job_id) {
+                        stats.requeues += 1;
+                        q.push_front(job);
+                    }
+                }
+            }
+        }
+        drop(batches);
+        drop(q);
+        self.inner.work_cv.notify_all();
+    }
+
+    /// Pick the next circuit and worker per Algorithm 2; greedily extend
+    /// the assignment with same-config circuits into one dispatch batch
+    /// (`max_batch = 1` reproduces the paper's per-circuit behavior).
+    ///
+    /// Capacity semantics: a batch executes as ONE unit on the worker
+    /// (one PJRT program / one sequential backend job), so it reserves
+    /// its `demand` qubits once — concurrent *batches* on a big worker
+    /// are what multi-tenant packing schedules.
+    #[allow(clippy::type_complexity)]
+    fn next_assignment(&self) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>)> {
+        let mut q = self.inner.queue.lock().unwrap();
+        if q.is_empty() {
+            return None;
+        }
+        let mut reg = self.inner.registry.lock().unwrap();
+
+        // Head-of-line circuit picks the worker (paper semantics)...
+        let head = q.front().unwrap();
+        let demand = head.demand();
+        // An empty pool is not a failure: workers may still join
+        // (dynamic registration); park the queue until one does.
+        if reg.is_empty() {
+            return None;
+        }
+        if !scheduler::can_ever_fit(&reg, demand) {
+            // Unschedulable on the current pool: fail its whole bank.
+            let job = q.pop_front().unwrap();
+            drop(reg);
+            drop(q);
+            self.inner.banks.fail(
+                job.bank,
+                format!("circuit needs {demand} qubits; no worker that large"),
+            );
+            self.inner.space_cv.notify_all();
+            return self.next_assignment_retry();
+        }
+        let worker = match self.inner.cfg.noise_aware_alpha {
+            Some(alpha) => scheduler::select_noise_aware(&reg, demand, alpha)?,
+            None => scheduler::select(&reg, demand)?,
+        };
+        let config = head.config;
+
+        // ...then pack same-config circuits into the batch.
+        let mut jobs = Vec::new();
+        let mut scanned = 0;
+        while scanned < q.len() && jobs.len() < self.inner.cfg.max_batch {
+            if q[scanned].config == config {
+                jobs.push(q.remove(scanned).unwrap());
+            } else {
+                scanned += 1;
+            }
+        }
+        debug_assert!(!jobs.is_empty());
+        // One reservation for the whole batch, keyed by the head job.
+        let key = jobs[0].id;
+        reg.reserve(worker, key, demand).expect("capacity checked");
+        let mut in_flight = self.inner.in_flight.lock().unwrap();
+        for j in &jobs {
+            in_flight.insert(j.id, j.clone());
+        }
+        drop(in_flight);
+        self.inner
+            .batches
+            .lock()
+            .unwrap()
+            .insert(key, jobs.iter().map(|j| j.id).collect());
+        drop(reg);
+        drop(q);
+        self.inner.space_cv.notify_all();
+        Some((worker, config, jobs))
+    }
+
+    fn next_assignment_retry(&self) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>)> {
+        // Bounded retry after failing a bank, to avoid recursion depth.
+        None
+    }
+
+    /// Send one batch to a worker on a dispatch thread; completion updates
+    /// the registry, bank store, and wakes the scheduler.
+    fn dispatch(&self, worker: WorkerId, config: QuClassiConfig, jobs: Vec<CircuitJob>) {
+        let channel = match self.inner.channels.lock().unwrap().get(&worker) {
+            Some(c) => c.clone(),
+            None => {
+                // Worker vanished between selection and dispatch: re-queue.
+                self.requeue(worker, jobs);
+                return;
+            }
+        };
+        self.inner.stats.lock().unwrap().dispatches += 1;
+        let m = self.clone();
+        std::thread::Builder::new()
+            .name(format!("dispatch-w{worker}"))
+            .spawn(move || {
+                let pairs: Vec<CircuitPair> =
+                    jobs.iter().map(|j| (j.thetas.clone(), j.data.clone())).collect();
+                match channel.execute(&config, &pairs) {
+                    Ok(fids) => {
+                        // Order matters: bump the completion counter before
+                        // banks.complete() can wake a waiting client, so a
+                        // stats read right after wait_bank() is consistent.
+                        m.inner.stats.lock().unwrap().completed += jobs.len() as u64;
+                        let key = jobs[0].id;
+                        let mut reg = m.inner.registry.lock().unwrap();
+                        let mut in_flight = m.inner.in_flight.lock().unwrap();
+                        reg.release(worker, key);
+                        m.inner.batches.lock().unwrap().remove(&key);
+                        for (job, fid) in jobs.iter().zip(fids.iter()) {
+                            in_flight.remove(&job.id);
+                            m.inner.banks.complete(job.bank, job.index, *fid);
+                        }
+                        drop(in_flight);
+                        drop(reg);
+                        m.inner.work_cv.notify_all();
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "manager",
+                            "dispatch to w{worker} failed ({e}); re-queueing {} circuits",
+                            jobs.len()
+                        );
+                        m.requeue(worker, jobs);
+                    }
+                }
+            })
+            .expect("spawn dispatch");
+    }
+
+    fn requeue(&self, worker: WorkerId, jobs: Vec<CircuitJob>) {
+        let mut reg = self.inner.registry.lock().unwrap();
+        let mut in_flight = self.inner.in_flight.lock().unwrap();
+        let mut q = self.inner.queue.lock().unwrap();
+        let mut stats = self.inner.stats.lock().unwrap();
+        if let Some(first) = jobs.first() {
+            reg.release(worker, first.id);
+            self.inner.batches.lock().unwrap().remove(&first.id);
+        }
+        for job in jobs {
+            in_flight.remove(&job.id);
+            stats.requeues += 1;
+            q.push_front(job);
+        }
+        drop(q);
+        drop(in_flight);
+        drop(reg);
+        self.inner.work_cv.notify_all();
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::exec::QsimExecutor;
+    use crate::model::CircuitExecutor;
+
+    /// Worker channel backed by the local simulator.
+    struct SimChannel;
+
+    impl WorkerChannel for SimChannel {
+        fn execute(
+            &self,
+            config: &QuClassiConfig,
+            pairs: &[CircuitPair],
+        ) -> Result<Vec<f32>, String> {
+            QsimExecutor.execute_bank(config, pairs)
+        }
+    }
+
+    /// A channel that always fails (fault injection).
+    struct FlakyChannel {
+        fail_first: std::sync::atomic::AtomicU32,
+    }
+
+    impl WorkerChannel for FlakyChannel {
+        fn execute(
+            &self,
+            config: &QuClassiConfig,
+            pairs: &[CircuitPair],
+        ) -> Result<Vec<f32>, String> {
+            if self.fail_first.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                if v > 0 {
+                    Some(v - 1)
+                } else {
+                    None
+                }
+            }).is_ok()
+            {
+                return Err("injected fault".to_string());
+            }
+            QsimExecutor.execute_bank(config, pairs)
+        }
+    }
+
+    fn pairs_for(config: &QuClassiConfig, n: usize) -> Vec<CircuitPair> {
+        let mut rng = crate::util::Rng::new(9);
+        (0..n)
+            .map(|_| {
+                (
+                    (0..config.n_params()).map(|_| rng.f32()).collect(),
+                    (0..config.n_features()).map(|_| rng.f32()).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_worker_end_to_end() {
+        let m = Manager::new(ManagerConfig::default());
+        m.register_worker(5, 0.1, Arc::new(SimChannel));
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 10);
+        let client = m.new_client();
+        let fids = m.execute_bank(client, cfg, &pairs).unwrap();
+        assert_eq!(fids.len(), 10);
+        // results must match direct simulation exactly
+        let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+        assert_eq!(fids, want);
+        assert_eq!(m.stats().completed, 10);
+        m.shutdown();
+    }
+
+    #[test]
+    fn multiple_workers_share_load() {
+        let m = Manager::new(ManagerConfig { max_batch: 2, ..Default::default() });
+        for _ in 0..4 {
+            m.register_worker(5, 0.0, Arc::new(SimChannel));
+        }
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let pairs = pairs_for(&cfg, 30);
+        let fids = m.execute_bank(m.new_client(), cfg, &pairs).unwrap();
+        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        assert!(m.stats().dispatches >= 15); // 30 circuits / batch 2
+        m.shutdown();
+    }
+
+    #[test]
+    fn oversized_circuit_fails_cleanly() {
+        let m = Manager::new(ManagerConfig::default());
+        m.register_worker(5, 0.0, Arc::new(SimChannel));
+        let cfg = QuClassiConfig::new(7, 1).unwrap(); // needs 7 > 5
+        let pairs = pairs_for(&cfg, 2);
+        let err = m.execute_bank(m.new_client(), cfg, &pairs).unwrap_err();
+        assert!(err.contains("no worker"), "{err}");
+        m.shutdown();
+    }
+
+    #[test]
+    fn dispatch_failure_requeues_and_recovers() {
+        let m = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
+        m.register_worker(
+            5,
+            0.0,
+            Arc::new(FlakyChannel { fail_first: std::sync::atomic::AtomicU32::new(2) }),
+        );
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 8);
+        let fids = m.execute_bank(m.new_client(), cfg, &pairs).unwrap();
+        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        assert!(m.stats().requeues > 0);
+        m.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_multi_tenant() {
+        // A 20-qubit and a 5-qubit worker; two clients with different
+        // configs submit concurrently (the paper's multi-tenant setting).
+        let m = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
+        m.register_worker(20, 0.2, Arc::new(SimChannel));
+        m.register_worker(5, 0.1, Arc::new(SimChannel));
+        let m1 = m.clone();
+        let t1 = std::thread::spawn(move || {
+            let cfg = QuClassiConfig::new(5, 1).unwrap();
+            let pairs = pairs_for(&cfg, 20);
+            let fids = m1.execute_bank(m1.new_client(), cfg, &pairs).unwrap();
+            assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        });
+        let m2 = m.clone();
+        let t2 = std::thread::spawn(move || {
+            let cfg = QuClassiConfig::new(7, 2).unwrap();
+            let pairs = pairs_for(&cfg, 20);
+            let fids = m2.execute_bank(m2.new_client(), cfg, &pairs).unwrap();
+            assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        });
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert_eq!(m.stats().completed, 40);
+        m.shutdown();
+    }
+
+    #[test]
+    fn no_worker_keeps_bank_pending_until_one_joins() {
+        let m = Manager::new(ManagerConfig::default());
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 3);
+        let bank = m.submit_bank(m.new_client(), cfg, &pairs).unwrap();
+        // register a worker shortly after; dynamic join must drain it
+        let m2 = m.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            m2.register_worker(5, 0.0, Arc::new(SimChannel));
+        });
+        let fids = m.wait_bank(bank).unwrap();
+        assert_eq!(fids.len(), 3);
+        m.shutdown();
+    }
+
+    #[test]
+    fn empty_bank_rejected() {
+        let m = Manager::new(ManagerConfig::default());
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        assert!(m.submit_bank(1, cfg, &[]).is_err());
+        m.shutdown();
+    }
+}

@@ -1,0 +1,27 @@
+//! The quantum-classical **co-Manager** (paper §III-C, Algorithm 2) —
+//! DQuLearn's system contribution.
+//!
+//! Four management modules, exactly as the paper delineates:
+//!
+//! 1. **co-Manager Initialization** — [`registry::Registry`] tracks each
+//!    worker's maximum (`MR`), occupied (`OR`) and available (`AR`)
+//!    qubits plus classical resource usage (`CRU`).
+//! 2. **Quantum Worker Registration** — dynamic joins at runtime
+//!    ([`manager::Manager::register_worker`]).
+//! 3. **Periodic Worker Management** — heartbeats update `OR`/`AR`/`CRU`;
+//!    three missed heartbeats evict the worker and its in-flight circuits
+//!    are re-queued ([`registry::Registry::evict_stale`]).
+//! 4. **Workload Assignment** — for each pending circuit, filter workers
+//!    with `AR > demand`, sort ascending by `CRU`, pick the least loaded
+//!    ([`scheduler`]).
+
+pub mod bankstore;
+pub mod job;
+pub mod manager;
+pub mod registry;
+pub mod scheduler;
+
+pub use job::{CircuitJob, JobId};
+pub use manager::{Manager, ManagerConfig, WorkerChannel};
+pub use registry::{Registry, WorkerId, WorkerState};
+pub use scheduler::{select_worker, SchedulerKind};

@@ -1,0 +1,269 @@
+//! Worker registry: MR / OR / AR / CRU bookkeeping + liveness
+//! (Algorithm 2 lines 1-13).
+
+use std::collections::BTreeMap;
+
+use super::job::JobId;
+
+/// Worker identifier assigned at registration (`w_1, w_2, ...`).
+pub type WorkerId = u64;
+
+/// Per-worker runtime state.
+#[derive(Debug, Clone)]
+pub struct WorkerState {
+    pub id: WorkerId,
+    /// `MR_{w_i}` — maximum qubits, reported by the worker itself.
+    pub max_qubits: usize,
+    /// `OR_{w_i}` — occupied qubits (sum of active circuit demands).
+    pub occupied: usize,
+    /// `CRU_{w_i}(t)` — latest classical resource usage sample in [0, 1].
+    pub cru: f64,
+    /// Clock time of the last heartbeat (or registration).
+    pub last_heartbeat: f64,
+    /// `AC_{w_i}` — active circuits with their demands.
+    pub active: BTreeMap<JobId, usize>,
+    /// Estimated gate-error level of this worker in [0, 1] (extension:
+    /// the paper's future-work noise-aware scheduling; 0 = ideal).
+    pub noise: f64,
+}
+
+impl WorkerState {
+    /// `AR_{w_i} = MR_{w_i} - OR_{w_i}` (Algorithm 2 line 10).
+    pub fn available(&self) -> usize {
+        self.max_qubits.saturating_sub(self.occupied)
+    }
+}
+
+/// The active worker set `W` with liveness tracking.
+#[derive(Debug)]
+pub struct Registry {
+    workers: BTreeMap<WorkerId, WorkerState>,
+    next_id: WorkerId,
+    /// Heartbeat period in seconds (paper: 5 s, configurable).
+    pub heartbeat_period: f64,
+    /// Heartbeats missed before eviction (paper: 3).
+    pub max_missed: u32,
+}
+
+impl Registry {
+    pub fn new(heartbeat_period: f64) -> Registry {
+        Registry { workers: BTreeMap::new(), next_id: 1, heartbeat_period, max_missed: 3 }
+    }
+
+    /// New Worker Registration (Algorithm 2 lines 2-6): OR = 0,
+    /// AR = MR, record CRU.
+    pub fn register(&mut self, max_qubits: usize, cru: f64, now: f64) -> WorkerId {
+        self.register_with_noise(max_qubits, cru, 0.0, now)
+    }
+
+    /// Registration with a reported noise estimate (extension §10).
+    pub fn register_with_noise(
+        &mut self,
+        max_qubits: usize,
+        cru: f64,
+        noise: f64,
+        now: f64,
+    ) -> WorkerId {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.workers.insert(
+            id,
+            WorkerState {
+                id,
+                max_qubits,
+                occupied: 0,
+                cru,
+                last_heartbeat: now,
+                active: BTreeMap::new(),
+                noise,
+            },
+        );
+        crate::log_info!("registry", "worker w{id} joined (MR={max_qubits}, CRU={cru:.2})");
+        id
+    }
+
+    /// Periodic heartbeat — liveness + CRU refresh.
+    ///
+    /// Used by the live manager, whose own reserve/release bookkeeping is
+    /// authoritative for `OR` (a worker's self-report can race with
+    /// circuits in the RPC pipe).
+    pub fn heartbeat(&mut self, id: WorkerId, cru: f64, now: f64) -> Result<(), String> {
+        let w = self.workers.get_mut(&id).ok_or_else(|| format!("unknown worker w{id}"))?;
+        w.cru = cru;
+        w.last_heartbeat = now;
+        Ok(())
+    }
+
+    /// Paper-faithful periodic heartbeat (Algorithm 2 lines 7-11):
+    /// recompute `OR` from the reported active set, refresh CRU and
+    /// liveness. Used by the discrete-event simulation, where worker
+    /// reports cannot race with dispatches.
+    pub fn heartbeat_recompute(
+        &mut self,
+        id: WorkerId,
+        active: &[(JobId, usize)],
+        cru: f64,
+        now: f64,
+    ) -> Result<(), String> {
+        let w = self.workers.get_mut(&id).ok_or_else(|| format!("unknown worker w{id}"))?;
+        w.active = active.iter().copied().collect();
+        w.occupied = w.active.values().sum();
+        w.cru = cru;
+        w.last_heartbeat = now;
+        Ok(())
+    }
+
+    /// Eviction (Algorithm 2 lines 12-13): drop workers whose heartbeat
+    /// is older than `max_missed` periods; returns (worker, orphaned jobs)
+    /// so in-flight circuits can be re-queued.
+    pub fn evict_stale(&mut self, now: f64) -> Vec<(WorkerId, Vec<JobId>)> {
+        let deadline = self.max_missed as f64 * self.heartbeat_period;
+        let stale: Vec<WorkerId> = self
+            .workers
+            .values()
+            .filter(|w| now - w.last_heartbeat > deadline)
+            .map(|w| w.id)
+            .collect();
+        stale
+            .into_iter()
+            .map(|id| {
+                let w = self.workers.remove(&id).expect("stale id present");
+                crate::log_warn!(
+                    "registry",
+                    "worker w{id} lost ({} active circuits re-queued)",
+                    w.active.len()
+                );
+                (id, w.active.keys().copied().collect())
+            })
+            .collect()
+    }
+
+    /// Reserve capacity for an assignment (manager-side OR accounting
+    /// between heartbeats).
+    pub fn reserve(&mut self, id: WorkerId, job: JobId, demand: usize) -> Result<(), String> {
+        let w = self.workers.get_mut(&id).ok_or_else(|| format!("unknown worker w{id}"))?;
+        if w.available() < demand {
+            return Err(format!(
+                "worker w{id} has {} available qubits, need {demand}",
+                w.available()
+            ));
+        }
+        w.occupied += demand;
+        w.active.insert(job, demand);
+        Ok(())
+    }
+
+    /// Release capacity when a circuit completes.
+    pub fn release(&mut self, id: WorkerId, job: JobId) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            if let Some(demand) = w.active.remove(&job) {
+                w.occupied = w.occupied.saturating_sub(demand);
+            }
+        }
+    }
+
+    pub fn get(&self, id: WorkerId) -> Option<&WorkerState> {
+        self.workers.get(&id)
+    }
+
+    pub fn workers(&self) -> impl Iterator<Item = &WorkerState> {
+        self.workers.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Total available qubits across the system (for backpressure hints).
+    pub fn total_available(&self) -> usize {
+        self.workers.values().map(|w| w.available()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_initializes_per_paper() {
+        let mut r = Registry::new(5.0);
+        let id = r.register(10, 0.3, 0.0);
+        let w = r.get(id).unwrap();
+        assert_eq!(w.occupied, 0); // OR = 0
+        assert_eq!(w.available(), 10); // AR = MR
+        assert_eq!(w.cru, 0.3);
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let mut r = Registry::new(5.0);
+        assert_eq!(r.register(5, 0.0, 0.0), 1);
+        assert_eq!(r.register(7, 0.0, 0.0), 2);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn heartbeat_recomputes_occupancy() {
+        let mut r = Registry::new(5.0);
+        let id = r.register(10, 0.0, 0.0);
+        r.heartbeat_recompute(id, &[(100, 5), (101, 3)], 0.7, 4.0).unwrap();
+        let w = r.get(id).unwrap();
+        assert_eq!(w.occupied, 8);
+        assert_eq!(w.available(), 2);
+        assert_eq!(w.cru, 0.7);
+        assert_eq!(w.last_heartbeat, 4.0);
+    }
+
+    #[test]
+    fn heartbeat_unknown_worker_errors() {
+        let mut r = Registry::new(5.0);
+        assert!(r.heartbeat(99, 0.0, 0.0).is_err());
+        assert!(r.heartbeat_recompute(99, &[], 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn eviction_after_three_missed_periods() {
+        let mut r = Registry::new(5.0);
+        let a = r.register(5, 0.0, 0.0);
+        let b = r.register(7, 0.0, 0.0);
+        r.reserve(a, 42, 5).unwrap();
+        // at t=14.9 nothing is stale (3 * 5 = 15s deadline)
+        assert!(r.evict_stale(14.9).is_empty());
+        // b heartbeats, a does not
+        r.heartbeat(b, 0.1, 14.0).unwrap();
+        let evicted = r.evict_stale(15.1);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, a);
+        assert_eq!(evicted[0].1, vec![42]); // orphaned job returned
+        assert!(r.get(a).is_none());
+        assert!(r.get(b).is_some());
+    }
+
+    #[test]
+    fn reserve_release_cycle() {
+        let mut r = Registry::new(5.0);
+        let id = r.register(10, 0.0, 0.0);
+        r.reserve(id, 1, 7).unwrap();
+        assert_eq!(r.get(id).unwrap().available(), 3);
+        // second reservation exceeding AR fails
+        assert!(r.reserve(id, 2, 5).is_err());
+        r.release(id, 1);
+        assert_eq!(r.get(id).unwrap().available(), 10);
+        // double release is harmless
+        r.release(id, 1);
+        assert_eq!(r.get(id).unwrap().available(), 10);
+    }
+
+    #[test]
+    fn total_available_sums() {
+        let mut r = Registry::new(5.0);
+        let a = r.register(5, 0.0, 0.0);
+        r.register(20, 0.0, 0.0);
+        r.reserve(a, 9, 5).unwrap();
+        assert_eq!(r.total_available(), 20);
+    }
+}

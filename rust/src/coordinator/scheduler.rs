@@ -1,0 +1,252 @@
+//! Workload assignment (Algorithm 2 lines 14-20).
+//!
+//! For a pending circuit with demand `D`: collect workers with `AR > D`
+//! into the Candidates set, sort ascending by latest `CRU`, return the
+//! first. The paper's linear scan is O(W); a binary-heap variant
+//! (`SchedulerKind::Heap`) is provided as an ablation (DESIGN.md §10) —
+//! identical selection, O(log W) amortized when the candidate predicate
+//! is stable between calls.
+
+use super::registry::{Registry, WorkerId};
+
+/// Scheduler implementation choice (ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// The paper's algorithm: filter + sort by CRU each call.
+    LinearScan,
+    /// Min-heap over (CRU, AR) rebuilt lazily.
+    Heap,
+}
+
+/// Select the best worker for a circuit of `demand` qubits, or `None`
+/// when no worker currently qualifies (caller backs off until capacity
+/// frees up).
+///
+/// Tie-break: equal CRU falls back to more available qubits, then lower
+/// id — deterministic selection makes the DES reproducible.
+pub fn select_worker(registry: &Registry, demand: usize) -> Option<WorkerId> {
+    // Candidates: AR > D (strict, as the paper writes it).
+    let mut best: Option<(f64, std::cmp::Reverse<usize>, WorkerId)> = None;
+    for w in registry.workers() {
+        if w.available() > demand {
+            let key = (w.cru, std::cmp::Reverse(w.available()), w.id);
+            if best.is_none()
+                || (key.0, key.1, key.2) < (best.unwrap().0, best.unwrap().1, best.unwrap().2)
+            {
+                best = Some(key);
+            }
+        }
+    }
+    best.map(|(_, _, id)| id)
+}
+
+/// Select with a relaxed predicate `AR >= D` — used when *no* worker in
+/// the whole system has `AR > D` capacity (e.g. a 5-qubit circuit on a
+/// 5-qubit worker, the paper's own 5Q-worker experiments), where the
+/// strict rule would deadlock.
+pub fn select_worker_relaxed(registry: &Registry, demand: usize) -> Option<WorkerId> {
+    let mut best: Option<(f64, std::cmp::Reverse<usize>, WorkerId)> = None;
+    for w in registry.workers() {
+        if w.available() >= demand {
+            let key = (w.cru, std::cmp::Reverse(w.available()), w.id);
+            if best.is_none()
+                || (key.0, key.1, key.2) < (best.unwrap().0, best.unwrap().1, best.unwrap().2)
+            {
+                best = Some(key);
+            }
+        }
+    }
+    best.map(|(_, _, id)| id)
+}
+
+/// Two-phase selection used by the manager: strict Algorithm-2 rule
+/// first, relaxed exact-fit second. Returns `None` only when the circuit
+/// cannot currently be placed anywhere.
+pub fn select(registry: &Registry, demand: usize) -> Option<WorkerId> {
+    select_worker(registry, demand).or_else(|| select_worker_relaxed(registry, demand))
+}
+
+/// Would this circuit *ever* fit on the current worker set?
+pub fn can_ever_fit(registry: &Registry, demand: usize) -> bool {
+    registry.workers().any(|w| w.max_qubits >= demand)
+}
+
+/// Selection through an explicit binary heap of candidates — semantically
+/// identical to [`select`], kept as the ablation comparator benched in
+/// `micro_scheduler` (the paper's linear scan wins at W <= dozens).
+pub fn select_with(kind: SchedulerKind, registry: &Registry, demand: usize) -> Option<WorkerId> {
+    match kind {
+        SchedulerKind::LinearScan => select(registry, demand),
+        SchedulerKind::Heap => {
+            use std::cmp::Reverse;
+            use std::collections::BinaryHeap;
+            let mut heap: BinaryHeap<Reverse<(u64, Reverse<usize>, WorkerId)>> = registry
+                .workers()
+                .filter(|w| w.available() > demand)
+                .map(|w| Reverse((f64_key(w.cru), Reverse(w.available()), w.id)))
+                .collect();
+            if heap.is_empty() {
+                heap = registry
+                    .workers()
+                    .filter(|w| w.available() >= demand)
+                    .map(|w| Reverse((f64_key(w.cru), Reverse(w.available()), w.id)))
+                    .collect();
+            }
+            heap.pop().map(|Reverse((_, _, id))| id)
+        }
+    }
+}
+
+/// Order-preserving integer key for a non-negative f64 (CRU is in [0, 1]).
+fn f64_key(x: f64) -> u64 {
+    (x.max(0.0) * 1e12) as u64
+}
+
+/// Noise-aware selection (extension — the paper's Discussion lists
+/// noise-awareness as future work).
+///
+/// `alpha` gates which workers are *eligible*: a worker qualifies only if
+/// its noise is within `(1 - alpha)` of the pool's noise range above the
+/// cleanest worker. `alpha = 0` admits everyone (the paper's CRU-only
+/// rule); `alpha = 1` admits only least-noise workers — circuits then
+/// WAIT for clean backends instead of spilling onto noisy ones (the
+/// fidelity/latency trade-off quantified in `ablation_noise`). Within
+/// the eligible set, ranking is Algorithm 2's CRU-ascending.
+pub fn select_noise_aware(registry: &Registry, demand: usize, alpha: f64) -> Option<WorkerId> {
+    let alpha = alpha.clamp(0.0, 1.0);
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for w in registry.workers() {
+        lo = lo.min(w.noise);
+        hi = hi.max(w.noise);
+    }
+    if !lo.is_finite() {
+        return None;
+    }
+    let cutoff = lo + (1.0 - alpha) * (hi - lo) + 1e-12;
+    let mut best: Option<(u64, std::cmp::Reverse<usize>, WorkerId)> = None;
+    let pass = |strict: bool, best: &mut Option<(u64, std::cmp::Reverse<usize>, WorkerId)>| {
+        for w in registry.workers() {
+            let fits = if strict { w.available() > demand } else { w.available() >= demand };
+            if fits && w.noise <= cutoff {
+                let key = (f64_key(w.cru), std::cmp::Reverse(w.available()), w.id);
+                if best.is_none() || key < best.unwrap() {
+                    *best = Some(key);
+                }
+            }
+        }
+    };
+    pass(true, &mut best);
+    if best.is_none() {
+        pass(false, &mut best);
+    }
+    best.map(|(_, _, id)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry_with(workers: &[(usize, f64)]) -> (Registry, Vec<WorkerId>) {
+        let mut r = Registry::new(5.0);
+        let ids = workers.iter().map(|&(mq, cru)| r.register(mq, cru, 0.0)).collect();
+        (r, ids)
+    }
+
+    #[test]
+    fn filters_by_available_qubits() {
+        let (mut r, ids) = registry_with(&[(5, 0.1), (20, 0.9)]);
+        // 7-qubit demand: only the 20-qubit worker qualifies
+        assert_eq!(select_worker(&r, 7), Some(ids[1]));
+        // occupy 15 of the big worker -> nothing has AR > 7
+        r.reserve(ids[1], 1, 15).unwrap();
+        assert_eq!(select_worker(&r, 7), None);
+    }
+
+    #[test]
+    fn sorts_candidates_by_cru_ascending() {
+        let (r, ids) = registry_with(&[(20, 0.8), (20, 0.2), (20, 0.5)]);
+        assert_eq!(select_worker(&r, 5), Some(ids[1]));
+    }
+
+    #[test]
+    fn tie_break_prefers_more_available() {
+        let (mut r, ids) = registry_with(&[(10, 0.5), (20, 0.5)]);
+        assert_eq!(select_worker(&r, 5), Some(ids[1]));
+        r.reserve(ids[1], 1, 14).unwrap(); // 20-q worker now has 6 available
+        assert_eq!(select_worker(&r, 5), Some(ids[0]));
+    }
+
+    #[test]
+    fn relaxed_allows_exact_fit() {
+        let (r, ids) = registry_with(&[(5, 0.1)]);
+        // strict rule: AR(5) > 5 is false
+        assert_eq!(select_worker(&r, 5), None);
+        // relaxed rule: AR(5) >= 5 -> the paper's own 5Q/5-qubit-worker runs
+        assert_eq!(select_worker_relaxed(&r, 5), Some(ids[0]));
+        assert_eq!(select(&r, 5), Some(ids[0]));
+    }
+
+    #[test]
+    fn can_ever_fit_checks_max_not_available() {
+        let (mut r, ids) = registry_with(&[(7, 0.0)]);
+        r.reserve(ids[0], 1, 7).unwrap();
+        assert!(can_ever_fit(&r, 7)); // busy now, but it can fit later
+        assert!(!can_ever_fit(&r, 9));
+    }
+
+    #[test]
+    fn empty_registry_selects_nothing() {
+        let r = Registry::new(5.0);
+        assert_eq!(select(&r, 5), None);
+        assert!(!can_ever_fit(&r, 5));
+    }
+
+    #[test]
+    fn noise_aware_gates_candidates() {
+        let mut r = Registry::new(5.0);
+        let clean = r.register_with_noise(10, 0.9, 0.0, 0.0); // busy but clean
+        let noisy = r.register_with_noise(10, 0.0, 0.05, 0.0); // idle but noisy
+        // alpha = 0: paper rule, lowest CRU wins -> the noisy worker
+        assert_eq!(select_noise_aware(&r, 5, 0.0), Some(noisy));
+        // alpha = 1: only least-noise workers eligible -> the clean one
+        assert_eq!(select_noise_aware(&r, 5, 1.0), Some(clean));
+    }
+
+    #[test]
+    fn noise_aware_waits_instead_of_spilling() {
+        let mut r = Registry::new(5.0);
+        let clean = r.register_with_noise(5, 0.0, 0.0, 0.0);
+        let _noisy = r.register_with_noise(5, 0.0, 0.05, 0.0);
+        r.reserve(clean, 1, 5).unwrap(); // clean worker fully busy
+        // strict alpha: nothing eligible -> None (circuit waits)
+        assert_eq!(select_noise_aware(&r, 5, 1.0), None);
+        // paper rule would spill to the noisy worker
+        assert!(select(&r, 5).is_some());
+    }
+
+    #[test]
+    fn noise_aware_uniform_pool_equals_paper_rule() {
+        let (mut r, _ids) = registry_with(&[(10, 0.8), (10, 0.2), (10, 0.5)]);
+        for alpha in [0.0, 0.5, 1.0] {
+            assert_eq!(select_noise_aware(&r, 5, alpha), select(&r, 5));
+        }
+        let _ = &mut r;
+    }
+
+    #[test]
+    fn multi_tenant_packing() {
+        // A 20-qubit worker can host four 5-qubit circuits concurrently
+        // (the paper's multi-tenant scenario).
+        let (mut r, ids) = registry_with(&[(20, 0.0)]);
+        for job in 0..3 {
+            let w = select(&r, 5).unwrap();
+            assert_eq!(w, ids[0]);
+            r.reserve(w, job, 5).unwrap();
+        }
+        // fourth circuit: AR = 5, strict fails, relaxed succeeds
+        let w = select(&r, 5).unwrap();
+        r.reserve(w, 3, 5).unwrap();
+        assert_eq!(r.get(ids[0]).unwrap().available(), 0);
+        assert_eq!(select(&r, 5), None);
+    }
+}

@@ -1,0 +1,195 @@
+//! Dataset pipeline: cleaning, normalization, pair selection, splits.
+//!
+//! Mirrors the paper's preprocessing: "an initial cleaning process that
+//! includes the removal of significant outliers", normalization into the
+//! rotation-encoder range, then binary-pair selection for the QuClassi
+//! classifier.
+
+use std::path::Path;
+
+use super::{mnist, synthetic};
+use crate::util::Rng;
+
+/// Image geometry (MNIST).
+pub const IMG_SIDE: usize = 28;
+pub const IMG_SIZE: usize = IMG_SIDE * IMG_SIDE;
+
+/// One labeled image, pixels in [0, 1].
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub pixels: Vec<f32>,
+    pub label: u8,
+}
+
+/// A labeled dataset with train/test views.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+    /// The two classes of the binary task (class_a -> y=0, class_b -> y=1).
+    pub classes: (u8, u8),
+}
+
+impl Dataset {
+    /// Build the binary-pair dataset the paper's experiments use.
+    ///
+    /// Loads real MNIST from `mnist_dir` when present, otherwise
+    /// generates the synthetic stand-in. `n_per_class` examples per
+    /// class, 80/20 train/test split, outliers removed, deterministic
+    /// for a seed.
+    pub fn binary_pair(
+        mnist_dir: Option<&Path>,
+        class_a: u8,
+        class_b: u8,
+        n_per_class: usize,
+        seed: u64,
+    ) -> Dataset {
+        let raw: Vec<Example> = match mnist_dir.and_then(mnist::discover) {
+            Some((img, lbl)) => match mnist::load_pair(&img, &lbl) {
+                Ok(all) => all,
+                Err(e) => {
+                    crate::log_warn!("data", "mnist load failed ({e}); using synthetic");
+                    synthetic::generate(&[class_a, class_b], n_per_class * 4, seed)
+                }
+            },
+            None => synthetic::generate(&[class_a, class_b], n_per_class * 4, seed),
+        };
+
+        // Select the pair, cap per-class counts.
+        let mut a: Vec<Example> = raw.iter().filter(|e| e.label == class_a).cloned().collect();
+        let mut b: Vec<Example> = raw.iter().filter(|e| e.label == class_b).cloned().collect();
+        a.truncate(n_per_class);
+        b.truncate(n_per_class);
+        let mut examples: Vec<Example> = a.into_iter().chain(b).collect();
+
+        // Cleaning: drop significant outliers by mean-intensity z-score.
+        examples = remove_outliers(examples, 3.0);
+
+        // Shuffle deterministically, split 80/20.
+        let mut rng = Rng::new(seed ^ 0xD15EA5E);
+        rng.shuffle(&mut examples);
+        let n_test = (examples.len() / 5).max(1);
+        let test = examples.split_off(examples.len() - n_test);
+        Dataset { train: examples, test, classes: (class_a, class_b) }
+    }
+
+    /// Binary label for an example: 0.0 for class_a, 1.0 for class_b.
+    pub fn target(&self, e: &Example) -> f32 {
+        if e.label == self.classes.1 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Remove examples whose mean pixel intensity is more than `z_max`
+/// standard deviations from the dataset mean (the paper's "significant
+/// outliers" cleaning step).
+pub fn remove_outliers(examples: Vec<Example>, z_max: f64) -> Vec<Example> {
+    if examples.len() < 4 {
+        return examples;
+    }
+    let means: Vec<f64> = examples
+        .iter()
+        .map(|e| e.pixels.iter().map(|&p| p as f64).sum::<f64>() / e.pixels.len() as f64)
+        .collect();
+    let mu = means.iter().sum::<f64>() / means.len() as f64;
+    let var = means.iter().map(|m| (m - mu) * (m - mu)).sum::<f64>() / means.len() as f64;
+    let sigma = var.sqrt().max(1e-12);
+    examples
+        .into_iter()
+        .zip(means)
+        .filter(|(_, m)| ((m - mu) / sigma).abs() <= z_max)
+        .map(|(e, _)| e)
+        .collect()
+}
+
+/// Normalize a feature vector into rotation-encoder angles [0, pi].
+///
+/// The encoder uses Ry/Rz rotations; mapping features into [0, pi] keeps
+/// encodings injective (cos is monotone there).
+pub fn to_angles(features: &[f32]) -> Vec<f32> {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &f in features {
+        lo = lo.min(f);
+        hi = hi.max(f);
+    }
+    let span = (hi - lo).max(1e-6);
+    features
+        .iter()
+        .map(|&f| (f - lo) / span * std::f32::consts::PI)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_pair_has_both_classes_and_split() {
+        let ds = Dataset::binary_pair(None, 3, 9, 40, 7);
+        assert!(!ds.train.is_empty() && !ds.test.is_empty());
+        let total = ds.train.len() + ds.test.len();
+        assert!(total <= 80);
+        // roughly 80/20
+        assert!(ds.test.len() * 3 <= total && total <= ds.test.len() * 6);
+        let train_has_a = ds.train.iter().any(|e| e.label == 3);
+        let train_has_b = ds.train.iter().any(|e| e.label == 9);
+        assert!(train_has_a && train_has_b);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Dataset::binary_pair(None, 1, 5, 20, 3);
+        let b = Dataset::binary_pair(None, 1, 5, 20, 3);
+        assert_eq!(a.train.len(), b.train.len());
+        for (x, y) in a.train.iter().zip(b.train.iter()) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.pixels, y.pixels);
+        }
+    }
+
+    #[test]
+    fn targets_are_binary() {
+        let ds = Dataset::binary_pair(None, 3, 6, 10, 1);
+        for e in ds.train.iter().chain(ds.test.iter()) {
+            let t = ds.target(e);
+            assert!(t == 0.0 || t == 1.0);
+            assert_eq!(t == 1.0, e.label == 6);
+        }
+    }
+
+    #[test]
+    fn outlier_removal_drops_extremes() {
+        let mut examples: Vec<Example> = (0..20)
+            .map(|i| Example { pixels: vec![0.5 + (i as f32) * 1e-4; 4], label: 0 })
+            .collect();
+        // one extreme outlier
+        examples.push(Example { pixels: vec![1.0; 4], label: 0 });
+        let cleaned = remove_outliers(examples, 3.0);
+        assert_eq!(cleaned.len(), 20);
+        assert!(cleaned.iter().all(|e| e.pixels[0] < 0.9));
+    }
+
+    #[test]
+    fn outlier_removal_keeps_small_sets() {
+        let examples: Vec<Example> =
+            (0..3).map(|i| Example { pixels: vec![i as f32; 4], label: 0 }).collect();
+        assert_eq!(remove_outliers(examples, 3.0).len(), 3);
+    }
+
+    #[test]
+    fn to_angles_maps_into_zero_pi() {
+        let angles = to_angles(&[-1.0, 0.0, 3.0]);
+        assert!((angles[0] - 0.0).abs() < 1e-6);
+        assert!((angles[2] - std::f32::consts::PI).abs() < 1e-6);
+        assert!(angles[1] > 0.0 && angles[1] < std::f32::consts::PI);
+    }
+
+    #[test]
+    fn to_angles_handles_constant_input() {
+        let angles = to_angles(&[2.0, 2.0]);
+        assert!(angles.iter().all(|a| a.is_finite()));
+    }
+}

@@ -1,0 +1,189 @@
+//! MNIST IDX-format parser.
+//!
+//! Reads the classic `train-images-idx3-ubyte` / `train-labels-idx1-ubyte`
+//! files (optionally the `.gz`-less raw form only — decompression is out
+//! of scope; point the loader at unpacked files). Used when real MNIST is
+//! available on disk; otherwise the synthetic generator stands in.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use super::dataset::{Example, IMG_SIZE};
+
+/// IDX parse error.
+#[derive(Debug)]
+pub enum IdxError {
+    Io(std::io::Error),
+    BadMagic(u32),
+    Truncated,
+    DimensionMismatch(String),
+}
+
+impl std::fmt::Display for IdxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IdxError::Io(e) => write!(f, "idx io error: {e}"),
+            IdxError::BadMagic(m) => write!(f, "bad idx magic 0x{m:08x}"),
+            IdxError::Truncated => write!(f, "idx file truncated"),
+            IdxError::DimensionMismatch(s) => write!(f, "idx dimension mismatch: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for IdxError {}
+
+impl From<std::io::Error> for IdxError {
+    fn from(e: std::io::Error) -> Self {
+        IdxError::Io(e)
+    }
+}
+
+fn read_u32(bytes: &[u8], off: usize) -> Result<u32, IdxError> {
+    bytes
+        .get(off..off + 4)
+        .map(|b| u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+        .ok_or(IdxError::Truncated)
+}
+
+/// Parse an IDX3 image file: magic 0x0803, dims [n, rows, cols].
+pub fn parse_images(bytes: &[u8]) -> Result<Vec<Vec<f32>>, IdxError> {
+    let magic = read_u32(bytes, 0)?;
+    if magic != 0x0000_0803 {
+        return Err(IdxError::BadMagic(magic));
+    }
+    let n = read_u32(bytes, 4)? as usize;
+    let rows = read_u32(bytes, 8)? as usize;
+    let cols = read_u32(bytes, 12)? as usize;
+    if rows * cols != IMG_SIZE {
+        return Err(IdxError::DimensionMismatch(format!("{rows}x{cols}, expected 28x28")));
+    }
+    let data = bytes.get(16..).ok_or(IdxError::Truncated)?;
+    if data.len() < n * IMG_SIZE {
+        return Err(IdxError::Truncated);
+    }
+    Ok((0..n)
+        .map(|i| {
+            data[i * IMG_SIZE..(i + 1) * IMG_SIZE]
+                .iter()
+                .map(|&b| b as f32 / 255.0)
+                .collect()
+        })
+        .collect())
+}
+
+/// Parse an IDX1 label file: magic 0x0801, dims [n].
+pub fn parse_labels(bytes: &[u8]) -> Result<Vec<u8>, IdxError> {
+    let magic = read_u32(bytes, 0)?;
+    if magic != 0x0000_0801 {
+        return Err(IdxError::BadMagic(magic));
+    }
+    let n = read_u32(bytes, 4)? as usize;
+    let data = bytes.get(8..).ok_or(IdxError::Truncated)?;
+    if data.len() < n {
+        return Err(IdxError::Truncated);
+    }
+    Ok(data[..n].to_vec())
+}
+
+/// Load a (images, labels) IDX pair from disk into examples.
+pub fn load_pair(images_path: &Path, labels_path: &Path) -> Result<Vec<Example>, IdxError> {
+    let mut img_bytes = Vec::new();
+    File::open(images_path)?.read_to_end(&mut img_bytes)?;
+    let mut lbl_bytes = Vec::new();
+    File::open(labels_path)?.read_to_end(&mut lbl_bytes)?;
+    let images = parse_images(&img_bytes)?;
+    let labels = parse_labels(&lbl_bytes)?;
+    if images.len() != labels.len() {
+        return Err(IdxError::DimensionMismatch(format!(
+            "{} images vs {} labels",
+            images.len(),
+            labels.len()
+        )));
+    }
+    Ok(images
+        .into_iter()
+        .zip(labels)
+        .map(|(pixels, label)| Example { pixels, label })
+        .collect())
+}
+
+/// Standard MNIST file names under a directory, if they exist.
+pub fn discover(dir: &Path) -> Option<(std::path::PathBuf, std::path::PathBuf)> {
+    let img = dir.join("train-images-idx3-ubyte");
+    let lbl = dir.join("train-labels-idx1-ubyte");
+    if img.exists() && lbl.exists() {
+        Some((img, lbl))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny valid IDX pair in memory.
+    fn fake_idx(n: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut img = Vec::new();
+        img.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        for i in 0..n * IMG_SIZE {
+            img.push((i % 256) as u8);
+        }
+        let mut lbl = Vec::new();
+        lbl.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        lbl.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            lbl.push((i % 10) as u8);
+        }
+        (img, lbl)
+    }
+
+    #[test]
+    fn parses_valid_files() {
+        let (img, lbl) = fake_idx(5);
+        let images = parse_images(&img).unwrap();
+        let labels = parse_labels(&lbl).unwrap();
+        assert_eq!(images.len(), 5);
+        assert_eq!(labels, vec![0, 1, 2, 3, 4]);
+        assert_eq!(images[0].len(), IMG_SIZE);
+        assert!((images[0][1] - 1.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let (mut img, _) = fake_idx(1);
+        img[3] = 0xFF;
+        assert!(matches!(parse_images(&img), Err(IdxError::BadMagic(_))));
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let (img, lbl) = fake_idx(3);
+        assert!(matches!(parse_images(&img[..100]), Err(IdxError::Truncated)));
+        assert!(matches!(parse_labels(&lbl[..9]), Err(IdxError::Truncated)));
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let mut img = Vec::new();
+        img.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        img.extend_from_slice(&1u32.to_be_bytes());
+        img.extend_from_slice(&14u32.to_be_bytes());
+        img.extend_from_slice(&14u32.to_be_bytes());
+        img.extend(std::iter::repeat(0u8).take(196));
+        assert!(matches!(parse_images(&img), Err(IdxError::DimensionMismatch(_))));
+    }
+
+    #[test]
+    fn pixel_values_normalized() {
+        let (img, _) = fake_idx(2);
+        let images = parse_images(&img).unwrap();
+        for px in images.iter().flatten() {
+            assert!((0.0..=1.0).contains(px));
+        }
+    }
+}

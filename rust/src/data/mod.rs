@@ -1,0 +1,15 @@
+//! Dataset substrate: MNIST loading, synthetic fallback, preprocessing.
+//!
+//! The paper trains on MNIST binary pairs (3/9, 3/8, 3/6, 1/5). This
+//! module provides (a) a real IDX-format parser for when MNIST files are
+//! present on disk and (b) a deterministic synthetic digit generator used
+//! when they are not (this build environment has no network access —
+//! substitution documented in DESIGN.md §3). Both feed the same
+//! [`dataset::Dataset`] pipeline: outlier removal, normalization to
+//! rotation-encoder range, pair selection, splits.
+
+pub mod dataset;
+pub mod mnist;
+pub mod synthetic;
+
+pub use dataset::{Dataset, Example, IMG_SIDE, IMG_SIZE};

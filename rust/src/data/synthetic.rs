@@ -1,0 +1,227 @@
+//! Deterministic synthetic MNIST-like digit generator.
+//!
+//! Stand-in for the real MNIST download (DESIGN.md §3): 28x28 grayscale
+//! digits rendered from 7x7 stroke templates, upscaled, then perturbed
+//! with per-sample translation, intensity jitter, and pixel noise. The
+//! classes keep MNIST-like structure (e.g. 3 vs 8 share right-side curves
+//! and are the harder pair; 1 vs 5 is easy) so the paper's pair-difficulty
+//! ordering is preserved.
+
+use super::dataset::{Example, IMG_SIDE, IMG_SIZE};
+use crate::util::Rng;
+
+/// 7x7 stroke templates for digits 0-9 ('#' = ink).
+const TEMPLATES: [[&str; 7]; 10] = [
+    [
+        " ##### ",
+        "##   ##",
+        "##   ##",
+        "##   ##",
+        "##   ##",
+        "##   ##",
+        " ##### ",
+    ],
+    [
+        "   ##  ",
+        "  ###  ",
+        "   ##  ",
+        "   ##  ",
+        "   ##  ",
+        "   ##  ",
+        "  #### ",
+    ],
+    [
+        " ##### ",
+        "##   ##",
+        "    ## ",
+        "   ##  ",
+        "  ##   ",
+        " ##    ",
+        "#######",
+    ],
+    [
+        " ##### ",
+        "##   ##",
+        "     ##",
+        "  #### ",
+        "     ##",
+        "##   ##",
+        " ##### ",
+    ],
+    [
+        "##  ## ",
+        "##  ## ",
+        "##  ## ",
+        "#######",
+        "    ## ",
+        "    ## ",
+        "    ## ",
+    ],
+    [
+        "#######",
+        "##     ",
+        "###### ",
+        "     ##",
+        "     ##",
+        "##   ##",
+        " ##### ",
+    ],
+    [
+        " ##### ",
+        "##     ",
+        "##     ",
+        "###### ",
+        "##   ##",
+        "##   ##",
+        " ##### ",
+    ],
+    [
+        "#######",
+        "     ##",
+        "    ## ",
+        "   ##  ",
+        "  ##   ",
+        "  ##   ",
+        "  ##   ",
+    ],
+    [
+        " ##### ",
+        "##   ##",
+        "##   ##",
+        " ##### ",
+        "##   ##",
+        "##   ##",
+        " ##### ",
+    ],
+    [
+        " ##### ",
+        "##   ##",
+        "##   ##",
+        " ######",
+        "     ##",
+        "     ##",
+        " ##### ",
+    ],
+];
+
+/// Render one perturbed digit image (pixels in [0, 1]).
+pub fn render_digit(digit: u8, rng: &mut Rng) -> Vec<f32> {
+    assert!(digit < 10);
+    let template = &TEMPLATES[digit as usize];
+    let mut img = vec![0.0f32; IMG_SIZE];
+    // Per-sample perturbations.
+    let dx = rng.index(3) as i32 - 1; // translation in [-1, 1]
+    let dy = rng.index(3) as i32 - 1;
+    let intensity = 0.8 + 0.2 * rng.f32(); // [0.8, 1.0)
+    let scale = 3.7 + 0.3 * rng.f32(); // cell size ~ [3.7, 4.0)
+
+    for (ty, row) in template.iter().enumerate() {
+        for (tx, ch) in row.bytes().enumerate() {
+            if ch != b'#' {
+                continue;
+            }
+            // Paint the upscaled cell with soft edges.
+            let cy0 = (ty as f32 * scale) as i32 + dy;
+            let cx0 = (tx as f32 * scale) as i32 + dx;
+            let cell = scale.ceil() as i32;
+            for py in cy0..cy0 + cell {
+                for px in cx0..cx0 + cell {
+                    if (0..IMG_SIDE as i32).contains(&py) && (0..IMG_SIDE as i32).contains(&px) {
+                        let idx = py as usize * IMG_SIDE + px as usize;
+                        img[idx] = (img[idx] + intensity).min(1.0);
+                    }
+                }
+            }
+        }
+    }
+    // Pixel noise + occasional dead pixels.
+    for px in img.iter_mut() {
+        let noise = (rng.f32() - 0.5) * 0.08;
+        *px = (*px + noise).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Generate `n` examples of the given digit classes, interleaved.
+pub fn generate(classes: &[u8], n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let label = classes[i % classes.len()];
+            Example { pixels: render_digit(label, &mut rng), label }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_have_right_shape_and_range() {
+        let mut rng = Rng::new(1);
+        for d in 0..10u8 {
+            let img = render_digit(d, &mut rng);
+            assert_eq!(img.len(), IMG_SIZE);
+            assert!(img.iter().all(|p| (0.0..=1.0).contains(p)));
+            // a digit must have meaningful ink
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 20.0, "digit {d} too faint: {ink}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&[3, 9], 10, 42);
+        let b = generate(&[3, 9], 10, 42);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.pixels, y.pixels);
+        }
+        let c = generate(&[3, 9], 10, 43);
+        assert_ne!(a[0].pixels, c[0].pixels);
+    }
+
+    #[test]
+    fn labels_interleave_classes() {
+        let ex = generate(&[1, 5], 6, 7);
+        let labels: Vec<u8> = ex.iter().map(|e| e.label).collect();
+        assert_eq!(labels, vec![1, 5, 1, 5, 1, 5]);
+    }
+
+    #[test]
+    fn classes_are_distinguishable_in_pixel_space() {
+        // Mean intra-class distance must be well below inter-class
+        // distance for the paper's pairs — the classifier's job must be
+        // learnable.
+        for (a, b) in [(3u8, 9u8), (3, 8), (3, 6), (1, 5)] {
+            let xs = generate(&[a], 16, 11);
+            let ys = generate(&[b], 16, 13);
+            let dist = |p: &[f32], q: &[f32]| -> f32 {
+                p.iter().zip(q).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+            };
+            let mut intra = 0.0;
+            let mut n_intra = 0;
+            for i in 0..xs.len() {
+                for j in i + 1..xs.len() {
+                    intra += dist(&xs[i].pixels, &xs[j].pixels);
+                    n_intra += 1;
+                }
+            }
+            let mut inter = 0.0;
+            let mut n_inter = 0;
+            for x in &xs {
+                for y in &ys {
+                    inter += dist(&x.pixels, &y.pixels);
+                    n_inter += 1;
+                }
+            }
+            let intra = intra / n_intra as f32;
+            let inter = inter / n_inter as f32;
+            assert!(
+                inter > intra * 1.2,
+                "pair {a}/{b}: inter {inter} not above intra {intra}"
+            );
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Discrete-event simulation substrate.
+//!
+//! A minimal, deterministic event-heap simulator: events are closures
+//! scheduled at virtual times; ties break by insertion order so runs are
+//! exactly reproducible. The cloud-environment models (`env/`) replay the
+//! *same co-Manager scheduler code* (`coordinator::{Registry, scheduler}`)
+//! against calibrated service-time models to regenerate the paper's
+//! figures — on this 1-core testbed, wall-clock multi-worker speedups
+//! cannot be observed directly (DESIGN.md §3).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Event handler: receives the simulator (to schedule more events) and
+/// the user state.
+pub type Handler<S> = Box<dyn FnOnce(&mut Des<S>, &mut S)>;
+
+/// Order-preserving total order for non-negative event times.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct TimeKey(u64);
+
+impl TimeKey {
+    fn of(t: f64) -> TimeKey {
+        debug_assert!(t >= 0.0 && t.is_finite(), "bad event time {t}");
+        TimeKey((t * 1e9) as u64)
+    }
+
+    fn secs(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+}
+
+/// The event-heap simulator.
+pub struct Des<S> {
+    now: f64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<(TimeKey, u64, usize)>>,
+    slots: Vec<Option<Handler<S>>>,
+    executed: u64,
+}
+
+impl<S> Default for Des<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> Des<S> {
+    pub fn new() -> Des<S> {
+        Des { now: 0.0, seq: 0, heap: BinaryHeap::new(), slots: Vec::new(), executed: 0 }
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Schedule `f` to run `delay` seconds from now.
+    pub fn schedule<F: FnOnce(&mut Des<S>, &mut S) + 'static>(&mut self, delay: f64, f: F) {
+        self.schedule_at(self.now + delay.max(0.0), f)
+    }
+
+    /// Schedule `f` at absolute time `t` (clamped to now).
+    pub fn schedule_at<F: FnOnce(&mut Des<S>, &mut S) + 'static>(&mut self, t: f64, f: F) {
+        let t = t.max(self.now);
+        let idx = self.slots.len();
+        self.slots.push(Some(Box::new(f)));
+        self.heap.push(Reverse((TimeKey::of(t), self.seq, idx)));
+        self.seq += 1;
+    }
+
+    /// Run until the event queue drains; returns the final time.
+    pub fn run(&mut self, state: &mut S) -> f64 {
+        while self.step(state) {}
+        self.now
+    }
+
+    /// Run while events exist and time <= t_end.
+    pub fn run_until(&mut self, state: &mut S, t_end: f64) -> f64 {
+        while let Some(Reverse((tk, _, _))) = self.heap.peek() {
+            if tk.secs() > t_end {
+                break;
+            }
+            self.step(state);
+        }
+        self.now = self.now.max(t_end.min(self.now + 0.0));
+        self.now
+    }
+
+    /// Execute the next event; false when empty.
+    pub fn step(&mut self, state: &mut S) -> bool {
+        match self.heap.pop() {
+            None => false,
+            Some(Reverse((tk, _, idx))) => {
+                self.now = tk.secs();
+                if let Some(f) = self.slots[idx].take() {
+                    self.executed += 1;
+                    f(self, state);
+                }
+                true
+            }
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut des: Des<Vec<(f64, &str)>> = Des::new();
+        des.schedule(3.0, |d, s| s.push((d.now(), "c")));
+        des.schedule(1.0, |d, s| s.push((d.now(), "a")));
+        des.schedule(2.0, |d, s| s.push((d.now(), "b")));
+        let mut log = Vec::new();
+        let end = des.run(&mut log);
+        assert_eq!(log.iter().map(|(_, n)| *n).collect::<Vec<_>>(), vec!["a", "b", "c"]);
+        assert!((end - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut des: Des<Vec<u32>> = Des::new();
+        for i in 0..10u32 {
+            des.schedule(1.0, move |_, s| s.push(i));
+        }
+        let mut log = Vec::new();
+        des.run(&mut log);
+        assert_eq!(log, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_schedule_more_events() {
+        // a chain of events: each schedules the next until 5 deep
+        let mut des: Des<Vec<f64>> = Des::new();
+        fn chain(depth: u32, des: &mut Des<Vec<f64>>) {
+            if depth == 0 {
+                return;
+            }
+            des.schedule(1.0, move |d, s: &mut Vec<f64>| {
+                s.push(d.now());
+                chain(depth - 1, d);
+            });
+        }
+        chain(5, &mut des);
+        let mut log = Vec::new();
+        des.run(&mut log);
+        assert_eq!(log, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn run_until_stops_at_horizon() {
+        let mut des: Des<Vec<f64>> = Des::new();
+        for i in 1..=10 {
+            des.schedule(i as f64, move |d, s: &mut Vec<f64>| s.push(d.now()));
+        }
+        let mut log = Vec::new();
+        des.run_until(&mut log, 4.5);
+        assert_eq!(log.len(), 4);
+        assert_eq!(des.pending(), 6);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut des: Des<Vec<(f64, u32)>> = Des::new();
+            for i in 0..50u32 {
+                let t = (i as f64 * 7919.0) % 13.0;
+                des.schedule(t, move |d, s| s.push((d.now(), i)));
+            }
+            let mut log = Vec::new();
+            des.run(&mut log);
+            log
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn past_times_clamp_to_now() {
+        let mut des: Des<Vec<f64>> = Des::new();
+        des.schedule(5.0, |d, s: &mut Vec<f64>| {
+            // schedule "in the past" — must fire at current time
+            d.schedule_at(1.0, |d2, s2: &mut Vec<f64>| s2.push(d2.now()));
+            s.push(d.now());
+        });
+        let mut log = Vec::new();
+        des.run(&mut log);
+        assert_eq!(log, vec![5.0, 5.0]);
+    }
+}

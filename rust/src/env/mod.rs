@@ -1,0 +1,25 @@
+//! Cloud-environment models (paper §IV): the evaluation substrate.
+//!
+//! The paper measures DQuLearn on (a) IBM-Q cloud simulation backends —
+//! an **uncontrolled** environment with shared backends and network
+//! jitter — and (b) Google Cloud e2-medium VMs — a **controlled**
+//! environment with a known 1-core CPU budget per worker. Neither is
+//! available here, so these models replay the *real co-Manager scheduler
+//! code* (`coordinator::{Registry, scheduler}`) inside the discrete-event
+//! simulator against calibrated service-time distributions (DESIGN.md §3).
+//!
+//! * [`calib`] — per-(qubits, layers) circuit service times; defaults are
+//!   Qiskit-magnitude, and `Calibration::from_measured` accepts real
+//!   per-circuit PJRT timings from this machine.
+//! * [`sim`] — the cluster simulation: clients with serial submission
+//!   overhead, Algorithm-2 assignment, worker service models (FIFO
+//!   backends for IBM-Q, processor-sharing VMs for GCP), heartbeats,
+//!   single- vs multi-tenant modes.
+//! * [`scenarios`] — ready-made workloads for Figures 3-6.
+
+pub mod calib;
+pub mod scenarios;
+pub mod sim;
+
+pub use calib::Calibration;
+pub use sim::{ClientJob, EnvParams, SimConfig, SimResult, SimWorkerSpec, Tenancy};

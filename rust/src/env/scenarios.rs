@@ -1,0 +1,251 @@
+//! Ready-made workloads for every figure in the paper's evaluation.
+//!
+//! Circuit counts are the paper's own: 5Q epochs run 1440/2880/4320
+//! circuits for 1/2/3 layers; 7Q epochs run 2016/4032/6048 (§IV-C1).
+
+use crate::circuit::QuClassiConfig;
+use crate::env::calib::Calibration;
+use crate::env::sim::{ClientJob, EnvParams, SimConfig, SimWorkerSpec, Tenancy};
+
+/// Circuits per client round: one sample's parameter-shift banks across
+/// the paper's 4 conv filters (2P shifted circuits per filter).
+pub fn round_bank_size(config: &QuClassiConfig) -> usize {
+    2 * config.n_params() * 4
+}
+
+/// The paper's per-epoch circuit counts.
+pub fn epoch_circuits(qubits: usize, layers: usize) -> usize {
+    match (qubits, layers) {
+        (5, l) => 1440 * l,
+        (7, l) => 2016 * l,
+        _ => 1440 * layers,
+    }
+}
+
+/// A row of a runtime/throughput figure.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub layers: usize,
+    pub workers: usize,
+    pub circuits: usize,
+    pub runtime: f64,
+    pub cps: f64,
+}
+
+/// Figures 3 & 4: IBM-Q uncontrolled environment, one client, layer and
+/// worker sweeps (qubits = 5 for Fig 3, 7 for Fig 4).
+pub fn ibmq_figure(qubits: usize, calib: &Calibration, seed: u64) -> Vec<FigureRow> {
+    let mut rows = Vec::new();
+    for layers in [1usize, 2, 3] {
+        let config = QuClassiConfig::new(qubits, layers).expect("valid config");
+        let n = epoch_circuits(qubits, layers);
+        for workers in [1usize, 2, 4] {
+            let sim = SimConfig {
+                // "unrestricted quantum workers, without maximum qubit
+                // constraints" — give each backend ample qubits but FIFO
+                // service (cpu_share = false).
+                workers: vec![SimWorkerSpec { max_qubits: 64, speed: 1.0 }; workers],
+                env: EnvParams::ibmq_uncontrolled(),
+                calib: calib.clone(),
+                heartbeat_period: 5.0,
+                tenancy: Tenancy::MultiTenant,
+                seed: seed + layers as u64 * 10 + workers as u64,
+            };
+            let jobs = vec![ClientJob {
+                client: 0,
+                config,
+                n_circuits: n,
+                bank_size: round_bank_size(&config),
+            }];
+            let r = crate::env::sim::simulate(&sim, &jobs);
+            rows.push(FigureRow {
+                layers,
+                workers,
+                circuits: n,
+                runtime: r.makespan,
+                cps: r.cps,
+            });
+        }
+    }
+    rows
+}
+
+/// Figure 5: controlled (GCP) environment, one client, 5-qubit workers.
+pub fn gcp_one_client_figure(qubits: usize, calib: &Calibration, seed: u64) -> Vec<FigureRow> {
+    let mut rows = Vec::new();
+    for layers in [1usize, 2, 3] {
+        let config = QuClassiConfig::new(qubits, layers).expect("valid config");
+        let n = epoch_circuits(qubits, layers);
+        for workers in [1usize, 2, 4] {
+            let sim = SimConfig {
+                workers: vec![SimWorkerSpec { max_qubits: qubits, speed: 1.0 }; workers],
+                env: EnvParams::gcp_controlled(),
+                calib: calib.clone(),
+                heartbeat_period: 5.0,
+                tenancy: Tenancy::MultiTenant,
+                seed: seed + layers as u64 * 10 + workers as u64,
+            };
+            let jobs = vec![ClientJob {
+                client: 0,
+                config,
+                n_circuits: n,
+                bank_size: round_bank_size(&config),
+            }];
+            let r = crate::env::sim::simulate(&sim, &jobs);
+            rows.push(FigureRow {
+                layers,
+                workers,
+                circuits: n,
+                runtime: r.makespan,
+                cps: r.cps,
+            });
+        }
+    }
+    rows
+}
+
+/// One client line of the multi-tenant comparison.
+#[derive(Debug, Clone)]
+pub struct TenancyRow {
+    pub label: String,
+    pub circuits: usize,
+    pub single_runtime: f64,
+    pub multi_runtime: f64,
+    pub single_cps: f64,
+    pub multi_cps: f64,
+}
+
+impl TenancyRow {
+    pub fn runtime_reduction_pct(&self) -> f64 {
+        (1.0 - self.multi_runtime / self.single_runtime) * 100.0
+    }
+
+    pub fn cps_gain(&self) -> f64 {
+        self.multi_cps / self.single_cps
+    }
+}
+
+/// Figure 6: four concurrent clients (5Q/1L, 5Q/2L, 7Q/1L, 7Q/2L) on
+/// four workers with 5/10/15/20 qubits; single- vs multi-tenant.
+pub fn multi_tenant_figure(calib: &Calibration, seed: u64) -> Vec<TenancyRow> {
+    // Queue order (= client index) puts the larger jobs first: the paper's
+    // single-tenant anecdote has the small 5Q/1L job stuck behind the
+    // queue ("one user occupies the entire machine while others wait"),
+    // which is exactly where multi-tenancy wins big.
+    let specs = [(5usize, 2usize), (7, 1), (7, 2), (5, 1)];
+    let jobs: Vec<ClientJob> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(q, l))| {
+            let config = QuClassiConfig::new(q, l).unwrap();
+            ClientJob {
+                client: i,
+                config,
+                // one epoch of the client's own workload, scaled down 4x so
+                // the four-job mix finishes in reasonable simulated time,
+                // same mix ratio as the paper
+                n_circuits: epoch_circuits(q, l) / 4,
+                bank_size: round_bank_size(&config),
+            }
+        })
+        .collect();
+    let workers: Vec<SimWorkerSpec> = [5usize, 10, 15, 20]
+        .iter()
+        .map(|&q| SimWorkerSpec { max_qubits: q, speed: 1.0 })
+        .collect();
+    let run = |tenancy: Tenancy, seed: u64| {
+        crate::env::sim::simulate(
+            &SimConfig {
+                workers: workers.clone(),
+                env: EnvParams::gcp_controlled(),
+                calib: calib.clone(),
+                heartbeat_period: 5.0,
+                tenancy,
+                seed,
+            },
+            &jobs,
+        )
+    };
+    let single = run(Tenancy::SingleTenant, seed);
+    let multi = run(Tenancy::MultiTenant, seed + 1);
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(q, l))| TenancyRow {
+            label: format!("{q}Q/{l}L"),
+            circuits: jobs[i].n_circuits,
+            single_runtime: single.per_client[i].finish,
+            multi_runtime: multi.per_client[i].finish,
+            single_cps: single.per_client[i].cps,
+            multi_cps: multi.per_client[i].cps,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_circuit_counts() {
+        assert_eq!(epoch_circuits(5, 1), 1440);
+        assert_eq!(epoch_circuits(5, 2), 2880);
+        assert_eq!(epoch_circuits(5, 3), 4320);
+        assert_eq!(epoch_circuits(7, 1), 2016);
+        assert_eq!(epoch_circuits(7, 2), 4032);
+        assert_eq!(epoch_circuits(7, 3), 6048);
+    }
+
+    /// The headline trend of Figs 3-5: within every layer count, more
+    /// workers -> lower runtime and higher circuits/sec.
+    #[test]
+    fn figure_trends_hold() {
+        let calib = Calibration::qiskit_like();
+        for rows in [
+            ibmq_figure(5, &calib, 1),
+            ibmq_figure(7, &calib, 2),
+            gcp_one_client_figure(5, &calib, 3),
+        ] {
+            for layers in [1, 2, 3] {
+                let series: Vec<&FigureRow> =
+                    rows.iter().filter(|r| r.layers == layers).collect();
+                assert_eq!(series.len(), 3);
+                assert!(
+                    series[0].runtime > series[1].runtime
+                        && series[1].runtime > series[2].runtime,
+                    "layers {layers}: runtimes {:?}",
+                    series.iter().map(|r| r.runtime).collect::<Vec<_>>()
+                );
+                assert!(series[2].cps > series[0].cps);
+            }
+        }
+    }
+
+    /// Fig 6's headline: the small job (5Q/1L) gains the most from
+    /// multi-tenancy — large runtime reduction, multi-x cps gain — while
+    /// the congested big jobs see little change (paper: 8.2% for 7Q/2L).
+    #[test]
+    fn multi_tenant_headline() {
+        let rows = multi_tenant_figure(&Calibration::qiskit_like(), 7);
+        assert_eq!(rows.len(), 4);
+        let small = rows.iter().find(|r| r.label == "5Q/1L").unwrap();
+        assert!(small.runtime_reduction_pct() > 30.0, "{}", small.runtime_reduction_pct());
+        assert!(small.cps_gain() > 1.5, "{}", small.cps_gain());
+        // the small job gains the most
+        for r in &rows {
+            assert!(
+                small.cps_gain() >= r.cps_gain() - 1e-9,
+                "{} gained more than 5Q/1L",
+                r.label
+            );
+            // no client gets catastrophically worse
+            assert!(
+                r.multi_runtime <= r.single_runtime * 1.35,
+                "{}: {} vs {}",
+                r.label,
+                r.multi_runtime,
+                r.single_runtime
+            );
+        }
+    }
+}

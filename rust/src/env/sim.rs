@@ -1,0 +1,572 @@
+//! The cluster simulation: clients → co-Manager (Algorithm 2) → worker
+//! service models, on the discrete-event simulator.
+//!
+//! What is real: the Registry, the candidate filter, the CRU-ascending
+//! selection — the exact code the live manager runs. What is modeled:
+//! wall-clock costs (client-side serial overhead per circuit, worker
+//! service times, jitter), because this testbed has one core and no
+//! quantum cloud (DESIGN.md §3).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::circuit::QuClassiConfig;
+use crate::coordinator::registry::{Registry, WorkerId};
+use crate::coordinator::scheduler;
+use crate::des::Des;
+use crate::env::calib::Calibration;
+use crate::util::Rng;
+
+/// One simulated worker.
+#[derive(Debug, Clone, Copy)]
+pub struct SimWorkerSpec {
+    pub max_qubits: usize,
+    /// Relative speed (1.0 = calibration baseline).
+    pub speed: f64,
+}
+
+/// Environment parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EnvParams {
+    /// Client-side serial seconds per circuit (submission + quantum state
+    /// analysis loop-back — Algorithm 1's classical portion).
+    pub client_overhead: f64,
+    /// Lognormal sigma on worker service times (uncontrolled jitter).
+    pub jitter_sigma: f64,
+    /// Mean extra queueing delay per circuit on shared cloud backends
+    /// (exponential; 0 for a controlled environment).
+    pub queue_delay_mean: f64,
+    /// Processor sharing: service time scales with the number of circuits
+    /// co-resident on the worker (models 1-core e2-medium VMs).
+    pub cpu_share: bool,
+    /// FIFO backend: the worker executes one circuit at a time (IBM-Q
+    /// backends run jobs sequentially); later circuits wait in its queue.
+    pub fifo: bool,
+    /// CRU contributed by each co-resident circuit.
+    pub cru_per_circuit: f64,
+}
+
+impl EnvParams {
+    /// IBM-Q cloud backends (paper §IV-C1): uncontrolled — jitter, shared
+    /// backend queueing, FIFO execution (no qubit-capacity pressure; the
+    /// paper calls these "unrestricted quantum workers").
+    pub fn ibmq_uncontrolled() -> EnvParams {
+        EnvParams {
+            client_overhead: 0.045,
+            jitter_sigma: 0.35,
+            queue_delay_mean: 0.010,
+            cpu_share: false,
+            fifo: true,
+            cru_per_circuit: 0.10,
+        }
+    }
+
+    /// GCP e2-medium VMs (paper §IV-C2): controlled — no external jitter,
+    /// processor sharing on the single core.
+    pub fn gcp_controlled() -> EnvParams {
+        EnvParams {
+            client_overhead: 0.045,
+            jitter_sigma: 0.05,
+            queue_delay_mean: 0.0,
+            cpu_share: true,
+            fifo: false,
+            cru_per_circuit: 0.45,
+        }
+    }
+}
+
+/// Tenancy mode (Figure 6's comparison).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tenancy {
+    /// All clients share the whole worker pool through the co-Manager.
+    MultiTenant,
+    /// The paper's single-tenant baseline (its IBM-Q criticism in §I):
+    /// "one user occupies the entire machine while others wait in a
+    /// queue" — clients get the whole pool exclusively, FIFO by client
+    /// index; a waiting client's circuits are never assigned.
+    SingleTenant,
+}
+
+/// A client's training job: `n_circuits` independent circuits of one
+/// configuration (one epoch), submitted in rounds.
+///
+/// Algorithm 1 alternates phases *per sample*: build the parameter-shift
+/// bank (serial classical work), execute the bank (distributed), analyze
+/// results (serial) — build/analysis does not overlap worker execution.
+/// `bank_size` is the circuits per round (≈ 2P per sample per filter);
+/// the round structure is what produces the paper's
+/// `runtime ≈ N·(c + s/W)` diminishing-returns curve.
+#[derive(Debug, Clone)]
+pub struct ClientJob {
+    pub client: usize,
+    pub config: QuClassiConfig,
+    pub n_circuits: usize,
+    pub bank_size: usize,
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub workers: Vec<SimWorkerSpec>,
+    pub env: EnvParams,
+    pub calib: Calibration,
+    /// Heartbeat period (paper: 5 s).
+    pub heartbeat_period: f64,
+    pub tenancy: Tenancy,
+    pub seed: u64,
+}
+
+/// Per-client outcome.
+#[derive(Debug, Clone)]
+pub struct ClientResult {
+    pub client: usize,
+    pub circuits: usize,
+    /// Time the client's last circuit completed.
+    pub finish: f64,
+    /// Circuits per second over the client's span.
+    pub cps: f64,
+}
+
+/// Whole-run outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Completion time of the entire workload ("runtime per epoch").
+    pub makespan: f64,
+    pub total_circuits: usize,
+    /// Aggregate circuits per second.
+    pub cps: f64,
+    pub per_client: Vec<ClientResult>,
+    /// DES events executed (sanity/observability).
+    pub events: u64,
+}
+
+#[derive(Debug, Clone)]
+struct SimJob {
+    client: usize,
+    config: QuClassiConfig,
+    seq: u64,
+}
+
+struct WorkerModel {
+    spec: SimWorkerSpec,
+    /// Circuits assigned and not yet complete (executing or FIFO-queued).
+    concurrent: usize,
+    /// FIFO backends: virtual time the backend becomes idle.
+    free_at: f64,
+}
+
+struct ClientState {
+    config: QuClassiConfig,
+    /// Circuits not yet submitted.
+    unsubmitted: usize,
+    /// Circuits submitted in the current round, still running.
+    in_flight: usize,
+    bank_size: usize,
+    finish: f64,
+}
+
+struct SimState {
+    registry: Registry,
+    worker_ids: Vec<WorkerId>,
+    models: BTreeMap<WorkerId, WorkerModel>,
+    pending: VecDeque<SimJob>,
+    env: EnvParams,
+    calib: Calibration,
+    tenancy: Tenancy,
+    rng: Rng,
+    next_job: u64,
+    clients: Vec<ClientState>,
+    total_done: usize,
+    total: usize,
+}
+
+impl SimState {
+    /// Lowest client index that still has work (the "occupant" in
+    /// single-tenant mode).
+    fn active_client(&self) -> Option<usize> {
+        self.clients
+            .iter()
+            .position(|c| c.unsubmitted > 0 || c.in_flight > 0)
+    }
+
+    /// Algorithm-2 selection, restricted by tenancy.
+    fn select(&self, job: &SimJob) -> Option<WorkerId> {
+        let demand = job.config.qubit_demand();
+        match self.tenancy {
+            Tenancy::MultiTenant => scheduler::select(&self.registry, demand),
+            Tenancy::SingleTenant => {
+                // Only the current occupant may execute circuits.
+                if self.active_client() != Some(job.client) {
+                    return None;
+                }
+                scheduler::select(&self.registry, demand)
+            }
+        }
+    }
+
+    /// Service time for one circuit starting now on `worker`.
+    fn service_time(&mut self, worker: WorkerId, config: &QuClassiConfig) -> f64 {
+        let model = &self.models[&worker];
+        let mut t = self.calib.exec_time(config) / model.spec.speed;
+        if self.env.jitter_sigma > 0.0 {
+            // lognormal with unit median
+            t *= self.rng.lognormal(0.0, self.env.jitter_sigma);
+        }
+        if self.env.queue_delay_mean > 0.0 {
+            t += self.rng.exponential(1.0 / self.env.queue_delay_mean);
+        }
+        if self.env.cpu_share {
+            // processor sharing approximation: pay for the circuits
+            // already on the core (including this one)
+            t *= (model.concurrent + 1) as f64;
+        }
+        t
+    }
+
+    fn cru(&self, worker: WorkerId) -> f64 {
+        let model = &self.models[&worker];
+        (model.concurrent as f64 * self.env.cru_per_circuit).clamp(0.0, 1.0)
+    }
+}
+
+/// Try to place pending circuits; schedules completion events.
+fn try_assign(des: &mut Des<SimState>, st: &mut SimState) {
+    let mut scanned = 0;
+    while scanned < st.pending.len() {
+        let job = st.pending[scanned].clone();
+        match st.select(&job) {
+            None => {
+                scanned += 1; // head-of-line blocked; later jobs may still fit elsewhere
+            }
+            Some(worker) => {
+                st.pending.remove(scanned);
+                let demand = job.config.qubit_demand();
+                st.registry
+                    .reserve(worker, job.seq, demand)
+                    .expect("selection guaranteed capacity");
+                let s = st.service_time(worker, &job.config);
+                let now = des.now();
+                let model = st.models.get_mut(&worker).unwrap();
+                model.concurrent += 1;
+                let dt = if st.env.fifo {
+                    // sequential backend: start when the backend frees up
+                    let start = model.free_at.max(now);
+                    model.free_at = start + s;
+                    (start + s) - now
+                } else {
+                    s
+                };
+                let job2 = job.clone();
+                des.schedule(dt, move |des, st| {
+                    complete(des, st, worker, job2);
+                });
+            }
+        }
+    }
+}
+
+fn complete(des: &mut Des<SimState>, st: &mut SimState, worker: WorkerId, job: SimJob) {
+    st.registry.release(worker, job.seq);
+    st.models.get_mut(&worker).unwrap().concurrent -= 1;
+    st.total_done += 1;
+    let client = job.client;
+    let c = &mut st.clients[client];
+    c.in_flight -= 1;
+    if c.in_flight == 0 {
+        if c.unsubmitted == 0 {
+            c.finish = des.now();
+        } else {
+            // round finished: serial analysis + next-bank build, then submit
+            start_round(des, st, client);
+        }
+    }
+    try_assign(des, st);
+}
+
+/// Begin a client's next round: serial classical work for the whole bank
+/// (build + analysis), then the bank's circuits join the pending queue.
+fn start_round(des: &mut Des<SimState>, st: &mut SimState, client: usize) {
+    let c = &mut st.clients[client];
+    let bank = c.bank_size.min(c.unsubmitted);
+    debug_assert!(bank > 0);
+    c.unsubmitted -= bank;
+    c.in_flight = bank;
+    let config = c.config;
+    let serial = bank as f64 * st.env.client_overhead;
+    des.schedule(serial, move |des, st: &mut SimState| {
+        for _ in 0..bank {
+            let seq = st.next_job;
+            st.next_job += 1;
+            st.pending.push_back(SimJob { client, config, seq });
+        }
+        try_assign(des, st);
+    });
+}
+
+fn heartbeat(des: &mut Des<SimState>, st: &mut SimState, period: f64) {
+    // Paper-faithful: recompute OR from the active set, refresh CRU.
+    let ids: Vec<WorkerId> = st.worker_ids.clone();
+    let now = des.now();
+    for id in ids {
+        let active: Vec<(u64, usize)> = st
+            .registry
+            .get(id)
+            .map(|w| w.active.iter().map(|(k, v)| (*k, *v)).collect())
+            .unwrap_or_default();
+        let cru = st.cru(id);
+        let _ = st.registry.heartbeat_recompute(id, &active, cru, now);
+    }
+    if st.total_done < st.total {
+        des.schedule(period, move |des, st| heartbeat(des, st, period));
+    }
+}
+
+/// Run one workload through the simulated cluster.
+pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
+    // Upfront placement validation: an unplaceable job would leave the
+    // heartbeat loop live forever; fail loudly instead.
+    for j in jobs {
+        let d = j.config.qubit_demand();
+        let placeable = cfg.workers.iter().any(|w| w.max_qubits >= d);
+        assert!(
+            placeable,
+            "client {} job needs {d} qubits; no eligible worker under {:?}",
+            j.client, cfg.tenancy
+        );
+    }
+    let n_clients = jobs.iter().map(|j| j.client + 1).max().unwrap_or(0);
+    assert_eq!(n_clients, jobs.len(), "client ids must be 0..n dense, one job each");
+    let mut registry = Registry::new(cfg.heartbeat_period);
+    let mut worker_ids = Vec::new();
+    let mut models = BTreeMap::new();
+    for spec in &cfg.workers {
+        let id = registry.register(spec.max_qubits, 0.0, 0.0);
+        worker_ids.push(id);
+        models.insert(id, WorkerModel { spec: *spec, concurrent: 0, free_at: 0.0 });
+    }
+    let mut clients: Vec<ClientState> = jobs
+        .iter()
+        .map(|j| ClientState {
+            config: j.config,
+            unsubmitted: j.n_circuits,
+            in_flight: 0,
+            bank_size: j.bank_size.max(1),
+            finish: 0.0,
+        })
+        .collect();
+    clients.sort_by_key(|_| 0u8); // stable; jobs are dense by construction
+    let total = jobs.iter().map(|j| j.n_circuits).sum();
+
+    let mut st = SimState {
+        registry,
+        worker_ids,
+        models,
+        pending: VecDeque::new(),
+        env: cfg.env,
+        calib: cfg.calib.clone(),
+        tenancy: cfg.tenancy.clone(),
+        rng: Rng::new(cfg.seed),
+        next_job: 0,
+        clients,
+        total_done: 0,
+        total,
+    };
+
+    let mut des: Des<SimState> = Des::new();
+
+    // Kick off every client's first round (clients run concurrently).
+    for j in jobs {
+        let client = j.client;
+        des.schedule(0.0, move |des, st: &mut SimState| start_round(des, st, client));
+    }
+    // Heartbeats.
+    let period = cfg.heartbeat_period;
+    des.schedule(period, move |des, st| heartbeat(des, st, period));
+
+    des.run(&mut st);
+    assert_eq!(st.total_done, total, "simulation lost circuits");
+    // Makespan = when the last circuit completed (the trailing heartbeat
+    // event may fire later; it must not inflate the epoch runtime).
+    let makespan = st.clients.iter().map(|c| c.finish).fold(0.0f64, f64::max);
+
+    let per_client = jobs
+        .iter()
+        .map(|j| {
+            let finish = st.clients[j.client].finish;
+            ClientResult {
+                client: j.client,
+                circuits: j.n_circuits,
+                finish,
+                cps: j.n_circuits as f64 / finish.max(1e-9),
+            }
+        })
+        .collect();
+    SimResult {
+        makespan,
+        total_circuits: total,
+        cps: total as f64 / makespan.max(1e-9),
+        per_client,
+        events: des.executed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_config(workers: &[usize], tenancy: Tenancy, env: EnvParams) -> SimConfig {
+        SimConfig {
+            workers: workers.iter().map(|&q| SimWorkerSpec { max_qubits: q, speed: 1.0 }).collect(),
+            env,
+            calib: Calibration::qiskit_like(),
+            heartbeat_period: 5.0,
+            tenancy,
+            seed: 42,
+        }
+    }
+
+    fn one_client(config: QuClassiConfig, n: usize) -> Vec<ClientJob> {
+        vec![ClientJob { client: 0, config, n_circuits: n, bank_size: 32 }]
+    }
+
+    #[test]
+    fn more_workers_reduce_runtime() {
+        let cfg5l3 = QuClassiConfig::new(5, 3).unwrap();
+        let jobs = one_client(cfg5l3, 400);
+        let t1 = simulate(
+            &base_config(&[5], Tenancy::MultiTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        let t2 = simulate(
+            &base_config(&[5, 5], Tenancy::MultiTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        let t4 = simulate(
+            &base_config(&[5, 5, 5, 5], Tenancy::MultiTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        assert!(t2.makespan < t1.makespan, "{} !< {}", t2.makespan, t1.makespan);
+        assert!(t4.makespan < t2.makespan);
+        // and circuits/sec increases
+        assert!(t4.cps > t2.cps && t2.cps > t1.cps);
+        // diminishing returns: 4 workers is NOT 4x faster (client overhead
+        // serializes) — the paper's central observation
+        assert!(t4.makespan > t1.makespan / 4.0);
+    }
+
+    #[test]
+    fn deeper_circuits_take_longer() {
+        let jobs1 = one_client(QuClassiConfig::new(5, 1).unwrap(), 200);
+        let jobs3 = one_client(QuClassiConfig::new(5, 3).unwrap(), 200);
+        let cfg = base_config(&[5, 5], Tenancy::MultiTenant, EnvParams::gcp_controlled());
+        let r1 = simulate(&cfg, &jobs1);
+        let r3 = simulate(&cfg, &jobs3);
+        assert!(r3.makespan > r1.makespan);
+    }
+
+    #[test]
+    fn multi_tenant_beats_single_tenant_for_small_jobs() {
+        // Fig 6's effect: the 5Q/1L client gains hugely from sharing the
+        // pool instead of being pinned to the small worker.
+        // queue order: big jobs first, the small 5Q/1L job last (client 3)
+        let jobs = vec![
+            ClientJob { client: 0, config: QuClassiConfig::new(7, 2).unwrap(), n_circuits: 150, bank_size: 32 },
+            ClientJob { client: 1, config: QuClassiConfig::new(5, 2).unwrap(), n_circuits: 150, bank_size: 32 },
+            ClientJob { client: 2, config: QuClassiConfig::new(7, 1).unwrap(), n_circuits: 150, bank_size: 32 },
+            ClientJob { client: 3, config: QuClassiConfig::new(5, 1).unwrap(), n_circuits: 150, bank_size: 32 },
+        ];
+        let workers = [5usize, 10, 15, 20];
+        let single = simulate(
+            &base_config(&workers, Tenancy::SingleTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        let multi = simulate(
+            &base_config(&workers, Tenancy::MultiTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        let s3 = single.per_client[3].finish;
+        let m3 = multi.per_client[3].finish;
+        assert!(m3 < s3, "5Q/1L multi {m3} !< single {s3}");
+        // throughput of the small job improves substantially (paper: 3.9x)
+        assert!(multi.per_client[3].cps > 1.5 * single.per_client[3].cps);
+    }
+
+    #[test]
+    fn single_tenant_serializes_clients() {
+        // Two identical clients: in single-tenant mode client 1 waits for
+        // client 0, so its finish is ~2x client 0's; in multi-tenant they
+        // overlap and finish together.
+        let cfg5 = QuClassiConfig::new(5, 1).unwrap();
+        let jobs = vec![
+            ClientJob { client: 0, config: cfg5, n_circuits: 64, bank_size: 16 },
+            ClientJob { client: 1, config: cfg5, n_circuits: 64, bank_size: 16 },
+        ];
+        let single = simulate(
+            &base_config(&[5, 5], Tenancy::SingleTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        let multi = simulate(
+            &base_config(&[5, 5], Tenancy::MultiTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        assert!(
+            single.per_client[1].finish > 1.7 * single.per_client[0].finish,
+            "single-tenant client 1 did not queue: {} vs {}",
+            single.per_client[1].finish,
+            single.per_client[0].finish
+        );
+        let ratio = multi.per_client[1].finish / single.per_client[1].finish;
+        assert!(ratio < 0.85, "multi-tenant gave no gain: ratio {ratio}");
+    }
+
+    #[test]
+    fn unplaceable_workload_detected() {
+        let jobs = vec![ClientJob {
+            client: 0,
+            config: QuClassiConfig::new(7, 1).unwrap(),
+            n_circuits: 3,
+            bank_size: 8,
+        }];
+        let cfg = base_config(&[5], Tenancy::MultiTenant, EnvParams::gcp_controlled());
+        let result = std::panic::catch_unwind(|| simulate(&cfg, &jobs));
+        assert!(result.is_err(), "expected unplaceable workload to be detected");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let jobs = one_client(QuClassiConfig::new(5, 2).unwrap(), 100);
+        let cfg = base_config(&[5, 5], Tenancy::MultiTenant, EnvParams::ibmq_uncontrolled());
+        let a = simulate(&cfg, &jobs);
+        let b = simulate(&cfg, &jobs);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn uncontrolled_jitter_changes_with_seed() {
+        let jobs = one_client(QuClassiConfig::new(5, 2).unwrap(), 100);
+        let mut cfg = base_config(&[5, 5], Tenancy::MultiTenant, EnvParams::ibmq_uncontrolled());
+        let a = simulate(&cfg, &jobs);
+        cfg.seed = 43;
+        let b = simulate(&cfg, &jobs);
+        assert_ne!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn big_worker_hosts_concurrent_small_circuits() {
+        // One 20-qubit worker, controlled env: four 5-qubit circuits run
+        // concurrently (processor-shared), so makespan is far less than
+        // 4x the serial case for a burst of 4.
+        let jobs = one_client(QuClassiConfig::new(5, 1).unwrap(), 40);
+        let small = simulate(
+            &base_config(&[5], Tenancy::MultiTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        let big = simulate(
+            &base_config(&[20], Tenancy::MultiTenant, EnvParams::gcp_controlled()),
+            &jobs,
+        );
+        // processor sharing means the 20q worker is not 4x faster, but it
+        // must not be slower than the 5q worker
+        assert!(big.makespan <= small.makespan * 1.05);
+    }
+}

@@ -1,0 +1,36 @@
+//! # DQuLearn
+//!
+//! Reproduction of *"Distributed Quantum Learning with co-Management in a
+//! Multi-tenant Quantum System"* (D'Onofrio et al., CS.DC 2023) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is organized bottom-up (see DESIGN.md for the inventory):
+//!
+//! * substrates: [`util`], [`wire`], [`net`], [`cli`], [`benchlib`], [`testlib`]
+//! * quantum: [`qsim`] (from-scratch statevector simulator), [`circuit`]
+//!   (IR + QuClassi builder + parameter-shift banks)
+//! * learning: [`data`], [`model`], [`baseline`]
+//! * system (the paper's contribution): [`coordinator`] (co-Manager),
+//!   [`worker`], [`runtime`] (PJRT artifact engine), [`cluster`]
+//! * evaluation: [`des`] (discrete-event simulator), [`env`] (cloud
+//!   models), [`metrics`]
+
+pub mod util;
+#[macro_use]
+pub mod wire;
+pub mod baseline;
+pub mod benchlib;
+pub mod circuit;
+pub mod cli;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod des;
+pub mod env;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod qsim;
+pub mod runtime;
+pub mod testlib;
+pub mod worker;

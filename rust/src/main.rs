@@ -1,0 +1,312 @@
+//! `dqulearn` — leader entrypoint and CLI.
+//!
+//! Subcommands cover the full deployment surface:
+//! `manager` / `worker` run the distributed system over TCP; `train` runs
+//! a client (against a remote manager or an in-proc cluster); `bench-fig`
+//! regenerates the paper's figures through the DES; `accuracy` reproduces
+//! the §IV-B table; `info` inspects artifacts.
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cli::{App, CommandSpec, Parsed};
+use dqulearn::cluster::{serve_manager, InProcCluster, RemoteClient};
+use dqulearn::coordinator::{Manager, ManagerConfig};
+use dqulearn::data::Dataset;
+use dqulearn::env::{scenarios, Calibration};
+use dqulearn::model::exec::{CircuitExecutor, QsimExecutor};
+use dqulearn::model::optimizer::Optimizer;
+use dqulearn::model::quclassi::LossKind;
+use dqulearn::model::{QuClassiModel, TrainConfig, Trainer};
+use dqulearn::runtime::{Manifest, PjrtEngine};
+use dqulearn::util::{logging, Rng};
+use dqulearn::worker::{WorkerHandle, WorkerOptions};
+
+fn app() -> App {
+    App {
+        name: "dqulearn",
+        version: env!("CARGO_PKG_VERSION"),
+        about: "distributed quantum learning with co-management (DQuLearn reproduction)",
+        commands: vec![
+            CommandSpec::new("manager", "run the co-Manager service")
+                .opt_default("listen", "listen address", "127.0.0.1:7001")
+                .opt_default("heartbeat", "heartbeat period seconds", "5")
+                .opt_default("max-batch", "max circuits per dispatch", "32"),
+            CommandSpec::new("worker", "run a quantum worker")
+                .opt_default("manager", "manager address", "127.0.0.1:7001")
+                .opt_default("qubits", "max qubits (MR)", "5")
+                .opt_default("artifacts", "AOT artifact directory", "artifacts")
+                .opt_default("heartbeat", "heartbeat period seconds", "5")
+                .opt_default("listen", "worker listen address", "127.0.0.1:0"),
+            CommandSpec::new("train", "train a QuClassi classifier")
+                .opt("manager", "remote manager address (else in-proc)")
+                .opt_default("in-proc", "in-proc worker qubit list", "5,5")
+                .opt_default("pair", "digit pair a,b", "3,9")
+                .opt_default("qubits", "circuit width (5 or 7)", "5")
+                .opt_default("layers", "variational layers (1-3)", "1")
+                .opt_default("epochs", "training epochs", "10")
+                .opt_default("lr", "learning rate", "0.05")
+                .opt_default("samples", "examples per class", "20")
+                .opt_default("seed", "random seed", "42")
+                .opt_default("artifacts", "AOT artifact directory", "artifacts")
+                .flag("classical", "co-train the conv+dense front")
+                .flag("qsim", "force the Rust simulator backend"),
+            CommandSpec::new("bench-fig", "regenerate a paper figure via the DES")
+                .opt_default("fig", "figure number (3, 4, 5, or 6)", "3")
+                .opt_default("seed", "simulation seed", "7"),
+            CommandSpec::new("accuracy", "reproduce the accuracy comparison (§IV-B)")
+                .opt_default("epochs", "training epochs", "15")
+                .opt_default("samples", "examples per class", "20")
+                .opt_default("seed", "random seed", "42"),
+            CommandSpec::new("info", "inspect AOT artifacts")
+                .opt_default("artifacts", "AOT artifact directory", "artifacts"),
+        ],
+    }
+}
+
+fn main() {
+    if let Ok(level) = std::env::var("DQULEARN_LOG") {
+        if let Some(l) = logging::Level::from_str_loose(&level) {
+            logging::set_level(l);
+        }
+    }
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match app().parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed.command.as_str() {
+        "manager" => cmd_manager(&parsed),
+        "worker" => cmd_worker(&parsed),
+        "train" => cmd_train(&parsed),
+        "bench-fig" => cmd_bench_fig(&parsed),
+        "accuracy" => cmd_accuracy(&parsed),
+        "info" => cmd_info(&parsed),
+        other => Err(format!("unhandled command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_manager(p: &Parsed) -> Result<(), String> {
+    let listen = p.get_or("listen", "127.0.0.1:7001");
+    let heartbeat = p.get_f64("heartbeat").map_err(|e| e.to_string())?.unwrap_or(5.0);
+    let max_batch = p.get_usize("max-batch").map_err(|e| e.to_string())?.unwrap_or(32);
+    let manager = Manager::new(ManagerConfig {
+        heartbeat_period: heartbeat,
+        max_batch,
+        ..Default::default()
+    });
+    let server = serve_manager(manager, &listen).map_err(|e| e.to_string())?;
+    println!("co-manager listening on {}", server.local_addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_worker(p: &Parsed) -> Result<(), String> {
+    let opts = WorkerOptions {
+        max_qubits: p.get_usize("qubits").map_err(|e| e.to_string())?.unwrap_or(5),
+        artifact_dir: p.get_or("artifacts", "artifacts").into(),
+        heartbeat_period: p.get_f64("heartbeat").map_err(|e| e.to_string())?.unwrap_or(5.0),
+        listen: p.get_or("listen", "127.0.0.1:0"),
+    };
+    let manager = p.get_or("manager", "127.0.0.1:7001");
+    let handle = WorkerHandle::start(&manager, opts)?;
+    println!("worker w{} serving on {}", handle.worker_id, handle.listen_addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn parse_pair(p: &Parsed) -> Result<(u8, u8), String> {
+    let pair = p.get_or("pair", "3,9");
+    let parts: Vec<&str> = pair.split(',').collect();
+    if parts.len() != 2 {
+        return Err(format!("--pair must be 'a,b', got '{pair}'"));
+    }
+    let a = parts[0].trim().parse::<u8>().map_err(|e| e.to_string())?;
+    let b = parts[1].trim().parse::<u8>().map_err(|e| e.to_string())?;
+    Ok((a, b))
+}
+
+fn cmd_train(p: &Parsed) -> Result<(), String> {
+    let (a, b) = parse_pair(p)?;
+    let qubits = p.get_usize("qubits").map_err(|e| e.to_string())?.unwrap_or(5);
+    let layers = p.get_usize("layers").map_err(|e| e.to_string())?.unwrap_or(1);
+    let epochs = p.get_usize("epochs").map_err(|e| e.to_string())?.unwrap_or(10);
+    let samples = p.get_usize("samples").map_err(|e| e.to_string())?.unwrap_or(20);
+    let lr = p.get_f64("lr").map_err(|e| e.to_string())?.unwrap_or(0.05) as f32;
+    let seed = p.get_usize("seed").map_err(|e| e.to_string())?.unwrap_or(42) as u64;
+    let config = QuClassiConfig::new(qubits, layers)?;
+    let dataset = Dataset::binary_pair(None, a, b, samples, seed);
+
+    let exec: Box<dyn CircuitExecutor> = if let Some(addr) = p.get("manager") {
+        Box::new(RemoteClient::connect(addr)?)
+    } else if p.has_flag("qsim") {
+        Box::new(QsimExecutor)
+    } else {
+        let worker_qubits = p
+            .get_usize_list("in-proc")
+            .map_err(|e| e.to_string())?
+            .unwrap_or(vec![5, 5]);
+        let mut builder = InProcCluster::builder().workers(&worker_qubits);
+        let artifacts = p.get_or("artifacts", "artifacts");
+        if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+            builder = builder.artifacts(artifacts);
+        }
+        Box::new(builder.build()?)
+    };
+    println!(
+        "training {a}-vs-{b} (q={qubits}, l={layers}) on {} for {epochs} epochs",
+        exec.describe()
+    );
+
+    let mut model = QuClassiModel::new(config, &mut Rng::new(seed));
+    let trainer = Trainer::new(TrainConfig {
+        epochs,
+        optimizer: Optimizer::adam(lr),
+        train_classical: p.has_flag("classical"),
+        classical_lr_scale: 0.1,
+        seed,
+        early_stop_acc: None,
+            loss: LossKind::Discriminative,
+    });
+    let report = trainer.train(&mut model, &dataset, exec.as_ref())?;
+    for e in &report.epochs {
+        println!(
+            "epoch {:>3}: loss {:.4}  acc {:.3}  circuits {:>6}  {:.2}s",
+            e.epoch, e.mean_loss, e.train_accuracy, e.circuits, e.wall_seconds
+        );
+    }
+    println!(
+        "final: train acc {:.3}, test acc {:.3}, {} circuits in {:.2}s ({:.1} circuits/s)",
+        report.final_train_accuracy(),
+        report.test_accuracy,
+        report.total_circuits,
+        report.total_seconds,
+        report.circuits_per_second()
+    );
+    Ok(())
+}
+
+fn cmd_bench_fig(p: &Parsed) -> Result<(), String> {
+    let fig = p.get_usize("fig").map_err(|e| e.to_string())?.unwrap_or(3);
+    let seed = p.get_usize("seed").map_err(|e| e.to_string())?.unwrap_or(7) as u64;
+    let calib = Calibration::qiskit_like();
+    match fig {
+        3 | 4 => {
+            let qubits = if fig == 3 { 5 } else { 7 };
+            let rows = scenarios::ibmq_figure(qubits, &calib, seed);
+            print_figure_rows(&format!("Figure {fig}: {qubits}-qubit IBM-Q (uncontrolled)"), &rows);
+        }
+        5 => {
+            let rows = scenarios::gcp_one_client_figure(5, &calib, seed);
+            print_figure_rows("Figure 5: 5-qubit controlled environment (one client)", &rows);
+        }
+        6 => {
+            let rows = scenarios::multi_tenant_figure(&calib, seed);
+            println!("Figure 6: multi-tenant system (4 clients; workers 5/10/15/20 qubits)");
+            println!(
+                "{:<8} {:>9} {:>14} {:>14} {:>10} {:>10}",
+                "job", "circuits", "single(s)", "multi(s)", "red.%", "cps gain"
+            );
+            for r in &rows {
+                println!(
+                    "{:<8} {:>9} {:>14.1} {:>14.1} {:>10.1} {:>9.2}x",
+                    r.label,
+                    r.circuits,
+                    r.single_runtime,
+                    r.multi_runtime,
+                    r.runtime_reduction_pct(),
+                    r.cps_gain()
+                );
+            }
+        }
+        other => return Err(format!("unknown figure {other} (expected 3-6)")),
+    }
+    Ok(())
+}
+
+fn print_figure_rows(title: &str, rows: &[scenarios::FigureRow]) {
+    println!("{title}");
+    println!(
+        "{:>6} {:>8} {:>9} {:>12} {:>12}",
+        "layers", "workers", "circuits", "runtime(s)", "circ/s"
+    );
+    for r in rows {
+        println!(
+            "{:>6} {:>8} {:>9} {:>12.1} {:>12.2}",
+            r.layers, r.workers, r.circuits, r.runtime, r.cps
+        );
+    }
+}
+
+fn cmd_accuracy(p: &Parsed) -> Result<(), String> {
+    let epochs = p.get_usize("epochs").map_err(|e| e.to_string())?.unwrap_or(15);
+    let samples = p.get_usize("samples").map_err(|e| e.to_string())?.unwrap_or(20);
+    let seed = p.get_usize("seed").map_err(|e| e.to_string())?.unwrap_or(42) as u64;
+    println!("accuracy comparison (distributed 2-worker vs non-distributed), {epochs} epochs");
+    println!("{:>6} {:>14} {:>14} {:>8}", "pair", "distributed", "baseline", "delta");
+    for (a, b) in [(3u8, 9u8), (3, 8), (3, 6), (1, 5)] {
+        let config = QuClassiConfig::new(5, 1)?;
+        let dataset = Dataset::binary_pair(None, a, b, samples, seed);
+        let tc = TrainConfig {
+            epochs,
+            optimizer: Optimizer::adam(0.05),
+            train_classical: true,
+            classical_lr_scale: 0.1,
+            seed,
+            early_stop_acc: None,
+            loss: LossKind::Discriminative,
+        };
+        // distributed: 2 in-proc workers
+        let cluster = InProcCluster::builder().workers(&[5, 5]).build()?;
+        let mut m_dist = QuClassiModel::new(config, &mut Rng::new(seed));
+        let dist = Trainer::new(tc.clone()).train(&mut m_dist, &dataset, &cluster)?;
+        cluster.shutdown();
+        // baseline: local simulator
+        let mut m_base = QuClassiModel::new(config, &mut Rng::new(seed));
+        let base = Trainer::new(tc).train(&mut m_base, &dataset, &QsimExecutor)?;
+        println!(
+            "{:>3}/{:<3} {:>13.1}% {:>13.1}% {:>7.2}%",
+            a,
+            b,
+            dist.test_accuracy * 100.0,
+            base.test_accuracy * 100.0,
+            (dist.test_accuracy - base.test_accuracy).abs() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(p: &Parsed) -> Result<(), String> {
+    let dir = p.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(std::path::Path::new(&dir))?;
+    println!("artifacts in {dir}:");
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<16} q={} l={} P={:>2} D={} batch={} file={}",
+            a.name,
+            a.config.qubits,
+            a.config.layers,
+            a.n_params,
+            a.n_features,
+            a.batch,
+            a.path.display()
+        );
+    }
+    // smoke-compile one artifact to prove the runtime path works
+    let engine = PjrtEngine::load(std::path::Path::new(&dir))?;
+    let cfg = manifest.artifacts[0].config;
+    let fids = engine.execute(
+        &cfg,
+        &[(vec![0.3; cfg.n_params()], vec![0.7; cfg.n_features()])],
+    )?;
+    println!("pjrt smoke execution ok: fid = {:.6}", fids[0]);
+    engine.shutdown();
+    Ok(())
+}

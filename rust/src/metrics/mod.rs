@@ -1,0 +1,164 @@
+//! Runtime metrics: epoch timers, throughput meters, latency recorders.
+//!
+//! The paper's evaluation reports two quantities per experiment —
+//! runtime per epoch and circuits processed per second — plus accuracy.
+//! This module provides the accounting used by the live system (the DES
+//! computes its own inside `env::sim`).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Wall-clock epoch timer (Algorithm 1 lines 5/24-25).
+#[derive(Debug)]
+pub struct EpochTimer {
+    start: Instant,
+    laps: Vec<f64>,
+}
+
+impl EpochTimer {
+    pub fn start() -> EpochTimer {
+        EpochTimer { start: Instant::now(), laps: Vec::new() }
+    }
+
+    /// Record the end of an epoch and restart the timer.
+    pub fn lap(&mut self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        self.laps.push(secs);
+        self.start = Instant::now();
+        secs
+    }
+
+    pub fn laps(&self) -> &[f64] {
+        &self.laps
+    }
+
+    pub fn total(&self) -> f64 {
+        self.laps.iter().sum()
+    }
+}
+
+impl Default for EpochTimer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Thread-safe circuits-per-second meter.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    inner: Mutex<ThroughputInner>,
+}
+
+#[derive(Debug)]
+struct ThroughputInner {
+    start: Instant,
+    circuits: u64,
+}
+
+impl ThroughputMeter {
+    pub fn start() -> ThroughputMeter {
+        ThroughputMeter {
+            inner: Mutex::new(ThroughputInner { start: Instant::now(), circuits: 0 }),
+        }
+    }
+
+    pub fn add(&self, circuits: u64) {
+        self.inner.lock().expect("meter poisoned").circuits += circuits;
+    }
+
+    pub fn circuits(&self) -> u64 {
+        self.inner.lock().expect("meter poisoned").circuits
+    }
+
+    /// Circuits per second since start.
+    pub fn cps(&self) -> f64 {
+        let g = self.inner.lock().expect("meter poisoned");
+        g.circuits as f64 / g.start.elapsed().as_secs_f64().max(1e-9)
+    }
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Latency recorder with summary statistics (per-bank round trips).
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder::default()
+    }
+
+    pub fn record(&self, secs: f64) {
+        self.samples.lock().expect("recorder poisoned").push(secs);
+    }
+
+    /// Time a closure and record its latency.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.record(t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().expect("recorder poisoned").len()
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        let g = self.samples.lock().expect("recorder poisoned");
+        if g.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&g))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_timer_accumulates_laps() {
+        let mut t = EpochTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let lap1 = t.lap();
+        assert!(lap1 >= 0.009);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let lap2 = t.lap();
+        assert_eq!(t.laps().len(), 2);
+        assert!((t.total() - (lap1 + lap2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_meter_counts() {
+        let m = ThroughputMeter::start();
+        m.add(100);
+        m.add(50);
+        assert_eq!(m.circuits(), 150);
+        assert!(m.cps() > 0.0);
+    }
+
+    #[test]
+    fn latency_recorder_summarizes() {
+        let r = LatencyRecorder::new();
+        assert!(r.summary().is_none());
+        for i in 1..=10 {
+            r.record(i as f64 / 1000.0);
+        }
+        let s = r.summary().unwrap();
+        assert_eq!(s.count, 10);
+        assert!((s.mean - 0.0055).abs() < 1e-9);
+        let out = r.time(|| 42);
+        assert_eq!(out, 42);
+        assert_eq!(r.count(), 11);
+    }
+}

@@ -1,0 +1,171 @@
+//! Model checkpointing: save/load a trained [`QuClassiModel`] as JSON.
+//!
+//! The wire substrate doubles as the serialization layer, so checkpoints
+//! are human-readable and diffable. Versioned for forward compatibility.
+
+use std::path::Path;
+
+use crate::circuit::QuClassiConfig;
+use crate::data::IMG_SIDE;
+use crate::model::dense::Dense;
+use crate::model::quclassi::QuClassiModel;
+use crate::model::segmentation::{ConvFilters, Segmentation};
+use crate::wire::{self, Value};
+
+const FORMAT_VERSION: u64 = 1;
+
+/// Serialize a model to a JSON value.
+pub fn to_value(model: &QuClassiModel) -> Value {
+    let kernels: Vec<Value> =
+        model.conv.kernels.iter().map(|k| Value::from(k.as_slice())).collect();
+    Value::obj()
+        .with("format", FORMAT_VERSION)
+        .with("qubits", model.config.qubits)
+        .with("layers", model.config.layers)
+        .with("theta_a", model.theta[0].as_slice())
+        .with("theta_b", model.theta[1].as_slice())
+        .with(
+            "conv",
+            Value::obj()
+                .with("width", model.conv.seg.width)
+                .with("stride", model.conv.seg.stride)
+                .with("n_filters", model.conv.n_filters)
+                .with("kernels", Value::Arr(kernels))
+                .with("bias", model.conv.bias.as_slice()),
+        )
+        .with(
+            "dense",
+            Value::obj()
+                .with("n_in", model.dense.n_in)
+                .with("n_out", model.dense.n_out)
+                .with("w", model.dense.w.as_slice())
+                .with("b", model.dense.b.as_slice()),
+        )
+}
+
+/// Deserialize a model from a JSON value.
+pub fn from_value(v: &Value) -> Result<QuClassiModel, String> {
+    let version = v.req_u64("format")?;
+    if version != FORMAT_VERSION {
+        return Err(format!("unsupported checkpoint format {version}"));
+    }
+    let config = QuClassiConfig::new(v.req_usize("qubits")?, v.req_usize("layers")?)?;
+    let theta_a = v.req_f32_vec("theta_a")?;
+    let theta_b = v.req_f32_vec("theta_b")?;
+    if theta_a.len() != config.n_params() || theta_b.len() != config.n_params() {
+        return Err("checkpoint theta arity mismatch".to_string());
+    }
+
+    let conv_v = v.get("conv").ok_or("missing conv")?;
+    let seg = Segmentation {
+        width: conv_v.req_usize("width")?,
+        stride: conv_v.req_usize("stride")?,
+    };
+    let n_filters = conv_v.req_usize("n_filters")?;
+    let kernels: Result<Vec<Vec<f32>>, String> = conv_v
+        .req_arr("kernels")?
+        .iter()
+        .map(|k| {
+            k.as_arr()
+                .ok_or_else(|| "kernel not an array".to_string())?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as f32).ok_or_else(|| "bad kernel value".to_string()))
+                .collect()
+        })
+        .collect();
+    let kernels = kernels?;
+    if kernels.len() != n_filters {
+        return Err("kernel count mismatch".to_string());
+    }
+    let conv = ConvFilters { seg, n_filters, kernels, bias: conv_v.req_f32_vec("bias")? };
+
+    let dense_v = v.get("dense").ok_or("missing dense")?;
+    let dense = Dense {
+        n_in: dense_v.req_usize("n_in")?,
+        n_out: dense_v.req_usize("n_out")?,
+        w: dense_v.req_f32_vec("w")?,
+        b: dense_v.req_f32_vec("b")?,
+    };
+    if dense.w.len() != dense.n_in * dense.n_out {
+        return Err("dense weight arity mismatch".to_string());
+    }
+    if dense.n_in != conv.out_len(IMG_SIDE) {
+        return Err("dense input does not match conv output".to_string());
+    }
+    if dense.n_out != config.n_features() {
+        return Err("dense output does not match encoder width".to_string());
+    }
+
+    Ok(QuClassiModel { config, theta: [theta_a, theta_b], conv, dense })
+}
+
+/// Save to a file (pretty-printed JSON).
+pub fn save(model: &QuClassiModel, path: &Path) -> Result<(), String> {
+    std::fs::write(path, wire::to_string_pretty(&to_value(model)))
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<QuClassiModel, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let v = wire::parse(&text).map_err(|e| format!("checkpoint json: {e}"))?;
+    from_value(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::exec::QsimExecutor;
+    use crate::util::Rng;
+
+    fn model() -> QuClassiModel {
+        QuClassiModel::new(QuClassiConfig::new(5, 2).unwrap(), &mut Rng::new(4))
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let m = model();
+        let back = from_value(&to_value(&m)).unwrap();
+        assert_eq!(m.config, back.config);
+        assert_eq!(m.theta[0], back.theta[0]);
+        assert_eq!(m.theta[1], back.theta[1]);
+        assert_eq!(m.conv.kernels, back.conv.kernels);
+        assert_eq!(m.dense.w, back.dense.w);
+    }
+
+    #[test]
+    fn round_trip_preserves_predictions() {
+        let m = model();
+        let back = from_value(&to_value(&m)).unwrap();
+        let mut rng = Rng::new(5);
+        let img: Vec<f32> = (0..IMG_SIDE * IMG_SIDE).map(|_| rng.f32()).collect();
+        let a = m.predict(&QsimExecutor, &img).unwrap();
+        let b = back.predict(&QsimExecutor, &img).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let m = model();
+        let path = std::env::temp_dir().join("dqulearn_ckpt_test.json");
+        save(&m, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(m.theta[0], back.theta[0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_corrupt_checkpoints() {
+        let m = model();
+        let mut v = to_value(&m);
+        v.set("format", 99u64);
+        assert!(from_value(&v).is_err());
+
+        let mut v2 = to_value(&m);
+        v2.set("theta_a", vec![0.0f32; 2].as_slice());
+        assert!(from_value(&v2).is_err());
+
+        assert!(from_value(&wire::parse("{}").unwrap()).is_err());
+    }
+}

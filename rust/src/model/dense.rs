@@ -1,0 +1,123 @@
+//! Classical dense layer (Algorithm 1 line 11: y = W^T h + b).
+
+use crate::util::Rng;
+
+/// Fully-connected layer, row-major weights `[out][in]`.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Dense {
+    pub fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Dense {
+        let scale = (2.0 / n_in as f64).sqrt();
+        Dense {
+            n_in,
+            n_out,
+            w: (0..n_in * n_out).map(|_| (rng.normal() * scale) as f32).collect(),
+            b: vec![0.0; n_out],
+        }
+    }
+
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_in);
+        let mut y = self.b.clone();
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = 0.0f32;
+            for (wi, xi) in row.iter().zip(x.iter()) {
+                acc += wi * xi;
+            }
+            y[o] += acc;
+        }
+        y
+    }
+
+    /// Backward for one sample: given x and dL/dy, accumulate dL/dW and
+    /// dL/db, and return dL/dx.
+    pub fn backward(
+        &self,
+        x: &[f32],
+        dl_dy: &[f32],
+        grad_w: &mut [f32],
+        grad_b: &mut [f32],
+    ) -> Vec<f32> {
+        assert_eq!(dl_dy.len(), self.n_out);
+        let mut dl_dx = vec![0.0f32; self.n_in];
+        for o in 0..self.n_out {
+            let g = dl_dy[o];
+            grad_b[o] += g;
+            if g == 0.0 {
+                continue;
+            }
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let grow = &mut grad_w[o * self.n_in..(o + 1) * self.n_in];
+            for i in 0..self.n_in {
+                grow[i] += g * x[i];
+                dl_dx[i] += g * row[i];
+            }
+        }
+        dl_dx
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_is_affine() {
+        let mut d = Dense::new(3, 2, &mut Rng::new(1));
+        d.w = vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5];
+        d.b = vec![0.25, -0.25];
+        let y = d.forward(&[2.0, 4.0, 6.0]);
+        assert!((y[0] - (2.0 - 6.0 + 0.25)).abs() < 1e-6);
+        assert!((y[1] - (1.0 + 2.0 + 3.0 - 0.25)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(7);
+        let d = Dense::new(4, 3, &mut rng);
+        let x: Vec<f32> = (0..4).map(|i| (i as f32) * 0.3 - 0.5).collect();
+        // L = sum(y * coef)
+        let coef = [0.7f32, -1.1, 0.4];
+        let mut gw = vec![0.0; d.w.len()];
+        let mut gb = vec![0.0; d.b.len()];
+        let dl_dx = d.backward(&x, &coef, &mut gw, &mut gb);
+
+        let loss = |d: &Dense, x: &[f32]| -> f32 {
+            d.forward(x).iter().zip(coef.iter()).map(|(y, c)| y * c).sum()
+        };
+        let eps = 1e-3f32;
+        // weight grads
+        let mut d2 = d.clone();
+        for wi in 0..d.w.len() {
+            let orig = d2.w[wi];
+            d2.w[wi] = orig + eps;
+            let lp = loss(&d2, &x);
+            d2.w[wi] = orig - eps;
+            let lm = loss(&d2, &x);
+            d2.w[wi] = orig;
+            assert!((gw[wi] - (lp - lm) / (2.0 * eps)).abs() < 1e-2);
+        }
+        // input grads
+        let mut x2 = x.clone();
+        for xi in 0..x.len() {
+            let orig = x2[xi];
+            x2[xi] = orig + eps;
+            let lp = loss(&d, &x2);
+            x2[xi] = orig - eps;
+            let lm = loss(&d, &x2);
+            x2[xi] = orig;
+            assert!((dl_dx[xi] - (lp - lm) / (2.0 * eps)).abs() < 1e-2);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! The circuit-execution boundary.
+//!
+//! A [`CircuitExecutor`] evaluates a batch of independent QuClassi
+//! circuits — (theta vector, data vector) pairs under one configuration —
+//! and returns their swap-test fidelities. Implementations:
+//!
+//! * [`QsimExecutor`] — the in-process Rust statevector simulator
+//!   (baseline / fallback path).
+//! * `runtime::PjrtEngine` — the AOT JAX/Pallas artifact via PJRT
+//!   (production path).
+//! * `cluster::ClusterClient` — submits to the distributed co-Manager
+//!   (the paper's system).
+
+use crate::circuit::{builder, QuClassiConfig};
+
+/// One circuit = one (thetas, data) pair under a configuration.
+pub type CircuitPair = (Vec<f32>, Vec<f32>);
+
+/// Evaluates banks of independent circuits.
+pub trait CircuitExecutor: Send + Sync {
+    /// Execute every pair; returns one fidelity per pair, same order.
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String>;
+
+    /// Human-readable executor description (for logs/reports).
+    fn describe(&self) -> String {
+        "executor".to_string()
+    }
+}
+
+/// Local Rust statevector execution.
+#[derive(Debug, Default)]
+pub struct QsimExecutor;
+
+impl CircuitExecutor for QsimExecutor {
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        Ok(pairs
+            .iter()
+            .map(|(thetas, data)| builder::simulate_fidelity(config, thetas, data))
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        "qsim (rust statevector)".to_string()
+    }
+}
+
+/// Wrapper that counts circuits and batches (metrics for the paper's
+/// circuits-per-second evaluation).
+pub struct CountingExecutor<E> {
+    inner: E,
+    circuits: std::sync::atomic::AtomicU64,
+    batches: std::sync::atomic::AtomicU64,
+}
+
+impl<E> CountingExecutor<E> {
+    pub fn new(inner: E) -> CountingExecutor<E> {
+        CountingExecutor {
+            inner,
+            circuits: std::sync::atomic::AtomicU64::new(0),
+            batches: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn circuits(&self) -> u64 {
+        self.circuits.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl<E: CircuitExecutor> CircuitExecutor for CountingExecutor<E> {
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        self.circuits
+            .fetch_add(pairs.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.execute_bank(config, pairs)
+    }
+
+    fn describe(&self) -> String {
+        format!("counting({})", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qsim_executor_matches_direct_simulation() {
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let mut rng = Rng::new(3);
+        let pairs: Vec<CircuitPair> = (0..8)
+            .map(|_| {
+                (
+                    (0..cfg.n_params()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+                    (0..cfg.n_features()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+                )
+            })
+            .collect();
+        let fids = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+        for (i, (t, d)) in pairs.iter().enumerate() {
+            let want = builder::simulate_fidelity(&cfg, t, d);
+            assert!((fids[i] - want).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn counting_executor_accumulates() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let exec = CountingExecutor::new(QsimExecutor);
+        let pair = (vec![0.1f32; 4], vec![0.2f32; 4]);
+        exec.execute_bank(&cfg, &[pair.clone(), pair.clone()]).unwrap();
+        exec.execute_bank(&cfg, &[pair]).unwrap();
+        assert_eq!(exec.circuits(), 3);
+        assert_eq!(exec.batches(), 2);
+    }
+
+    #[test]
+    fn empty_bank_is_fine() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        assert_eq!(QsimExecutor.execute_bank(&cfg, &[]).unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The quantum-classical learning model (paper §III-A/B, Algorithm 1).
+//!
+//! Pipeline per image: Task Segmentation (conv filter windows) →
+//! classical dense layer → rotation-encoder angles → QuClassi variational
+//! fidelity circuit (one trained class-state per class) → softmax over
+//! fidelities → cross-entropy loss. Quantum parameters train by
+//! parameter-shift circuit banks (`circuit::bank`); classical parameters
+//! train by chaining parameter-shift gradients of the *encoder angles*
+//! through the dense/conv layers.
+//!
+//! Everything that executes circuits goes through the [`exec::CircuitExecutor`]
+//! trait — the same model code runs on the local Rust simulator, the PJRT
+//! artifact engine, or the full distributed cluster.
+
+pub mod checkpoint;
+pub mod dense;
+pub mod exec;
+pub mod optimizer;
+pub mod quclassi;
+pub mod segmentation;
+pub mod trainer;
+
+pub use exec::{CircuitExecutor, CountingExecutor, QsimExecutor};
+pub use quclassi::QuClassiModel;
+pub use trainer::{TrainConfig, TrainReport, Trainer};

@@ -1,0 +1,107 @@
+//! Optimizers over flat parameter vectors: SGD(+momentum) and Adam.
+
+/// Optimizer choice + hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub enum Optimizer {
+    Sgd { lr: f32, momentum: f32 },
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl Optimizer {
+    pub fn sgd(lr: f32) -> Optimizer {
+        Optimizer::Sgd { lr, momentum: 0.0 }
+    }
+
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    pub fn lr(&self) -> f32 {
+        match *self {
+            Optimizer::Sgd { lr, .. } | Optimizer::Adam { lr, .. } => lr,
+        }
+    }
+}
+
+/// Per-tensor optimizer state.
+#[derive(Debug, Clone)]
+pub struct OptState {
+    opt: Optimizer,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl OptState {
+    pub fn new(opt: Optimizer, n: usize) -> OptState {
+        OptState { opt, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// Apply one gradient-descent step in place (`params -= update`).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        match self.opt {
+            Optimizer::Sgd { lr, momentum } => {
+                for i in 0..params.len() {
+                    self.m[i] = momentum * self.m[i] + grads[i];
+                    params[i] -= lr * self.m[i];
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps } => {
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for i in 0..params.len() {
+                    self.m[i] = beta1 * self.m[i] + (1.0 - beta1) * grads[i];
+                    self.v[i] = beta2 * self.v[i] + (1.0 - beta2) * grads[i] * grads[i];
+                    let mhat = self.m[i] / bc1;
+                    let vhat = self.v[i] / bc2;
+                    params[i] -= lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = (x - 3)^2 with each optimizer.
+    fn minimize(opt: Optimizer, steps: usize) -> f32 {
+        let mut x = vec![0.0f32];
+        let mut st = OptState::new(opt, 1);
+        for _ in 0..steps {
+            let g = vec![2.0 * (x[0] - 3.0)];
+            st.step(&mut x, &g);
+        }
+        x[0]
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let x = minimize(Optimizer::sgd(0.1), 100);
+        assert!((x - 3.0).abs() < 1e-3, "x={x}");
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        let x = minimize(Optimizer::Sgd { lr: 0.05, momentum: 0.9 }, 200);
+        assert!((x - 3.0).abs() < 1e-2, "x={x}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let x = minimize(Optimizer::adam(0.2), 300);
+        assert!((x - 3.0).abs() < 1e-2, "x={x}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut st = OptState::new(Optimizer::sgd(0.1), 2);
+        let mut p = vec![0.0f32; 2];
+        st.step(&mut p, &[1.0]);
+    }
+}

@@ -1,0 +1,383 @@
+//! The QuClassi quantum-classical classifier.
+//!
+//! One variational "class state" per class; classification compares the
+//! swap-test fidelity of the encoded input against each class state.
+//! The classical front (conv filters + dense layer, Algorithm 1 lines
+//! 8-11) maps an image to rotation-encoder angles.
+
+use crate::circuit::{CircuitBank, QuClassiConfig};
+use crate::data::IMG_SIDE;
+use crate::model::dense::Dense;
+use crate::model::exec::{CircuitExecutor, CircuitPair};
+use crate::model::segmentation::ConvFilters;
+use crate::util::Rng;
+
+const EPS: f32 = 1e-6;
+const HALF_PI: f32 = std::f32::consts::FRAC_PI_2;
+
+/// Loss family for training the class states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LossKind {
+    /// Softmax-over-fidelities cross-entropy: both class states receive
+    /// coupled gradients each sample. Sharper boundaries, but the
+    /// `f_A == f_B` saddle exists (rare seed-dependent collapse).
+    #[default]
+    Discriminative,
+    /// QuClassi's original state-learning loss: `-ln f_match` — each
+    /// class state only ever fits samples of its own class. Collapse-free
+    /// (the states are decoupled), used by the ablation bench.
+    Generative,
+}
+
+/// The full model: classical front + two variational class states.
+#[derive(Debug, Clone)]
+pub struct QuClassiModel {
+    pub config: QuClassiConfig,
+    /// theta[0] = class-A state parameters, theta[1] = class-B.
+    pub theta: [Vec<f32>; 2],
+    pub conv: ConvFilters,
+    pub dense: Dense,
+}
+
+/// Forward-pass intermediate values (kept for backprop).
+#[derive(Debug, Clone)]
+pub struct Forward {
+    pub features: Vec<f32>,
+    pub pre_angles: Vec<f32>,
+    pub angles: Vec<f32>,
+}
+
+/// Per-sample gradient bundle.
+#[derive(Debug, Clone)]
+pub struct SampleGrads {
+    pub loss: f32,
+    pub fid: [f32; 2],
+    pub d_theta: [Vec<f32>; 2],
+    /// dL/d(encoder angle); empty when classical training is disabled.
+    pub d_angles: Vec<f32>,
+    /// Circuits executed for this sample.
+    pub circuits: usize,
+}
+
+impl QuClassiModel {
+    /// Random initialization (paper: weights uniform in [0, pi]).
+    pub fn new(config: QuClassiConfig, rng: &mut Rng) -> QuClassiModel {
+        let n_p = config.n_params();
+        let init = |rng: &mut Rng| -> Vec<f32> {
+            (0..n_p).map(|_| (rng.f64() * std::f64::consts::PI) as f32).collect()
+        };
+        let conv = ConvFilters::paper(rng);
+        let dense = Dense::new(conv.out_len(IMG_SIDE), config.n_features(), rng);
+        QuClassiModel { config, theta: [init(rng), init(rng)], conv, dense }
+    }
+
+    /// Classical forward: image -> encoder angles in (0, pi).
+    ///
+    /// A sigmoid squashes the dense output into the injective encoder
+    /// range; it is smooth, so the chain rule applies for classical
+    /// backprop (unlike per-sample min/max normalization).
+    pub fn forward_classical(&self, image: &[f32]) -> Forward {
+        let features = self.conv.forward(image, IMG_SIDE);
+        let pre_angles = self.dense.forward(&features);
+        let angles = pre_angles
+            .iter()
+            .map(|&y| sigmoid(y) * std::f32::consts::PI)
+            .collect();
+        Forward { features, pre_angles, angles }
+    }
+
+    /// Fidelity of the encoded input against both class states.
+    pub fn fidelities(
+        &self,
+        exec: &dyn CircuitExecutor,
+        angles: &[f32],
+    ) -> Result<[f32; 2], String> {
+        let pairs: Vec<CircuitPair> = vec![
+            (self.theta[0].clone(), angles.to_vec()),
+            (self.theta[1].clone(), angles.to_vec()),
+        ];
+        let fids = exec.execute_bank(&self.config, &pairs)?;
+        Ok([fids[0], fids[1]])
+    }
+
+    /// Class probability of class B: softmax over fidelities.
+    pub fn prob_b(fid: [f32; 2]) -> f32 {
+        (fid[1] + EPS) / (fid[0] + fid[1] + 2.0 * EPS)
+    }
+
+    /// Predict a class index (0 = A, 1 = B) for one image.
+    pub fn predict(&self, exec: &dyn CircuitExecutor, image: &[f32]) -> Result<usize, String> {
+        let fwd = self.forward_classical(image);
+        let fid = self.fidelities(exec, &fwd.angles)?;
+        Ok(if Self::prob_b(fid) > 0.5 { 1 } else { 0 })
+    }
+
+    /// Cross-entropy loss of one sample given its fidelities.
+    pub fn loss(fid: [f32; 2], target: f32) -> f32 {
+        let p = Self::prob_b(fid).clamp(1e-6, 1.0 - 1e-6);
+        -(target * p.ln() + (1.0 - target) * (1.0 - p).ln())
+    }
+
+    /// Build the full circuit bank for one sample's gradient step and
+    /// evaluate it through `exec`; returns loss + gradients.
+    ///
+    /// Bank layout: [bank_A | bank_B | data-shift entries (optional)].
+    /// Every entry is an independent circuit — this is exactly the unit
+    /// the co-Manager distributes (Algorithm 1 lines 12-22).
+    pub fn sample_grads(
+        &self,
+        exec: &dyn CircuitExecutor,
+        fwd: &Forward,
+        target: f32,
+        train_classical: bool,
+    ) -> Result<SampleGrads, String> {
+        self.sample_grads_with(exec, fwd, target, train_classical, LossKind::Discriminative)
+    }
+
+    /// [`QuClassiModel::sample_grads`] with an explicit loss family.
+    pub fn sample_grads_with(
+        &self,
+        exec: &dyn CircuitExecutor,
+        fwd: &Forward,
+        target: f32,
+        train_classical: bool,
+        loss: LossKind,
+    ) -> Result<SampleGrads, String> {
+        let angles = &fwd.angles;
+        let bank_a = CircuitBank::new(self.config, &self.theta[0]);
+        let bank_b = CircuitBank::new(self.config, &self.theta[1]);
+        let n_a = bank_a.len();
+        let n_b = bank_b.len();
+        let d = angles.len();
+
+        let mut pairs: Vec<CircuitPair> = Vec::with_capacity(n_a + n_b + 4 * d);
+        for e in bank_a.entries() {
+            pairs.push((e.thetas.clone(), angles.clone()));
+        }
+        for e in bank_b.entries() {
+            pairs.push((e.thetas.clone(), angles.clone()));
+        }
+        if train_classical {
+            // Data-encoding gates are plain Ry/Rz: the two-term shift rule
+            // is exact for encoder-angle gradients.
+            for class in 0..2 {
+                for j in 0..d {
+                    let mut ap = angles.clone();
+                    ap[j] += HALF_PI;
+                    pairs.push((self.theta[class].clone(), ap));
+                    let mut am = angles.clone();
+                    am[j] -= HALF_PI;
+                    pairs.push((self.theta[class].clone(), am));
+                }
+            }
+        }
+
+        let fids = exec.execute_bank(&self.config, &pairs)?;
+        let (fid_a, grads_a) = bank_a.assemble(&fids[..n_a]);
+        let (fid_b, grads_b) = bank_b.assemble(&fids[n_a..n_a + n_b]);
+        let fid = [fid_a, fid_b];
+
+        // dL/d(fidelity) per the chosen loss family.
+        let (dl_dfa, dl_dfb, loss_value) = match loss {
+            LossKind::Discriminative => {
+                let p = Self::prob_b(fid).clamp(1e-6, 1.0 - 1e-6);
+                let dl_dp = (p - target) / (p * (1.0 - p));
+                let denom = (fid_a + fid_b + 2.0 * EPS).max(1e-6);
+                let dp_dfa = -(fid_b + EPS) / (denom * denom);
+                let dp_dfb = (fid_a + EPS) / (denom * denom);
+                (dl_dp * dp_dfa, dl_dp * dp_dfb, Self::loss(fid, target))
+            }
+            LossKind::Generative => {
+                // fit only the matching class state: L = -ln f_match
+                let f_match = if target > 0.5 { fid_b } else { fid_a }.max(1e-4);
+                let g = -1.0 / f_match;
+                if target > 0.5 {
+                    (0.0, g, -f_match.ln())
+                } else {
+                    (g, 0.0, -f_match.ln())
+                }
+            }
+        };
+
+        let d_theta_a: Vec<f32> = grads_a.iter().map(|g| dl_dfa * g).collect();
+        let d_theta_b: Vec<f32> = grads_b.iter().map(|g| dl_dfb * g).collect();
+
+        let mut d_angles = Vec::new();
+        if train_classical {
+            let base = n_a + n_b;
+            d_angles = vec![0.0f32; d];
+            for (class, dl_df) in [(0usize, dl_dfa), (1usize, dl_dfb)] {
+                for j in 0..d {
+                    let idx = base + class * 2 * d + 2 * j;
+                    let df_dx = (fids[idx] - fids[idx + 1]) / 2.0;
+                    d_angles[j] += dl_df * df_dx;
+                }
+            }
+        }
+
+        Ok(SampleGrads {
+            loss: loss_value,
+            fid,
+            d_theta: [d_theta_a, d_theta_b],
+            d_angles,
+            circuits: pairs.len(),
+        })
+    }
+
+    /// Backprop dL/d(angles) through sigmoid + dense + conv, accumulating
+    /// classical gradients.
+    pub fn classical_backward(
+        &self,
+        image: &[f32],
+        fwd: &Forward,
+        d_angles: &[f32],
+        grad_dense_w: &mut [f32],
+        grad_dense_b: &mut [f32],
+        grad_kernels: &mut [Vec<f32>],
+        grad_bias: &mut [f32],
+    ) {
+        // angles = pi * sigmoid(y)  =>  dangle/dy = pi * s(y)(1 - s(y))
+        let dl_dy: Vec<f32> = fwd
+            .pre_angles
+            .iter()
+            .zip(d_angles.iter())
+            .map(|(&y, &da)| {
+                let s = sigmoid(y);
+                da * std::f32::consts::PI * s * (1.0 - s)
+            })
+            .collect();
+        let dl_dfeat = self.dense.backward(&fwd.features, &dl_dy, grad_dense_w, grad_dense_b);
+        self.conv
+            .backward(image, IMG_SIDE, &fwd.features, &dl_dfeat, grad_kernels, grad_bias);
+    }
+
+    /// Circuits per full-gradient sample (for workload sizing).
+    pub fn circuits_per_sample(&self, train_classical: bool) -> usize {
+        let bank = CircuitBank::expected_len(&self.config);
+        2 * bank + if train_classical { 4 * self.config.n_features() } else { 0 }
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::exec::QsimExecutor;
+
+    fn tiny_image(rng: &mut Rng) -> Vec<f32> {
+        (0..IMG_SIDE * IMG_SIDE).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn forward_angles_in_range() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let mut rng = Rng::new(1);
+        let m = QuClassiModel::new(cfg, &mut rng);
+        let img = tiny_image(&mut rng);
+        let fwd = m.forward_classical(&img);
+        assert_eq!(fwd.angles.len(), cfg.n_features());
+        for &a in &fwd.angles {
+            assert!(a > 0.0 && a < std::f32::consts::PI);
+        }
+    }
+
+    #[test]
+    fn probabilities_are_complementary() {
+        let p = QuClassiModel::prob_b([0.8, 0.4]);
+        assert!(p < 0.5);
+        let p2 = QuClassiModel::prob_b([0.2, 0.9]);
+        assert!(p2 > 0.5);
+        assert!((QuClassiModel::prob_b([0.5, 0.5]) - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn loss_decreases_along_gradient() {
+        // One gradient step on theta must reduce the per-sample loss.
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let mut rng = Rng::new(5);
+        let mut m = QuClassiModel::new(cfg, &mut rng);
+        let img = tiny_image(&mut rng);
+        let fwd = m.forward_classical(&img);
+        let exec = QsimExecutor;
+        let g = m.sample_grads(&exec, &fwd, 1.0, false).unwrap();
+        let lr = 0.1f32;
+        for p in 0..m.theta[0].len() {
+            m.theta[0][p] -= lr * g.d_theta[0][p];
+            m.theta[1][p] -= lr * g.d_theta[1][p];
+        }
+        let fid2 = m.fidelities(&exec, &fwd.angles).unwrap();
+        let loss2 = QuClassiModel::loss(fid2, 1.0);
+        assert!(loss2 < g.loss, "loss {} -> {}", g.loss, loss2);
+    }
+
+    #[test]
+    fn classical_gradient_direction_reduces_loss() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let mut rng = Rng::new(8);
+        let mut m = QuClassiModel::new(cfg, &mut rng);
+        let img = tiny_image(&mut rng);
+        let exec = QsimExecutor;
+        let fwd = m.forward_classical(&img);
+        let g = m.sample_grads(&exec, &fwd, 0.0, true).unwrap();
+        assert_eq!(g.d_angles.len(), cfg.n_features());
+        let mut gw = vec![0.0; m.dense.w.len()];
+        let mut gb = vec![0.0; m.dense.b.len()];
+        let mut gk = vec![vec![0.0; 16]; m.conv.n_filters];
+        let mut gbias = vec![0.0; m.conv.n_filters];
+        m.classical_backward(&img, &fwd, &g.d_angles, &mut gw, &mut gb, &mut gk, &mut gbias);
+        // take a small classical step
+        let lr = 0.05f32;
+        for (w, gw) in m.dense.w.iter_mut().zip(gw.iter()) {
+            *w -= lr * gw;
+        }
+        for (b, gb) in m.dense.b.iter_mut().zip(gb.iter()) {
+            *b -= lr * gb;
+        }
+        let fwd2 = m.forward_classical(&img);
+        let fid2 = m.fidelities(&exec, &fwd2.angles).unwrap();
+        let loss2 = QuClassiModel::loss(fid2, 0.0);
+        assert!(loss2 <= g.loss + 1e-5, "loss {} -> {}", g.loss, loss2);
+    }
+
+    #[test]
+    fn generative_loss_updates_only_matching_state() {
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let mut rng = Rng::new(13);
+        let m = QuClassiModel::new(cfg, &mut rng);
+        let img = tiny_image(&mut rng);
+        let fwd = m.forward_classical(&img);
+        let g = m
+            .sample_grads_with(&QsimExecutor, &fwd, 1.0, false, LossKind::Generative)
+            .unwrap();
+        assert!(g.d_theta[0].iter().all(|&x| x == 0.0), "class-A state must be untouched");
+        assert!(g.d_theta[1].iter().any(|&x| x != 0.0), "class-B state must learn");
+        // gradient direction increases the matching fidelity
+        let mut m2 = m.clone();
+        for p in 0..m2.theta[1].len() {
+            m2.theta[1][p] -= 0.1 * g.d_theta[1][p];
+        }
+        let f_before = m.fidelities(&QsimExecutor, &fwd.angles).unwrap()[1];
+        let f_after = m2.fidelities(&QsimExecutor, &fwd.angles).unwrap()[1];
+        assert!(f_after > f_before, "{f_after} !> {f_before}");
+    }
+
+    #[test]
+    fn circuits_per_sample_accounting() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let mut rng = Rng::new(2);
+        let m = QuClassiModel::new(cfg, &mut rng);
+        // bank = 1 + 2*4 = 9 per class; classical adds 4*4 = 16
+        assert_eq!(m.circuits_per_sample(false), 18);
+        assert_eq!(m.circuits_per_sample(true), 34);
+        // verify against an actual execution count
+        let exec = crate::model::exec::CountingExecutor::new(QsimExecutor);
+        let img = tiny_image(&mut rng);
+        let fwd = m.forward_classical(&img);
+        let g = m.sample_grads(&exec, &fwd, 1.0, true).unwrap();
+        assert_eq!(g.circuits, 34);
+        assert_eq!(exec.circuits(), 34);
+    }
+}

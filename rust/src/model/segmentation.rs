@@ -1,0 +1,235 @@
+//! Task Segmentation (paper §III-A, Fig. 2) + trainable conv filters.
+//!
+//! "Based on the predefined subtask unit, such as convolutional filter
+//! size, the Task Segmentation module decomposes the original data into
+//! smaller sections." An image is cut into `w x w` windows at stride `s`
+//! (paper settings: w = 4, s = 2, nF = 4 filters); each filter produces a
+//! feature map over the windows, which is flattened and fed to the dense
+//! layer (Algorithm 1 lines 8-10).
+
+#[cfg(test)]
+use crate::data::IMG_SIDE;
+use crate::util::Rng;
+
+/// Window segmentation geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segmentation {
+    pub width: usize,
+    pub stride: usize,
+}
+
+impl Segmentation {
+    /// The paper's settings: filter width 4, stride 2.
+    pub fn paper() -> Segmentation {
+        Segmentation { width: 4, stride: 2 }
+    }
+
+    /// Number of window positions per image side.
+    pub fn out_side(&self, img_side: usize) -> usize {
+        (img_side - self.width) / self.stride + 1
+    }
+
+    /// Total windows per image.
+    pub fn n_windows(&self, img_side: usize) -> usize {
+        let o = self.out_side(img_side);
+        o * o
+    }
+
+    /// Extract all windows (each `width*width` values, row-major).
+    pub fn windows(&self, image: &[f32], img_side: usize) -> Vec<Vec<f32>> {
+        let o = self.out_side(img_side);
+        let mut out = Vec::with_capacity(o * o);
+        for wy in 0..o {
+            for wx in 0..o {
+                let mut window = Vec::with_capacity(self.width * self.width);
+                for dy in 0..self.width {
+                    for dx in 0..self.width {
+                        let y = wy * self.stride + dy;
+                        let x = wx * self.stride + dx;
+                        window.push(image[y * img_side + x]);
+                    }
+                }
+                out.push(window);
+            }
+        }
+        out
+    }
+}
+
+/// A bank of trainable convolution filters over the segmentation grid.
+#[derive(Debug, Clone)]
+pub struct ConvFilters {
+    pub seg: Segmentation,
+    pub n_filters: usize,
+    /// kernels[f] is a `width*width` kernel.
+    pub kernels: Vec<Vec<f32>>,
+    pub bias: Vec<f32>,
+}
+
+impl ConvFilters {
+    /// Paper settings: 4 filters of width 4, stride 2, random init.
+    pub fn paper(rng: &mut Rng) -> ConvFilters {
+        ConvFilters::new(Segmentation::paper(), 4, rng)
+    }
+
+    pub fn new(seg: Segmentation, n_filters: usize, rng: &mut Rng) -> ConvFilters {
+        let k = seg.width * seg.width;
+        // He-style init scaled to window size.
+        let scale = (2.0 / k as f64).sqrt();
+        let kernels = (0..n_filters)
+            .map(|_| (0..k).map(|_| (rng.normal() * scale) as f32).collect())
+            .collect();
+        ConvFilters { seg, n_filters, kernels, bias: vec![0.0; n_filters] }
+    }
+
+    /// Flattened feature length: n_filters * out_side^2.
+    pub fn out_len(&self, img_side: usize) -> usize {
+        self.n_filters * self.seg.n_windows(img_side)
+    }
+
+    /// Forward: image -> flattened feature maps (filter-major), with ReLU.
+    pub fn forward(&self, image: &[f32], img_side: usize) -> Vec<f32> {
+        let windows = self.seg.windows(image, img_side);
+        let mut out = Vec::with_capacity(self.out_len(img_side));
+        for (f, kernel) in self.kernels.iter().enumerate() {
+            for w in &windows {
+                let mut acc = self.bias[f];
+                for (k, x) in kernel.iter().zip(w.iter()) {
+                    acc += k * x;
+                }
+                out.push(acc.max(0.0)); // ReLU
+            }
+        }
+        out
+    }
+
+    /// Backward: given dL/d(features) for one image, accumulate kernel and
+    /// bias gradients. Returns nothing for the input (images are leaves).
+    pub fn backward(
+        &self,
+        image: &[f32],
+        img_side: usize,
+        features: &[f32],
+        dl_dfeat: &[f32],
+        grad_kernels: &mut [Vec<f32>],
+        grad_bias: &mut [f32],
+    ) {
+        let windows = self.seg.windows(image, img_side);
+        let n_w = windows.len();
+        assert_eq!(dl_dfeat.len(), self.n_filters * n_w);
+        for f in 0..self.n_filters {
+            for (wi, w) in windows.iter().enumerate() {
+                let idx = f * n_w + wi;
+                // ReLU gate
+                if features[idx] <= 0.0 {
+                    continue;
+                }
+                let g = dl_dfeat[idx];
+                if g == 0.0 {
+                    continue;
+                }
+                for (k, x) in grad_kernels[f].iter_mut().zip(w.iter()) {
+                    *k += g * x;
+                }
+                grad_bias[f] += g;
+            }
+        }
+    }
+
+    /// Flatten all parameters (kernels then biases) for the optimizer.
+    pub fn params_mut(&mut self) -> Vec<&mut f32> {
+        let mut v: Vec<&mut f32> = Vec::new();
+        for k in &mut self.kernels {
+            v.extend(k.iter_mut());
+        }
+        v.extend(self.bias.iter_mut());
+        v
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_filters * (self.seg.width * self.seg.width + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let seg = Segmentation::paper();
+        assert_eq!(seg.out_side(IMG_SIDE), 13);
+        assert_eq!(seg.n_windows(IMG_SIDE), 169);
+        let mut rng = Rng::new(1);
+        let conv = ConvFilters::paper(&mut rng);
+        assert_eq!(conv.out_len(IMG_SIDE), 4 * 169);
+        assert_eq!(conv.n_params(), 4 * 17);
+    }
+
+    #[test]
+    fn windows_extract_expected_pixels() {
+        // 6x6 image with pixel value = index; w=4, s=2 -> 2x2 windows.
+        let img: Vec<f32> = (0..36).map(|i| i as f32).collect();
+        let seg = Segmentation { width: 4, stride: 2 };
+        let ws = seg.windows(&img, 6);
+        assert_eq!(ws.len(), 4);
+        assert_eq!(ws[0][0], 0.0); // top-left window starts at (0,0)
+        assert_eq!(ws[1][0], 2.0); // next window starts at (0,2)
+        assert_eq!(ws[2][0], 12.0); // second row of windows starts at (2,0)
+        assert_eq!(ws[0][5], 7.0); // (1,1) within first window
+    }
+
+    #[test]
+    fn forward_computes_relu_conv() {
+        let seg = Segmentation { width: 2, stride: 2 };
+        let mut rng = Rng::new(2);
+        let mut conv = ConvFilters::new(seg, 1, &mut rng);
+        conv.kernels[0] = vec![1.0, 0.0, 0.0, -1.0];
+        conv.bias[0] = 0.0;
+        // 4x4 image
+        let img = vec![
+            1.0, 2.0, 3.0, 4.0, //
+            5.0, 6.0, 7.0, 8.0, //
+            9.0, 1.0, 2.0, 3.0, //
+            4.0, 5.0, 6.0, 7.0,
+        ];
+        let out = conv.forward(&img, 4);
+        // windows: [(0,0)] 1*1 - 6 = -5 -> relu 0; [(0,2)] 3 - 8 = -5 -> 0;
+        // [(2,0)] 9 - 5 = 4; [(2,2)] 2 - 7 = -5 -> 0
+        assert_eq!(out, vec![0.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let seg = Segmentation { width: 2, stride: 1 };
+        let mut rng = Rng::new(3);
+        let mut conv = ConvFilters::new(seg, 2, &mut rng);
+        let img: Vec<f32> = (0..9).map(|i| (i as f32 / 4.0) - 1.0).collect(); // 3x3
+        let feats = conv.forward(&img, 3);
+        // loss = sum of features (dl/dfeat = 1)
+        let dl: Vec<f32> = vec![1.0; feats.len()];
+        let mut gk = vec![vec![0.0; 4]; 2];
+        let mut gb = vec![0.0; 2];
+        conv.backward(&img, 3, &feats, &dl, &mut gk, &mut gb);
+        let eps = 1e-3f32;
+        for f in 0..2 {
+            for ki in 0..4 {
+                let orig = conv.kernels[f][ki];
+                conv.kernels[f][ki] = orig + eps;
+                let lp: f32 = conv.forward(&img, 3).iter().sum();
+                conv.kernels[f][ki] = orig - eps;
+                let lm: f32 = conv.forward(&img, 3).iter().sum();
+                conv.kernels[f][ki] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                assert!((gk[f][ki] - fd).abs() < 1e-2, "f{f} k{ki}: {} vs {fd}", gk[f][ki]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = ConvFilters::paper(&mut Rng::new(9));
+        let b = ConvFilters::paper(&mut Rng::new(9));
+        assert_eq!(a.kernels, b.kernels);
+    }
+}

@@ -1,0 +1,322 @@
+//! Algorithm 1 — the DQuLearn training driver.
+//!
+//! Epoch loop with per-epoch timers (lines 5, 24-25), per-sample circuit
+//! banks submitted through a [`CircuitExecutor`] (lines 12-22 — the
+//! executor is where distribution happens), gradient assembly, optimizer
+//! updates, and per-epoch accuracy (line 26).
+
+use crate::data::Dataset;
+use crate::model::exec::CircuitExecutor;
+use crate::model::optimizer::{OptState, Optimizer};
+use crate::model::quclassi::{LossKind, QuClassiModel};
+use crate::util::Rng;
+
+/// Training hyperparameters (defaults follow the paper's settings where
+/// it states them: lr = 0.001, epochs = 40 for accuracy runs).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub optimizer: Optimizer,
+    /// Also train the conv + dense front (adds 4·D circuits per sample).
+    pub train_classical: bool,
+    /// Classical-layer learning-rate multiplier relative to the quantum
+    /// optimizer (classical params see far noisier per-sample gradients —
+    /// a 0.1x rate prevents the encoder from collapsing to a constant).
+    pub classical_lr_scale: f32,
+    pub seed: u64,
+    /// Stop early once train accuracy reaches this (None = run all epochs).
+    pub early_stop_acc: Option<f64>,
+    /// Loss family (see [`LossKind`]).
+    pub loss: LossKind,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 40,
+            optimizer: Optimizer::adam(0.05),
+            train_classical: false,
+            classical_lr_scale: 0.1,
+            seed: 0xD0_1EA2,
+            early_stop_acc: None,
+            loss: LossKind::Discriminative,
+        }
+    }
+}
+
+/// Per-epoch record (the paper's Figures plot these).
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub wall_seconds: f64,
+    pub mean_loss: f64,
+    pub train_accuracy: f64,
+    pub circuits: usize,
+}
+
+/// Full training report.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub epochs: Vec<EpochRecord>,
+    pub test_accuracy: f64,
+    pub total_circuits: usize,
+    pub total_seconds: f64,
+}
+
+impl TrainReport {
+    pub fn final_train_accuracy(&self) -> f64 {
+        self.epochs.last().map(|e| e.train_accuracy).unwrap_or(0.0)
+    }
+
+    pub fn circuits_per_second(&self) -> f64 {
+        self.total_circuits as f64 / self.total_seconds.max(1e-9)
+    }
+}
+
+/// Algorithm-1 trainer.
+pub struct Trainer {
+    pub config: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(config: TrainConfig) -> Trainer {
+        Trainer { config }
+    }
+
+    /// Train `model` on `dataset` through `exec`.
+    pub fn train(
+        &self,
+        model: &mut QuClassiModel,
+        dataset: &Dataset,
+        exec: &dyn CircuitExecutor,
+    ) -> Result<TrainReport, String> {
+        let mut rng = Rng::new(self.config.seed);
+        let mut opt_a = OptState::new(self.config.optimizer, model.theta[0].len());
+        let mut opt_b = OptState::new(self.config.optimizer, model.theta[1].len());
+        // Classical layers always use plain SGD: adaptive optimizers
+        // normalize away the (tiny, noisy) per-sample gradient magnitudes
+        // and walk the dense layer into sigmoid saturation, collapsing the
+        // encoder to a constant (observed empirically; see DESIGN.md §9).
+        let classical_opt = Optimizer::Sgd {
+            lr: self.config.optimizer.lr() * self.config.classical_lr_scale,
+            momentum: 0.0,
+        };
+        let mut opt_dense =
+            OptState::new(classical_opt, model.dense.w.len() + model.dense.b.len());
+        let mut opt_conv = OptState::new(
+            classical_opt,
+            model.conv.n_filters * (model.conv.seg.width * model.conv.seg.width + 1),
+        );
+
+        let mut epochs = Vec::new();
+        let mut total_circuits = 0usize;
+        let t0 = std::time::Instant::now();
+        let mut order: Vec<usize> = (0..dataset.train.len()).collect();
+
+        for epoch in 0..self.config.epochs {
+            let epoch_start = std::time::Instant::now(); // line 5: epoch timer
+            rng.shuffle(&mut order);
+            let mut loss_acc = 0.0f64;
+            let mut circuits = 0usize;
+
+            for &i in &order {
+                let ex = &dataset.train[i];
+                let target = dataset.target(ex);
+                let fwd = model.forward_classical(&ex.pixels);
+                let grads = model.sample_grads_with(
+                    exec,
+                    &fwd,
+                    target,
+                    self.config.train_classical,
+                    self.config.loss,
+                )?;
+                loss_acc += grads.loss as f64;
+                circuits += grads.circuits;
+
+                // quantum updates (parameter-shift gradients)
+                opt_a.step(&mut model.theta[0], &grads.d_theta[0]);
+                opt_b.step(&mut model.theta[1], &grads.d_theta[1]);
+
+                // classical updates (chained through encoder-angle shifts)
+                if self.config.train_classical {
+                    let mut gw = vec![0.0f32; model.dense.w.len()];
+                    let mut gb = vec![0.0f32; model.dense.b.len()];
+                    let kparams = model.conv.seg.width * model.conv.seg.width;
+                    let mut gk = vec![vec![0.0f32; kparams]; model.conv.n_filters];
+                    let mut gbias = vec![0.0f32; model.conv.n_filters];
+                    model.classical_backward(
+                        &ex.pixels,
+                        &fwd,
+                        &grads.d_angles,
+                        &mut gw,
+                        &mut gb,
+                        &mut gk,
+                        &mut gbias,
+                    );
+                    // flatten dense grads
+                    let mut dense_params: Vec<f32> =
+                        model.dense.w.iter().chain(model.dense.b.iter()).copied().collect();
+                    let dense_grads: Vec<f32> = gw.iter().chain(gb.iter()).copied().collect();
+                    opt_dense.step(&mut dense_params, &dense_grads);
+                    let (w_new, b_new) = dense_params.split_at(model.dense.w.len());
+                    model.dense.w.copy_from_slice(w_new);
+                    model.dense.b.copy_from_slice(b_new);
+                    // flatten conv grads
+                    let mut conv_params: Vec<f32> = model
+                        .conv
+                        .kernels
+                        .iter()
+                        .flatten()
+                        .chain(model.conv.bias.iter())
+                        .copied()
+                        .collect();
+                    let conv_grads: Vec<f32> =
+                        gk.iter().flatten().chain(gbias.iter()).copied().collect();
+                    opt_conv.step(&mut conv_params, &conv_grads);
+                    let mut off = 0;
+                    for k in &mut model.conv.kernels {
+                        k.copy_from_slice(&conv_params[off..off + kparams]);
+                        off += kparams;
+                    }
+                    model.conv.bias.copy_from_slice(&conv_params[off..]);
+                }
+            }
+
+            let train_accuracy = self.accuracy(model, exec, dataset, true)?;
+            let rec = EpochRecord {
+                epoch,
+                wall_seconds: epoch_start.elapsed().as_secs_f64(), // line 25
+                mean_loss: loss_acc / dataset.train.len().max(1) as f64,
+                train_accuracy,
+                circuits,
+            };
+            crate::log_debug!(
+                "trainer",
+                "epoch {epoch}: loss={:.4} acc={:.3} circuits={circuits} ({:.2}s)",
+                rec.mean_loss,
+                rec.train_accuracy,
+                rec.wall_seconds
+            );
+            total_circuits += circuits;
+            epochs.push(rec);
+            if let Some(stop) = self.config.early_stop_acc {
+                if train_accuracy >= stop {
+                    break;
+                }
+            }
+        }
+
+        let test_accuracy = self.accuracy(model, exec, dataset, false)?;
+        Ok(TrainReport {
+            epochs,
+            test_accuracy,
+            total_circuits,
+            total_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Accuracy over the train or test split.
+    pub fn accuracy(
+        &self,
+        model: &QuClassiModel,
+        exec: &dyn CircuitExecutor,
+        dataset: &Dataset,
+        train_split: bool,
+    ) -> Result<f64, String> {
+        let split = if train_split { &dataset.train } else { &dataset.test };
+        if split.is_empty() {
+            return Ok(0.0);
+        }
+        let mut correct = 0usize;
+        for ex in split {
+            let pred = model.predict(exec, &ex.pixels)?;
+            let want = if dataset.target(ex) > 0.5 { 1 } else { 0 };
+            if pred == want {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / split.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::QuClassiConfig;
+    use crate::model::exec::{CountingExecutor, QsimExecutor};
+
+    fn toy_dataset() -> Dataset {
+        Dataset::binary_pair(None, 3, 9, 12, 77)
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let mut rng = Rng::new(42);
+        let mut model = QuClassiModel::new(cfg, &mut rng);
+        let ds = toy_dataset();
+        let exec = QsimExecutor;
+        let trainer = Trainer::new(TrainConfig {
+            epochs: 10,
+            optimizer: Optimizer::adam(0.05),
+            train_classical: true,
+            classical_lr_scale: 0.1,
+            seed: 7,
+            early_stop_acc: None,
+            loss: LossKind::Discriminative,
+        });
+        let report = trainer.train(&mut model, &ds, &exec).unwrap();
+        assert_eq!(report.epochs.len(), 10);
+        let first = report.epochs.first().unwrap().mean_loss;
+        let last = report.epochs.last().unwrap().mean_loss;
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+        assert!(
+            report.final_train_accuracy() >= 0.7,
+            "accuracy too low: {}",
+            report.final_train_accuracy()
+        );
+    }
+
+    #[test]
+    fn circuit_accounting_is_consistent() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let mut rng = Rng::new(1);
+        let mut model = QuClassiModel::new(cfg, &mut rng);
+        let ds = toy_dataset();
+        let exec = CountingExecutor::new(QsimExecutor);
+        let trainer = Trainer::new(TrainConfig {
+            epochs: 1,
+            optimizer: Optimizer::sgd(0.05),
+            train_classical: false,
+            classical_lr_scale: 0.1,
+            seed: 3,
+            early_stop_acc: None,
+            loss: LossKind::Discriminative,
+        });
+        let report = trainer.train(&mut model, &ds, &exec).unwrap();
+        // per sample: 2 banks of 9 = 18 circuits
+        let expected_train = 18 * ds.train.len();
+        assert_eq!(report.total_circuits, expected_train);
+        // counting executor additionally saw accuracy-evaluation circuits
+        assert!(exec.circuits() as usize > expected_train);
+    }
+
+    #[test]
+    fn early_stopping_works() {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let mut rng = Rng::new(2);
+        let mut model = QuClassiModel::new(cfg, &mut rng);
+        let ds = toy_dataset();
+        let trainer = Trainer::new(TrainConfig {
+            epochs: 50,
+            optimizer: Optimizer::adam(0.1),
+            train_classical: true,
+            classical_lr_scale: 0.1,
+            seed: 5,
+            early_stop_acc: Some(0.75),
+            loss: LossKind::Discriminative,
+        });
+        let report = trainer.train(&mut model, &ds, &QsimExecutor).unwrap();
+        assert!(report.epochs.len() < 50, "early stop never triggered");
+    }
+}

@@ -1,0 +1,128 @@
+//! Length-prefixed message framing.
+//!
+//! Wire layout: 4-byte big-endian payload length, then that many bytes of
+//! UTF-8 JSON. A hard size cap protects both sides from corrupt frames.
+
+use std::io::{Read, Write};
+
+use crate::wire::{self, Value};
+
+/// Maximum accepted frame payload (16 MiB) — a full 32-circuit bank of
+/// q=7 parameters is ~100 KiB, so this is generous but bounded.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Framing/decoding failure.
+#[derive(Debug)]
+pub enum FrameError {
+    Io(std::io::Error),
+    TooLarge(u32),
+    BadJson(String),
+    BadUtf8,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+            FrameError::TooLarge(n) => write!(f, "frame of {n} bytes exceeds cap {MAX_FRAME}"),
+            FrameError::BadJson(e) => write!(f, "frame payload is not valid json: {e}"),
+            FrameError::BadUtf8 => write!(f, "frame payload is not utf-8"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+/// Write one value as a frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, v: &Value) -> Result<(), FrameError> {
+    let payload = wire::to_string(v);
+    let bytes = payload.as_bytes();
+    if bytes.len() as u64 > MAX_FRAME as u64 {
+        return Err(FrameError::TooLarge(bytes.len() as u32));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Value>, FrameError> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(FrameError::TooLarge(len));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf).map_err(|_| FrameError::BadUtf8)?;
+    wire::parse(text).map(Some).map_err(|e| FrameError::BadJson(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn round_trip_single() {
+        let v = Value::obj().with("op", "heartbeat").with("worker", 3u64);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &v).unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), Some(v));
+        assert_eq!(read_frame(&mut cur).unwrap(), None); // clean EOF
+    }
+
+    #[test]
+    fn round_trip_multiple() {
+        let mut buf = Vec::new();
+        for i in 0..10u64 {
+            write_frame(&mut buf, &Value::obj().with("i", i)).unwrap();
+        }
+        let mut cur = Cursor::new(buf);
+        for i in 0..10u64 {
+            let v = read_frame(&mut cur).unwrap().unwrap();
+            assert_eq!(v.req_u64("i").unwrap(), i);
+        }
+        assert_eq!(read_frame(&mut cur).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_be_bytes());
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::TooLarge(_))));
+    }
+
+    #[test]
+    fn truncated_payload_is_io_error() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_be_bytes());
+        buf.extend_from_slice(b"short");
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn corrupt_json_detected() {
+        let mut buf = Vec::new();
+        let payload = b"{not json";
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(payload);
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::BadJson(_))));
+    }
+}

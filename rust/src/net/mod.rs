@@ -1,0 +1,11 @@
+//! RPC substrate: framed JSON over TCP (the paper used RPyC).
+//!
+//! * [`frame`] — length-prefixed framing over any `Read + Write` stream.
+//! * [`rpc`] — request/response server and client on top of frames, plus
+//!   an in-process channel transport so tests and the `--in-proc` mode
+//!   run the identical protocol without sockets.
+
+pub mod frame;
+pub mod rpc;
+
+pub use rpc::{InProcHub, RpcClient, RpcError, RpcHandler, RpcServer};

@@ -1,0 +1,392 @@
+//! Request/response RPC over framed JSON.
+//!
+//! Server: one OS thread per connection (the worker counts here are
+//! single digits — the paper evaluates up to 4 workers + 4 clients — so
+//! thread-per-connection is the simplest correct design; the DES handles
+//! the thousands-of-events regime instead).
+//!
+//! Protocol envelope: `{"id": n, "op": "...", ...params}` →
+//! `{"id": n, "ok": true, ...result}` or `{"id": n, "ok": false, "error": "..."}`.
+//!
+//! [`InProcHub`] provides the identical call interface between threads of
+//! one process without sockets — tests and `--in-proc` mode use it.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::frame::{read_frame, write_frame, FrameError};
+use crate::wire::Value;
+
+/// RPC failure modes.
+#[derive(Debug)]
+pub enum RpcError {
+    Io(String),
+    Remote(String),
+    Protocol(String),
+    Closed,
+}
+
+impl std::fmt::Display for RpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RpcError::Io(e) => write!(f, "rpc io error: {e}"),
+            RpcError::Remote(e) => write!(f, "remote error: {e}"),
+            RpcError::Protocol(e) => write!(f, "protocol error: {e}"),
+            RpcError::Closed => write!(f, "connection closed"),
+        }
+    }
+}
+
+impl std::error::Error for RpcError {}
+
+impl From<FrameError> for RpcError {
+    fn from(e: FrameError) -> Self {
+        RpcError::Io(e.to_string())
+    }
+}
+
+/// A request handler: `op` and params in, result fields out (an object),
+/// or a string error that is reported to the caller.
+pub trait RpcHandler: Send + Sync + 'static {
+    fn handle(&self, op: &str, params: &Value) -> Result<Value, String>;
+}
+
+impl<F> RpcHandler for F
+where
+    F: Fn(&str, &Value) -> Result<Value, String> + Send + Sync + 'static,
+{
+    fn handle(&self, op: &str, params: &Value) -> Result<Value, String> {
+        self(op, params)
+    }
+}
+
+/// Thread-per-connection TCP RPC server.
+pub struct RpcServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind and start serving. `addr` may use port 0 for an ephemeral port;
+    /// the bound address is available via [`RpcServer::local_addr`].
+    pub fn serve<A: ToSocketAddrs>(addr: A, handler: Arc<dyn RpcHandler>) -> std::io::Result<RpcServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("rpc-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let h = handler.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("rpc-conn".into())
+                                .spawn(move || serve_connection(stream, h, stop3));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn rpc-accept");
+        Ok(RpcServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_connection(stream: TcpStream, handler: Arc<dyn RpcHandler>, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = BufWriter::new(stream);
+    while !stop.load(Ordering::Relaxed) {
+        let req = match read_frame(&mut reader) {
+            Ok(Some(v)) => v,
+            Ok(None) => break, // peer closed
+            Err(FrameError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue; // read timeout: poll the stop flag, keep waiting
+            }
+            Err(_) => break,
+        };
+        let resp = dispatch(&*handler, &req);
+        if write_frame(&mut writer, &resp).is_err() {
+            break;
+        }
+    }
+}
+
+fn dispatch(handler: &dyn RpcHandler, req: &Value) -> Value {
+    let id = req.get("id").cloned().unwrap_or(Value::Null);
+    let op = match req.get("op").and_then(Value::as_str) {
+        Some(op) => op,
+        None => {
+            return Value::obj()
+                .with("id", "?")
+                .with("ok", false)
+                .with("error", "missing 'op'")
+        }
+    };
+    match handler.handle(op, req) {
+        Ok(mut result) => {
+            if !matches!(result, Value::Obj(_)) {
+                result = Value::obj().with("value", result);
+            }
+            result.set("id", id);
+            result.set("ok", true);
+            result
+        }
+        Err(msg) => {
+            let mut v = Value::obj().with("ok", false).with("error", msg);
+            v.set("id", id);
+            v
+        }
+    }
+}
+
+/// Blocking RPC client; safe for concurrent use (calls serialize on an
+/// internal mutex — fine at the message rates the coordinator produces).
+pub struct RpcClient {
+    inner: Mutex<ClientInner>,
+    next_id: AtomicU64,
+}
+
+enum ClientInner {
+    Tcp { reader: BufReader<TcpStream>, writer: BufWriter<TcpStream> },
+    Chan { tx: mpsc::Sender<Value>, rx: mpsc::Receiver<Value> },
+}
+
+impl RpcClient {
+    /// Connect over TCP, retrying for up to `timeout` (server may still be
+    /// starting).
+    pub fn connect<A: ToSocketAddrs + Clone>(addr: A, timeout: Duration) -> Result<RpcClient, RpcError> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr.clone()) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    let reader =
+                        BufReader::new(stream.try_clone().map_err(|e| RpcError::Io(e.to_string()))?);
+                    let writer = BufWriter::new(stream);
+                    return Ok(RpcClient {
+                        inner: Mutex::new(ClientInner::Tcp { reader, writer }),
+                        next_id: AtomicU64::new(1),
+                    });
+                }
+                Err(e) => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(RpcError::Io(format!("connect failed: {e}")));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    /// Issue one call. `params` must be an object; `op` and `id` are added.
+    pub fn call(&self, op: &str, mut params: Value) -> Result<Value, RpcError> {
+        if !matches!(params, Value::Obj(_)) {
+            return Err(RpcError::Protocol("params must be an object".into()));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        params.set("op", op);
+        params.set("id", id);
+        let mut inner = self.inner.lock().expect("rpc client poisoned");
+        let resp = match &mut *inner {
+            ClientInner::Tcp { reader, writer } => {
+                write_frame(writer, &params)?;
+                loop {
+                    match read_frame(reader) {
+                        Ok(Some(v)) => break v,
+                        Ok(None) => return Err(RpcError::Closed),
+                        Err(FrameError::Io(e))
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                            ) =>
+                        {
+                            continue
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+            }
+            ClientInner::Chan { tx, rx } => {
+                tx.send(params).map_err(|_| RpcError::Closed)?;
+                rx.recv().map_err(|_| RpcError::Closed)?
+            }
+        };
+        let got_id = resp.get("id").and_then(Value::as_u64);
+        if got_id != Some(id) {
+            return Err(RpcError::Protocol(format!("response id mismatch: {got_id:?} != {id}")));
+        }
+        if resp.get("ok").and_then(Value::as_bool) == Some(true) {
+            Ok(resp)
+        } else {
+            Err(RpcError::Remote(
+                resp.get("error").and_then(Value::as_str).unwrap_or("unknown").to_string(),
+            ))
+        }
+    }
+}
+
+/// In-process "network": hands out [`RpcClient`]s whose calls are served
+/// by a handler thread, exercising the same envelope/dispatch code paths
+/// as TCP.
+pub struct InProcHub {
+    handler: Arc<dyn RpcHandler>,
+}
+
+impl InProcHub {
+    pub fn new(handler: Arc<dyn RpcHandler>) -> InProcHub {
+        InProcHub { handler }
+    }
+
+    /// Create a client; a dedicated service thread dispatches its calls.
+    pub fn client(&self) -> RpcClient {
+        let (req_tx, req_rx) = mpsc::channel::<Value>();
+        let (resp_tx, resp_rx) = mpsc::channel::<Value>();
+        let handler = self.handler.clone();
+        std::thread::Builder::new()
+            .name("rpc-inproc".into())
+            .spawn(move || {
+                while let Ok(req) = req_rx.recv() {
+                    let resp = dispatch(&*handler, &req);
+                    if resp_tx.send(resp).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn rpc-inproc");
+        RpcClient {
+            inner: Mutex::new(ClientInner::Chan { tx: req_tx, rx: resp_rx }),
+            next_id: AtomicU64::new(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_handler() -> Arc<dyn RpcHandler> {
+        Arc::new(|op: &str, params: &Value| -> Result<Value, String> {
+            match op {
+                "echo" => Ok(Value::obj().with("echoed", params.get("msg").cloned().unwrap_or(Value::Null))),
+                "add" => {
+                    let a = params.req_f64("a")?;
+                    let b = params.req_f64("b")?;
+                    Ok(Value::obj().with("sum", a + b))
+                }
+                "fail" => Err("deliberate failure".to_string()),
+                _ => Err(format!("unknown op {op}")),
+            }
+        })
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
+        let resp = client.call("add", Value::obj().with("a", 2.0).with("b", 40.0)).unwrap();
+        assert_eq!(resp.req_f64("sum").unwrap(), 42.0);
+    }
+
+    #[test]
+    fn tcp_many_sequential_calls() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
+        for i in 0..50 {
+            let r = client
+                .call("add", Value::obj().with("a", i as f64).with("b", 1.0))
+                .unwrap();
+            assert_eq!(r.req_f64("sum").unwrap(), i as f64 + 1.0);
+        }
+    }
+
+    #[test]
+    fn remote_error_propagates() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
+        match client.call("fail", Value::obj()) {
+            Err(RpcError::Remote(msg)) => assert!(msg.contains("deliberate")),
+            other => panic!("expected remote error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_op_is_remote_error() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
+        assert!(matches!(client.call("nope", Value::obj()), Err(RpcError::Remote(_))));
+    }
+
+    #[test]
+    fn multiple_clients_one_server() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let addr = server.local_addr();
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let client = RpcClient::connect(addr, Duration::from_secs(2)).unwrap();
+                    for i in 0..20 {
+                        let r = client
+                            .call("add", Value::obj().with("a", t as f64).with("b", i as f64))
+                            .unwrap();
+                        assert_eq!(r.req_f64("sum").unwrap(), (t + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn inproc_matches_tcp_semantics() {
+        let hub = InProcHub::new(echo_handler());
+        let client = hub.client();
+        let r = client.call("echo", Value::obj().with("msg", "hi")).unwrap();
+        assert_eq!(r.get("echoed").unwrap().as_str(), Some("hi"));
+        assert!(matches!(client.call("fail", Value::obj()), Err(RpcError::Remote(_))));
+    }
+
+    #[test]
+    fn server_shutdown_unblocks() {
+        let mut server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        server.shutdown(); // must not hang
+    }
+}

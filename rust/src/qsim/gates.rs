@@ -1,0 +1,351 @@
+//! Gate set: IR enum + matrix constructors.
+//!
+//! The [`Gate`] enum is the circuit IR shared by the whole stack
+//! (builder, wire protocol, simulator). Matrix constructors mirror
+//! `python/compile/kernels/ref.py` exactly.
+
+use super::complex::C64;
+use crate::wire::Value;
+
+/// A quantum gate instance (operands + parameter).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Gate {
+    /// Hadamard.
+    H { q: usize },
+    /// Rotation around X.
+    Rx { q: usize, theta: f64 },
+    /// Rotation around Y.
+    Ry { q: usize, theta: f64 },
+    /// Rotation around Z.
+    Rz { q: usize, theta: f64 },
+    /// Two-qubit YY rotation.
+    Ryy { q0: usize, q1: usize, theta: f64 },
+    /// Two-qubit ZZ rotation.
+    Rzz { q0: usize, q1: usize, theta: f64 },
+    /// Controlled Ry.
+    Cry { control: usize, target: usize, theta: f64 },
+    /// Controlled Rz.
+    Crz { control: usize, target: usize, theta: f64 },
+    /// Controlled NOT.
+    Cx { control: usize, target: usize },
+    /// Fredkin (controlled swap).
+    Cswap { control: usize, a: usize, b: usize },
+}
+
+impl Gate {
+    /// Qubits this gate touches.
+    pub fn qubits(&self) -> Vec<usize> {
+        match *self {
+            Gate::H { q } | Gate::Rx { q, .. } | Gate::Ry { q, .. } | Gate::Rz { q, .. } => vec![q],
+            Gate::Ryy { q0, q1, .. } | Gate::Rzz { q0, q1, .. } => vec![q0, q1],
+            Gate::Cry { control, target, .. } | Gate::Crz { control, target, .. } => {
+                vec![control, target]
+            }
+            Gate::Cx { control, target } => vec![control, target],
+            Gate::Cswap { control, a, b } => vec![control, a, b],
+        }
+    }
+
+    /// The rotation angle, if parameterized.
+    pub fn theta(&self) -> Option<f64> {
+        match *self {
+            Gate::Rx { theta, .. }
+            | Gate::Ry { theta, .. }
+            | Gate::Rz { theta, .. }
+            | Gate::Ryy { theta, .. }
+            | Gate::Rzz { theta, .. }
+            | Gate::Cry { theta, .. }
+            | Gate::Crz { theta, .. } => Some(theta),
+            _ => None,
+        }
+    }
+
+    /// Replace the rotation angle (no-op for unparameterized gates).
+    pub fn with_theta(&self, new: f64) -> Gate {
+        let mut g = self.clone();
+        match &mut g {
+            Gate::Rx { theta, .. }
+            | Gate::Ry { theta, .. }
+            | Gate::Rz { theta, .. }
+            | Gate::Ryy { theta, .. }
+            | Gate::Rzz { theta, .. }
+            | Gate::Cry { theta, .. }
+            | Gate::Crz { theta, .. } => *theta = new,
+            _ => {}
+        }
+        g
+    }
+
+    /// Is this a controlled rotation (needs the 4-term shift rule)?
+    pub fn is_controlled_rotation(&self) -> bool {
+        matches!(self, Gate::Cry { .. } | Gate::Crz { .. })
+    }
+
+    /// Wire encoding: `[name, operands..., theta?]`.
+    pub fn to_wire(&self) -> Value {
+        let mut arr: Vec<Value> = Vec::new();
+        let name = match self {
+            Gate::H { .. } => "h",
+            Gate::Rx { .. } => "rx",
+            Gate::Ry { .. } => "ry",
+            Gate::Rz { .. } => "rz",
+            Gate::Ryy { .. } => "ryy",
+            Gate::Rzz { .. } => "rzz",
+            Gate::Cry { .. } => "cry",
+            Gate::Crz { .. } => "crz",
+            Gate::Cx { .. } => "cx",
+            Gate::Cswap { .. } => "cswap",
+        };
+        arr.push(Value::Str(name.to_string()));
+        for q in self.qubits() {
+            arr.push(Value::Num(q as f64));
+        }
+        if let Some(t) = self.theta() {
+            arr.push(Value::Num(t));
+        }
+        Value::Arr(arr)
+    }
+
+    /// Decode the wire encoding.
+    pub fn from_wire(v: &Value) -> Result<Gate, String> {
+        let arr = v.as_arr().ok_or("gate must be an array")?;
+        let name = arr.first().and_then(Value::as_str).ok_or("gate missing name")?;
+        let num = |i: usize| -> Result<usize, String> {
+            arr.get(i).and_then(Value::as_usize).ok_or_else(|| format!("gate {name}: bad operand {i}"))
+        };
+        let fnum = |i: usize| -> Result<f64, String> {
+            arr.get(i).and_then(Value::as_f64).ok_or_else(|| format!("gate {name}: bad angle"))
+        };
+        Ok(match name {
+            "h" => Gate::H { q: num(1)? },
+            "rx" => Gate::Rx { q: num(1)?, theta: fnum(2)? },
+            "ry" => Gate::Ry { q: num(1)?, theta: fnum(2)? },
+            "rz" => Gate::Rz { q: num(1)?, theta: fnum(2)? },
+            "ryy" => Gate::Ryy { q0: num(1)?, q1: num(2)?, theta: fnum(3)? },
+            "rzz" => Gate::Rzz { q0: num(1)?, q1: num(2)?, theta: fnum(3)? },
+            "cry" => Gate::Cry { control: num(1)?, target: num(2)?, theta: fnum(3)? },
+            "crz" => Gate::Crz { control: num(1)?, target: num(2)?, theta: fnum(3)? },
+            "cx" => Gate::Cx { control: num(1)?, target: num(2)? },
+            "cswap" => Gate::Cswap { control: num(1)?, a: num(2)?, b: num(3)? },
+            other => return Err(format!("unknown gate '{other}'")),
+        })
+    }
+}
+
+pub const INV_SQRT2: f64 = std::f64::consts::FRAC_1_SQRT_2;
+
+/// 2x2 matrix in row-major order.
+pub type Mat2 = [[C64; 2]; 2];
+/// 4x4 matrix in row-major order; index = 2*b(q0) + b(q1).
+pub type Mat4 = [[C64; 4]; 4];
+
+pub fn h_matrix() -> Mat2 {
+    let s = C64::from_re(INV_SQRT2);
+    [[s, s], [s, -s]]
+}
+
+pub fn rx_matrix(theta: f64) -> Mat2 {
+    let c = C64::from_re((theta / 2.0).cos());
+    let mis = C64::new(0.0, -(theta / 2.0).sin());
+    [[c, mis], [mis, c]]
+}
+
+pub fn ry_matrix(theta: f64) -> Mat2 {
+    let c = C64::from_re((theta / 2.0).cos());
+    let s = C64::from_re((theta / 2.0).sin());
+    [[c, -s], [s, c]]
+}
+
+pub fn rz_matrix(theta: f64) -> Mat2 {
+    let em = C64::cis(-theta / 2.0);
+    let ep = C64::cis(theta / 2.0);
+    [[em, C64::ZERO], [C64::ZERO, ep]]
+}
+
+pub fn ryy_matrix(theta: f64) -> Mat4 {
+    let c = C64::from_re((theta / 2.0).cos());
+    let is = C64::new(0.0, (theta / 2.0).sin());
+    let z = C64::ZERO;
+    [
+        [c, z, z, is],
+        [z, c, -is, z],
+        [z, -is, c, z],
+        [is, z, z, c],
+    ]
+}
+
+pub fn rzz_matrix(theta: f64) -> Mat4 {
+    let em = C64::cis(-theta / 2.0);
+    let ep = C64::cis(theta / 2.0);
+    let z = C64::ZERO;
+    [
+        [em, z, z, z],
+        [z, ep, z, z],
+        [z, z, ep, z],
+        [z, z, z, em],
+    ]
+}
+
+/// CRY with control = first index of the pair.
+pub fn cry_matrix(theta: f64) -> Mat4 {
+    let c = C64::from_re((theta / 2.0).cos());
+    let s = C64::from_re((theta / 2.0).sin());
+    let o = C64::ONE;
+    let z = C64::ZERO;
+    [
+        [o, z, z, z],
+        [z, o, z, z],
+        [z, z, c, -s],
+        [z, z, s, c],
+    ]
+}
+
+/// CRZ with control = first index of the pair.
+pub fn crz_matrix(theta: f64) -> Mat4 {
+    let em = C64::cis(-theta / 2.0);
+    let ep = C64::cis(theta / 2.0);
+    let o = C64::ONE;
+    let z = C64::ZERO;
+    [
+        [o, z, z, z],
+        [z, o, z, z],
+        [z, z, em, z],
+        [z, z, z, ep],
+    ]
+}
+
+pub fn cx_matrix() -> Mat4 {
+    let o = C64::ONE;
+    let z = C64::ZERO;
+    [
+        [o, z, z, z],
+        [z, o, z, z],
+        [z, z, z, o],
+        [z, z, o, z],
+    ]
+}
+
+/// Reindex a pair matrix from (a, b) ordering to (b, a) ordering.
+pub fn swap_pair_order(m: &Mat4) -> Mat4 {
+    const PERM: [usize; 4] = [0, 2, 1, 3];
+    let mut out = [[C64::ZERO; 4]; 4];
+    for (i, pi) in PERM.iter().enumerate() {
+        for (j, pj) in PERM.iter().enumerate() {
+            out[i][j] = m[*pi][*pj];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_unitary2(m: &Mat2) -> bool {
+        // m * m^dagger == I
+        let mut prod = [[C64::ZERO; 2]; 2];
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    prod[i][j] += m[i][k] * m[j][k].conj();
+                }
+            }
+        }
+        (0..2).all(|i| {
+            (0..2).all(|j| {
+                let want = if i == j { 1.0 } else { 0.0 };
+                (prod[i][j].re - want).abs() < 1e-12 && prod[i][j].im.abs() < 1e-12
+            })
+        })
+    }
+
+    fn is_unitary4(m: &Mat4) -> bool {
+        let mut prod = [[C64::ZERO; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    prod[i][j] += m[i][k] * m[j][k].conj();
+                }
+            }
+        }
+        (0..4).all(|i| {
+            (0..4).all(|j| {
+                let want = if i == j { 1.0 } else { 0.0 };
+                (prod[i][j].re - want).abs() < 1e-12 && prod[i][j].im.abs() < 1e-12
+            })
+        })
+    }
+
+    #[test]
+    fn all_matrices_unitary() {
+        for theta in [-2.1, -0.5, 0.0, 0.7, 3.9] {
+            assert!(is_unitary2(&rx_matrix(theta)));
+            assert!(is_unitary2(&ry_matrix(theta)));
+            assert!(is_unitary2(&rz_matrix(theta)));
+            assert!(is_unitary4(&ryy_matrix(theta)));
+            assert!(is_unitary4(&rzz_matrix(theta)));
+            assert!(is_unitary4(&cry_matrix(theta)));
+            assert!(is_unitary4(&crz_matrix(theta)));
+        }
+        assert!(is_unitary2(&h_matrix()));
+        assert!(is_unitary4(&cx_matrix()));
+    }
+
+    #[test]
+    fn zero_angle_is_identity() {
+        let m = ry_matrix(0.0);
+        assert_eq!(m[0][0], C64::ONE);
+        assert_eq!(m[0][1], C64::ZERO);
+        let m4 = cry_matrix(0.0);
+        assert_eq!(m4[2][2], C64::ONE);
+        assert_eq!(m4[3][3], C64::ONE);
+    }
+
+    #[test]
+    fn wire_round_trip_all_gates() {
+        let gates = vec![
+            Gate::H { q: 0 },
+            Gate::Rx { q: 1, theta: 0.5 },
+            Gate::Ry { q: 2, theta: -1.25 },
+            Gate::Rz { q: 0, theta: 3.0 },
+            Gate::Ryy { q0: 1, q1: 2, theta: 0.75 },
+            Gate::Rzz { q0: 0, q1: 3, theta: -0.5 },
+            Gate::Cry { control: 1, target: 2, theta: 1.0 },
+            Gate::Crz { control: 2, target: 1, theta: 2.0 },
+            Gate::Cx { control: 0, target: 1 },
+            Gate::Cswap { control: 0, a: 1, b: 3 },
+        ];
+        for g in gates {
+            let w = g.to_wire();
+            let back = Gate::from_wire(&w).unwrap();
+            assert_eq!(g, back);
+        }
+    }
+
+    #[test]
+    fn from_wire_rejects_garbage() {
+        assert!(Gate::from_wire(&Value::Null).is_err());
+        assert!(Gate::from_wire(&Value::Arr(vec![Value::Str("bogus".into())])).is_err());
+        assert!(Gate::from_wire(&Value::Arr(vec![Value::Str("ry".into())])).is_err());
+    }
+
+    #[test]
+    fn theta_replacement() {
+        let g = Gate::Cry { control: 1, target: 2, theta: 0.5 };
+        let g2 = g.with_theta(1.5);
+        assert_eq!(g2.theta(), Some(1.5));
+        assert!(g2.is_controlled_rotation());
+        assert_eq!(Gate::H { q: 0 }.with_theta(9.0), Gate::H { q: 0 });
+    }
+
+    #[test]
+    fn pair_order_swap_involutive() {
+        let m = cry_matrix(0.8);
+        let back = swap_pair_order(&swap_pair_order(&m));
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(m[i][j], back[i][j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Measurement: exact expectations, shot sampling, swap-test readout.
+
+use super::state::State;
+use crate::util::Rng;
+
+/// Exact swap-test fidelity readout: `2 * P(ancilla=0) - 1`, where the
+/// ancilla is qubit 0 (the QuClassi layout).
+pub fn swap_test_fidelity(state: &State) -> f64 {
+    2.0 * state.prob_zero(0) - 1.0
+}
+
+/// Shot-sampled estimate of P(qubit = |0>).
+///
+/// The AOT artifacts return exact expectations (infinite-shot limit);
+/// this models the finite-shot noise a real quantum backend would have —
+/// used by the shot-ablation bench.
+pub fn sample_prob_zero(state: &State, qubit: usize, shots: usize, rng: &mut Rng) -> f64 {
+    let p = state.prob_zero(qubit);
+    let mut zeros = 0usize;
+    for _ in 0..shots {
+        if rng.f64() < p {
+            zeros += 1;
+        }
+    }
+    zeros as f64 / shots as f64
+}
+
+/// Shot-sampled swap-test fidelity.
+pub fn sample_swap_test_fidelity(state: &State, shots: usize, rng: &mut Rng) -> f64 {
+    2.0 * sample_prob_zero(state, 0, shots, rng) - 1.0
+}
+
+/// Sample full computational-basis measurement outcomes (indices).
+pub fn sample_shots(state: &State, shots: usize, rng: &mut Rng) -> Vec<usize> {
+    // Inverse-CDF sampling over the amplitude distribution.
+    let probs: Vec<f64> = state.amps().iter().map(|a| a.norm_sq()).collect();
+    let mut cdf = Vec::with_capacity(probs.len());
+    let mut acc = 0.0;
+    for p in &probs {
+        acc += p;
+        cdf.push(acc);
+    }
+    let total = acc; // ~1.0; guard against drift
+    (0..shots)
+        .map(|_| {
+            let u = rng.f64() * total;
+            match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(cdf.len() - 1),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qsim::gates;
+
+    #[test]
+    fn swap_test_on_zero_state() {
+        // H on ancilla of |000..>, no CSWAP effect, H again -> P0 = 1.
+        let mut s = State::zero(3);
+        s.apply_h(0);
+        s.apply_h(0);
+        assert!((swap_test_fidelity(&s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_prob_converges() {
+        let mut s = State::zero(2);
+        s.apply_1q(&gates::ry_matrix(std::f64::consts::FRAC_PI_2), 0); // P0 = cos^2(pi/4) = 0.5
+        let mut rng = Rng::new(3);
+        let est = sample_prob_zero(&s, 0, 100_000, &mut rng);
+        assert!((est - 0.5).abs() < 0.01, "est={est}");
+    }
+
+    #[test]
+    fn shot_histogram_matches_distribution() {
+        let mut s = State::zero(2);
+        s.apply_h(0);
+        s.apply_h(1); // uniform over 4 outcomes
+        let mut rng = Rng::new(5);
+        let shots = sample_shots(&s, 40_000, &mut rng);
+        let mut counts = [0usize; 4];
+        for idx in shots {
+            counts[idx] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / 40_000.0;
+            assert!((frac - 0.25).abs() < 0.02, "frac={frac}");
+        }
+    }
+
+    #[test]
+    fn sampled_fidelity_tracks_exact() {
+        let mut s = State::zero(3);
+        s.apply_ry(0.9, 1);
+        s.apply_h(0);
+        s.apply_cswap(0, 1, 2);
+        s.apply_h(0);
+        let exact = swap_test_fidelity(&s);
+        let mut rng = Rng::new(7);
+        let est = sample_swap_test_fidelity(&s, 200_000, &mut rng);
+        assert!((est - exact).abs() < 0.01, "exact={exact} est={est}");
+    }
+}

@@ -1,0 +1,24 @@
+//! From-scratch statevector quantum simulator (the "quantum worker"
+//! device substrate).
+//!
+//! The paper's quantum workers are Qiskit simulators; ours are (a) the
+//! AOT-compiled JAX/Pallas artifacts executed via PJRT (`runtime/`) and
+//! (b) this pure-Rust simulator, which serves as the fallback executor
+//! for circuit shapes without an artifact, the cross-check oracle for the
+//! PJRT path, and the shot-sampling backend (the artifacts compute exact
+//! expectations; sampled measurement lives here).
+//!
+//! Conventions match `python/compile/kernels/ref.py` exactly: big-endian
+//! qubit indexing (qubit 0 = most significant index bit), identical gate
+//! definitions, identical QuClassi register layout.
+
+pub mod complex;
+pub mod gates;
+pub mod measure;
+pub mod noise;
+pub mod state;
+
+pub use complex::C64;
+pub use measure::{sample_shots, swap_test_fidelity};
+pub use noise::NoiseModel;
+pub use state::State;

@@ -1,0 +1,149 @@
+//! Optional noise modeling (extension beyond the paper).
+//!
+//! The paper's Discussion lists noise-awareness as future work ("our
+//! system does not take noise into account when scheduling"). We provide
+//! a trajectory-method depolarizing + readout-error model so (a) the
+//! noise-aware scheduler ablation has a substrate and (b) accuracy-vs-
+//! noise curves can be produced.
+
+use super::gates::Gate;
+use super::state::State;
+use crate::util::Rng;
+
+/// Per-gate depolarizing probabilities + readout flip probability.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseModel {
+    /// Depolarizing probability after each single-qubit gate.
+    pub p1: f64,
+    /// Depolarizing probability after each two/three-qubit gate (applied
+    /// to each operand qubit independently).
+    pub p2: f64,
+    /// Probability a measured bit is flipped at readout.
+    pub readout: f64,
+}
+
+impl NoiseModel {
+    pub const NOISELESS: NoiseModel = NoiseModel { p1: 0.0, p2: 0.0, readout: 0.0 };
+
+    /// Typical NISQ-era magnitudes (superconducting-like).
+    pub fn nisq() -> NoiseModel {
+        NoiseModel { p1: 0.001, p2: 0.01, readout: 0.02 }
+    }
+
+    pub fn is_noiseless(&self) -> bool {
+        self.p1 == 0.0 && self.p2 == 0.0 && self.readout == 0.0
+    }
+
+    /// Apply stochastic Pauli noise after `gate` (trajectory method: with
+    /// probability p, apply a uniformly random Pauli to the operand).
+    pub fn apply_after(&self, state: &mut State, gate: &Gate, rng: &mut Rng) {
+        if self.is_noiseless() {
+            return;
+        }
+        let qubits = gate.qubits();
+        let p = if qubits.len() == 1 { self.p1 } else { self.p2 };
+        if p == 0.0 {
+            return;
+        }
+        for q in qubits {
+            if rng.f64() < p {
+                match rng.index(3) {
+                    0 => {
+                        // X = Ry(pi) * Rz(pi) up to global phase; use dense X
+                        state.apply_1q(
+                            &[
+                                [super::C64::ZERO, super::C64::ONE],
+                                [super::C64::ONE, super::C64::ZERO],
+                            ],
+                            q,
+                        );
+                    }
+                    1 => {
+                        // Y
+                        state.apply_1q(
+                            &[
+                                [super::C64::ZERO, super::C64::new(0.0, -1.0)],
+                                [super::C64::new(0.0, 1.0), super::C64::ZERO],
+                            ],
+                            q,
+                        );
+                    }
+                    _ => {
+                        // Z
+                        state.apply_1q(
+                            &[
+                                [super::C64::ONE, super::C64::ZERO],
+                                [super::C64::ZERO, super::C64::new(-1.0, 0.0)],
+                            ],
+                            q,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Corrupt a sampled probability with readout error: a bit read as 0
+    /// stays 0 with prob (1 - readout), and a 1 flips to 0 with prob
+    /// readout — in expectation p0' = p0 (1 - r) + (1 - p0) r.
+    pub fn corrupt_prob_zero(&self, p0: f64) -> f64 {
+        p0 * (1.0 - self.readout) + (1.0 - p0) * self.readout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_is_identity() {
+        let mut s = State::zero(3);
+        let before = s.clone();
+        let mut rng = Rng::new(1);
+        NoiseModel::NOISELESS.apply_after(&mut s, &Gate::H { q: 0 }, &mut rng);
+        assert_eq!(s, before);
+        assert_eq!(NoiseModel::NOISELESS.corrupt_prob_zero(0.9), 0.9);
+    }
+
+    #[test]
+    fn noise_preserves_normalization() {
+        let mut s = State::zero(4);
+        s.apply_h(0);
+        s.apply_h(2);
+        let nm = NoiseModel { p1: 1.0, p2: 1.0, readout: 0.0 }; // always inject
+        let mut rng = Rng::new(2);
+        for g in [Gate::H { q: 1 }, Gate::Cx { control: 0, target: 3 }] {
+            s.apply_gate(&g);
+            nm.apply_after(&mut s, &g, &mut rng);
+            assert!((s.norm_sq() - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn readout_error_shrinks_contrast() {
+        let nm = NoiseModel { p1: 0.0, p2: 0.0, readout: 0.1 };
+        assert!((nm.corrupt_prob_zero(1.0) - 0.9).abs() < 1e-12);
+        assert!((nm.corrupt_prob_zero(0.0) - 0.1).abs() < 1e-12);
+        assert!((nm.corrupt_prob_zero(0.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trajectory_noise_decoheres_on_average() {
+        // Averaged over many trajectories, a noisy |+> state's swap-test
+        // style P0 drifts toward 0.5 relative to noiseless.
+        let nm = NoiseModel { p1: 0.5, p2: 0.5, readout: 0.0 };
+        let mut rng = Rng::new(3);
+        let mut acc = 0.0;
+        let trials = 300;
+        for _ in 0..trials {
+            let mut s = State::zero(1);
+            let g = Gate::Ry { q: 0, theta: 0.4 }; // P0 ~ cos^2(0.2) ~ 0.9605
+            s.apply_gate(&g);
+            nm.apply_after(&mut s, &g, &mut rng);
+            acc += s.prob_zero(0);
+        }
+        let mean = acc / trials as f64;
+        let clean = (0.2f64).cos().powi(2);
+        assert!(mean < clean - 0.05, "mean={mean} clean={clean}");
+    }
+}

@@ -1,0 +1,390 @@
+//! Statevector storage and gate application.
+//!
+//! Big-endian qubit indexing: the amplitude index of basis state
+//! `|b_0 b_1 ... b_{q-1}>` is `sum_k b_k * 2^(q-1-k)` — identical to the
+//! Python oracle. Gate application walks the amplitude array with bit
+//! strides; specialized fast paths exist for the gates on the training
+//! hot path (Ry/Rz/H/CSWAP), with the generic dense 2x2/4x4 path as the
+//! reference for everything else.
+
+use super::complex::C64;
+use super::gates::{self, Gate, Mat2, Mat4};
+
+/// A statevector over `n_qubits`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct State {
+    n_qubits: usize,
+    amps: Vec<C64>,
+}
+
+impl State {
+    /// |0...0>
+    pub fn zero(n_qubits: usize) -> State {
+        assert!(n_qubits <= 26, "statevector would exceed memory");
+        let mut amps = vec![C64::ZERO; 1 << n_qubits];
+        amps[0] = C64::ONE;
+        State { n_qubits, amps }
+    }
+
+    /// Construct from raw amplitudes (must be a power-of-two length).
+    pub fn from_amps(amps: Vec<C64>) -> State {
+        assert!(amps.len().is_power_of_two() && !amps.is_empty());
+        let n_qubits = amps.len().trailing_zeros() as usize;
+        State { n_qubits, amps }
+    }
+
+    pub fn n_qubits(&self) -> usize {
+        self.n_qubits
+    }
+
+    pub fn amps(&self) -> &[C64] {
+        &self.amps
+    }
+
+    /// Sum of |amp|^2 (1.0 for a normalized state).
+    pub fn norm_sq(&self) -> f64 {
+        self.amps.iter().map(|a| a.norm_sq()).sum()
+    }
+
+    /// Stride of `qubit` in the amplitude index (big-endian).
+    #[inline]
+    fn stride(&self, qubit: usize) -> usize {
+        debug_assert!(qubit < self.n_qubits);
+        1 << (self.n_qubits - 1 - qubit)
+    }
+
+    /// Apply a dense single-qubit matrix.
+    pub fn apply_1q(&mut self, m: &Mat2, qubit: usize) {
+        let stride = self.stride(qubit);
+        let n = self.amps.len();
+        let mut base = 0;
+        while base < n {
+            for off in 0..stride {
+                let i0 = base + off;
+                let i1 = i0 + stride;
+                let a0 = self.amps[i0];
+                let a1 = self.amps[i1];
+                self.amps[i0] = m[0][0] * a0 + m[0][1] * a1;
+                self.amps[i1] = m[1][0] * a0 + m[1][1] * a1;
+            }
+            base += stride * 2;
+        }
+    }
+
+    /// Apply a dense two-qubit matrix to the ordered pair (q0, q1).
+    /// The matrix row/column index is `2*b(q0) + b(q1)`.
+    pub fn apply_2q(&mut self, m: &Mat4, q0: usize, q1: usize) {
+        assert_ne!(q0, q1);
+        // Normalize so s0 > s1 (q0 more significant in the pair index).
+        let (s0, s1, m_owned);
+        if q0 < q1 {
+            s0 = self.stride(q0);
+            s1 = self.stride(q1);
+            m_owned = *m;
+        } else {
+            s0 = self.stride(q1);
+            s1 = self.stride(q0);
+            m_owned = gates::swap_pair_order(m);
+        }
+        let m = &m_owned;
+        let n = self.amps.len();
+        // Enumerate all indices with both pair bits clear.
+        let mut i = 0;
+        while i < n {
+            if (i & s0) == 0 && (i & s1) == 0 {
+                let i00 = i;
+                let i01 = i | s1;
+                let i10 = i | s0;
+                let i11 = i | s0 | s1;
+                let a = [self.amps[i00], self.amps[i01], self.amps[i10], self.amps[i11]];
+                for (r, &idx) in [i00, i01, i10, i11].iter().enumerate() {
+                    let mut acc = C64::ZERO;
+                    for (c, &ac) in a.iter().enumerate() {
+                        acc += m[r][c] * ac;
+                    }
+                    self.amps[idx] = acc;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// Fast path: Ry (real 2x2 rotation).
+    pub fn apply_ry(&mut self, theta: f64, qubit: usize) {
+        let c = (theta / 2.0).cos();
+        let s = (theta / 2.0).sin();
+        let stride = self.stride(qubit);
+        let n = self.amps.len();
+        let mut base = 0;
+        while base < n {
+            for off in 0..stride {
+                let i0 = base + off;
+                let i1 = i0 + stride;
+                let a0 = self.amps[i0];
+                let a1 = self.amps[i1];
+                self.amps[i0] = C64::new(c * a0.re - s * a1.re, c * a0.im - s * a1.im);
+                self.amps[i1] = C64::new(s * a0.re + c * a1.re, s * a0.im + c * a1.im);
+            }
+            base += stride * 2;
+        }
+    }
+
+    /// Fast path: Rz (diagonal phases).
+    pub fn apply_rz(&mut self, theta: f64, qubit: usize) {
+        let em = C64::cis(-theta / 2.0);
+        let ep = C64::cis(theta / 2.0);
+        let stride = self.stride(qubit);
+        let n = self.amps.len();
+        let mut base = 0;
+        while base < n {
+            for off in 0..stride {
+                let i0 = base + off;
+                let i1 = i0 + stride;
+                self.amps[i0] *= em;
+                self.amps[i1] *= ep;
+            }
+            base += stride * 2;
+        }
+    }
+
+    /// Fast path: Hadamard.
+    pub fn apply_h(&mut self, qubit: usize) {
+        let inv = gates::INV_SQRT2;
+        let stride = self.stride(qubit);
+        let n = self.amps.len();
+        let mut base = 0;
+        while base < n {
+            for off in 0..stride {
+                let i0 = base + off;
+                let i1 = i0 + stride;
+                let a0 = self.amps[i0];
+                let a1 = self.amps[i1];
+                self.amps[i0] = (a0 + a1).scale(inv);
+                self.amps[i1] = (a0 - a1).scale(inv);
+            }
+            base += stride * 2;
+        }
+    }
+
+    /// Fast path: CSWAP via amplitude swaps where the control bit is set.
+    pub fn apply_cswap(&mut self, control: usize, a: usize, b: usize) {
+        assert!(control != a && control != b && a != b);
+        let sc = self.stride(control);
+        let sa = self.stride(a);
+        let sb = self.stride(b);
+        let n = self.amps.len();
+        for i in 0..n {
+            // visit each swapped pair once: control set, bit_a=1, bit_b=0
+            if (i & sc) != 0 && (i & sa) != 0 && (i & sb) == 0 {
+                let j = (i & !sa) | sb;
+                self.amps.swap(i, j);
+            }
+        }
+    }
+
+    /// Apply any IR gate (dispatches to fast paths where available).
+    pub fn apply_gate(&mut self, g: &Gate) {
+        match *g {
+            Gate::H { q } => self.apply_h(q),
+            Gate::Rx { q, theta } => self.apply_1q(&gates::rx_matrix(theta), q),
+            Gate::Ry { q, theta } => self.apply_ry(theta, q),
+            Gate::Rz { q, theta } => self.apply_rz(theta, q),
+            Gate::Ryy { q0, q1, theta } => self.apply_2q(&gates::ryy_matrix(theta), q0, q1),
+            Gate::Rzz { q0, q1, theta } => self.apply_2q(&gates::rzz_matrix(theta), q0, q1),
+            Gate::Cry { control, target, theta } => {
+                self.apply_2q(&gates::cry_matrix(theta), control, target)
+            }
+            Gate::Crz { control, target, theta } => {
+                self.apply_2q(&gates::crz_matrix(theta), control, target)
+            }
+            Gate::Cx { control, target } => self.apply_2q(&gates::cx_matrix(), control, target),
+            Gate::Cswap { control, a, b } => self.apply_cswap(control, a, b),
+        }
+    }
+
+    /// Run a gate sequence.
+    pub fn run(&mut self, gates: &[Gate]) {
+        for g in gates {
+            self.apply_gate(g);
+        }
+    }
+
+    /// Probability that `qubit` measures |0>.
+    pub fn prob_zero(&self, qubit: usize) -> f64 {
+        let stride = self.stride(qubit);
+        let mut p = 0.0;
+        let n = self.amps.len();
+        let mut base = 0;
+        while base < n {
+            for off in 0..stride {
+                p += self.amps[base + off].norm_sq();
+            }
+            base += stride * 2;
+        }
+        p
+    }
+
+    /// |<self|other>|^2 (exact state fidelity; for tests).
+    pub fn overlap_sq(&self, other: &State) -> f64 {
+        assert_eq!(self.n_qubits, other.n_qubits);
+        let mut acc = C64::ZERO;
+        for (a, b) in self.amps.iter().zip(other.amps.iter()) {
+            acc += a.conj() * *b;
+        }
+        acc.norm_sq()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_state(rng: &mut Rng, nq: usize) -> State {
+        let mut amps: Vec<C64> =
+            (0..1usize << nq).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let norm = amps.iter().map(|a| a.norm_sq()).sum::<f64>().sqrt();
+        for a in &mut amps {
+            *a = a.scale(1.0 / norm);
+        }
+        State::from_amps(amps)
+    }
+
+    #[test]
+    fn zero_state_is_normalized() {
+        let s = State::zero(5);
+        assert_eq!(s.amps()[0], C64::ONE);
+        assert!((s.norm_sq() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fast_paths_match_dense() {
+        let mut rng = Rng::new(17);
+        for nq in 2..=5 {
+            for q in 0..nq {
+                let base = random_state(&mut rng, nq);
+                let theta = rng.range_f64(-3.0, 3.0);
+
+                let mut fast = base.clone();
+                fast.apply_ry(theta, q);
+                let mut dense = base.clone();
+                dense.apply_1q(&gates::ry_matrix(theta), q);
+                assert_states_eq(&fast, &dense);
+
+                let mut fast = base.clone();
+                fast.apply_rz(theta, q);
+                let mut dense = base.clone();
+                dense.apply_1q(&gates::rz_matrix(theta), q);
+                assert_states_eq(&fast, &dense);
+
+                let mut fast = base.clone();
+                fast.apply_h(q);
+                let mut dense = base.clone();
+                dense.apply_1q(&gates::h_matrix(), q);
+                assert_states_eq(&fast, &dense);
+            }
+        }
+    }
+
+    fn assert_states_eq(a: &State, b: &State) {
+        for (x, y) in a.amps().iter().zip(b.amps().iter()) {
+            assert!((x.re - y.re).abs() < 1e-12 && (x.im - y.im).abs() < 1e-12, "{x:?} != {y:?}");
+        }
+    }
+
+    #[test]
+    fn gates_preserve_norm() {
+        let mut rng = Rng::new(23);
+        let gates_list = vec![
+            Gate::H { q: 1 },
+            Gate::Rx { q: 0, theta: 0.3 },
+            Gate::Ry { q: 2, theta: -1.0 },
+            Gate::Rz { q: 3, theta: 2.2 },
+            Gate::Ryy { q0: 0, q1: 2, theta: 0.9 },
+            Gate::Rzz { q0: 1, q1: 3, theta: -0.4 },
+            Gate::Cry { control: 0, target: 3, theta: 1.4 },
+            Gate::Crz { control: 3, target: 0, theta: -2.0 },
+            Gate::Cx { control: 1, target: 2 },
+            Gate::Cswap { control: 0, a: 1, b: 3 },
+        ];
+        let mut s = random_state(&mut rng, 4);
+        for g in &gates_list {
+            s.apply_gate(g);
+            assert!((s.norm_sq() - 1.0).abs() < 1e-10, "{g:?} broke normalization");
+        }
+    }
+
+    #[test]
+    fn cx_truth_table() {
+        // |10> --CX(0,1)--> |11>
+        let mut s = State::zero(2);
+        s.apply_1q(&gates::ry_matrix(std::f64::consts::PI), 0); // |0> -> |1>
+        s.apply_gate(&Gate::Cx { control: 0, target: 1 });
+        assert!((s.amps()[3].norm_sq() - 1.0).abs() < 1e-12); // |11>
+    }
+
+    #[test]
+    fn cswap_truth_table() {
+        // |1;01> --CSWAP(0;1,2)--> |1;10>
+        let mut s = State::zero(3);
+        s.apply_1q(&gates::ry_matrix(std::f64::consts::PI), 0);
+        s.apply_1q(&gates::ry_matrix(std::f64::consts::PI), 2);
+        // state |101> = index 5
+        assert!((s.amps()[5].norm_sq() - 1.0).abs() < 1e-12);
+        s.apply_cswap(0, 1, 2);
+        // -> |110> = index 6
+        assert!((s.amps()[6].norm_sq() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cswap_ignores_control_zero() {
+        let mut s = State::zero(3);
+        s.apply_1q(&gates::ry_matrix(std::f64::consts::PI), 2); // |001>
+        let before = s.clone();
+        s.apply_cswap(0, 1, 2);
+        assert_states_eq(&s, &before);
+    }
+
+    #[test]
+    fn two_qubit_reversed_operands() {
+        // CRY(control=2, target=0) == dense with swapped pair order.
+        let mut rng = Rng::new(31);
+        let base = random_state(&mut rng, 3);
+        let theta = 0.77;
+        let mut a = base.clone();
+        a.apply_gate(&Gate::Cry { control: 2, target: 0, theta });
+        let mut b = base.clone();
+        b.apply_2q(&gates::swap_pair_order(&gates::cry_matrix(theta)), 0, 2);
+        assert_states_eq(&a, &b);
+    }
+
+    #[test]
+    fn prob_zero_basis() {
+        let mut s = State::zero(3);
+        assert!((s.prob_zero(0) - 1.0).abs() < 1e-12);
+        s.apply_1q(&gates::ry_matrix(std::f64::consts::PI), 0);
+        assert!(s.prob_zero(0).abs() < 1e-12);
+        assert!((s.prob_zero(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rotation_composition() {
+        // Ry(a) then Ry(b) == Ry(a + b)
+        let mut rng = Rng::new(41);
+        let base = random_state(&mut rng, 2);
+        let (a, b) = (0.6, -1.3);
+        let mut s1 = base.clone();
+        s1.apply_ry(a, 1);
+        s1.apply_ry(b, 1);
+        let mut s2 = base.clone();
+        s2.apply_ry(a + b, 1);
+        assert_states_eq(&s1, &s2);
+    }
+
+    #[test]
+    fn overlap_of_identical_states_is_one() {
+        let mut rng = Rng::new(43);
+        let s = random_state(&mut rng, 4);
+        assert!((s.overlap_sq(&s) - 1.0).abs() < 1e-10);
+    }
+}

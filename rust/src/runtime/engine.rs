@@ -1,0 +1,329 @@
+//! The PJRT engine: compile-once, execute-many over the AOT artifacts.
+//!
+//! Owner-thread architecture: `xla::PjRtClient` and loaded executables
+//! are `Rc`-backed (`!Send`), so one dedicated thread owns them and
+//! serves execution requests over a channel. The public [`PjrtEngine`]
+//! handle is `Send + Sync`, cheap to clone, and implements
+//! [`CircuitExecutor`] so the whole model/trainer stack can run on PJRT
+//! unchanged.
+//!
+//! Banks of arbitrary size are split/padded to the artifact's fixed
+//! batch (32): a bank of N circuits costs `ceil(N/32)` PJRT executions.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::circuit::QuClassiConfig;
+use crate::model::exec::{CircuitExecutor, CircuitPair};
+use crate::runtime::manifest::Manifest;
+
+enum Request {
+    Execute {
+        config: QuClassiConfig,
+        pairs: Vec<CircuitPair>,
+        resp: mpsc::Sender<Result<Vec<f32>, String>>,
+    },
+    /// Fused on-device parameter-shift gradients: (theta, data batch) ->
+    /// (fidelities, per-sample gradients).
+    Grad {
+        config: QuClassiConfig,
+        theta: Vec<f32>,
+        data: Vec<Vec<f32>>,
+        resp: mpsc::Sender<Result<(Vec<f32>, Vec<Vec<f32>>), String>>,
+    },
+    Stats { resp: mpsc::Sender<EngineStats> },
+    Shutdown,
+}
+
+/// Execution counters (observability / benches).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub executions: u64,
+    pub circuits: u64,
+    pub padded_circuits: u64,
+}
+
+/// Cloneable, thread-safe handle to the PJRT owner thread.
+#[derive(Clone)]
+pub struct PjrtEngine {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+}
+
+impl PjrtEngine {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+    ///
+    /// Fails fast (before returning) if any module does not compile.
+    pub fn load(dir: &Path) -> Result<PjrtEngine, String> {
+        let manifest = Manifest::load(dir)?;
+        manifest.verify_files()?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || owner_thread(manifest, rx, ready_tx))
+            .map_err(|e| format!("spawn pjrt-engine: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| "pjrt-engine died during startup".to_string())??;
+        Ok(PjrtEngine { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    fn send(&self, req: Request) -> Result<(), String> {
+        self.tx
+            .lock()
+            .map_err(|_| "pjrt handle poisoned".to_string())?
+            .send(req)
+            .map_err(|_| "pjrt-engine thread gone".to_string())
+    }
+
+    /// Execute a bank of circuits (any size; padded internally).
+    pub fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        if pairs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.send(Request::Execute {
+            config: *config,
+            pairs: pairs.to_vec(),
+            resp: resp_tx,
+        })?;
+        resp_rx.recv().map_err(|_| "pjrt-engine dropped request".to_string())?
+    }
+
+    /// Fused gradient path (L2 perf optimization; see EXPERIMENTS.md §Perf).
+    pub fn execute_grad(
+        &self,
+        config: &QuClassiConfig,
+        theta: &[f32],
+        data: &[Vec<f32>],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>), String> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.send(Request::Grad {
+            config: *config,
+            theta: theta.to_vec(),
+            data: data.to_vec(),
+            resp: resp_tx,
+        })?;
+        resp_rx.recv().map_err(|_| "pjrt-engine dropped request".to_string())?
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        if self.send(Request::Stats { resp: resp_tx }).is_err() {
+            return EngineStats::default();
+        }
+        resp_rx.recv().unwrap_or_default()
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.send(Request::Shutdown);
+    }
+}
+
+impl CircuitExecutor for PjrtEngine {
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        self.execute(config, pairs)
+    }
+
+    fn describe(&self) -> String {
+        "pjrt (AOT jax/pallas artifacts)".to_string()
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+    grad_exe: Option<xla::PjRtLoadedExecutable>,
+    batch: usize,
+    grad_data_batch: usize,
+    n_params: usize,
+    n_features: usize,
+}
+
+fn owner_thread(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<(), String>>,
+) {
+    // Compile everything up front.
+    let setup = (|| -> Result<HashMap<QuClassiConfig, Loaded>, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        let mut map = HashMap::new();
+        for a in &manifest.artifacts {
+            let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable, String> {
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or("non-utf8 path")?,
+                )
+                .map_err(|e| format!("parse {}: {e}", path.display()))?;
+                client
+                    .compile(&xla::XlaComputation::from_proto(&proto))
+                    .map_err(|e| format!("compile {}: {e}", path.display()))
+            };
+            let exe = compile(&a.path)?;
+            let grad_exe = match &a.grad_path {
+                Some(p) if p.exists() => Some(compile(p)?),
+                _ => None,
+            };
+            map.insert(
+                a.config,
+                Loaded {
+                    exe,
+                    grad_exe,
+                    batch: a.batch,
+                    grad_data_batch: a.grad_data_batch,
+                    n_params: a.n_params,
+                    n_features: a.n_features,
+                },
+            );
+        }
+        Ok(map)
+    })();
+
+    let loaded = match setup {
+        Ok(map) => {
+            let _ = ready.send(Ok(()));
+            map
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut stats = EngineStats::default();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Execute { config, pairs, resp } => {
+                let result = execute_batched(&loaded, &config, &pairs, &mut stats);
+                let _ = resp.send(result);
+            }
+            Request::Grad { config, theta, data, resp } => {
+                let result = execute_grad(&loaded, &config, &theta, &data, &mut stats);
+                let _ = resp.send(result);
+            }
+            Request::Stats { resp } => {
+                let _ = resp.send(stats.clone());
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+fn execute_batched(
+    loaded: &HashMap<QuClassiConfig, Loaded>,
+    config: &QuClassiConfig,
+    pairs: &[CircuitPair],
+    stats: &mut EngineStats,
+) -> Result<Vec<f32>, String> {
+    let l = loaded
+        .get(config)
+        .ok_or_else(|| format!("no artifact for config {config:?}"))?;
+    for (t, d) in pairs {
+        if t.len() != l.n_params || d.len() != l.n_features {
+            return Err(format!(
+                "arity mismatch for {config:?}: theta {} (want {}), data {} (want {})",
+                t.len(),
+                l.n_params,
+                d.len(),
+                l.n_features
+            ));
+        }
+    }
+    let mut out = Vec::with_capacity(pairs.len());
+    for chunk in pairs.chunks(l.batch) {
+        let mut thetas = Vec::with_capacity(l.batch * l.n_params);
+        let mut datas = Vec::with_capacity(l.batch * l.n_features);
+        for (t, d) in chunk {
+            thetas.extend_from_slice(t);
+            datas.extend_from_slice(d);
+        }
+        // Pad the tail chunk by repeating the first pair.
+        for _ in chunk.len()..l.batch {
+            thetas.extend_from_slice(&chunk[0].0);
+            datas.extend_from_slice(&chunk[0].1);
+        }
+        let t_lit = xla::Literal::vec1(&thetas)
+            .reshape(&[l.batch as i64, l.n_params as i64])
+            .map_err(|e| format!("theta literal: {e}"))?;
+        let d_lit = xla::Literal::vec1(&datas)
+            .reshape(&[l.batch as i64, l.n_features as i64])
+            .map_err(|e| format!("data literal: {e}"))?;
+        let result = l
+            .exe
+            .execute::<xla::Literal>(&[t_lit, d_lit])
+            .map_err(|e| format!("pjrt execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch result: {e}"))?;
+        let fids = result
+            .to_tuple1()
+            .map_err(|e| format!("untuple: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| format!("decode: {e}"))?;
+        out.extend_from_slice(&fids[..chunk.len()]);
+        stats.executions += 1;
+        stats.circuits += chunk.len() as u64;
+        stats.padded_circuits += (l.batch - chunk.len()) as u64;
+    }
+    Ok(out)
+}
+
+fn execute_grad(
+    loaded: &HashMap<QuClassiConfig, Loaded>,
+    config: &QuClassiConfig,
+    theta: &[f32],
+    data: &[Vec<f32>],
+    stats: &mut EngineStats,
+) -> Result<(Vec<f32>, Vec<Vec<f32>>), String> {
+    let l = loaded
+        .get(config)
+        .ok_or_else(|| format!("no artifact for config {config:?}"))?;
+    let grad_exe = l
+        .grad_exe
+        .as_ref()
+        .ok_or_else(|| format!("no gradient artifact for {config:?}"))?;
+    if theta.len() != l.n_params {
+        return Err("theta arity mismatch".to_string());
+    }
+    let gb = l.grad_data_batch;
+    let mut fids = Vec::with_capacity(data.len());
+    let mut grads = Vec::with_capacity(data.len());
+    for chunk in data.chunks(gb) {
+        let mut flat = Vec::with_capacity(gb * l.n_features);
+        for d in chunk {
+            if d.len() != l.n_features {
+                return Err("data arity mismatch".to_string());
+            }
+            flat.extend_from_slice(d);
+        }
+        for _ in chunk.len()..gb {
+            flat.extend_from_slice(&chunk[0]);
+        }
+        let t_lit = xla::Literal::vec1(theta).reshape(&[l.n_params as i64]).map_err(|e| e.to_string())?;
+        let d_lit = xla::Literal::vec1(&flat)
+            .reshape(&[gb as i64, l.n_features as i64])
+            .map_err(|e| e.to_string())?;
+        let result = grad_exe
+            .execute::<xla::Literal>(&[t_lit, d_lit])
+            .map_err(|e| format!("pjrt grad execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| e.to_string())?;
+        let (fid_lit, grad_lit) = result.to_tuple2().map_err(|e| format!("untuple2: {e}"))?;
+        let fid_vec = fid_lit.to_vec::<f32>().map_err(|e| e.to_string())?;
+        let grad_vec = grad_lit.to_vec::<f32>().map_err(|e| e.to_string())?;
+        for (i, _) in chunk.iter().enumerate() {
+            fids.push(fid_vec[i]);
+            grads.push(grad_vec[i * l.n_params..(i + 1) * l.n_params].to_vec());
+        }
+        stats.executions += 1;
+        stats.circuits += (chunk.len() * (4 * l.n_params + 1)) as u64;
+    }
+    Ok((fids, grads))
+}

@@ -1,0 +1,146 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::circuit::QuClassiConfig;
+use crate::wire::{self, Value};
+
+/// One artifact record (mirrors `compile.model.config_meta`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub config: QuClassiConfig,
+    pub n_params: usize,
+    pub n_features: usize,
+    /// Fixed batch of the fidelity artifact.
+    pub batch: usize,
+    pub path: PathBuf,
+    /// Fused parameter-shift gradient artifact.
+    pub grad_path: Option<PathBuf>,
+    pub grad_data_batch: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| format!("cannot read {}: {e} (run `make artifacts` first)", mpath.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (factored out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let v = wire::parse(text).map_err(|e| format!("manifest json: {e}"))?;
+        let arts = v.req_arr("artifacts")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let config = QuClassiConfig::new(a.req_usize("qubits")?, a.req_usize("layers")?)?;
+            let meta = ArtifactMeta {
+                name: a.req_str("name")?.to_string(),
+                config,
+                n_params: a.req_usize("n_params")?,
+                n_features: a.req_usize("n_features")?,
+                batch: a.req_usize("batch")?,
+                path: dir.join(a.req_str("path")?),
+                grad_path: a
+                    .get("grad_path")
+                    .and_then(Value::as_str)
+                    .map(|p| dir.join(p)),
+                grad_data_batch: a
+                    .get("grad_data_batch")
+                    .and_then(Value::as_usize)
+                    .unwrap_or(0),
+            };
+            // Cross-check counts against the Rust-side formulas.
+            if meta.n_params != config.n_params() || meta.n_features != config.n_features() {
+                return Err(format!(
+                    "manifest {}: param/feature counts disagree with circuit spec",
+                    meta.name
+                ));
+            }
+            artifacts.push(meta);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, config: &QuClassiConfig) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.config == *config)
+    }
+
+    /// Verify every referenced HLO file exists on disk.
+    pub fn verify_files(&self) -> Result<(), String> {
+        for a in &self.artifacts {
+            if !a.path.exists() {
+                return Err(format!("missing artifact file {}", a.path.display()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1, "batch": 32, "grad_data_batch": 8,
+        "artifacts": [
+            {"name": "quclassi_q5_l1", "qubits": 5, "layers": 1,
+             "n_params": 4, "n_features": 4, "batch": 32,
+             "path": "quclassi_q5_l1.hlo.txt",
+             "grad_path": "quclassi_q5_l1.grad.hlo.txt", "grad_data_batch": 8}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.config, QuClassiConfig::new(5, 1).unwrap());
+        assert_eq!(a.batch, 32);
+        assert!(a.path.ends_with("quclassi_q5_l1.hlo.txt"));
+        assert!(a.grad_path.as_ref().unwrap().ends_with("quclassi_q5_l1.grad.hlo.txt"));
+    }
+
+    #[test]
+    fn find_by_config() {
+        let m = Manifest::parse(Path::new("x"), SAMPLE).unwrap();
+        assert!(m.find(&QuClassiConfig::new(5, 1).unwrap()).is_some());
+        assert!(m.find(&QuClassiConfig::new(7, 1).unwrap()).is_none());
+    }
+
+    #[test]
+    fn rejects_inconsistent_counts() {
+        let bad = SAMPLE.replace("\"n_params\": 4", "\"n_params\": 5");
+        assert!(Manifest::parse(Path::new("x"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_json() {
+        assert!(Manifest::parse(Path::new("x"), "{oops").is_err());
+    }
+
+    /// Against the real artifacts when they exist (built by `make artifacts`).
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.artifacts.len(), 6);
+            m.verify_files().unwrap();
+            for cfg in QuClassiConfig::paper_configs() {
+                assert!(m.find(&cfg).is_some(), "missing artifact for {cfg:?}");
+            }
+        }
+    }
+}

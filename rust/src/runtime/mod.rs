@@ -1,0 +1,16 @@
+//! PJRT artifact runtime — loads the AOT-compiled JAX/Pallas HLO and
+//! executes circuit banks from the Rust hot path (no Python at runtime).
+//!
+//! * [`manifest`] — `artifacts/manifest.json` parsing + artifact
+//!   discovery.
+//! * [`engine`] — the PJRT engine: compiles each HLO text module once on
+//!   `PjRtClient::cpu()` and serves batched executions. The xla crate's
+//!   handles are `Rc`-based (not `Send`), so the engine runs on a
+//!   dedicated owner thread behind a channel-based handle that *is*
+//!   `Send + Sync` and implements [`crate::model::CircuitExecutor`].
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::PjrtEngine;
+pub use manifest::{ArtifactMeta, Manifest};

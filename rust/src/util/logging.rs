@@ -1,0 +1,127 @@
+//! Minimal leveled logger (std-only substrate for `log`/`tracing`).
+//!
+//! Global level filter + timestamped, target-tagged lines on stderr.
+//! The `log_*!` macros are exported at the crate root.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Trace = 0,
+    Debug = 1,
+    Info = 2,
+    Warn = 3,
+    Error = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Trace => "TRACE",
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO",
+            Level::Warn => "WARN",
+            Level::Error => "ERROR",
+        }
+    }
+
+    pub fn from_str_loose(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "trace" => Some(Level::Trace),
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global level filter.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a record at `level` be emitted?
+pub fn log_enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record. Prefer the `log_*!` macros.
+pub fn log_record(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !log_enabled(level) {
+        return;
+    }
+    let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let secs = now.as_secs();
+    let millis = now.subsec_millis();
+    eprintln!("[{secs}.{millis:03} {:5} {target}] {msg}", level.as_str());
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_record($crate::util::Level::Trace, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_record($crate::util::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_record($crate::util::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_record($crate::util::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_record($crate::util::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Trace < Level::Debug);
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::from_str_loose("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::from_str_loose("warning"), Some(Level::Warn));
+        assert_eq!(Level::from_str_loose("nope"), None);
+    }
+
+    #[test]
+    fn filter_respects_level() {
+        set_level(Level::Warn);
+        assert!(!log_enabled(Level::Info));
+        assert!(log_enabled(Level::Warn));
+        assert!(log_enabled(Level::Error));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

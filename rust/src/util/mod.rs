@@ -1,0 +1,15 @@
+//! Foundation utilities shared by every layer of the stack.
+//!
+//! Everything here is `std`-only by design (the build environment has no
+//! network access to crates.io; see DESIGN.md §3): leveled logging, a
+//! deterministic PRNG, wall/virtual clocks, and streaming statistics.
+
+pub mod clock;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+pub use clock::{Clock, SystemClock, VirtualClock};
+pub use logging::{log_enabled, set_level, Level};
+pub use rng::Rng;
+pub use stats::{OnlineStats, Summary};

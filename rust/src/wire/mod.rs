@@ -1,0 +1,14 @@
+//! Wire format substrate: a from-scratch JSON implementation.
+//!
+//! The paper's manager↔worker channel is RPyC; ours is framed JSON over
+//! TCP (see `net/`). JSON was chosen over a custom binary format because
+//! the AOT pipeline already emits `manifest.json`, so one codec serves
+//! both the RPC protocol and artifact metadata. The implementation is
+//! complete: escapes, unicode, nested containers, and a strict parser
+//! with byte-offset error reporting.
+
+pub mod json;
+pub mod value;
+
+pub use json::{parse, to_string, to_string_pretty, JsonError};
+pub use value::Value;

@@ -1,0 +1,248 @@
+//! Dynamically-typed JSON value model with ergonomic accessors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects use `BTreeMap` so serialization is canonical
+/// (deterministic key order), which keeps golden tests and hashes stable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn obj() -> Value {
+        Value::Obj(BTreeMap::new())
+    }
+
+    /// Builder-style insert; panics when self is not an object.
+    pub fn with(mut self, key: &str, val: impl Into<Value>) -> Value {
+        match &mut self {
+            Value::Obj(m) => {
+                m.insert(key.to_string(), val.into());
+            }
+            _ => panic!("Value::with on non-object"),
+        }
+        self
+    }
+
+    pub fn set(&mut self, key: &str, val: impl Into<Value>) {
+        match self {
+            Value::Obj(m) => {
+                m.insert(key.to_string(), val.into());
+            }
+            _ => panic!("Value::set on non-object"),
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|x| x as usize)
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Num(x) if x.fract() == 0.0 && x.abs() <= i64::MAX as f64 => Some(*x as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Required typed field accessors for protocol decoding — produce a
+    /// descriptive error instead of an Option.
+    pub fn req_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key).and_then(Value::as_f64).ok_or_else(|| format!("missing/invalid f64 field '{key}'"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key).and_then(Value::as_u64).ok_or_else(|| format!("missing/invalid u64 field '{key}'"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize, String> {
+        self.req_u64(key).map(|x| x as usize)
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str, String> {
+        self.get(key).and_then(Value::as_str).ok_or_else(|| format!("missing/invalid string field '{key}'"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Value], String> {
+        self.get(key).and_then(Value::as_arr).ok_or_else(|| format!("missing/invalid array field '{key}'"))
+    }
+
+    /// Decode an array of numbers into f32s.
+    pub fn req_f32_vec(&self, key: &str) -> Result<Vec<f32>, String> {
+        let arr = self.req_arr(key)?;
+        arr.iter()
+            .map(|v| v.as_f64().map(|x| x as f32).ok_or_else(|| format!("non-number in '{key}'")))
+            .collect()
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Value {
+        Value::Num(x)
+    }
+}
+
+impl From<f32> for Value {
+    fn from(x: f32) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<u64> for Value {
+    fn from(x: u64) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(x: usize) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(x: i64) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<u32> for Value {
+    fn from(x: u32) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(xs: Vec<T>) -> Value {
+        Value::Arr(xs.into_iter().map(Into::into).collect())
+    }
+}
+
+impl From<&[f32]> for Value {
+    fn from(xs: &[f32]) -> Value {
+        Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", super::json::to_string(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_accessors() {
+        let v = Value::obj()
+            .with("name", "w1")
+            .with("qubits", 10u64)
+            .with("busy", true)
+            .with("load", 0.25f64)
+            .with("tags", vec!["a", "b"]);
+        assert_eq!(v.req_str("name").unwrap(), "w1");
+        assert_eq!(v.req_u64("qubits").unwrap(), 10);
+        assert_eq!(v.get("busy").unwrap().as_bool(), Some(true));
+        assert_eq!(v.req_f64("load").unwrap(), 0.25);
+        assert_eq!(v.req_arr("tags").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn missing_field_reports_name() {
+        let v = Value::obj();
+        let err = v.req_str("worker_id").unwrap_err();
+        assert!(err.contains("worker_id"));
+    }
+
+    #[test]
+    fn numeric_coercions() {
+        assert_eq!(Value::Num(3.0).as_u64(), Some(3));
+        assert_eq!(Value::Num(3.5).as_u64(), None);
+        assert_eq!(Value::Num(-1.0).as_u64(), None);
+        assert_eq!(Value::Num(-1.0).as_i64(), Some(-1));
+    }
+
+    #[test]
+    fn f32_vec_round_trip() {
+        let xs = vec![1.5f32, -2.25, 0.0];
+        let v = Value::obj().with("xs", xs.as_slice());
+        assert_eq!(v.req_f32_vec("xs").unwrap(), xs);
+    }
+}

@@ -1,0 +1,138 @@
+//! Worker execution backends: PJRT artifacts or the Rust simulator.
+
+use std::path::Path;
+
+use crate::circuit::QuClassiConfig;
+use crate::model::exec::{CircuitExecutor, CircuitPair, QsimExecutor};
+use crate::qsim::NoiseModel;
+use crate::runtime::PjrtEngine;
+
+/// Which engine executes circuits on this worker.
+pub enum WorkerBackend {
+    /// AOT-compiled JAX/Pallas artifacts via PJRT (production path).
+    Pjrt(PjrtEngine),
+    /// Pure-Rust statevector simulation (fallback / tests).
+    Qsim,
+    /// Rust simulation with trajectory noise (extension; DESIGN.md §10).
+    NoisyQsim(NoiseModel, u64),
+}
+
+impl WorkerBackend {
+    /// PJRT if artifacts are present, otherwise the simulator.
+    pub fn auto(artifact_dir: &Path) -> WorkerBackend {
+        if artifact_dir.join("manifest.json").exists() {
+            match PjrtEngine::load(artifact_dir) {
+                Ok(engine) => return WorkerBackend::Pjrt(engine),
+                Err(e) => {
+                    crate::log_warn!("worker", "pjrt load failed ({e}); using qsim backend");
+                }
+            }
+        }
+        WorkerBackend::Qsim
+    }
+
+    pub fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        match self {
+            WorkerBackend::Pjrt(engine) => engine.execute(config, pairs),
+            WorkerBackend::Qsim => QsimExecutor.execute_bank(config, pairs),
+            WorkerBackend::NoisyQsim(noise, seed) => {
+                // Trajectory simulation with per-gate Pauli noise. The
+                // trajectory stream is derived from the circuit inputs so
+                // repeated calls see fresh (but reproducible) noise draws
+                // rather than one frozen corruption pattern.
+                let mut hash = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+                for (t, d) in pairs.iter().take(1) {
+                    for x in t.iter().chain(d.iter()) {
+                        hash = (hash ^ x.to_bits() as u64).wrapping_mul(0x1000_0000_01b3);
+                    }
+                }
+                let mut rng = crate::util::Rng::new(hash);
+                pairs
+                    .iter()
+                    .map(|(thetas, data)| {
+                        let gates = crate::circuit::build_quclassi(config, thetas, data);
+                        let mut st = crate::qsim::State::zero(config.qubits);
+                        for g in &gates {
+                            st.apply_gate(g);
+                            noise.apply_after(&mut st, g, &mut rng);
+                        }
+                        let p0 = noise.corrupt_prob_zero(st.prob_zero(0));
+                        Ok((2.0 * p0 - 1.0) as f32)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkerBackend::Pjrt(_) => "pjrt",
+            WorkerBackend::Qsim => "qsim",
+            WorkerBackend::NoisyQsim(..) => "noisy-qsim",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn pairs(cfg: &QuClassiConfig, n: usize) -> Vec<CircuitPair> {
+        let mut rng = Rng::new(4);
+        (0..n)
+            .map(|_| {
+                (
+                    (0..cfg.n_params()).map(|_| rng.f32() * 2.0).collect(),
+                    (0..cfg.n_features()).map(|_| rng.f32() * 2.0).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn qsim_backend_executes() {
+        let cfg = QuClassiConfig::new(5, 3).unwrap();
+        let b = WorkerBackend::Qsim;
+        let fids = b.execute(&cfg, &pairs(&cfg, 4)).unwrap();
+        assert_eq!(fids.len(), 4);
+        assert!(fids.iter().all(|f| (-1e-5..=1.0 + 1e-5).contains(&(*f as f64))));
+    }
+
+    #[test]
+    fn noiseless_noisy_backend_matches_qsim() {
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let ps = pairs(&cfg, 3);
+        let clean = WorkerBackend::Qsim.execute(&cfg, &ps).unwrap();
+        let noisy = WorkerBackend::NoisyQsim(NoiseModel::NOISELESS, 1).execute(&cfg, &ps).unwrap();
+        for (a, b) in clean.iter().zip(noisy.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn noise_shifts_fidelities() {
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let ps = pairs(&cfg, 8);
+        let clean = WorkerBackend::Qsim.execute(&cfg, &ps).unwrap();
+        let noisy = WorkerBackend::NoisyQsim(
+            NoiseModel { p1: 0.2, p2: 0.3, readout: 0.05 },
+            7,
+        )
+        .execute(&cfg, &ps)
+        .unwrap();
+        let diff: f32 =
+            clean.iter().zip(noisy.iter()).map(|(a, b)| (a - b).abs()).sum::<f32>();
+        assert!(diff > 1e-3, "noise had no effect");
+    }
+
+    #[test]
+    fn auto_falls_back_without_artifacts() {
+        let b = WorkerBackend::auto(Path::new("/nonexistent/dir"));
+        assert_eq!(b.name(), "qsim");
+    }
+}

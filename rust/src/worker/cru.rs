@@ -1,0 +1,78 @@
+//! Classical Resource Usage probes (`CRU_{w_i}(t) = sys_{w_i}` in
+//! Algorithm 2).
+//!
+//! The paper queries system CPU usage on each worker VM. We provide a
+//! real probe (`/proc` on Linux) for distributed deployments and a
+//! deterministic load-model probe for in-proc and simulated runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Samples this worker's classical resource usage in [0, 1].
+pub trait CruProbe: Send + Sync {
+    fn sample(&self) -> f64;
+}
+
+/// Real probe: 1-minute load average over core count (Linux `/proc`).
+pub struct ProcStatCru;
+
+impl CruProbe for ProcStatCru {
+    fn sample(&self) -> f64 {
+        let text = match std::fs::read_to_string("/proc/loadavg") {
+            Ok(t) => t,
+            Err(_) => return 0.0,
+        };
+        let load: f64 = text.split_whitespace().next().and_then(|s| s.parse().ok()).unwrap_or(0.0);
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64;
+        (load / cores).clamp(0.0, 1.0)
+    }
+}
+
+/// Deterministic model: CRU grows with the number of circuits the worker
+/// is currently executing (each circuit contributes `per_circuit`).
+#[derive(Clone)]
+pub struct LoadModelCru {
+    active: Arc<AtomicUsize>,
+    per_circuit: f64,
+    baseline: f64,
+}
+
+impl LoadModelCru {
+    pub fn new(per_circuit: f64, baseline: f64) -> LoadModelCru {
+        LoadModelCru { active: Arc::new(AtomicUsize::new(0)), per_circuit, baseline }
+    }
+
+    /// Counter handle shared with the executor loop.
+    pub fn counter(&self) -> Arc<AtomicUsize> {
+        self.active.clone()
+    }
+}
+
+impl CruProbe for LoadModelCru {
+    fn sample(&self) -> f64 {
+        let n = self.active.load(Ordering::Relaxed) as f64;
+        (self.baseline + n * self.per_circuit).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proc_probe_in_unit_range() {
+        let p = ProcStatCru;
+        let v = p.sample();
+        assert!((0.0..=1.0).contains(&v));
+    }
+
+    #[test]
+    fn load_model_tracks_active_circuits() {
+        let p = LoadModelCru::new(0.2, 0.1);
+        assert!((p.sample() - 0.1).abs() < 1e-12);
+        p.counter().store(3, Ordering::Relaxed);
+        assert!((p.sample() - 0.7).abs() < 1e-12);
+        p.counter().store(100, Ordering::Relaxed);
+        assert_eq!(p.sample(), 1.0); // clamped
+    }
+}

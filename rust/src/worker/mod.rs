@@ -1,0 +1,14 @@
+//! Quantum worker: the process that actually executes circuits.
+//!
+//! A worker advertises a maximum qubit count (`MR`), executes circuit
+//! batches through its backend (PJRT artifacts or the Rust simulator),
+//! reports classical resource usage (`CRU`) and active circuits via
+//! heartbeats, and serves `execute` RPCs from the co-Manager.
+
+pub mod backend;
+pub mod cru;
+pub mod service;
+
+pub use backend::WorkerBackend;
+pub use cru::{CruProbe, LoadModelCru, ProcStatCru};
+pub use service::{WorkerHandle, WorkerOptions};

@@ -1,0 +1,258 @@
+//! Worker process runtime: execute-RPC server + registration + heartbeat
+//! loop (the distributed deployment path).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::backend::WorkerBackend;
+use super::cru::{CruProbe, LoadModelCru};
+use crate::circuit::QuClassiConfig;
+use crate::coordinator::job::CircuitJob;
+use crate::net::{RpcClient, RpcServer};
+use crate::wire::Value;
+
+/// Worker startup options.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// `MR` — advertised maximum qubits.
+    pub max_qubits: usize,
+    /// Where the AOT artifacts live (PJRT backend when present).
+    pub artifact_dir: PathBuf,
+    /// Heartbeat period in seconds (paper default: 5).
+    pub heartbeat_period: f64,
+    /// Listen address for execute RPCs ("127.0.0.1:0" = ephemeral).
+    pub listen: String,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            max_qubits: 5,
+            artifact_dir: PathBuf::from("artifacts"),
+            heartbeat_period: 5.0,
+            listen: "127.0.0.1:0".to_string(),
+        }
+    }
+}
+
+/// Handle to a running worker (drop/stop to shut down).
+pub struct WorkerHandle {
+    pub worker_id: u64,
+    pub listen_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    _server: RpcServer,
+    heartbeat_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Start a worker: serve `execute`, register with the manager at
+    /// `manager_addr`, and heartbeat until stopped.
+    pub fn start(manager_addr: &str, opts: WorkerOptions) -> Result<WorkerHandle, String> {
+        let backend = Arc::new(WorkerBackend::auto(&opts.artifact_dir));
+        let active = Arc::new(AtomicUsize::new(0));
+        let cru = LoadModelCru::new(1.0 / opts.max_qubits.max(1) as f64, 0.05);
+        // share the executing-circuit counter with the CRU model
+        let cru_counter = cru.counter();
+
+        // --- execute RPC server ---
+        let backend2 = backend.clone();
+        let active2 = active.clone();
+        let handler = move |op: &str, params: &Value| -> Result<Value, String> {
+            match op {
+                "execute" => {
+                    let jobs = params.req_arr("circuits")?;
+                    let mut config: Option<QuClassiConfig> = None;
+                    let mut pairs = Vec::with_capacity(jobs.len());
+                    for j in jobs {
+                        let job = CircuitJob::from_wire(j)?;
+                        if let Some(c) = config {
+                            if c != job.config {
+                                return Err("mixed configs in one execute".to_string());
+                            }
+                        }
+                        config = Some(job.config);
+                        pairs.push((job.thetas, job.data));
+                    }
+                    let config = config.ok_or("empty execute")?;
+                    active2.fetch_add(pairs.len(), Ordering::Relaxed);
+                    let result = backend2.execute(&config, &pairs);
+                    active2.fetch_sub(pairs.len(), Ordering::Relaxed);
+                    let fids = result?;
+                    Ok(Value::obj().with("fids", fids.as_slice()))
+                }
+                "ping" => Ok(Value::obj().with("pong", true)),
+                other => Err(format!("worker: unknown op '{other}'")),
+            }
+        };
+        let server = RpcServer::serve(opts.listen.as_str(), Arc::new(handler))
+            .map_err(|e| format!("worker listen: {e}"))?;
+        let listen_addr = server.local_addr();
+
+        // keep CRU counter synced with active executions
+        {
+            let active3 = active.clone();
+            let counter = cru_counter.clone();
+            std::thread::Builder::new()
+                .name("worker-cru-sync".into())
+                .spawn(move || loop {
+                    counter.store(active3.load(Ordering::Relaxed), Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_millis(100));
+                })
+                .map_err(|e| e.to_string())?;
+        }
+
+        // --- register with the manager ---
+        let client = RpcClient::connect(manager_addr, Duration::from_secs(5))
+            .map_err(|e| format!("connect manager: {e}"))?;
+        let resp = client
+            .call(
+                "register",
+                Value::obj()
+                    .with("max_qubits", opts.max_qubits)
+                    .with("addr", listen_addr.to_string())
+                    .with("cru", cru.sample()),
+            )
+            .map_err(|e| format!("register: {e}"))?;
+        let worker_id = resp.req_u64("worker_id")?;
+        crate::log_info!(
+            "worker",
+            "registered as w{worker_id} (MR={}, backend={}, listening {listen_addr})",
+            opts.max_qubits,
+            backend.name()
+        );
+
+        // --- heartbeat loop ---
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let period = Duration::from_secs_f64(opts.heartbeat_period);
+        let heartbeat_thread = std::thread::Builder::new()
+            .name(format!("heartbeat-w{worker_id}"))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    let _ = client.call(
+                        "heartbeat",
+                        Value::obj().with("worker_id", worker_id).with("cru", cru.sample()),
+                    );
+                    // sleep in small steps so stop is responsive
+                    let mut slept = Duration::ZERO;
+                    while slept < period && !stop2.load(Ordering::Relaxed) {
+                        let step = Duration::from_millis(50).min(period - slept);
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                }
+            })
+            .map_err(|e| e.to_string())?;
+
+        Ok(WorkerHandle {
+            worker_id,
+            listen_addr,
+            stop,
+            _server: server,
+            heartbeat_thread: Some(heartbeat_thread),
+        })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.heartbeat_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Stand-in manager that accepts register/heartbeat (integration with
+    /// the real manager lives in cluster::tcp tests).
+    fn fake_manager() -> RpcServer {
+        let handler = |op: &str, _params: &Value| -> Result<Value, String> {
+            match op {
+                "register" => Ok(Value::obj().with("worker_id", 7u64)),
+                "heartbeat" => Ok(Value::obj()),
+                other => Err(format!("unexpected {other}")),
+            }
+        };
+        RpcServer::serve("127.0.0.1:0", Arc::new(handler)).unwrap()
+    }
+
+    #[test]
+    fn worker_registers_and_serves_execute() {
+        let mgr = fake_manager();
+        let opts = WorkerOptions {
+            max_qubits: 5,
+            artifact_dir: PathBuf::from("/nonexistent"), // force qsim
+            heartbeat_period: 0.1,
+            listen: "127.0.0.1:0".to_string(),
+        };
+        let mut handle = WorkerHandle::start(&mgr.local_addr().to_string(), opts).unwrap();
+        assert_eq!(handle.worker_id, 7);
+
+        // call the worker's execute endpoint like the manager would
+        let client =
+            RpcClient::connect(handle.listen_addr, Duration::from_secs(2)).unwrap();
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let job = CircuitJob {
+            id: 1,
+            client: 1,
+            bank: 1,
+            index: 0,
+            config: cfg,
+            thetas: vec![0.3; 4],
+            data: vec![0.7; 4],
+        };
+        let resp = client
+            .call("execute", Value::obj().with("circuits", vec![job.to_wire()]))
+            .unwrap();
+        let fids = resp.req_f32_vec("fids").unwrap();
+        assert_eq!(fids.len(), 1);
+        let want = crate::circuit::builder::simulate_fidelity(&cfg, &[0.3; 4], &[0.7; 4]);
+        assert!((fids[0] - want).abs() < 1e-6);
+        handle.stop();
+    }
+
+    #[test]
+    fn execute_rejects_mixed_configs() {
+        let mgr = fake_manager();
+        let opts = WorkerOptions {
+            artifact_dir: PathBuf::from("/nonexistent"),
+            heartbeat_period: 0.5,
+            ..Default::default()
+        };
+        let mut handle = WorkerHandle::start(&mgr.local_addr().to_string(), opts).unwrap();
+        let client = RpcClient::connect(handle.listen_addr, Duration::from_secs(2)).unwrap();
+        let j1 = CircuitJob {
+            id: 1,
+            client: 1,
+            bank: 1,
+            index: 0,
+            config: QuClassiConfig::new(5, 1).unwrap(),
+            thetas: vec![0.0; 4],
+            data: vec![0.0; 4],
+        };
+        let j2 = CircuitJob {
+            id: 2,
+            client: 1,
+            bank: 1,
+            index: 1,
+            config: QuClassiConfig::new(7, 1).unwrap(),
+            thetas: vec![0.0; 6],
+            data: vec![0.0; 6],
+        };
+        let err = client
+            .call("execute", Value::obj().with("circuits", vec![j1.to_wire(), j2.to_wire()]))
+            .unwrap_err();
+        assert!(err.to_string().contains("mixed configs"));
+        handle.stop();
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration: full distributed training runs across deployment modes.
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::{serve_manager, InProcCluster, RemoteClient};
+use dqulearn::coordinator::{Manager, ManagerConfig};
+use dqulearn::data::Dataset;
+use dqulearn::model::exec::QsimExecutor;
+use dqulearn::model::optimizer::Optimizer;
+use dqulearn::model::quclassi::LossKind;
+use dqulearn::model::{QuClassiModel, TrainConfig, Trainer};
+use dqulearn::util::Rng;
+use dqulearn::worker::{WorkerHandle, WorkerOptions};
+
+fn tc(epochs: usize, loss: LossKind) -> TrainConfig {
+    TrainConfig {
+        epochs,
+        optimizer: Optimizer::adam(0.05),
+        train_classical: true,
+        classical_lr_scale: 0.1,
+        seed: 7,
+        early_stop_acc: None,
+        loss,
+    }
+}
+
+/// Paper §IV-B: distributed and non-distributed training agree. Ours are
+/// bitwise-identical computations, so given the same seeds the accuracies
+/// agree exactly (a delta of 0 < the paper's < 2%).
+#[test]
+fn accuracy_parity_across_all_pairs() {
+    for (a, b) in [(3u8, 9u8), (3, 8), (3, 6), (1, 5)] {
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let ds = Dataset::binary_pair(None, a, b, 14, 42);
+        let mut m_base = QuClassiModel::new(cfg, &mut Rng::new(21));
+        let base = Trainer::new(tc(6, LossKind::Discriminative))
+            .train(&mut m_base, &ds, &QsimExecutor)
+            .unwrap();
+
+        let cluster = InProcCluster::builder().workers(&[5, 5]).build().unwrap();
+        let mut m_dist = QuClassiModel::new(cfg, &mut Rng::new(21));
+        let dist = Trainer::new(tc(6, LossKind::Discriminative))
+            .train(&mut m_dist, &ds, &cluster)
+            .unwrap();
+        cluster.shutdown();
+
+        let delta = (base.test_accuracy - dist.test_accuracy).abs();
+        assert!(delta < 0.02, "pair {a}/{b}: accuracy delta {delta}");
+        assert!(
+            dist.final_train_accuracy() >= 0.75,
+            "pair {a}/{b}: distributed training failed to learn ({})",
+            dist.final_train_accuracy()
+        );
+    }
+}
+
+/// Generative (QuClassi-native) loss learns every pair robustly.
+#[test]
+fn generative_loss_learns_all_pairs() {
+    for (a, b) in [(3u8, 9u8), (3, 8), (3, 6), (1, 5)] {
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let ds = Dataset::binary_pair(None, a, b, 16, 11);
+        let mut model = QuClassiModel::new(cfg, &mut Rng::new(5));
+        let report = Trainer::new(tc(16, LossKind::Generative))
+            .train(&mut model, &ds, &QsimExecutor)
+            .unwrap();
+        assert!(
+            report.final_train_accuracy() >= 0.8,
+            "pair {a}/{b}: generative acc {}",
+            report.final_train_accuracy()
+        );
+    }
+}
+
+/// The whole TCP stack (manager server + RPC workers + remote client)
+/// trains a model end-to-end.
+#[test]
+fn tcp_distributed_training() {
+    let manager = Manager::new(ManagerConfig { heartbeat_period: 0.5, ..Default::default() });
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let _w1 = WorkerHandle::start(
+        &addr,
+        WorkerOptions {
+            max_qubits: 5,
+            artifact_dir: "/nonexistent".into(),
+            heartbeat_period: 0.2,
+            listen: "127.0.0.1:0".into(),
+        },
+    )
+    .unwrap();
+    let _w2 = WorkerHandle::start(
+        &addr,
+        WorkerOptions {
+            max_qubits: 5,
+            artifact_dir: "/nonexistent".into(),
+            heartbeat_period: 0.2,
+            listen: "127.0.0.1:0".into(),
+        },
+    )
+    .unwrap();
+
+    let client = RemoteClient::connect(&addr).unwrap();
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let ds = Dataset::binary_pair(None, 1, 5, 10, 3);
+    let mut model = QuClassiModel::new(cfg, &mut Rng::new(9));
+    let report = Trainer::new(tc(4, LossKind::Generative))
+        .train(&mut model, &ds, &client)
+        .unwrap();
+    assert!(report.final_train_accuracy() > 0.6);
+    assert!(report.total_circuits > 0);
+    manager.shutdown();
+}
+
+/// Paper workload mix: four concurrent tenants against a heterogeneous
+/// pool; results must be exactly what local simulation produces.
+#[test]
+fn four_tenants_heterogeneous_pool() {
+    use dqulearn::model::exec::CircuitExecutor;
+    let cluster = InProcCluster::builder().workers(&[5, 10, 15, 20]).build().unwrap();
+    let specs = [(5usize, 1usize), (5, 2), (7, 1), (7, 2)];
+    let threads: Vec<_> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(q, l))| {
+            let manager = cluster.manager.clone();
+            std::thread::spawn(move || {
+                let cfg = QuClassiConfig::new(q, l).unwrap();
+                let client = manager.new_client();
+                let mut rng = Rng::new(50 + i as u64);
+                let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..40)
+                    .map(|_| {
+                        (
+                            (0..cfg.n_params()).map(|_| rng.f32() * 3.0).collect(),
+                            (0..cfg.n_features()).map(|_| rng.f32() * 3.0).collect(),
+                        )
+                    })
+                    .collect();
+                let got = manager.execute_bank(client, cfg, &pairs).unwrap();
+                let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+                assert_eq!(got, want, "tenant {i} ({q}Q/{l}L) results corrupted");
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let stats = cluster.manager.stats();
+    assert_eq!(stats.completed, 160);
+    cluster.shutdown();
+}

@@ -1,0 +1,132 @@
+//! Cross-backend parity: the AOT JAX/Pallas artifacts executed via PJRT
+//! must agree with the from-scratch Rust statevector simulator on every
+//! paper configuration — the strongest end-to-end correctness signal in
+//! the repository (two independent implementations, one in Python/XLA,
+//! one in Rust, agreeing to float32 precision).
+//!
+//! Skipped gracefully when `artifacts/` has not been built yet.
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::model::exec::{CircuitExecutor, QsimExecutor};
+use dqulearn::runtime::PjrtEngine;
+use dqulearn::util::Rng;
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::load(dir).expect("artifacts present but engine failed to load"))
+}
+
+fn random_pairs(cfg: &QuClassiConfig, n: usize, seed: u64) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (
+                (0..cfg.n_params()).map(|_| rng.range_f64(-6.3, 6.3) as f32).collect(),
+                (0..cfg.n_features()).map(|_| rng.range_f64(-6.3, 6.3) as f32).collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn all_configs_match_to_float_precision() {
+    let Some(engine) = engine() else { return };
+    for cfg in QuClassiConfig::paper_configs() {
+        let pairs = random_pairs(&cfg, 64, cfg.qubits as u64 * 100 + cfg.layers as u64);
+        let pjrt = engine.execute(&cfg, &pairs).unwrap();
+        let qsim = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+        let mut max_err = 0.0f32;
+        for (a, b) in pjrt.iter().zip(qsim.iter()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 5e-5, "{cfg:?}: max |Δfid| = {max_err}");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn batching_is_transparent() {
+    // Banks larger and smaller than the artifact batch (32) must give the
+    // same answers as one-at-a-time execution (padding correctness).
+    let Some(engine) = engine() else { return };
+    let cfg = QuClassiConfig::new(5, 3).unwrap();
+    let pairs = random_pairs(&cfg, 71, 9); // 71 = 2*32 + 7 exercises the padded tail
+    let all = engine.execute(&cfg, &pairs).unwrap();
+    for (i, p) in pairs.iter().enumerate().step_by(17) {
+        let single = engine.execute(&cfg, std::slice::from_ref(p)).unwrap();
+        assert!((single[0] - all[i]).abs() < 1e-6, "index {i}");
+    }
+    let stats = engine.stats();
+    assert!(stats.executions >= 3);
+    assert!(stats.padded_circuits > 0, "tail chunk must have been padded");
+    engine.shutdown();
+}
+
+#[test]
+fn grad_artifact_matches_bank_assembly() {
+    // The fused on-device gradient (L2 perf path) must equal the
+    // host-assembled parameter-shift gradients from individual circuits.
+    let Some(engine) = engine() else { return };
+    for cfg in [QuClassiConfig::new(5, 2).unwrap(), QuClassiConfig::new(7, 3).unwrap()] {
+        let mut rng = Rng::new(31);
+        let theta: Vec<f32> = (0..cfg.n_params()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+        let data: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..cfg.n_features()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect())
+            .collect();
+        let (fids, grads) = engine.execute_grad(&cfg, &theta, &data).unwrap();
+
+        let bank = dqulearn::circuit::CircuitBank::new(cfg, &theta);
+        for (i, d) in data.iter().enumerate() {
+            let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+                bank.entries().iter().map(|e| (e.thetas.clone(), d.clone())).collect();
+            let bank_fids = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+            let (fid0, g) = bank.assemble(&bank_fids);
+            assert!((fids[i] - fid0).abs() < 5e-5, "{cfg:?} fid sample {i}");
+            for p in 0..cfg.n_params() {
+                assert!(
+                    (grads[i][p] - g[p]).abs() < 5e-4,
+                    "{cfg:?} grad sample {i} param {p}: {} vs {}",
+                    grads[i][p],
+                    g[p]
+                );
+            }
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn engine_rejects_arity_mismatches() {
+    let Some(engine) = engine() else { return };
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let bad = vec![(vec![0.0f32; 3], vec![0.0f32; 4])]; // theta too short
+    assert!(engine.execute(&cfg, &bad).is_err());
+    engine.shutdown();
+}
+
+#[test]
+fn engine_is_shareable_across_threads() {
+    let Some(engine) = engine() else { return };
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let e = engine.clone();
+            std::thread::spawn(move || {
+                let pairs = random_pairs(&cfg, 10, t);
+                let got = e.execute(&cfg, &pairs).unwrap();
+                let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+                for (a, b) in got.iter().zip(want.iter()) {
+                    assert!((a - b).abs() < 5e-5);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    engine.shutdown();
+}

