@@ -45,6 +45,7 @@ fn main() -> Result<(), String> {
         artifact_dir: artifacts.to_path_buf(),
         heartbeat_period: 0.5,
         listen: "127.0.0.1:0".to_string(),
+        threads: 0, // auto-detect: the backend pools circuits across cores
     };
     let w1 = WorkerHandle::start(&addr, worker_opts(5))?;
     let w2 = WorkerHandle::start(&addr, worker_opts(10))?;

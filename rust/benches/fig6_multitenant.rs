@@ -9,8 +9,12 @@
 //! ```
 
 use dqulearn::benchlib::Table;
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::InProcCluster;
 use dqulearn::env::scenarios::multi_tenant_figure;
 use dqulearn::env::Calibration;
+use dqulearn::model::exec::CircuitExecutor;
+use dqulearn::util::Rng;
 
 /// Paper-reported per-client effects (where stated).
 const PAPER_REDUCTION: &[(&str, f64)] = &[("5Q/1L", 68.7), ("7Q/2L", 8.2)];
@@ -78,4 +82,52 @@ fn main() {
         assert!(s.cps_gain() > 1.5, "seed {seed}: headline vanished");
     }
     println!("seed-robustness check passed (3 extra seeds)");
+
+    live_worker_parallelism();
+}
+
+/// Live (non-DES) counterpart: the same 5/10/15/20-qubit pool executing
+/// real statevector circuits, with serial vs pooled worker backends
+/// (DESIGN.md §11). Results are bitwise identical across the two runs;
+/// only the wall clock moves.
+fn live_worker_parallelism() {
+    const CIRCUITS: usize = 512;
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let mut rng = Rng::new(6);
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..CIRCUITS)
+        .map(|_| {
+            (
+                (0..cfg.n_params()).map(|_| rng.f32() * 2.0).collect(),
+                (0..cfg.n_features()).map(|_| rng.f32() * 2.0).collect(),
+            )
+        })
+        .collect();
+
+    let run = |threads: usize| -> (f64, Vec<f32>) {
+        let cluster = InProcCluster::builder()
+            .workers(&[5, 10, 15, 20])
+            .worker_threads(threads)
+            .build()
+            .expect("cluster");
+        let t = std::time::Instant::now();
+        let fids = cluster.execute_bank(&cfg, &pairs).expect("bank");
+        let secs = t.elapsed().as_secs_f64();
+        cluster.shutdown();
+        (secs, fids)
+    };
+
+    println!("\n== live pool: {CIRCUITS} x 5Q/1L circuits, serial vs pooled workers ==");
+    let (serial_secs, serial_fids) = run(1);
+    let mut table = Table::new(&["worker threads", "wall(s)", "circuits/s", "gain"]);
+    for threads in [1usize, 2, 4] {
+        let (secs, fids) = if threads == 1 { (serial_secs, serial_fids.clone()) } else { run(threads) };
+        assert_eq!(fids, serial_fids, "parallel workers changed results");
+        table.row(&[
+            threads.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.0}", CIRCUITS as f64 / secs),
+            format!("{:.2}x", serial_secs / secs),
+        ]);
+    }
+    print!("{}", table.render());
 }

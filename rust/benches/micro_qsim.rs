@@ -5,9 +5,13 @@
 //! cargo bench --bench micro_qsim
 //! ```
 
-use dqulearn::benchlib::{BenchConfig, Bencher};
-use dqulearn::circuit::{build_quclassi, builder::simulate_fidelity, QuClassiConfig};
-use dqulearn::qsim::State;
+use dqulearn::benchlib::{BenchConfig, Bencher, Table};
+use dqulearn::circuit::{
+    build_quclassi,
+    builder::{simulate_fidelity, simulate_fidelity_fused},
+    QuClassiConfig,
+};
+use dqulearn::qsim::{fusion, shots, State};
 use dqulearn::util::Rng;
 
 fn main() {
@@ -29,12 +33,34 @@ fn main() {
         });
     }
 
-    // full QuClassi circuits (the per-circuit cost the DES calibrates)
+    // full QuClassi circuits (the per-circuit cost the DES calibrates),
+    // serial gate walk vs the gate-fusion pipeline
     for cfg in QuClassiConfig::paper_configs() {
         let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
         let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
         b.bench(&format!("full circuit q={} l={}", cfg.qubits, cfg.layers), || {
             std::hint::black_box(simulate_fidelity(&cfg, &thetas, &data));
+        });
+        b.bench(&format!("fused circuit q={} l={}", cfg.qubits, cfg.layers), || {
+            std::hint::black_box(simulate_fidelity_fused(&cfg, &thetas, &data));
+        });
+    }
+
+    // the fusion pass itself (amortized once per circuit shape)
+    {
+        let cfg = QuClassiConfig::new(7, 3).unwrap();
+        let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
+        let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
+        let gates = build_quclassi(&cfg, &thetas, &data);
+        let program = fusion::fuse(&gates);
+        println!(
+            "fusion q=7 l=3: {} gates -> {} fused ops ({} eliminated)",
+            gates.len(),
+            program.len(),
+            program.fused_away()
+        );
+        b.bench("fusion pass q=7 l=3", || {
+            std::hint::black_box(fusion::fuse(&gates));
         });
     }
 
@@ -52,4 +78,34 @@ fn main() {
     for r in b.results().iter().filter(|r| r.name.starts_with("full circuit")) {
         println!("  {:<28} {:>10.0} circuits/s", r.name, r.throughput_per_sec());
     }
+
+    // shot-pool scaling: the acceptance target for the parallel engine is
+    // >= 2x shot throughput at 4 threads vs the serial path (DESIGN.md §11)
+    println!("\nshot-pool scaling (q=7 l=3, {} shots):", SHOT_WORKLOAD);
+    let cfg = QuClassiConfig::new(7, 3).unwrap();
+    let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
+    let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
+    let gates = build_quclassi(&cfg, &thetas, &data);
+    let mut table = Table::new(&["threads", "wall(s)", "shots/s", "speedup vs serial"]);
+    let serial_secs = time_shots(&cfg, &gates, 1);
+    for threads in [1usize, 2, 4] {
+        let secs = if threads == 1 { serial_secs } else { time_shots(&cfg, &gates, threads) };
+        table.row(&[
+            threads.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.0}", SHOT_WORKLOAD as f64 / secs),
+            format!("{:.2}x", serial_secs / secs),
+        ]);
+    }
+    print!("{}", table.render());
+}
+
+const SHOT_WORKLOAD: usize = 400_000;
+
+fn time_shots(cfg: &QuClassiConfig, gates: &[dqulearn::qsim::gates::Gate], threads: usize) -> f64 {
+    // one warmup draw, then the timed run
+    std::hint::black_box(shots::run_shots(cfg.qubits, gates, 10_000, threads, 3));
+    let t = std::time::Instant::now();
+    std::hint::black_box(shots::run_shots(cfg.qubits, gates, SHOT_WORKLOAD, threads, 7));
+    t.elapsed().as_secs_f64()
 }

@@ -79,6 +79,18 @@ pub fn simulate_fidelity(config: &QuClassiConfig, thetas: &[f32], data: &[f32]) 
     (2.0 * st.prob_zero(0) - 1.0) as f32
 }
 
+/// [`simulate_fidelity`] through the gate-fusion pipeline
+/// (`qsim::fusion`): adjacent one/two-qubit gates coalesce into fused
+/// matrices before application. Equal to the serial result up to float
+/// re-association (parity asserted in `rust/tests/parallel_parity.rs`).
+pub fn simulate_fidelity_fused(config: &QuClassiConfig, thetas: &[f32], data: &[f32]) -> f32 {
+    let gates = build_quclassi(config, thetas, data);
+    let program = crate::qsim::fusion::fuse(&gates);
+    let mut st = State::zero(config.qubits);
+    program.apply(&mut st);
+    (2.0 * st.prob_zero(0) - 1.0) as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -37,6 +37,9 @@ pub struct InProcClusterBuilder {
     artifacts: Option<PathBuf>,
     manager_config: ManagerConfig,
     noise: Option<NoiseModel>,
+    /// Simulator thread budget per worker (DESIGN.md §11): 1 = serial
+    /// backend (default), 0 = detect from the host, N = fixed pool.
+    threads: usize,
 }
 
 /// A running in-process cluster.
@@ -53,6 +56,7 @@ impl InProcCluster {
             artifacts: None,
             manager_config: ManagerConfig::default(),
             noise: None,
+            threads: 1,
         }
     }
 }
@@ -88,18 +92,46 @@ impl InProcClusterBuilder {
         self
     }
 
+    /// Give every noiseless worker an internal simulator thread pool of
+    /// `threads` (`0` = detect from the host). Results stay bitwise
+    /// identical to the serial backend; only throughput changes
+    /// (DESIGN.md §11). Workers with a noise model keep the serial
+    /// trajectory backend — its single RNG stream is inherently
+    /// order-dependent — and register a thread budget of 1.
+    pub fn worker_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Assemble and start the cluster.
     pub fn build(self) -> Result<InProcCluster, String> {
         let manager = Manager::new(self.manager_config);
+        let threads = if self.threads == 0 {
+            crate::model::exec::detect_threads()
+        } else {
+            self.threads
+        };
         for (i, &mq) in self.worker_qubits.iter().enumerate() {
             let per_worker = self.worker_noise.get(i).copied().flatten().or(self.noise);
             let backend = match (&per_worker, &self.artifacts) {
                 (Some(nm), _) => WorkerBackend::NoisyQsim(*nm, 0x5EED + i as u64),
-                (None, Some(dir)) => WorkerBackend::auto(dir),
+                (None, Some(dir)) => WorkerBackend::auto_with_threads(dir, threads),
+                (None, None) if threads > 1 => {
+                    WorkerBackend::ParallelQsim(crate::model::exec::ParallelQsimExecutor::new(
+                        threads,
+                    ))
+                }
                 (None, None) => WorkerBackend::Qsim,
             };
             // report gate-error magnitude as the noise estimate
             let noise_level = per_worker.map(|n| n.p2).unwrap_or(0.0);
-            manager.register_worker_profile(mq, 0.0, noise_level, Arc::new(InProcChannel { backend }));
+            manager.register_worker_full(
+                mq,
+                0.0,
+                noise_level,
+                backend.threads(),
+                Arc::new(InProcChannel { backend }),
+            );
         }
         let client = manager.new_client();
         Ok(InProcCluster { manager, client })
@@ -142,6 +174,29 @@ mod tests {
     use crate::model::quclassi::LossKind;
 use crate::model::{QuClassiModel, TrainConfig, Trainer};
     use crate::util::Rng;
+
+    #[test]
+    fn parallel_workers_match_serial_cluster_bitwise() {
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let mut rng = Rng::new(77);
+        let pairs: Vec<CircuitPair> = (0..40)
+            .map(|_| {
+                (
+                    (0..cfg.n_params()).map(|_| rng.f32()).collect(),
+                    (0..cfg.n_features()).map(|_| rng.f32()).collect(),
+                )
+            })
+            .collect();
+        let serial = InProcCluster::builder().workers(&[5, 5]).build().unwrap();
+        let parallel =
+            InProcCluster::builder().workers(&[5, 5]).worker_threads(4).build().unwrap();
+        let a = serial.execute_bank(&cfg, &pairs).unwrap();
+        let b = parallel.execute_bank(&cfg, &pairs).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        serial.shutdown();
+        parallel.shutdown();
+    }
 
     #[test]
     fn cluster_matches_local_execution() {

@@ -4,7 +4,7 @@
 //! Message flow (all framed JSON, `net::rpc` envelope):
 //!
 //! ```text
-//! worker  -> manager : register {max_qubits, addr, cru} -> {worker_id}
+//! worker  -> manager : register {max_qubits, addr, cru, threads} -> {worker_id}
 //! worker  -> manager : heartbeat {worker_id, cru}
 //! client  -> manager : submit_bank {client, qubits, layers, circuits} -> {bank}
 //! client  -> manager : wait_bank {bank} -> {fids}
@@ -65,11 +65,16 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
                 let max_qubits = params.req_usize("max_qubits")?;
                 let addr = params.req_str("addr")?.to_string();
                 let cru = params.req_f64("cru").unwrap_or(0.0);
+                // Optional thread budget (older workers omit it): sizes
+                // dispatch batches to the worker's real parallelism.
+                let threads = params.get("threads").and_then(Value::as_usize).unwrap_or(1);
                 let rpc = RpcClient::connect(addr.as_str(), Duration::from_secs(5))
                     .map_err(|e| format!("dial worker back: {e}"))?;
-                let id = manager.register_worker(
+                let id = manager.register_worker_full(
                     max_qubits,
                     cru,
+                    0.0,
+                    threads,
                     Arc::new(RpcWorkerChannel { client: rpc }),
                 );
                 Ok(Value::obj().with("worker_id", id))
@@ -203,6 +208,7 @@ mod tests {
                     artifact_dir: "/nonexistent".into(), // qsim backend
                     heartbeat_period: 0.1,
                     listen: "127.0.0.1:0".to_string(),
+                    threads: 2,
                 },
             )
             .unwrap()
@@ -252,6 +258,7 @@ mod tests {
                 artifact_dir: "/nonexistent".into(),
                 heartbeat_period: 0.05,
                 listen: "127.0.0.1:0".to_string(),
+                threads: 1,
             },
         )
         .unwrap();
@@ -265,6 +272,7 @@ mod tests {
                 artifact_dir: "/nonexistent".into(),
                 heartbeat_period: 0.05,
                 listen: "127.0.0.1:0".to_string(),
+                threads: 1,
             },
         )
         .unwrap();

@@ -21,6 +21,7 @@ pub struct BankStore {
 }
 
 impl BankStore {
+    /// Empty store.
     pub fn new() -> BankStore {
         BankStore::default()
     }
@@ -93,6 +94,7 @@ impl BankStore {
         g.get(&bank).map(|b| (b.fids.len() - b.remaining, b.fids.len()))
     }
 
+    /// Number of banks currently open.
     pub fn in_flight(&self) -> usize {
         self.inner.lock().expect("bankstore poisoned").len()
     }

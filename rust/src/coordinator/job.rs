@@ -26,6 +26,7 @@ impl CircuitJob {
         self.config.qubit_demand()
     }
 
+    /// Wire encoding of the job (manager→worker `execute` payload).
     pub fn to_wire(&self) -> Value {
         Value::obj()
             .with("id", self.id)
@@ -38,6 +39,7 @@ impl CircuitJob {
             .with("data", self.data.as_slice())
     }
 
+    /// Decode the wire encoding, validating arities against the config.
     pub fn from_wire(v: &Value) -> Result<CircuitJob, String> {
         let config = QuClassiConfig::new(v.req_usize("qubits")?, v.req_usize("layers")?)?;
         let thetas = v.req_f32_vec("thetas")?;

@@ -36,6 +36,11 @@ pub struct ManagerConfig {
     /// Max circuits packed into one dispatch to a worker (the artifact
     /// batch is 32; 1 reproduces the paper's per-circuit assignment).
     pub max_batch: usize,
+    /// Circuits dispatched per worker thread: a worker that registered
+    /// `T` execution threads receives batches of up to
+    /// `min(max_batch, T * batch_per_thread)` circuits, so the dispatch
+    /// size tracks the worker's real parallelism (DESIGN.md §11).
+    pub batch_per_thread: usize,
     /// Pending-queue backpressure limit (submits block above this).
     pub max_queue: usize,
     /// Bank wait timeout.
@@ -51,6 +56,7 @@ impl Default for ManagerConfig {
         ManagerConfig {
             heartbeat_period: 5.0,
             max_batch: 32,
+            batch_per_thread: 32,
             max_queue: 100_000,
             wait_timeout: Duration::from_secs(600),
             noise_aware_alpha: None,
@@ -97,10 +103,12 @@ pub struct Manager {
 }
 
 impl Manager {
+    /// Start a co-Manager on the system clock.
     pub fn new(cfg: ManagerConfig) -> Manager {
         Self::with_clock(cfg, Arc::new(SystemClock::new()))
     }
 
+    /// Start a co-Manager on an explicit clock (virtual time in tests).
     pub fn with_clock(cfg: ManagerConfig, clock: Arc<dyn Clock>) -> Manager {
         let m = Manager {
             inner: Arc::new(Inner {
@@ -156,13 +164,26 @@ impl Manager {
         noise: f64,
         channel: Arc<dyn WorkerChannel>,
     ) -> WorkerId {
+        self.register_worker_full(max_qubits, cru, noise, 1, channel)
+    }
+
+    /// Full registration: noise estimate plus the worker's execution
+    /// thread budget, which sizes dispatch batches (DESIGN.md §11).
+    pub fn register_worker_full(
+        &self,
+        max_qubits: usize,
+        cru: f64,
+        noise: f64,
+        threads: usize,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> WorkerId {
         let now = self.inner.clock.now();
         let id = self
             .inner
             .registry
             .lock()
             .unwrap()
-            .register_with_noise(max_qubits, cru, noise, now);
+            .register_full(max_qubits, cru, noise, threads, now);
         self.inner.channels.lock().unwrap().insert(id, channel);
         self.inner.work_cv.notify_all();
         id
@@ -251,18 +272,22 @@ impl Manager {
         self.wait_bank(bank)
     }
 
+    /// Snapshot of the aggregate counters.
     pub fn stats(&self) -> ManagerStats {
         self.inner.stats.lock().unwrap().clone()
     }
 
+    /// Number of registered (live) workers.
     pub fn worker_count(&self) -> usize {
         self.inner.registry.lock().unwrap().len()
     }
 
+    /// Circuits currently pending assignment.
     pub fn queue_len(&self) -> usize {
         self.inner.queue.lock().unwrap().len()
     }
 
+    /// Stop the scheduler loop and wake all waiters.
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
         self.inner.work_cv.notify_all();
@@ -366,10 +391,19 @@ impl Manager {
         };
         let config = head.config;
 
-        // ...then pack same-config circuits into the batch.
+        // ...then pack same-config circuits into the batch, sized by the
+        // worker's registered thread budget so one dispatch saturates its
+        // backend pool without starving co-tenants (DESIGN.md §11).
+        let worker_threads = reg.get(worker).map(|w| w.threads).unwrap_or(1);
+        let batch_limit = self
+            .inner
+            .cfg
+            .max_batch
+            .min(worker_threads.saturating_mul(self.inner.cfg.batch_per_thread))
+            .max(1);
         let mut jobs = Vec::new();
         let mut scanned = 0;
-        while scanned < q.len() && jobs.len() < self.inner.cfg.max_batch {
+        while scanned < q.len() && jobs.len() < batch_limit {
             if q[scanned].config == config {
                 jobs.push(q.remove(scanned).unwrap());
             } else {
@@ -561,6 +595,24 @@ mod tests {
         let fids = m.execute_bank(m.new_client(), cfg, &pairs).unwrap();
         assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         assert!(m.stats().dispatches >= 15); // 30 circuits / batch 2
+        m.shutdown();
+    }
+
+    #[test]
+    fn batches_are_sized_by_worker_thread_budget() {
+        // max_batch is large; the 2-thread worker's budget (2 * 3 = 6)
+        // caps each dispatch instead.
+        let m = Manager::new(ManagerConfig {
+            max_batch: 100,
+            batch_per_thread: 3,
+            ..Default::default()
+        });
+        m.register_worker_full(5, 0.0, 0.0, 2, Arc::new(SimChannel));
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 30);
+        let fids = m.execute_bank(m.new_client(), cfg, &pairs).unwrap();
+        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        assert!(m.stats().dispatches >= 5, "expected >= 30/6 dispatches");
         m.shutdown();
     }
 

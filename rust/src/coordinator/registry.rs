@@ -25,6 +25,10 @@ pub struct WorkerState {
     /// Estimated gate-error level of this worker in [0, 1] (extension:
     /// the paper's future-work noise-aware scheduling; 0 = ideal).
     pub noise: f64,
+    /// Execution thread budget reported at registration (>= 1): how many
+    /// circuits the worker's backend runs concurrently. The manager
+    /// sizes dispatch batches by it (DESIGN.md §11).
+    pub threads: usize,
 }
 
 impl WorkerState {
@@ -46,6 +50,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Empty registry with the given heartbeat period (seconds).
     pub fn new(heartbeat_period: f64) -> Registry {
         Registry { workers: BTreeMap::new(), next_id: 1, heartbeat_period, max_missed: 3 }
     }
@@ -64,8 +69,22 @@ impl Registry {
         noise: f64,
         now: f64,
     ) -> WorkerId {
+        self.register_full(max_qubits, cru, noise, 1, now)
+    }
+
+    /// Full registration record: noise estimate (extension §10) plus the
+    /// worker's execution thread budget (DESIGN.md §11; clamped to >= 1).
+    pub fn register_full(
+        &mut self,
+        max_qubits: usize,
+        cru: f64,
+        noise: f64,
+        threads: usize,
+        now: f64,
+    ) -> WorkerId {
         let id = self.next_id;
         self.next_id += 1;
+        let threads = threads.max(1);
         self.workers.insert(
             id,
             WorkerState {
@@ -76,9 +95,13 @@ impl Registry {
                 last_heartbeat: now,
                 active: BTreeMap::new(),
                 noise,
+                threads,
             },
         );
-        crate::log_info!("registry", "worker w{id} joined (MR={max_qubits}, CRU={cru:.2})");
+        crate::log_info!(
+            "registry",
+            "worker w{id} joined (MR={max_qubits}, CRU={cru:.2}, threads={threads})"
+        );
         id
     }
 
@@ -162,18 +185,22 @@ impl Registry {
         }
     }
 
+    /// Look up one worker's state.
     pub fn get(&self, id: WorkerId) -> Option<&WorkerState> {
         self.workers.get(&id)
     }
 
+    /// Iterate over all registered workers (ascending id).
     pub fn workers(&self) -> impl Iterator<Item = &WorkerState> {
         self.workers.values()
     }
 
+    /// Number of registered workers.
     pub fn len(&self) -> usize {
         self.workers.len()
     }
 
+    /// True when no workers are registered.
     pub fn is_empty(&self) -> bool {
         self.workers.is_empty()
     }
@@ -256,6 +283,17 @@ mod tests {
         // double release is harmless
         r.release(id, 1);
         assert_eq!(r.get(id).unwrap().available(), 10);
+    }
+
+    #[test]
+    fn thread_budget_recorded_and_clamped() {
+        let mut r = Registry::new(5.0);
+        let a = r.register(5, 0.0, 0.0);
+        assert_eq!(r.get(a).unwrap().threads, 1); // default budget
+        let b = r.register_full(20, 0.0, 0.0, 4, 0.0);
+        assert_eq!(r.get(b).unwrap().threads, 4);
+        let c = r.register_full(5, 0.0, 0.0, 0, 0.0);
+        assert_eq!(r.get(c).unwrap().threads, 1); // clamped
     }
 
     #[test]

@@ -35,7 +35,8 @@ fn app() -> App {
                 .opt_default("qubits", "max qubits (MR)", "5")
                 .opt_default("artifacts", "AOT artifact directory", "artifacts")
                 .opt_default("heartbeat", "heartbeat period seconds", "5")
-                .opt_default("listen", "worker listen address", "127.0.0.1:0"),
+                .opt_default("listen", "worker listen address", "127.0.0.1:0")
+                .opt_default("threads", "simulator thread budget (0 = auto-detect)", "0"),
             CommandSpec::new("train", "train a QuClassi classifier")
                 .opt("manager", "remote manager address (else in-proc)")
                 .opt_default("in-proc", "in-proc worker qubit list", "5,5")
@@ -113,6 +114,7 @@ fn cmd_worker(p: &Parsed) -> Result<(), String> {
         artifact_dir: p.get_or("artifacts", "artifacts").into(),
         heartbeat_period: p.get_f64("heartbeat").map_err(|e| e.to_string())?.unwrap_or(5.0),
         listen: p.get_or("listen", "127.0.0.1:0"),
+        threads: p.get_usize("threads").map_err(|e| e.to_string())?.unwrap_or(0),
     };
     let manager = p.get_or("manager", "127.0.0.1:7001");
     let handle = WorkerHandle::start(&manager, opts)?;

@@ -6,6 +6,8 @@
 //!
 //! * [`QsimExecutor`] — the in-process Rust statevector simulator
 //!   (baseline / fallback path).
+//! * [`ParallelQsimExecutor`] — the same simulator striped across a
+//!   scoped thread pool (bitwise-identical results, parallel wall-clock).
 //! * `runtime::PjrtEngine` — the AOT JAX/Pallas artifact via PJRT
 //!   (production path).
 //! * `cluster::ClusterClient` — submits to the distributed co-Manager
@@ -49,6 +51,59 @@ impl CircuitExecutor for QsimExecutor {
 
     fn describe(&self) -> String {
         "qsim (rust statevector)".to_string()
+    }
+}
+
+/// Rust statevector execution fanned across a scoped worker-thread pool.
+///
+/// Circuits in a bank are independent, so the bank is striped across
+/// `threads` OS threads via [`crate::util::pool::parallel_indexed`];
+/// every circuit is simulated by the same serial routine
+/// ([`builder::simulate_fidelity`]),
+/// which makes the output **bitwise identical** to [`QsimExecutor`] —
+/// only wall-clock changes. This is the worker-side lever behind the
+/// paper's circuits-per-second scaling (DESIGN.md §11).
+#[derive(Debug)]
+pub struct ParallelQsimExecutor {
+    threads: usize,
+}
+
+impl ParallelQsimExecutor {
+    /// Pool with a fixed thread budget (clamped to at least 1).
+    pub fn new(threads: usize) -> ParallelQsimExecutor {
+        ParallelQsimExecutor { threads: threads.max(1) }
+    }
+
+    /// Pool sized to the host's available parallelism.
+    pub fn auto() -> ParallelQsimExecutor {
+        ParallelQsimExecutor::new(detect_threads())
+    }
+
+    /// The configured thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+/// Host thread budget (1 when the query fails).
+pub fn detect_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl CircuitExecutor for ParallelQsimExecutor {
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, String> {
+        Ok(crate::util::pool::parallel_indexed(pairs.len(), self.threads, |i| {
+            let (thetas, data) = &pairs[i];
+            builder::simulate_fidelity(config, thetas, data)
+        }))
+    }
+
+    fn describe(&self) -> String {
+        format!("qsim-par (rust statevector, {} threads)", self.threads)
     }
 }
 
@@ -134,5 +189,33 @@ mod tests {
     fn empty_bank_is_fine() {
         let cfg = QuClassiConfig::new(5, 1).unwrap();
         assert_eq!(QsimExecutor.execute_bank(&cfg, &[]).unwrap().len(), 0);
+        assert_eq!(ParallelQsimExecutor::new(4).execute_bank(&cfg, &[]).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn parallel_executor_is_bitwise_identical_to_serial() {
+        let cfg = QuClassiConfig::new(7, 3).unwrap();
+        let mut rng = Rng::new(21);
+        let pairs: Vec<CircuitPair> = (0..23)
+            .map(|_| {
+                (
+                    (0..cfg.n_params()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+                    (0..cfg.n_features()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+                )
+            })
+            .collect();
+        let serial = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+        for threads in [1usize, 2, 4, 16] {
+            let parallel = ParallelQsimExecutor::new(threads).execute_bank(&cfg, &pairs).unwrap();
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn thread_budget_is_clamped_and_reported() {
+        assert_eq!(ParallelQsimExecutor::new(0).threads(), 1);
+        assert_eq!(ParallelQsimExecutor::new(6).threads(), 6);
+        assert!(ParallelQsimExecutor::auto().threads() >= 1);
+        assert!(ParallelQsimExecutor::new(2).describe().contains("2 threads"));
     }
 }

@@ -20,6 +20,6 @@ pub mod quclassi;
 pub mod segmentation;
 pub mod trainer;
 
-pub use exec::{CircuitExecutor, CountingExecutor, QsimExecutor};
+pub use exec::{CircuitExecutor, CountingExecutor, ParallelQsimExecutor, QsimExecutor};
 pub use quclassi::QuClassiModel;
 pub use trainer::{TrainConfig, TrainReport, Trainer};

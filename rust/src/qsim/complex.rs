@@ -10,14 +10,19 @@ pub struct C64 {
 }
 
 impl C64 {
+    /// 0 + 0i.
     pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    /// 1 + 0i.
     pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+    /// 0 + 1i.
     pub const I: C64 = C64 { re: 0.0, im: 1.0 };
 
+    /// Complex number from real and imaginary parts.
     pub fn new(re: f64, im: f64) -> C64 {
         C64 { re, im }
     }
 
+    /// Purely real complex number.
     pub fn from_re(re: f64) -> C64 {
         C64 { re, im: 0.0 }
     }
@@ -27,6 +32,7 @@ impl C64 {
         C64 { re: theta.cos(), im: theta.sin() }
     }
 
+    /// Complex conjugate.
     pub fn conj(self) -> C64 {
         C64 { re: self.re, im: -self.im }
     }
@@ -36,10 +42,12 @@ impl C64 {
         self.re * self.re + self.im * self.im
     }
 
+    /// |z|
     pub fn abs(self) -> f64 {
         self.norm_sq().sqrt()
     }
 
+    /// Multiply by a real scalar.
     pub fn scale(self, s: f64) -> C64 {
         C64 { re: self.re * s, im: self.im * s }
     }

@@ -1,0 +1,427 @@
+//! Gate fusion: coalesce runs of adjacent one/two-qubit gates into fused
+//! matrices before statevector application (DESIGN.md §11).
+//!
+//! A QuClassi circuit applies long runs of small gates to the same one or
+//! two qubits (`Ry·Rz` encoders, `Ryy·Rzz` and `CRY·CRZ` layer pairs).
+//! Applying each gate separately walks the full amplitude array once per
+//! gate; fusing a run into a single 2x2 or 4x4 product walks it once per
+//! *run*. The pass is purely local and preserves the circuit's unitary
+//! action exactly (up to float re-association — parity is asserted to
+//! 1e-9 in `rust/tests/parallel_parity.rs`).
+//!
+//! Fusion rules, scanning the emitted ops backwards from each new gate:
+//!
+//! * gates on disjoint qubit sets commute, so the scan skips them;
+//! * a 1q gate merges into an earlier [`FusedOp::Single`] on the same
+//!   qubit, or lifts into an earlier [`FusedOp::Pair`] containing it;
+//! * a 2q gate composes with an earlier `Pair` on the same (unordered)
+//!   qubit pair — reindexed via [`gates::swap_pair_order`] when the
+//!   operand order differs — and absorbs earlier `Single`s on either of
+//!   its operands;
+//! * the three-qubit `CSWAP` never fuses; it is a [`FusedOp::Barrier`]
+//!   that blocks merges across it on its qubits.
+//!
+//! The same pass feeds the serial executor (`simulate_fidelity_fused`)
+//! and the parallel shot engine ([`super::shots`]), which fuses once and
+//! re-applies the plan on every worker thread.
+
+use super::complex::C64;
+use super::gates::{self, Gate, Mat2, Mat4};
+use super::state::State;
+
+/// One fused operation: a coalesced matrix or an unfusable gate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FusedOp {
+    /// Product of a run of single-qubit gates on `q`.
+    Single {
+        /// Target qubit.
+        q: usize,
+        /// Accumulated 2x2 unitary (later gates multiplied on the left).
+        m: Mat2,
+    },
+    /// Product of a run of one/two-qubit gates supported on `{q0, q1}`.
+    /// Matrix row/column index is `2*b(q0) + b(q1)` — the same convention
+    /// as [`State::apply_2q`].
+    Pair {
+        /// First (more significant) operand of the pair index.
+        q0: usize,
+        /// Second operand of the pair index.
+        q1: usize,
+        /// Accumulated 4x4 unitary.
+        m: Mat4,
+    },
+    /// A gate that does not fuse (CSWAP); applied through the normal
+    /// dispatch and acting as a fusion barrier on its qubits.
+    Barrier(Gate),
+}
+
+impl FusedOp {
+    /// Does this op act on `q`?
+    pub fn touches(&self, q: usize) -> bool {
+        match self {
+            FusedOp::Single { q: sq, .. } => *sq == q,
+            FusedOp::Pair { q0, q1, .. } => *q0 == q || *q1 == q,
+            FusedOp::Barrier(g) => g.qubits().contains(&q),
+        }
+    }
+}
+
+/// A fused circuit: the op list plus provenance counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedProgram {
+    /// Fused operations in application order.
+    pub ops: Vec<FusedOp>,
+    /// Number of IR gates the program was fused from.
+    pub gates_in: usize,
+}
+
+impl FusedProgram {
+    /// Apply the whole program to `state`.
+    pub fn apply(&self, state: &mut State) {
+        for op in &self.ops {
+            match op {
+                FusedOp::Single { q, m } => state.apply_1q(m, *q),
+                FusedOp::Pair { q0, q1, m } => state.apply_2q(m, *q0, *q1),
+                FusedOp::Barrier(g) => state.apply_gate(g),
+            }
+        }
+    }
+
+    /// Number of fused operations.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when the program contains no operations.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Gates eliminated by fusion (`gates_in - len`).
+    pub fn fused_away(&self) -> usize {
+        self.gates_in.saturating_sub(self.ops.len())
+    }
+}
+
+/// `a * b` for 2x2 complex matrices.
+pub fn mat2_mul(a: &Mat2, b: &Mat2) -> Mat2 {
+    let mut out = [[C64::ZERO; 2]; 2];
+    for (i, row) in out.iter_mut().enumerate() {
+        for (j, cell) in row.iter_mut().enumerate() {
+            for k in 0..2 {
+                *cell += a[i][k] * b[k][j];
+            }
+        }
+    }
+    out
+}
+
+/// `a * b` for 4x4 complex matrices.
+pub fn mat4_mul(a: &Mat4, b: &Mat4) -> Mat4 {
+    let mut out = [[C64::ZERO; 4]; 4];
+    for (i, row) in out.iter_mut().enumerate() {
+        for (j, cell) in row.iter_mut().enumerate() {
+            for k in 0..4 {
+                *cell += a[i][k] * b[k][j];
+            }
+        }
+    }
+    out
+}
+
+/// Lift a 1q matrix onto a pair: `slot = 0` targets `q0` (the more
+/// significant pair-index bit, `kron(m, I)`), `slot = 1` targets `q1`
+/// (`kron(I, m)`).
+fn lift_to_pair(m: &Mat2, slot: usize) -> Mat4 {
+    debug_assert!(slot < 2);
+    let mut out = [[C64::ZERO; 4]; 4];
+    for r0 in 0..2 {
+        for r1 in 0..2 {
+            for c0 in 0..2 {
+                for c1 in 0..2 {
+                    let v = if slot == 0 {
+                        if r1 == c1 { m[r0][c0] } else { C64::ZERO }
+                    } else if r0 == c0 {
+                        m[r1][c1]
+                    } else {
+                        C64::ZERO
+                    };
+                    out[2 * r0 + r1][2 * c0 + c1] = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A gate classified for fusion.
+enum Kind {
+    One(usize, Mat2),
+    Two(usize, usize, Mat4),
+    Other,
+}
+
+fn classify(g: &Gate) -> Kind {
+    match *g {
+        Gate::H { q } => Kind::One(q, gates::h_matrix()),
+        Gate::Rx { q, theta } => Kind::One(q, gates::rx_matrix(theta)),
+        Gate::Ry { q, theta } => Kind::One(q, gates::ry_matrix(theta)),
+        Gate::Rz { q, theta } => Kind::One(q, gates::rz_matrix(theta)),
+        Gate::Ryy { q0, q1, theta } => Kind::Two(q0, q1, gates::ryy_matrix(theta)),
+        Gate::Rzz { q0, q1, theta } => Kind::Two(q0, q1, gates::rzz_matrix(theta)),
+        Gate::Cry { control, target, theta } => Kind::Two(control, target, gates::cry_matrix(theta)),
+        Gate::Crz { control, target, theta } => Kind::Two(control, target, gates::crz_matrix(theta)),
+        Gate::Cx { control, target } => Kind::Two(control, target, gates::cx_matrix()),
+        Gate::Cswap { .. } => Kind::Other,
+    }
+}
+
+/// Fuse a gate list into a [`FusedProgram`].
+pub fn fuse(gate_list: &[Gate]) -> FusedProgram {
+    let mut ops: Vec<FusedOp> = Vec::with_capacity(gate_list.len());
+    for g in gate_list {
+        match classify(g) {
+            Kind::One(q, m) => push_one(&mut ops, q, m),
+            Kind::Two(a, b, m) => push_two(&mut ops, a, b, m),
+            Kind::Other => ops.push(FusedOp::Barrier(g.clone())),
+        }
+    }
+    FusedProgram { ops, gates_in: gate_list.len() }
+}
+
+/// Merge a 1q gate into the op list. Scan invariant: every op passed
+/// over is disjoint from `q`, so the new gate commutes back to its merge
+/// partner.
+fn push_one(ops: &mut Vec<FusedOp>, q: usize, m: Mat2) {
+    for i in (0..ops.len()).rev() {
+        if !ops[i].touches(q) {
+            continue;
+        }
+        match &mut ops[i] {
+            FusedOp::Single { m: pm, .. } => {
+                *pm = mat2_mul(&m, pm);
+                return;
+            }
+            FusedOp::Pair { q0, m: pm, .. } => {
+                let slot = if *q0 == q { 0 } else { 1 };
+                *pm = mat4_mul(&lift_to_pair(&m, slot), pm);
+                return;
+            }
+            FusedOp::Barrier(_) => break,
+        }
+    }
+    ops.push(FusedOp::Single { q, m });
+}
+
+/// Merge a 2q gate on `(a, b)` (matrix index `2*b(a) + b(b)`) into the op
+/// list, absorbing earlier `Single`s on either operand and composing with
+/// an earlier `Pair` on the same qubit pair. Scan invariant: every op
+/// passed over (or removed) leaves the region between the merge site and
+/// the list tail disjoint from `{a, b}`.
+fn push_two(ops: &mut Vec<FusedOp>, a: usize, b: usize, m: Mat4) {
+    let mut acc = m;
+    let mut i = ops.len();
+    while i > 0 {
+        i -= 1;
+        if !ops[i].touches(a) && !ops[i].touches(b) {
+            continue;
+        }
+        let absorbed = match &ops[i] {
+            FusedOp::Single { q, m: sm } => {
+                // The earlier single acts first: multiply on the right.
+                let slot = if *q == a { 0 } else { 1 };
+                acc = mat4_mul(&acc, &lift_to_pair(sm, slot));
+                true
+            }
+            FusedOp::Pair { q0, q1, m: pm }
+                if (*q0 == a && *q1 == b) || (*q0 == b && *q1 == a) =>
+            {
+                let pm_ab = if *q0 == a { *pm } else { gates::swap_pair_order(pm) };
+                acc = mat4_mul(&acc, &pm_ab);
+                true
+            }
+            // Partially overlapping pair or a barrier: stop scanning.
+            _ => false,
+        };
+        if absorbed {
+            ops.remove(i);
+        } else {
+            break;
+        }
+    }
+    ops.push(FusedOp::Pair { q0: a, q1: b, m: acc });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::{build_quclassi, QuClassiConfig};
+    use crate::util::Rng;
+
+    fn random_state(rng: &mut Rng, nq: usize) -> State {
+        let mut amps: Vec<C64> =
+            (0..1usize << nq).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let norm = amps.iter().map(|a| a.norm_sq()).sum::<f64>().sqrt();
+        for a in &mut amps {
+            *a = a.scale(1.0 / norm);
+        }
+        State::from_amps(amps)
+    }
+
+    fn assert_equivalent(gate_list: &[Gate], nq: usize, seed: u64) {
+        let program = fuse(gate_list);
+        let mut rng = Rng::new(seed);
+        for _ in 0..4 {
+            let base = random_state(&mut rng, nq);
+            let mut serial = base.clone();
+            serial.run(gate_list);
+            let mut fused = base;
+            program.apply(&mut fused);
+            for (x, y) in serial.amps().iter().zip(fused.amps().iter()) {
+                assert!(
+                    (x.re - y.re).abs() < 1e-9 && (x.im - y.im).abs() < 1e-9,
+                    "fused program diverges: {x:?} vs {y:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_qubit_runs_collapse_to_one_op() {
+        let gate_list = vec![
+            Gate::Ry { q: 1, theta: 0.3 },
+            Gate::Rz { q: 1, theta: -0.7 },
+            Gate::H { q: 1 },
+            Gate::Rx { q: 1, theta: 1.1 },
+        ];
+        let program = fuse(&gate_list);
+        assert_eq!(program.len(), 1);
+        assert_eq!(program.fused_away(), 3);
+        assert_equivalent(&gate_list, 2, 11);
+    }
+
+    #[test]
+    fn fusion_commutes_through_disjoint_gates() {
+        let gate_list = vec![
+            Gate::Ry { q: 0, theta: 0.5 },
+            Gate::Ry { q: 2, theta: 0.9 }, // disjoint: scan passes it
+            Gate::Rz { q: 0, theta: -0.4 },
+        ];
+        let program = fuse(&gate_list);
+        assert_eq!(program.len(), 2);
+        assert_equivalent(&gate_list, 3, 13);
+    }
+
+    #[test]
+    fn pair_absorbs_singles_and_composes() {
+        let gate_list = vec![
+            Gate::Ry { q: 0, theta: 0.2 },
+            Gate::Rz { q: 1, theta: 0.4 },
+            Gate::Ryy { q0: 0, q1: 1, theta: 0.6 },
+            Gate::Rzz { q0: 0, q1: 1, theta: -0.8 },
+            Gate::Cry { control: 1, target: 0, theta: 1.2 }, // reversed operands
+        ];
+        let program = fuse(&gate_list);
+        assert_eq!(program.len(), 1);
+        assert!(matches!(program.ops[0], FusedOp::Pair { .. }));
+        assert_equivalent(&gate_list, 2, 17);
+    }
+
+    #[test]
+    fn late_single_lifts_into_pair() {
+        let gate_list = vec![
+            Gate::Cx { control: 0, target: 1 },
+            Gate::Ry { q: 1, theta: 0.9 },
+            Gate::H { q: 0 },
+        ];
+        let program = fuse(&gate_list);
+        assert_eq!(program.len(), 1);
+        assert_equivalent(&gate_list, 2, 19);
+    }
+
+    #[test]
+    fn cswap_is_a_barrier() {
+        let gate_list = vec![
+            Gate::H { q: 0 },
+            Gate::Cswap { control: 0, a: 1, b: 2 },
+            Gate::H { q: 0 },
+        ];
+        let program = fuse(&gate_list);
+        assert_eq!(program.len(), 3);
+        assert_equivalent(&gate_list, 3, 23);
+    }
+
+    #[test]
+    fn partial_pair_overlap_blocks_merge() {
+        // (0,1) then (1,2): share qubit 1 but are different pairs.
+        let gate_list = vec![
+            Gate::Ryy { q0: 0, q1: 1, theta: 0.3 },
+            Gate::Ryy { q0: 1, q1: 2, theta: 0.5 },
+        ];
+        let program = fuse(&gate_list);
+        assert_eq!(program.len(), 2);
+        assert_equivalent(&gate_list, 3, 29);
+    }
+
+    #[test]
+    fn quclassi_circuits_fuse_and_stay_equivalent() {
+        let mut rng = Rng::new(5);
+        for cfg in QuClassiConfig::paper_configs() {
+            let thetas: Vec<f32> =
+                (0..cfg.n_params()).map(|_| rng.range_f64(-3.0, 3.0) as f32).collect();
+            let data: Vec<f32> =
+                (0..cfg.n_features()).map(|_| rng.range_f64(-3.0, 3.0) as f32).collect();
+            let gate_list = build_quclassi(&cfg, &thetas, &data);
+            let program = fuse(&gate_list);
+            assert!(
+                program.len() < gate_list.len(),
+                "no fusion on {cfg:?}: {} ops from {} gates",
+                program.len(),
+                gate_list.len()
+            );
+            assert_equivalent(&gate_list, cfg.qubits, 31 + cfg.qubits as u64);
+        }
+    }
+
+    #[test]
+    fn empty_program() {
+        let program = fuse(&[]);
+        assert!(program.is_empty());
+        let mut st = State::zero(2);
+        program.apply(&mut st);
+        assert_eq!(st, State::zero(2));
+    }
+
+    #[test]
+    fn lift_matches_manual_kron() {
+        // lift(H, slot 0) acting on |10> (pair index 2) must equal
+        // H on q0 ⊗ I: amplitude spread over indices 0 and 2.
+        let h = gates::h_matrix();
+        let l0 = lift_to_pair(&h, 0);
+        // column 2 of kron(H, I): entries at rows 0 and 2 are 1/sqrt2, -1/sqrt2.
+        assert!((l0[0][2].re - gates::INV_SQRT2).abs() < 1e-12);
+        assert!((l0[2][2].re + gates::INV_SQRT2).abs() < 1e-12);
+        assert_eq!(l0[1][2], C64::ZERO);
+        let l1 = lift_to_pair(&h, 1);
+        // column 1 of kron(I, H): rows 0 and 1.
+        assert!((l1[0][1].re - gates::INV_SQRT2).abs() < 1e-12);
+        assert!((l1[1][1].re + gates::INV_SQRT2).abs() < 1e-12);
+        assert_eq!(l1[2][1], C64::ZERO);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let h = gates::h_matrix();
+        let hh = mat2_mul(&h, &h);
+        assert!((hh[0][0].re - 1.0).abs() < 1e-12);
+        assert!(hh[0][1].abs() < 1e-12);
+        let cx = gates::cx_matrix();
+        let cc = mat4_mul(&cx, &cx);
+        for (i, row) in cc.iter().enumerate() {
+            for (j, cell) in row.iter().enumerate() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((cell.re - want).abs() < 1e-12 && cell.im.abs() < 1e-12);
+            }
+        }
+    }
+}

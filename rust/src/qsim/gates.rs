@@ -132,6 +132,7 @@ impl Gate {
     }
 }
 
+/// 1/sqrt(2) — the Hadamard normalization.
 pub const INV_SQRT2: f64 = std::f64::consts::FRAC_1_SQRT_2;
 
 /// 2x2 matrix in row-major order.
@@ -139,29 +140,34 @@ pub type Mat2 = [[C64; 2]; 2];
 /// 4x4 matrix in row-major order; index = 2*b(q0) + b(q1).
 pub type Mat4 = [[C64; 4]; 4];
 
+/// Hadamard matrix.
 pub fn h_matrix() -> Mat2 {
     let s = C64::from_re(INV_SQRT2);
     [[s, s], [s, -s]]
 }
 
+/// Rx(theta) rotation matrix.
 pub fn rx_matrix(theta: f64) -> Mat2 {
     let c = C64::from_re((theta / 2.0).cos());
     let mis = C64::new(0.0, -(theta / 2.0).sin());
     [[c, mis], [mis, c]]
 }
 
+/// Ry(theta) rotation matrix.
 pub fn ry_matrix(theta: f64) -> Mat2 {
     let c = C64::from_re((theta / 2.0).cos());
     let s = C64::from_re((theta / 2.0).sin());
     [[c, -s], [s, c]]
 }
 
+/// Rz(theta) rotation matrix.
 pub fn rz_matrix(theta: f64) -> Mat2 {
     let em = C64::cis(-theta / 2.0);
     let ep = C64::cis(theta / 2.0);
     [[em, C64::ZERO], [C64::ZERO, ep]]
 }
 
+/// Ryy(theta) two-qubit rotation matrix.
 pub fn ryy_matrix(theta: f64) -> Mat4 {
     let c = C64::from_re((theta / 2.0).cos());
     let is = C64::new(0.0, (theta / 2.0).sin());
@@ -174,6 +180,7 @@ pub fn ryy_matrix(theta: f64) -> Mat4 {
     ]
 }
 
+/// Rzz(theta) two-qubit rotation matrix.
 pub fn rzz_matrix(theta: f64) -> Mat4 {
     let em = C64::cis(-theta / 2.0);
     let ep = C64::cis(theta / 2.0);
@@ -214,6 +221,7 @@ pub fn crz_matrix(theta: f64) -> Mat4 {
     ]
 }
 
+/// Controlled-NOT matrix (control = first index of the pair).
 pub fn cx_matrix() -> Mat4 {
     let o = C64::ONE;
     let z = C64::ZERO;

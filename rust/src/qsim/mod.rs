@@ -11,14 +11,25 @@
 //! Conventions match `python/compile/kernels/ref.py` exactly: big-endian
 //! qubit indexing (qubit 0 = most significant index bit), identical gate
 //! definitions, identical QuClassi register layout.
+//!
+//! Two execution paths exist on top of [`state::State`]: the serial
+//! gate-by-gate walk ([`State::run`]) and the fused path
+//! ([`fusion::fuse`] + [`FusedProgram::apply`]), which coalesces runs of
+//! adjacent one/two-qubit gates into single matrices. [`shots::run_shots`]
+//! builds on the fused path to fan measurement shots across an internal
+//! thread pool with deterministic per-chunk RNG streams (DESIGN.md §11).
 
 pub mod complex;
+pub mod fusion;
 pub mod gates;
 pub mod measure;
 pub mod noise;
+pub mod shots;
 pub mod state;
 
 pub use complex::C64;
+pub use fusion::{fuse, FusedOp, FusedProgram};
 pub use measure::{sample_shots, swap_test_fidelity};
 pub use noise::NoiseModel;
+pub use shots::run_shots;
 pub use state::State;

@@ -23,6 +23,7 @@ pub struct NoiseModel {
 }
 
 impl NoiseModel {
+    /// The identity noise model (no error channels).
     pub const NOISELESS: NoiseModel = NoiseModel { p1: 0.0, p2: 0.0, readout: 0.0 };
 
     /// Typical NISQ-era magnitudes (superconducting-like).
@@ -30,6 +31,7 @@ impl NoiseModel {
         NoiseModel { p1: 0.001, p2: 0.01, readout: 0.02 }
     }
 
+    /// True when every channel probability is zero.
     pub fn is_noiseless(&self) -> bool {
         self.p1 == 0.0 && self.p2 == 0.0 && self.readout == 0.0
     }

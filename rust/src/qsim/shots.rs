@@ -1,0 +1,191 @@
+//! Parallel shot execution: fan measurement shots out across an internal
+//! worker-thread pool (DESIGN.md §11).
+//!
+//! A *shot* is one end-to-end execution of a circuit followed by a full
+//! computational-basis measurement — the unit a real quantum backend
+//! bills by and the unit the paper's circuits-per-second metric counts.
+//! [`run_shots`] fuses the circuit once ([`super::fusion`]), simulates
+//! the statevector once, then fans the sampling work out over the shared
+//! scoped-thread pool ([`crate::util::pool`]), with every thread reading
+//! the same cumulative distribution.
+//!
+//! Determinism: shots are partitioned into fixed-size chunks
+//! ([`SHOT_CHUNK`]) and every chunk derives its own RNG stream from
+//! `(seed, chunk index)` — the chunk layout does not depend on the thread
+//! count, so the returned outcome sequence is bitwise identical for any
+//! `threads` value (asserted in `rust/tests/parallel_parity.rs`).
+
+use super::fusion;
+use super::gates::Gate;
+use super::state::State;
+use crate::util::{pool, Rng};
+
+/// Shots per work unit; fixed so results are independent of `threads`.
+pub const SHOT_CHUNK: usize = 1024;
+
+/// Execute `n_shots` measurement shots of `gate_list` on `threads` pool
+/// threads; returns one basis-state index per shot, in a deterministic
+/// order that depends only on `seed` (never on `threads`).
+///
+/// `threads = 0` or `1` runs serially on the calling thread; the serial
+/// path and the pooled path produce identical output.
+pub fn run_shots(
+    n_qubits: usize,
+    gate_list: &[Gate],
+    n_shots: usize,
+    threads: usize,
+    seed: u64,
+) -> Vec<usize> {
+    if n_shots == 0 {
+        return Vec::new();
+    }
+    // Fuse and simulate exactly once; pool threads share the read-only
+    // cumulative distribution and sample disjoint chunks.
+    let program = fusion::fuse(gate_list);
+    let mut st = State::zero(n_qubits);
+    program.apply(&mut st);
+    let (cdf, total) = cumulative(&st);
+
+    let n_chunks = n_shots.div_ceil(SHOT_CHUNK);
+    let chunks = pool::parallel_indexed(n_chunks, threads, |c| {
+        let range = chunk_range(c, n_shots);
+        let mut out = Vec::with_capacity(range.len());
+        sample_chunk(&cdf, total, range, &mut chunk_rng(seed, c), &mut out);
+        out
+    });
+    let mut out = Vec::with_capacity(n_shots);
+    for chunk in chunks {
+        out.extend(chunk);
+    }
+    out
+}
+
+/// Histogram of outcome counts over all `2^n_qubits` basis states.
+pub fn histogram(outcomes: &[usize], n_qubits: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; 1 << n_qubits];
+    for &o in outcomes {
+        counts[o] += 1;
+    }
+    counts
+}
+
+/// Shot-estimated probability that `qubit` reads |0> (big-endian
+/// indexing, matching [`State::prob_zero`]).
+pub fn prob_zero_estimate(outcomes: &[usize], n_qubits: usize, qubit: usize) -> f64 {
+    assert!(qubit < n_qubits);
+    let mask = 1usize << (n_qubits - 1 - qubit);
+    let zeros = outcomes.iter().filter(|&&o| o & mask == 0).count();
+    zeros as f64 / outcomes.len().max(1) as f64
+}
+
+/// The shot index range covered by chunk `c`.
+fn chunk_range(c: usize, n_shots: usize) -> std::ops::Range<usize> {
+    let lo = c * SHOT_CHUNK;
+    lo..((c + 1) * SHOT_CHUNK).min(n_shots)
+}
+
+/// Stable per-chunk RNG stream: depends on `(seed, chunk)` only.
+fn chunk_rng(seed: u64, chunk: usize) -> Rng {
+    // Golden-ratio stride keeps neighboring chunk seeds far apart before
+    // the Rng's own SplitMix64 expansion decorrelates them fully.
+    Rng::new(seed.wrapping_add((chunk as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)))
+}
+
+/// Cumulative measurement distribution of a state (plus its total, which
+/// is ~1.0 but guarded against float drift).
+fn cumulative(state: &State) -> (Vec<f64>, f64) {
+    let mut cdf = Vec::with_capacity(state.amps().len());
+    let mut acc = 0.0;
+    for a in state.amps() {
+        acc += a.norm_sq();
+        cdf.push(acc);
+    }
+    (cdf, acc)
+}
+
+/// Inverse-CDF sampling of one chunk into `out`.
+fn sample_chunk(
+    cdf: &[f64],
+    total: f64,
+    range: std::ops::Range<usize>,
+    rng: &mut Rng,
+    out: &mut Vec<usize>,
+) {
+    for _ in range {
+        let u = rng.f64() * total;
+        out.push(cdf.partition_point(|&c| c <= u).min(cdf.len() - 1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bell_pair() -> Vec<Gate> {
+        vec![Gate::H { q: 0 }, Gate::Cx { control: 0, target: 1 }]
+    }
+
+    #[test]
+    fn outcome_count_matches_shots() {
+        for shots in [1usize, 7, SHOT_CHUNK, SHOT_CHUNK + 1, 3 * SHOT_CHUNK + 5] {
+            let out = run_shots(2, &bell_pair(), shots, 2, 42);
+            assert_eq!(out.len(), shots);
+        }
+        assert!(run_shots(2, &bell_pair(), 0, 4, 1).is_empty());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_outcomes() {
+        let shots = 2 * SHOT_CHUNK + 137;
+        let serial = run_shots(3, &bell_pair(), shots, 1, 7);
+        for threads in [2usize, 3, 4, 8] {
+            let pooled = run_shots(3, &bell_pair(), shots, threads, 7);
+            assert_eq!(serial, pooled, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn bell_state_only_produces_correlated_outcomes() {
+        let out = run_shots(2, &bell_pair(), 4 * SHOT_CHUNK, 4, 3);
+        let counts = histogram(&out, 2);
+        // |00> and |11> only, roughly balanced.
+        assert_eq!(counts[1], 0);
+        assert_eq!(counts[2], 0);
+        let frac = counts[0] as f64 / out.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn frequencies_converge_to_exact_distribution() {
+        let gate_list = vec![Gate::Ry { q: 0, theta: 0.9 }, Gate::H { q: 1 }];
+        let mut st = State::zero(2);
+        st.run(&gate_list);
+        let exact: Vec<f64> = st.amps().iter().map(|a| a.norm_sq()).collect();
+        let shots = 200_000;
+        let out = run_shots(2, &gate_list, shots, 4, 11);
+        let counts = histogram(&out, 2);
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / shots as f64;
+            assert!((frac - exact[i]).abs() < 0.01, "state {i}: {frac} vs {}", exact[i]);
+        }
+    }
+
+    #[test]
+    fn prob_zero_estimate_tracks_state() {
+        let gate_list = vec![Gate::Ry { q: 1, theta: 1.1 }];
+        let mut st = State::zero(2);
+        st.run(&gate_list);
+        let out = run_shots(2, &gate_list, 100_000, 2, 13);
+        let est = prob_zero_estimate(&out, 2, 1);
+        assert!((est - st.prob_zero(1)).abs() < 0.01);
+        // untouched qubit always reads |0>
+        assert_eq!(prob_zero_estimate(&out, 2, 0), 1.0);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = run_shots(2, &bell_pair(), SHOT_CHUNK, 2, 1);
+        let b = run_shots(2, &bell_pair(), SHOT_CHUNK, 2, 2);
+        assert_ne!(a, b);
+    }
+}

@@ -33,10 +33,12 @@ impl State {
         State { n_qubits, amps }
     }
 
+    /// Number of qubits.
     pub fn n_qubits(&self) -> usize {
         self.n_qubits
     }
 
+    /// The raw amplitude array (length `2^n_qubits`).
     pub fn amps(&self) -> &[C64] {
         &self.amps
     }

@@ -18,6 +18,10 @@ use crate::circuit::QuClassiConfig;
 use crate::model::exec::{CircuitExecutor, CircuitPair};
 use crate::runtime::manifest::Manifest;
 
+// Swap for `use xla;` when the real PJRT bindings are linked (the stub
+// mirrors the exact API subset used below; see DESIGN.md §3).
+use super::xla_stub as xla;
+
 enum Request {
     Execute {
         config: QuClassiConfig,

@@ -8,9 +8,13 @@
 //!   handles are `Rc`-based (not `Send`), so the engine runs on a
 //!   dedicated owner thread behind a channel-based handle that *is*
 //!   `Send + Sync` and implements [`crate::model::CircuitExecutor`].
+//! * [`xla_stub`] — API-compatible stand-in for the `xla` bindings used
+//!   in the std-only build (DESIGN.md §3); engine loads fail cleanly and
+//!   workers fall back to the Rust simulator.
 
 pub mod engine;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use engine::PjrtEngine;
 pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,135 @@
+//! API-compatible stand-in for the `xla` PJRT bindings.
+//!
+//! The build environment is std-only (no crates.io access; DESIGN.md §3),
+//! so [`super::engine`] compiles against this stub instead of the real
+//! `xla` crate. The stub mirrors exactly the API subset the engine uses;
+//! every load/compile path returns a descriptive error, which makes
+//! [`crate::worker::WorkerBackend::auto`] fall back to the Rust
+//! statevector backend. Linking the real bindings is a one-line change in
+//! `runtime/engine.rs` (`use super::xla_stub as xla;` → `use xla;`).
+//!
+//! Nothing here is ever *executed* beyond the failing constructors: the
+//! remaining types exist so the engine's owner-thread code typechecks
+//! unchanged against either implementation.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "xla bindings not linked in this std-only build (see DESIGN.md §3); \
+     the worker falls back to the Rust qsim backend";
+
+/// Error type mirroring `xla::Error` (the engine only formats it).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Mirrors `PjRtClient::cpu()`; always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    /// Mirrors `PjRtClient::compile`; unreachable in the stub (no client
+    /// can be constructed) but present so callers typecheck.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Mirrors `HloModuleProto::from_text_file`; always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Mirrors `XlaComputation::from_proto`.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `PjRtLoadedExecutable::execute`.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Mirrors `PjRtBuffer::to_literal_sync`.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    /// Mirrors `Literal::vec1`.
+    pub fn vec1(_xs: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Mirrors `Literal::reshape`.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Mirrors `Literal::to_tuple1`.
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Mirrors `Literal::to_tuple2`.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
+        unavailable()
+    }
+
+    /// Mirrors `Literal::to_vec`.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("xla"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}

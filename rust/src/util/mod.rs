@@ -2,14 +2,17 @@
 //!
 //! Everything here is `std`-only by design (the build environment has no
 //! network access to crates.io; see DESIGN.md §3): leveled logging, a
-//! deterministic PRNG, wall/virtual clocks, and streaming statistics.
+//! deterministic PRNG, wall/virtual clocks, streaming statistics, and a
+//! scoped worker-thread pool ([`pool::parallel_indexed`]).
 
 pub mod clock;
 pub mod logging;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 
 pub use clock::{Clock, SystemClock, VirtualClock};
 pub use logging::{log_enabled, set_level, Level};
+pub use pool::parallel_indexed;
 pub use rng::Rng;
 pub use stats::{OnlineStats, Summary};

@@ -1,0 +1,83 @@
+//! Scoped worker-thread pool helper (std-only; DESIGN.md §11).
+//!
+//! One primitive serves every data-parallel hot path in the crate — the
+//! parallel bank executor (`model::exec::ParallelQsimExecutor`) and the
+//! shot engine (`qsim::shots::run_shots`): evaluate an index-addressed
+//! function across scoped OS threads and return the results in index
+//! order, bitwise identical to the serial evaluation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Evaluate `f(i)` for every `i in 0..n` across up to `threads` scoped
+/// OS threads; returns the results in index order.
+///
+/// Threads claim indices from a shared atomic cursor, which keeps the
+/// pool work-conserving under OS scheduling jitter. `threads <= 1` (or
+/// `n <= 1`) runs inline on the caller with no thread or lock overhead.
+/// The output never depends on the thread count — only wall-clock does —
+/// so `f` must not depend on evaluation order.
+pub fn parallel_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().expect("pool slot poisoned") = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("pool slot poisoned").expect("pool slot unfilled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        let out = parallel_indexed(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_for_any_thread_count() {
+        let serial = parallel_indexed(37, 1, |i| i as u64 * 3 + 1);
+        for threads in [2usize, 5, 64] {
+            assert_eq!(parallel_indexed(37, threads, |i| i as u64 * 3 + 1), serial);
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert!(parallel_indexed(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_indexed(1, 8, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn every_index_evaluated_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let calls = AtomicU64::new(0);
+        let out = parallel_indexed(500, 3, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out.len(), 500);
+        assert_eq!(calls.load(Ordering::Relaxed), 500);
+    }
+}

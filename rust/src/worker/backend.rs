@@ -3,7 +3,7 @@
 use std::path::Path;
 
 use crate::circuit::QuClassiConfig;
-use crate::model::exec::{CircuitExecutor, CircuitPair, QsimExecutor};
+use crate::model::exec::{self, CircuitExecutor, CircuitPair, ParallelQsimExecutor, QsimExecutor};
 use crate::qsim::NoiseModel;
 use crate::runtime::PjrtEngine;
 
@@ -13,13 +13,24 @@ pub enum WorkerBackend {
     Pjrt(PjrtEngine),
     /// Pure-Rust statevector simulation (fallback / tests).
     Qsim,
+    /// Rust simulation striped across an internal thread pool — the
+    /// worker-side throughput lever (DESIGN.md §11). Bitwise identical
+    /// to [`WorkerBackend::Qsim`], parallel wall-clock.
+    ParallelQsim(ParallelQsimExecutor),
     /// Rust simulation with trajectory noise (extension; DESIGN.md §10).
     NoisyQsim(NoiseModel, u64),
 }
 
 impl WorkerBackend {
-    /// PJRT if artifacts are present, otherwise the simulator.
+    /// PJRT if artifacts are present, otherwise the simulator sized to
+    /// the host's thread budget.
     pub fn auto(artifact_dir: &Path) -> WorkerBackend {
+        Self::auto_with_threads(artifact_dir, 0)
+    }
+
+    /// [`WorkerBackend::auto`] with an explicit simulator thread budget
+    /// (`0` = detect from the host; `1` = the serial backend).
+    pub fn auto_with_threads(artifact_dir: &Path, threads: usize) -> WorkerBackend {
         if artifact_dir.join("manifest.json").exists() {
             match PjrtEngine::load(artifact_dir) {
                 Ok(engine) => return WorkerBackend::Pjrt(engine),
@@ -28,9 +39,24 @@ impl WorkerBackend {
                 }
             }
         }
-        WorkerBackend::Qsim
+        let threads = if threads == 0 { exec::detect_threads() } else { threads };
+        if threads > 1 {
+            WorkerBackend::ParallelQsim(ParallelQsimExecutor::new(threads))
+        } else {
+            WorkerBackend::Qsim
+        }
     }
 
+    /// The backend's internal thread budget (1 for serial backends; the
+    /// CRU-reported capacity the co-Manager sizes dispatch batches by).
+    pub fn threads(&self) -> usize {
+        match self {
+            WorkerBackend::ParallelQsim(e) => e.threads(),
+            _ => 1,
+        }
+    }
+
+    /// Execute a batch of circuits through this backend.
     pub fn execute(
         &self,
         config: &QuClassiConfig,
@@ -39,6 +65,7 @@ impl WorkerBackend {
         match self {
             WorkerBackend::Pjrt(engine) => engine.execute(config, pairs),
             WorkerBackend::Qsim => QsimExecutor.execute_bank(config, pairs),
+            WorkerBackend::ParallelQsim(pool) => pool.execute_bank(config, pairs),
             WorkerBackend::NoisyQsim(noise, seed) => {
                 // Trajectory simulation with per-gate Pauli noise. The
                 // trajectory stream is derived from the circuit inputs so
@@ -68,10 +95,12 @@ impl WorkerBackend {
         }
     }
 
+    /// Short backend identifier for logs and registration.
     pub fn name(&self) -> &'static str {
         match self {
             WorkerBackend::Pjrt(_) => "pjrt",
             WorkerBackend::Qsim => "qsim",
+            WorkerBackend::ParallelQsim(_) => "qsim-par",
             WorkerBackend::NoisyQsim(..) => "noisy-qsim",
         }
     }
@@ -133,6 +162,21 @@ mod tests {
     #[test]
     fn auto_falls_back_without_artifacts() {
         let b = WorkerBackend::auto(Path::new("/nonexistent/dir"));
-        assert_eq!(b.name(), "qsim");
+        assert!(b.name().starts_with("qsim"), "unexpected backend {}", b.name());
+        assert!(b.threads() >= 1);
+        let serial = WorkerBackend::auto_with_threads(Path::new("/nonexistent/dir"), 1);
+        assert_eq!(serial.name(), "qsim");
+        assert_eq!(serial.threads(), 1);
+    }
+
+    #[test]
+    fn parallel_backend_matches_serial_bitwise() {
+        let cfg = QuClassiConfig::new(7, 2).unwrap();
+        let ps = pairs(&cfg, 9);
+        let serial = WorkerBackend::Qsim.execute(&cfg, &ps).unwrap();
+        let parallel = WorkerBackend::auto_with_threads(Path::new("/nonexistent/dir"), 4);
+        assert_eq!(parallel.name(), "qsim-par");
+        assert_eq!(parallel.threads(), 4);
+        assert_eq!(parallel.execute(&cfg, &ps).unwrap(), serial);
     }
 }

@@ -24,6 +24,10 @@ pub struct WorkerOptions {
     pub heartbeat_period: f64,
     /// Listen address for execute RPCs ("127.0.0.1:0" = ephemeral).
     pub listen: String,
+    /// Simulator thread budget (`0` = detect from the host, `1` =
+    /// serial). Reported to the manager at registration so dispatch
+    /// batches track real parallelism (DESIGN.md §11).
+    pub threads: usize,
 }
 
 impl Default for WorkerOptions {
@@ -33,6 +37,7 @@ impl Default for WorkerOptions {
             artifact_dir: PathBuf::from("artifacts"),
             heartbeat_period: 5.0,
             listen: "127.0.0.1:0".to_string(),
+            threads: 0,
         }
     }
 }
@@ -50,7 +55,7 @@ impl WorkerHandle {
     /// Start a worker: serve `execute`, register with the manager at
     /// `manager_addr`, and heartbeat until stopped.
     pub fn start(manager_addr: &str, opts: WorkerOptions) -> Result<WorkerHandle, String> {
-        let backend = Arc::new(WorkerBackend::auto(&opts.artifact_dir));
+        let backend = Arc::new(WorkerBackend::auto_with_threads(&opts.artifact_dir, opts.threads));
         let active = Arc::new(AtomicUsize::new(0));
         let cru = LoadModelCru::new(1.0 / opts.max_qubits.max(1) as f64, 0.05);
         // share the executing-circuit counter with the CRU model
@@ -112,15 +117,17 @@ impl WorkerHandle {
                 Value::obj()
                     .with("max_qubits", opts.max_qubits)
                     .with("addr", listen_addr.to_string())
-                    .with("cru", cru.sample()),
+                    .with("cru", cru.sample())
+                    .with("threads", backend.threads()),
             )
             .map_err(|e| format!("register: {e}"))?;
         let worker_id = resp.req_u64("worker_id")?;
         crate::log_info!(
             "worker",
-            "registered as w{worker_id} (MR={}, backend={}, listening {listen_addr})",
+            "registered as w{worker_id} (MR={}, backend={}, threads={}, listening {listen_addr})",
             opts.max_qubits,
-            backend.name()
+            backend.name(),
+            backend.threads()
         );
 
         // --- heartbeat loop ---
@@ -194,6 +201,7 @@ mod tests {
             artifact_dir: PathBuf::from("/nonexistent"), // force qsim
             heartbeat_period: 0.1,
             listen: "127.0.0.1:0".to_string(),
+            threads: 2,
         };
         let mut handle = WorkerHandle::start(&mgr.local_addr().to_string(), opts).unwrap();
         assert_eq!(handle.worker_id, 7);

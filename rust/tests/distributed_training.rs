@@ -85,6 +85,7 @@ fn tcp_distributed_training() {
             artifact_dir: "/nonexistent".into(),
             heartbeat_period: 0.2,
             listen: "127.0.0.1:0".into(),
+            threads: 2,
         },
     )
     .unwrap();
@@ -95,6 +96,7 @@ fn tcp_distributed_training() {
             artifact_dir: "/nonexistent".into(),
             heartbeat_period: 0.2,
             listen: "127.0.0.1:0".into(),
+            threads: 1,
         },
     )
     .unwrap();

@@ -1,0 +1,208 @@
+//! Parity and determinism guarantees for the parallel execution engine
+//! (DESIGN.md §11).
+//!
+//! * Gate fusion must act identically to the serial gate walk on full
+//!   statevectors, for every paper configuration, with and without the
+//!   peephole transpiler in front.
+//! * Multi-threaded shot execution must return the exact outcome
+//!   sequence of the serial path for a fixed seed (thread-count
+//!   invariance), and its measurement distribution must track the exact
+//!   statevector probabilities.
+//! * The parallel bank executor must be bitwise identical to the serial
+//!   executor.
+//! * Scheduler selection must be deterministic under ties
+//!   (`select_worker` / `select_worker_relaxed`).
+
+use dqulearn::circuit::{build_quclassi, builder, optimize, QuClassiConfig};
+use dqulearn::coordinator::registry::Registry;
+use dqulearn::coordinator::scheduler;
+use dqulearn::model::exec::{CircuitExecutor, ParallelQsimExecutor, QsimExecutor};
+use dqulearn::qsim::shots::{self, run_shots};
+use dqulearn::qsim::{fusion, State};
+use dqulearn::util::Rng;
+
+fn random_angles(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f64(-3.1, 3.1) as f32).collect()
+}
+
+#[test]
+fn fused_statevectors_match_serial_on_all_paper_configs() {
+    let mut rng = Rng::new(101);
+    for cfg in QuClassiConfig::paper_configs() {
+        for _ in 0..3 {
+            let thetas = random_angles(&mut rng, cfg.n_params());
+            let data = random_angles(&mut rng, cfg.n_features());
+            let gates = build_quclassi(&cfg, &thetas, &data);
+
+            let mut serial = State::zero(cfg.qubits);
+            serial.run(&gates);
+
+            let program = fusion::fuse(&gates);
+            assert!(program.fused_away() > 0, "{cfg:?}: nothing fused");
+            let mut fused = State::zero(cfg.qubits);
+            program.apply(&mut fused);
+
+            for (i, (a, b)) in serial.amps().iter().zip(fused.amps().iter()).enumerate() {
+                assert!(
+                    (a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9,
+                    "{cfg:?} amp {i}: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_fidelity_matches_serial_fidelity() {
+    let mut rng = Rng::new(103);
+    for cfg in QuClassiConfig::paper_configs() {
+        for _ in 0..5 {
+            let thetas = random_angles(&mut rng, cfg.n_params());
+            let data = random_angles(&mut rng, cfg.n_features());
+            let serial = builder::simulate_fidelity(&cfg, &thetas, &data);
+            let fused = builder::simulate_fidelity_fused(&cfg, &thetas, &data);
+            assert!(
+                (serial - fused).abs() < 1e-6,
+                "{cfg:?}: serial {serial} vs fused {fused}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fusion_composes_with_peephole_transpile() {
+    // transpile (merge/cancel) then fuse: still equivalent to the raw walk.
+    let mut rng = Rng::new(107);
+    let cfg = QuClassiConfig::new(7, 3).unwrap();
+    let thetas = random_angles(&mut rng, cfg.n_params());
+    let data = random_angles(&mut rng, cfg.n_features());
+    let gates = build_quclassi(&cfg, &thetas, &data);
+    let optimized = optimize(&gates);
+    let program = fusion::fuse(&optimized);
+
+    let mut serial = State::zero(cfg.qubits);
+    serial.run(&gates);
+    let mut piped = State::zero(cfg.qubits);
+    program.apply(&mut piped);
+    for (a, b) in serial.amps().iter().zip(piped.amps().iter()) {
+        assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn shot_pool_is_thread_count_invariant() {
+    let cfg = QuClassiConfig::new(5, 2).unwrap();
+    let mut rng = Rng::new(109);
+    let thetas = random_angles(&mut rng, cfg.n_params());
+    let data = random_angles(&mut rng, cfg.n_features());
+    let gates = build_quclassi(&cfg, &thetas, &data);
+
+    // Crosses several chunk boundaries with a ragged tail.
+    let n_shots = 3 * shots::SHOT_CHUNK + 411;
+    let serial = run_shots(cfg.qubits, &gates, n_shots, 1, 2024);
+    assert_eq!(serial.len(), n_shots);
+    for threads in [2usize, 4, 7] {
+        let pooled = run_shots(cfg.qubits, &gates, n_shots, threads, 2024);
+        assert_eq!(serial, pooled, "threads={threads} changed the outcome stream");
+    }
+}
+
+#[test]
+fn shot_distribution_tracks_exact_probabilities() {
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let mut rng = Rng::new(113);
+    let thetas = random_angles(&mut rng, cfg.n_params());
+    let data = random_angles(&mut rng, cfg.n_features());
+    let gates = build_quclassi(&cfg, &thetas, &data);
+
+    let mut st = State::zero(cfg.qubits);
+    st.run(&gates);
+    let exact_p0 = st.prob_zero(0);
+
+    let n_shots = 200_000;
+    let outcomes = run_shots(cfg.qubits, &gates, n_shots, 4, 31);
+    let est_p0 = shots::prob_zero_estimate(&outcomes, cfg.qubits, 0);
+    assert!(
+        (est_p0 - exact_p0).abs() < 0.01,
+        "ancilla P0: sampled {est_p0} vs exact {exact_p0}"
+    );
+
+    // The shot-sampled swap-test fidelity tracks the exact expectation.
+    let exact_fid = 2.0 * exact_p0 - 1.0;
+    let est_fid = 2.0 * est_p0 - 1.0;
+    assert!((est_fid - exact_fid).abs() < 0.02);
+}
+
+#[test]
+fn parallel_bank_executor_is_bitwise_identical() {
+    let cfg = QuClassiConfig::new(7, 3).unwrap();
+    let mut rng = Rng::new(127);
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..33)
+        .map(|_| {
+            (random_angles(&mut rng, cfg.n_params()), random_angles(&mut rng, cfg.n_features()))
+        })
+        .collect();
+    let serial = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+    for threads in [2usize, 4, 8] {
+        let pooled = ParallelQsimExecutor::new(threads).execute_bank(&cfg, &pairs).unwrap();
+        assert_eq!(serial, pooled, "threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scheduler determinism (Algorithm 2 tie-breaking)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn select_worker_tie_breaks_deterministically() {
+    // Three identical workers: equal CRU, equal availability. The strict
+    // and relaxed rules must both pick the lowest id, every time.
+    let mut r = Registry::new(5.0);
+    let ids: Vec<_> = (0..3).map(|_| r.register(10, 0.4, 0.0)).collect();
+    for _ in 0..100 {
+        assert_eq!(scheduler::select_worker(&r, 5), Some(ids[0]));
+        assert_eq!(scheduler::select_worker_relaxed(&r, 5), Some(ids[0]));
+        assert_eq!(scheduler::select(&r, 5), Some(ids[0]));
+    }
+}
+
+#[test]
+fn relaxed_tie_break_prefers_capacity_then_id() {
+    // Equal CRU but different availability: more available qubits wins;
+    // equal availability falls back to the lower id.
+    let mut r = Registry::new(5.0);
+    let small = r.register(10, 0.4, 0.0);
+    let big = r.register(20, 0.4, 0.0);
+    assert_eq!(scheduler::select_worker(&r, 5), Some(big));
+    assert_eq!(scheduler::select_worker_relaxed(&r, 5), Some(big));
+    // Occupy the big worker down to the same availability as the small
+    // one: the tie then resolves to the lower id.
+    r.reserve(big, 1, 10).unwrap();
+    assert_eq!(r.get(big).unwrap().available(), r.get(small).unwrap().available());
+    for _ in 0..50 {
+        assert_eq!(scheduler::select_worker(&r, 5), Some(small));
+        assert_eq!(scheduler::select_worker_relaxed(&r, 5), Some(small));
+    }
+}
+
+#[test]
+fn heap_scheduler_agrees_with_linear_scan() {
+    // The Heap ablation must produce the same selection as the paper's
+    // linear scan, including under exact ties (DESIGN.md §10).
+    let mut rng = Rng::new(131);
+    for _case in 0..50 {
+        let mut r = Registry::new(5.0);
+        let n = 1 + rng.index(6);
+        for _ in 0..n {
+            let mq = [5, 7, 10, 15, 20][rng.index(5)];
+            // Quantized CRUs make exact ties common.
+            let cru = (rng.index(4) as f64) * 0.25;
+            r.register(mq, cru, 0.0);
+        }
+        for demand in [5usize, 7] {
+            let linear = scheduler::select_with(scheduler::SchedulerKind::LinearScan, &r, demand);
+            let heap = scheduler::select_with(scheduler::SchedulerKind::Heap, &r, demand);
+            assert_eq!(linear, heap, "demand {demand} on {n} workers");
+        }
+    }
+}
