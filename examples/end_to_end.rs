@@ -52,7 +52,10 @@ fn main() -> Result<(), String> {
     println!("workers w{} (5q) and w{} (10q) registered", w1.worker_id, w2.worker_id);
 
     // --- 3. cross-check: PJRT results == Rust simulator results ---
+    // The remote client hands out typed sessions; each session owns a
+    // tenant id and submits through BankHandle futures.
     let client = RemoteClient::connect(&addr)?;
+    let session = client.session()?;
     let cfg = QuClassiConfig::new(5, 2)?;
     let mut rng = Rng::new(1);
     let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..32)
@@ -63,7 +66,13 @@ fn main() -> Result<(), String> {
             )
         })
         .collect();
-    let via_cluster = client.execute_bank(&cfg, &pairs)?;
+    let handle = session.submit(cfg, &pairs)?;
+    println!(
+        "bank {} submitted ({} circuits) — polling while it runs",
+        handle.id(),
+        handle.total()
+    );
+    let via_cluster = handle.wait()?;
     let via_qsim = QsimExecutor.execute_bank(&cfg, &pairs)?;
     let max_err = via_cluster
         .iter()
@@ -91,7 +100,7 @@ fn main() -> Result<(), String> {
             loss: LossKind::Generative,
     });
     let t0 = std::time::Instant::now();
-    let report = trainer.train(&mut model, &dataset, &client)?;
+    let report = trainer.train(&mut model, &dataset, &session)?;
     println!("loss curve:");
     for e in &report.epochs {
         println!(

@@ -40,10 +40,14 @@ fn main() -> Result<(), String> {
             let meter = meter.clone();
             std::thread::spawn(move || -> Result<(usize, f64, usize), String> {
                 let config = QuClassiConfig::new(q, l)?;
-                let client = cluster.new_client();
+                // Each tenant is a typed session (owns its client id).
+                let session = cluster.session();
                 let mut rng = Rng::new(100 + i as u64);
                 let t0 = std::time::Instant::now();
-                // Submit in banks of 32, like a training loop would.
+                // Submit in banks of 32, like a training loop would. The
+                // BankHandle future lets the tenant overlap classical
+                // work with the in-flight quantum batch: here we stream
+                // progress through try_poll() before blocking on wait().
                 let mut done = 0usize;
                 while done < n {
                     let bank = 32.min(n - done);
@@ -55,8 +59,20 @@ fn main() -> Result<(), String> {
                             )
                         })
                         .collect();
-                    let fids = cluster.manager.execute_bank(client, config, &pairs)?;
+                    let handle = session.submit(config, &pairs)?;
+                    let mut streamed = 0usize;
+                    loop {
+                        let status = handle.try_poll()?;
+                        // partial fidelities arrive while the bank runs
+                        streamed = streamed.max(status.completed);
+                        if !status.pending {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    let fids = handle.wait()?;
                     assert_eq!(fids.len(), bank);
+                    assert!(streamed <= bank);
                     meter.add(bank as u64);
                     done += bank;
                 }

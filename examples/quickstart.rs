@@ -35,10 +35,13 @@ fn main() -> Result<(), String> {
         builder = builder.artifacts("artifacts"); // PJRT: AOT JAX/Pallas
     }
     let cluster = builder.build()?;
-    println!("executor: {}", cluster.describe());
+    // A typed session owns this tenant's client id; it implements
+    // CircuitExecutor, so the trainer runs on the session API directly.
+    let session = cluster.session();
+    println!("executor: {} (via {})", cluster.describe(), session.describe());
 
     // 4. Train (Algorithm 1): parameter-shift circuit banks per sample,
-    //    submitted to the cluster, gradients assembled, Adam updates.
+    //    submitted through the session, gradients assembled, Adam updates.
     let mut model = QuClassiModel::new(config, &mut Rng::new(42));
     let trainer = Trainer::new(TrainConfig {
         epochs: 8,
@@ -49,7 +52,7 @@ fn main() -> Result<(), String> {
         early_stop_acc: None,
             loss: LossKind::Discriminative,
     });
-    let report = trainer.train(&mut model, &dataset, &cluster)?;
+    let report = trainer.train(&mut model, &dataset, &session)?;
 
     for e in &report.epochs {
         println!(

@@ -1,0 +1,141 @@
+//! Microbenchmark for same-config batch packing on the pending queue —
+//! the co-Manager's per-assignment scan.
+//!
+//! The old packer called `VecDeque::remove(scanned)` inside a scan loop:
+//! each removal shifts the tail, so packing a batch out of a queue with
+//! `n` pending circuits cost O(n²) element moves when tenants interleave.
+//! The manager now takes the contiguous same-config prefix directly and
+//! falls back to a single drain/partition pass — O(n) total. This bench
+//! shows the gap at 10k pending circuits (and the scaling trend).
+//!
+//! ```bash
+//! cargo bench --bench micro_queue
+//! ```
+
+use std::collections::VecDeque;
+
+use dqulearn::benchlib::{BenchConfig, Bencher};
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::coordinator::CircuitJob;
+
+/// A queue of `n` pending circuits from two interleaved tenants with
+/// different configs — the worst case for head-config batch packing.
+fn interleaved_queue(n: usize) -> (VecDeque<CircuitJob>, QuClassiConfig) {
+    let cfg_a = QuClassiConfig::new(5, 1).unwrap();
+    let cfg_b = QuClassiConfig::new(7, 1).unwrap();
+    let q = (0..n)
+        .map(|i| {
+            let config = if i % 2 == 0 { cfg_a } else { cfg_b };
+            CircuitJob {
+                id: i as u64,
+                client: (i % 2) as u64,
+                bank: (i % 2) as u64,
+                index: i / 2,
+                config,
+                thetas: vec![0.1; config.n_params()],
+                data: vec![0.2; config.n_features()],
+            }
+        })
+        .collect();
+    (q, cfg_a)
+}
+
+/// The pre-redesign packer: scan with in-place `remove` (O(n²)).
+fn pack_remove_in_scan(
+    q: &mut VecDeque<CircuitJob>,
+    config: QuClassiConfig,
+    limit: usize,
+) -> Vec<CircuitJob> {
+    let mut jobs = Vec::new();
+    let mut scanned = 0;
+    while scanned < q.len() && jobs.len() < limit {
+        if q[scanned].config == config {
+            jobs.push(q.remove(scanned).unwrap());
+        } else {
+            scanned += 1;
+        }
+    }
+    jobs
+}
+
+/// The current packer: contiguous prefix + one drain/partition pass (O(n)).
+fn pack_partition(
+    q: &mut VecDeque<CircuitJob>,
+    config: QuClassiConfig,
+    limit: usize,
+) -> Vec<CircuitJob> {
+    let mut jobs = Vec::with_capacity(limit.min(q.len()));
+    while jobs.len() < limit && q.front().is_some_and(|j| j.config == config) {
+        jobs.push(q.pop_front().unwrap());
+    }
+    if jobs.len() < limit && q.iter().any(|j| j.config == config) {
+        let mut rest = VecDeque::with_capacity(q.len());
+        while let Some(job) = q.pop_front() {
+            if jobs.len() < limit && job.config == config {
+                jobs.push(job);
+            } else {
+                rest.push_back(job);
+            }
+        }
+        *q = rest;
+    }
+    jobs
+}
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig::default());
+    const BATCH: usize = 32;
+
+    for n in [1_000usize, 10_000] {
+        let (template, cfg) = interleaved_queue(n);
+
+        // sanity: both strategies pick the identical batch
+        {
+            let mut q1 = template.clone();
+            let mut q2 = template.clone();
+            let a = pack_remove_in_scan(&mut q1, cfg, BATCH);
+            let b2 = pack_partition(&mut q2, cfg, BATCH);
+            assert_eq!(
+                a.iter().map(|j| j.id).collect::<Vec<_>>(),
+                b2.iter().map(|j| j.id).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                q1.iter().map(|j| j.id).collect::<Vec<_>>(),
+                q2.iter().map(|j| j.id).collect::<Vec<_>>()
+            );
+        }
+
+        let t = template.clone();
+        b.bench(&format!("pack remove-in-scan n={n}"), || {
+            let mut q = t.clone();
+            std::hint::black_box(pack_remove_in_scan(&mut q, cfg, BATCH));
+        });
+        let t = template.clone();
+        b.bench(&format!("pack drain/partition n={n}"), || {
+            let mut q = t.clone();
+            std::hint::black_box(pack_partition(&mut q, cfg, BATCH));
+        });
+        // the common case: a homogeneous run at the head (single tenant)
+        let (homo, hcfg) = {
+            let cfg = QuClassiConfig::new(5, 1).unwrap();
+            let q: VecDeque<CircuitJob> = (0..n)
+                .map(|i| CircuitJob {
+                    id: i as u64,
+                    client: 0,
+                    bank: 0,
+                    index: i,
+                    config: cfg,
+                    thetas: vec![0.1; cfg.n_params()],
+                    data: vec![0.2; cfg.n_features()],
+                })
+                .collect();
+            (q, cfg)
+        };
+        b.bench(&format!("pack homogeneous prefix n={n}"), || {
+            let mut q = homo.clone();
+            std::hint::black_box(pack_partition(&mut q, hcfg, BATCH));
+        });
+    }
+
+    print!("{}", b.report());
+}

@@ -7,6 +7,7 @@
 
 use crate::circuit::QuClassiConfig;
 use crate::data::Dataset;
+use crate::error::DqError;
 use crate::model::exec::{CountingExecutor, QsimExecutor};
 use crate::model::{QuClassiModel, TrainConfig, TrainReport, Trainer};
 use crate::util::Rng;
@@ -24,7 +25,7 @@ pub fn train_single_machine(
     dataset: &Dataset,
     train_config: TrainConfig,
     model_seed: u64,
-) -> Result<BaselineResult, String> {
+) -> Result<BaselineResult, DqError> {
     let mut rng = Rng::new(model_seed);
     let mut model = QuClassiModel::new(config, &mut rng);
     let exec = CountingExecutor::new(QsimExecutor);

@@ -9,7 +9,8 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::circuit::QuClassiConfig;
-use crate::coordinator::{Manager, ManagerConfig, WorkerChannel};
+use crate::coordinator::{ClientSession, Manager, ManagerConfig, WorkerChannel, WorkerProfile};
+use crate::error::DqError;
 use crate::model::exec::{CircuitExecutor, CircuitPair};
 use crate::qsim::NoiseModel;
 use crate::worker::WorkerBackend;
@@ -24,7 +25,7 @@ impl WorkerChannel for InProcChannel {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         self.backend.execute(config, pairs)
     }
 }
@@ -104,7 +105,7 @@ impl InProcClusterBuilder {
     }
 
     /// Assemble and start the cluster.
-    pub fn build(self) -> Result<InProcCluster, String> {
+    pub fn build(self) -> Result<InProcCluster, DqError> {
         let manager = Manager::new(self.manager_config);
         let threads = if self.threads == 0 {
             crate::model::exec::detect_threads()
@@ -125,11 +126,8 @@ impl InProcClusterBuilder {
             };
             // report gate-error magnitude as the noise estimate
             let noise_level = per_worker.map(|n| n.p2).unwrap_or(0.0);
-            manager.register_worker_full(
-                mq,
-                0.0,
-                noise_level,
-                backend.threads(),
+            manager.register(
+                WorkerProfile::new(mq).noise(noise_level).threads(backend.threads()),
                 Arc::new(InProcChannel { backend }),
             );
         }
@@ -139,7 +137,13 @@ impl InProcClusterBuilder {
 }
 
 impl InProcCluster {
-    /// A new client session (multi-tenant use).
+    /// A typed [`ClientSession`] for a fresh tenant (the preferred entry
+    /// point: submit returns a pollable/cancellable `BankHandle`).
+    pub fn session(&self) -> ClientSession {
+        self.manager.session()
+    }
+
+    /// A raw client id (prefer [`InProcCluster::session`]).
     pub fn new_client(&self) -> u64 {
         self.manager.new_client()
     }
@@ -156,7 +160,7 @@ impl CircuitExecutor for InProcCluster {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         self.manager.execute_bank(self.client, *config, pairs)
     }
 
@@ -172,7 +176,7 @@ mod tests {
     use crate::model::exec::QsimExecutor;
     use crate::model::optimizer::Optimizer;
     use crate::model::quclassi::LossKind;
-use crate::model::{QuClassiModel, TrainConfig, Trainer};
+    use crate::model::{QuClassiModel, TrainConfig, Trainer};
     use crate::util::Rng;
 
     #[test]

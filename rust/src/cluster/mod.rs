@@ -5,9 +5,13 @@
 //!   only the transport differs.
 //! * [`tcp`] — the distributed deployment: the manager's RPC server,
 //!   the manager→worker RPC channel, and the remote client.
+//! * [`proto`] — the typed client↔manager wire messages
+//!   (`SubmitRequest`/`SubmitResponse`, bank-status codecs).
 
 pub mod inproc;
+pub mod proto;
 pub mod tcp;
 
 pub use inproc::{InProcCluster, InProcClusterBuilder};
+pub use proto::{SubmitRequest, SubmitResponse};
 pub use tcp::{serve_manager, RemoteClient};

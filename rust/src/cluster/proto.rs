@@ -1,0 +1,165 @@
+//! Typed client↔manager wire messages.
+//!
+//! `cluster::tcp` historically assembled submit payloads out of ad-hoc
+//! [`Value`] objects on both ends; these structs are the single source of
+//! truth for the field layout now, with symmetric `to_wire`/`from_wire`
+//! codecs (and round-trip tests). The manager→worker `execute` payload
+//! is already typed by [`crate::coordinator::CircuitJob`].
+//!
+//! Protocol ops (all framed JSON, `net::rpc` envelope):
+//!
+//! ```text
+//! client -> manager : new_client {}                      -> {client}
+//! client -> manager : submit_bank <SubmitRequest>        -> <SubmitResponse>
+//! client -> manager : wait_bank   {bank, timeout_ms?}    -> {fids}
+//! client -> manager : bank_status {bank}                 -> <BankStatus wire>
+//! client -> manager : cancel_bank {bank}                 -> {drained}
+//! ```
+
+use crate::circuit::QuClassiConfig;
+use crate::coordinator::BankStatus;
+use crate::error::DqError;
+use crate::model::exec::CircuitPair;
+use crate::wire::Value;
+
+/// A client's `submit_bank` request: one config, many circuits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRequest {
+    pub client: u64,
+    pub config: QuClassiConfig,
+    pub pairs: Vec<CircuitPair>,
+}
+
+impl SubmitRequest {
+    pub fn to_wire(&self) -> Value {
+        let circuits: Vec<Value> = self
+            .pairs
+            .iter()
+            .map(|(t, d)| Value::obj().with("thetas", t.as_slice()).with("data", d.as_slice()))
+            .collect();
+        Value::obj()
+            .with("client", self.client)
+            .with("qubits", self.config.qubits)
+            .with("layers", self.config.layers)
+            .with("circuits", circuits)
+    }
+
+    pub fn from_wire(v: &Value) -> Result<SubmitRequest, DqError> {
+        let config = QuClassiConfig::new(v.req_usize("qubits")?, v.req_usize("layers")?)?;
+        let circuits = v.req_arr("circuits")?;
+        let mut pairs = Vec::with_capacity(circuits.len());
+        for c in circuits {
+            pairs.push((c.req_f32_vec("thetas")?, c.req_f32_vec("data")?));
+        }
+        Ok(SubmitRequest { client: v.req_u64("client")?, config, pairs })
+    }
+}
+
+/// The manager's answer to `submit_bank`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubmitResponse {
+    /// The opened bank's id (the handle key for wait/status/cancel).
+    pub bank: u64,
+    /// Circuits accepted into the bank.
+    pub total: usize,
+}
+
+impl SubmitResponse {
+    pub fn to_wire(&self) -> Value {
+        Value::obj().with("bank", self.bank).with("total", self.total)
+    }
+
+    pub fn from_wire(v: &Value) -> Result<SubmitResponse, DqError> {
+        Ok(SubmitResponse { bank: v.req_u64("bank")?, total: v.req_usize("total")? })
+    }
+}
+
+/// Wire form of [`BankStatus`]: per-circuit fidelities as an array of
+/// numbers and nulls.
+pub fn bank_status_to_wire(s: &BankStatus) -> Value {
+    let fids: Vec<Value> = s
+        .partial_fids
+        .iter()
+        .map(|f| f.map(|x| Value::Num(x as f64)).unwrap_or(Value::Null))
+        .collect();
+    Value::obj()
+        .with("pending", s.pending)
+        .with("completed", s.completed)
+        .with("total", s.total)
+        .with("partial_fids", fids)
+}
+
+/// Decode the wire form of [`BankStatus`].
+pub fn bank_status_from_wire(v: &Value) -> Result<BankStatus, DqError> {
+    let arr = v.req_arr("partial_fids")?;
+    let partial_fids: Vec<Option<f32>> = arr.iter().map(|x| x.as_f64().map(|f| f as f32)).collect();
+    Ok(BankStatus {
+        pending: v
+            .get("pending")
+            .and_then(Value::as_bool)
+            .ok_or_else(|| DqError::Protocol("missing/invalid bool field 'pending'".into()))?,
+        completed: v.req_usize("completed")?,
+        total: v.req_usize("total")?,
+        partial_fids,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_request_round_trips() {
+        let req = SubmitRequest {
+            client: 3,
+            config: QuClassiConfig::new(5, 2).unwrap(),
+            pairs: vec![
+                (vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6], vec![0.9; 4]),
+                (vec![0.0; 6], vec![-1.5, 0.25, 0.0, 2.0]),
+            ],
+        };
+        let back = SubmitRequest::from_wire(&req.to_wire()).unwrap();
+        assert_eq!(req, back);
+        // and through the actual JSON serializer
+        let text = crate::wire::json::to_string(&req.to_wire());
+        let parsed = crate::wire::json::parse(&text).unwrap();
+        assert_eq!(SubmitRequest::from_wire(&parsed).unwrap(), req);
+    }
+
+    #[test]
+    fn submit_request_rejects_bad_config() {
+        let mut w = SubmitRequest {
+            client: 1,
+            config: QuClassiConfig::new(5, 1).unwrap(),
+            pairs: vec![(vec![0.0; 4], vec![0.0; 4])],
+        }
+        .to_wire();
+        w.set("qubits", 4usize); // even widths are invalid
+        assert!(matches!(SubmitRequest::from_wire(&w), Err(DqError::Protocol(_))));
+    }
+
+    #[test]
+    fn submit_response_round_trips() {
+        let resp = SubmitResponse { bank: 42, total: 128 };
+        assert_eq!(SubmitResponse::from_wire(&resp.to_wire()).unwrap(), resp);
+    }
+
+    #[test]
+    fn bank_status_round_trips_with_nulls() {
+        let status = BankStatus {
+            pending: true,
+            completed: 2,
+            total: 4,
+            partial_fids: vec![Some(0.5), None, Some(0.25), None],
+        };
+        let text = crate::wire::json::to_string(&bank_status_to_wire(&status));
+        let parsed = crate::wire::json::parse(&text).unwrap();
+        assert_eq!(bank_status_from_wire(&parsed).unwrap(), status);
+    }
+
+    #[test]
+    fn bank_status_missing_fields_is_protocol() {
+        let v = Value::obj().with("completed", 1u64);
+        assert!(matches!(bank_status_from_wire(&v), Err(DqError::Protocol(_))));
+    }
+}

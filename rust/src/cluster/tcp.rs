@@ -1,22 +1,37 @@
 //! Distributed deployment over TCP: manager RPC server, manager→worker
 //! channel, and the remote client.
 //!
-//! Message flow (all framed JSON, `net::rpc` envelope):
+//! Message flow (all framed JSON, `net::rpc` envelope; client↔manager
+//! payloads are the typed pairs in [`super::proto`]):
 //!
 //! ```text
 //! worker  -> manager : register {max_qubits, addr, cru, threads} -> {worker_id}
 //! worker  -> manager : heartbeat {worker_id, cru}
-//! client  -> manager : submit_bank {client, qubits, layers, circuits} -> {bank}
-//! client  -> manager : wait_bank {bank} -> {fids}
-//! manager -> worker  : execute {circuits} -> {fids}
+//! client  -> manager : submit_bank <SubmitRequest>     -> <SubmitResponse>
+//! client  -> manager : wait_bank {bank, timeout_ms?}   -> {fids}
+//! client  -> manager : bank_status {bank}              -> <BankStatus>
+//! client  -> manager : cancel_bank {bank}              -> {drained}
+//! manager -> worker  : execute {circuits}              -> {fids}
 //! ```
+//!
+//! Errors round-trip typed: a bank the manager fails with
+//! `DqError::Unschedulable` (or a client cancels to `Cancelled`) surfaces
+//! as that same variant on the remote side.
+//!
+//! Trust model: the protocol is *cooperative* — client ids, bank ids,
+//! and worker registration are unauthenticated sequential handles, so
+//! any peer that can reach the manager can wait on, poll, or cancel any
+//! bank. Deploy on a trusted network segment (DESIGN.md §12).
 
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::proto::{self, SubmitRequest, SubmitResponse};
 use crate::circuit::QuClassiConfig;
 use crate::coordinator::job::CircuitJob;
-use crate::coordinator::{Manager, WorkerChannel};
+use crate::coordinator::session::{ClientSession, SessionOps};
+use crate::coordinator::{BankStatus, Manager, WorkerChannel, WorkerProfile};
+use crate::error::DqError;
 use crate::model::exec::{CircuitExecutor, CircuitPair};
 use crate::net::{RpcClient, RpcServer};
 use crate::wire::Value;
@@ -31,7 +46,7 @@ impl WorkerChannel for RpcWorkerChannel {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         let circuits: Vec<Value> = pairs
             .iter()
             .enumerate()
@@ -48,18 +63,15 @@ impl WorkerChannel for RpcWorkerChannel {
                 .to_wire()
             })
             .collect();
-        let resp = self
-            .client
-            .call("execute", Value::obj().with("circuits", circuits))
-            .map_err(|e| format!("worker rpc: {e}"))?;
-        resp.req_f32_vec("fids")
+        let resp = self.client.call("execute", Value::obj().with("circuits", circuits))?;
+        Ok(resp.req_f32_vec("fids")?)
     }
 }
 
 /// Expose a [`Manager`] on a TCP address. Returns the server handle
 /// (drop to stop accepting).
 pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServer> {
-    let handler = move |op: &str, params: &Value| -> Result<Value, String> {
+    let handler = move |op: &str, params: &Value| -> Result<Value, DqError> {
         match op {
             "register" => {
                 let max_qubits = params.req_usize("max_qubits")?;
@@ -69,12 +81,9 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
                 // dispatch batches to the worker's real parallelism.
                 let threads = params.get("threads").and_then(Value::as_usize).unwrap_or(1);
                 let rpc = RpcClient::connect(addr.as_str(), Duration::from_secs(5))
-                    .map_err(|e| format!("dial worker back: {e}"))?;
-                let id = manager.register_worker_full(
-                    max_qubits,
-                    cru,
-                    0.0,
-                    threads,
+                    .map_err(|e| DqError::Io(format!("dial worker back: {e}")))?;
+                let id = manager.register(
+                    WorkerProfile::new(max_qubits).cru(cru).threads(threads),
                     Arc::new(RpcWorkerChannel { client: rpc }),
                 );
                 Ok(Value::obj().with("worker_id", id))
@@ -87,23 +96,32 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
             }
             "new_client" => Ok(Value::obj().with("client", manager.new_client())),
             "submit_bank" => {
-                let client = params.req_u64("client")?;
-                let config =
-                    QuClassiConfig::new(params.req_usize("qubits")?, params.req_usize("layers")?)?;
-                let circuits = params.req_arr("circuits")?;
-                let mut pairs = Vec::with_capacity(circuits.len());
-                for c in circuits {
-                    let thetas = c.req_f32_vec("thetas")?;
-                    let data = c.req_f32_vec("data")?;
-                    pairs.push((thetas, data));
-                }
-                let bank = manager.submit_bank(client, config, &pairs)?;
-                Ok(Value::obj().with("bank", bank))
+                let req = SubmitRequest::from_wire(params)?;
+                let bank = manager.submit_bank(req.client, req.config, &req.pairs)?;
+                Ok(SubmitResponse { bank, total: req.pairs.len() }.to_wire())
             }
             "wait_bank" => {
                 let bank = params.req_u64("bank")?;
-                let fids = manager.wait_bank(bank)?;
+                let fids = match params.get("timeout_ms").and_then(Value::as_u64) {
+                    Some(ms) => manager.wait_bank_timeout(bank, Duration::from_millis(ms))?,
+                    None => manager.wait_bank(bank)?,
+                };
                 Ok(Value::obj().with("fids", fids.as_slice()))
+            }
+            "bank_status" => {
+                let bank = params.req_u64("bank")?;
+                let status = manager.bank_status(bank).ok_or_else(|| {
+                    if manager.bank_cancelled(bank) {
+                        DqError::Cancelled(format!("bank {bank} cancelled"))
+                    } else {
+                        DqError::Protocol(format!("unknown bank {bank}"))
+                    }
+                })?;
+                Ok(proto::bank_status_to_wire(&status))
+            }
+            "cancel_bank" => {
+                let bank = params.req_u64("bank")?;
+                Ok(Value::obj().with("drained", manager.cancel_bank(bank)))
             }
             "stats" => {
                 let s = manager.stats();
@@ -113,37 +131,90 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
                     .with("dispatches", s.dispatches)
                     .with("requeues", s.requeues)
                     .with("evictions", s.evictions)
+                    .with("cancelled", s.cancelled)
                     .with("workers", manager.worker_count())
                     .with("queue", manager.queue_len()))
             }
-            other => Err(format!("manager: unknown op '{other}'")),
+            other => Err(DqError::Protocol(format!("manager: unknown op '{other}'"))),
         }
     };
     RpcServer::serve(listen, Arc::new(handler))
 }
 
-/// A client connected to a remote manager; implements
-/// [`CircuitExecutor`] so training code is deployment-agnostic.
+/// [`SessionOps`] over the RPC connection: the transport behind remote
+/// [`ClientSession`]s.
+struct RemoteOps {
+    rpc: Arc<RpcClient>,
+}
+
+impl SessionOps for RemoteOps {
+    fn submit(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<u64, DqError> {
+        let req = SubmitRequest { client, config, pairs: pairs.to_vec() };
+        let resp = self.rpc.call("submit_bank", req.to_wire())?;
+        Ok(SubmitResponse::from_wire(&resp)?.bank)
+    }
+
+    fn wait(&self, bank: u64, timeout: Option<Duration>) -> Result<Vec<f32>, DqError> {
+        let mut params = Value::obj().with("bank", bank);
+        if let Some(t) = timeout {
+            params.set("timeout_ms", t.as_millis() as u64);
+        }
+        let resp = self.rpc.call("wait_bank", params)?;
+        Ok(resp.req_f32_vec("fids")?)
+    }
+
+    fn status(&self, bank: u64) -> Result<BankStatus, DqError> {
+        let resp = self.rpc.call("bank_status", Value::obj().with("bank", bank))?;
+        proto::bank_status_from_wire(&resp)
+    }
+
+    fn cancel(&self, bank: u64) -> Result<usize, DqError> {
+        let resp = self.rpc.call("cancel_bank", Value::obj().with("bank", bank))?;
+        Ok(resp.req_usize("drained")?)
+    }
+}
+
+/// A client connected to a remote manager; hands out typed
+/// [`ClientSession`]s and implements [`CircuitExecutor`] itself so
+/// training code is deployment-agnostic.
 pub struct RemoteClient {
-    rpc: RpcClient,
+    rpc: Arc<RpcClient>,
     client_id: u64,
 }
 
 impl RemoteClient {
-    pub fn connect(manager_addr: &str) -> Result<RemoteClient, String> {
+    pub fn connect(manager_addr: &str) -> Result<RemoteClient, DqError> {
         let rpc = RpcClient::connect(manager_addr, Duration::from_secs(5))
-            .map_err(|e| format!("connect manager: {e}"))?;
-        let resp = rpc.call("new_client", Value::obj()).map_err(|e| e.to_string())?;
+            .map_err(|e| DqError::Io(format!("connect manager: {e}")))?;
+        let resp = rpc.call("new_client", Value::obj())?;
         let client_id = resp.req_u64("client")?;
-        Ok(RemoteClient { rpc, client_id })
+        Ok(RemoteClient { rpc: Arc::new(rpc), client_id })
     }
 
     pub fn client_id(&self) -> u64 {
         self.client_id
     }
 
-    pub fn manager_stats(&self) -> Result<Value, String> {
-        self.rpc.call("stats", Value::obj()).map_err(|e| e.to_string())
+    /// A typed session bound to this connection's client id. Multiple
+    /// calls allocate fresh tenant ids from the manager.
+    ///
+    /// Note: calls on one connection serialize; a long blocking `wait`
+    /// delays a concurrent `try_poll` issued through the same
+    /// `RemoteClient`. Poll-then-wait (or a second connection) if you
+    /// need overlap.
+    pub fn session(&self) -> Result<ClientSession, DqError> {
+        let resp = self.rpc.call("new_client", Value::obj())?;
+        let client = resp.req_u64("client")?;
+        Ok(ClientSession::new(Arc::new(RemoteOps { rpc: self.rpc.clone() }), client))
+    }
+
+    pub fn manager_stats(&self) -> Result<Value, DqError> {
+        self.rpc.call("stats", Value::obj())
     }
 }
 
@@ -152,28 +223,10 @@ impl CircuitExecutor for RemoteClient {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
-        let circuits: Vec<Value> = pairs
-            .iter()
-            .map(|(t, d)| Value::obj().with("thetas", t.as_slice()).with("data", d.as_slice()))
-            .collect();
-        let resp = self
-            .rpc
-            .call(
-                "submit_bank",
-                Value::obj()
-                    .with("client", self.client_id)
-                    .with("qubits", config.qubits)
-                    .with("layers", config.layers)
-                    .with("circuits", circuits),
-            )
-            .map_err(|e| e.to_string())?;
-        let bank = resp.req_u64("bank")?;
-        let resp = self
-            .rpc
-            .call("wait_bank", Value::obj().with("bank", bank))
-            .map_err(|e| e.to_string())?;
-        resp.req_f32_vec("fids")
+    ) -> Result<Vec<f32>, DqError> {
+        let ops = RemoteOps { rpc: self.rpc.clone() };
+        let bank = ops.submit(self.client_id, *config, pairs)?;
+        ops.wait(bank, None)
     }
 
     fn describe(&self) -> String {
@@ -230,8 +283,15 @@ mod tests {
         let fids = client.execute_bank(&cfg, &pairs).unwrap();
         assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
 
+        // the typed session API over the same connection
+        let session = client.session().unwrap();
+        let handle = session.submit(cfg, &pairs).unwrap();
+        assert_eq!(handle.total(), 12);
+        let fids2 = handle.wait().unwrap();
+        assert_eq!(fids2, fids);
+
         let stats = client.manager_stats().unwrap();
-        assert_eq!(stats.req_u64("completed").unwrap(), 12);
+        assert_eq!(stats.req_u64("completed").unwrap(), 24);
         assert_eq!(stats.req_u64("workers").unwrap(), 2);
 
         w1.stop();
@@ -287,6 +347,34 @@ mod tests {
         assert_eq!(manager.worker_count(), 1);
 
         drop(survivor);
+        manager.shutdown();
+    }
+
+    /// A typed error raised manager-side arrives as the same variant on
+    /// the remote side (the wire round trip the taxonomy promises).
+    #[test]
+    fn unschedulable_error_round_trips_over_tcp() {
+        let manager = Manager::new(ManagerConfig::default());
+        let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let mut w = WorkerHandle::start(
+            &addr,
+            WorkerOptions {
+                max_qubits: 5,
+                artifact_dir: "/nonexistent".into(),
+                heartbeat_period: 0.5,
+                listen: "127.0.0.1:0".to_string(),
+                threads: 1,
+            },
+        )
+        .unwrap();
+        let client = RemoteClient::connect(&addr).unwrap();
+        let session = client.session().unwrap();
+        let cfg = QuClassiConfig::new(9, 1).unwrap(); // needs 9 > 5
+        let pairs: Vec<CircuitPair> = vec![(vec![0.1; 8], vec![0.1; 8]); 2];
+        let err = session.submit(cfg, &pairs).unwrap().wait().unwrap_err();
+        assert!(matches!(err, DqError::Unschedulable(_)), "{err}");
+        w.stop();
         manager.shutdown();
     }
 }

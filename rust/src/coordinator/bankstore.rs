@@ -1,22 +1,56 @@
 //! Result collection: banks of circuits submitted by clients, filled in
-//! as workers complete them, awaited by blocking clients.
+//! as workers complete them, observed through [`BankStatus`] snapshots,
+//! awaited (or cancelled) by clients holding a
+//! [`super::session::BankHandle`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
+
+use crate::error::DqError;
 
 /// One submitted bank awaiting its fidelities.
 #[derive(Debug)]
 struct BankState {
     fids: Vec<Option<f32>>,
     remaining: usize,
-    failed: Option<String>,
+    failed: Option<DqError>,
+}
+
+/// The store's contents behind one lock: resident banks plus the ids of
+/// every bank that was ever cancelled. Cancellation must outlive the
+/// bank's residency — in-flight results can arrive, dispatches can fail,
+/// and waiters can show up after the tombstone is garbage-collected, and
+/// all of them must still observe "cancelled" (discard / no requeue /
+/// `DqError::Cancelled`), never a resurrected bank or a GC-timing-
+/// dependent `Protocol` error. The set costs 8 bytes per cancelled bank
+/// for the store's lifetime.
+#[derive(Debug, Default)]
+struct Store {
+    banks: HashMap<u64, BankState>,
+    cancelled: HashSet<u64>,
+}
+
+/// Point-in-time snapshot of a bank's progress (the `try_poll` payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankStatus {
+    /// True while results are still outstanding (and the bank has neither
+    /// failed nor been cancelled).
+    pub pending: bool,
+    /// Circuits completed so far.
+    pub completed: usize,
+    /// Circuits in the bank.
+    pub total: usize,
+    /// Per-circuit completion: `Some(fid)` once circuit `i` finished.
+    /// Lets a training loop stream partial fidelities before the bank
+    /// closes.
+    pub partial_fids: Vec<Option<f32>>,
 }
 
 /// Thread-safe store of in-flight banks.
 #[derive(Debug, Default)]
 pub struct BankStore {
-    inner: Mutex<HashMap<u64, BankState>>,
+    inner: Mutex<Store>,
     cv: Condvar,
 }
 
@@ -29,14 +63,20 @@ impl BankStore {
     /// Open a new bank expecting `size` results.
     pub fn open(&self, bank: u64, size: usize) {
         let mut g = self.inner.lock().expect("bankstore poisoned");
-        let prev = g.insert(bank, BankState { fids: vec![None; size], remaining: size, failed: None });
+        let prev = g
+            .banks
+            .insert(bank, BankState { fids: vec![None; size], remaining: size, failed: None });
         debug_assert!(prev.is_none(), "bank id reuse");
     }
 
-    /// Record one completed circuit.
+    /// Record one completed circuit. Results for unknown or cancelled
+    /// banks are discarded (discard-on-arrival).
     pub fn complete(&self, bank: u64, index: usize, fid: f32) {
         let mut g = self.inner.lock().expect("bankstore poisoned");
-        if let Some(b) = g.get_mut(&bank) {
+        if g.cancelled.contains(&bank) {
+            return;
+        }
+        if let Some(b) = g.banks.get_mut(&bank) {
             if b.fids[index].is_none() {
                 b.fids[index] = Some(fid);
                 b.remaining -= 1;
@@ -47,36 +87,66 @@ impl BankStore {
         }
     }
 
-    /// Mark a whole bank as failed (e.g. unschedulable circuit).
-    pub fn fail(&self, bank: u64, reason: String) {
+    /// Mark a whole bank as failed (e.g. unschedulable circuit, worker
+    /// protocol violation); waiters observe the error. Never overrides a
+    /// cancellation.
+    pub fn fail(&self, bank: u64, reason: DqError) {
         let mut g = self.inner.lock().expect("bankstore poisoned");
-        if let Some(b) = g.get_mut(&bank) {
-            b.failed = Some(reason);
+        if g.cancelled.contains(&bank) {
+            return;
+        }
+        if let Some(b) = g.banks.get_mut(&bank) {
+            if b.failed.is_none() {
+                b.failed = Some(reason);
+            }
             self.cv.notify_all();
         }
     }
 
-    /// Block until the bank completes (or fails / times out); removes it.
-    pub fn wait(&self, bank: u64, timeout: Duration) -> Result<Vec<f32>, String> {
+    /// Cancel a bank: its id is recorded for the store's lifetime (so
+    /// in-flight results are discarded on arrival and late waiters always
+    /// observe `Cancelled`, even after the tombstone is GC'd) and the
+    /// tombstone stays resident while results remain in flight. Returns
+    /// true only on the first cancellation of a *resident* bank (false
+    /// when the bank is unknown — already waited out — or already
+    /// cancelled), so garbage ids from remote clients don't grow the set.
+    pub fn cancel(&self, bank: u64) -> bool {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        if !g.banks.contains_key(&bank) {
+            return false;
+        }
+        let first = g.cancelled.insert(bank);
+        self.cv.notify_all();
+        first
+    }
+
+    /// Block until the bank completes (or fails / is cancelled / times
+    /// out); removes it.
+    pub fn wait(&self, bank: u64, timeout: Duration) -> Result<Vec<f32>, DqError> {
         let deadline = std::time::Instant::now() + timeout;
         let mut g = self.inner.lock().expect("bankstore poisoned");
         loop {
-            match g.get(&bank) {
-                None => return Err(format!("unknown bank {bank}")),
+            if g.cancelled.contains(&bank) {
+                g.banks.remove(&bank);
+                return Err(DqError::Cancelled(format!("bank {bank} cancelled")));
+            }
+            match g.banks.get(&bank) {
+                None => return Err(DqError::Protocol(format!("unknown bank {bank}"))),
                 Some(b) if b.failed.is_some() => {
                     let reason = b.failed.clone().unwrap();
-                    g.remove(&bank);
+                    g.banks.remove(&bank);
                     return Err(reason);
                 }
                 Some(b) if b.remaining == 0 => {
-                    let b = g.remove(&bank).unwrap();
+                    let b = g.banks.remove(&bank).unwrap();
                     return Ok(b.fids.into_iter().map(|f| f.unwrap()).collect());
                 }
                 Some(_) => {
                     let now = std::time::Instant::now();
                     if now >= deadline {
-                        g.remove(&bank);
-                        return Err(format!("bank {bank} timed out"));
+                        // The bank stays resident: a timed-out wait can be
+                        // retried, polled, or escalated to cancel().
+                        return Err(DqError::Timeout(format!("bank {bank} timed out")));
                     }
                     let (guard, _t) = self
                         .cv
@@ -88,15 +158,42 @@ impl BankStore {
         }
     }
 
+    /// True when the bank has ever been cancelled (outlives residency —
+    /// see [`BankStore::cancel`]).
+    pub fn is_cancelled(&self, bank: u64) -> bool {
+        let g = self.inner.lock().expect("bankstore poisoned");
+        g.cancelled.contains(&bank)
+    }
+
+    /// Drop a bank's state outright (tombstone GC once its last in-flight
+    /// result has resolved). The cancelled-id record survives; no-op for
+    /// unknown banks.
+    pub fn discard(&self, bank: u64) {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        g.banks.remove(&bank);
+        // wake any waiter so it observes the removal instead of blocking
+        self.cv.notify_all();
+    }
+
+    /// Snapshot of a bank's progress, if it is still resident.
+    pub fn status(&self, bank: u64) -> Option<BankStatus> {
+        let g = self.inner.lock().expect("bankstore poisoned");
+        g.banks.get(&bank).map(|b| BankStatus {
+            pending: b.remaining > 0 && b.failed.is_none() && !g.cancelled.contains(&bank),
+            completed: b.fids.len() - b.remaining,
+            total: b.fids.len(),
+            partial_fids: b.fids.clone(),
+        })
+    }
+
     /// Progress of a bank: (done, total), if it exists.
     pub fn progress(&self, bank: u64) -> Option<(usize, usize)> {
-        let g = self.inner.lock().expect("bankstore poisoned");
-        g.get(&bank).map(|b| (b.fids.len() - b.remaining, b.fids.len()))
+        self.status(bank).map(|s| (s.completed, s.total))
     }
 
     /// Number of banks currently open.
     pub fn in_flight(&self) -> usize {
-        self.inner.lock().expect("bankstore poisoned").len()
+        self.inner.lock().expect("bankstore poisoned").banks.len()
     }
 }
 
@@ -130,20 +227,44 @@ mod tests {
     }
 
     #[test]
-    fn timeout_reported() {
+    fn timeout_leaves_bank_resident_for_retry() {
         let s = BankStore::new();
         s.open(2, 1);
         let err = s.wait(2, Duration::from_millis(20)).unwrap_err();
-        assert!(err.contains("timed out"));
+        assert!(matches!(err, DqError::Timeout(_)), "{err}");
+        // the bank survives the timeout: progress is still observable,
+        // a straggler result still lands, and a retried wait succeeds
+        assert_eq!(s.progress(2), Some((0, 1)));
+        s.complete(2, 0, 0.4);
+        assert_eq!(s.wait(2, Duration::from_millis(20)).unwrap(), vec![0.4]);
     }
 
     #[test]
-    fn failure_propagates() {
+    fn discard_drops_tombstone_but_cancellation_survives() {
+        let s = BankStore::new();
+        s.open(9, 2);
+        s.cancel(9);
+        assert!(s.is_cancelled(9));
+        s.discard(9);
+        assert_eq!(s.in_flight(), 0);
+        s.discard(9); // idempotent
+        // The cancelled record outlives the tombstone: a late waiter
+        // observes Cancelled (never an "unknown bank" Protocol error
+        // whose occurrence would depend on GC timing), late results are
+        // still discarded, and a late requeue still sees is_cancelled.
+        assert!(s.is_cancelled(9));
+        assert!(matches!(s.wait(9, Duration::from_millis(10)), Err(DqError::Cancelled(_))));
+        s.complete(9, 0, 0.5);
+        assert_eq!(s.in_flight(), 0, "post-GC result must not resurrect the bank");
+    }
+
+    #[test]
+    fn failure_propagates_typed() {
         let s = BankStore::new();
         s.open(3, 2);
-        s.fail(3, "no capacity".into());
+        s.fail(3, DqError::Unschedulable("no capacity".into()));
         let err = s.wait(3, Duration::from_millis(100)).unwrap_err();
-        assert!(err.contains("no capacity"));
+        assert_eq!(err, DqError::Unschedulable("no capacity".into()));
     }
 
     #[test]
@@ -160,6 +281,45 @@ mod tests {
     #[test]
     fn unknown_bank_errors() {
         let s = BankStore::new();
-        assert!(s.wait(42, Duration::from_millis(10)).is_err());
+        assert!(matches!(s.wait(42, Duration::from_millis(10)), Err(DqError::Protocol(_))));
+    }
+
+    #[test]
+    fn cancel_discards_results_on_arrival() {
+        let s = BankStore::new();
+        s.open(6, 3);
+        s.complete(6, 0, 0.1);
+        assert!(s.cancel(6));
+        // a straggler result arrives from a worker after cancellation
+        s.complete(6, 1, 0.2);
+        let st = s.status(6).unwrap();
+        assert!(!st.pending);
+        assert_eq!(st.completed, 1, "post-cancel result must be discarded");
+        assert!(matches!(s.wait(6, Duration::from_millis(50)), Err(DqError::Cancelled(_))));
+        assert_eq!(s.in_flight(), 0);
+        assert!(!s.cancel(6), "cancel after wait is a no-op");
+    }
+
+    #[test]
+    fn cancel_wakes_blocked_waiter() {
+        let s = Arc::new(BankStore::new());
+        s.open(7, 2);
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || s2.wait(7, Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(30));
+        s.cancel(7);
+        assert!(matches!(t.join().unwrap(), Err(DqError::Cancelled(_))));
+    }
+
+    #[test]
+    fn status_exposes_partial_fids() {
+        let s = BankStore::new();
+        s.open(8, 3);
+        s.complete(8, 2, 0.9);
+        let st = s.status(8).unwrap();
+        assert!(st.pending);
+        assert_eq!((st.completed, st.total), (1, 3));
+        assert_eq!(st.partial_fids, vec![None, None, Some(0.9)]);
+        assert_eq!(s.status(99), None);
     }
 }

@@ -1,6 +1,7 @@
 //! Circuit jobs: the co-Manager's unit of distribution.
 
 use crate::circuit::QuClassiConfig;
+use crate::error::DqError;
 use crate::wire::Value;
 
 /// Globally unique circuit identifier.
@@ -40,19 +41,25 @@ impl CircuitJob {
     }
 
     /// Decode the wire encoding, validating arities against the config.
-    pub fn from_wire(v: &Value) -> Result<CircuitJob, String> {
+    /// Missing/malformed fields surface as [`DqError::Protocol`]; length
+    /// mismatches as [`DqError::Arity`].
+    pub fn from_wire(v: &Value) -> Result<CircuitJob, DqError> {
         let config = QuClassiConfig::new(v.req_usize("qubits")?, v.req_usize("layers")?)?;
         let thetas = v.req_f32_vec("thetas")?;
         let data = v.req_f32_vec("data")?;
         if thetas.len() != config.n_params() {
-            return Err(format!(
+            return Err(DqError::Arity(format!(
                 "job theta arity {} != {}",
                 thetas.len(),
                 config.n_params()
-            ));
+            )));
         }
         if data.len() != config.n_features() {
-            return Err(format!("job data arity {} != {}", data.len(), config.n_features()));
+            return Err(DqError::Arity(format!(
+                "job data arity {} != {}",
+                data.len(),
+                config.n_features()
+            )));
         }
         Ok(CircuitJob {
             id: v.req_u64("id")?,
@@ -98,6 +105,6 @@ mod tests {
     fn rejects_arity_mismatch() {
         let mut w = sample_job().to_wire();
         w.set("thetas", vec![0.1f32, 0.2].as_slice());
-        assert!(CircuitJob::from_wire(&w).is_err());
+        assert!(matches!(CircuitJob::from_wire(&w), Err(DqError::Arity(_))));
     }
 }

@@ -3,19 +3,26 @@
 //!
 //! Transport-agnostic: workers are reached through the [`WorkerChannel`]
 //! trait (TCP RPC in distributed mode, direct calls in `--in-proc` mode);
-//! clients interact through [`Manager`] methods (wrapped by the RPC
-//! server in `cluster::tcp`).
+//! clients interact through typed [`super::session::ClientSession`]
+//! handles obtained from [`Manager::session`] (wrapped by the RPC server
+//! in `cluster::tcp` for remote clients).
+//!
+//! Lock order (outermost first): `queue` → `registry` → `in_flight` →
+//! `batches` → `stats`. The `channels` map is never locked while any of
+//! those are held.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use super::bankstore::BankStore;
+use super::bankstore::{BankStatus, BankStore};
 use super::job::{CircuitJob, JobId};
-use super::registry::{Registry, WorkerId};
+use super::registry::{Registry, WorkerId, WorkerProfile};
 use super::scheduler;
+use super::session::ClientSession;
 use crate::circuit::QuClassiConfig;
+use crate::error::DqError;
 use crate::model::exec::CircuitPair;
 use crate::util::{Clock, SystemClock};
 
@@ -25,7 +32,7 @@ pub trait WorkerChannel: Send + Sync {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String>;
+    ) -> Result<Vec<f32>, DqError>;
 }
 
 /// Manager tuning knobs.
@@ -72,6 +79,8 @@ pub struct ManagerStats {
     pub dispatches: u64,
     pub requeues: u64,
     pub evictions: u64,
+    /// Banks cancelled by clients.
+    pub cancelled: u64,
 }
 
 struct Inner {
@@ -146,17 +155,29 @@ impl Manager {
     // worker-facing API
     // ------------------------------------------------------------------
 
-    /// Quantum Worker Registration (Algorithm 2 lines 2-6).
+    /// Quantum Worker Registration (Algorithm 2 lines 2-6) from a typed
+    /// [`WorkerProfile`] — the single registration entry point.
+    pub fn register(&self, profile: WorkerProfile, channel: Arc<dyn WorkerChannel>) -> WorkerId {
+        let now = self.inner.clock.now();
+        let id = self.inner.registry.lock().unwrap().register_profile(&profile, now);
+        self.inner.channels.lock().unwrap().insert(id, channel);
+        self.inner.work_cv.notify_all();
+        id
+    }
+
+    /// Registration with only qubit capacity and a CRU sample.
+    #[deprecated(since = "0.2.0", note = "use Manager::register with a WorkerProfile")]
     pub fn register_worker(
         &self,
         max_qubits: usize,
         cru: f64,
         channel: Arc<dyn WorkerChannel>,
     ) -> WorkerId {
-        self.register_worker_profile(max_qubits, cru, 0.0, channel)
+        self.register(WorkerProfile::new(max_qubits).cru(cru), channel)
     }
 
     /// Registration with a reported noise estimate (extension §10).
+    #[deprecated(since = "0.2.0", note = "use Manager::register with a WorkerProfile")]
     pub fn register_worker_profile(
         &self,
         max_qubits: usize,
@@ -164,11 +185,12 @@ impl Manager {
         noise: f64,
         channel: Arc<dyn WorkerChannel>,
     ) -> WorkerId {
-        self.register_worker_full(max_qubits, cru, noise, 1, channel)
+        self.register(WorkerProfile::new(max_qubits).cru(cru).noise(noise), channel)
     }
 
     /// Full registration: noise estimate plus the worker's execution
-    /// thread budget, which sizes dispatch batches (DESIGN.md §11).
+    /// thread budget.
+    #[deprecated(since = "0.2.0", note = "use Manager::register with a WorkerProfile")]
     pub fn register_worker_full(
         &self,
         max_qubits: usize,
@@ -177,22 +199,18 @@ impl Manager {
         threads: usize,
         channel: Arc<dyn WorkerChannel>,
     ) -> WorkerId {
-        let now = self.inner.clock.now();
-        let id = self
-            .inner
-            .registry
-            .lock()
-            .unwrap()
-            .register_full(max_qubits, cru, noise, threads, now);
-        self.inner.channels.lock().unwrap().insert(id, channel);
-        self.inner.work_cv.notify_all();
-        id
+        self.register(
+            WorkerProfile::new(max_qubits).cru(cru).noise(noise).threads(threads),
+            channel,
+        )
     }
 
     /// Periodic heartbeat (Algorithm 2 lines 7-11): liveness + CRU. The
     /// manager's own reserve/release bookkeeping remains authoritative
     /// for occupied qubits (worker self-reports race with in-pipe RPCs).
-    pub fn heartbeat(&self, worker: WorkerId, cru: f64) -> Result<(), String> {
+    /// An evicted or never-registered worker gets [`DqError::WorkerLost`]
+    /// and should re-register.
+    pub fn heartbeat(&self, worker: WorkerId, cru: f64) -> Result<(), DqError> {
         let now = self.inner.clock.now();
         self.inner.registry.lock().unwrap().heartbeat(worker, cru, now)
     }
@@ -201,25 +219,39 @@ impl Manager {
     // client-facing API
     // ------------------------------------------------------------------
 
-    /// Allocate a client id (multi-tenant session).
+    /// Open a typed client session (multi-tenant): the session owns its
+    /// client id and hands out [`super::session::BankHandle`] futures.
+    pub fn session(&self) -> ClientSession {
+        let client = self.new_client();
+        ClientSession::new(Arc::new(self.clone()), client)
+    }
+
+    /// Allocate a raw client id (prefer [`Manager::session`]).
     pub fn new_client(&self) -> u64 {
         self.inner.next_client.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Submit a bank of circuits; returns the bank id immediately.
     /// Blocks when the pending queue is above the backpressure limit.
+    /// (Primitive under [`ClientSession::submit`].)
     pub fn submit_bank(
         &self,
         client: u64,
         config: QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<u64, String> {
+    ) -> Result<u64, DqError> {
         if pairs.is_empty() {
-            return Err("empty bank".to_string());
+            return Err(DqError::Arity("empty bank".to_string()));
         }
         for (t, d) in pairs {
             if t.len() != config.n_params() || d.len() != config.n_features() {
-                return Err("bank arity mismatch".to_string());
+                return Err(DqError::Arity(format!(
+                    "bank arity mismatch: theta {} (want {}), data {} (want {})",
+                    t.len(),
+                    config.n_params(),
+                    d.len(),
+                    config.n_features()
+                )));
             }
         }
         let bank = self.inner.next_bank.fetch_add(1, Ordering::Relaxed);
@@ -229,7 +261,7 @@ impl Manager {
         let mut q = self.inner.queue.lock().unwrap();
         while q.len() + pairs.len() > self.inner.cfg.max_queue {
             if self.inner.stop.load(Ordering::Relaxed) {
-                return Err("manager stopped".to_string());
+                return Err(DqError::Cancelled("manager stopped".to_string()));
             }
             let (guard, _) = self
                 .inner
@@ -256,9 +288,84 @@ impl Manager {
         Ok(bank)
     }
 
-    /// Block until a bank completes.
-    pub fn wait_bank(&self, bank: u64) -> Result<Vec<f32>, String> {
-        self.inner.banks.wait(bank, self.inner.cfg.wait_timeout)
+    /// Block until a bank completes (default timeout). This is the
+    /// *consuming* wait path ([`super::session::BankHandle::wait`] and
+    /// the `execute_bank` conveniences): a timeout here leaves the caller
+    /// no way to retry, poll, or cancel, so the zombie bank is reaped
+    /// (cancelled) before the [`DqError::Timeout`] is returned — its
+    /// queued circuits drain and its state does not leak in a
+    /// long-running multi-tenant manager.
+    pub fn wait_bank(&self, bank: u64) -> Result<Vec<f32>, DqError> {
+        match self.inner.banks.wait(bank, self.inner.cfg.wait_timeout) {
+            Err(e @ DqError::Timeout(_)) => {
+                self.cancel_bank(bank);
+                Err(e)
+            }
+            other => other,
+        }
+    }
+
+    /// Block until a bank completes, up to an explicit deadline. Unlike
+    /// [`Manager::wait_bank`], a timeout leaves the bank resident: the
+    /// caller holds a handle and can retry, poll, or escalate to
+    /// `cancel` — abandoning it without cancelling leaks the bank.
+    pub fn wait_bank_timeout(&self, bank: u64, timeout: Duration) -> Result<Vec<f32>, DqError> {
+        self.inner.banks.wait(bank, timeout)
+    }
+
+    /// Non-blocking progress snapshot of a bank (None once waited out).
+    pub fn bank_status(&self, bank: u64) -> Option<BankStatus> {
+        self.inner.banks.status(bank)
+    }
+
+    /// True when the bank was ever cancelled — outlives the tombstone, so
+    /// status/poll paths can answer [`DqError::Cancelled`] (not "unknown
+    /// bank") after the GC.
+    pub fn bank_cancelled(&self, bank: u64) -> bool {
+        self.inner.banks.is_cancelled(bank)
+    }
+
+    /// Cancel a bank: drains its queued circuits (releasing backpressure),
+    /// marks in-flight results discard-on-arrival, and wakes any waiter
+    /// with [`DqError::Cancelled`]. Idempotent; returns the number of
+    /// queued circuits drained.
+    ///
+    /// The cancelled bank's tombstone lives only as long as it has
+    /// results still in flight (discard-on-arrival needs it); once the
+    /// last one resolves it is garbage-collected, so cancel-without-wait
+    /// does not leak. [`super::session::BankHandle`] keeps reporting
+    /// `Cancelled` after the GC.
+    pub fn cancel_bank(&self, bank: u64) -> usize {
+        let mut q = self.inner.queue.lock().unwrap();
+        let before = q.len();
+        q.retain(|j| j.bank != bank);
+        let drained = before - q.len();
+        drop(q);
+        if self.inner.banks.cancel(bank) {
+            self.inner.stats.lock().unwrap().cancelled += 1;
+        }
+        // GC immediately when nothing is in flight (the check and the
+        // discard serialize against dispatch completion on `in_flight`).
+        let in_flight = self.inner.in_flight.lock().unwrap();
+        self.gc_cancelled_banks(&[bank], &in_flight);
+        drop(in_flight);
+        // Queued work disappeared: release blocked submitters; nothing new
+        // became schedulable, so the work_cv stays quiet.
+        self.inner.space_cv.notify_all();
+        drained
+    }
+
+    /// Drop tombstones of cancelled banks that have no in-flight work
+    /// left. Callers hold the `in_flight` lock, so the emptiness check
+    /// and the discard are atomic w.r.t. result arrival.
+    fn gc_cancelled_banks(&self, banks: &[u64], in_flight: &HashMap<JobId, CircuitJob>) {
+        for &bank in banks {
+            if self.inner.banks.is_cancelled(bank)
+                && !in_flight.values().any(|j| j.bank == bank)
+            {
+                self.inner.banks.discard(bank);
+            }
+        }
     }
 
     /// Convenience: submit + wait.
@@ -267,7 +374,7 @@ impl Manager {
         client: u64,
         config: QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         let bank = self.submit_bank(client, config, pairs)?;
         self.wait_bank(bank)
     }
@@ -285,6 +392,11 @@ impl Manager {
     /// Circuits currently pending assignment.
     pub fn queue_len(&self) -> usize {
         self.inner.queue.lock().unwrap().len()
+    }
+
+    /// Total available (unreserved) qubits across the pool.
+    pub fn available_qubits(&self) -> usize {
+        self.inner.registry.lock().unwrap().total_available()
     }
 
     /// Stop the scheduler loop and wake all waiters.
@@ -326,13 +438,21 @@ impl Manager {
         if evicted.is_empty() {
             return;
         }
-        let mut in_flight = self.inner.in_flight.lock().unwrap();
+        // Prune channels first, on their own — taking the channels lock
+        // while queue/in_flight/stats are held would be the reverse of the
+        // dispatch path's nesting (lock-order hazard).
+        {
+            let mut channels = self.inner.channels.lock().unwrap();
+            for (wid, _) in &evicted {
+                channels.remove(wid);
+            }
+        }
         let mut q = self.inner.queue.lock().unwrap();
-        let mut stats = self.inner.stats.lock().unwrap();
+        let mut in_flight = self.inner.in_flight.lock().unwrap();
         let mut batches = self.inner.batches.lock().unwrap();
-        for (wid, orphan_keys) in evicted {
+        let mut stats = self.inner.stats.lock().unwrap();
+        for (_wid, orphan_keys) in evicted {
             stats.evictions += 1;
-            self.inner.channels.lock().unwrap().remove(&wid);
             for key in orphan_keys {
                 // each orphaned reservation is a whole dispatch batch
                 let members = batches.remove(&key).unwrap_or_else(|| vec![key]);
@@ -344,7 +464,9 @@ impl Manager {
                 }
             }
         }
+        drop(stats);
         drop(batches);
+        drop(in_flight);
         drop(q);
         self.inner.work_cv.notify_all();
     }
@@ -357,82 +479,107 @@ impl Manager {
     /// (one PJRT program / one sequential backend job), so it reserves
     /// its `demand` qubits once — concurrent *batches* on a big worker
     /// are what multi-tenant packing schedules.
+    ///
+    /// Unschedulable head-of-line circuits fail their bank and the loop
+    /// continues with the remaining queue immediately, instead of
+    /// stalling schedulable work until the next scheduler tick.
     #[allow(clippy::type_complexity)]
     fn next_assignment(&self) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>)> {
-        let mut q = self.inner.queue.lock().unwrap();
-        if q.is_empty() {
-            return None;
-        }
-        let mut reg = self.inner.registry.lock().unwrap();
+        loop {
+            let mut q = self.inner.queue.lock().unwrap();
+            if q.is_empty() {
+                return None;
+            }
+            let mut reg = self.inner.registry.lock().unwrap();
 
-        // Head-of-line circuit picks the worker (paper semantics)...
-        let head = q.front().unwrap();
-        let demand = head.demand();
-        // An empty pool is not a failure: workers may still join
-        // (dynamic registration); park the queue until one does.
-        if reg.is_empty() {
-            return None;
-        }
-        if !scheduler::can_ever_fit(&reg, demand) {
-            // Unschedulable on the current pool: fail its whole bank.
-            let job = q.pop_front().unwrap();
+            // Head-of-line circuit picks the worker (paper semantics)...
+            let head = q.front().unwrap();
+            let demand = head.demand();
+            // An empty pool is not a failure: workers may still join
+            // (dynamic registration); park the queue until one does.
+            if reg.is_empty() {
+                return None;
+            }
+            if !scheduler::can_ever_fit(&reg, demand) {
+                // Unschedulable on the current pool: fail its whole bank
+                // (every sibling shares the config, hence the demand).
+                let bank = q.pop_front().unwrap().bank;
+                q.retain(|j| j.bank != bank);
+                drop(reg);
+                drop(q);
+                self.inner.banks.fail(
+                    bank,
+                    DqError::Unschedulable(format!(
+                        "circuit needs {demand} qubits; no worker that large"
+                    )),
+                );
+                self.inner.space_cv.notify_all();
+                continue;
+            }
+            let worker = match self.inner.cfg.noise_aware_alpha {
+                Some(alpha) => scheduler::select_noise_aware(&reg, demand, alpha)?,
+                None => scheduler::select(&reg, demand)?,
+            };
+            let config = head.config;
+
+            // ...then pack same-config circuits into the batch, sized by
+            // the worker's registered thread budget so one dispatch
+            // saturates its backend pool without starving co-tenants
+            // (DESIGN.md §11).
+            let worker_threads = reg.get(worker).map(|w| w.threads).unwrap_or(1);
+            let batch_limit = self
+                .inner
+                .cfg
+                .max_batch
+                .min(worker_threads.saturating_mul(self.inner.cfg.batch_per_thread))
+                .max(1);
+            let jobs = Self::pack_batch(&mut q, config, batch_limit);
+            debug_assert!(!jobs.is_empty());
+            // One reservation for the whole batch, keyed by the head job.
+            let key = jobs[0].id;
+            reg.reserve(worker, key, demand).expect("capacity checked");
+            let mut in_flight = self.inner.in_flight.lock().unwrap();
+            for j in &jobs {
+                in_flight.insert(j.id, j.clone());
+            }
+            let mut batches = self.inner.batches.lock().unwrap();
+            batches.insert(key, jobs.iter().map(|j| j.id).collect());
+            drop(batches);
+            drop(in_flight);
             drop(reg);
             drop(q);
-            self.inner.banks.fail(
-                job.bank,
-                format!("circuit needs {demand} qubits; no worker that large"),
-            );
             self.inner.space_cv.notify_all();
-            return self.next_assignment_retry();
+            return Some((worker, config, jobs));
         }
-        let worker = match self.inner.cfg.noise_aware_alpha {
-            Some(alpha) => scheduler::select_noise_aware(&reg, demand, alpha)?,
-            None => scheduler::select(&reg, demand)?,
-        };
-        let config = head.config;
-
-        // ...then pack same-config circuits into the batch, sized by the
-        // worker's registered thread budget so one dispatch saturates its
-        // backend pool without starving co-tenants (DESIGN.md §11).
-        let worker_threads = reg.get(worker).map(|w| w.threads).unwrap_or(1);
-        let batch_limit = self
-            .inner
-            .cfg
-            .max_batch
-            .min(worker_threads.saturating_mul(self.inner.cfg.batch_per_thread))
-            .max(1);
-        let mut jobs = Vec::new();
-        let mut scanned = 0;
-        while scanned < q.len() && jobs.len() < batch_limit {
-            if q[scanned].config == config {
-                jobs.push(q.remove(scanned).unwrap());
-            } else {
-                scanned += 1;
-            }
-        }
-        debug_assert!(!jobs.is_empty());
-        // One reservation for the whole batch, keyed by the head job.
-        let key = jobs[0].id;
-        reg.reserve(worker, key, demand).expect("capacity checked");
-        let mut in_flight = self.inner.in_flight.lock().unwrap();
-        for j in &jobs {
-            in_flight.insert(j.id, j.clone());
-        }
-        drop(in_flight);
-        self.inner
-            .batches
-            .lock()
-            .unwrap()
-            .insert(key, jobs.iter().map(|j| j.id).collect());
-        drop(reg);
-        drop(q);
-        self.inner.space_cv.notify_all();
-        Some((worker, config, jobs))
     }
 
-    fn next_assignment_retry(&self) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>)> {
-        // Bounded retry after failing a bank, to avoid recursion depth.
-        None
+    /// Take up to `limit` circuits of `config` from the queue head. The
+    /// contiguous same-config prefix is popped directly (the common,
+    /// homogeneous-queue case costs O(batch)); only when interleaved
+    /// tenants break the run does one drain/partition pass scan the rest —
+    /// O(n) total, replacing the old `VecDeque::remove`-in-a-scan that was
+    /// O(n²) (see `benches/micro_queue.rs`).
+    fn pack_batch(
+        q: &mut VecDeque<CircuitJob>,
+        config: QuClassiConfig,
+        limit: usize,
+    ) -> Vec<CircuitJob> {
+        let mut jobs = Vec::with_capacity(limit.min(q.len()));
+        while jobs.len() < limit && q.front().is_some_and(|j| j.config == config) {
+            jobs.push(q.pop_front().unwrap());
+        }
+        if jobs.len() < limit && q.iter().any(|j| j.config == config) {
+            let mut rest = VecDeque::with_capacity(q.len());
+            while let Some(job) = q.pop_front() {
+                if jobs.len() < limit && job.config == config {
+                    jobs.push(job);
+                } else {
+                    rest.push_back(job);
+                }
+            }
+            *q = rest;
+        }
+        jobs
     }
 
     /// Send one batch to a worker on a dispatch thread; completion updates
@@ -454,6 +601,19 @@ impl Manager {
                 let pairs: Vec<CircuitPair> =
                     jobs.iter().map(|j| (j.thetas.clone(), j.data.clone())).collect();
                 match channel.execute(&config, &pairs) {
+                    Ok(fids) if fids.len() != jobs.len() => {
+                        // A short/overlong fids payload is a protocol
+                        // violation: the per-circuit mapping is unknown, so
+                        // fail every bank in the batch rather than guess
+                        // (or hang a waiting client).
+                        let err = DqError::Protocol(format!(
+                            "worker w{worker} returned {} fids for {} circuits",
+                            fids.len(),
+                            jobs.len()
+                        ));
+                        crate::log_warn!("manager", "{err}");
+                        m.abandon_batch(worker, &jobs, err);
+                    }
                     Ok(fids) => {
                         // Order matters: bump the completion counter before
                         // banks.complete() can wake a waiting client, so a
@@ -468,6 +628,7 @@ impl Manager {
                             in_flight.remove(&job.id);
                             m.inner.banks.complete(job.bank, job.index, *fid);
                         }
+                        m.gc_cancelled_banks(&distinct_banks(&jobs), &in_flight);
                         drop(in_flight);
                         drop(reg);
                         m.inner.work_cv.notify_all();
@@ -485,25 +646,66 @@ impl Manager {
             .expect("spawn dispatch");
     }
 
-    fn requeue(&self, worker: WorkerId, jobs: Vec<CircuitJob>) {
+    /// Drop a batch whose results are unusable: release the reservation,
+    /// clear in-flight records, and fail every bank it touched
+    /// (cancelled banks just have their tombstones GC'd).
+    fn abandon_batch(&self, worker: WorkerId, jobs: &[CircuitJob], err: DqError) {
         let mut reg = self.inner.registry.lock().unwrap();
         let mut in_flight = self.inner.in_flight.lock().unwrap();
-        let mut q = self.inner.queue.lock().unwrap();
-        let mut stats = self.inner.stats.lock().unwrap();
         if let Some(first) = jobs.first() {
             reg.release(worker, first.id);
             self.inner.batches.lock().unwrap().remove(&first.id);
         }
         for job in jobs {
             in_flight.remove(&job.id);
+        }
+        let banks = distinct_banks(jobs);
+        self.gc_cancelled_banks(&banks, &in_flight);
+        drop(in_flight);
+        drop(reg);
+        for bank in banks {
+            // no-op for cancelled banks (fail never overrides a cancel)
+            self.inner.banks.fail(bank, err.clone());
+        }
+        self.inner.work_cv.notify_all();
+    }
+
+    fn requeue(&self, worker: WorkerId, jobs: Vec<CircuitJob>) {
+        let mut q = self.inner.queue.lock().unwrap();
+        let mut reg = self.inner.registry.lock().unwrap();
+        let mut in_flight = self.inner.in_flight.lock().unwrap();
+        if let Some(first) = jobs.first() {
+            reg.release(worker, first.id);
+            self.inner.batches.lock().unwrap().remove(&first.id);
+        }
+        let banks = distinct_banks(&jobs);
+        let mut stats = self.inner.stats.lock().unwrap();
+        for job in jobs {
+            in_flight.remove(&job.id);
+            // Never resurrect a cancelled bank's work: its queued jobs
+            // were drained at cancel time, so a failed/evicted batch is
+            // simply dropped.
+            if self.inner.banks.is_cancelled(job.bank) {
+                continue;
+            }
             stats.requeues += 1;
             q.push_front(job);
         }
-        drop(q);
+        drop(stats);
+        self.gc_cancelled_banks(&banks, &in_flight);
         drop(in_flight);
         drop(reg);
+        drop(q);
         self.inner.work_cv.notify_all();
     }
+}
+
+/// The distinct bank ids appearing in a batch.
+fn distinct_banks(jobs: &[CircuitJob]) -> Vec<u64> {
+    let mut banks: Vec<u64> = jobs.iter().map(|j| j.bank).collect();
+    banks.sort_unstable();
+    banks.dedup();
+    banks
 }
 
 impl Drop for Inner {
@@ -526,7 +728,7 @@ mod tests {
             &self,
             config: &QuClassiConfig,
             pairs: &[CircuitPair],
-        ) -> Result<Vec<f32>, String> {
+        ) -> Result<Vec<f32>, DqError> {
             QsimExecutor.execute_bank(config, pairs)
         }
     }
@@ -541,7 +743,7 @@ mod tests {
             &self,
             config: &QuClassiConfig,
             pairs: &[CircuitPair],
-        ) -> Result<Vec<f32>, String> {
+        ) -> Result<Vec<f32>, DqError> {
             if self.fail_first.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
                 if v > 0 {
                     Some(v - 1)
@@ -550,9 +752,58 @@ mod tests {
                 }
             }).is_ok()
             {
-                return Err("injected fault".to_string());
+                return Err(DqError::Io("injected fault".to_string()));
             }
             QsimExecutor.execute_bank(config, pairs)
+        }
+    }
+
+    /// A channel that pauses per batch — lets tests observe in-progress
+    /// banks deterministically.
+    struct SlowChannel {
+        delay: Duration,
+    }
+
+    impl WorkerChannel for SlowChannel {
+        fn execute(
+            &self,
+            config: &QuClassiConfig,
+            pairs: &[CircuitPair],
+        ) -> Result<Vec<f32>, DqError> {
+            std::thread::sleep(self.delay);
+            QsimExecutor.execute_bank(config, pairs)
+        }
+    }
+
+    /// A channel that sleeps, then fails every batch (eviction-path
+    /// fault injection).
+    struct SlowFailChannel {
+        delay: Duration,
+    }
+
+    impl WorkerChannel for SlowFailChannel {
+        fn execute(
+            &self,
+            _config: &QuClassiConfig,
+            _pairs: &[CircuitPair],
+        ) -> Result<Vec<f32>, DqError> {
+            std::thread::sleep(self.delay);
+            Err(DqError::Io("injected fault".to_string()))
+        }
+    }
+
+    /// A channel that returns one fidelity too few (protocol violation).
+    struct ShortChannel;
+
+    impl WorkerChannel for ShortChannel {
+        fn execute(
+            &self,
+            config: &QuClassiConfig,
+            pairs: &[CircuitPair],
+        ) -> Result<Vec<f32>, DqError> {
+            let mut fids = QsimExecutor.execute_bank(config, pairs)?;
+            fids.pop();
+            Ok(fids)
         }
     }
 
@@ -571,11 +822,11 @@ mod tests {
     #[test]
     fn single_worker_end_to_end() {
         let m = Manager::new(ManagerConfig::default());
-        m.register_worker(5, 0.1, Arc::new(SimChannel));
+        m.register(WorkerProfile::new(5).cru(0.1), Arc::new(SimChannel));
         let cfg = QuClassiConfig::new(5, 1).unwrap();
         let pairs = pairs_for(&cfg, 10);
-        let client = m.new_client();
-        let fids = m.execute_bank(client, cfg, &pairs).unwrap();
+        let session = m.session();
+        let fids = session.execute(cfg, &pairs).unwrap();
         assert_eq!(fids.len(), 10);
         // results must match direct simulation exactly
         let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
@@ -585,14 +836,31 @@ mod tests {
     }
 
     #[test]
+    fn deprecated_register_shims_still_work() {
+        let m = Manager::new(ManagerConfig::default());
+        #[allow(deprecated)]
+        {
+            m.register_worker(5, 0.1, Arc::new(SimChannel));
+            m.register_worker_profile(5, 0.1, 0.0, Arc::new(SimChannel));
+            m.register_worker_full(5, 0.1, 0.0, 2, Arc::new(SimChannel));
+        }
+        assert_eq!(m.worker_count(), 3);
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 6);
+        let fids = m.session().execute(cfg, &pairs).unwrap();
+        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        m.shutdown();
+    }
+
+    #[test]
     fn multiple_workers_share_load() {
         let m = Manager::new(ManagerConfig { max_batch: 2, ..Default::default() });
         for _ in 0..4 {
-            m.register_worker(5, 0.0, Arc::new(SimChannel));
+            m.register(WorkerProfile::new(5), Arc::new(SimChannel));
         }
         let cfg = QuClassiConfig::new(5, 2).unwrap();
         let pairs = pairs_for(&cfg, 30);
-        let fids = m.execute_bank(m.new_client(), cfg, &pairs).unwrap();
+        let fids = m.session().execute(cfg, &pairs).unwrap();
         assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         assert!(m.stats().dispatches >= 15); // 30 circuits / batch 2
         m.shutdown();
@@ -607,10 +875,10 @@ mod tests {
             batch_per_thread: 3,
             ..Default::default()
         });
-        m.register_worker_full(5, 0.0, 0.0, 2, Arc::new(SimChannel));
+        m.register(WorkerProfile::new(5).threads(2), Arc::new(SimChannel));
         let cfg = QuClassiConfig::new(5, 1).unwrap();
         let pairs = pairs_for(&cfg, 30);
-        let fids = m.execute_bank(m.new_client(), cfg, &pairs).unwrap();
+        let fids = m.session().execute(cfg, &pairs).unwrap();
         assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         assert!(m.stats().dispatches >= 5, "expected >= 30/6 dispatches");
         m.shutdown();
@@ -619,27 +887,58 @@ mod tests {
     #[test]
     fn oversized_circuit_fails_cleanly() {
         let m = Manager::new(ManagerConfig::default());
-        m.register_worker(5, 0.0, Arc::new(SimChannel));
+        m.register(WorkerProfile::new(5), Arc::new(SimChannel));
         let cfg = QuClassiConfig::new(7, 1).unwrap(); // needs 7 > 5
         let pairs = pairs_for(&cfg, 2);
-        let err = m.execute_bank(m.new_client(), cfg, &pairs).unwrap_err();
-        assert!(err.contains("no worker"), "{err}");
+        let err = m.session().execute(cfg, &pairs).unwrap_err();
+        assert!(matches!(&err, DqError::Unschedulable(m) if m.contains("no worker")), "{err}");
+        m.shutdown();
+    }
+
+    #[test]
+    fn unschedulable_bank_does_not_stall_schedulable_work() {
+        // Head-of-line: an oversized bank in front of a schedulable one
+        // must fail fast while the schedulable bank completes in the same
+        // scheduler pass (satellite fix: loop instead of bail to the next
+        // 20 ms tick).
+        let m = Manager::new(ManagerConfig::default());
+        m.register(WorkerProfile::new(5), Arc::new(SimChannel));
+        let cfg_big = QuClassiConfig::new(9, 1).unwrap();
+        let cfg_ok = QuClassiConfig::new(5, 1).unwrap();
+        let session = m.session();
+        let doomed = session.submit(cfg_big, &pairs_for(&cfg_big, 4)).unwrap();
+        let viable = session.submit(cfg_ok, &pairs_for(&cfg_ok, 4)).unwrap();
+        assert!(matches!(doomed.wait(), Err(DqError::Unschedulable(_))));
+        let fids = viable.wait().unwrap();
+        assert_eq!(fids.len(), 4);
         m.shutdown();
     }
 
     #[test]
     fn dispatch_failure_requeues_and_recovers() {
         let m = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
-        m.register_worker(
-            5,
-            0.0,
+        m.register(
+            WorkerProfile::new(5),
             Arc::new(FlakyChannel { fail_first: std::sync::atomic::AtomicU32::new(2) }),
         );
         let cfg = QuClassiConfig::new(5, 1).unwrap();
         let pairs = pairs_for(&cfg, 8);
-        let fids = m.execute_bank(m.new_client(), cfg, &pairs).unwrap();
+        let fids = m.session().execute(cfg, &pairs).unwrap();
         assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         assert!(m.stats().requeues > 0);
+        m.shutdown();
+    }
+
+    #[test]
+    fn short_fids_payload_fails_bank_with_protocol_error() {
+        let m = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
+        m.register(WorkerProfile::new(5), Arc::new(ShortChannel));
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 4);
+        let err = m.session().execute(cfg, &pairs).unwrap_err();
+        assert!(matches!(err, DqError::Protocol(_)), "{err}");
+        // the batch reservation must have been released
+        assert_eq!(m.available_qubits(), 5);
         m.shutdown();
     }
 
@@ -648,20 +947,20 @@ mod tests {
         // A 20-qubit and a 5-qubit worker; two clients with different
         // configs submit concurrently (the paper's multi-tenant setting).
         let m = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
-        m.register_worker(20, 0.2, Arc::new(SimChannel));
-        m.register_worker(5, 0.1, Arc::new(SimChannel));
+        m.register(WorkerProfile::new(20).cru(0.2), Arc::new(SimChannel));
+        m.register(WorkerProfile::new(5).cru(0.1), Arc::new(SimChannel));
         let m1 = m.clone();
         let t1 = std::thread::spawn(move || {
             let cfg = QuClassiConfig::new(5, 1).unwrap();
             let pairs = pairs_for(&cfg, 20);
-            let fids = m1.execute_bank(m1.new_client(), cfg, &pairs).unwrap();
+            let fids = m1.session().execute(cfg, &pairs).unwrap();
             assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         });
         let m2 = m.clone();
         let t2 = std::thread::spawn(move || {
             let cfg = QuClassiConfig::new(7, 2).unwrap();
             let pairs = pairs_for(&cfg, 20);
-            let fids = m2.execute_bank(m2.new_client(), cfg, &pairs).unwrap();
+            let fids = m2.session().execute(cfg, &pairs).unwrap();
             assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         });
         t1.join().unwrap();
@@ -675,14 +974,15 @@ mod tests {
         let m = Manager::new(ManagerConfig::default());
         let cfg = QuClassiConfig::new(5, 1).unwrap();
         let pairs = pairs_for(&cfg, 3);
-        let bank = m.submit_bank(m.new_client(), cfg, &pairs).unwrap();
+        let session = m.session();
+        let handle = session.submit(cfg, &pairs).unwrap();
         // register a worker shortly after; dynamic join must drain it
         let m2 = m.clone();
         std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(50));
-            m2.register_worker(5, 0.0, Arc::new(SimChannel));
+            m2.register(WorkerProfile::new(5), Arc::new(SimChannel));
         });
-        let fids = m.wait_bank(bank).unwrap();
+        let fids = handle.wait().unwrap();
         assert_eq!(fids.len(), 3);
         m.shutdown();
     }
@@ -691,7 +991,173 @@ mod tests {
     fn empty_bank_rejected() {
         let m = Manager::new(ManagerConfig::default());
         let cfg = QuClassiConfig::new(5, 1).unwrap();
-        assert!(m.submit_bank(1, cfg, &[]).is_err());
+        assert!(matches!(m.submit_bank(1, cfg, &[]), Err(DqError::Arity(_))));
+        assert!(matches!(m.session().submit(cfg, &[]), Err(DqError::Arity(_))));
         m.shutdown();
+    }
+
+    #[test]
+    fn cancel_drains_queue_and_discards_in_flight() {
+        // One slow 5-qubit worker, batch size 1: circuits complete one at
+        // a time, so the bank is observably half-done when we cancel.
+        let m = Manager::new(ManagerConfig { max_batch: 1, ..Default::default() });
+        m.register(
+            WorkerProfile::new(5),
+            Arc::new(SlowChannel { delay: Duration::from_millis(25) }),
+        );
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 12);
+        let session = m.session();
+        let handle = session.submit(cfg, &pairs).unwrap();
+        // wait for partial progress
+        loop {
+            let st = handle.try_poll().unwrap();
+            if st.completed >= 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        handle.cancel().unwrap();
+        assert_eq!(m.queue_len(), 0, "queued circuits must drain on cancel");
+        assert!(matches!(handle.wait_timeout(Duration::from_secs(5)), Err(DqError::Cancelled(_))));
+        let requeues = m.stats().requeues;
+        assert_eq!(requeues, 0, "cancel must not requeue anything");
+        assert_eq!(m.stats().cancelled, 1);
+        // the worker finishes its in-flight circuit and frees up: a new
+        // bank from another tenant completes with exact parity.
+        let other = m.session();
+        let pairs2 = pairs_for(&cfg, 3);
+        let fids = other.execute(cfg, &pairs2).unwrap();
+        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs2).unwrap());
+        m.shutdown();
+    }
+
+    #[test]
+    fn cancel_with_nothing_in_flight_still_reports_cancelled() {
+        // No workers: every circuit stays queued, so cancel GCs the
+        // tombstone immediately. Late observers must still see the
+        // cancellation — never an "unknown bank" Protocol error that
+        // depends on GC timing.
+        let m = Manager::new(ManagerConfig::default());
+        let session = m.session();
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let handle = session.submit(cfg, &pairs_for(&cfg, 4)).unwrap();
+        assert_eq!(handle.cancel().unwrap(), 4);
+        assert_eq!(m.queue_len(), 0);
+        assert!(matches!(handle.try_poll(), Err(DqError::Cancelled(_))));
+        assert!(matches!(
+            handle.wait_timeout(Duration::from_secs(1)),
+            Err(DqError::Cancelled(_))
+        ));
+        assert!(matches!(handle.wait(), Err(DqError::Cancelled(_))));
+        m.shutdown();
+    }
+
+    #[test]
+    fn consuming_wait_timeout_reaps_the_bank() {
+        // The default-timeout wait consumes the handle, so a timeout
+        // leaves no way to retry or cancel — the manager must reap the
+        // zombie bank instead of leaking it.
+        let m = Manager::new(ManagerConfig {
+            wait_timeout: Duration::from_millis(30),
+            ..Default::default()
+        });
+        let session = m.session();
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let handle = session.submit(cfg, &pairs_for(&cfg, 3)).unwrap(); // no workers
+        let bank = handle.id();
+        assert!(matches!(handle.wait(), Err(DqError::Timeout(_))));
+        assert_eq!(m.queue_len(), 0, "queued circuits must drain on reap");
+        assert!(m.bank_status(bank).is_none(), "bank state must not leak");
+        assert!(m.bank_cancelled(bank));
+        assert_eq!(m.stats().cancelled, 1);
+        m.shutdown();
+    }
+
+    #[test]
+    fn failed_dispatch_after_cancel_and_wait_does_not_resurrect() {
+        // Waiting out a cancellation removes the tombstone while a batch
+        // is still on the worker; when that dispatch then fails, the
+        // cancelled bank's jobs must be dropped (the persistent
+        // cancelled-id record), never requeued and re-executed.
+        let m = Manager::new(ManagerConfig { max_batch: 1, ..Default::default() });
+        m.register(
+            WorkerProfile::new(5),
+            Arc::new(SlowFailChannel { delay: Duration::from_millis(60) }),
+        );
+        let session = m.session();
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let handle = session.submit(cfg, &pairs_for(&cfg, 2)).unwrap();
+        std::thread::sleep(Duration::from_millis(20)); // let one batch dispatch
+        handle.cancel().unwrap();
+        assert!(matches!(
+            handle.wait_timeout(Duration::from_secs(1)),
+            Err(DqError::Cancelled(_))
+        ));
+        std::thread::sleep(Duration::from_millis(100)); // in-flight dispatch fails
+        assert_eq!(m.stats().requeues, 0, "cancelled work must not be requeued");
+        assert_eq!(m.queue_len(), 0);
+        m.shutdown();
+    }
+
+    #[test]
+    fn try_poll_counts_are_monotonic() {
+        let m = Manager::new(ManagerConfig { max_batch: 2, ..Default::default() });
+        m.register(
+            WorkerProfile::new(5),
+            Arc::new(SlowChannel { delay: Duration::from_millis(5) }),
+        );
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 10);
+        let session = m.session();
+        let handle = session.submit(cfg, &pairs).unwrap();
+        let mut last = 0usize;
+        loop {
+            let st = handle.try_poll().unwrap();
+            assert!(st.completed >= last, "completion went backwards: {} < {last}", st.completed);
+            assert_eq!(st.total, 10);
+            assert_eq!(
+                st.partial_fids.iter().filter(|f| f.is_some()).count(),
+                st.completed,
+                "partial_fids must agree with the completion count"
+            );
+            last = st.completed;
+            if !st.pending {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(last, 10);
+        let fids = handle.wait().unwrap();
+        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+        m.shutdown();
+    }
+
+    #[test]
+    fn pack_batch_is_order_preserving_across_configs() {
+        let cfg_a = QuClassiConfig::new(5, 1).unwrap();
+        let cfg_b = QuClassiConfig::new(7, 1).unwrap();
+        let mk = |id: u64, config: QuClassiConfig| CircuitJob {
+            id,
+            client: 1,
+            bank: 1,
+            index: id as usize,
+            config,
+            thetas: vec![0.0; config.n_params()],
+            data: vec![0.0; config.n_features()],
+        };
+        let mut q: VecDeque<CircuitJob> = [
+            mk(1, cfg_a),
+            mk(2, cfg_b),
+            mk(3, cfg_a),
+            mk(4, cfg_b),
+            mk(5, cfg_a),
+        ]
+        .into_iter()
+        .collect();
+        let jobs = Manager::pack_batch(&mut q, cfg_a, 2);
+        assert_eq!(jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3]);
+        // the remainder keeps its relative order
+        assert_eq!(q.iter().map(|j| j.id).collect::<Vec<_>>(), vec![2, 4, 5]);
     }
 }

@@ -7,21 +7,29 @@
 //!    worker's maximum (`MR`), occupied (`OR`) and available (`AR`)
 //!    qubits plus classical resource usage (`CRU`).
 //! 2. **Quantum Worker Registration** — dynamic joins at runtime
-//!    ([`manager::Manager::register_worker`]).
+//!    ([`manager::Manager::register`] with a [`registry::WorkerProfile`]).
 //! 3. **Periodic Worker Management** — heartbeats update `OR`/`AR`/`CRU`;
 //!    three missed heartbeats evict the worker and its in-flight circuits
 //!    are re-queued ([`registry::Registry::evict_stale`]).
 //! 4. **Workload Assignment** — for each pending circuit, filter workers
 //!    with `AR > demand`, sort ascending by `CRU`, pick the least loaded
 //!    ([`scheduler`]).
+//!
+//! Clients drive the manager through the typed session layer
+//! ([`session::ClientSession`] → [`session::BankHandle`] futures backed
+//! by [`bankstore::BankStore`]); every fallible API returns
+//! [`crate::error::DqError`].
 
 pub mod bankstore;
 pub mod job;
 pub mod manager;
 pub mod registry;
 pub mod scheduler;
+pub mod session;
 
+pub use bankstore::BankStatus;
 pub use job::{CircuitJob, JobId};
 pub use manager::{Manager, ManagerConfig, WorkerChannel};
-pub use registry::{Registry, WorkerId, WorkerState};
+pub use registry::{Registry, WorkerId, WorkerProfile, WorkerState};
 pub use scheduler::{select_worker, SchedulerKind};
+pub use session::{BankHandle, ClientSession, SessionOps};

@@ -4,9 +4,68 @@
 use std::collections::BTreeMap;
 
 use super::job::JobId;
+use crate::error::DqError;
 
 /// Worker identifier assigned at registration (`w_1, w_2, ...`).
 pub type WorkerId = u64;
+
+/// Registration-time description of a worker — the single typed entry
+/// point that replaced the telescoping `register_worker*` variants.
+///
+/// Construct with [`WorkerProfile::new`] and chain the optional setters;
+/// every field beyond `max_qubits` defaults sensibly, so future fields
+/// can be added without breaking call sites:
+///
+/// ```
+/// use dqulearn::coordinator::WorkerProfile;
+/// let profile = WorkerProfile::new(20).cru(0.1).noise(0.02).threads(4);
+/// assert_eq!(profile.max_qubits, 20);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+#[non_exhaustive]
+pub struct WorkerProfile {
+    /// `MR` — advertised maximum qubits.
+    pub max_qubits: usize,
+    /// Initial classical-resource-usage sample in [0, 1].
+    pub cru: f64,
+    /// Estimated gate-error level in [0, 1] (extension §10; 0 = ideal).
+    pub noise: f64,
+    /// Execution thread budget (>= 1); sizes dispatch batches
+    /// (DESIGN.md §11).
+    pub threads: usize,
+}
+
+impl WorkerProfile {
+    /// Profile for a worker advertising `max_qubits`; everything else at
+    /// its default (idle, noiseless, serial backend).
+    pub fn new(max_qubits: usize) -> WorkerProfile {
+        WorkerProfile { max_qubits, cru: 0.0, noise: 0.0, threads: 1 }
+    }
+
+    /// Initial CRU sample.
+    pub fn cru(mut self, cru: f64) -> WorkerProfile {
+        self.cru = cru;
+        self
+    }
+
+    /// Reported noise estimate (extension §10).
+    pub fn noise(mut self, noise: f64) -> WorkerProfile {
+        self.noise = noise;
+        self
+    }
+
+    /// Execution thread budget (clamped to >= 1 at registration).
+    pub fn threads(mut self, threads: usize) -> WorkerProfile {
+        self.threads = threads;
+        self
+    }
+}
+
+impl Default for WorkerProfile {
+    fn default() -> WorkerProfile {
+        WorkerProfile::new(5)
+    }
+}
 
 /// Per-worker runtime state.
 #[derive(Debug, Clone)]
@@ -58,7 +117,7 @@ impl Registry {
     /// New Worker Registration (Algorithm 2 lines 2-6): OR = 0,
     /// AR = MR, record CRU.
     pub fn register(&mut self, max_qubits: usize, cru: f64, now: f64) -> WorkerId {
-        self.register_with_noise(max_qubits, cru, 0.0, now)
+        self.register_profile(&WorkerProfile::new(max_qubits).cru(cru), now)
     }
 
     /// Registration with a reported noise estimate (extension §10).
@@ -69,38 +128,33 @@ impl Registry {
         noise: f64,
         now: f64,
     ) -> WorkerId {
-        self.register_full(max_qubits, cru, noise, 1, now)
+        self.register_profile(&WorkerProfile::new(max_qubits).cru(cru).noise(noise), now)
     }
 
-    /// Full registration record: noise estimate (extension §10) plus the
-    /// worker's execution thread budget (DESIGN.md §11; clamped to >= 1).
-    pub fn register_full(
-        &mut self,
-        max_qubits: usize,
-        cru: f64,
-        noise: f64,
-        threads: usize,
-        now: f64,
-    ) -> WorkerId {
+    /// Registration from a typed [`WorkerProfile`] (the thread budget is
+    /// clamped to >= 1).
+    pub fn register_profile(&mut self, profile: &WorkerProfile, now: f64) -> WorkerId {
         let id = self.next_id;
         self.next_id += 1;
-        let threads = threads.max(1);
+        let threads = profile.threads.max(1);
         self.workers.insert(
             id,
             WorkerState {
                 id,
-                max_qubits,
+                max_qubits: profile.max_qubits,
                 occupied: 0,
-                cru,
+                cru: profile.cru,
                 last_heartbeat: now,
                 active: BTreeMap::new(),
-                noise,
+                noise: profile.noise,
                 threads,
             },
         );
         crate::log_info!(
             "registry",
-            "worker w{id} joined (MR={max_qubits}, CRU={cru:.2}, threads={threads})"
+            "worker w{id} joined (MR={}, CRU={:.2}, threads={threads})",
+            profile.max_qubits,
+            profile.cru
         );
         id
     }
@@ -110,8 +164,11 @@ impl Registry {
     /// Used by the live manager, whose own reserve/release bookkeeping is
     /// authoritative for `OR` (a worker's self-report can race with
     /// circuits in the RPC pipe).
-    pub fn heartbeat(&mut self, id: WorkerId, cru: f64, now: f64) -> Result<(), String> {
-        let w = self.workers.get_mut(&id).ok_or_else(|| format!("unknown worker w{id}"))?;
+    pub fn heartbeat(&mut self, id: WorkerId, cru: f64, now: f64) -> Result<(), DqError> {
+        let w = self
+            .workers
+            .get_mut(&id)
+            .ok_or_else(|| DqError::WorkerLost(format!("unknown worker w{id}")))?;
         w.cru = cru;
         w.last_heartbeat = now;
         Ok(())
@@ -127,8 +184,11 @@ impl Registry {
         active: &[(JobId, usize)],
         cru: f64,
         now: f64,
-    ) -> Result<(), String> {
-        let w = self.workers.get_mut(&id).ok_or_else(|| format!("unknown worker w{id}"))?;
+    ) -> Result<(), DqError> {
+        let w = self
+            .workers
+            .get_mut(&id)
+            .ok_or_else(|| DqError::WorkerLost(format!("unknown worker w{id}")))?;
         w.active = active.iter().copied().collect();
         w.occupied = w.active.values().sum();
         w.cru = cru;
@@ -163,13 +223,16 @@ impl Registry {
 
     /// Reserve capacity for an assignment (manager-side OR accounting
     /// between heartbeats).
-    pub fn reserve(&mut self, id: WorkerId, job: JobId, demand: usize) -> Result<(), String> {
-        let w = self.workers.get_mut(&id).ok_or_else(|| format!("unknown worker w{id}"))?;
+    pub fn reserve(&mut self, id: WorkerId, job: JobId, demand: usize) -> Result<(), DqError> {
+        let w = self
+            .workers
+            .get_mut(&id)
+            .ok_or_else(|| DqError::WorkerLost(format!("unknown worker w{id}")))?;
         if w.available() < demand {
-            return Err(format!(
+            return Err(DqError::Unschedulable(format!(
                 "worker w{id} has {} available qubits, need {demand}",
                 w.available()
-            ));
+            )));
         }
         w.occupied += demand;
         w.active.insert(job, demand);
@@ -290,10 +353,25 @@ mod tests {
         let mut r = Registry::new(5.0);
         let a = r.register(5, 0.0, 0.0);
         assert_eq!(r.get(a).unwrap().threads, 1); // default budget
-        let b = r.register_full(20, 0.0, 0.0, 4, 0.0);
+        let b = r.register_profile(&WorkerProfile::new(20).threads(4), 0.0);
         assert_eq!(r.get(b).unwrap().threads, 4);
-        let c = r.register_full(5, 0.0, 0.0, 0, 0.0);
+        let c = r.register_profile(&WorkerProfile::new(5).threads(0), 0.0);
         assert_eq!(r.get(c).unwrap().threads, 1); // clamped
+    }
+
+    #[test]
+    fn profile_builder_defaults() {
+        let p = WorkerProfile::default();
+        assert_eq!((p.max_qubits, p.cru, p.noise, p.threads), (5, 0.0, 0.0, 1));
+        let p = WorkerProfile::new(7).noise(0.1);
+        assert_eq!((p.max_qubits, p.noise, p.threads), (7, 0.1, 1));
+    }
+
+    #[test]
+    fn unknown_worker_is_worker_lost() {
+        let mut r = Registry::new(5.0);
+        assert!(matches!(r.heartbeat(9, 0.0, 0.0), Err(DqError::WorkerLost(_))));
+        assert!(matches!(r.reserve(9, 1, 5), Err(DqError::WorkerLost(_))));
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Typed client sessions: [`ClientSession`] owns a tenant's client id
+//! and hands out [`BankHandle`] futures for submitted banks.
+//!
+//! The same two types front both deployments — [`SessionOps`] is
+//! implemented by [`super::Manager`] (direct calls, `--in-proc` mode) and
+//! by `cluster::tcp::RemoteClient`'s RPC stub — so a training loop that
+//! overlaps classical optimization with in-flight quantum banks is
+//! deployment-agnostic:
+//!
+//! ```no_run
+//! use dqulearn::coordinator::{Manager, ManagerConfig};
+//! use dqulearn::circuit::QuClassiConfig;
+//! let manager = Manager::new(ManagerConfig::default());
+//! let session = manager.session();
+//! let cfg = QuClassiConfig::new(5, 1).unwrap();
+//! let handle = session.submit(cfg, &[(vec![0.1; 4], vec![0.2; 4])]).unwrap();
+//! while handle.try_poll().unwrap().pending {
+//!     /* overlap classical work; stream handle.try_poll().partial_fids */
+//! }
+//! let fids = handle.wait().unwrap();
+//! # let _ = fids;
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::bankstore::BankStatus;
+use super::manager::Manager;
+use crate::circuit::QuClassiConfig;
+use crate::error::DqError;
+use crate::model::exec::{CircuitExecutor, CircuitPair};
+
+/// Transport-level bank operations a session is built over. Implemented
+/// by [`Manager`] (direct) and the TCP remote stub.
+pub trait SessionOps: Send + Sync {
+    /// Enqueue a bank; returns its id.
+    fn submit(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<u64, DqError>;
+    /// Block until the bank resolves. `None` uses the manager's
+    /// configured wait timeout.
+    fn wait(&self, bank: u64, timeout: Option<Duration>) -> Result<Vec<f32>, DqError>;
+    /// Non-blocking progress snapshot.
+    fn status(&self, bank: u64) -> Result<BankStatus, DqError>;
+    /// Cancel the bank; returns the number of queued circuits drained.
+    fn cancel(&self, bank: u64) -> Result<usize, DqError>;
+}
+
+impl SessionOps for Manager {
+    fn submit(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<u64, DqError> {
+        self.submit_bank(client, config, pairs)
+    }
+
+    fn wait(&self, bank: u64, timeout: Option<Duration>) -> Result<Vec<f32>, DqError> {
+        match timeout {
+            Some(t) => self.wait_bank_timeout(bank, t),
+            None => self.wait_bank(bank),
+        }
+    }
+
+    fn status(&self, bank: u64) -> Result<BankStatus, DqError> {
+        self.bank_status(bank).ok_or_else(|| {
+            if self.bank_cancelled(bank) {
+                DqError::Cancelled(format!("bank {bank} cancelled"))
+            } else {
+                DqError::Protocol(format!("unknown bank {bank}"))
+            }
+        })
+    }
+
+    fn cancel(&self, bank: u64) -> Result<usize, DqError> {
+        Ok(self.cancel_bank(bank))
+    }
+}
+
+/// One tenant's handle onto the co-Manager (or a remote one). Obtained
+/// from `Manager::session()` / `RemoteClient::session()` /
+/// `InProcCluster::session()`.
+#[derive(Clone)]
+pub struct ClientSession {
+    ops: Arc<dyn SessionOps>,
+    client: u64,
+}
+
+impl ClientSession {
+    /// Wrap a transport with an already-allocated client id. (Library
+    /// entry points call this for you.)
+    pub fn new(ops: Arc<dyn SessionOps>, client: u64) -> ClientSession {
+        ClientSession { ops, client }
+    }
+
+    /// The session's client id (the manager's multi-tenant key).
+    pub fn id(&self) -> u64 {
+        self.client
+    }
+
+    /// Submit a bank of circuits; returns a [`BankHandle`] future
+    /// immediately (blocks only on queue backpressure).
+    pub fn submit(
+        &self,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<BankHandle, DqError> {
+        let bank = self.ops.submit(self.client, config, pairs)?;
+        Ok(BankHandle { ops: self.ops.clone(), bank, total: pairs.len() })
+    }
+
+    /// Convenience: submit + wait.
+    pub fn execute(
+        &self,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        self.submit(config, pairs)?.wait()
+    }
+}
+
+/// A session is itself a [`CircuitExecutor`], so the Trainer and every
+/// example run on the session API without code changes.
+impl CircuitExecutor for ClientSession {
+    fn execute_bank(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        self.execute(*config, pairs)
+    }
+
+    fn describe(&self) -> String {
+        format!("client session #{}", self.client)
+    }
+}
+
+/// Future for one submitted bank: poll it, stream partial fidelities,
+/// cancel it, or block for the full result vector.
+pub struct BankHandle {
+    ops: Arc<dyn SessionOps>,
+    bank: u64,
+    total: usize,
+}
+
+impl BankHandle {
+    /// The bank id (stable across the wire).
+    pub fn id(&self) -> u64 {
+        self.bank
+    }
+
+    /// Number of circuits in the bank.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Block until every circuit completes; consumes the handle and
+    /// returns fidelities in submission order. Fails with the bank's
+    /// typed error ([`DqError::Cancelled`], [`DqError::Unschedulable`],
+    /// [`DqError::Timeout`], ...). On [`DqError::Timeout`] the manager
+    /// reaps (cancels) the bank — the consumed handle leaves no way to
+    /// retry, so the bank must not outlive this call.
+    pub fn wait(self) -> Result<Vec<f32>, DqError> {
+        self.ops.wait(self.bank, None)
+    }
+
+    /// [`BankHandle::wait`] with an explicit deadline. Borrows the handle
+    /// so a timed-out wait can be retried or escalated to `cancel`; the
+    /// bank stays resident across the timeout (cancel it rather than
+    /// abandon it).
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<Vec<f32>, DqError> {
+        self.ops.wait(self.bank, Some(timeout))
+    }
+
+    /// Non-blocking snapshot: completed/total counts and per-circuit
+    /// partial fidelities. Completion counts are monotonically
+    /// non-decreasing across calls while the bank runs.
+    pub fn try_poll(&self) -> Result<BankStatus, DqError> {
+        self.ops.status(self.bank)
+    }
+
+    /// Cancel the bank: queued circuits are drained (backpressure
+    /// released), in-flight results are discarded on arrival, and any
+    /// waiter wakes with [`DqError::Cancelled`]. Idempotent; returns the
+    /// number of queued circuits drained.
+    pub fn cancel(&self) -> Result<usize, DqError> {
+        self.ops.cancel(self.bank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    /// Scripted transport: every bank completes instantly with 0.5s.
+    struct FakeOps {
+        cancelled: Mutex<Vec<u64>>,
+        sizes: Mutex<HashMap<u64, usize>>,
+        next: Mutex<u64>,
+    }
+
+    impl FakeOps {
+        fn new() -> FakeOps {
+            FakeOps {
+                cancelled: Mutex::new(Vec::new()),
+                sizes: Mutex::new(HashMap::new()),
+                next: Mutex::new(1),
+            }
+        }
+    }
+
+    impl SessionOps for FakeOps {
+        fn submit(
+            &self,
+            _client: u64,
+            _config: QuClassiConfig,
+            pairs: &[CircuitPair],
+        ) -> Result<u64, DqError> {
+            let mut next = self.next.lock().unwrap();
+            let bank = *next;
+            *next += 1;
+            self.sizes.lock().unwrap().insert(bank, pairs.len());
+            Ok(bank)
+        }
+
+        fn wait(&self, bank: u64, _timeout: Option<Duration>) -> Result<Vec<f32>, DqError> {
+            if self.cancelled.lock().unwrap().contains(&bank) {
+                return Err(DqError::Cancelled(format!("bank {bank} cancelled")));
+            }
+            let n = self.sizes.lock().unwrap()[&bank];
+            Ok(vec![0.5; n])
+        }
+
+        fn status(&self, bank: u64) -> Result<BankStatus, DqError> {
+            let n = self.sizes.lock().unwrap()[&bank];
+            Ok(BankStatus {
+                pending: false,
+                completed: n,
+                total: n,
+                partial_fids: vec![Some(0.5); n],
+            })
+        }
+
+        fn cancel(&self, bank: u64) -> Result<usize, DqError> {
+            self.cancelled.lock().unwrap().push(bank);
+            Ok(0)
+        }
+    }
+
+    #[test]
+    fn session_routes_through_ops() {
+        let session = ClientSession::new(Arc::new(FakeOps::new()), 7);
+        assert_eq!(session.id(), 7);
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = vec![(vec![0.0; 4], vec![0.0; 4]); 3];
+        let handle = session.submit(cfg, &pairs).unwrap();
+        assert_eq!(handle.total(), 3);
+        let st = handle.try_poll().unwrap();
+        assert_eq!((st.completed, st.total), (3, 3));
+        assert_eq!(handle.wait().unwrap(), vec![0.5; 3]);
+    }
+
+    #[test]
+    fn cancelled_handle_waits_cancelled() {
+        let session = ClientSession::new(Arc::new(FakeOps::new()), 1);
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let handle = session.submit(cfg, &[(vec![0.0; 4], vec![0.0; 4])]).unwrap();
+        handle.cancel().unwrap();
+        assert!(matches!(handle.wait(), Err(DqError::Cancelled(_))));
+    }
+
+    #[test]
+    fn session_is_an_executor() {
+        let session = ClientSession::new(Arc::new(FakeOps::new()), 2);
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let fids = session.execute_bank(&cfg, &[(vec![0.0; 4], vec![0.0; 4])]).unwrap();
+        assert_eq!(fids, vec![0.5]);
+        assert!(session.describe().contains("#2"));
+    }
+}

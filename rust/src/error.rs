@@ -1,0 +1,186 @@
+//! `DqError` — the crate-wide error taxonomy.
+//!
+//! Every public fallible API in `coordinator/`, `cluster/`, `net/`, and
+//! `worker/` (and the [`crate::model::CircuitExecutor`] boundary they all
+//! implement) returns `Result<_, DqError>` instead of the historical
+//! `Result<_, String>`. The taxonomy is deliberately small — seven
+//! variants cover every failure the distributed system can produce — and
+//! each variant round-trips through the framed-JSON RPC envelope
+//! ([`DqError::to_wire`] / [`DqError::from_wire`]), so a remote client
+//! observes the *same* typed error the manager raised, not a flattened
+//! string.
+//!
+//! | variant          | raised when                                            |
+//! |------------------|--------------------------------------------------------|
+//! | `Unschedulable`  | no worker in the pool can ever fit a circuit           |
+//! | `WorkerLost`     | a worker evicted / unknown at heartbeat or dispatch    |
+//! | `Timeout`        | a bank wait exceeded its deadline                      |
+//! | `Cancelled`      | a bank was cancelled (or the manager shut down)        |
+//! | `Protocol`       | malformed frames, payload arity/shape violations       |
+//! | `Arity`          | client-side input validation (theta/data lengths)      |
+//! | `Io`             | socket / filesystem failures                           |
+
+use crate::wire::Value;
+
+/// The crate-wide error taxonomy (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DqError {
+    /// The circuit can never be placed on the current worker pool.
+    Unschedulable(String),
+    /// The addressed worker is not (or no longer) registered.
+    WorkerLost(String),
+    /// A wait exceeded its deadline.
+    Timeout(String),
+    /// The operation's bank was cancelled, or the manager stopped.
+    Cancelled(String),
+    /// Wire-level violation: malformed frame, bad field, short payload.
+    Protocol(String),
+    /// Input validation: theta/data vector lengths do not match a config.
+    Arity(String),
+    /// Underlying transport or filesystem failure.
+    Io(String),
+}
+
+impl DqError {
+    /// Stable kind tag used on the wire and in logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DqError::Unschedulable(_) => "unschedulable",
+            DqError::WorkerLost(_) => "worker_lost",
+            DqError::Timeout(_) => "timeout",
+            DqError::Cancelled(_) => "cancelled",
+            DqError::Protocol(_) => "protocol",
+            DqError::Arity(_) => "arity",
+            DqError::Io(_) => "io",
+        }
+    }
+
+    /// The human-readable detail message.
+    pub fn message(&self) -> &str {
+        match self {
+            DqError::Unschedulable(m)
+            | DqError::WorkerLost(m)
+            | DqError::Timeout(m)
+            | DqError::Cancelled(m)
+            | DqError::Protocol(m)
+            | DqError::Arity(m)
+            | DqError::Io(m) => m,
+        }
+    }
+
+    /// Wire encoding: `{"kind": "...", "msg": "..."}` — the payload the
+    /// RPC envelope carries in its `error` field.
+    pub fn to_wire(&self) -> Value {
+        Value::obj().with("kind", self.kind()).with("msg", self.message())
+    }
+
+    /// Decode the wire encoding. A bare string (a legacy / foreign
+    /// error) decodes as [`DqError::Protocol`] so nothing is dropped.
+    pub fn from_wire(v: &Value) -> DqError {
+        if let Some(s) = v.as_str() {
+            return DqError::Protocol(s.to_string());
+        }
+        let msg = v.get("msg").and_then(Value::as_str).unwrap_or("").to_string();
+        match v.get("kind").and_then(Value::as_str) {
+            Some("unschedulable") => DqError::Unschedulable(msg),
+            Some("worker_lost") => DqError::WorkerLost(msg),
+            Some("timeout") => DqError::Timeout(msg),
+            Some("cancelled") => DqError::Cancelled(msg),
+            Some("protocol") => DqError::Protocol(msg),
+            Some("arity") => DqError::Arity(msg),
+            Some("io") => DqError::Io(msg),
+            _ => DqError::Protocol(format!("undecodable error payload: {v}")),
+        }
+    }
+}
+
+impl std::fmt::Display for DqError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind(), self.message())
+    }
+}
+
+impl std::error::Error for DqError {}
+
+impl From<std::io::Error> for DqError {
+    fn from(e: std::io::Error) -> DqError {
+        DqError::Io(e.to_string())
+    }
+}
+
+/// Stringly-typed errors entering the typed boundary (e.g. from
+/// [`crate::wire::Value`] field accessors or `QuClassiConfig::new`) are
+/// wire/shape problems by construction — classify them as `Protocol`.
+impl From<String> for DqError {
+    fn from(msg: String) -> DqError {
+        DqError::Protocol(msg)
+    }
+}
+
+impl From<&str> for DqError {
+    fn from(msg: &str) -> DqError {
+        DqError::Protocol(msg.to_string())
+    }
+}
+
+/// Interop with the remaining `Result<_, String>` layers (CLI, model
+/// internals): `?` flattens a `DqError` into its display form.
+impl From<DqError> for String {
+    fn from(e: DqError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<DqError> {
+        vec![
+            DqError::Unschedulable("needs 9 qubits".into()),
+            DqError::WorkerLost("w3 evicted".into()),
+            DqError::Timeout("bank 7 deadline".into()),
+            DqError::Cancelled("bank 7 cancelled".into()),
+            DqError::Protocol("short fids".into()),
+            DqError::Arity("theta len 3 != 4".into()),
+            DqError::Io("connection reset".into()),
+        ]
+    }
+
+    #[test]
+    fn wire_round_trip_preserves_kind_and_message() {
+        for e in all_variants() {
+            let back = DqError::from_wire(&e.to_wire());
+            assert_eq!(e, back, "round trip of {e}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_through_serializer() {
+        for e in all_variants() {
+            let text = crate::wire::json::to_string(&e.to_wire());
+            let parsed = crate::wire::json::parse(&text).unwrap();
+            assert_eq!(DqError::from_wire(&parsed), e);
+        }
+    }
+
+    #[test]
+    fn legacy_string_errors_decode_as_protocol() {
+        let v = Value::Str("something broke".into());
+        assert_eq!(DqError::from_wire(&v), DqError::Protocol("something broke".into()));
+    }
+
+    #[test]
+    fn unknown_kind_degrades_to_protocol() {
+        let v = Value::obj().with("kind", "quantum_decoherence").with("msg", "oops");
+        assert!(matches!(DqError::from_wire(&v), DqError::Protocol(_)));
+    }
+
+    #[test]
+    fn display_includes_kind() {
+        let e = DqError::Timeout("bank 3".into());
+        assert_eq!(e.to_string(), "timeout: bank 3");
+        let s: String = e.into();
+        assert!(s.contains("timeout"));
+    }
+}

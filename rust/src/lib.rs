@@ -6,7 +6,7 @@
 //!
 //! The crate is organized bottom-up (see DESIGN.md for the inventory):
 //!
-//! * substrates: [`util`], [`wire`], [`net`], [`cli`], [`benchlib`], [`testlib`]
+//! * substrates: [`util`], [`wire`], [`error`], [`net`], [`cli`], [`benchlib`], [`testlib`]
 //! * quantum: [`qsim`] (from-scratch statevector simulator), [`circuit`]
 //!   (IR + QuClassi builder + parameter-shift banks)
 //! * learning: [`data`], [`model`], [`baseline`]
@@ -18,6 +18,7 @@
 pub mod util;
 #[macro_use]
 pub mod wire;
+pub mod error;
 pub mod baseline;
 pub mod benchlib;
 pub mod circuit;
@@ -34,3 +35,5 @@ pub mod qsim;
 pub mod runtime;
 pub mod testlib;
 pub mod worker;
+
+pub use error::DqError;

@@ -14,6 +14,7 @@
 //!   (the paper's system).
 
 use crate::circuit::{builder, QuClassiConfig};
+use crate::error::DqError;
 
 /// One circuit = one (thetas, data) pair under a configuration.
 pub type CircuitPair = (Vec<f32>, Vec<f32>);
@@ -25,7 +26,7 @@ pub trait CircuitExecutor: Send + Sync {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String>;
+    ) -> Result<Vec<f32>, DqError>;
 
     /// Human-readable executor description (for logs/reports).
     fn describe(&self) -> String {
@@ -42,7 +43,7 @@ impl CircuitExecutor for QsimExecutor {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         Ok(pairs
             .iter()
             .map(|(thetas, data)| builder::simulate_fidelity(config, thetas, data))
@@ -95,7 +96,7 @@ impl CircuitExecutor for ParallelQsimExecutor {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         Ok(crate::util::pool::parallel_indexed(pairs.len(), self.threads, |i| {
             let (thetas, data) = &pairs[i];
             builder::simulate_fidelity(config, thetas, data)
@@ -138,7 +139,7 @@ impl<E: CircuitExecutor> CircuitExecutor for CountingExecutor<E> {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         self.circuits
             .fetch_add(pairs.len() as u64, std::sync::atomic::Ordering::Relaxed);
         self.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);

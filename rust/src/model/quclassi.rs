@@ -5,6 +5,7 @@
 //! The classical front (conv filters + dense layer, Algorithm 1 lines
 //! 8-11) maps an image to rotation-encoder angles.
 
+use crate::error::DqError;
 use crate::circuit::{CircuitBank, QuClassiConfig};
 use crate::data::IMG_SIDE;
 use crate::model::dense::Dense;
@@ -91,7 +92,7 @@ impl QuClassiModel {
         &self,
         exec: &dyn CircuitExecutor,
         angles: &[f32],
-    ) -> Result<[f32; 2], String> {
+    ) -> Result<[f32; 2], DqError> {
         let pairs: Vec<CircuitPair> = vec![
             (self.theta[0].clone(), angles.to_vec()),
             (self.theta[1].clone(), angles.to_vec()),
@@ -106,7 +107,7 @@ impl QuClassiModel {
     }
 
     /// Predict a class index (0 = A, 1 = B) for one image.
-    pub fn predict(&self, exec: &dyn CircuitExecutor, image: &[f32]) -> Result<usize, String> {
+    pub fn predict(&self, exec: &dyn CircuitExecutor, image: &[f32]) -> Result<usize, DqError> {
         let fwd = self.forward_classical(image);
         let fid = self.fidelities(exec, &fwd.angles)?;
         Ok(if Self::prob_b(fid) > 0.5 { 1 } else { 0 })
@@ -130,7 +131,7 @@ impl QuClassiModel {
         fwd: &Forward,
         target: f32,
         train_classical: bool,
-    ) -> Result<SampleGrads, String> {
+    ) -> Result<SampleGrads, DqError> {
         self.sample_grads_with(exec, fwd, target, train_classical, LossKind::Discriminative)
     }
 
@@ -142,7 +143,7 @@ impl QuClassiModel {
         target: f32,
         train_classical: bool,
         loss: LossKind,
-    ) -> Result<SampleGrads, String> {
+    ) -> Result<SampleGrads, DqError> {
         let angles = &fwd.angles;
         let bank_a = CircuitBank::new(self.config, &self.theta[0]);
         let bank_b = CircuitBank::new(self.config, &self.theta[1]);

@@ -6,6 +6,7 @@
 //! updates, and per-epoch accuracy (line 26).
 
 use crate::data::Dataset;
+use crate::error::DqError;
 use crate::model::exec::CircuitExecutor;
 use crate::model::optimizer::{OptState, Optimizer};
 use crate::model::quclassi::{LossKind, QuClassiModel};
@@ -89,7 +90,7 @@ impl Trainer {
         model: &mut QuClassiModel,
         dataset: &Dataset,
         exec: &dyn CircuitExecutor,
-    ) -> Result<TrainReport, String> {
+    ) -> Result<TrainReport, DqError> {
         let mut rng = Rng::new(self.config.seed);
         let mut opt_a = OptState::new(self.config.optimizer, model.theta[0].len());
         let mut opt_b = OptState::new(self.config.optimizer, model.theta[1].len());
@@ -222,7 +223,7 @@ impl Trainer {
         exec: &dyn CircuitExecutor,
         dataset: &Dataset,
         train_split: bool,
-    ) -> Result<f64, String> {
+    ) -> Result<f64, DqError> {
         let split = if train_split { &dataset.train } else { &dataset.test };
         if split.is_empty() {
             return Ok(0.0);

@@ -8,4 +8,4 @@
 pub mod frame;
 pub mod rpc;
 
-pub use rpc::{InProcHub, RpcClient, RpcError, RpcHandler, RpcServer};
+pub use rpc::{InProcHub, RpcClient, RpcHandler, RpcServer};

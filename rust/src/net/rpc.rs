@@ -6,7 +6,15 @@
 //! the thousands-of-events regime instead).
 //!
 //! Protocol envelope: `{"id": n, "op": "...", ...params}` →
-//! `{"id": n, "ok": true, ...result}` or `{"id": n, "ok": false, "error": "..."}`.
+//! `{"id": n, "ok": true, ...result}` or
+//! `{"id": n, "ok": false, "error": {"kind": "...", "msg": "..."}}`.
+//!
+//! Errors are typed end to end: a handler returns
+//! [`DqError`], the envelope carries its wire form, and
+//! [`RpcClient::call`] decodes it back — so a remote client matches on
+//! the same variant the manager raised. Transport-level failures (socket
+//! I/O, closed peers, envelope violations) surface as [`DqError::Io`] /
+//! [`DqError::Protocol`] locally.
 //!
 //! [`InProcHub`] provides the identical call interface between threads of
 //! one process without sockets — tests and `--in-proc` mode use it.
@@ -19,47 +27,26 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::frame::{read_frame, write_frame, FrameError};
+use crate::error::DqError;
 use crate::wire::Value;
 
-/// RPC failure modes.
-#[derive(Debug)]
-pub enum RpcError {
-    Io(String),
-    Remote(String),
-    Protocol(String),
-    Closed,
-}
-
-impl std::fmt::Display for RpcError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            RpcError::Io(e) => write!(f, "rpc io error: {e}"),
-            RpcError::Remote(e) => write!(f, "remote error: {e}"),
-            RpcError::Protocol(e) => write!(f, "protocol error: {e}"),
-            RpcError::Closed => write!(f, "connection closed"),
-        }
-    }
-}
-
-impl std::error::Error for RpcError {}
-
-impl From<FrameError> for RpcError {
+impl From<FrameError> for DqError {
     fn from(e: FrameError) -> Self {
-        RpcError::Io(e.to_string())
+        DqError::Io(e.to_string())
     }
 }
 
 /// A request handler: `op` and params in, result fields out (an object),
-/// or a string error that is reported to the caller.
+/// or a typed [`DqError`] that round-trips to the caller.
 pub trait RpcHandler: Send + Sync + 'static {
-    fn handle(&self, op: &str, params: &Value) -> Result<Value, String>;
+    fn handle(&self, op: &str, params: &Value) -> Result<Value, DqError>;
 }
 
 impl<F> RpcHandler for F
 where
-    F: Fn(&str, &Value) -> Result<Value, String> + Send + Sync + 'static,
+    F: Fn(&str, &Value) -> Result<Value, DqError> + Send + Sync + 'static,
 {
-    fn handle(&self, op: &str, params: &Value) -> Result<Value, String> {
+    fn handle(&self, op: &str, params: &Value) -> Result<Value, DqError> {
         self(op, params)
     }
 }
@@ -156,7 +143,7 @@ fn dispatch(handler: &dyn RpcHandler, req: &Value) -> Value {
             return Value::obj()
                 .with("id", "?")
                 .with("ok", false)
-                .with("error", "missing 'op'")
+                .with("error", DqError::Protocol("missing 'op'".into()).to_wire())
         }
     };
     match handler.handle(op, req) {
@@ -168,8 +155,8 @@ fn dispatch(handler: &dyn RpcHandler, req: &Value) -> Value {
             result.set("ok", true);
             result
         }
-        Err(msg) => {
-            let mut v = Value::obj().with("ok", false).with("error", msg);
+        Err(e) => {
+            let mut v = Value::obj().with("ok", false).with("error", e.to_wire());
             v.set("id", id);
             v
         }
@@ -191,14 +178,14 @@ enum ClientInner {
 impl RpcClient {
     /// Connect over TCP, retrying for up to `timeout` (server may still be
     /// starting).
-    pub fn connect<A: ToSocketAddrs + Clone>(addr: A, timeout: Duration) -> Result<RpcClient, RpcError> {
+    pub fn connect<A: ToSocketAddrs + Clone>(addr: A, timeout: Duration) -> Result<RpcClient, DqError> {
         let deadline = std::time::Instant::now() + timeout;
         loop {
             match TcpStream::connect(addr.clone()) {
                 Ok(stream) => {
                     let _ = stream.set_nodelay(true);
                     let reader =
-                        BufReader::new(stream.try_clone().map_err(|e| RpcError::Io(e.to_string()))?);
+                        BufReader::new(stream.try_clone().map_err(|e| DqError::Io(e.to_string()))?);
                     let writer = BufWriter::new(stream);
                     return Ok(RpcClient {
                         inner: Mutex::new(ClientInner::Tcp { reader, writer }),
@@ -207,7 +194,7 @@ impl RpcClient {
                 }
                 Err(e) => {
                     if std::time::Instant::now() >= deadline {
-                        return Err(RpcError::Io(format!("connect failed: {e}")));
+                        return Err(DqError::Io(format!("connect failed: {e}")));
                     }
                     std::thread::sleep(Duration::from_millis(20));
                 }
@@ -215,10 +202,12 @@ impl RpcClient {
         }
     }
 
-    /// Issue one call. `params` must be an object; `op` and `id` are added.
-    pub fn call(&self, op: &str, mut params: Value) -> Result<Value, RpcError> {
+    /// Issue one call. `params` must be an object; `op` and `id` are
+    /// added. A remote failure decodes back into the [`DqError`] the
+    /// handler raised.
+    pub fn call(&self, op: &str, mut params: Value) -> Result<Value, DqError> {
         if !matches!(params, Value::Obj(_)) {
-            return Err(RpcError::Protocol("params must be an object".into()));
+            return Err(DqError::Protocol("params must be an object".into()));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         params.set("op", op);
@@ -230,7 +219,7 @@ impl RpcClient {
                 loop {
                     match read_frame(reader) {
                         Ok(Some(v)) => break v,
-                        Ok(None) => return Err(RpcError::Closed),
+                        Ok(None) => return Err(DqError::Io("connection closed".into())),
                         Err(FrameError::Io(e))
                             if matches!(
                                 e.kind(),
@@ -244,20 +233,21 @@ impl RpcClient {
                 }
             }
             ClientInner::Chan { tx, rx } => {
-                tx.send(params).map_err(|_| RpcError::Closed)?;
-                rx.recv().map_err(|_| RpcError::Closed)?
+                tx.send(params).map_err(|_| DqError::Io("connection closed".into()))?;
+                rx.recv().map_err(|_| DqError::Io("connection closed".into()))?
             }
         };
         let got_id = resp.get("id").and_then(Value::as_u64);
         if got_id != Some(id) {
-            return Err(RpcError::Protocol(format!("response id mismatch: {got_id:?} != {id}")));
+            return Err(DqError::Protocol(format!("response id mismatch: {got_id:?} != {id}")));
         }
         if resp.get("ok").and_then(Value::as_bool) == Some(true) {
             Ok(resp)
         } else {
-            Err(RpcError::Remote(
-                resp.get("error").and_then(Value::as_str).unwrap_or("unknown").to_string(),
-            ))
+            Err(resp
+                .get("error")
+                .map(DqError::from_wire)
+                .unwrap_or_else(|| DqError::Protocol("error response without payload".into())))
         }
     }
 }
@@ -302,7 +292,7 @@ mod tests {
     use super::*;
 
     fn echo_handler() -> Arc<dyn RpcHandler> {
-        Arc::new(|op: &str, params: &Value| -> Result<Value, String> {
+        Arc::new(|op: &str, params: &Value| -> Result<Value, DqError> {
             match op {
                 "echo" => Ok(Value::obj().with("echoed", params.get("msg").cloned().unwrap_or(Value::Null))),
                 "add" => {
@@ -310,8 +300,9 @@ mod tests {
                     let b = params.req_f64("b")?;
                     Ok(Value::obj().with("sum", a + b))
                 }
-                "fail" => Err("deliberate failure".to_string()),
-                _ => Err(format!("unknown op {op}")),
+                "fail" => Err(DqError::Io("deliberate failure".to_string())),
+                "cancelled" => Err(DqError::Cancelled("bank 9 cancelled".to_string())),
+                _ => Err(DqError::Protocol(format!("unknown op {op}"))),
             }
         })
     }
@@ -337,20 +328,35 @@ mod tests {
     }
 
     #[test]
-    fn remote_error_propagates() {
+    fn remote_error_round_trips_typed() {
         let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
         let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
         match client.call("fail", Value::obj()) {
-            Err(RpcError::Remote(msg)) => assert!(msg.contains("deliberate")),
-            other => panic!("expected remote error, got {other:?}"),
+            Err(DqError::Io(msg)) => assert!(msg.contains("deliberate")),
+            other => panic!("expected typed Io error, got {other:?}"),
+        }
+        match client.call("cancelled", Value::obj()) {
+            Err(DqError::Cancelled(msg)) => assert!(msg.contains("bank 9")),
+            other => panic!("expected typed Cancelled error, got {other:?}"),
         }
     }
 
     #[test]
-    fn unknown_op_is_remote_error() {
+    fn unknown_op_is_protocol_error() {
         let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
         let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
-        assert!(matches!(client.call("nope", Value::obj()), Err(RpcError::Remote(_))));
+        assert!(matches!(client.call("nope", Value::obj()), Err(DqError::Protocol(_))));
+    }
+
+    #[test]
+    fn missing_field_is_protocol_error() {
+        // Value::req_* string errors enter the taxonomy as Protocol.
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
+        match client.call("add", Value::obj().with("a", 1.0)) {
+            Err(DqError::Protocol(msg)) => assert!(msg.contains('b')),
+            other => panic!("expected protocol error, got {other:?}"),
+        }
     }
 
     #[test]
@@ -381,7 +387,7 @@ mod tests {
         let client = hub.client();
         let r = client.call("echo", Value::obj().with("msg", "hi")).unwrap();
         assert_eq!(r.get("echoed").unwrap().as_str(), Some("hi"));
-        assert!(matches!(client.call("fail", Value::obj()), Err(RpcError::Remote(_))));
+        assert!(matches!(client.call("fail", Value::obj()), Err(DqError::Io(_))));
     }
 
     #[test]

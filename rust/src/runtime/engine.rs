@@ -134,8 +134,8 @@ impl CircuitExecutor for PjrtEngine {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
-        self.execute(config, pairs)
+    ) -> Result<Vec<f32>, crate::error::DqError> {
+        Ok(self.execute(config, pairs)?)
     }
 
     fn describe(&self) -> String {

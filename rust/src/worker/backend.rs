@@ -3,6 +3,7 @@
 use std::path::Path;
 
 use crate::circuit::QuClassiConfig;
+use crate::error::DqError;
 use crate::model::exec::{self, CircuitExecutor, CircuitPair, ParallelQsimExecutor, QsimExecutor};
 use crate::qsim::NoiseModel;
 use crate::runtime::PjrtEngine;
@@ -61,9 +62,9 @@ impl WorkerBackend {
         &self,
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
-    ) -> Result<Vec<f32>, String> {
+    ) -> Result<Vec<f32>, DqError> {
         match self {
-            WorkerBackend::Pjrt(engine) => engine.execute(config, pairs),
+            WorkerBackend::Pjrt(engine) => Ok(engine.execute(config, pairs)?),
             WorkerBackend::Qsim => QsimExecutor.execute_bank(config, pairs),
             WorkerBackend::ParallelQsim(pool) => pool.execute_bank(config, pairs),
             WorkerBackend::NoisyQsim(noise, seed) => {

@@ -10,6 +10,7 @@ use super::backend::WorkerBackend;
 use super::cru::{CruProbe, LoadModelCru};
 use crate::circuit::QuClassiConfig;
 use crate::coordinator::job::CircuitJob;
+use crate::error::DqError;
 use crate::net::{RpcClient, RpcServer};
 use crate::wire::Value;
 
@@ -54,7 +55,7 @@ pub struct WorkerHandle {
 impl WorkerHandle {
     /// Start a worker: serve `execute`, register with the manager at
     /// `manager_addr`, and heartbeat until stopped.
-    pub fn start(manager_addr: &str, opts: WorkerOptions) -> Result<WorkerHandle, String> {
+    pub fn start(manager_addr: &str, opts: WorkerOptions) -> Result<WorkerHandle, DqError> {
         let backend = Arc::new(WorkerBackend::auto_with_threads(&opts.artifact_dir, opts.threads));
         let active = Arc::new(AtomicUsize::new(0));
         let cru = LoadModelCru::new(1.0 / opts.max_qubits.max(1) as f64, 0.05);
@@ -64,7 +65,7 @@ impl WorkerHandle {
         // --- execute RPC server ---
         let backend2 = backend.clone();
         let active2 = active.clone();
-        let handler = move |op: &str, params: &Value| -> Result<Value, String> {
+        let handler = move |op: &str, params: &Value| -> Result<Value, DqError> {
             match op {
                 "execute" => {
                     let jobs = params.req_arr("circuits")?;
@@ -74,13 +75,16 @@ impl WorkerHandle {
                         let job = CircuitJob::from_wire(j)?;
                         if let Some(c) = config {
                             if c != job.config {
-                                return Err("mixed configs in one execute".to_string());
+                                return Err(DqError::Protocol(
+                                    "mixed configs in one execute".to_string(),
+                                ));
                             }
                         }
                         config = Some(job.config);
                         pairs.push((job.thetas, job.data));
                     }
-                    let config = config.ok_or("empty execute")?;
+                    let config =
+                        config.ok_or_else(|| DqError::Protocol("empty execute".to_string()))?;
                     active2.fetch_add(pairs.len(), Ordering::Relaxed);
                     let result = backend2.execute(&config, &pairs);
                     active2.fetch_sub(pairs.len(), Ordering::Relaxed);
@@ -88,11 +92,11 @@ impl WorkerHandle {
                     Ok(Value::obj().with("fids", fids.as_slice()))
                 }
                 "ping" => Ok(Value::obj().with("pong", true)),
-                other => Err(format!("worker: unknown op '{other}'")),
+                other => Err(DqError::Protocol(format!("worker: unknown op '{other}'"))),
             }
         };
         let server = RpcServer::serve(opts.listen.as_str(), Arc::new(handler))
-            .map_err(|e| format!("worker listen: {e}"))?;
+            .map_err(|e| DqError::Io(format!("worker listen: {e}")))?;
         let listen_addr = server.local_addr();
 
         // keep CRU counter synced with active executions
@@ -105,12 +109,12 @@ impl WorkerHandle {
                     counter.store(active3.load(Ordering::Relaxed), Ordering::Relaxed);
                     std::thread::sleep(Duration::from_millis(100));
                 })
-                .map_err(|e| e.to_string())?;
+                .map_err(|e| DqError::Io(e.to_string()))?;
         }
 
         // --- register with the manager ---
         let client = RpcClient::connect(manager_addr, Duration::from_secs(5))
-            .map_err(|e| format!("connect manager: {e}"))?;
+            .map_err(|e| DqError::Io(format!("connect manager: {e}")))?;
         let resp = client
             .call(
                 "register",
@@ -119,8 +123,7 @@ impl WorkerHandle {
                     .with("addr", listen_addr.to_string())
                     .with("cru", cru.sample())
                     .with("threads", backend.threads()),
-            )
-            .map_err(|e| format!("register: {e}"))?;
+            )?;
         let worker_id = resp.req_u64("worker_id")?;
         crate::log_info!(
             "worker",
@@ -151,7 +154,7 @@ impl WorkerHandle {
                     }
                 }
             })
-            .map_err(|e| e.to_string())?;
+            .map_err(|e| DqError::Io(e.to_string()))?;
 
         Ok(WorkerHandle {
             worker_id,
@@ -183,11 +186,11 @@ mod tests {
     /// Stand-in manager that accepts register/heartbeat (integration with
     /// the real manager lives in cluster::tcp tests).
     fn fake_manager() -> RpcServer {
-        let handler = |op: &str, _params: &Value| -> Result<Value, String> {
+        let handler = |op: &str, _params: &Value| -> Result<Value, DqError> {
             match op {
                 "register" => Ok(Value::obj().with("worker_id", 7u64)),
                 "heartbeat" => Ok(Value::obj()),
-                other => Err(format!("unexpected {other}")),
+                other => Err(DqError::Protocol(format!("unexpected {other}"))),
             }
         };
         RpcServer::serve("127.0.0.1:0", Arc::new(handler)).unwrap()

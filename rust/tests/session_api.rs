@@ -1,0 +1,260 @@
+//! Integration tests for the typed session API over real TCP: bank
+//! cancellation, monotonic progress polling, and typed RPC error paths
+//! (a malformed worker payload must surface `DqError::Protocol`, never
+//! hang a client).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::serve_manager;
+use dqulearn::cluster::RemoteClient;
+use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel, WorkerProfile};
+use dqulearn::error::DqError;
+use dqulearn::model::exec::{CircuitExecutor, CircuitPair, QsimExecutor};
+use dqulearn::net::{RpcHandler, RpcServer};
+use dqulearn::util::Rng;
+use dqulearn::wire::Value;
+
+/// Simulator-backed channel that pauses per dispatch, so tests can
+/// observe (and cancel) half-completed banks deterministically.
+struct SlowChannel {
+    delay: Duration,
+}
+
+impl WorkerChannel for SlowChannel {
+    fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        std::thread::sleep(self.delay);
+        QsimExecutor.execute_bank(config, pairs)
+    }
+}
+
+fn pairs_for(config: &QuClassiConfig, n: usize, seed: u64) -> Vec<CircuitPair> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (
+                (0..config.n_params()).map(|_| rng.f32()).collect(),
+                (0..config.n_features()).map(|_| rng.f32()).collect(),
+            )
+        })
+        .collect()
+}
+
+/// Acceptance: a client cancels a half-completed bank over TCP; the
+/// manager requeues nothing from it, releases its reservations, and a
+/// concurrent tenant's bank completes with exact parity against
+/// `QsimExecutor`.
+#[test]
+fn cancel_half_completed_bank_over_tcp() {
+    let manager = Manager::new(ManagerConfig { max_batch: 1, ..Default::default() });
+    // One slow 5-qubit worker: circuits complete one at a time, so the
+    // bank is observably in progress when the cancel lands.
+    manager.register(
+        WorkerProfile::new(5),
+        Arc::new(SlowChannel { delay: Duration::from_millis(15) }),
+    );
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let client = RemoteClient::connect(&addr).unwrap();
+    let tenant_a = client.session().unwrap();
+    let tenant_b = client.session().unwrap();
+    assert_ne!(tenant_a.id(), tenant_b.id());
+
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let doomed_pairs = pairs_for(&cfg, 12, 1);
+    let doomed = tenant_a.submit(cfg, &doomed_pairs).unwrap();
+    // the concurrent tenant's bank queues behind tenant A's
+    let keep_pairs = pairs_for(&cfg, 4, 2);
+    let keep = tenant_b.submit(cfg, &keep_pairs).unwrap();
+
+    // Poll (over TCP) until the bank is genuinely half-done.
+    loop {
+        let st = doomed.try_poll().unwrap();
+        assert_eq!(st.total, 12);
+        if st.completed >= 3 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    let drained = doomed.cancel().unwrap();
+    assert!(drained > 0, "expected queued circuits to drain, got {drained}");
+    // cancel is idempotent
+    assert_eq!(doomed.cancel().unwrap(), 0);
+    assert!(matches!(doomed.wait_timeout(Duration::from_secs(10)), Err(DqError::Cancelled(_))));
+
+    // The concurrent tenant is unaffected: exact parity with local sim.
+    let fids = keep.wait().unwrap();
+    assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &keep_pairs).unwrap());
+
+    // Nothing from the cancelled bank was requeued, exactly one bank was
+    // recorded cancelled, and every reservation drains back to idle.
+    let stats = client.manager_stats().unwrap();
+    assert_eq!(stats.req_u64("requeues").unwrap(), 0);
+    assert_eq!(stats.req_u64("cancelled").unwrap(), 1);
+    assert_eq!(stats.req_u64("queue").unwrap(), 0);
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        if manager.available_qubits() == 5 {
+            break; // all reservations released
+        }
+        assert!(std::time::Instant::now() < deadline, "reservations never released");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    manager.shutdown();
+}
+
+/// Acceptance: `BankHandle::try_poll()` observes monotonically
+/// non-decreasing completion counts while a bank runs — here through the
+/// full TCP `bank_status` path, partial fidelities included.
+#[test]
+fn try_poll_is_monotonic_over_tcp() {
+    let manager = Manager::new(ManagerConfig { max_batch: 2, ..Default::default() });
+    manager.register(
+        WorkerProfile::new(5),
+        Arc::new(SlowChannel { delay: Duration::from_millis(10) }),
+    );
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let client = RemoteClient::connect(&server.local_addr().to_string()).unwrap();
+    let session = client.session().unwrap();
+
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs = pairs_for(&cfg, 14, 3);
+    let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+    let handle = session.submit(cfg, &pairs).unwrap();
+
+    let mut last = 0usize;
+    let mut observed_partial = false;
+    loop {
+        let st = handle.try_poll().unwrap();
+        assert!(
+            st.completed >= last,
+            "completion count went backwards: {} < {last}",
+            st.completed
+        );
+        assert_eq!(st.total, 14);
+        let done = st.partial_fids.iter().filter(|f| f.is_some()).count();
+        assert_eq!(done, st.completed, "partial_fids disagree with completed count");
+        // every partial fidelity already equals the local simulation
+        for (i, f) in st.partial_fids.iter().enumerate() {
+            if let Some(f) = f {
+                assert!((f - want[i]).abs() < 1e-6, "circuit {i} fid diverged mid-bank");
+            }
+        }
+        if st.pending && st.completed > 0 {
+            observed_partial = true;
+        }
+        last = st.completed;
+        if !st.pending {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(observed_partial, "never caught the bank in a partial state");
+    assert_eq!(handle.wait().unwrap(), want);
+    manager.shutdown();
+}
+
+/// A fake worker whose `execute` always answers with a single fidelity,
+/// regardless of how many circuits were sent (malformed short payload).
+fn short_fids_worker() -> RpcServer {
+    let handler: Arc<dyn RpcHandler> =
+        Arc::new(|op: &str, _params: &Value| -> Result<Value, DqError> {
+            match op {
+                "execute" => Ok(Value::obj().with("fids", [0.25f32].as_slice())),
+                "ping" => Ok(Value::obj().with("pong", true)),
+                other => Err(DqError::Protocol(format!("unexpected {other}"))),
+            }
+        });
+    RpcServer::serve("127.0.0.1:0", handler).unwrap()
+}
+
+/// Satellite: a worker returning a malformed/short `fids` payload must
+/// surface `DqError::Protocol` to the waiting client — not a hang, and
+/// not a requeue loop.
+#[test]
+fn malformed_worker_payload_surfaces_protocol_error() {
+    let manager = Manager::new(ManagerConfig::default());
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Register the fake worker through the real registration RPC, so the
+    // manager reaches it over the genuine wire path.
+    let fake = short_fids_worker();
+    let reg = dqulearn::net::RpcClient::connect(addr.as_str(), Duration::from_secs(2)).unwrap();
+    let resp = reg
+        .call(
+            "register",
+            Value::obj()
+                .with("max_qubits", 5usize)
+                .with("addr", fake.local_addr().to_string())
+                .with("cru", 0.0f64)
+                .with("threads", 1usize),
+        )
+        .unwrap();
+    assert!(resp.req_u64("worker_id").unwrap() > 0);
+
+    let client = RemoteClient::connect(&addr).unwrap();
+    let session = client.session().unwrap();
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs = pairs_for(&cfg, 3, 4);
+    let handle = session.submit(cfg, &pairs).unwrap();
+    match handle.wait_timeout(Duration::from_secs(20)) {
+        Err(DqError::Protocol(msg)) => {
+            assert!(msg.contains("3 circuits"), "unexpected message: {msg}")
+        }
+        other => panic!("expected DqError::Protocol, got {other:?}"),
+    }
+    manager.shutdown();
+}
+
+/// Typed errors round-trip the envelope for every client-facing op.
+#[test]
+fn rpc_ops_return_typed_errors() {
+    let manager = Manager::new(ManagerConfig::default());
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let rpc =
+        dqulearn::net::RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
+
+    // bank_status on an unknown bank: Protocol (typed, remote-raised)
+    let err = rpc.call("bank_status", Value::obj().with("bank", 999u64)).unwrap_err();
+    assert!(matches!(err, DqError::Protocol(_)), "{err}");
+
+    // cancel_bank is idempotent even for unknown banks
+    let resp = rpc.call("cancel_bank", Value::obj().with("bank", 999u64)).unwrap();
+    assert_eq!(resp.req_usize("drained").unwrap(), 0);
+
+    // submit_bank with a malformed payload: Protocol
+    let err = rpc.call("submit_bank", Value::obj().with("client", 1u64)).unwrap_err();
+    assert!(matches!(err, DqError::Protocol(_)), "{err}");
+
+    // submit_bank with a bad arity: Arity round-trips
+    let bad = dqulearn::cluster::SubmitRequest {
+        client: 1,
+        config: QuClassiConfig::new(5, 1).unwrap(),
+        pairs: vec![(vec![0.0; 2], vec![0.0; 4])], // theta arity wrong
+    };
+    let err = rpc.call("submit_bank", bad.to_wire()).unwrap_err();
+    assert!(matches!(err, DqError::Arity(_)), "{err}");
+
+    // wait_bank with an explicit timeout on a bank that can never finish
+    // (no workers): Timeout round-trips
+    let ok = dqulearn::cluster::SubmitRequest {
+        client: 1,
+        config: QuClassiConfig::new(5, 1).unwrap(),
+        pairs: vec![(vec![0.0; 4], vec![0.0; 4])],
+    };
+    let resp = rpc.call("submit_bank", ok.to_wire()).unwrap();
+    let bank = dqulearn::cluster::SubmitResponse::from_wire(&resp).unwrap().bank;
+    let err = rpc
+        .call("wait_bank", Value::obj().with("bank", bank).with("timeout_ms", 50u64))
+        .unwrap_err();
+    assert!(matches!(err, DqError::Timeout(_)), "{err}");
+
+    manager.shutdown();
+}
