@@ -42,15 +42,21 @@ fn main() -> Result<(), String> {
 
     // 4. Train (Algorithm 1): parameter-shift circuit banks per sample,
     //    submitted through the session, gradients assembled, Adam updates.
+    //    DQ_QUICKSTART_EPOCHS overrides the epoch count (CI smoke runs
+    //    set it to 1 so example drift is caught without a full train).
+    let epochs = std::env::var("DQ_QUICKSTART_EPOCHS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(8);
     let mut model = QuClassiModel::new(config, &mut Rng::new(42));
     let trainer = Trainer::new(TrainConfig {
-        epochs: 8,
+        epochs,
         optimizer: Optimizer::adam(0.08),
         train_classical: true,
         classical_lr_scale: 0.1,
         seed: 7,
         early_stop_acc: None,
-            loss: LossKind::Discriminative,
+        loss: LossKind::Discriminative,
     });
     let report = trainer.train(&mut model, &dataset, &session)?;
 

@@ -1,0 +1,210 @@
+//! Macro-benchmark: co-Manager dispatch throughput across a worker ×
+//! tenant grid — the perf gate for the event-driven dispatch path.
+//!
+//! Every cell builds a fresh manager, registers `W` instant
+//! `MockChannel` workers, and runs `T` tenant threads that each submit
+//! banks through the session API until their circuit budget is spent.
+//! The channel does no quantum work, so the measured circuits/second is
+//! pure coordination cost: admission, Algorithm-2 selection, outbox
+//! hand-off, completion routing, and wakeups.
+//!
+//! Results are serialized via `wire/json` to `BENCH_coordinator.json`
+//! (override with `DQ_BENCH_OUT`), seeding the repo's perf trajectory.
+//! When a committed baseline exists (`DQ_BENCH_BASELINE`, default
+//! `../bench/baseline.json` relative to the crate root), any cell whose
+//! throughput falls below **half** the baseline value fails the run —
+//! the CI `bench-smoke` regression gate, with the 2x factor absorbing
+//! shared-runner noise.
+//!
+//! ```bash
+//! cargo bench --bench bench_coordinator_scale          # full window
+//! DQ_BENCH_FAST=1 cargo bench --bench bench_coordinator_scale
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dqulearn::benchlib::{BenchConfig, Table};
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel, WorkerProfile};
+use dqulearn::error::DqError;
+use dqulearn::model::exec::CircuitPair;
+use dqulearn::wire::{json, Value};
+
+/// Instant worker: returns a constant fidelity per circuit, so the
+/// bench measures coordination, not simulation.
+struct MockChannel;
+
+impl WorkerChannel for MockChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        Ok(vec![0.5; pairs.len()])
+    }
+}
+
+struct Cell {
+    workers: usize,
+    tenants: usize,
+    circuits: usize,
+    secs: f64,
+    throughput: f64,
+    dispatches: u64,
+}
+
+fn run_cell(workers: usize, tenants: usize, circuits_per_tenant: usize, bank: usize) -> Cell {
+    let manager = Manager::new(ManagerConfig { max_batch: 8, ..Default::default() });
+    for _ in 0..workers {
+        manager.register(WorkerProfile::new(5), Arc::new(MockChannel));
+    }
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs: Vec<CircuitPair> = (0..bank)
+        .map(|_| (vec![0.1; cfg.n_params()], vec![0.2; cfg.n_features()]))
+        .collect();
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..tenants)
+        .map(|_| {
+            let m = manager.clone();
+            let pairs = pairs.clone();
+            std::thread::spawn(move || {
+                let session = m.session();
+                let mut left = circuits_per_tenant;
+                while left > 0 {
+                    let n = left.min(pairs.len());
+                    let fids = session.execute(cfg, &pairs[..n]).expect("bench bank failed");
+                    assert_eq!(fids.len(), n);
+                    left -= n;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("tenant thread panicked");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let stats = manager.stats();
+    manager.shutdown();
+
+    let circuits = tenants * circuits_per_tenant;
+    Cell {
+        workers,
+        tenants,
+        circuits,
+        secs,
+        throughput: circuits as f64 / secs.max(1e-9),
+        dispatches: stats.dispatches,
+    }
+}
+
+fn cells_to_wire(mode: &str, cells: &[Cell]) -> Value {
+    let rows: Vec<Value> = cells
+        .iter()
+        .map(|c| {
+            Value::obj()
+                .with("workers", c.workers)
+                .with("tenants", c.tenants)
+                .with("circuits", c.circuits)
+                .with("secs", c.secs)
+                .with("throughput", c.throughput)
+                .with("dispatches", c.dispatches)
+        })
+        .collect();
+    Value::obj()
+        .with("bench", "coordinator_scale")
+        .with("mode", mode)
+        .with("cells", rows)
+}
+
+/// Compare against the committed baseline; returns the failing cells.
+fn regressions(cells: &[Cell], baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(base_cells) = baseline.get("cells").and_then(Value::as_arr) else {
+        return failures;
+    };
+    for b in base_cells {
+        let (Some(w), Some(t), Some(thr)) = (
+            b.get("workers").and_then(Value::as_usize),
+            b.get("tenants").and_then(Value::as_usize),
+            b.get("throughput").and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        if let Some(c) = cells.iter().find(|c| c.workers == w && c.tenants == t) {
+            // >2x regression gate: generous for shared CI runners.
+            if c.throughput < thr / 2.0 {
+                failures.push(format!(
+                    "{w}w x {t}t: {:.0} c/s < half of baseline {thr:.0} c/s",
+                    c.throughput
+                ));
+            }
+        }
+    }
+    failures
+}
+
+fn main() {
+    let bench_cfg = BenchConfig::from_env();
+    let fast = std::env::var_os("DQ_BENCH_FAST").is_some();
+    let mode = if fast { "fast" } else { "full" };
+    // Scale the per-tenant budget off the configured window so fast mode
+    // really is fast on shared runners.
+    let circuits_per_tenant = bench_cfg.max_samples * 20; // 600 fast / 4000 full
+    let bank = 50;
+
+    let grid = [1usize, 4, 16];
+    let mut cells = Vec::new();
+    for &workers in &grid {
+        for &tenants in &grid {
+            cells.push(run_cell(workers, tenants, circuits_per_tenant, bank));
+        }
+    }
+
+    let mut table =
+        Table::new(&["workers", "tenants", "circuits", "secs", "circuits/s", "dispatches"]);
+    for c in &cells {
+        table.row(&[
+            c.workers.to_string(),
+            c.tenants.to_string(),
+            c.circuits.to_string(),
+            format!("{:.3}", c.secs),
+            format!("{:.0}", c.throughput),
+            c.dispatches.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Serialize the trajectory point.
+    let out_default = "BENCH_coordinator.json".to_string();
+    let out_path = std::env::var("DQ_BENCH_OUT").unwrap_or(out_default);
+    let payload = json::to_string_pretty(&cells_to_wire(mode, &cells));
+    std::fs::write(&out_path, payload).expect("write BENCH_coordinator.json");
+    println!("\nwrote {out_path}");
+
+    // Regression gate against the committed baseline, if present.
+    let baseline_default = "../bench/baseline.json".to_string();
+    let baseline_path = std::env::var("DQ_BENCH_BASELINE").unwrap_or(baseline_default);
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => match json::parse(&text) {
+            Ok(baseline) => {
+                let failures = regressions(&cells, &baseline);
+                if failures.is_empty() {
+                    println!("baseline check OK ({baseline_path})");
+                } else {
+                    eprintln!("perf regression vs {baseline_path}:");
+                    for f in &failures {
+                        eprintln!("  {f}");
+                    }
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => {
+                eprintln!("baseline {baseline_path} unparseable: {e:?}");
+                std::process::exit(1);
+            }
+        },
+        Err(_) => println!("no baseline at {baseline_path}; skipping regression gate"),
+    }
+}

@@ -4,9 +4,11 @@
 //! The old packer called `VecDeque::remove(scanned)` inside a scan loop:
 //! each removal shifts the tail, so packing a batch out of a queue with
 //! `n` pending circuits cost O(n²) element moves when tenants interleave.
-//! The manager now takes the contiguous same-config prefix directly and
-//! falls back to a single drain/partition pass — O(n) total. This bench
-//! shows the gap at 10k pending circuits (and the scaling trend).
+//! The admission queue now takes the contiguous same-config prefix
+//! directly and falls back to a single drain/partition pass — O(n) total,
+//! and since PR 4 the scan is bounded by one *tenant's* backlog rather
+//! than the global queue (`coordinator/admission.rs`). This bench shows
+//! the gap at 10k pending circuits (and the scaling trend).
 //!
 //! ```bash
 //! cargo bench --bench micro_queue
@@ -83,7 +85,7 @@ fn pack_partition(
 }
 
 fn main() {
-    let mut b = Bencher::new(BenchConfig::default());
+    let mut b = Bencher::new(BenchConfig::from_env());
     const BATCH: usize = 32;
 
     for n in [1_000usize, 10_000] {

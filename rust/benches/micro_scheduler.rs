@@ -27,7 +27,7 @@ fn registry_of(n: usize, seed: u64) -> Registry {
 }
 
 fn main() {
-    let mut b = Bencher::new(BenchConfig::default());
+    let mut b = Bencher::new(BenchConfig::from_env());
 
     for n in [4usize, 16, 64, 256, 1024] {
         let reg = registry_of(n, 3);

@@ -16,6 +16,12 @@ pub struct BenchConfig {
     pub measure: Duration,
     /// Max wall-clock samples collected per benchmark.
     pub max_samples: usize,
+    /// Hard cap on iterations folded into one sample. The warmup-based
+    /// per-iteration estimate can undershoot by orders of magnitude on an
+    /// ultra-cheap closure (timer granularity, warmup-only optimization),
+    /// which would size a single sample at many multiples of the whole
+    /// measurement window; the cap bounds that overshoot.
+    pub max_iters_per_sample: u64,
 }
 
 impl Default for BenchConfig {
@@ -24,6 +30,7 @@ impl Default for BenchConfig {
             warmup: Duration::from_millis(200),
             measure: Duration::from_millis(800),
             max_samples: 200,
+            max_iters_per_sample: 1 << 22,
         }
     }
 }
@@ -35,6 +42,18 @@ impl BenchConfig {
             warmup: Duration::from_millis(50),
             measure: Duration::from_millis(300),
             max_samples: 30,
+            max_iters_per_sample: 1 << 20,
+        }
+    }
+
+    /// [`BenchConfig::fast`] when `DQ_BENCH_FAST` is set in the
+    /// environment (the CI bench-smoke knob), the default window
+    /// otherwise.
+    pub fn from_env() -> BenchConfig {
+        if std::env::var_os("DQ_BENCH_FAST").is_some() {
+            BenchConfig::fast()
+        } else {
+            BenchConfig::default()
         }
     }
 }
@@ -80,9 +99,11 @@ impl Bencher {
         let est = warmup_start.elapsed().as_secs_f64() / warmup_iters.max(1) as f64;
 
         // Choose iterations per sample so one sample is ~1% of the window
-        // (bounded below by 1), then sample until the window closes.
+        // (bounded below by 1 and above by the configured cap, so a
+        // mis-estimated warmup cannot blow one sample past the window).
         let target_sample = self.config.measure.as_secs_f64() / 100.0;
-        let iters = ((target_sample / est).ceil() as u64).max(1);
+        let iters =
+            ((target_sample / est).ceil() as u64).clamp(1, self.config.max_iters_per_sample.max(1));
         let mut samples = Vec::new();
         let window = Instant::now();
         while window.elapsed() < self.config.measure && samples.len() < self.config.max_samples {
@@ -201,6 +222,7 @@ mod tests {
             warmup: Duration::from_millis(10),
             measure: Duration::from_millis(50),
             max_samples: 50,
+            ..BenchConfig::default()
         });
         let r = b.bench("noop-ish", || {
             std::hint::black_box((0..100).sum::<u64>());
@@ -215,12 +237,29 @@ mod tests {
             warmup: Duration::from_millis(5),
             measure: Duration::from_millis(20),
             max_samples: 10,
+            ..BenchConfig::default()
         });
         b.bench("alpha", || {
             std::hint::black_box(1 + 1);
         });
         let rep = b.report();
         assert!(rep.contains("alpha"));
+    }
+
+    #[test]
+    fn iters_per_sample_is_capped() {
+        // An ultra-cheap closure would estimate billions of iterations
+        // per sample; the cap keeps one sample inside the window.
+        let mut b = Bencher::new(BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            max_samples: 10,
+            max_iters_per_sample: 64,
+        });
+        let r = b.bench("cheap", || {
+            std::hint::black_box(1u64 + 1);
+        });
+        assert!(r.iters_per_sample <= 64, "cap ignored: {}", r.iters_per_sample);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! Used by tests, the quickstart example, and calibration runs. Workers
 //! execute through their configured backend (PJRT artifacts or qsim);
 //! the manager code path is byte-for-byte the one used over TCP — only
-//! the `WorkerChannel` is a direct call instead of an RPC.
+//! the `WorkerChannel` is a direct call instead of an RPC. Each worker's
+//! registration spawns its per-worker outbox dispatcher inside the
+//! manager (DESIGN.md §13), so even in-proc execution is sharded: a slow
+//! backend stalls only its own outbox, never dispatch to siblings.
 
 use std::path::PathBuf;
 use std::sync::Arc;

@@ -36,7 +36,10 @@ use crate::model::exec::{CircuitExecutor, CircuitPair};
 use crate::net::{RpcClient, RpcServer};
 use crate::wire::Value;
 
-/// Manager→worker channel over RPC.
+/// Manager→worker channel over RPC. Executed on the worker's outbox
+/// dispatcher thread (DESIGN.md §13): the blocking RPC round trip ties
+/// up only this worker's outbox, so a slow or unreachable remote worker
+/// never delays dispatch to its siblings.
 struct RpcWorkerChannel {
     client: RpcClient,
 }
@@ -125,6 +128,20 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
             }
             "stats" => {
                 let s = manager.stats();
+                // per-tenant counters ride along for remote observability
+                let tenants: Vec<Value> = s
+                    .per_tenant
+                    .iter()
+                    .map(|(client, t)| {
+                        Value::obj()
+                            .with("client", *client)
+                            .with("submitted", t.submitted)
+                            .with("dispatched", t.dispatched)
+                            .with("completed", t.completed)
+                            .with("wait_total_s", t.wait_total_s)
+                            .with("wait_max_s", t.wait_max_s)
+                    })
+                    .collect();
                 Ok(Value::obj()
                     .with("submitted", s.submitted)
                     .with("completed", s.completed)
@@ -133,7 +150,8 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
                     .with("evictions", s.evictions)
                     .with("cancelled", s.cancelled)
                     .with("workers", manager.worker_count())
-                    .with("queue", manager.queue_len()))
+                    .with("queue", manager.queue_len())
+                    .with("tenants", tenants))
             }
             other => Err(DqError::Protocol(format!("manager: unknown op '{other}'"))),
         }

@@ -1,0 +1,356 @@
+//! Tenant-fair admission: the co-Manager's pending queue, sharded per
+//! client and drained by weighted round-robin.
+//!
+//! The original manager funneled every tenant through one global FIFO,
+//! so a tenant flooding 10k circuits made every other tenant wait behind
+//! the whole backlog (head-of-line starvation — exactly the single-tenant
+//! pathology the paper's Fig. 6 argues against). [`AdmissionQueue`] keeps
+//! one sub-queue per client id and serves them in weighted round-robin
+//! order: each assignment takes one *batch* from the tenant at the
+//! cursor, tenants with weight `w` get `w` consecutive batches per
+//! cycle, and a tenant's backlog depth never delays another tenant's
+//! head-of-line circuit (DESIGN.md §13).
+//!
+//! Queue-wait accounting rides along: every job is stamped on admission
+//! and the dispatch path receives the measured waits for the per-tenant
+//! counters in `ManagerStats`.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::job::CircuitJob;
+use crate::circuit::QuClassiConfig;
+
+/// Default weighted-round-robin weight (batches per service cycle).
+pub const DEFAULT_WEIGHT: u32 = 1;
+
+/// One pending circuit plus its admission timestamp.
+#[derive(Debug, Clone)]
+struct QueuedJob {
+    job: CircuitJob,
+    enqueued: Instant,
+}
+
+/// One tenant's sub-queue.
+#[derive(Debug, Default)]
+struct TenantQueue {
+    jobs: VecDeque<QueuedJob>,
+    /// WRR weight: batches this tenant may take per service cycle.
+    weight: u32,
+    /// Batches taken in the current service cycle.
+    served: u32,
+}
+
+/// The sharded pending queue. Not internally synchronized — the manager
+/// wraps it in the mutex that `work_cv`/`space_cv` pair with, exactly
+/// where the single `VecDeque` used to live (lock order unchanged).
+#[derive(Debug, Default)]
+pub struct AdmissionQueue {
+    tenants: HashMap<u64, TenantQueue>,
+    /// Clients with a non-empty sub-queue, in service order; the front is
+    /// the WRR cursor.
+    rr: VecDeque<u64>,
+    /// Persisted weights for currently-empty tenants (set_weight before
+    /// first submit, or between banks).
+    weights: HashMap<u64, u32>,
+    /// Total queued circuits across all tenants.
+    len: usize,
+}
+
+impl AdmissionQueue {
+    /// Empty queue.
+    pub fn new() -> AdmissionQueue {
+        AdmissionQueue::default()
+    }
+
+    /// Circuits pending across all tenants.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no circuits are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set a tenant's WRR weight (clamped to >= 1). Takes effect from the
+    /// tenant's next service cycle.
+    pub fn set_weight(&mut self, client: u64, weight: u32) {
+        let w = weight.max(1);
+        self.weights.insert(client, w);
+        if let Some(tq) = self.tenants.get_mut(&client) {
+            tq.weight = w;
+        }
+    }
+
+    /// Append a tenant's jobs (one submitted bank, already stamped with
+    /// the client id) to its sub-queue.
+    pub fn push_bank(&mut self, client: u64, jobs: Vec<CircuitJob>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let was_empty = self.tenants.get(&client).map_or(true, |t| t.jobs.is_empty());
+        let weight = self.weights.get(&client).copied().unwrap_or(DEFAULT_WEIGHT);
+        let tq = self.tenants.entry(client).or_insert_with(|| TenantQueue {
+            jobs: VecDeque::new(),
+            weight,
+            served: 0,
+        });
+        self.len += jobs.len();
+        for job in jobs {
+            tq.jobs.push_back(QueuedJob { job, enqueued: now });
+        }
+        if was_empty {
+            self.rr.push_back(client);
+        }
+    }
+
+    /// Re-queue jobs at the *front* of their owners' sub-queues (eviction
+    /// and failed-dispatch recovery): relative order within each tenant
+    /// is preserved, and the wait clock restarts at re-queue time.
+    pub fn requeue_front(&mut self, jobs: Vec<CircuitJob>) {
+        let now = Instant::now();
+        for job in jobs.into_iter().rev() {
+            let client = job.client;
+            let was_empty = self.tenants.get(&client).map_or(true, |t| t.jobs.is_empty());
+            let weight = self.weights.get(&client).copied().unwrap_or(DEFAULT_WEIGHT);
+            let tq = self.tenants.entry(client).or_insert_with(|| TenantQueue {
+                jobs: VecDeque::new(),
+                weight,
+                served: 0,
+            });
+            tq.jobs.push_front(QueuedJob { job, enqueued: now });
+            self.len += 1;
+            if was_empty {
+                self.rr.push_back(client);
+            }
+        }
+    }
+
+    /// Clients in current service order: the WRR cursor first. The
+    /// assigner probes heads in this order, so a tenant whose head cannot
+    /// be placed right now never blocks the tenants behind it.
+    pub fn service_order(&self) -> Vec<u64> {
+        self.rr.iter().copied().collect()
+    }
+
+    /// This tenant's head-of-line circuit.
+    pub fn head_of(&self, client: u64) -> Option<&CircuitJob> {
+        let tq = self.tenants.get(&client)?;
+        tq.jobs.front().map(|qj| &qj.job)
+    }
+
+    /// Take up to `limit` same-`config` circuits from this tenant's queue
+    /// head and charge one WRR credit: a tenant that exhausted its weight
+    /// (or emptied its queue) rotates to the back of the service order.
+    /// Returns the jobs plus their measured queue waits.
+    ///
+    /// The contiguous same-config prefix pops directly (the common,
+    /// homogeneous case is O(batch)); only when the tenant interleaves
+    /// configs does one drain/partition pass scan its sub-queue — O(n) in
+    /// *that tenant's* backlog, never in the global queue (see
+    /// `benches/micro_queue.rs` for the O(n²) packer this replaced).
+    pub fn take_batch(
+        &mut self,
+        client: u64,
+        config: QuClassiConfig,
+        limit: usize,
+    ) -> (Vec<CircuitJob>, Vec<Duration>) {
+        let now = Instant::now();
+        let Some(tq) = self.tenants.get_mut(&client) else {
+            return (Vec::new(), Vec::new());
+        };
+        let limit = limit.max(1);
+        let mut taken: Vec<QueuedJob> = Vec::with_capacity(limit.min(tq.jobs.len()));
+        while taken.len() < limit && tq.jobs.front().is_some_and(|qj| qj.job.config == config) {
+            taken.push(tq.jobs.pop_front().unwrap());
+        }
+        if taken.len() < limit && tq.jobs.iter().any(|qj| qj.job.config == config) {
+            let mut rest = VecDeque::with_capacity(tq.jobs.len());
+            while let Some(qj) = tq.jobs.pop_front() {
+                if taken.len() < limit && qj.job.config == config {
+                    taken.push(qj);
+                } else {
+                    rest.push_back(qj);
+                }
+            }
+            tq.jobs = rest;
+        }
+        self.len -= taken.len();
+
+        // Charge the WRR credit and advance the cursor when this tenant's
+        // cycle allowance is spent or its queue drained.
+        tq.served += 1;
+        let exhausted = tq.served >= tq.weight.max(1);
+        let drained = tq.jobs.is_empty();
+        if drained {
+            self.tenants.remove(&client);
+            self.rr.retain(|&c| c != client);
+        } else if exhausted {
+            tq.served = 0;
+            if self.rr.front() == Some(&client) {
+                self.rr.rotate_left(1);
+            } else {
+                // client served out of cursor order: move it to the back
+                self.rr.retain(|&c| c != client);
+                self.rr.push_back(client);
+            }
+        }
+
+        let mut jobs = Vec::with_capacity(taken.len());
+        let mut waits = Vec::with_capacity(taken.len());
+        for qj in taken {
+            waits.push(now.saturating_duration_since(qj.enqueued));
+            jobs.push(qj.job);
+        }
+        (jobs, waits)
+    }
+
+    /// Remove every queued circuit of `bank` (cancel / unschedulable
+    /// paths); returns how many were drained.
+    pub fn drain_bank(&mut self, bank: u64) -> usize {
+        let mut drained = 0;
+        let mut emptied: Vec<u64> = Vec::new();
+        for (&client, tq) in self.tenants.iter_mut() {
+            let before = tq.jobs.len();
+            tq.jobs.retain(|qj| qj.job.bank != bank);
+            drained += before - tq.jobs.len();
+            if tq.jobs.is_empty() {
+                emptied.push(client);
+            }
+        }
+        for client in emptied {
+            self.tenants.remove(&client);
+            self.rr.retain(|&c| c != client);
+        }
+        self.len -= drained;
+        drained
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(client: u64, bank: u64, id: u64, config: QuClassiConfig) -> CircuitJob {
+        CircuitJob {
+            id,
+            client,
+            bank,
+            index: id as usize,
+            config,
+            thetas: vec![0.0; config.n_params()],
+            data: vec![0.0; config.n_features()],
+        }
+    }
+
+    fn cfg5() -> QuClassiConfig {
+        QuClassiConfig::new(5, 1).unwrap()
+    }
+
+    #[test]
+    fn round_robin_interleaves_tenants() {
+        let mut q = AdmissionQueue::new();
+        let c = cfg5();
+        q.push_bank(1, (0..4).map(|i| job(1, 1, i, c)).collect());
+        q.push_bank(2, (10..14).map(|i| job(2, 2, i, c)).collect());
+        assert_eq!(q.len(), 8);
+        // batches of 2 alternate between tenants
+        let order: Vec<u64> = (0..4)
+            .map(|_| {
+                let client = q.service_order()[0];
+                let (jobs, waits) = q.take_batch(client, c, 2);
+                assert_eq!(jobs.len(), 2);
+                assert_eq!(waits.len(), 2);
+                client
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 1, 2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn weight_gives_consecutive_batches() {
+        let mut q = AdmissionQueue::new();
+        let c = cfg5();
+        q.set_weight(1, 2);
+        q.push_bank(1, (0..6).map(|i| job(1, 1, i, c)).collect());
+        q.push_bank(2, (10..16).map(|i| job(2, 2, i, c)).collect());
+        let order: Vec<u64> = (0..6)
+            .map(|_| {
+                let client = q.service_order()[0];
+                q.take_batch(client, c, 2);
+                client
+            })
+            .collect();
+        // tenant 1 (weight 2) takes two batches per cycle, tenant 2 one;
+        // tenant 1 drains at its third batch, then tenant 2 finishes
+        assert_eq!(order, vec![1, 1, 2, 1, 2, 2]);
+    }
+
+    #[test]
+    fn take_batch_is_order_preserving_across_configs() {
+        // Mixed-config tenant: same-config jobs pack in order, the
+        // remainder keeps its relative order (the old manager pack_batch
+        // invariant, now per tenant).
+        let ca = cfg5();
+        let cb = QuClassiConfig::new(7, 1).unwrap();
+        let mut q = AdmissionQueue::new();
+        q.push_bank(
+            1,
+            vec![job(1, 1, 1, ca), job(1, 1, 2, cb), job(1, 1, 3, ca), job(1, 1, 4, cb), job(1, 1, 5, ca)],
+        );
+        let (jobs, _) = q.take_batch(1, ca, 2);
+        assert_eq!(jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3]);
+        let mut rest = Vec::new();
+        while let Some(h) = q.head_of(1) {
+            let c = h.config;
+            let (js, _) = q.take_batch(1, c, 1);
+            rest.extend(js.into_iter().map(|j| j.id));
+        }
+        assert_eq!(rest, vec![2, 4, 5]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_bank_removes_only_that_bank() {
+        let mut q = AdmissionQueue::new();
+        let c = cfg5();
+        q.push_bank(1, (0..3).map(|i| job(1, 1, i, c)).collect());
+        q.push_bank(1, (10..12).map(|i| job(1, 2, i, c)).collect());
+        q.push_bank(2, (20..22).map(|i| job(2, 3, i, c)).collect());
+        assert_eq!(q.drain_bank(1), 3);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.head_of(1).unwrap().bank, 2);
+        assert_eq!(q.drain_bank(2), 2);
+        assert_eq!(q.drain_bank(2), 0); // idempotent
+        // tenant 1 fully drained: dropped from the service order
+        assert_eq!(q.service_order(), vec![2]);
+    }
+
+    #[test]
+    fn requeue_front_restores_head_position() {
+        let mut q = AdmissionQueue::new();
+        let c = cfg5();
+        q.push_bank(1, (0..4).map(|i| job(1, 1, i, c)).collect());
+        let (taken, _) = q.take_batch(1, c, 2);
+        assert_eq!(taken.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1]);
+        q.requeue_front(taken);
+        // requeued jobs are back at the head, in their original order
+        let (again, _) = q.take_batch(1, c, 4);
+        assert_eq!(again.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
+        // requeue into an empty queue re-registers the tenant
+        q.requeue_front(again);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.service_order(), vec![1]);
+    }
+
+    #[test]
+    fn empty_tenant_take_is_empty() {
+        let mut q = AdmissionQueue::new();
+        let (jobs, waits) = q.take_batch(9, cfg5(), 4);
+        assert!(jobs.is_empty() && waits.is_empty());
+    }
+}

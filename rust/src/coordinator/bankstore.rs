@@ -103,6 +103,23 @@ impl BankStore {
         }
     }
 
+    /// Fail every bank still awaiting results (manager shutdown): blocked
+    /// waiters wake with the reason instead of hanging until their wait
+    /// timeout on work that can no longer arrive. Completed banks keep
+    /// their results for late waiters; failed and cancelled banks keep
+    /// their original outcome.
+    pub fn fail_pending(&self, reason: DqError) {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        let Store { banks, cancelled } = &mut *g;
+        for (bank, b) in banks.iter_mut() {
+            if b.remaining > 0 && b.failed.is_none() && !cancelled.contains(bank) {
+                b.failed = Some(reason.clone());
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
     /// Cancel a bank: its id is recorded for the store's lifetime (so
     /// in-flight results are discarded on arrival and late waiters always
     /// observe `Cancelled`, even after the tombstone is GC'd) and the
@@ -256,6 +273,21 @@ mod tests {
         assert!(matches!(s.wait(9, Duration::from_millis(10)), Err(DqError::Cancelled(_))));
         s.complete(9, 0, 0.5);
         assert_eq!(s.in_flight(), 0, "post-GC result must not resurrect the bank");
+    }
+
+    #[test]
+    fn fail_pending_spares_completed_and_cancelled_banks() {
+        let s = BankStore::new();
+        s.open(11, 1); // completes before the failure sweep
+        s.complete(11, 0, 0.7);
+        s.open(12, 2); // still pending
+        s.open(13, 1); // cancelled
+        s.cancel(13);
+        s.fail_pending(DqError::Cancelled("manager stopped".into()));
+        assert_eq!(s.wait(11, Duration::from_millis(20)).unwrap(), vec![0.7]);
+        let err = s.wait(12, Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, DqError::Cancelled(_)), "{err}");
+        assert!(matches!(s.wait(13, Duration::from_millis(20)), Err(DqError::Cancelled(_))));
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! The co-Manager service: queueing, Algorithm-2 assignment, dispatch,
-//! result routing, liveness, and multi-client bookkeeping.
+//! The co-Manager service: tenant-fair queueing, Algorithm-2 assignment,
+//! event-driven dispatch through per-worker outboxes, result routing,
+//! liveness, and multi-client bookkeeping.
 //!
 //! Transport-agnostic: workers are reached through the [`WorkerChannel`]
 //! trait (TCP RPC in distributed mode, direct calls in `--in-proc` mode);
@@ -7,17 +8,30 @@
 //! handles obtained from [`Manager::session`] (wrapped by the RPC server
 //! in `cluster::tcp` for remote clients).
 //!
+//! Threading model (DESIGN.md §13): one *assigner* thread runs the
+//! Algorithm-2 loop and parks on an event-sequence condvar — submits,
+//! completions, heartbeats, and registrations bump the sequence and wake
+//! it, so a schedulable circuit is dispatched in microseconds instead of
+//! "up to the next 20 ms tick". One *liveness* thread owns the periodic
+//! eviction pass (the only place the old tick survives). Each registered
+//! worker owns an outbox dispatcher thread (`coordinator/outbox.rs`)
+//! draining its private batch queue, so a slow worker never delays
+//! dispatch to a fast one.
+//!
 //! Lock order (outermost first): `queue` → `registry` → `in_flight` →
-//! `batches` → `stats`. The `channels` map is never locked while any of
-//! those are held.
+//! `batches` → `stats`. The `outboxes` map is taken either alone or
+//! directly inside `registry`; the `events` counter is a leaf — taken
+//! momentarily with nothing else held.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use super::admission::AdmissionQueue;
 use super::bankstore::{BankStatus, BankStore};
 use super::job::{CircuitJob, JobId};
+use super::outbox::{Batch, Outbox};
 use super::registry::{Registry, WorkerId, WorkerProfile};
 use super::scheduler;
 use super::session::ClientSession;
@@ -56,6 +70,10 @@ pub struct ManagerConfig {
     /// candidates by `alpha * noise + (1-alpha) * CRU`; `None` is the
     /// paper's CRU-only rule.
     pub noise_aware_alpha: Option<f64>,
+    /// Liveness/eviction pass period. This is the *only* timer left in
+    /// the manager: dispatch is event-driven, the tick exists solely to
+    /// notice workers whose heartbeats stopped (DESIGN.md §13).
+    pub eviction_tick: Duration,
 }
 
 impl Default for ManagerConfig {
@@ -67,8 +85,26 @@ impl Default for ManagerConfig {
             max_queue: 100_000,
             wait_timeout: Duration::from_secs(600),
             noise_aware_alpha: None,
+            eviction_tick: Duration::from_millis(20),
         }
     }
+}
+
+/// Per-tenant counters (multi-tenant observability: who is submitting,
+/// how fast their circuits dispatch, and how long they queue).
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// Circuits this tenant submitted.
+    pub submitted: u64,
+    /// Circuits dispatched to workers on this tenant's behalf.
+    pub dispatched: u64,
+    /// Circuits completed for this tenant.
+    pub completed: u64,
+    /// Total seconds this tenant's circuits spent queued before dispatch
+    /// (mean wait = `wait_total_s / dispatched`).
+    pub wait_total_s: f64,
+    /// Longest single queue wait observed, in seconds.
+    pub wait_max_s: f64,
 }
 
 /// Aggregate counters.
@@ -81,19 +117,35 @@ pub struct ManagerStats {
     pub evictions: u64,
     /// Banks cancelled by clients.
     pub cancelled: u64,
+    /// Per-tenant dispatch and queue-wait counters, keyed by client id.
+    /// Entries persist for the manager's lifetime (one small struct per
+    /// client id ever seen) and [`Manager::stats`] clones the whole map;
+    /// bounded retention for client-churn-heavy deployments is a listed
+    /// ROADMAP follow-up.
+    pub per_tenant: BTreeMap<u64, TenantStats>,
 }
 
 struct Inner {
     cfg: ManagerConfig,
     clock: Arc<dyn Clock>,
     registry: Mutex<Registry>,
-    queue: Mutex<VecDeque<CircuitJob>>,
-    /// Signaled on: new work, capacity freed, shutdown.
+    /// Tenant-fair pending queue (per-client sub-queues, WRR drain).
+    queue: Mutex<AdmissionQueue>,
+    /// Scheduling-event sequence number; every submit, completion,
+    /// heartbeat, registration, requeue, and shutdown bumps it under its
+    /// own lock and notifies `work_cv`, so the assigner never misses a
+    /// wakeup between scan and park.
+    events: Mutex<u64>,
+    /// Signaled on every event-sequence bump (assigner wakeup).
     work_cv: Condvar,
-    /// Signaled when queue length drops (backpressure release).
+    /// Signaled when queue length drops (backpressure release); paired
+    /// with the `queue` mutex.
     space_cv: Condvar,
     banks: BankStore,
-    channels: Mutex<HashMap<WorkerId, Arc<dyn WorkerChannel>>>,
+    /// Per-worker dispatch queues + dispatcher threads. Inserted under
+    /// the `registry` lock at registration (so a selectable worker always
+    /// has an outbox); removed (and stopped) at eviction.
+    outboxes: Mutex<HashMap<WorkerId, Arc<Outbox>>>,
     in_flight: Mutex<HashMap<JobId, CircuitJob>>,
     /// Dispatch batches keyed by their qubit-reservation id (the head
     /// job), for eviction-time re-queueing of whole batches.
@@ -111,6 +163,29 @@ pub struct Manager {
     inner: Arc<Inner>,
 }
 
+/// Weak handle held by manager-owned threads (assigner, liveness, outbox
+/// dispatchers). Upgraded once per loop iteration, so the threads pin
+/// the manager's state only while actively working or parked within one
+/// bounded window — dropping the last user-held [`Manager`] lets
+/// [`Inner`] drop (which sets `stop`), the next upgrade fails, and every
+/// background thread exits instead of leaking.
+pub(crate) struct WeakManager {
+    inner: std::sync::Weak<Inner>,
+}
+
+impl WeakManager {
+    /// A strong handle for one loop iteration, or `None` once every
+    /// user-held clone is gone.
+    pub(crate) fn upgrade(&self) -> Option<Manager> {
+        self.inner.upgrade().map(|inner| Manager { inner })
+    }
+}
+
+/// Backstop for the assigner's park: events drive every wakeup on the
+/// hot path, so this only bounds how long the assigner pins a manager
+/// that was dropped without `shutdown()` before its next upgrade check.
+const ASSIGNER_BACKSTOP: Duration = Duration::from_millis(100);
+
 impl Manager {
     /// Start a co-Manager on the system clock.
     pub fn new(cfg: ManagerConfig) -> Manager {
@@ -124,11 +199,12 @@ impl Manager {
                 cfg,
                 clock,
                 registry: Mutex::new(Registry::new(5.0)),
-                queue: Mutex::new(VecDeque::new()),
+                queue: Mutex::new(AdmissionQueue::new()),
+                events: Mutex::new(0),
                 work_cv: Condvar::new(),
                 space_cv: Condvar::new(),
                 banks: BankStore::new(),
-                channels: Mutex::new(HashMap::new()),
+                outboxes: Mutex::new(HashMap::new()),
                 in_flight: Mutex::new(HashMap::new()),
                 batches: Mutex::new(HashMap::new()),
                 stats: Mutex::new(ManagerStats::default()),
@@ -142,13 +218,39 @@ impl Manager {
             let mut reg = m.inner.registry.lock().unwrap();
             reg.heartbeat_period = m.inner.cfg.heartbeat_period;
         }
-        // Scheduler loop.
-        let m2 = m.clone();
+        // Assigner: the event-driven Algorithm-2 loop. Both threads hold
+        // weak handles so an un-shutdown manager can still be dropped.
+        let weak = m.downgrade();
         std::thread::Builder::new()
-            .name("co-manager".into())
-            .spawn(move || m2.scheduler_loop())
-            .expect("spawn co-manager");
+            .name("co-manager-assign".into())
+            .spawn(move || Manager::assigner_thread(weak))
+            .expect("spawn co-manager assigner");
+        // Liveness: periodic eviction pass (the only remaining timer).
+        let weak = m.downgrade();
+        std::thread::Builder::new()
+            .name("co-manager-live".into())
+            .spawn(move || Manager::liveness_thread(weak))
+            .expect("spawn co-manager liveness");
         m
+    }
+
+    /// Weak handle for a manager-owned thread (see [`WeakManager`]).
+    pub(crate) fn downgrade(&self) -> WeakManager {
+        WeakManager { inner: Arc::downgrade(&self.inner) }
+    }
+
+    /// Bump the scheduling-event sequence and wake the assigner. Callers
+    /// must hold no other manager lock (`events` is a leaf).
+    fn signal_event(&self) {
+        let mut seq = self.inner.events.lock().unwrap();
+        *seq = seq.wrapping_add(1);
+        drop(seq);
+        self.inner.work_cv.notify_all();
+    }
+
+    /// True once [`Manager::shutdown`] ran (outbox threads poll this).
+    pub(crate) fn is_stopped(&self) -> bool {
+        self.inner.stop.load(Ordering::Relaxed)
     }
 
     // ------------------------------------------------------------------
@@ -156,63 +258,36 @@ impl Manager {
     // ------------------------------------------------------------------
 
     /// Quantum Worker Registration (Algorithm 2 lines 2-6) from a typed
-    /// [`WorkerProfile`] — the single registration entry point.
+    /// [`WorkerProfile`] — the single registration entry point. The
+    /// worker's outbox dispatcher starts here; registration is an
+    /// assignment event (pending circuits dispatch immediately).
     pub fn register(&self, profile: WorkerProfile, channel: Arc<dyn WorkerChannel>) -> WorkerId {
         let now = self.inner.clock.now();
-        let id = self.inner.registry.lock().unwrap().register_profile(&profile, now);
-        self.inner.channels.lock().unwrap().insert(id, channel);
-        self.inner.work_cv.notify_all();
-        id
-    }
-
-    /// Registration with only qubit capacity and a CRU sample.
-    #[deprecated(since = "0.2.0", note = "use Manager::register with a WorkerProfile")]
-    pub fn register_worker(
-        &self,
-        max_qubits: usize,
-        cru: f64,
-        channel: Arc<dyn WorkerChannel>,
-    ) -> WorkerId {
-        self.register(WorkerProfile::new(max_qubits).cru(cru), channel)
-    }
-
-    /// Registration with a reported noise estimate (extension §10).
-    #[deprecated(since = "0.2.0", note = "use Manager::register with a WorkerProfile")]
-    pub fn register_worker_profile(
-        &self,
-        max_qubits: usize,
-        cru: f64,
-        noise: f64,
-        channel: Arc<dyn WorkerChannel>,
-    ) -> WorkerId {
-        self.register(WorkerProfile::new(max_qubits).cru(cru).noise(noise), channel)
-    }
-
-    /// Full registration: noise estimate plus the worker's execution
-    /// thread budget.
-    #[deprecated(since = "0.2.0", note = "use Manager::register with a WorkerProfile")]
-    pub fn register_worker_full(
-        &self,
-        max_qubits: usize,
-        cru: f64,
-        noise: f64,
-        threads: usize,
-        channel: Arc<dyn WorkerChannel>,
-    ) -> WorkerId {
-        self.register(
-            WorkerProfile::new(max_qubits).cru(cru).noise(noise).threads(threads),
-            channel,
-        )
+        {
+            // The outbox is inserted under the registry lock so the
+            // assigner can never select a worker whose outbox does not
+            // exist yet (registry → outboxes nesting, DESIGN.md §13).
+            let mut reg = self.inner.registry.lock().unwrap();
+            let id = reg.register_profile(&profile, now);
+            let outbox = Outbox::spawn(id, channel, self.clone());
+            self.inner.outboxes.lock().unwrap().insert(id, outbox);
+            drop(reg);
+            self.signal_event();
+            id
+        }
     }
 
     /// Periodic heartbeat (Algorithm 2 lines 7-11): liveness + CRU. The
     /// manager's own reserve/release bookkeeping remains authoritative
     /// for occupied qubits (worker self-reports race with in-pipe RPCs).
     /// An evicted or never-registered worker gets [`DqError::WorkerLost`]
-    /// and should re-register.
+    /// and should re-register. A fresh CRU sample can change Algorithm
+    /// 2's ranking, so a successful heartbeat wakes the assigner.
     pub fn heartbeat(&self, worker: WorkerId, cru: f64) -> Result<(), DqError> {
         let now = self.inner.clock.now();
-        self.inner.registry.lock().unwrap().heartbeat(worker, cru, now)
+        self.inner.registry.lock().unwrap().heartbeat(worker, cru, now)?;
+        self.signal_event();
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -231,6 +306,14 @@ impl Manager {
         self.inner.next_client.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Set a tenant's weighted-round-robin weight (batches per service
+    /// cycle; default 1, clamped to >= 1). A weight-`w` tenant takes `w`
+    /// consecutive dispatch batches per admission cycle — heavier tenants
+    /// drain faster without ever starving lighter ones.
+    pub fn set_tenant_weight(&self, client: u64, weight: u32) {
+        self.inner.queue.lock().unwrap().set_weight(client, weight);
+    }
+
     /// Submit a bank of circuits; returns the bank id immediately.
     /// Blocks when the pending queue is above the backpressure limit.
     /// (Primitive under [`ClientSession::submit`].)
@@ -240,6 +323,12 @@ impl Manager {
         config: QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<u64, DqError> {
+        // Fail fast after shutdown: the assigner and outboxes are gone
+        // and the pending-bank failure sweep has already run, so a bank
+        // opened now could only hang until its wait timeout.
+        if self.inner.stop.load(Ordering::Relaxed) {
+            return Err(DqError::Cancelled("manager stopped".to_string()));
+        }
         if pairs.is_empty() {
             return Err(DqError::Arity("empty bank".to_string()));
         }
@@ -270,21 +359,35 @@ impl Manager {
                 .unwrap();
             q = guard;
         }
-        for (index, (thetas, data)) in pairs.iter().enumerate() {
-            let id = self.inner.next_job.fetch_add(1, Ordering::Relaxed);
-            q.push_back(CircuitJob {
-                id,
+        let jobs: Vec<CircuitJob> = pairs
+            .iter()
+            .enumerate()
+            .map(|(index, (thetas, data))| CircuitJob {
+                id: self.inner.next_job.fetch_add(1, Ordering::Relaxed),
                 client,
                 bank,
                 index,
                 config,
                 thetas: thetas.clone(),
                 data: data.clone(),
-            });
+            })
+            .collect();
+        q.push_bank(client, jobs);
+        {
+            let mut stats = self.inner.stats.lock().unwrap();
+            stats.submitted += pairs.len() as u64;
+            stats.per_tenant.entry(client).or_default().submitted += pairs.len() as u64;
         }
-        self.inner.stats.lock().unwrap().submitted += pairs.len() as u64;
         drop(q);
-        self.inner.work_cv.notify_all();
+        self.signal_event();
+        // Close the shutdown race: if stop landed after the entry check,
+        // the pending-bank failure sweep may already have run without
+        // seeing this bank — reap it here so the caller gets an error
+        // now instead of a waiter hanging until its timeout.
+        if self.inner.stop.load(Ordering::Relaxed) {
+            self.cancel_bank(bank);
+            return Err(DqError::Cancelled("manager stopped".to_string()));
+        }
         Ok(bank)
     }
 
@@ -337,9 +440,7 @@ impl Manager {
     /// `Cancelled` after the GC.
     pub fn cancel_bank(&self, bank: u64) -> usize {
         let mut q = self.inner.queue.lock().unwrap();
-        let before = q.len();
-        q.retain(|j| j.bank != bank);
-        let drained = before - q.len();
+        let drained = q.drain_bank(bank);
         drop(q);
         if self.inner.banks.cancel(bank) {
             self.inner.stats.lock().unwrap().cancelled += 1;
@@ -350,7 +451,7 @@ impl Manager {
         self.gc_cancelled_banks(&[bank], &in_flight);
         drop(in_flight);
         // Queued work disappeared: release blocked submitters; nothing new
-        // became schedulable, so the work_cv stays quiet.
+        // became schedulable, so the assigner stays parked.
         self.inner.space_cv.notify_all();
         drained
     }
@@ -389,7 +490,7 @@ impl Manager {
         self.inner.registry.lock().unwrap().len()
     }
 
-    /// Circuits currently pending assignment.
+    /// Circuits currently pending assignment (across all tenants).
     pub fn queue_len(&self) -> usize {
         self.inner.queue.lock().unwrap().len()
     }
@@ -399,34 +500,84 @@ impl Manager {
         self.inner.registry.lock().unwrap().total_available()
     }
 
-    /// Stop the scheduler loop and wake all waiters.
+    /// Stop the assigner, liveness, and outbox threads; wake all waiters.
+    /// Banks still awaiting results are failed with
+    /// [`DqError::Cancelled`]: batches stranded in stopped outboxes (or
+    /// never assigned) can no longer complete, and a blocked
+    /// [`Manager::wait_bank`] must not hang until its timeout on them.
     pub fn shutdown(&self) {
         self.inner.stop.store(true, Ordering::Relaxed);
-        self.inner.work_cv.notify_all();
+        self.signal_event();
         self.inner.space_cv.notify_all();
+        let outboxes: Vec<Arc<Outbox>> =
+            self.inner.outboxes.lock().unwrap().values().cloned().collect();
+        for ob in outboxes {
+            ob.stop();
+        }
+        self.inner.banks.fail_pending(DqError::Cancelled("manager stopped".to_string()));
     }
 
     // ------------------------------------------------------------------
-    // scheduler loop (Algorithm 2 line 14-20 + dispatch)
+    // assigner loop (Algorithm 2 line 14-20 + dispatch)
     // ------------------------------------------------------------------
 
-    fn scheduler_loop(&self) {
-        while !self.inner.stop.load(Ordering::Relaxed) {
-            // Liveness pass: evict stale workers, re-queue their circuits.
-            self.evict_and_requeue();
+    /// Event-driven assignment: drain every currently-schedulable batch,
+    /// then park until the event sequence moves. The sequence is read
+    /// *after* the drain, so an event that lands between "queue looked
+    /// empty" and "about to park" is never lost — the assigner re-scans
+    /// instead of sleeping on stale state. The strong handle is
+    /// re-acquired each iteration ([`WeakManager`]), so the thread exits
+    /// once the manager is stopped or dropped.
+    fn assigner_thread(weak: WeakManager) {
+        let mut seen: u64 = 0;
+        loop {
+            let Some(m) = weak.upgrade() else { return };
+            if m.inner.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            while let Some((worker, config, jobs, waits)) = m.next_assignment() {
+                m.dispatch(worker, config, jobs, waits);
+            }
+            let mut seq = m.inner.events.lock().unwrap();
+            if *seq == seen {
+                let (guard, _) = m
+                    .inner
+                    .work_cv
+                    .wait_timeout(seq, ASSIGNER_BACKSTOP)
+                    .unwrap();
+                seq = guard;
+            }
+            seen = *seq;
+        }
+    }
 
-            // Take the next schedulable batch.
-            let batch = self.next_assignment();
-            match batch {
-                Some((worker, config, jobs)) => self.dispatch(worker, config, jobs),
-                None => {
-                    // Nothing schedulable: wait for work/capacity.
-                    let q = self.inner.queue.lock().unwrap();
-                    let _ = self
-                        .inner
-                        .work_cv
-                        .wait_timeout(q, Duration::from_millis(20))
-                        .unwrap();
+    /// Periodic liveness pass: evict stale workers and re-queue their
+    /// circuits. This thread owns the only timer in the manager — the
+    /// dispatch path never waits on it. The tick sleeps in small steps
+    /// without pinning the manager, so both shutdown and drop release
+    /// the thread within milliseconds even under a long eviction tick.
+    fn liveness_thread(weak: WeakManager) {
+        loop {
+            let tick = {
+                let Some(m) = weak.upgrade() else { return };
+                if m.inner.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                m.evict_and_requeue();
+                m.inner.cfg.eviction_tick
+            };
+            let mut slept = Duration::ZERO;
+            while slept < tick {
+                let step = Duration::from_millis(20).min(tick - slept);
+                std::thread::sleep(step);
+                slept += step;
+                match weak.upgrade() {
+                    Some(m) => {
+                        if m.inner.stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                    }
+                    None => return,
                 }
             }
         }
@@ -438,19 +589,24 @@ impl Manager {
         if evicted.is_empty() {
             return;
         }
-        // Prune channels first, on their own — taking the channels lock
-        // while queue/in_flight/stats are held would be the reverse of the
-        // dispatch path's nesting (lock-order hazard).
+        // Stop and drop the evicted workers' outboxes first, on their
+        // own: their dispatcher threads exit after (at most) the batch
+        // already executing; unsent batches are re-queued below through
+        // the orphaned reservations.
         {
-            let mut channels = self.inner.channels.lock().unwrap();
+            let mut outboxes = self.inner.outboxes.lock().unwrap();
             for (wid, _) in &evicted {
-                channels.remove(wid);
+                if let Some(ob) = outboxes.remove(wid) {
+                    ob.stop();
+                }
             }
         }
         let mut q = self.inner.queue.lock().unwrap();
         let mut in_flight = self.inner.in_flight.lock().unwrap();
         let mut batches = self.inner.batches.lock().unwrap();
         let mut stats = self.inner.stats.lock().unwrap();
+        let mut orphans: Vec<CircuitJob> = Vec::new();
+        let mut touched_banks: Vec<u64> = Vec::new();
         for (_wid, orphan_keys) in evicted {
             stats.evictions += 1;
             for key in orphan_keys {
@@ -458,22 +614,34 @@ impl Manager {
                 let members = batches.remove(&key).unwrap_or_else(|| vec![key]);
                 for job_id in members {
                     if let Some(job) = in_flight.remove(&job_id) {
+                        touched_banks.push(job.bank);
+                        // Never resurrect cancelled work.
+                        if self.inner.banks.is_cancelled(job.bank) {
+                            continue;
+                        }
                         stats.requeues += 1;
-                        q.push_front(job);
+                        orphans.push(job);
                     }
                 }
             }
         }
         drop(stats);
         drop(batches);
+        q.requeue_front(orphans);
+        touched_banks.sort_unstable();
+        touched_banks.dedup();
+        self.gc_cancelled_banks(&touched_banks, &in_flight);
         drop(in_flight);
         drop(q);
-        self.inner.work_cv.notify_all();
+        self.signal_event();
     }
 
-    /// Pick the next circuit and worker per Algorithm 2; greedily extend
-    /// the assignment with same-config circuits into one dispatch batch
-    /// (`max_batch = 1` reproduces the paper's per-circuit behavior).
+    /// Pick the next circuit and worker per Algorithm 2, tenant-fairly:
+    /// probe each tenant's head-of-line circuit in weighted-round-robin
+    /// service order and take a same-config batch from the first tenant
+    /// whose head can be placed (`max_batch = 1` reproduces the paper's
+    /// per-circuit behavior). A tenant whose head cannot be placed right
+    /// now is skipped, never blocking the tenants behind it.
     ///
     /// Capacity semantics: a batch executes as ONE unit on the worker
     /// (one PJRT program / one sequential backend job), so it reserves
@@ -482,29 +650,45 @@ impl Manager {
     ///
     /// Unschedulable head-of-line circuits fail their bank and the loop
     /// continues with the remaining queue immediately, instead of
-    /// stalling schedulable work until the next scheduler tick.
+    /// stalling schedulable work.
     #[allow(clippy::type_complexity)]
-    fn next_assignment(&self) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>)> {
+    fn next_assignment(
+        &self,
+    ) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>, Vec<Duration>)> {
         loop {
             let mut q = self.inner.queue.lock().unwrap();
             if q.is_empty() {
                 return None;
             }
             let mut reg = self.inner.registry.lock().unwrap();
-
-            // Head-of-line circuit picks the worker (paper semantics)...
-            let head = q.front().unwrap();
-            let demand = head.demand();
             // An empty pool is not a failure: workers may still join
             // (dynamic registration); park the queue until one does.
             if reg.is_empty() {
                 return None;
             }
-            if !scheduler::can_ever_fit(&reg, demand) {
-                // Unschedulable on the current pool: fail its whole bank
-                // (every sibling shares the config, hence the demand).
-                let bank = q.pop_front().unwrap().bank;
-                q.retain(|j| j.bank != bank);
+            let mut unschedulable: Option<(u64, usize)> = None; // (bank, demand)
+            let mut pick: Option<(u64, WorkerId, QuClassiConfig, usize)> = None;
+            for client in q.service_order() {
+                let Some(head) = q.head_of(client) else { continue };
+                let demand = head.demand();
+                if !scheduler::can_ever_fit(&reg, demand) {
+                    // Unschedulable on the current pool: fail its whole
+                    // bank (every sibling shares the config, hence the
+                    // demand).
+                    unschedulable = Some((head.bank, demand));
+                    break;
+                }
+                let selected = match self.inner.cfg.noise_aware_alpha {
+                    Some(alpha) => scheduler::select_noise_aware(&reg, demand, alpha),
+                    None => scheduler::select(&reg, demand),
+                };
+                if let Some(worker) = selected {
+                    pick = Some((client, worker, head.config, demand));
+                    break;
+                }
+            }
+            if let Some((bank, demand)) = unschedulable {
+                q.drain_bank(bank);
                 drop(reg);
                 drop(q);
                 self.inner.banks.fail(
@@ -516,16 +700,11 @@ impl Manager {
                 self.inner.space_cv.notify_all();
                 continue;
             }
-            let worker = match self.inner.cfg.noise_aware_alpha {
-                Some(alpha) => scheduler::select_noise_aware(&reg, demand, alpha)?,
-                None => scheduler::select(&reg, demand)?,
-            };
-            let config = head.config;
-
-            // ...then pack same-config circuits into the batch, sized by
-            // the worker's registered thread budget so one dispatch
-            // saturates its backend pool without starving co-tenants
-            // (DESIGN.md §11).
+            let (client, worker, config, demand) = pick?;
+            // Pack same-config circuits from this tenant into the batch,
+            // sized by the worker's registered thread budget so one
+            // dispatch saturates its backend pool without starving
+            // co-tenants (DESIGN.md §11).
             let worker_threads = reg.get(worker).map(|w| w.threads).unwrap_or(1);
             let batch_limit = self
                 .inner
@@ -533,9 +712,11 @@ impl Manager {
                 .max_batch
                 .min(worker_threads.saturating_mul(self.inner.cfg.batch_per_thread))
                 .max(1);
-            let jobs = Self::pack_batch(&mut q, config, batch_limit);
+            let (jobs, waits) = q.take_batch(client, config, batch_limit);
             debug_assert!(!jobs.is_empty());
-            // One reservation for the whole batch, keyed by the head job.
+            // One reservation for the whole batch, keyed by the head job;
+            // the registry lock is held from selection through the
+            // reservation, so eviction cannot invalidate the pick.
             let key = jobs[0].id;
             reg.reserve(worker, key, demand).expect("capacity checked");
             let mut in_flight = self.inner.in_flight.lock().unwrap();
@@ -549,101 +730,126 @@ impl Manager {
             drop(reg);
             drop(q);
             self.inner.space_cv.notify_all();
-            return Some((worker, config, jobs));
+            return Some((worker, config, jobs, waits));
         }
     }
 
-    /// Take up to `limit` circuits of `config` from the queue head. The
-    /// contiguous same-config prefix is popped directly (the common,
-    /// homogeneous-queue case costs O(batch)); only when interleaved
-    /// tenants break the run does one drain/partition pass scan the rest —
-    /// O(n) total, replacing the old `VecDeque::remove`-in-a-scan that was
-    /// O(n²) (see `benches/micro_queue.rs`).
-    fn pack_batch(
-        q: &mut VecDeque<CircuitJob>,
+    /// Hand one batch to its worker's outbox (O(1), never blocks on the
+    /// worker) and account the tenant's dispatch + queue-wait counters.
+    fn dispatch(
+        &self,
+        worker: WorkerId,
         config: QuClassiConfig,
-        limit: usize,
-    ) -> Vec<CircuitJob> {
-        let mut jobs = Vec::with_capacity(limit.min(q.len()));
-        while jobs.len() < limit && q.front().is_some_and(|j| j.config == config) {
-            jobs.push(q.pop_front().unwrap());
-        }
-        if jobs.len() < limit && q.iter().any(|j| j.config == config) {
-            let mut rest = VecDeque::with_capacity(q.len());
-            while let Some(job) = q.pop_front() {
-                if jobs.len() < limit && job.config == config {
-                    jobs.push(job);
-                } else {
-                    rest.push_back(job);
+        jobs: Vec<CircuitJob>,
+        waits: Vec<Duration>,
+    ) {
+        // take_batch draws from a single tenant: one client per batch.
+        let client = jobs[0].client;
+        let count = jobs.len() as u64;
+        let outbox = self.inner.outboxes.lock().unwrap().get(&worker).cloned();
+        let rejected = match outbox {
+            Some(ob) => match ob.enqueue(Batch { config, jobs }) {
+                Ok(()) => None,
+                Err(batch) => Some(batch.jobs),
+            },
+            None => Some(jobs),
+        };
+        match rejected {
+            None => {
+                // Stats only for a batch the outbox actually took — a
+                // rejected enqueue leaves no phantom counts. (A batch
+                // stranded when eviction lands *after* acceptance is
+                // still re-counted at its re-dispatch, so `dispatched`
+                // may transiently exceed `completed` during eviction
+                // storms; completion counting stays exact.)
+                let mut stats = self.inner.stats.lock().unwrap();
+                stats.dispatches += 1;
+                let tenant = stats.per_tenant.entry(client).or_default();
+                tenant.dispatched += count;
+                for w in &waits {
+                    let s = w.as_secs_f64();
+                    tenant.wait_total_s += s;
+                    if s > tenant.wait_max_s {
+                        tenant.wait_max_s = s;
+                    }
                 }
             }
-            *q = rest;
+            Some(jobs) => {
+                // Worker evicted between selection and dispatch: re-queue
+                // (a no-op for jobs the evictor already reclaimed)
+                // without recording a dispatch that never happened.
+                self.requeue(worker, jobs);
+            }
         }
-        jobs
     }
 
-    /// Send one batch to a worker on a dispatch thread; completion updates
-    /// the registry, bank store, and wakes the scheduler.
-    fn dispatch(&self, worker: WorkerId, config: QuClassiConfig, jobs: Vec<CircuitJob>) {
-        let channel = match self.inner.channels.lock().unwrap().get(&worker) {
-            Some(c) => c.clone(),
-            None => {
-                // Worker vanished between selection and dispatch: re-queue.
-                self.requeue(worker, jobs);
-                return;
+    /// Execute one batch on the calling thread (an outbox execution
+    /// thread) and route the outcome: results into the bank store, short
+    /// payloads into a protocol failure, transport errors into a
+    /// re-queue.
+    pub(crate) fn run_batch(&self, worker: WorkerId, channel: &dyn WorkerChannel, batch: Batch) {
+        let Batch { config, jobs } = batch;
+        let pairs: Vec<CircuitPair> =
+            jobs.iter().map(|j| (j.thetas.clone(), j.data.clone())).collect();
+        match channel.execute(&config, &pairs) {
+            Ok(fids) if fids.len() != jobs.len() => {
+                // A short/overlong fids payload is a protocol violation:
+                // the per-circuit mapping is unknown, so fail every bank
+                // in the batch rather than guess (or hang a waiting
+                // client).
+                let err = DqError::Protocol(format!(
+                    "worker w{worker} returned {} fids for {} circuits",
+                    fids.len(),
+                    jobs.len()
+                ));
+                crate::log_warn!("manager", "{err}");
+                self.abandon_batch(worker, &jobs, err);
             }
-        };
-        self.inner.stats.lock().unwrap().dispatches += 1;
-        let m = self.clone();
-        std::thread::Builder::new()
-            .name(format!("dispatch-w{worker}"))
-            .spawn(move || {
-                let pairs: Vec<CircuitPair> =
-                    jobs.iter().map(|j| (j.thetas.clone(), j.data.clone())).collect();
-                match channel.execute(&config, &pairs) {
-                    Ok(fids) if fids.len() != jobs.len() => {
-                        // A short/overlong fids payload is a protocol
-                        // violation: the per-circuit mapping is unknown, so
-                        // fail every bank in the batch rather than guess
-                        // (or hang a waiting client).
-                        let err = DqError::Protocol(format!(
-                            "worker w{worker} returned {} fids for {} circuits",
-                            fids.len(),
-                            jobs.len()
-                        ));
-                        crate::log_warn!("manager", "{err}");
-                        m.abandon_batch(worker, &jobs, err);
-                    }
-                    Ok(fids) => {
-                        // Order matters: bump the completion counter before
-                        // banks.complete() can wake a waiting client, so a
-                        // stats read right after wait_bank() is consistent.
-                        m.inner.stats.lock().unwrap().completed += jobs.len() as u64;
-                        let key = jobs[0].id;
-                        let mut reg = m.inner.registry.lock().unwrap();
-                        let mut in_flight = m.inner.in_flight.lock().unwrap();
-                        reg.release(worker, key);
-                        m.inner.batches.lock().unwrap().remove(&key);
-                        for (job, fid) in jobs.iter().zip(fids.iter()) {
-                            in_flight.remove(&job.id);
-                            m.inner.banks.complete(job.bank, job.index, *fid);
-                        }
-                        m.gc_cancelled_banks(&distinct_banks(&jobs), &in_flight);
-                        drop(in_flight);
-                        drop(reg);
-                        m.inner.work_cv.notify_all();
-                    }
-                    Err(e) => {
-                        crate::log_warn!(
-                            "manager",
-                            "dispatch to w{worker} failed ({e}); re-queueing {} circuits",
-                            jobs.len()
-                        );
-                        m.requeue(worker, jobs);
+            Ok(fids) => {
+                let key = jobs[0].id;
+                let mut reg = self.inner.registry.lock().unwrap();
+                let mut in_flight = self.inner.in_flight.lock().unwrap();
+                reg.release(worker, key);
+                self.inner.batches.lock().unwrap().remove(&key);
+                // Only jobs still present in the in-flight map are
+                // credited to this dispatch: a missing entry means the
+                // evictor reclaimed the job (stalled-heartbeat race) and
+                // the re-dispatch accounts for it instead, keeping
+                // completed == submitted. Fidelities are recorded for
+                // the whole batch regardless — first result wins, the
+                // bank store ignores duplicates.
+                let mut landed: u64 = 0;
+                for job in &jobs {
+                    if in_flight.remove(&job.id).is_some() {
+                        landed += 1;
                     }
                 }
-            })
-            .expect("spawn dispatch");
+                {
+                    // Order matters: bump the completion counter before
+                    // banks.complete() can wake a waiting client, so a
+                    // stats read right after wait_bank() is consistent.
+                    let mut stats = self.inner.stats.lock().unwrap();
+                    stats.completed += landed;
+                    stats.per_tenant.entry(jobs[0].client).or_default().completed += landed;
+                }
+                for (job, fid) in jobs.iter().zip(fids.iter()) {
+                    self.inner.banks.complete(job.bank, job.index, *fid);
+                }
+                self.gc_cancelled_banks(&distinct_banks(&jobs), &in_flight);
+                drop(in_flight);
+                drop(reg);
+                // Capacity freed: wake the assigner.
+                self.signal_event();
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "manager",
+                    "dispatch to w{worker} failed ({e}); re-queueing {} circuits",
+                    jobs.len()
+                );
+                self.requeue(worker, jobs);
+            }
+        }
     }
 
     /// Drop a batch whose results are unusable: release the reservation,
@@ -667,7 +873,7 @@ impl Manager {
             // no-op for cancelled banks (fail never overrides a cancel)
             self.inner.banks.fail(bank, err.clone());
         }
-        self.inner.work_cv.notify_all();
+        self.signal_event();
     }
 
     fn requeue(&self, worker: WorkerId, jobs: Vec<CircuitJob>) {
@@ -680,8 +886,15 @@ impl Manager {
         }
         let banks = distinct_banks(&jobs);
         let mut stats = self.inner.stats.lock().unwrap();
+        let mut keep: Vec<CircuitJob> = Vec::with_capacity(jobs.len());
         for job in jobs {
-            in_flight.remove(&job.id);
+            // A missing in-flight entry means the evictor raced us and
+            // already reclaimed (and re-queued) this job — re-adding our
+            // copy would execute the circuit twice and inflate every
+            // counter it touches.
+            if in_flight.remove(&job.id).is_none() {
+                continue;
+            }
             // Never resurrect a cancelled bank's work: its queued jobs
             // were drained at cancel time, so a failed/evicted batch is
             // simply dropped.
@@ -689,14 +902,15 @@ impl Manager {
                 continue;
             }
             stats.requeues += 1;
-            q.push_front(job);
+            keep.push(job);
         }
         drop(stats);
+        q.requeue_front(keep);
         self.gc_cancelled_banks(&banks, &in_flight);
         drop(in_flight);
         drop(reg);
         drop(q);
-        self.inner.work_cv.notify_all();
+        self.signal_event();
     }
 }
 
@@ -836,23 +1050,6 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_register_shims_still_work() {
-        let m = Manager::new(ManagerConfig::default());
-        #[allow(deprecated)]
-        {
-            m.register_worker(5, 0.1, Arc::new(SimChannel));
-            m.register_worker_profile(5, 0.1, 0.0, Arc::new(SimChannel));
-            m.register_worker_full(5, 0.1, 0.0, 2, Arc::new(SimChannel));
-        }
-        assert_eq!(m.worker_count(), 3);
-        let cfg = QuClassiConfig::new(5, 1).unwrap();
-        let pairs = pairs_for(&cfg, 6);
-        let fids = m.session().execute(cfg, &pairs).unwrap();
-        assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
-        m.shutdown();
-    }
-
-    #[test]
     fn multiple_workers_share_load() {
         let m = Manager::new(ManagerConfig { max_batch: 2, ..Default::default() });
         for _ in 0..4 {
@@ -899,8 +1096,7 @@ mod tests {
     fn unschedulable_bank_does_not_stall_schedulable_work() {
         // Head-of-line: an oversized bank in front of a schedulable one
         // must fail fast while the schedulable bank completes in the same
-        // scheduler pass (satellite fix: loop instead of bail to the next
-        // 20 ms tick).
+        // assignment pass.
         let m = Manager::new(ManagerConfig::default());
         m.register(WorkerProfile::new(5), Arc::new(SimChannel));
         let cfg_big = QuClassiConfig::new(9, 1).unwrap();
@@ -966,6 +1162,25 @@ mod tests {
         t1.join().unwrap();
         t2.join().unwrap();
         assert_eq!(m.stats().completed, 40);
+        m.shutdown();
+    }
+
+    #[test]
+    fn per_tenant_stats_track_dispatch_and_wait() {
+        let m = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
+        m.register(WorkerProfile::new(5), Arc::new(SimChannel));
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let a = m.session();
+        let b = m.session();
+        let fa = a.execute(cfg, &pairs_for(&cfg, 8)).unwrap();
+        let fb = b.execute(cfg, &pairs_for(&cfg, 4)).unwrap();
+        assert_eq!((fa.len(), fb.len()), (8, 4));
+        let stats = m.stats();
+        let ta = &stats.per_tenant[&a.id()];
+        let tb = &stats.per_tenant[&b.id()];
+        assert_eq!((ta.submitted, ta.dispatched, ta.completed), (8, 8, 8));
+        assert_eq!((tb.submitted, tb.dispatched, tb.completed), (4, 4, 4));
+        assert!(ta.wait_total_s >= 0.0 && ta.wait_max_s >= 0.0);
         m.shutdown();
     }
 
@@ -1131,33 +1346,5 @@ mod tests {
         let fids = handle.wait().unwrap();
         assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         m.shutdown();
-    }
-
-    #[test]
-    fn pack_batch_is_order_preserving_across_configs() {
-        let cfg_a = QuClassiConfig::new(5, 1).unwrap();
-        let cfg_b = QuClassiConfig::new(7, 1).unwrap();
-        let mk = |id: u64, config: QuClassiConfig| CircuitJob {
-            id,
-            client: 1,
-            bank: 1,
-            index: id as usize,
-            config,
-            thetas: vec![0.0; config.n_params()],
-            data: vec![0.0; config.n_features()],
-        };
-        let mut q: VecDeque<CircuitJob> = [
-            mk(1, cfg_a),
-            mk(2, cfg_b),
-            mk(3, cfg_a),
-            mk(4, cfg_b),
-            mk(5, cfg_a),
-        ]
-        .into_iter()
-        .collect();
-        let jobs = Manager::pack_batch(&mut q, cfg_a, 2);
-        assert_eq!(jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3]);
-        // the remainder keeps its relative order
-        assert_eq!(q.iter().map(|j| j.id).collect::<Vec<_>>(), vec![2, 4, 5]);
     }
 }

@@ -19,17 +19,27 @@
 //! ([`session::ClientSession`] → [`session::BankHandle`] futures backed
 //! by [`bankstore::BankStore`]); every fallible API returns
 //! [`crate::error::DqError`].
+//!
+//! The dispatch path is event-driven and sharded (DESIGN.md §13):
+//! tenant-fair admission lives in [`admission::AdmissionQueue`] (one
+//! sub-queue per client, weighted round-robin drain), and every worker
+//! owns a private outbox dispatcher thread, so a slow worker never
+//! blocks dispatch to a fast one and a flooding tenant never starves a
+//! light one.
 
+pub mod admission;
 pub mod bankstore;
 pub mod job;
 pub mod manager;
+mod outbox;
 pub mod registry;
 pub mod scheduler;
 pub mod session;
 
+pub use admission::AdmissionQueue;
 pub use bankstore::BankStatus;
 pub use job::{CircuitJob, JobId};
-pub use manager::{Manager, ManagerConfig, WorkerChannel};
+pub use manager::{Manager, ManagerConfig, ManagerStats, TenantStats, WorkerChannel};
 pub use registry::{Registry, WorkerId, WorkerProfile, WorkerState};
 pub use scheduler::{select_worker, SchedulerKind};
 pub use session::{BankHandle, ClientSession, SessionOps};

@@ -1,0 +1,152 @@
+//! Per-worker outboxes: one dispatcher thread per registered worker,
+//! draining that worker's dedicated batch queue.
+//!
+//! The original manager spawned execution threads from the scheduler
+//! loop itself, coupling every tenant's dispatch latency to every
+//! worker's spawn and RPC cost. An [`Outbox`] makes the isolation
+//! structural: the assigner enqueues a batch and returns immediately
+//! (microseconds); the worker's own dispatcher thread picks batches up
+//! in FIFO order and runs each `WorkerChannel::execute` on a transient
+//! execution thread, so batches holding concurrent reservations on a
+//! big worker genuinely overlap, and a stalled worker delays only its
+//! own queue — never dispatch to its neighbors (DESIGN.md §13).
+//!
+//! Lifecycle: spawned at registration, stopped at eviction or manager
+//! shutdown. A stopped outbox's unsent batches are *not* executed; the
+//! eviction path re-queues them through the registry's orphaned
+//! reservations. The dispatcher exits promptly on stop; executions it
+//! already spawned finish independently, and their stale results are
+//! absorbed by the bank store's duplicate-completion guard plus the
+//! manager's landed-count accounting.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::job::CircuitJob;
+use super::manager::{Manager, WeakManager, WorkerChannel};
+use super::registry::WorkerId;
+use crate::circuit::QuClassiConfig;
+
+/// One dispatch unit: same-config circuits executed as a single job on
+/// the worker (one qubit reservation, keyed by the head job).
+pub(crate) struct Batch {
+    pub config: QuClassiConfig,
+    pub jobs: Vec<CircuitJob>,
+}
+
+/// A worker's dispatch queue plus its dedicated dispatcher thread.
+pub(crate) struct Outbox {
+    worker: WorkerId,
+    channel: Arc<dyn WorkerChannel>,
+    queue: Mutex<VecDeque<Batch>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+/// Backstop poll period for the stop flag; enqueues wake the dispatcher
+/// immediately via the condvar, so this bounds only shutdown latency.
+const STOP_POLL: Duration = Duration::from_millis(100);
+
+impl Outbox {
+    /// Create the outbox and start its dispatcher thread. The thread
+    /// holds only a weak manager handle (upgraded per iteration for
+    /// completion routing) and exits when the outbox (eviction) or the
+    /// manager (shutdown, or last user handle dropped) stops.
+    pub fn spawn(
+        worker: WorkerId,
+        channel: Arc<dyn WorkerChannel>,
+        manager: Manager,
+    ) -> Arc<Outbox> {
+        let outbox = Arc::new(Outbox {
+            worker,
+            channel,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let ob = outbox.clone();
+        let weak = manager.downgrade();
+        drop(manager); // the dispatcher must not pin the manager's state
+        std::thread::Builder::new()
+            .name(format!("outbox-w{worker}"))
+            .spawn(move || ob.run(weak))
+            .expect("spawn outbox dispatcher");
+        outbox
+    }
+
+    /// Queue a batch for dispatch and wake the dispatcher. O(1); never
+    /// blocks on the worker. When the outbox has already been stopped
+    /// (eviction raced the assigner) the batch is handed back untouched
+    /// for the caller to re-queue; the stop flag is checked under the
+    /// queue lock, so an `Ok` means the batch was enqueued strictly
+    /// before the stop and is covered by the evictor's in-flight
+    /// reclaim.
+    pub fn enqueue(&self, batch: Batch) -> Result<(), Batch> {
+        let mut q = self.queue.lock().expect("outbox poisoned");
+        if self.stop.load(Ordering::Relaxed) {
+            return Err(batch);
+        }
+        q.push_back(batch);
+        drop(q);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Stop the dispatcher (eviction / shutdown). Idempotent; unsent
+    /// batches stay queued for the evictor's orphan re-queue pass. The
+    /// flag is set under the queue lock so it serializes with
+    /// [`Outbox::enqueue`]'s check.
+    pub fn stop(&self) {
+        let q = self.queue.lock().expect("outbox poisoned");
+        self.stop.store(true, Ordering::Relaxed);
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    fn stopped(&self, manager: &Manager) -> bool {
+        self.stop.load(Ordering::Relaxed) || manager.is_stopped()
+    }
+
+    fn run(&self, weak: WeakManager) {
+        loop {
+            // One strong handle per iteration: the dispatcher pins the
+            // manager for at most one park window, so a manager dropped
+            // without shutdown() still gets to run its Drop.
+            let Some(manager) = weak.upgrade() else { return };
+            if self.stopped(&manager) {
+                return;
+            }
+            let batch = {
+                let mut q = self.queue.lock().expect("outbox poisoned");
+                if q.is_empty() {
+                    let (guard, _) = self.cv.wait_timeout(q, STOP_POLL).expect("outbox wait");
+                    q = guard;
+                }
+                if self.stopped(&manager) {
+                    return;
+                }
+                q.pop_front()
+            };
+            if let Some(batch) = batch {
+                // Every queued batch holds its own qubit reservation —
+                // multi-tenant packing onto a big worker promises
+                // *concurrent* execution, so the dispatcher must never
+                // serialize one batch behind another. Execution runs on
+                // a transient thread per batch; outstanding batches per
+                // worker are bounded by its capacity / demand, so the
+                // spawn rate is bounded by the worker's own completion
+                // rate, and the assigner never pays spawn or RPC
+                // latency.
+                let m = manager.clone();
+                let channel = self.channel.clone();
+                let worker = self.worker;
+                std::thread::Builder::new()
+                    .name(format!("exec-w{worker}"))
+                    .spawn(move || m.run_batch(worker, channel.as_ref(), batch))
+                    .expect("spawn batch execution");
+            }
+        }
+    }
+}

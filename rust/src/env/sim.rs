@@ -168,7 +168,11 @@ struct SimState {
     registry: Registry,
     worker_ids: Vec<WorkerId>,
     models: BTreeMap<WorkerId, WorkerModel>,
-    pending: VecDeque<SimJob>,
+    /// Per-client pending sub-queues (tenant-fair admission parity with
+    /// the live manager's `AdmissionQueue`, DESIGN.md §13).
+    pending: BTreeMap<usize, VecDeque<SimJob>>,
+    /// Clients with a non-empty sub-queue, in round-robin service order.
+    rr: VecDeque<usize>,
     env: EnvParams,
     calib: Calibration,
     tenancy: Tenancy,
@@ -186,6 +190,32 @@ impl SimState {
         self.clients
             .iter()
             .position(|c| c.unsubmitted > 0 || c.in_flight > 0)
+    }
+
+    /// Admit one circuit to its client's sub-queue.
+    fn enqueue(&mut self, job: SimJob) {
+        let client = job.client;
+        let was_empty = self.pending.get(&client).map_or(true, |q| q.is_empty());
+        self.pending.entry(client).or_default().push_back(job);
+        if was_empty {
+            self.rr.push_back(client);
+        }
+    }
+
+    /// Pop `client`'s head-of-line circuit and advance the round-robin
+    /// cursor (served tenants rotate to the back; drained tenants leave
+    /// the service order).
+    fn pop_head(&mut self, client: usize) -> Option<SimJob> {
+        let q = self.pending.get_mut(&client)?;
+        let job = q.pop_front();
+        if q.is_empty() {
+            self.pending.remove(&client);
+            self.rr.retain(|&c| c != client);
+        } else {
+            self.rr.retain(|&c| c != client);
+            self.rr.push_back(client);
+        }
+        job
     }
 
     /// Algorithm-2 selection, restricted by tenancy.
@@ -229,37 +259,47 @@ impl SimState {
 }
 
 /// Try to place pending circuits; schedules completion events.
+///
+/// Tenant-fair parity with the live manager: each pass probes every
+/// client's head-of-line circuit in round-robin service order (a blocked
+/// head skips to the next tenant instead of stalling it), and passes
+/// repeat until no circuit can be placed — work-conserving, like the old
+/// global-FIFO scan, but with the manager's admission order.
 fn try_assign(des: &mut Des<SimState>, st: &mut SimState) {
-    let mut scanned = 0;
-    while scanned < st.pending.len() {
-        let job = st.pending[scanned].clone();
-        match st.select(&job) {
-            None => {
-                scanned += 1; // head-of-line blocked; later jobs may still fit elsewhere
-            }
-            Some(worker) => {
-                st.pending.remove(scanned);
-                let demand = job.config.qubit_demand();
-                st.registry
-                    .reserve(worker, job.seq, demand)
-                    .expect("selection guaranteed capacity");
-                let s = st.service_time(worker, &job.config);
-                let now = des.now();
-                let model = st.models.get_mut(&worker).unwrap();
-                model.concurrent += 1;
-                let dt = if st.env.fifo {
-                    // sequential backend: start when the backend frees up
-                    let start = model.free_at.max(now);
-                    model.free_at = start + s;
-                    (start + s) - now
-                } else {
-                    s
-                };
-                let job2 = job.clone();
-                des.schedule(dt, move |des, st| {
-                    complete(des, st, worker, job2);
-                });
-            }
+    loop {
+        let mut assigned = false;
+        let order: Vec<usize> = st.rr.iter().copied().collect();
+        for client in order {
+            let Some(job) = st.pending.get(&client).and_then(|q| q.front()).cloned() else {
+                continue;
+            };
+            let Some(worker) = st.select(&job) else {
+                continue; // this tenant's head is blocked; try the next
+            };
+            st.pop_head(client);
+            let demand = job.config.qubit_demand();
+            st.registry
+                .reserve(worker, job.seq, demand)
+                .expect("selection guaranteed capacity");
+            let s = st.service_time(worker, &job.config);
+            let now = des.now();
+            let model = st.models.get_mut(&worker).unwrap();
+            model.concurrent += 1;
+            let dt = if st.env.fifo {
+                // sequential backend: start when the backend frees up
+                let start = model.free_at.max(now);
+                model.free_at = start + s;
+                (start + s) - now
+            } else {
+                s
+            };
+            des.schedule(dt, move |des, st| {
+                complete(des, st, worker, job);
+            });
+            assigned = true;
+        }
+        if !assigned {
+            break;
         }
     }
 }
@@ -296,7 +336,7 @@ fn start_round(des: &mut Des<SimState>, st: &mut SimState, client: usize) {
         for _ in 0..bank {
             let seq = st.next_job;
             st.next_job += 1;
-            st.pending.push_back(SimJob { client, config, seq });
+            st.enqueue(SimJob { client, config, seq });
         }
         try_assign(des, st);
     });
@@ -360,7 +400,8 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
         registry,
         worker_ids,
         models,
-        pending: VecDeque::new(),
+        pending: BTreeMap::new(),
+        rr: VecDeque::new(),
         env: cfg.env,
         calib: cfg.calib.clone(),
         tenancy: cfg.tenancy.clone(),

@@ -1,5 +1,11 @@
 //! Worker process runtime: execute-RPC server + registration + heartbeat
 //! loop (the distributed deployment path).
+//!
+//! Manager-side, each registered worker gets a dedicated outbox
+//! dispatcher (DESIGN.md §13): `execute` RPCs arrive one batch at a time
+//! from that thread, and each heartbeat doubles as a scheduling event
+//! (a fresh CRU sample can change Algorithm 2's ranking immediately,
+//! not at the next poll tick).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
