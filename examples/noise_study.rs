@@ -74,7 +74,13 @@ fn main() -> Result<(), String> {
     for (label, alpha) in [("CRU-only (paper)", None), ("noise-aware α=1.0", Some(1.0))] {
         let cluster = InProcCluster::builder()
             .workers_with_noise(&profiles)
-            .manager_config(ManagerConfig { noise_aware_alpha: alpha, ..Default::default() })
+            // steal=false: the comparison is about *placement*, so an
+            // idle noisy worker must not steal a clean worker's batches
+            .manager_config(ManagerConfig {
+                noise_aware_alpha: alpha,
+                steal: false,
+                ..Default::default()
+            })
             .build()?;
         let (model, acc) = train_on(&cluster, 42)?;
         cluster.shutdown();

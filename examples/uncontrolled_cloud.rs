@@ -57,6 +57,9 @@ fn main() {
         calib: calib.clone(),
         heartbeat_period: 5.0,
         tenancy: Tenancy::MultiTenant,
+        // steal off for the heartbeat ablation: backlog stealing would
+        // mask the CRU-freshness effect these rows isolate
+        steal: false,
         seed,
     };
     // CRU-aware (the real scheduler): queue depth feeds CRU, so the slow
@@ -76,4 +79,16 @@ fn main() {
         "\n(trend check: fresher CRU -> better balancing on skewed pools; \
          the paper's 5s period sits between the extremes)"
     );
+
+    // Second ablation: work stealing between worker backlogs. Stale CRU
+    // binds circuits to the slow backend between heartbeats; an idle
+    // fast worker stealing the slow worker's bound-but-unstarted
+    // circuits recovers most of what fresher heartbeats would have
+    // bought (DESIGN.md §14).
+    let mut cfg_steal = skewed(11);
+    cfg_steal.steal = true;
+    let steal_on = sim::simulate(&cfg_steal, &jobs);
+    println!("\n== ablation: backlog work stealing (same skewed pool, 5s heartbeats) ==");
+    println!("steal off          : runtime {:.1}s ({:.2} circ/s)", aware.makespan, aware.cps);
+    println!("steal on           : runtime {:.1}s ({:.2} circ/s)", steal_on.makespan, steal_on.cps);
 }

@@ -29,7 +29,14 @@ fn mean_abs_error(alpha: Option<f64>, n: usize) -> (f64, f64, f64) {
             (10, Some(noisy)),
             (10, Some(noisy)),
         ])
-        .manager_config(ManagerConfig { noise_aware_alpha: alpha, ..Default::default() })
+        // steal=false isolates the placement policy under ablation: an
+        // idle noisy worker must not blur the alpha rows by stealing a
+        // clean worker's queued batches (DESIGN.md §14).
+        .manager_config(ManagerConfig {
+            noise_aware_alpha: alpha,
+            steal: false,
+            ..Default::default()
+        })
         .build()
         .expect("cluster");
     let cfg = QuClassiConfig::new(5, 2).unwrap();

@@ -1,20 +1,26 @@
 //! Macro-benchmark: co-Manager dispatch throughput across a worker ×
-//! tenant grid — the perf gate for the event-driven dispatch path.
+//! tenant grid — the perf gate for the event-driven dispatch path —
+//! plus a skewed-load case (one slow worker + three fast) run with
+//! work stealing on and off.
 //!
 //! Every cell builds a fresh manager, registers `W` instant
 //! `MockChannel` workers, and runs `T` tenant threads that each submit
 //! banks through the session API until their circuit budget is spent.
 //! The channel does no quantum work, so the measured circuits/second is
 //! pure coordination cost: admission, Algorithm-2 selection, outbox
-//! hand-off, completion routing, and wakeups.
+//! hand-off, completion routing, and wakeups. The skewed case swaps in
+//! one 2 ms-per-batch worker whose low CRU attracts bindings — the
+//! binding-time skew `Manager::steal_for` exists to fix (DESIGN.md
+//! §14) — and is gated on steal-on throughput staying at or above
+//! steal-off.
 //!
 //! Results are serialized via `wire/json` to `BENCH_coordinator.json`
-//! (override with `DQ_BENCH_OUT`), seeding the repo's perf trajectory.
-//! When a committed baseline exists (`DQ_BENCH_BASELINE`, default
-//! `../bench/baseline.json` relative to the crate root), any cell whose
-//! throughput falls below **half** the baseline value fails the run —
-//! the CI `bench-smoke` regression gate, with the 2x factor absorbing
-//! shared-runner noise.
+//! (override with `DQ_BENCH_OUT`) with a `skewed` steal-on/off series,
+//! seeding the repo's perf trajectory. When a committed baseline exists
+//! (`DQ_BENCH_BASELINE`, default `../bench/baseline.json` relative to
+//! the crate root), any cell whose throughput falls below **half** the
+//! baseline value fails the run — the CI `bench-smoke` regression gate,
+//! with the 2x factor absorbing shared-runner noise.
 //!
 //! ```bash
 //! cargo bench --bench bench_coordinator_scale          # full window
@@ -22,7 +28,7 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use dqulearn::benchlib::{BenchConfig, Table};
 use dqulearn::circuit::QuClassiConfig;
@@ -41,6 +47,22 @@ impl WorkerChannel for MockChannel {
         _config: &QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<Vec<f32>, DqError> {
+        Ok(vec![0.5; pairs.len()])
+    }
+}
+
+/// Fixed per-batch service time: the skewed-load case's slow worker.
+struct SlowChannel {
+    delay: Duration,
+}
+
+impl WorkerChannel for SlowChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        std::thread::sleep(self.delay);
         Ok(vec![0.5; pairs.len()])
     }
 }
@@ -99,6 +121,81 @@ fn run_cell(workers: usize, tenants: usize, circuits_per_tenant: usize, bank: us
     }
 }
 
+/// One skewed-load measurement (steal on or off).
+struct SkewCell {
+    steal: bool,
+    circuits: usize,
+    secs: f64,
+    throughput: f64,
+    steals: u64,
+}
+
+/// Skewed pool: one 20-qubit worker at 2 ms/batch whose CRU 0.0 makes
+/// Algorithm 2 prefer it, three instant 20-qubit workers at CRU 0.1.
+/// Without stealing, every bank's first batches serialize on the slow
+/// worker's outbox; with stealing, the idle fast workers drain them.
+fn run_skewed_cell(steal: bool, circuits_per_tenant: usize, bank: usize) -> SkewCell {
+    let manager = Manager::new(ManagerConfig { max_batch: 8, steal, ..Default::default() });
+    manager.register(
+        WorkerProfile::new(20).cru(0.0),
+        Arc::new(SlowChannel { delay: Duration::from_millis(2) }),
+    );
+    for _ in 0..3 {
+        manager.register(WorkerProfile::new(20).cru(0.1), Arc::new(MockChannel));
+    }
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs: Vec<CircuitPair> = (0..bank)
+        .map(|_| (vec![0.1; cfg.n_params()], vec![0.2; cfg.n_features()]))
+        .collect();
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let m = manager.clone();
+            let pairs = pairs.clone();
+            std::thread::spawn(move || {
+                let session = m.session();
+                let mut left = circuits_per_tenant;
+                while left > 0 {
+                    let n = left.min(pairs.len());
+                    let fids = session.execute(cfg, &pairs[..n]).expect("skewed bank failed");
+                    assert_eq!(fids.len(), n);
+                    left -= n;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("tenant thread panicked");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let stats = manager.stats();
+    manager.shutdown();
+
+    let circuits = 2 * circuits_per_tenant;
+    SkewCell {
+        steal,
+        circuits,
+        secs,
+        throughput: circuits as f64 / secs.max(1e-9),
+        steals: stats.steals,
+    }
+}
+
+fn skew_to_wire(cells: &[SkewCell]) -> Vec<Value> {
+    cells
+        .iter()
+        .map(|c| {
+            Value::obj()
+                .with("steal", c.steal)
+                .with("circuits", c.circuits)
+                .with("secs", c.secs)
+                .with("throughput", c.throughput)
+                .with("steals", c.steals)
+        })
+        .collect()
+}
+
 fn cells_to_wire(mode: &str, cells: &[Cell]) -> Value {
     let rows: Vec<Value> = cells
         .iter()
@@ -116,6 +213,32 @@ fn cells_to_wire(mode: &str, cells: &[Cell]) -> Value {
         .with("bench", "coordinator_scale")
         .with("mode", mode)
         .with("cells", rows)
+}
+
+/// Baseline gate for the skewed steal series (same half-the-floor rule
+/// as the grid cells, matched by the steal flag).
+fn skew_regressions(cells: &[SkewCell], baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(base) = baseline.get("skewed").and_then(Value::as_arr) else {
+        return failures;
+    };
+    for b in base {
+        let (Some(steal), Some(thr)) = (
+            b.get("steal").and_then(Value::as_bool),
+            b.get("throughput").and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        if let Some(c) = cells.iter().find(|c| c.steal == steal) {
+            if c.throughput < thr / 2.0 {
+                failures.push(format!(
+                    "skewed steal={steal}: {:.0} c/s < half of baseline {thr:.0} c/s",
+                    c.throughput
+                ));
+            }
+        }
+    }
+    failures
 }
 
 /// Compare against the committed baseline; returns the failing cells.
@@ -176,12 +299,48 @@ fn main() {
     }
     print!("{}", table.render());
 
-    // Serialize the trajectory point.
+    // Skewed load: 1 slow + 3 fast workers, steal off vs on. A smaller
+    // circuit budget keeps the steal-off case (bottlenecked on the slow
+    // worker) inside the smoke window.
+    let skew_budget = circuits_per_tenant / 2;
+    let skew_cells = vec![
+        run_skewed_cell(false, skew_budget, bank),
+        run_skewed_cell(true, skew_budget, bank),
+    ];
+    let mut skew_table = Table::new(&["steal", "circuits", "secs", "circuits/s", "steals"]);
+    for c in &skew_cells {
+        skew_table.row(&[
+            c.steal.to_string(),
+            c.circuits.to_string(),
+            format!("{:.3}", c.secs),
+            format!("{:.0}", c.throughput),
+            c.steals.to_string(),
+        ]);
+    }
+    println!("\nskewed load (1 slow + 3 fast workers):");
+    print!("{}", skew_table.render());
+
+    // Serialize the trajectory point (grid + skewed steal series).
     let out_default = "BENCH_coordinator.json".to_string();
     let out_path = std::env::var("DQ_BENCH_OUT").unwrap_or(out_default);
-    let payload = json::to_string_pretty(&cells_to_wire(mode, &cells));
+    let payload = json::to_string_pretty(
+        &cells_to_wire(mode, &cells).with("skewed", skew_to_wire(&skew_cells)),
+    );
     std::fs::write(&out_path, payload).expect("write BENCH_coordinator.json");
     println!("\nwrote {out_path}");
+
+    // Steal gate: on the skewed pool, stealing must not lose throughput
+    // (expected: a multiple; the 0.9 factor absorbs runner noise).
+    let off = skew_cells[0].throughput;
+    let on = skew_cells[1].throughput;
+    if on < off * 0.9 {
+        eprintln!("steal regression: steal-on {on:.0} c/s < steal-off {off:.0} c/s");
+        std::process::exit(1);
+    }
+    if skew_cells[1].steals == 0 {
+        eprintln!("skewed-load case produced zero steals; the scenario no longer exercises stealing");
+        std::process::exit(1);
+    }
 
     // Regression gate against the committed baseline, if present.
     let baseline_default = "../bench/baseline.json".to_string();
@@ -189,7 +348,8 @@ fn main() {
     match std::fs::read_to_string(&baseline_path) {
         Ok(text) => match json::parse(&text) {
             Ok(baseline) => {
-                let failures = regressions(&cells, &baseline);
+                let mut failures = regressions(&cells, &baseline);
+                failures.extend(skew_regressions(&skew_cells, &baseline));
                 if failures.is_empty() {
                     println!("baseline check OK ({baseline_path})");
                 } else {

@@ -1,14 +1,24 @@
 //! Microbenchmarks for the wire substrate: JSON encode/decode and frame
-//! round-trips — the per-message cost of the manager↔worker RPC.
+//! round-trips — the per-message cost of the manager↔worker RPC — plus
+//! the manager `stats` payload (per-tenant wait histograms included).
+//!
+//! This file is both a `harness = false` bench target and a harnessed
+//! test target (`micro_wire_tests` in Cargo.toml), so the round-trip
+//! assertions in the test module run under `cargo test`; in the test
+//! build, `main` and its bench-only imports are intentionally unused.
 //!
 //! ```bash
 //! cargo bench --bench micro_wire
 //! ```
+#![cfg_attr(test, allow(dead_code, unused_imports))]
 
 use dqulearn::benchlib::{BenchConfig, Bencher};
 use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::proto;
 use dqulearn::coordinator::job::CircuitJob;
+use dqulearn::coordinator::{ManagerStats, TenantStats};
 use dqulearn::net::frame::{read_frame, write_frame};
+use dqulearn::util::WaitHistogram;
 use dqulearn::wire::{self, Value};
 
 fn sample_job(i: u64) -> CircuitJob {
@@ -64,5 +74,83 @@ fn main() {
         std::hint::black_box(read_frame(&mut cur).unwrap());
     });
 
+    // the manager `stats` payload at the retention cap's scale: 64
+    // tenants, each with a populated wait histogram
+    let stats = sample_stats(64);
+    let stats_wire = proto::manager_stats_to_wire(&stats);
+    let stats_json = wire::to_string(&stats_wire);
+    println!("\n64-tenant stats payload: {} bytes as json\n", stats_json.len());
+    b.bench("encode 64-tenant stats", || {
+        std::hint::black_box(wire::to_string(&proto::manager_stats_to_wire(&stats)));
+    });
+    b.bench("parse+decode 64-tenant stats", || {
+        let parsed = wire::parse(&stats_json).unwrap();
+        std::hint::black_box(proto::manager_stats_from_wire(&parsed).unwrap());
+    });
+
     print!("{}", b.report());
+}
+
+/// A stats snapshot with `tenants` retained tenants, all counters and
+/// histogram buckets populated.
+fn sample_stats(tenants: u64) -> ManagerStats {
+    let mut stats = ManagerStats {
+        submitted: 10_000,
+        completed: 9_900,
+        dispatches: 1_200,
+        requeues: 3,
+        evictions: 1,
+        cancelled: 2,
+        steals: 40,
+        pruned_tenants: 100,
+        ..Default::default()
+    };
+    for client in 1..=tenants {
+        let mut wait_hist = WaitHistogram::new();
+        for i in 0..8u32 {
+            for _ in 0..=i {
+                wait_hist.record(10f64.powi(i as i32 - 4));
+            }
+        }
+        stats.per_tenant.insert(
+            client,
+            TenantStats {
+                submitted: 100 + client,
+                dispatched: 100 + client,
+                completed: 100,
+                lost: client % 3,
+                stolen: client % 5,
+                wait_total_s: 0.5 * client as f64,
+                wait_max_s: 0.9,
+                wait_hist,
+            },
+        );
+    }
+    let retired = stats.per_tenant[&1].clone();
+    stats.retired = retired;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The `stats` op payload round-trips bit-exactly through the JSON
+    /// wire — histograms included — so manager-reported p50/p90 are the
+    /// numbers a remote operator actually reads.
+    #[test]
+    fn stats_payload_round_trips() {
+        let stats = sample_stats(8);
+        let json = wire::to_string(&proto::manager_stats_to_wire(&stats));
+        let back = proto::manager_stats_from_wire(&wire::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.per_tenant.len(), 8);
+        assert_eq!(back.steals, stats.steals);
+        for (client, t) in &stats.per_tenant {
+            let b = &back.per_tenant[client];
+            assert_eq!(b.wait_hist, t.wait_hist);
+            assert_eq!(b.wait_hist.p90(), t.wait_hist.p90());
+            assert_eq!((b.submitted, b.stolen), (t.submitted, t.stolen));
+        }
+        assert_eq!(back.retired.wait_hist, stats.retired.wait_hist);
+    }
 }

@@ -14,12 +14,22 @@
 //! client -> manager : wait_bank   {bank, timeout_ms?}    -> {fids}
 //! client -> manager : bank_status {bank}                 -> <BankStatus wire>
 //! client -> manager : cancel_bank {bank}                 -> {drained}
+//! client -> manager : stats {}                           -> <ManagerStats wire>
 //! ```
+//!
+//! The `stats` payload carries the full [`ManagerStats`] — aggregate
+//! counters (incl. `steals` and retention fields) plus one entry per
+//! retained tenant with its 8-bucket queue-wait histogram — so remote
+//! operators read manager-computed p50/p90 waits instead of recomputing
+//! percentiles client-side.
+
+use std::collections::BTreeMap;
 
 use crate::circuit::QuClassiConfig;
-use crate::coordinator::BankStatus;
+use crate::coordinator::{BankStatus, ManagerStats, TenantStats};
 use crate::error::DqError;
 use crate::model::exec::CircuitPair;
+use crate::util::stats::{WaitHistogram, WAIT_HIST_BUCKETS};
 use crate::wire::Value;
 
 /// A client's `submit_bank` request: one config, many circuits.
@@ -104,6 +114,98 @@ pub fn bank_status_from_wire(v: &Value) -> Result<BankStatus, DqError> {
     })
 }
 
+/// Wire form of one tenant's counters (an element of the `stats` op's
+/// `tenants` array; also the `retired` aggregate with client 0).
+pub fn tenant_stats_to_wire(client: u64, t: &TenantStats) -> Value {
+    Value::obj()
+        .with("client", client)
+        .with("submitted", t.submitted)
+        .with("dispatched", t.dispatched)
+        .with("completed", t.completed)
+        .with("lost", t.lost)
+        .with("stolen", t.stolen)
+        .with("wait_total_s", t.wait_total_s)
+        .with("wait_max_s", t.wait_max_s)
+        .with("wait_hist", t.wait_hist.counts().to_vec())
+}
+
+/// Decode one tenant's counters; the histogram must carry exactly
+/// [`WAIT_HIST_BUCKETS`] integer buckets.
+pub fn tenant_stats_from_wire(v: &Value) -> Result<(u64, TenantStats), DqError> {
+    let counts: Vec<u64> = v
+        .req_arr("wait_hist")?
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .ok_or_else(|| DqError::Protocol("non-integer wait_hist bucket".to_string()))
+        })
+        .collect::<Result<_, _>>()?;
+    let wait_hist = WaitHistogram::from_counts(&counts).ok_or_else(|| {
+        DqError::Protocol(format!(
+            "wait_hist needs {WAIT_HIST_BUCKETS} buckets, got {}",
+            counts.len()
+        ))
+    })?;
+    Ok((
+        v.req_u64("client")?,
+        TenantStats {
+            submitted: v.req_u64("submitted")?,
+            dispatched: v.req_u64("dispatched")?,
+            completed: v.req_u64("completed")?,
+            lost: v.req_u64("lost")?,
+            stolen: v.req_u64("stolen")?,
+            wait_total_s: v.req_f64("wait_total_s")?,
+            wait_max_s: v.req_f64("wait_max_s")?,
+            wait_hist,
+        },
+    ))
+}
+
+/// Wire form of the manager's aggregate + per-tenant counters (the
+/// `stats` op payload; `cluster::tcp` adds live `workers`/`queue`
+/// gauges on top).
+pub fn manager_stats_to_wire(s: &ManagerStats) -> Value {
+    let tenants: Vec<Value> =
+        s.per_tenant.iter().map(|(client, t)| tenant_stats_to_wire(*client, t)).collect();
+    Value::obj()
+        .with("submitted", s.submitted)
+        .with("completed", s.completed)
+        .with("dispatches", s.dispatches)
+        .with("requeues", s.requeues)
+        .with("evictions", s.evictions)
+        .with("cancelled", s.cancelled)
+        .with("steals", s.steals)
+        .with("pruned_tenants", s.pruned_tenants)
+        .with("retired", tenant_stats_to_wire(0, &s.retired))
+        .with("tenants", tenants)
+}
+
+/// Decode the `stats` payload back into a [`ManagerStats`].
+pub fn manager_stats_from_wire(v: &Value) -> Result<ManagerStats, DqError> {
+    let mut per_tenant = BTreeMap::new();
+    for t in v.req_arr("tenants")? {
+        let (client, stats) = tenant_stats_from_wire(t)?;
+        per_tenant.insert(client, stats);
+    }
+    let retired = tenant_stats_from_wire(
+        v.get("retired")
+            .ok_or_else(|| DqError::Protocol("missing 'retired' aggregate".to_string()))?,
+    )?
+    .1;
+    Ok(ManagerStats {
+        submitted: v.req_u64("submitted")?,
+        completed: v.req_u64("completed")?,
+        dispatches: v.req_u64("dispatches")?,
+        requeues: v.req_u64("requeues")?,
+        evictions: v.req_u64("evictions")?,
+        cancelled: v.req_u64("cancelled")?,
+        steals: v.req_u64("steals")?,
+        pruned_tenants: v.req_u64("pruned_tenants")?,
+        retired,
+        per_tenant,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +263,75 @@ mod tests {
     fn bank_status_missing_fields_is_protocol() {
         let v = Value::obj().with("completed", 1u64);
         assert!(matches!(bank_status_from_wire(&v), Err(DqError::Protocol(_))));
+    }
+
+    fn sample_tenant() -> TenantStats {
+        let mut wait_hist = WaitHistogram::new();
+        wait_hist.record(0.0004);
+        wait_hist.record(0.02);
+        wait_hist.record(2.5);
+        TenantStats {
+            submitted: 100,
+            dispatched: 98,
+            completed: 95,
+            lost: 5,
+            stolen: 7,
+            wait_total_s: 1.25,
+            wait_max_s: 0.5,
+            wait_hist,
+        }
+    }
+
+    #[test]
+    fn tenant_stats_round_trips_through_json() {
+        let t = sample_tenant();
+        let text = crate::wire::json::to_string(&tenant_stats_to_wire(42, &t));
+        let parsed = crate::wire::json::parse(&text).unwrap();
+        let (client, back) = tenant_stats_from_wire(&parsed).unwrap();
+        assert_eq!(client, 42);
+        assert_eq!(back.submitted, t.submitted);
+        assert_eq!(back.lost, t.lost);
+        assert_eq!(back.stolen, t.stolen);
+        assert_eq!(back.wait_hist, t.wait_hist);
+        assert_eq!(back.wait_hist.total(), 3);
+    }
+
+    #[test]
+    fn tenant_stats_rejects_malformed_histogram() {
+        let mut w = tenant_stats_to_wire(1, &sample_tenant());
+        w.set("wait_hist", vec![1u64, 2, 3]); // wrong bucket count
+        assert!(matches!(tenant_stats_from_wire(&w), Err(DqError::Protocol(_))));
+        let mut w = tenant_stats_to_wire(1, &sample_tenant());
+        w.set("wait_hist", vec![0.5f64; WAIT_HIST_BUCKETS]); // non-integer
+        assert!(matches!(tenant_stats_from_wire(&w), Err(DqError::Protocol(_))));
+    }
+
+    #[test]
+    fn manager_stats_round_trips_through_json() {
+        let mut stats = ManagerStats {
+            submitted: 1000,
+            completed: 990,
+            dispatches: 130,
+            requeues: 4,
+            evictions: 1,
+            cancelled: 2,
+            steals: 11,
+            pruned_tenants: 3,
+            retired: sample_tenant(),
+            per_tenant: BTreeMap::new(),
+        };
+        stats.per_tenant.insert(7, sample_tenant());
+        stats.per_tenant.insert(9, TenantStats::default());
+        let text = crate::wire::json::to_string(&manager_stats_to_wire(&stats));
+        let parsed = crate::wire::json::parse(&text).unwrap();
+        let back = manager_stats_from_wire(&parsed).unwrap();
+        assert_eq!(back.steals, 11);
+        assert_eq!(back.pruned_tenants, 3);
+        assert_eq!(back.retired.stolen, 7);
+        assert_eq!(back.per_tenant.len(), 2);
+        assert_eq!(back.per_tenant[&7].wait_hist, stats.per_tenant[&7].wait_hist);
+        // manager-reported quantiles survive the wire: p90 is answerable
+        // remotely without raw samples
+        assert!(back.per_tenant[&7].wait_hist.p50() > 0.0);
     }
 }

@@ -127,31 +127,12 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
                 Ok(Value::obj().with("drained", manager.cancel_bank(bank)))
             }
             "stats" => {
-                let s = manager.stats();
-                // per-tenant counters ride along for remote observability
-                let tenants: Vec<Value> = s
-                    .per_tenant
-                    .iter()
-                    .map(|(client, t)| {
-                        Value::obj()
-                            .with("client", *client)
-                            .with("submitted", t.submitted)
-                            .with("dispatched", t.dispatched)
-                            .with("completed", t.completed)
-                            .with("wait_total_s", t.wait_total_s)
-                            .with("wait_max_s", t.wait_max_s)
-                    })
-                    .collect();
-                Ok(Value::obj()
-                    .with("submitted", s.submitted)
-                    .with("completed", s.completed)
-                    .with("dispatches", s.dispatches)
-                    .with("requeues", s.requeues)
-                    .with("evictions", s.evictions)
-                    .with("cancelled", s.cancelled)
+                // The counters (incl. per-tenant wait histograms and
+                // steal/retention fields) serialize through the shared
+                // proto codec; the live pool/queue gauges ride on top.
+                Ok(proto::manager_stats_to_wire(&manager.stats())
                     .with("workers", manager.worker_count())
-                    .with("queue", manager.queue_len())
-                    .with("tenants", tenants))
+                    .with("queue", manager.queue_len()))
             }
             other => Err(DqError::Protocol(format!("manager: unknown op '{other}'"))),
         }

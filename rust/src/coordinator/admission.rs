@@ -12,11 +12,16 @@
 //! head-of-line circuit (DESIGN.md §13).
 //!
 //! Queue-wait accounting rides along: every job is stamped on admission
-//! and the dispatch path receives the measured waits for the per-tenant
-//! counters in `ManagerStats`.
+//! and [`AdmissionQueue::take_batch`] hands the stamps out with the
+//! jobs. The manager carries them inside the dispatch batch and measures
+//! the wait only when the batch reaches a worker channel, so the
+//! accounting covers outbox residency and survives a steal — a batch
+//! that waits in a stalled worker's outbox and is then stolen by a
+//! sibling still charges its full queue time to the owning tenant
+//! (DESIGN.md §14).
 
 use std::collections::{HashMap, VecDeque};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use super::job::CircuitJob;
 use crate::circuit::QuClassiConfig;
@@ -74,10 +79,17 @@ impl AdmissionQueue {
     }
 
     /// Set a tenant's WRR weight (clamped to >= 1). Takes effect from the
-    /// tenant's next service cycle.
+    /// tenant's next service cycle. Setting a tenant back to the default
+    /// weight *releases* its persisted entry, so per-tenant weight state
+    /// cannot grow unboundedly with client churn — non-default weights
+    /// are deliberate operator policy and persist until reset.
     pub fn set_weight(&mut self, client: u64, weight: u32) {
         let w = weight.max(1);
-        self.weights.insert(client, w);
+        if w == DEFAULT_WEIGHT {
+            self.weights.remove(&client);
+        } else {
+            self.weights.insert(client, w);
+        }
         if let Some(tq) = self.tenants.get_mut(&client) {
             tq.weight = w;
         }
@@ -144,7 +156,9 @@ impl AdmissionQueue {
     /// Take up to `limit` same-`config` circuits from this tenant's queue
     /// head and charge one WRR credit: a tenant that exhausted its weight
     /// (or emptied its queue) rotates to the back of the service order.
-    /// Returns the jobs plus their measured queue waits.
+    /// Returns the jobs plus their admission stamps (the wait itself is
+    /// measured by the manager when the batch reaches a worker channel,
+    /// so it survives outbox residency and steals).
     ///
     /// The contiguous same-config prefix pops directly (the common,
     /// homogeneous case is O(batch)); only when the tenant interleaves
@@ -156,8 +170,7 @@ impl AdmissionQueue {
         client: u64,
         config: QuClassiConfig,
         limit: usize,
-    ) -> (Vec<CircuitJob>, Vec<Duration>) {
-        let now = Instant::now();
+    ) -> (Vec<CircuitJob>, Vec<Instant>) {
         let Some(tq) = self.tenants.get_mut(&client) else {
             return (Vec::new(), Vec::new());
         };
@@ -199,23 +212,30 @@ impl AdmissionQueue {
         }
 
         let mut jobs = Vec::with_capacity(taken.len());
-        let mut waits = Vec::with_capacity(taken.len());
+        let mut stamps = Vec::with_capacity(taken.len());
         for qj in taken {
-            waits.push(now.saturating_duration_since(qj.enqueued));
+            stamps.push(qj.enqueued);
             jobs.push(qj.job);
         }
-        (jobs, waits)
+        (jobs, stamps)
     }
 
     /// Remove every queued circuit of `bank` (cancel / unschedulable
-    /// paths); returns how many were drained.
-    pub fn drain_bank(&mut self, bank: u64) -> usize {
+    /// paths); returns how many were drained plus the owning tenant (a
+    /// bank's circuits all belong to one client), so the manager can
+    /// credit the tenant's `lost` counter and retention pruning still
+    /// recognizes cancel-heavy churn tenants as quiescent.
+    pub fn drain_bank(&mut self, bank: u64) -> (usize, Option<u64>) {
         let mut drained = 0;
+        let mut owner = None;
         let mut emptied: Vec<u64> = Vec::new();
         for (&client, tq) in self.tenants.iter_mut() {
             let before = tq.jobs.len();
             tq.jobs.retain(|qj| qj.job.bank != bank);
-            drained += before - tq.jobs.len();
+            if before > tq.jobs.len() {
+                drained += before - tq.jobs.len();
+                owner = Some(client);
+            }
             if tq.jobs.is_empty() {
                 emptied.push(client);
             }
@@ -225,7 +245,7 @@ impl AdmissionQueue {
             self.rr.retain(|&c| c != client);
         }
         self.len -= drained;
-        drained
+        (drained, owner)
     }
 }
 
@@ -320,13 +340,25 @@ mod tests {
         q.push_bank(1, (0..3).map(|i| job(1, 1, i, c)).collect());
         q.push_bank(1, (10..12).map(|i| job(1, 2, i, c)).collect());
         q.push_bank(2, (20..22).map(|i| job(2, 3, i, c)).collect());
-        assert_eq!(q.drain_bank(1), 3);
+        assert_eq!(q.drain_bank(1), (3, Some(1)));
         assert_eq!(q.len(), 4);
         assert_eq!(q.head_of(1).unwrap().bank, 2);
-        assert_eq!(q.drain_bank(2), 2);
-        assert_eq!(q.drain_bank(2), 0); // idempotent
+        assert_eq!(q.drain_bank(2), (2, Some(1)));
+        assert_eq!(q.drain_bank(2), (0, None)); // idempotent
         // tenant 1 fully drained: dropped from the service order
         assert_eq!(q.service_order(), vec![2]);
+    }
+
+    #[test]
+    fn resetting_weight_to_default_releases_state() {
+        let mut q = AdmissionQueue::new();
+        q.set_weight(1, 4);
+        q.set_weight(2, 7);
+        assert_eq!(q.weights.len(), 2);
+        q.set_weight(1, DEFAULT_WEIGHT);
+        assert_eq!(q.weights.len(), 1);
+        q.set_weight(2, 0); // clamps to the default -> also released
+        assert!(q.weights.is_empty());
     }
 
     #[test]

@@ -19,25 +19,29 @@
 //! dispatch to a fast one.
 //!
 //! Lock order (outermost first): `queue` → `registry` → `in_flight` →
-//! `batches` → `stats`. The `outboxes` map is taken either alone or
-//! directly inside `registry`; the `events` counter is a leaf — taken
-//! momentarily with nothing else held.
+//! `batches` → `stats`. The `outboxes` directory is taken either alone
+//! or directly inside `registry`; an outbox's internal queue lock sits
+//! between `outboxes` and `in_flight` (the steal path holds `registry`
+//! → `outboxes` → one outbox queue → `stats`; DESIGN.md §14); the
+//! `events` counter is a leaf — taken momentarily with nothing else
+//! held.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::admission::AdmissionQueue;
 use super::bankstore::{BankStatus, BankStore};
 use super::job::{CircuitJob, JobId};
-use super::outbox::{Batch, Outbox};
-use super::registry::{Registry, WorkerId, WorkerProfile};
+use super::outbox::{Batch, Outbox, OutboxDirectory};
+use super::registry::{Registry, WorkerId, WorkerProfile, WorkerState};
 use super::scheduler;
 use super::session::ClientSession;
 use crate::circuit::QuClassiConfig;
 use crate::error::DqError;
 use crate::model::exec::CircuitPair;
+use crate::util::stats::WaitHistogram;
 use crate::util::{Clock, SystemClock};
 
 /// How the manager reaches a worker's executor.
@@ -74,6 +78,20 @@ pub struct ManagerConfig {
     /// the manager: dispatch is event-driven, the tick exists solely to
     /// notice workers whose heartbeats stopped (DESIGN.md §13).
     pub eviction_tick: Duration,
+    /// Work stealing between outboxes (DESIGN.md §14): an idle worker's
+    /// dispatcher may take a compatible batch still *queued* (not yet on
+    /// the wire) in a sibling's outbox, moving its qubit reservation in
+    /// the same registry-lock hold. `false` pins every batch to the
+    /// worker it was assigned to — useful when selection policy (e.g.
+    /// noise-aware placement) must never be bypassed by load balancing,
+    /// and for isolating policies under test.
+    pub steal: bool,
+    /// Bounded per-tenant stats retention: quiescent tenants (submitted
+    /// == completed) outside the top-`max_tenant_stats` by submitted are
+    /// folded into [`ManagerStats::retired`]. The prune pass engages
+    /// with hysteresis at 1.5x this value (so the map is hard-bounded by
+    /// `cap + cap/2` plus any active tenants). `0` disables pruning.
+    pub max_tenant_stats: usize,
 }
 
 impl Default for ManagerConfig {
@@ -86,6 +104,8 @@ impl Default for ManagerConfig {
             wait_timeout: Duration::from_secs(600),
             noise_aware_alpha: None,
             eviction_tick: Duration::from_millis(20),
+            steal: true,
+            max_tenant_stats: 1024,
         }
     }
 }
@@ -96,15 +116,48 @@ impl Default for ManagerConfig {
 pub struct TenantStats {
     /// Circuits this tenant submitted.
     pub submitted: u64,
-    /// Circuits dispatched to workers on this tenant's behalf.
+    /// Circuits handed to a worker channel on this tenant's behalf
+    /// (counted at channel hand-off, so a batch re-dispatched after an
+    /// eviction counts each attempt).
     pub dispatched: u64,
     /// Circuits completed for this tenant.
     pub completed: u64,
-    /// Total seconds this tenant's circuits spent queued before dispatch
-    /// (mean wait = `wait_total_s / dispatched`).
+    /// Circuits that will never complete: drained by a cancel, failed
+    /// as unschedulable, or abandoned after a protocol violation.
+    /// Together with `completed` this accounts for every submitted
+    /// circuit's final fate, which is what lets retention pruning
+    /// recognize cancel-heavy churn tenants as quiescent.
+    pub lost: u64,
+    /// Circuits of this tenant moved between workers by a steal (the
+    /// counters land on the batch's owner, not the thief).
+    pub stolen: u64,
+    /// Total seconds this tenant's circuits spent queued before reaching
+    /// a worker channel (mean wait = `wait_total_s / dispatched`);
+    /// includes outbox residency and survives steals.
     pub wait_total_s: f64,
     /// Longest single queue wait observed, in seconds.
     pub wait_max_s: f64,
+    /// Fixed 8-bucket log-scale histogram of the same queue waits, so
+    /// the manager answers per-tenant p50/p90 directly (serialized over
+    /// the TCP `stats` op).
+    pub wait_hist: WaitHistogram,
+}
+
+impl TenantStats {
+    /// Fold another tenant's counters into this one (retention pruning:
+    /// [`ManagerStats::retired`]).
+    pub fn merge(&mut self, other: &TenantStats) {
+        self.submitted += other.submitted;
+        self.dispatched += other.dispatched;
+        self.completed += other.completed;
+        self.lost += other.lost;
+        self.stolen += other.stolen;
+        self.wait_total_s += other.wait_total_s;
+        if other.wait_max_s > self.wait_max_s {
+            self.wait_max_s = other.wait_max_s;
+        }
+        self.wait_hist.merge(&other.wait_hist);
+    }
 }
 
 /// Aggregate counters.
@@ -117,12 +170,65 @@ pub struct ManagerStats {
     pub evictions: u64,
     /// Banks cancelled by clients.
     pub cancelled: u64,
+    /// Batches moved from a backed-up worker's outbox to an idle sibling
+    /// (work stealing, DESIGN.md §14).
+    pub steals: u64,
+    /// Tenants folded into [`ManagerStats::retired`] by bounded
+    /// retention (`ManagerConfig::max_tenant_stats`).
+    pub pruned_tenants: u64,
+    /// Aggregate of all pruned tenants' counters — nothing is lost when
+    /// a quiescent tenant's entry is retired, only de-individualized.
+    pub retired: TenantStats,
     /// Per-tenant dispatch and queue-wait counters, keyed by client id.
-    /// Entries persist for the manager's lifetime (one small struct per
-    /// client id ever seen) and [`Manager::stats`] clones the whole map;
-    /// bounded retention for client-churn-heavy deployments is a listed
-    /// ROADMAP follow-up.
+    /// Bounded: above `ManagerConfig::max_tenant_stats` entries,
+    /// quiescent tenants outside the top-N by submitted are merged into
+    /// [`ManagerStats::retired`], so client-churn-heavy deployments
+    /// cannot grow this map (or the TCP `stats` payload) without bound.
     pub per_tenant: BTreeMap<u64, TenantStats>,
+}
+
+impl ManagerStats {
+    /// Bounded per-tenant retention (see [`ManagerStats::per_tenant`]).
+    /// Tenants with work still queued or in flight (submitted >
+    /// completed) are never pruned mid-flight; a pruned tenant that
+    /// submits again simply starts a fresh entry (its history stays in
+    /// `retired`).
+    ///
+    /// Hysteresis: the pass engages only once the map exceeds 1.5x the
+    /// cap and then prunes back down toward `cap`, so the O(n log n)
+    /// ranking runs once per ~cap/2 tenant arrivals — never on every
+    /// stats update while the map hovers at the boundary (this runs
+    /// under the stats lock on the dispatch hot path).
+    fn prune_tenants(&mut self, cap: usize) {
+        if cap == 0 || self.per_tenant.len() <= cap + cap / 2 {
+            return;
+        }
+        let mut ranked: Vec<(u64, u64)> = self
+            .per_tenant
+            .iter()
+            .map(|(client, t)| (t.submitted, *client))
+            .collect();
+        ranked.sort_unstable_by(|a, b| b.cmp(a));
+        let keep: std::collections::HashSet<u64> =
+            ranked.iter().take(cap).map(|&(_, client)| client).collect();
+        let victims: Vec<u64> = self
+            .per_tenant
+            .iter()
+            .filter(|(client, t)| {
+                // Quiescent: every submitted circuit reached a final
+                // fate — completed, or lost to cancel/unschedulable/
+                // protocol failure — so no counter can move again.
+                !keep.contains(*client) && t.completed + t.lost >= t.submitted
+            })
+            .map(|(client, _)| *client)
+            .collect();
+        for client in victims {
+            if let Some(t) = self.per_tenant.remove(&client) {
+                self.retired.merge(&t);
+                self.pruned_tenants += 1;
+            }
+        }
+    }
 }
 
 struct Inner {
@@ -142,10 +248,12 @@ struct Inner {
     /// with the `queue` mutex.
     space_cv: Condvar,
     banks: BankStore,
-    /// Per-worker dispatch queues + dispatcher threads. Inserted under
-    /// the `registry` lock at registration (so a selectable worker always
-    /// has an outbox); removed (and stopped) at eviction.
-    outboxes: Mutex<HashMap<WorkerId, Arc<Outbox>>>,
+    /// Directory of per-worker dispatch queues + dispatcher threads —
+    /// also the structure a stealing dispatcher scans for victims.
+    /// Inserted under the `registry` lock at registration (so a
+    /// selectable worker always has an outbox); removed (and stopped) at
+    /// eviction.
+    outboxes: Mutex<OutboxDirectory>,
     in_flight: Mutex<HashMap<JobId, CircuitJob>>,
     /// Dispatch batches keyed by their qubit-reservation id (the head
     /// job), for eviction-time re-queueing of whole batches.
@@ -204,7 +312,7 @@ impl Manager {
                 work_cv: Condvar::new(),
                 space_cv: Condvar::new(),
                 banks: BankStore::new(),
-                outboxes: Mutex::new(HashMap::new()),
+                outboxes: Mutex::new(OutboxDirectory::new()),
                 in_flight: Mutex::new(HashMap::new()),
                 batches: Mutex::new(HashMap::new()),
                 stats: Mutex::new(ManagerStats::default()),
@@ -267,9 +375,12 @@ impl Manager {
             // The outbox is inserted under the registry lock so the
             // assigner can never select a worker whose outbox does not
             // exist yet (registry → outboxes nesting, DESIGN.md §13).
+            // The worker's thread budget bounds how many batches its
+            // outbox hands to the channel concurrently; surplus batches
+            // stay queued where siblings can steal them (DESIGN.md §14).
             let mut reg = self.inner.registry.lock().unwrap();
             let id = reg.register_profile(&profile, now);
-            let outbox = Outbox::spawn(id, channel, self.clone());
+            let outbox = Outbox::spawn(id, channel, profile.threads.max(1), self.clone());
             self.inner.outboxes.lock().unwrap().insert(id, outbox);
             drop(reg);
             self.signal_event();
@@ -309,7 +420,9 @@ impl Manager {
     /// Set a tenant's weighted-round-robin weight (batches per service
     /// cycle; default 1, clamped to >= 1). A weight-`w` tenant takes `w`
     /// consecutive dispatch batches per admission cycle — heavier tenants
-    /// drain faster without ever starving lighter ones.
+    /// drain faster without ever starving lighter ones. Non-default
+    /// weights persist until reset; setting a tenant back to 1 releases
+    /// its weight entry (bounded state under client churn).
     pub fn set_tenant_weight(&self, client: u64, weight: u32) {
         self.inner.queue.lock().unwrap().set_weight(client, weight);
     }
@@ -377,6 +490,7 @@ impl Manager {
             let mut stats = self.inner.stats.lock().unwrap();
             stats.submitted += pairs.len() as u64;
             stats.per_tenant.entry(client).or_default().submitted += pairs.len() as u64;
+            stats.prune_tenants(self.inner.cfg.max_tenant_stats);
         }
         drop(q);
         self.signal_event();
@@ -440,10 +554,21 @@ impl Manager {
     /// `Cancelled` after the GC.
     pub fn cancel_bank(&self, bank: u64) -> usize {
         let mut q = self.inner.queue.lock().unwrap();
-        let drained = q.drain_bank(bank);
+        let (drained, owner) = q.drain_bank(bank);
         drop(q);
-        if self.inner.banks.cancel(bank) {
-            self.inner.stats.lock().unwrap().cancelled += 1;
+        {
+            let mut stats = self.inner.stats.lock().unwrap();
+            if self.inner.banks.cancel(bank) {
+                stats.cancelled += 1;
+            }
+            // Drained circuits can never complete: credit the tenant's
+            // `lost` counter so cancel-heavy churn stays prunable.
+            if let Some(client) = owner {
+                if drained > 0 {
+                    stats.per_tenant.entry(client).or_default().lost += drained as u64;
+                    stats.prune_tenants(self.inner.cfg.max_tenant_stats);
+                }
+            }
         }
         // GC immediately when nothing is in flight (the check and the
         // discard serialize against dispatch completion on `in_flight`).
@@ -485,6 +610,13 @@ impl Manager {
         self.inner.stats.lock().unwrap().clone()
     }
 
+    /// Snapshot of every registered worker's state (occupancy audits:
+    /// `occupied <= max_qubits` must hold at all times, including across
+    /// reservation transfers — see `tests/steal_audit.rs`).
+    pub fn worker_states(&self) -> Vec<WorkerState> {
+        self.inner.registry.lock().unwrap().workers().cloned().collect()
+    }
+
     /// Number of registered (live) workers.
     pub fn worker_count(&self) -> usize {
         self.inner.registry.lock().unwrap().len()
@@ -509,8 +641,7 @@ impl Manager {
         self.inner.stop.store(true, Ordering::Relaxed);
         self.signal_event();
         self.inner.space_cv.notify_all();
-        let outboxes: Vec<Arc<Outbox>> =
-            self.inner.outboxes.lock().unwrap().values().cloned().collect();
+        let outboxes = self.inner.outboxes.lock().unwrap().all();
         for ob in outboxes {
             ob.stop();
         }
@@ -535,8 +666,8 @@ impl Manager {
             if m.inner.stop.load(Ordering::Relaxed) {
                 return;
             }
-            while let Some((worker, config, jobs, waits)) = m.next_assignment() {
-                m.dispatch(worker, config, jobs, waits);
+            while let Some((worker, config, jobs, stamps)) = m.next_assignment() {
+                m.dispatch(worker, config, jobs, stamps);
             }
             let mut seq = m.inner.events.lock().unwrap();
             if *seq == seen {
@@ -596,7 +727,7 @@ impl Manager {
         {
             let mut outboxes = self.inner.outboxes.lock().unwrap();
             for (wid, _) in &evicted {
-                if let Some(ob) = outboxes.remove(wid) {
+                if let Some(ob) = outboxes.remove(*wid) {
                     ob.stop();
                 }
             }
@@ -615,8 +746,10 @@ impl Manager {
                 for job_id in members {
                     if let Some(job) = in_flight.remove(&job_id) {
                         touched_banks.push(job.bank);
-                        // Never resurrect cancelled work.
+                        // Never resurrect cancelled work (the dropped
+                        // circuit is lost — keeps the tenant prunable).
                         if self.inner.banks.is_cancelled(job.bank) {
+                            stats.per_tenant.entry(job.client).or_default().lost += 1;
                             continue;
                         }
                         stats.requeues += 1;
@@ -654,7 +787,7 @@ impl Manager {
     #[allow(clippy::type_complexity)]
     fn next_assignment(
         &self,
-    ) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>, Vec<Duration>)> {
+    ) -> Option<(WorkerId, QuClassiConfig, Vec<CircuitJob>, Vec<Instant>)> {
         loop {
             let mut q = self.inner.queue.lock().unwrap();
             if q.is_empty() {
@@ -666,7 +799,8 @@ impl Manager {
             if reg.is_empty() {
                 return None;
             }
-            let mut unschedulable: Option<(u64, usize)> = None; // (bank, demand)
+            // (client, bank, demand) of an unschedulable head-of-line
+            let mut unschedulable: Option<(u64, u64, usize)> = None;
             let mut pick: Option<(u64, WorkerId, QuClassiConfig, usize)> = None;
             for client in q.service_order() {
                 let Some(head) = q.head_of(client) else { continue };
@@ -675,7 +809,7 @@ impl Manager {
                     // Unschedulable on the current pool: fail its whole
                     // bank (every sibling shares the config, hence the
                     // demand).
-                    unschedulable = Some((head.bank, demand));
+                    unschedulable = Some((client, head.bank, demand));
                     break;
                 }
                 let selected = match self.inner.cfg.noise_aware_alpha {
@@ -687,10 +821,17 @@ impl Manager {
                     break;
                 }
             }
-            if let Some((bank, demand)) = unschedulable {
-                q.drain_bank(bank);
+            if let Some((client, bank, demand)) = unschedulable {
+                let (drained, _) = q.drain_bank(bank);
                 drop(reg);
                 drop(q);
+                if drained > 0 {
+                    // The failed bank's circuits never reach a worker:
+                    // account them as lost (quiescence for pruning).
+                    let mut stats = self.inner.stats.lock().unwrap();
+                    stats.per_tenant.entry(client).or_default().lost += drained as u64;
+                    stats.prune_tenants(self.inner.cfg.max_tenant_stats);
+                }
                 self.inner.banks.fail(
                     bank,
                     DqError::Unschedulable(format!(
@@ -712,7 +853,7 @@ impl Manager {
                 .max_batch
                 .min(worker_threads.saturating_mul(self.inner.cfg.batch_per_thread))
                 .max(1);
-            let (jobs, waits) = q.take_batch(client, config, batch_limit);
+            let (jobs, stamps) = q.take_batch(client, config, batch_limit);
             debug_assert!(!jobs.is_empty());
             // One reservation for the whole batch, keyed by the head job;
             // the registry lock is held from selection through the
@@ -730,57 +871,95 @@ impl Manager {
             drop(reg);
             drop(q);
             self.inner.space_cv.notify_all();
-            return Some((worker, config, jobs, waits));
+            return Some((worker, config, jobs, stamps));
         }
     }
 
     /// Hand one batch to its worker's outbox (O(1), never blocks on the
-    /// worker) and account the tenant's dispatch + queue-wait counters.
+    /// worker). Dispatch and queue-wait counters are *not* recorded
+    /// here: the batch carries its admission stamps, and
+    /// [`Manager::run_batch`] accounts them at the moment the batch
+    /// reaches a worker channel — which may be a different worker
+    /// entirely once a sibling steals it (DESIGN.md §14).
     fn dispatch(
         &self,
         worker: WorkerId,
         config: QuClassiConfig,
         jobs: Vec<CircuitJob>,
-        waits: Vec<Duration>,
+        stamps: Vec<Instant>,
     ) {
-        // take_batch draws from a single tenant: one client per batch.
-        let client = jobs[0].client;
-        let count = jobs.len() as u64;
-        let outbox = self.inner.outboxes.lock().unwrap().get(&worker).cloned();
-        let rejected = match outbox {
-            Some(ob) => match ob.enqueue(Batch { config, jobs }) {
-                Ok(()) => None,
-                Err(batch) => Some(batch.jobs),
-            },
-            None => Some(jobs),
+        let outbox = self.inner.outboxes.lock().unwrap().get(worker);
+        let Some(ob) = outbox else {
+            // Worker evicted between selection and dispatch: re-queue (a
+            // no-op for jobs the evictor already reclaimed).
+            self.requeue(worker, jobs);
+            return;
         };
-        match rejected {
-            None => {
-                // Stats only for a batch the outbox actually took — a
-                // rejected enqueue leaves no phantom counts. (A batch
-                // stranded when eviction lands *after* acceptance is
-                // still re-counted at its re-dispatch, so `dispatched`
-                // may transiently exceed `completed` during eviction
-                // storms; completion counting stays exact.)
-                let mut stats = self.inner.stats.lock().unwrap();
-                stats.dispatches += 1;
-                let tenant = stats.per_tenant.entry(client).or_default();
-                tenant.dispatched += count;
-                for w in &waits {
-                    let s = w.as_secs_f64();
-                    tenant.wait_total_s += s;
-                    if s > tenant.wait_max_s {
-                        tenant.wait_max_s = s;
-                    }
+        match ob.enqueue(Batch { config, jobs, enqueued: stamps }) {
+            Ok(surplus) => {
+                if surplus && self.inner.cfg.steal {
+                    // The batch parked behind a saturated channel: wake
+                    // idle siblings so one of them can steal it instead
+                    // of letting it wait out the victim's backlog.
+                    self.inner.outboxes.lock().unwrap().nudge_siblings(worker);
                 }
             }
-            Some(jobs) => {
-                // Worker evicted between selection and dispatch: re-queue
-                // (a no-op for jobs the evictor already reclaimed)
-                // without recording a dispatch that never happened.
-                self.requeue(worker, jobs);
-            }
+            Err(batch) => self.requeue(worker, batch.jobs),
         }
+    }
+
+    /// Work stealing (DESIGN.md §14): called by an idle worker's
+    /// dispatcher; finds a compatible batch still queued on a sibling's
+    /// outbox, atomically moves its qubit reservation from the victim to
+    /// the thief, and hands the batch over for local execution.
+    ///
+    /// The whole scan → queue-removal → reservation-transfer runs under
+    /// one registry-lock hold, so it serializes against both the
+    /// assigner (selection + reservation) and the evictor
+    /// (`Registry::evict_stale`): a steal either completes before an
+    /// eviction snapshot (the moved key is no longer in the victim's
+    /// active set, so the evictor will not re-queue it) or observes the
+    /// victim already gone and leaves its batches to the orphan
+    /// re-queue pass. Eviction can never see a half-moved batch, and a
+    /// circuit can never be both stolen and orphan-requeued.
+    pub(crate) fn steal_for(&self, thief: WorkerId) -> Option<Batch> {
+        if !self.inner.cfg.steal || self.inner.stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        let mut reg = self.inner.registry.lock().unwrap();
+        let thief_avail = reg.get(thief)?.available();
+        if thief_avail == 0 {
+            return None;
+        }
+        let victims = self.inner.outboxes.lock().unwrap().victims(thief);
+        for (victim, ob) in victims {
+            // Eviction raced us between the directory snapshot and here:
+            // the orphan re-queue pass owns that worker's batches now.
+            if reg.get(victim).is_none() {
+                continue;
+            }
+            let Some(batch) = ob.steal_where(|b| b.demand() <= thief_avail) else {
+                continue;
+            };
+            let key = batch.key();
+            let demand = batch.demand();
+            reg.transfer(victim, thief, key, demand)
+                .expect("steal capacity checked under the registry lock");
+            let client = batch.jobs[0].client;
+            {
+                let mut stats = self.inner.stats.lock().unwrap();
+                stats.steals += 1;
+                stats.per_tenant.entry(client).or_default().stolen += batch.jobs.len() as u64;
+            }
+            // Debug level: steals are hot-path under skewed load.
+            crate::log_debug!(
+                "manager",
+                "w{thief} stole a {}-circuit batch from w{victim}",
+                batch.jobs.len()
+            );
+            return Some(batch);
+        }
+        None
     }
 
     /// Execute one batch on the calling thread (an outbox execution
@@ -788,7 +967,29 @@ impl Manager {
     /// payloads into a protocol failure, transport errors into a
     /// re-queue.
     pub(crate) fn run_batch(&self, worker: WorkerId, channel: &dyn WorkerChannel, batch: Batch) {
-        let Batch { config, jobs } = batch;
+        let Batch { config, jobs, enqueued } = batch;
+        // Dispatch + queue-wait accounting happens here — the moment the
+        // batch reaches a worker channel — so the measured wait covers
+        // outbox residency and survives a steal (the admission stamps
+        // ride inside the batch). A batch is drawn from a single
+        // tenant's sub-queue, so `jobs[0].client` keys the owner: a
+        // stolen batch's counters land on the tenant that submitted it,
+        // not on the thief.
+        {
+            let now = Instant::now();
+            let mut stats = self.inner.stats.lock().unwrap();
+            stats.dispatches += 1;
+            let tenant = stats.per_tenant.entry(jobs[0].client).or_default();
+            tenant.dispatched += jobs.len() as u64;
+            for stamp in &enqueued {
+                let s = now.saturating_duration_since(*stamp).as_secs_f64();
+                tenant.wait_total_s += s;
+                if s > tenant.wait_max_s {
+                    tenant.wait_max_s = s;
+                }
+                tenant.wait_hist.record(s);
+            }
+        }
         let pairs: Vec<CircuitPair> =
             jobs.iter().map(|j| (j.thetas.clone(), j.data.clone())).collect();
         match channel.execute(&config, &pairs) {
@@ -831,6 +1032,10 @@ impl Manager {
                     let mut stats = self.inner.stats.lock().unwrap();
                     stats.completed += landed;
                     stats.per_tenant.entry(jobs[0].client).or_default().completed += landed;
+                    // Completion can turn a tenant quiescent: prune here
+                    // too so churn-heavy deployments stay bounded even
+                    // between submits.
+                    stats.prune_tenants(self.inner.cfg.max_tenant_stats);
                 }
                 for (job, fid) in jobs.iter().zip(fids.iter()) {
                     self.inner.banks.complete(job.bank, job.index, *fid);
@@ -862,8 +1067,18 @@ impl Manager {
             reg.release(worker, first.id);
             self.inner.batches.lock().unwrap().remove(&first.id);
         }
+        let mut lost: u64 = 0;
         for job in jobs {
-            in_flight.remove(&job.id);
+            // Only circuits this batch still owned are lost here; ones
+            // the evictor already reclaimed will re-execute elsewhere.
+            if in_flight.remove(&job.id).is_some() {
+                lost += 1;
+            }
+        }
+        if lost > 0 {
+            let mut stats = self.inner.stats.lock().unwrap();
+            stats.per_tenant.entry(jobs[0].client).or_default().lost += lost;
+            stats.prune_tenants(self.inner.cfg.max_tenant_stats);
         }
         let banks = distinct_banks(jobs);
         self.gc_cancelled_banks(&banks, &in_flight);
@@ -897,8 +1112,10 @@ impl Manager {
             }
             // Never resurrect a cancelled bank's work: its queued jobs
             // were drained at cancel time, so a failed/evicted batch is
-            // simply dropped.
+            // simply dropped — and the circuit is lost, which keeps the
+            // tenant prunable.
             if self.inner.banks.is_cancelled(job.bank) {
+                stats.per_tenant.entry(job.client).or_default().lost += 1;
                 continue;
             }
             stats.requeues += 1;
@@ -1181,6 +1398,78 @@ mod tests {
         assert_eq!((ta.submitted, ta.dispatched, ta.completed), (8, 8, 8));
         assert_eq!((tb.submitted, tb.dispatched, tb.completed), (4, 4, 4));
         assert!(ta.wait_total_s >= 0.0 && ta.wait_max_s >= 0.0);
+        // the wait histogram sees exactly the dispatched circuits
+        assert_eq!(ta.wait_hist.total(), 8);
+        assert_eq!(tb.wait_hist.total(), 4);
+        assert!(ta.wait_hist.p90().is_finite());
+        m.shutdown();
+    }
+
+    #[test]
+    fn prune_tenants_folds_quiescent_into_retired() {
+        let mut stats = ManagerStats::default();
+        for client in 1..=10u64 {
+            stats.per_tenant.insert(
+                client,
+                TenantStats {
+                    submitted: client,
+                    dispatched: client,
+                    completed: client, // quiescent
+                    ..Default::default()
+                },
+            );
+        }
+        // client 11 is mid-flight: never pruned regardless of rank
+        stats
+            .per_tenant
+            .insert(11, TenantStats { submitted: 1, completed: 0, ..Default::default() });
+        // client 12 cancelled everything: completed 0 but every circuit
+        // accounted lost -> quiescent, prunable
+        stats.per_tenant.insert(
+            12,
+            TenantStats { submitted: 5, completed: 2, lost: 3, ..Default::default() },
+        );
+        stats.prune_tenants(4);
+        // top-4 by submitted (10, 9, 8, 7) survive, plus the active
+        // client 11; the cancel-churn client 12 (submitted 5) is now
+        // quiescent through `lost` and prunes with clients 1-6
+        assert_eq!(stats.per_tenant.len(), 5);
+        for keep in [7u64, 8, 9, 10, 11] {
+            assert!(stats.per_tenant.contains_key(&keep), "dropped tenant {keep}");
+        }
+        assert_eq!(stats.pruned_tenants, 7);
+        assert_eq!(stats.retired.submitted, (1..=6).sum::<u64>() + 5);
+        assert_eq!(stats.retired.completed + stats.retired.lost, stats.retired.submitted);
+        // idempotent at or under the hysteresis threshold
+        stats.prune_tenants(4);
+        assert_eq!(stats.pruned_tenants, 7);
+        // cap 0 disables pruning entirely
+        let mut unbounded = ManagerStats::default();
+        for client in 1..=10u64 {
+            unbounded.per_tenant.insert(client, TenantStats::default());
+        }
+        unbounded.prune_tenants(0);
+        assert_eq!(unbounded.per_tenant.len(), 10);
+    }
+
+    /// In-module steal smoke test (the full audit lives in
+    /// `tests/steal_audit.rs`): a slow worker's surplus drains through a
+    /// fast sibling and the steals counter moves.
+    #[test]
+    fn steals_move_surplus_to_idle_sibling() {
+        let m = Manager::new(ManagerConfig { max_batch: 2, ..Default::default() });
+        m.register(
+            WorkerProfile::new(20).cru(0.0),
+            Arc::new(SlowChannel { delay: Duration::from_millis(10) }),
+        );
+        m.register(WorkerProfile::new(20).cru(0.5), Arc::new(SimChannel));
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 24);
+        let fids = m.session().execute(cfg, &pairs).unwrap();
+        assert_eq!(fids.len(), 24);
+        let stats = m.stats();
+        assert!(stats.steals > 0, "no steals despite a 10 ms slow worker: {stats:?}");
+        assert_eq!(stats.completed, 24);
         m.shutdown();
     }
 
@@ -1259,6 +1548,10 @@ mod tests {
         let handle = session.submit(cfg, &pairs_for(&cfg, 4)).unwrap();
         assert_eq!(handle.cancel().unwrap(), 4);
         assert_eq!(m.queue_len(), 0);
+        // drained circuits are accounted as lost, so a cancel-only
+        // tenant is quiescent for retention pruning
+        let t = &m.stats().per_tenant[&session.id()];
+        assert_eq!((t.submitted, t.completed, t.lost), (4, 0, 4));
         assert!(matches!(handle.try_poll(), Err(DqError::Cancelled(_))));
         assert!(matches!(
             handle.wait_timeout(Duration::from_secs(1)),

@@ -25,7 +25,11 @@
 //! sub-queue per client, weighted round-robin drain), and every worker
 //! owns a private outbox dispatcher thread, so a slow worker never
 //! blocks dispatch to a fast one and a flooding tenant never starves a
-//! light one.
+//! light one. Idle workers steal compatible queued batches from
+//! backed-up siblings (DESIGN.md §14) — reservations move atomically
+//! under the registry lock, the owning tenant keeps its wait/dispatch
+//! accounting, and `ManagerConfig::steal = false` pins batches to
+//! their assigned worker when placement policy must win.
 
 pub mod admission;
 pub mod bankstore;

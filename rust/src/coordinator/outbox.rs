@@ -1,5 +1,6 @@
 //! Per-worker outboxes: one dispatcher thread per registered worker,
-//! draining that worker's dedicated batch queue.
+//! draining that worker's dedicated batch queue — plus work stealing
+//! between outboxes through the manager-held [`OutboxDirectory`].
 //!
 //! The original manager spawned execution threads from the scheduler
 //! loop itself, coupling every tenant's dispatch latency to every
@@ -7,9 +8,24 @@
 //! structural: the assigner enqueues a batch and returns immediately
 //! (microseconds); the worker's own dispatcher thread picks batches up
 //! in FIFO order and runs each `WorkerChannel::execute` on a transient
-//! execution thread, so batches holding concurrent reservations on a
-//! big worker genuinely overlap, and a stalled worker delays only its
-//! own queue — never dispatch to its neighbors (DESIGN.md §13).
+//! execution thread, so a stalled worker delays only its own queue —
+//! never dispatch to its neighbors (DESIGN.md §13).
+//!
+//! In-channel concurrency is bounded by the worker's registered thread
+//! budget (`WorkerProfile::threads`): handing a worker more concurrent
+//! batches than it has execution threads only moves the backlog inside
+//! the worker, where the manager can neither observe, steal, nor
+//! re-queue it. Batches beyond the budget wait in the outbox queue,
+//! where an idle sibling's dispatcher can steal them (the qubit
+//! reservation still caps how many batches bind to a worker at all).
+//!
+//! Stealing (DESIGN.md §14): a dispatcher that finds its own queue
+//! empty with a free channel slot asks the manager for a compatible
+//! batch queued on a sibling — `Manager::steal_for` scans the
+//! [`OutboxDirectory`] deepest-queue-first under the registry lock,
+//! removes the batch from the victim's queue, and moves its qubit
+//! reservation to the thief in the same lock hold, so eviction can
+//! never observe a half-moved batch.
 //!
 //! Lifecycle: spawned at registration, stopped at eviction or manager
 //! shutdown. A stopped outbox's unsent batches are *not* executed; the
@@ -19,34 +35,63 @@
 //! absorbed by the bank store's duplicate-completion guard plus the
 //! manager's landed-count accounting.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::job::CircuitJob;
+use super::job::{CircuitJob, JobId};
 use super::manager::{Manager, WeakManager, WorkerChannel};
 use super::registry::WorkerId;
 use crate::circuit::QuClassiConfig;
 
 /// One dispatch unit: same-config circuits executed as a single job on
-/// the worker (one qubit reservation, keyed by the head job).
+/// the worker (one qubit reservation, keyed by the head job). The
+/// admission timestamps ride along so queue-wait accounting is measured
+/// when the batch actually reaches a worker channel — the measured wait
+/// covers outbox residency and survives a steal.
 pub(crate) struct Batch {
     pub config: QuClassiConfig,
     pub jobs: Vec<CircuitJob>,
+    /// Per-job admission stamps (same order as `jobs`).
+    pub enqueued: Vec<Instant>,
+}
+
+impl Batch {
+    /// Qubit demand of the batch's single reservation.
+    pub fn demand(&self) -> usize {
+        self.config.qubit_demand()
+    }
+
+    /// The reservation key (head job id).
+    pub fn key(&self) -> JobId {
+        self.jobs[0].id
+    }
+}
+
+/// Queue state behind the outbox lock: pending batches plus the count
+/// of batches currently handed to the worker channel.
+struct OutboxState {
+    batches: VecDeque<Batch>,
+    /// Batches executing on transient threads right now (bounded by
+    /// `Outbox::slots`).
+    in_channel: usize,
 }
 
 /// A worker's dispatch queue plus its dedicated dispatcher thread.
 pub(crate) struct Outbox {
     worker: WorkerId,
     channel: Arc<dyn WorkerChannel>,
-    queue: Mutex<VecDeque<Batch>>,
+    /// In-channel concurrency budget (the worker's thread budget, >= 1).
+    slots: usize,
+    state: Mutex<OutboxState>,
     cv: Condvar,
     stop: AtomicBool,
 }
 
-/// Backstop poll period for the stop flag; enqueues wake the dispatcher
-/// immediately via the condvar, so this bounds only shutdown latency.
+/// Backstop poll period for the stop flag; enqueues, completions, and
+/// steal nudges wake the dispatcher immediately via the condvar, so this
+/// bounds only shutdown latency and missed-nudge steal retries.
 const STOP_POLL: Duration = Duration::from_millis(100);
 
 impl Outbox {
@@ -57,12 +102,14 @@ impl Outbox {
     pub fn spawn(
         worker: WorkerId,
         channel: Arc<dyn WorkerChannel>,
+        slots: usize,
         manager: Manager,
     ) -> Arc<Outbox> {
         let outbox = Arc::new(Outbox {
             worker,
             channel,
-            queue: Mutex::new(VecDeque::new()),
+            slots: slots.max(1),
+            state: Mutex::new(OutboxState { batches: VecDeque::new(), in_channel: 0 }),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
         });
@@ -77,21 +124,24 @@ impl Outbox {
     }
 
     /// Queue a batch for dispatch and wake the dispatcher. O(1); never
-    /// blocks on the worker. When the outbox has already been stopped
-    /// (eviction raced the assigner) the batch is handed back untouched
-    /// for the caller to re-queue; the stop flag is checked under the
-    /// queue lock, so an `Ok` means the batch was enqueued strictly
-    /// before the stop and is covered by the evictor's in-flight
-    /// reclaim.
-    pub fn enqueue(&self, batch: Batch) -> Result<(), Batch> {
-        let mut q = self.queue.lock().expect("outbox poisoned");
+    /// blocks on the worker. `Ok(surplus)` reports whether the batch
+    /// parked behind a saturated channel (`surplus == true` means steal
+    /// candidates now exist, so the manager nudges idle siblings). When
+    /// the outbox has already been stopped (eviction raced the assigner)
+    /// the batch is handed back untouched for the caller to re-queue;
+    /// the stop flag is checked under the queue lock, so an `Ok` means
+    /// the batch was enqueued strictly before the stop and is covered by
+    /// the evictor's in-flight reclaim.
+    pub fn enqueue(&self, batch: Batch) -> Result<bool, Batch> {
+        let mut st = self.state.lock().expect("outbox poisoned");
         if self.stop.load(Ordering::Relaxed) {
             return Err(batch);
         }
-        q.push_back(batch);
-        drop(q);
+        st.batches.push_back(batch);
+        let surplus = st.in_channel >= self.slots;
+        drop(st);
         self.cv.notify_all();
-        Ok(())
+        Ok(surplus)
     }
 
     /// Stop the dispatcher (eviction / shutdown). Idempotent; unsent
@@ -99,9 +149,32 @@ impl Outbox {
     /// flag is set under the queue lock so it serializes with
     /// [`Outbox::enqueue`]'s check.
     pub fn stop(&self) {
-        let q = self.queue.lock().expect("outbox poisoned");
+        let st = self.state.lock().expect("outbox poisoned");
         self.stop.store(true, Ordering::Relaxed);
-        drop(q);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Remove and return the oldest *queued* batch satisfying `fits`.
+    /// In-channel batches are never stolen — once `execute` has been
+    /// called, results may arrive, and moving the batch would execute
+    /// its circuits twice. Callers hold the registry lock (the manager's
+    /// steal path; DESIGN.md §14 lock order), which serializes the
+    /// removal with eviction's orphan snapshot.
+    pub fn steal_where(&self, fits: impl Fn(&Batch) -> bool) -> Option<Batch> {
+        let mut st = self.state.lock().expect("outbox poisoned");
+        let idx = st.batches.iter().position(fits)?;
+        st.batches.remove(idx)
+    }
+
+    /// Batches queued (not yet in-channel) — the stealable depth.
+    pub fn queue_depth(&self) -> usize {
+        self.state.lock().expect("outbox poisoned").batches.len()
+    }
+
+    /// Wake the dispatcher without queueing anything (steal opportunity
+    /// appeared on a sibling).
+    pub fn nudge(&self) {
         self.cv.notify_all();
     }
 
@@ -109,7 +182,26 @@ impl Outbox {
         self.stop.load(Ordering::Relaxed) || manager.is_stopped()
     }
 
-    fn run(&self, weak: WeakManager) {
+    /// Hand one batch to the worker channel on a transient execution
+    /// thread. The caller must already have charged a channel slot
+    /// (`in_channel`); the thread releases it and re-wakes the
+    /// dispatcher when the channel returns.
+    fn execute(me: &Arc<Outbox>, manager: &Manager, batch: Batch) {
+        let me = me.clone();
+        let m = manager.clone();
+        std::thread::Builder::new()
+            .name(format!("exec-w{}", me.worker))
+            .spawn(move || {
+                m.run_batch(me.worker, me.channel.as_ref(), batch);
+                let mut st = me.state.lock().expect("outbox poisoned");
+                st.in_channel -= 1;
+                drop(st);
+                me.cv.notify_all();
+            })
+            .expect("spawn batch execution");
+    }
+
+    fn run(self: Arc<Self>, weak: WeakManager) {
         loop {
             // One strong handle per iteration: the dispatcher pins the
             // manager for at most one park window, so a manager dropped
@@ -118,34 +210,111 @@ impl Outbox {
             if self.stopped(&manager) {
                 return;
             }
-            let batch = {
-                let mut q = self.queue.lock().expect("outbox poisoned");
-                if q.is_empty() {
-                    let (guard, _) = self.cv.wait_timeout(q, STOP_POLL).expect("outbox wait");
-                    q = guard;
+            // Own queue first, slots permitting. `idle` means a slot is
+            // free but there is nothing local to run — the steal case.
+            let (batch, idle) = {
+                let mut st = self.state.lock().expect("outbox poisoned");
+                if st.in_channel < self.slots {
+                    match st.batches.pop_front() {
+                        Some(b) => {
+                            st.in_channel += 1;
+                            (Some(b), false)
+                        }
+                        None => (None, true),
+                    }
+                } else {
+                    (None, false)
                 }
-                if self.stopped(&manager) {
-                    return;
-                }
-                q.pop_front()
             };
             if let Some(batch) = batch {
-                // Every queued batch holds its own qubit reservation —
-                // multi-tenant packing onto a big worker promises
-                // *concurrent* execution, so the dispatcher must never
-                // serialize one batch behind another. Execution runs on
-                // a transient thread per batch; outstanding batches per
-                // worker are bounded by its capacity / demand, so the
-                // spawn rate is bounded by the worker's own completion
-                // rate, and the assigner never pays spawn or RPC
-                // latency.
-                let m = manager.clone();
-                let channel = self.channel.clone();
-                let worker = self.worker;
-                std::thread::Builder::new()
-                    .name(format!("exec-w{worker}"))
-                    .spawn(move || m.run_batch(worker, channel.as_ref(), batch))
-                    .expect("spawn batch execution");
+                Self::execute(&self, &manager, batch);
+                continue;
+            }
+            if idle {
+                // Empty queue + free slot: try to relieve a backed-up
+                // sibling. On success, loop around and try again — a
+                // thief drains as fast as its own slots free up.
+                if let Some(batch) = manager.steal_for(self.worker) {
+                    let mut st = self.state.lock().expect("outbox poisoned");
+                    st.in_channel += 1;
+                    drop(st);
+                    Self::execute(&self, &manager, batch);
+                    continue;
+                }
+            }
+            // Park until an enqueue, a completion, a nudge, or the stop
+            // poll. Re-check runnable work under the lock so an event
+            // that landed between the scan above and here is never
+            // slept through.
+            let st = self.state.lock().expect("outbox poisoned");
+            if self.stopped(&manager) {
+                return;
+            }
+            if st.in_channel < self.slots && !st.batches.is_empty() {
+                continue;
+            }
+            let _ = self.cv.wait_timeout(st, STOP_POLL).expect("outbox wait");
+        }
+    }
+}
+
+/// The manager's directory of live outboxes — the structure a thief
+/// scans for victims. Owned by the manager behind its own mutex, taken
+/// either alone or directly inside the registry lock (DESIGN.md §14).
+pub(crate) struct OutboxDirectory {
+    map: HashMap<WorkerId, Arc<Outbox>>,
+}
+
+impl Default for OutboxDirectory {
+    fn default() -> OutboxDirectory {
+        OutboxDirectory::new()
+    }
+}
+
+impl OutboxDirectory {
+    pub fn new() -> OutboxDirectory {
+        OutboxDirectory { map: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, id: WorkerId, outbox: Arc<Outbox>) {
+        self.map.insert(id, outbox);
+    }
+
+    pub fn remove(&mut self, id: WorkerId) -> Option<Arc<Outbox>> {
+        self.map.remove(&id)
+    }
+
+    pub fn get(&self, id: WorkerId) -> Option<Arc<Outbox>> {
+        self.map.get(&id).cloned()
+    }
+
+    /// Every live outbox (shutdown sweep).
+    pub fn all(&self) -> Vec<Arc<Outbox>> {
+        self.map.values().cloned().collect()
+    }
+
+    /// Steal candidates for `thief`: siblings with a non-empty queue,
+    /// deepest queue first (ties broken by lowest worker id), so the
+    /// most backed-up victim is relieved first and victim selection is
+    /// deterministic.
+    pub fn victims(&self, thief: WorkerId) -> Vec<(WorkerId, Arc<Outbox>)> {
+        let mut v: Vec<(usize, WorkerId, Arc<Outbox>)> = self
+            .map
+            .iter()
+            .filter(|(id, _)| **id != thief)
+            .map(|(id, ob)| (ob.queue_depth(), *id, ob.clone()))
+            .filter(|(depth, _, _)| *depth > 0)
+            .collect();
+        v.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        v.into_iter().map(|(_, id, ob)| (id, ob)).collect()
+    }
+
+    /// Wake every dispatcher except `busy`'s (a surplus batch appeared
+    /// there — idle siblings should attempt a steal).
+    pub fn nudge_siblings(&self, busy: WorkerId) {
+        for (id, ob) in &self.map {
+            if *id != busy {
+                ob.nudge();
             }
         }
     }

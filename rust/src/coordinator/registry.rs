@@ -239,6 +239,46 @@ impl Registry {
         Ok(())
     }
 
+    /// Move an active reservation from one worker to another (work
+    /// stealing). Checks both ends first and mutates only when the whole
+    /// move can succeed, so a failure leaves no side effects; the
+    /// manager holds the registry lock across the call, which is what
+    /// makes the release-on-victim + reserve-on-thief pair atomic with
+    /// respect to eviction and assignment (DESIGN.md §14).
+    pub fn transfer(
+        &mut self,
+        from: WorkerId,
+        to: WorkerId,
+        job: JobId,
+        demand: usize,
+    ) -> Result<(), DqError> {
+        let donor_demand = self
+            .workers
+            .get(&from)
+            .and_then(|w| w.active.get(&job).copied())
+            .ok_or_else(|| {
+                DqError::WorkerLost(format!("no reservation for job {job} on worker w{from}"))
+            })?;
+        if donor_demand != demand {
+            return Err(DqError::Protocol(format!(
+                "reservation {job} demand mismatch: holds {donor_demand}, caller says {demand}"
+            )));
+        }
+        let thief = self
+            .workers
+            .get(&to)
+            .ok_or_else(|| DqError::WorkerLost(format!("unknown worker w{to}")))?;
+        if thief.available() < demand {
+            return Err(DqError::Unschedulable(format!(
+                "worker w{to} has {} available qubits, need {demand}",
+                thief.available()
+            )));
+        }
+        self.release(from, job);
+        self.reserve(to, job, demand).expect("transfer capacity checked");
+        Ok(())
+    }
+
     /// Release capacity when a circuit completes.
     pub fn release(&mut self, id: WorkerId, job: JobId) {
         if let Some(w) = self.workers.get_mut(&id) {
@@ -346,6 +386,42 @@ mod tests {
         // double release is harmless
         r.release(id, 1);
         assert_eq!(r.get(id).unwrap().available(), 10);
+    }
+
+    #[test]
+    fn transfer_moves_reservation_atomically() {
+        let mut r = Registry::new(5.0);
+        let a = r.register(10, 0.0, 0.0);
+        let b = r.register(10, 0.0, 0.0);
+        r.reserve(a, 7, 5).unwrap();
+        r.transfer(a, b, 7, 5).unwrap();
+        assert_eq!(r.get(a).unwrap().available(), 10);
+        assert_eq!(r.get(b).unwrap().available(), 5);
+        assert!(r.get(b).unwrap().active.contains_key(&7));
+        assert!(!r.get(a).unwrap().active.contains_key(&7));
+        // releasing on the thief frees its capacity
+        r.release(b, 7);
+        assert_eq!(r.get(b).unwrap().available(), 10);
+    }
+
+    #[test]
+    fn transfer_failures_leave_no_side_effects() {
+        let mut r = Registry::new(5.0);
+        let a = r.register(10, 0.0, 0.0);
+        let b = r.register(5, 0.0, 0.0);
+        r.reserve(a, 1, 7).unwrap();
+        r.reserve(b, 2, 3).unwrap();
+        // thief lacks capacity: 5 - 3 = 2 < 7
+        assert!(matches!(r.transfer(a, b, 1, 7), Err(DqError::Unschedulable(_))));
+        assert_eq!(r.get(a).unwrap().available(), 3);
+        assert_eq!(r.get(b).unwrap().available(), 2);
+        // unknown reservation / evicted donor
+        assert!(matches!(r.transfer(a, b, 99, 3), Err(DqError::WorkerLost(_))));
+        // demand mismatch is a protocol error
+        assert!(matches!(r.transfer(a, b, 1, 6), Err(DqError::Protocol(_))));
+        // unknown thief
+        assert!(matches!(r.transfer(a, 42, 1, 7), Err(DqError::WorkerLost(_))));
+        assert_eq!(r.get(a).unwrap().available(), 3, "failed transfers must not mutate");
     }
 
     #[test]

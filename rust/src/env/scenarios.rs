@@ -49,6 +49,9 @@ pub fn ibmq_figure(qubits: usize, calib: &Calibration, seed: u64) -> Vec<FigureR
                 calib: calib.clone(),
                 heartbeat_period: 5.0,
                 tenancy: Tenancy::MultiTenant,
+                // paper-faithful: the published co-Manager has no work
+                // stealing, so figure regeneration keeps it off
+                steal: false,
                 seed: seed + layers as u64 * 10 + workers as u64,
             };
             let jobs = vec![ClientJob {
@@ -83,6 +86,9 @@ pub fn gcp_one_client_figure(qubits: usize, calib: &Calibration, seed: u64) -> V
                 calib: calib.clone(),
                 heartbeat_period: 5.0,
                 tenancy: Tenancy::MultiTenant,
+                // paper-faithful: the published co-Manager has no work
+                // stealing, so figure regeneration keeps it off
+                steal: false,
                 seed: seed + layers as u64 * 10 + workers as u64,
             };
             let jobs = vec![ClientJob {
@@ -161,6 +167,8 @@ pub fn multi_tenant_figure(calib: &Calibration, seed: u64) -> Vec<TenancyRow> {
                 calib: calib.clone(),
                 heartbeat_period: 5.0,
                 tenancy,
+                // paper-faithful: no stealing in the published co-Manager
+                steal: false,
                 seed,
             },
             &jobs,

@@ -112,6 +112,16 @@ pub struct SimConfig {
     /// Heartbeat period (paper: 5 s).
     pub heartbeat_period: f64,
     pub tenancy: Tenancy,
+    /// Work stealing between worker backlogs (mirrors
+    /// `ManagerConfig::steal`, DESIGN.md §14): on FIFO backends, a
+    /// worker that completes a circuit with an empty backlog of its own
+    /// takes the oldest compatible bound-but-unstarted circuit from the
+    /// deepest sibling backlog, moving its qubit reservation. No effect
+    /// on processor-sharing backends (`cpu_share`), where every bound
+    /// circuit starts immediately. With `steal: false` the FIFO model
+    /// reproduces the pre-steal schedule exactly (service times are
+    /// drawn at bind time either way, so the RNG stream is identical).
+    pub steal: bool,
     pub seed: u64,
 }
 
@@ -148,10 +158,14 @@ struct SimJob {
 
 struct WorkerModel {
     spec: SimWorkerSpec,
-    /// Circuits assigned and not yet complete (executing or FIFO-queued).
+    /// Circuits assigned and not yet complete (executing or backlogged).
     concurrent: usize,
-    /// FIFO backends: virtual time the backend becomes idle.
-    free_at: f64,
+    /// FIFO backends: a circuit is currently in service.
+    busy: bool,
+    /// FIFO backends: circuits bound to this worker awaiting the
+    /// backend, with their bind-time service draws — the stealable
+    /// queue (the analog of the live manager's outbox).
+    backlog: VecDeque<(SimJob, f64)>,
 }
 
 struct ClientState {
@@ -176,6 +190,8 @@ struct SimState {
     env: EnvParams,
     calib: Calibration,
     tenancy: Tenancy,
+    /// FIFO-backlog work stealing on/off (see [`SimConfig::steal`]).
+    steal: bool,
     rng: Rng,
     next_job: u64,
     clients: Vec<ClientState>,
@@ -281,21 +297,28 @@ fn try_assign(des: &mut Des<SimState>, st: &mut SimState) {
             st.registry
                 .reserve(worker, job.seq, demand)
                 .expect("selection guaranteed capacity");
+            // The service time is drawn at *bind* time (whatever backend
+            // ends up running the circuit), so the RNG stream — and with
+            // steal off, the whole schedule — is independent of steals.
             let s = st.service_time(worker, &job.config);
-            let now = des.now();
             let model = st.models.get_mut(&worker).unwrap();
             model.concurrent += 1;
-            let dt = if st.env.fifo {
-                // sequential backend: start when the backend frees up
-                let start = model.free_at.max(now);
-                model.free_at = start + s;
-                (start + s) - now
+            if st.env.fifo {
+                if model.busy {
+                    // Sequential backend already serving: the circuit
+                    // waits in the worker's backlog (stealable).
+                    model.backlog.push_back((job, s));
+                } else {
+                    model.busy = true;
+                    des.schedule(s, move |des, st| {
+                        complete(des, st, worker, job);
+                    });
+                }
             } else {
-                s
-            };
-            des.schedule(dt, move |des, st| {
-                complete(des, st, worker, job);
-            });
+                des.schedule(s, move |des, st| {
+                    complete(des, st, worker, job);
+                });
+            }
             assigned = true;
         }
         if !assigned {
@@ -304,9 +327,80 @@ fn try_assign(des: &mut Des<SimState>, st: &mut SimState) {
     }
 }
 
+/// Start the next circuit on an idle FIFO backend.
+fn start_fifo(des: &mut Des<SimState>, st: &mut SimState, worker: WorkerId, job: SimJob, s: f64) {
+    let model = st.models.get_mut(&worker).unwrap();
+    debug_assert!(!model.busy, "FIFO backend double-started");
+    model.busy = true;
+    des.schedule(s, move |des, st| {
+        complete(des, st, worker, job);
+    });
+}
+
+/// Steal the oldest compatible bound-but-unstarted circuit from the
+/// sibling with the deepest backlog (ties broken by lowest worker id),
+/// moving its qubit reservation to the thief and rescaling the
+/// bind-time service draw by the speed ratio — the DES mirror of
+/// `Manager::steal_for` (DESIGN.md §14), so tenancy experiments see the
+/// same policy the live manager runs.
+fn steal_from_sibling(st: &mut SimState, thief: WorkerId) -> Option<(SimJob, f64)> {
+    let thief_avail = st.registry.get(thief)?.available();
+    if thief_avail == 0 {
+        return None;
+    }
+    let occupant = st.active_client();
+    let single = st.tenancy == Tenancy::SingleTenant;
+    // Victims deepest-backlog-first (ties: lowest id), falling through
+    // to shallower siblings when nothing in a deeper backlog fits —
+    // the same scan order as `Manager::steal_for`.
+    let mut victims: Vec<(usize, WorkerId)> = st
+        .models
+        .iter()
+        .filter(|(id, model)| **id != thief && !model.backlog.is_empty())
+        .map(|(id, model)| (model.backlog.len(), *id))
+        .collect();
+    victims.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for (_, victim) in victims {
+        let Some(idx) = st.models[&victim].backlog.iter().position(|(job, _)| {
+            job.config.qubit_demand() <= thief_avail
+                && (!single || occupant == Some(job.client))
+        }) else {
+            continue;
+        };
+        let (job, s) =
+            st.models.get_mut(&victim).unwrap().backlog.remove(idx).expect("index valid");
+        let demand = job.config.qubit_demand();
+        st.registry.release(victim, job.seq);
+        st.registry.reserve(thief, job.seq, demand).expect("steal capacity checked");
+        st.models.get_mut(&victim).unwrap().concurrent -= 1;
+        st.models.get_mut(&thief).unwrap().concurrent += 1;
+        let victim_speed = st.models[&victim].spec.speed;
+        let thief_speed = st.models[&thief].spec.speed;
+        return Some((job, s * victim_speed / thief_speed));
+    }
+    None
+}
+
 fn complete(des: &mut Des<SimState>, st: &mut SimState, worker: WorkerId, job: SimJob) {
     st.registry.release(worker, job.seq);
-    st.models.get_mut(&worker).unwrap().concurrent -= 1;
+    {
+        let model = st.models.get_mut(&worker).unwrap();
+        model.concurrent -= 1;
+        if st.env.fifo {
+            model.busy = false;
+        }
+    }
+    if st.env.fifo {
+        // Keep the freed backend busy: own backlog first; a worker left
+        // idle with an empty backlog steals from a backed-up sibling.
+        if let Some((next, s)) = st.models.get_mut(&worker).unwrap().backlog.pop_front() {
+            start_fifo(des, st, worker, next, s);
+        } else if st.steal {
+            if let Some((next, s)) = steal_from_sibling(st, worker) {
+                start_fifo(des, st, worker, next, s);
+            }
+        }
+    }
     st.total_done += 1;
     let client = job.client;
     let c = &mut st.clients[client];
@@ -381,7 +475,10 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
     for spec in &cfg.workers {
         let id = registry.register(spec.max_qubits, 0.0, 0.0);
         worker_ids.push(id);
-        models.insert(id, WorkerModel { spec: *spec, concurrent: 0, free_at: 0.0 });
+        models.insert(
+            id,
+            WorkerModel { spec: *spec, concurrent: 0, busy: false, backlog: VecDeque::new() },
+        );
     }
     let mut clients: Vec<ClientState> = jobs
         .iter()
@@ -405,6 +502,7 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
         env: cfg.env,
         calib: cfg.calib.clone(),
         tenancy: cfg.tenancy.clone(),
+        steal: cfg.steal,
         rng: Rng::new(cfg.seed),
         next_job: 0,
         clients,
@@ -461,6 +559,7 @@ mod tests {
             calib: Calibration::qiskit_like(),
             heartbeat_period: 5.0,
             tenancy,
+            steal: true,
             seed: 42,
         }
     }
@@ -590,6 +689,55 @@ mod tests {
         cfg.seed = 43;
         let b = simulate(&cfg, &jobs);
         assert_ne!(a.makespan, b.makespan);
+    }
+
+    /// Deterministic FIFO environment (no jitter, no cloud queueing):
+    /// isolates the steal policy from stochastic effects.
+    fn fifo_env() -> EnvParams {
+        EnvParams {
+            client_overhead: 0.01,
+            jitter_sigma: 0.0,
+            queue_delay_mean: 0.0,
+            cpu_share: false,
+            fifo: true,
+            cru_per_circuit: 0.10,
+        }
+    }
+
+    #[test]
+    fn steal_rebalances_skewed_fifo_backlogs() {
+        // One 4x-slow + one fast FIFO backend. Between heartbeats the
+        // registry's CRU is stale, so binding splits roughly evenly and
+        // the slow worker's backlog grows 4x deeper — exactly the
+        // binding-time skew the live manager's work stealing targets.
+        // With steal on, the fast worker drains the slow backlog and the
+        // epoch finishes strictly earlier; with steal off the model
+        // reproduces the pre-steal schedule.
+        let jobs = one_client(QuClassiConfig::new(5, 1).unwrap(), 200);
+        let mk = |steal: bool| SimConfig {
+            workers: vec![
+                SimWorkerSpec { max_qubits: 64, speed: 0.25 },
+                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
+            ],
+            env: fifo_env(),
+            calib: Calibration::qiskit_like(),
+            heartbeat_period: 5.0,
+            tenancy: Tenancy::MultiTenant,
+            steal,
+            seed: 9,
+        };
+        let on = simulate(&mk(true), &jobs);
+        let off = simulate(&mk(false), &jobs);
+        assert!(
+            on.makespan < off.makespan,
+            "steal on {} !< steal off {}",
+            on.makespan,
+            off.makespan
+        );
+        // conservation holds either way (simulate asserts internally),
+        // and the policy is deterministic per seed
+        let on2 = simulate(&mk(true), &jobs);
+        assert_eq!(on.makespan, on2.makespan);
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub use clock::{Clock, SystemClock, VirtualClock};
 pub use logging::{log_enabled, set_level, Level};
 pub use pool::parallel_indexed;
 pub use rng::Rng;
-pub use stats::{OnlineStats, Summary};
+pub use stats::{OnlineStats, Summary, WaitHistogram};

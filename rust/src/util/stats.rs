@@ -73,6 +73,108 @@ impl OnlineStats {
     }
 }
 
+/// Bucket count of [`WaitHistogram`] (fixed so it serializes as a flat
+/// 8-element array over the wire).
+pub const WAIT_HIST_BUCKETS: usize = 8;
+
+/// Upper bucket bounds in seconds — half-decade log scale from 1 ms to
+/// 1 s; the 8th bucket is unbounded (waits above 1 s are an SLO breach
+/// whichever decade they land in).
+pub const WAIT_HIST_BOUNDS: [f64; WAIT_HIST_BUCKETS - 1] =
+    [0.001, 0.003_162, 0.01, 0.031_62, 0.1, 0.316_2, 1.0];
+
+/// Fixed 8-bucket log-scale histogram of queue-wait seconds.
+///
+/// Small enough to ship per tenant inside the manager's `stats` RPC
+/// payload, precise enough for p50/p90 SLO checks without retaining raw
+/// samples. Quantiles are *conservative*: [`WaitHistogram::quantile`]
+/// returns the upper bound of the bucket the quantile lands in, so the
+/// true value is never larger than reported.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WaitHistogram {
+    counts: [u64; WAIT_HIST_BUCKETS],
+}
+
+impl WaitHistogram {
+    pub fn new() -> WaitHistogram {
+        WaitHistogram::default()
+    }
+
+    /// Record one wait (seconds). Values at or below the first bound
+    /// land in bucket 0; values above the last bound land in the
+    /// overflow bucket.
+    pub fn record(&mut self, secs: f64) {
+        let idx = WAIT_HIST_BOUNDS
+            .iter()
+            .position(|&bound| secs <= bound)
+            .unwrap_or(WAIT_HIST_BUCKETS - 1);
+        self.counts[idx] += 1;
+    }
+
+    /// The raw bucket counts (wire encode).
+    pub fn counts(&self) -> &[u64; WAIT_HIST_BUCKETS] {
+        &self.counts
+    }
+
+    /// Samples recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Add another histogram's buckets into this one.
+    pub fn merge(&mut self, other: &WaitHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Rebuild from serialized bucket counts (wire decode); `None`
+    /// unless exactly [`WAIT_HIST_BUCKETS`] counts are supplied.
+    pub fn from_counts(counts: &[u64]) -> Option<WaitHistogram> {
+        if counts.len() != WAIT_HIST_BUCKETS {
+            return None;
+        }
+        let mut h = WaitHistogram::default();
+        h.counts.copy_from_slice(counts);
+        Some(h)
+    }
+
+    /// Conservative quantile estimate: the upper bound of the bucket
+    /// where the cumulative count first reaches `ceil(q * total)`. An
+    /// empty histogram reports 0; a quantile landing in the overflow
+    /// bucket reports `f64::INFINITY` (all that is known is "> 1 s").
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = (q * total as f64).ceil().max(1.0) as u64;
+        let mut cumulative = 0u64;
+        for (i, &count) in self.counts.iter().enumerate() {
+            cumulative += count;
+            if cumulative >= rank {
+                return if i < WAIT_HIST_BOUNDS.len() {
+                    WAIT_HIST_BOUNDS[i]
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Median upper bound.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 90th-percentile upper bound.
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+}
+
 /// Batch summary with exact percentiles (sorts a copy).
 #[derive(Debug, Clone)]
 pub struct Summary {
@@ -183,5 +285,51 @@ mod tests {
     #[should_panic]
     fn summary_empty_panics() {
         let _ = Summary::of(&[]);
+    }
+
+    #[test]
+    fn wait_histogram_buckets_and_quantiles() {
+        let mut h = WaitHistogram::new();
+        assert_eq!(h.quantile(0.9), 0.0, "empty histogram reports 0");
+        // 9 fast samples in the 1 ms bucket, 1 slow one at ~200 ms
+        for _ in 0..9 {
+            h.record(0.000_5);
+        }
+        h.record(0.2);
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.counts()[0], 9);
+        assert!((h.p50() - 0.001).abs() < 1e-12);
+        // p90 rank = 9 -> still the fast bucket; p91+ crosses into slow
+        assert!((h.p90() - 0.001).abs() < 1e-12);
+        assert!((h.quantile(0.95) - 0.316_2).abs() < 1e-12);
+        // overflow bucket is reported as unbounded
+        h.record(5.0);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn wait_histogram_merge_and_wire_counts() {
+        let mut a = WaitHistogram::new();
+        a.record(0.0005);
+        a.record(0.05);
+        let mut b = WaitHistogram::new();
+        b.record(0.05);
+        b.record(2.0);
+        a.merge(&b);
+        assert_eq!(a.total(), 4);
+        let back = WaitHistogram::from_counts(&a.counts()[..]).unwrap();
+        assert_eq!(back, a);
+        assert!(WaitHistogram::from_counts(&[1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn wait_histogram_boundary_values() {
+        let mut h = WaitHistogram::new();
+        h.record(0.001); // exactly the first bound -> bucket 0
+        h.record(1.0); // exactly the last bound -> bucket 6
+        h.record(1.000_001); // just above -> overflow
+        h.record(-0.5); // negative clock skew clamps to bucket 0
+        let c = h.counts();
+        assert_eq!((c[0], c[6], c[7]), (2, 1, 1));
     }
 }

@@ -7,13 +7,23 @@
 //!  * conservation: every submitted circuit completes exactly once, even
 //!    under random worker joins/evictions (requeue path)
 //!  * determinism: the DES produces identical results for a seed
+//!  * exactly-once under chaos: arbitrary steal/evict/cancel
+//!    interleavings on the *live* manager never execute a circuit twice
+//!    and never lose one (completed + failed == submitted)
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use dqulearn::circuit::QuClassiConfig;
 use dqulearn::coordinator::registry::Registry;
 use dqulearn::coordinator::scheduler;
+use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel, WorkerProfile};
 use dqulearn::env::{scenarios, sim, Calibration, ClientJob, EnvParams, SimConfig, SimWorkerSpec, Tenancy};
+use dqulearn::error::DqError;
+use dqulearn::model::exec::CircuitPair;
 use dqulearn::testlib::{forall, usize_in, vec_of};
-use dqulearn::util::Rng;
+use dqulearn::util::{Rng, VirtualClock};
 
 /// Random (max_qubits, cru, demand-sequence) fixture.
 fn fixture(seed: u64) -> (Registry, Vec<u64>, Rng) {
@@ -41,7 +51,7 @@ fn capacity_invariants_under_random_ops() {
             let mut live: Vec<(u64, u64, usize)> = Vec::new(); // (worker, job, demand)
             let mut next_job = 0u64;
             for _step in 0..200 {
-                match rng.index(3) {
+                match rng.index(4) {
                     0 => {
                         // try to place a circuit
                         let demand = [5usize, 7][rng.index(2)];
@@ -57,6 +67,19 @@ fn capacity_invariants_under_random_ops() {
                         if !live.is_empty() {
                             let (w, job, _) = live.swap_remove(rng.index(live.len()));
                             reg.release(w, job);
+                        }
+                    }
+                    2 => {
+                        // steal: transfer a random reservation to a random
+                        // worker; success updates the books, failure must
+                        // leave them untouched (checked below either way)
+                        if !live.is_empty() {
+                            let i = rng.index(live.len());
+                            let (from, job, demand) = live[i];
+                            let to = ids[rng.index(ids.len())];
+                            if to != from && reg.transfer(from, to, job, demand).is_ok() {
+                                live[i].0 = to;
+                            }
                         }
                     }
                     _ => {
@@ -147,6 +170,7 @@ fn des_conserves_circuits_across_workloads() {
                 calib: Calibration::qiskit_like(),
                 heartbeat_period: 5.0,
                 tenancy: Tenancy::MultiTenant,
+                steal: true,
                 seed: sizes.iter().sum::<usize>() as u64,
             };
             let result = sim::simulate(&cfg, &jobs);
@@ -160,6 +184,203 @@ fn des_conserves_circuits_across_workloads() {
             }
             Ok(())
         },
+    );
+}
+
+/// Execution-audit channel for the chaos property. Reliable workers log
+/// each circuit's marker (`data[0]`) and answer instantly; doomed
+/// workers park every execute on a shared gate until the test releases
+/// it, then fail — so a doomed worker *never* executes anything, and the
+/// only way its circuits complete is a steal or an eviction re-queue.
+struct AuditChannel {
+    doomed: bool,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    log: Arc<Mutex<Vec<u32>>>,
+}
+
+impl WorkerChannel for AuditChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        if self.doomed {
+            let (lock, cv) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            return Err(DqError::WorkerLost("doomed worker".to_string()));
+        }
+        let mut log = self.log.lock().unwrap();
+        for (_, data) in pairs {
+            log.push(data[0] as u32);
+        }
+        Ok(vec![0.5; pairs.len()])
+    }
+}
+
+/// One chaos run: random worker profiles (some doomed to stall and be
+/// evicted), random bank sizes across random tenants, random cancels,
+/// and virtual-time eviction passes racing the steal path. Returns an
+/// error string describing the first violated invariant.
+fn run_steal_evict_cancel(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let clock = Arc::new(VirtualClock::new());
+    let manager = Manager::with_clock(
+        ManagerConfig {
+            eviction_tick: Duration::from_millis(1),
+            max_batch: 4,
+            steal: rng.index(2) == 0,
+            ..Default::default()
+        },
+        clock.clone(),
+    );
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let log: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // One always-live 20-qubit rescue worker (every demand fits), plus a
+    // random mix of extra reliable and doomed workers.
+    let mut reliable = vec![manager.register(
+        WorkerProfile::new(20).cru(rng.f64()),
+        Arc::new(AuditChannel { doomed: false, gate: gate.clone(), log: log.clone() }),
+    )];
+    for _ in 0..rng.index(3) {
+        reliable.push(manager.register(
+            WorkerProfile::new([5, 7, 10, 20][rng.index(4)])
+                .cru(rng.f64())
+                .threads(1 + rng.index(2)),
+            Arc::new(AuditChannel { doomed: false, gate: gate.clone(), log: log.clone() }),
+        ));
+    }
+    for _ in 0..1 + rng.index(3) {
+        manager.register(
+            WorkerProfile::new([5, 10, 20][rng.index(3)]).cru(rng.f64()),
+            Arc::new(AuditChannel { doomed: true, gate: gate.clone(), log: log.clone() }),
+        );
+    }
+
+    // Advance virtual time in sub-deadline steps (heartbeat deadline is
+    // 3 x 5 s): reliables are re-heartbeated inside every step, so only
+    // the doomed workers ever cross the eviction line — even if the
+    // 1 ms liveness tick fires mid-step.
+    let step = |manager: &Manager| {
+        clock.advance(10.0);
+        for &w in &reliable {
+            let _ = manager.heartbeat(w, 0.1);
+        }
+    };
+
+    let sessions: Vec<_> = (0..1 + rng.index(3)).map(|_| manager.session()).collect();
+    let mut next_marker: u32 = 0;
+    // (handle, size, first marker, cancelled)
+    let mut banks = Vec::new();
+    for _ in 0..2 + rng.index(4) {
+        match rng.index(4) {
+            0 => step(&manager),
+            1 => std::thread::sleep(Duration::from_millis(1)),
+            2 => {
+                if !banks.is_empty() {
+                    let i = rng.index(banks.len());
+                    if !banks[i].3 {
+                        banks[i].0.cancel().map_err(|e| format!("cancel: {e}"))?;
+                        banks[i].3 = true;
+                    }
+                }
+            }
+            _ => {}
+        }
+        let session = &sessions[rng.index(sessions.len())];
+        let config = QuClassiConfig::new([5, 7][rng.index(2)], 1).unwrap();
+        let size = 1 + rng.index(40);
+        let start = next_marker;
+        let pairs: Vec<CircuitPair> = (0..size)
+            .map(|_| {
+                let marker = next_marker;
+                next_marker += 1;
+                let mut data = vec![0.25f32; config.n_features()];
+                data[0] = marker as f32;
+                (vec![0.1; config.n_params()], data)
+            })
+            .collect();
+        let handle = session.submit(config, &pairs).map_err(|e| format!("submit: {e}"))?;
+        banks.push((handle, size, start, false));
+    }
+
+    // Evict every doomed worker (three more sub-deadline steps push
+    // anything not heartbeating past the line), then open the gate so
+    // parked doomed executions fail out and release their reservations.
+    for _ in 0..3 {
+        step(&manager);
+    }
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    let mut ok_ranges: Vec<(u32, u32)> = Vec::new();
+    let (mut completed, mut failed, mut submitted) = (0usize, 0usize, 0usize);
+    for (handle, size, start, cancelled) in banks {
+        submitted += size;
+        match handle.wait_timeout(Duration::from_secs(10)) {
+            Ok(fids) => {
+                if fids.len() != size {
+                    return Err(format!("bank returned {} fids for {size} circuits", fids.len()));
+                }
+                if cancelled {
+                    return Err("cancelled bank completed as Ok".to_string());
+                }
+                completed += size;
+                ok_ranges.push((start, start + size as u32));
+            }
+            Err(DqError::Cancelled(_)) if cancelled => failed += size,
+            Err(e) => return Err(format!("bank failed unexpectedly: {e} (cancelled={cancelled})")),
+        }
+    }
+    if completed + failed != submitted {
+        return Err(format!("conservation: {completed} + {failed} != {submitted}"));
+    }
+
+    // Quiesce: every reservation must drain (a leak here means a steal
+    // or eviction lost track of a batch), then audit the execution log.
+    let t0 = std::time::Instant::now();
+    while manager.worker_states().iter().map(|w| w.occupied).sum::<usize>() > 0 {
+        if t0.elapsed() > Duration::from_secs(5) {
+            return Err("qubit reservations leaked after all banks resolved".to_string());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let log = log.lock().unwrap();
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &marker in log.iter() {
+        *counts.entry(marker).or_insert(0) += 1;
+    }
+    for (&marker, &count) in &counts {
+        if count > 1 {
+            return Err(format!("circuit {marker} executed {count} times"));
+        }
+    }
+    for (lo, hi) in ok_ranges {
+        for marker in lo..hi {
+            if counts.get(&marker).copied().unwrap_or(0) != 1 {
+                return Err(format!("circuit {marker} of a completed bank never executed"));
+            }
+        }
+    }
+    drop(log);
+    manager.shutdown();
+    Ok(())
+}
+
+#[test]
+fn steal_evict_cancel_interleavings_conserve_circuits() {
+    forall(
+        "steal-evict-cancel",
+        0x57EA1,
+        16,
+        usize_in(0, u32::MAX as usize),
+        |&seed| run_steal_evict_cancel(seed as u64),
     );
 }
 
@@ -190,6 +411,7 @@ fn single_tenant_never_faster_overall() {
                 calib: Calibration::qiskit_like(),
                 heartbeat_period: 5.0,
                 tenancy,
+                steal: true,
                 seed: seed as u64,
             };
             let single = sim::simulate(&mk(Tenancy::SingleTenant), &jobs);

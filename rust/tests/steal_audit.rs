@@ -1,0 +1,488 @@
+//! Deterministic audit of work stealing between outboxes (DESIGN.md
+//! §14): stealing is the kind of feature that is easy to make fast and
+//! wrong, so each of the three concurrent structures a steal crosses —
+//! outbox queues, registry reservations, in-flight accounting — gets a
+//! test that pins its invariant:
+//!
+//! * a stalled worker's queued batches drain via siblings (liveness);
+//! * every circuit executes exactly once under a steal racing the
+//!   victim's eviction, looped >= 100 times (safety);
+//! * a stolen batch's wait/dispatch counters land on the owning tenant
+//!   (accounting);
+//! * qubit reservations conserve — `occupied <= max_qubits` on every
+//!   worker at every instant — across steals (capacity);
+//! * `ManagerConfig::steal = false` really pins batches to their
+//!   assigned worker (the policy-isolation knob).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel, WorkerProfile};
+use dqulearn::error::DqError;
+use dqulearn::model::exec::CircuitPair;
+use dqulearn::util::VirtualClock;
+
+/// A shared on/off latch channels park on.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Stalled-but-alive worker: every execute parks on the gate, then
+/// completes normally. `entered` counts batches that reached the
+/// channel, `executed` counts circuits that actually ran.
+struct GateChannel {
+    gate: Arc<Gate>,
+    entered: Arc<AtomicUsize>,
+    executed: Arc<AtomicUsize>,
+}
+
+impl WorkerChannel for GateChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        self.gate.wait_open();
+        self.executed.fetch_add(pairs.len(), Ordering::SeqCst);
+        Ok(vec![0.5; pairs.len()])
+    }
+}
+
+/// Dead worker: parks on the gate, then *fails* — it never executes a
+/// circuit, so anything routed to it must complete elsewhere (steal or
+/// eviction re-queue) for its bank to resolve.
+struct DeadChannel {
+    gate: Arc<Gate>,
+}
+
+impl WorkerChannel for DeadChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        _pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        self.gate.wait_open();
+        Err(DqError::WorkerLost("dead worker".to_string()))
+    }
+}
+
+/// Instant worker that logs each circuit's marker (`data[0]`) and
+/// counts batches — the execution audit trail.
+struct RecordChannel {
+    log: Arc<Mutex<Vec<u32>>>,
+    batches: Arc<AtomicUsize>,
+}
+
+impl WorkerChannel for RecordChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        let mut log = self.log.lock().unwrap();
+        for (_, data) in pairs {
+            log.push(data[0] as u32);
+        }
+        Ok(vec![0.5; pairs.len()])
+    }
+}
+
+/// Instant worker with a fixed per-batch service time (skew generator).
+struct PacedChannel {
+    delay: Duration,
+}
+
+impl WorkerChannel for PacedChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        std::thread::sleep(self.delay);
+        Ok(vec![0.5; pairs.len()])
+    }
+}
+
+fn cfg5() -> QuClassiConfig {
+    QuClassiConfig::new(5, 1).unwrap()
+}
+
+fn plain_pairs(config: &QuClassiConfig, n: usize) -> Vec<CircuitPair> {
+    (0..n)
+        .map(|_| (vec![0.1; config.n_params()], vec![0.2; config.n_features()]))
+        .collect()
+}
+
+/// Pairs whose `data[0]` carries a unique marker (`base + index`), so a
+/// recording channel can prove exactly-once execution.
+fn marked_pairs(config: &QuClassiConfig, n: usize, base: u32) -> Vec<CircuitPair> {
+    (0..n)
+        .map(|i| {
+            let mut data = vec![0.2f32; config.n_features()];
+            data[0] = (base + i as u32) as f32;
+            (vec![0.1; config.n_params()], data)
+        })
+        .collect()
+}
+
+/// Poll `cond` until true or `timeout` elapses; returns the final state.
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    loop {
+        if cond() {
+            return true;
+        }
+        if start.elapsed() >= timeout {
+            return cond();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A 20-qubit stalled worker accumulates four 5-qubit batches: one
+/// stuck in its channel (unstealable — results could arrive), three
+/// queued in its outbox. A late-joining idle sibling must drain all
+/// three queued batches via steals while the victim stays wedged.
+#[test]
+fn stalled_workers_queued_batches_drain_via_siblings() {
+    let manager = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
+    let gate = Gate::new();
+    let entered = Arc::new(AtomicUsize::new(0));
+    let executed = Arc::new(AtomicUsize::new(0));
+    manager.register(
+        WorkerProfile::new(20).cru(0.0),
+        Arc::new(GateChannel {
+            gate: gate.clone(),
+            entered: entered.clone(),
+            executed: executed.clone(),
+        }),
+    );
+    let session = manager.session();
+    let handle = session.submit(cfg5(), &plain_pairs(&cfg5(), 16)).unwrap();
+
+    // All 16 circuits bind to the only worker: 4 batches x 5 qubits fill
+    // its 20-qubit capacity; one batch reaches the (stalled) channel.
+    assert!(
+        wait_until(Duration::from_secs(5), || manager.queue_len() == 0
+            && entered.load(Ordering::SeqCst) == 1),
+        "work never bound to the stalled worker"
+    );
+    {
+        let states = manager.worker_states();
+        assert_eq!(states.len(), 1);
+        assert_eq!(states[0].occupied, 20, "4 batches x 5 qubits reserved");
+    }
+
+    // An idle 5-qubit sibling joins and steals the three queued batches
+    // (each fits exactly: relaxed AR >= demand, like the scheduler).
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let thief_batches = Arc::new(AtomicUsize::new(0));
+    manager.register(
+        WorkerProfile::new(5).cru(0.9),
+        Arc::new(RecordChannel { log: log.clone(), batches: thief_batches.clone() }),
+    );
+    assert!(
+        wait_until(Duration::from_secs(5), || manager.stats().completed >= 12),
+        "queued batches did not drain via the sibling: stats = {:?}",
+        manager.stats()
+    );
+    let stats = manager.stats();
+    assert_eq!(stats.steals, 3, "exactly the three queued batches are stealable");
+    assert_eq!(thief_batches.load(Ordering::SeqCst), 3);
+    assert_eq!(executed.load(Ordering::SeqCst), 0, "the stalled worker ran nothing");
+    // Reservations moved with the batches: victim holds only its
+    // in-channel batch, and nobody exceeds capacity.
+    for w in manager.worker_states() {
+        assert!(w.occupied <= w.max_qubits, "w{} overcommitted: {:?}", w.id, w);
+    }
+    let victim = &manager.worker_states()[0];
+    assert_eq!(victim.occupied, 5, "only the in-channel batch remains on the victim");
+
+    // Un-wedge the victim: its one in-channel batch completes and the
+    // bank resolves with every fidelity present.
+    gate.release();
+    let fids = handle.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(fids, vec![0.5; 16]);
+    assert_eq!(manager.stats().completed, 16);
+    manager.shutdown();
+}
+
+/// Race a thief's steals against the victim's eviction >= 100 times:
+/// whichever path claims each batch, every circuit must execute exactly
+/// once (the victim's channel is dead, so its circuits can only
+/// complete via a steal or the evictor's re-queue — a double-claim
+/// would show up as a duplicate marker, a lost batch as a hang).
+#[test]
+fn exactly_once_under_steal_vs_evict_race() {
+    for iter in 0..100u32 {
+        let clock = Arc::new(VirtualClock::new());
+        let manager = Manager::with_clock(
+            ManagerConfig {
+                max_batch: 4,
+                eviction_tick: Duration::from_millis(1),
+                ..Default::default()
+            },
+            clock.clone(),
+        );
+        let gate = Gate::new();
+        manager.register(
+            WorkerProfile::new(20).cru(0.0),
+            Arc::new(DeadChannel { gate: gate.clone() }),
+        );
+        let session = manager.session();
+        let base = iter * 1000;
+        let handle = session.submit(cfg5(), &marked_pairs(&cfg5(), 16, base)).unwrap();
+        assert!(
+            wait_until(Duration::from_secs(5), || manager.queue_len() == 0),
+            "iter {iter}: batches never bound to the victim"
+        );
+
+        // Make the victim stale (3 x 5 s heartbeat deadline), then
+        // register the thief. The 1 ms liveness tick and the thief's
+        // steal loop now race for the victim's batches; the interleaving
+        // varies run to run, and both paths must be exact-once.
+        clock.advance(100.0);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let thief_batches = Arc::new(AtomicUsize::new(0));
+        manager.register(
+            WorkerProfile::new(20).cru(0.5),
+            Arc::new(RecordChannel { log: log.clone(), batches: thief_batches.clone() }),
+        );
+
+        let fids = handle
+            .wait_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("iter {iter}: bank failed: {e}"));
+        assert_eq!(fids.len(), 16);
+
+        // Exactly-once audit: 16 unique markers, each exactly once.
+        {
+            let log = log.lock().unwrap();
+            let mut counts: HashMap<u32, usize> = HashMap::new();
+            for &m in log.iter() {
+                *counts.entry(m).or_insert(0) += 1;
+            }
+            for marker in base..base + 16 {
+                assert_eq!(
+                    counts.get(&marker).copied().unwrap_or(0),
+                    1,
+                    "iter {iter}: circuit {marker} execution count wrong (log len {})",
+                    log.len()
+                );
+            }
+            assert_eq!(log.len(), 16, "iter {iter}: stray executions");
+        }
+        for w in manager.worker_states() {
+            assert!(w.occupied <= w.max_qubits, "iter {iter}: w{} overcommitted", w.id);
+        }
+        gate.release(); // un-park the dead channel so its thread exits
+        manager.shutdown();
+    }
+}
+
+/// A stolen batch's dispatch/wait/steal counters land on the tenant
+/// that submitted it — never on the thief's other tenants — and the
+/// manager-reported wait histogram counts every circuit.
+#[test]
+fn stolen_batch_counters_land_on_owning_tenant() {
+    let manager = Manager::new(ManagerConfig { max_batch: 4, ..Default::default() });
+    let gate = Gate::new();
+    let entered = Arc::new(AtomicUsize::new(0));
+    let executed = Arc::new(AtomicUsize::new(0));
+    let victim = manager.register(
+        WorkerProfile::new(20).cru(0.0),
+        Arc::new(GateChannel {
+            gate: gate.clone(),
+            entered: entered.clone(),
+            executed: executed.clone(),
+        }),
+    );
+    let owner = manager.session();
+    let other = manager.session();
+    let owner_bank = owner.submit(cfg5(), &plain_pairs(&cfg5(), 16)).unwrap();
+    assert!(wait_until(Duration::from_secs(5), || manager.queue_len() == 0
+        && entered.load(Ordering::SeqCst) == 1));
+
+    // Thief joins; the three queued batches (12 circuits) move to it.
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let thief_batches = Arc::new(AtomicUsize::new(0));
+    manager.register(
+        WorkerProfile::new(20).cru(0.9),
+        Arc::new(RecordChannel { log, batches: thief_batches.clone() }),
+    );
+    assert!(wait_until(Duration::from_secs(5), || manager.stats().steals == 3));
+
+    // A second tenant's bank lands directly on the idle thief — age the
+    // stalled victim's CRU past the thief's first so Algorithm 2 stops
+    // preferring it, keeping this bank steal-free.
+    manager.heartbeat(victim, 0.99).unwrap();
+    let other_fids = other.execute(cfg5(), &plain_pairs(&cfg5(), 4)).unwrap();
+    assert_eq!(other_fids.len(), 4);
+
+    gate.release();
+    let owner_fids = owner_bank.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(owner_fids.len(), 16);
+
+    let stats = manager.stats();
+    let t_owner = &stats.per_tenant[&owner.id()];
+    let t_other = &stats.per_tenant[&other.id()];
+    assert_eq!(t_owner.stolen, 12, "three stolen 4-circuit batches belong to the owner");
+    assert_eq!(t_owner.submitted, 16);
+    assert_eq!(t_owner.dispatched, 16, "every owner circuit reached a channel once");
+    assert_eq!(t_owner.completed, 16);
+    assert_eq!(
+        t_owner.wait_hist.total(),
+        16,
+        "the wait histogram counts every dispatched circuit, stolen or not"
+    );
+    assert!(t_owner.wait_total_s >= 0.0 && t_owner.wait_max_s >= 0.0);
+    assert_eq!((t_other.stolen, t_other.completed), (0, 4));
+    assert_eq!(stats.steals, 3);
+    manager.shutdown();
+}
+
+/// Capacity audit under a churny steal-heavy workload: a background
+/// poller snapshots every worker's occupancy while three tenants hammer
+/// a mixed pool with a slow (steal-victim) big worker — `occupied <=
+/// max_qubits` must hold on every snapshot, and everything must drain
+/// to zero at the end.
+#[test]
+fn reservations_conserve_across_steals() {
+    let manager = Manager::new(ManagerConfig { max_batch: 2, ..Default::default() });
+    manager.register(
+        WorkerProfile::new(20).cru(0.0),
+        Arc::new(PacedChannel { delay: Duration::from_millis(2) }),
+    );
+    manager.register(WorkerProfile::new(5).cru(0.1), Arc::new(PacedChannel {
+        delay: Duration::from_micros(50),
+    }));
+    manager.register(WorkerProfile::new(10).cru(0.1), Arc::new(PacedChannel {
+        delay: Duration::from_micros(50),
+    }));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let violated = Arc::new(Mutex::new(None::<String>));
+    let poller = {
+        let manager = manager.clone();
+        let stop = stop.clone();
+        let violated = violated.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                for w in manager.worker_states() {
+                    if w.occupied > w.max_qubits {
+                        *violated.lock().unwrap() = Some(format!(
+                            "w{} occupied {} > max {}",
+                            w.id, w.occupied, w.max_qubits
+                        ));
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+
+    let tenants: Vec<_> = (0..3)
+        .map(|_| {
+            let m = manager.clone();
+            std::thread::spawn(move || {
+                let session = m.session();
+                let pairs = plain_pairs(&cfg5(), 20);
+                for _ in 0..10 {
+                    let fids = session.execute(cfg5(), &pairs).unwrap();
+                    assert_eq!(fids.len(), 20);
+                }
+            })
+        })
+        .collect();
+    for t in tenants {
+        t.join().unwrap();
+    }
+
+    // Quiesce: every reservation released once the workload drains.
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            manager.worker_states().iter().map(|w| w.occupied).sum::<usize>() == 0
+        }),
+        "reservations leaked: {:?}",
+        manager.worker_states()
+    );
+    stop.store(true, Ordering::SeqCst);
+    poller.join().unwrap();
+    assert!(violated.lock().unwrap().is_none(), "{:?}", violated.lock().unwrap());
+
+    let stats = manager.stats();
+    assert_eq!(stats.completed, 600);
+    assert!(
+        stats.steals > 0,
+        "slow-big-worker skew should have produced at least one steal: {stats:?}"
+    );
+    manager.shutdown();
+}
+
+/// `ManagerConfig::steal = false` pins batches to their assigned
+/// worker: a stalled worker's queued batches wait for *it*, even while
+/// an idle sibling sits next to them — the knob that lets placement
+/// policies (and tests) rule out load-balancing interference.
+#[test]
+fn steal_knob_disables_stealing() {
+    let manager =
+        Manager::new(ManagerConfig { max_batch: 4, steal: false, ..Default::default() });
+    let gate = Gate::new();
+    let entered = Arc::new(AtomicUsize::new(0));
+    let executed = Arc::new(AtomicUsize::new(0));
+    manager.register(
+        WorkerProfile::new(20).cru(0.0),
+        Arc::new(GateChannel {
+            gate: gate.clone(),
+            entered: entered.clone(),
+            executed: executed.clone(),
+        }),
+    );
+    let session = manager.session();
+    let handle = session.submit(cfg5(), &plain_pairs(&cfg5(), 16)).unwrap();
+    assert!(wait_until(Duration::from_secs(5), || manager.queue_len() == 0
+        && entered.load(Ordering::SeqCst) == 1));
+
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let thief_batches = Arc::new(AtomicUsize::new(0));
+    manager.register(
+        WorkerProfile::new(20).cru(0.9),
+        Arc::new(RecordChannel { log, batches: thief_batches.clone() }),
+    );
+    // Give would-be thieves ample time (covers the 100 ms steal retry).
+    std::thread::sleep(Duration::from_millis(300));
+    let stats = manager.stats();
+    assert_eq!(stats.steals, 0, "steal=false must never move a batch");
+    assert_eq!(stats.completed, 0);
+    assert_eq!(thief_batches.load(Ordering::SeqCst), 0);
+
+    // The pinned batches still complete on their own worker.
+    gate.release();
+    let fids = handle.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(fids, vec![0.5; 16]);
+    assert_eq!(executed.load(Ordering::SeqCst), 16);
+    manager.shutdown();
+}
