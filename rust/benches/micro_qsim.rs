@@ -1,21 +1,141 @@
-//! Microbenchmarks for the Rust statevector simulator (the worker's
-//! fallback backend and the PJRT cross-check oracle).
+//! Microbenchmarks for the Rust statevector simulator and the
+//! compiled-circuit pipeline (DESIGN.md §15), plus the qsim perf gate.
+//!
+//! Series:
+//!
+//! * single-gate kernels across register widths, including the blocked
+//!   vs masked `apply_2q` ablation (the cache-blocked kernel rewrite);
+//! * per paper config, the four circuit paths: **seed**
+//!   (`simulate_fidelity`: gate-list build + serial walk), **fused**
+//!   (per-circuit pairwise fusion), **compiled cold** (template build +
+//!   plan + bind each iteration) and **compiled cached** (plan reused,
+//!   parameters rebound into a reused bound program, scratch state reset
+//!   — the executor hot loop);
+//! * the 3-qubit-block ablation (`max_block` 1/2/3) on q7 l3;
+//! * one-off costs (fusion pass, plan compile, gate-list build);
+//! * the shot-pool scaling table (DESIGN.md §11).
+//!
+//! Results are serialized via `wire/json` to `BENCH_qsim.json` (override
+//! with `DQ_BENCH_OUT`). Two gates fail the run:
+//!
+//! * compiled+cached throughput below **2x** the seed path on the
+//!   largest paper config (q7 l3) — the plan-cache speedup claim;
+//! * any config's compiled+cached circuits/sec below **half** the floor
+//!   recorded under `qsim.circuits` in the committed baseline
+//!   (`DQ_BENCH_BASELINE`, default `../bench/baseline.json`) — the same
+//!   >2x-regression rule as `bench_coordinator_scale`.
 //!
 //! ```bash
 //! cargo bench --bench micro_qsim
+//! DQ_BENCH_FAST=1 cargo bench --bench micro_qsim   # CI smoke window
 //! ```
 
 use dqulearn::benchlib::{BenchConfig, Bencher, Table};
 use dqulearn::circuit::{
     build_quclassi,
-    builder::{simulate_fidelity, simulate_fidelity_fused},
+    builder::{self, simulate_fidelity, simulate_fidelity_fused},
     QuClassiConfig,
 };
-use dqulearn::qsim::{fusion, shots, State};
+use dqulearn::qsim::{fusion, gates, shots, CompiledProgram, PlanStats, State};
 use dqulearn::util::Rng;
+use dqulearn::wire::{json, Value};
+
+/// Measured circuit throughputs for one paper configuration.
+struct CircuitRow {
+    cfg: QuClassiConfig,
+    stats: PlanStats,
+    seed_cps: f64,
+    fused_cps: f64,
+    cold_cps: f64,
+    cached_cps: f64,
+}
+
+impl CircuitRow {
+    fn speedup(&self) -> f64 {
+        self.cached_cps / self.seed_cps
+    }
+}
+
+/// Blocked vs masked `apply_2q` timings at one register width.
+struct KernelRow {
+    n_qubits: usize,
+    blocked_ns: f64,
+    masked_ns: f64,
+}
+
+fn circuits_to_wire(rows: &[CircuitRow]) -> Vec<Value> {
+    rows.iter()
+        .map(|r| {
+            Value::obj()
+                .with("qubits", r.cfg.qubits)
+                .with("layers", r.cfg.layers)
+                .with("gates", r.stats.gates_in)
+                .with("plan_ops", r.stats.ops_out)
+                .with("blocks3", r.stats.blocks3)
+                .with("seed_cps", r.seed_cps)
+                .with("fused_cps", r.fused_cps)
+                .with("compiled_cold_cps", r.cold_cps)
+                .with("compiled_cps", r.cached_cps)
+                .with("speedup", r.speedup())
+        })
+        .collect()
+}
+
+fn kernel_to_wire(rows: &[KernelRow]) -> Vec<Value> {
+    rows.iter()
+        .map(|k| {
+            Value::obj()
+                .with("n_qubits", k.n_qubits)
+                .with("blocked_ns", k.blocked_ns)
+                .with("masked_ns", k.masked_ns)
+                .with("masked_over_blocked", k.masked_ns / k.blocked_ns)
+        })
+        .collect()
+}
+
+fn ablation_to_wire(cells: &[(usize, f64)]) -> Vec<Value> {
+    cells
+        .iter()
+        .map(|&(mb, cps)| Value::obj().with("max_block", mb).with("cps", cps))
+        .collect()
+}
+
+/// Baseline gate: a config fails when its compiled+cached throughput
+/// drops below half the committed `qsim.circuits` floor (>2x
+/// regression, matching the coordinator bench's rule).
+fn qsim_regressions(rows: &[CircuitRow], baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(base) = baseline
+        .get("qsim")
+        .and_then(|q| q.get("circuits"))
+        .and_then(Value::as_arr)
+    else {
+        return failures;
+    };
+    for b in base {
+        let (Some(q), Some(l), Some(thr)) = (
+            b.get("qubits").and_then(Value::as_usize),
+            b.get("layers").and_then(Value::as_usize),
+            b.get("throughput").and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        if let Some(r) = rows.iter().find(|r| r.cfg.qubits == q && r.cfg.layers == l) {
+            if r.cached_cps < thr / 2.0 {
+                failures.push(format!(
+                    "compiled q{q} l{l}: {:.0} c/s < half of qsim floor {thr:.0} c/s",
+                    r.cached_cps
+                ));
+            }
+        }
+    }
+    failures
+}
 
 fn main() {
-    let mut b = Bencher::new(BenchConfig::default());
+    let mut b = Bencher::new(BenchConfig::from_env());
+    let fast = std::env::var_os("DQ_BENCH_FAST").is_some();
+    let mode = if fast { "fast" } else { "full" };
     let mut rng = Rng::new(1);
 
     // single gates across widths
@@ -33,63 +153,153 @@ fn main() {
         });
     }
 
-    // full QuClassi circuits (the per-circuit cost the DES calibrates),
-    // serial gate walk vs the gate-fusion pipeline
+    // blocked vs masked apply_2q: the kernel ablation behind the
+    // cache-blocked rewrite (apply_2q_masked is the seed scan, kept as
+    // the oracle). Both apply the same unitary, so the state stays
+    // normalized across iterations.
+    let mut kernel_rows = Vec::new();
+    for nq in [10usize, 14] {
+        let m = gates::ryy_matrix(0.3);
+        let mut st = State::zero(nq);
+        st.apply_h(0);
+        let blocked_ns = b
+            .bench(&format!("apply_2q blocked q={nq}"), || {
+                st.apply_2q(&m, 2, nq - 3);
+            })
+            .mean_ns();
+        let masked_ns = b
+            .bench(&format!("apply_2q masked q={nq}"), || {
+                st.apply_2q_masked(&m, 2, nq - 3);
+            })
+            .mean_ns();
+        kernel_rows.push(KernelRow { n_qubits: nq, blocked_ns, masked_ns });
+    }
+
+    // full QuClassi circuits (the per-circuit cost the DES calibrates):
+    // seed serial walk, per-circuit fusion, and the compiled pipeline
+    // cold vs cached (DESIGN.md §15).
+    let mut rows = Vec::new();
     for cfg in QuClassiConfig::paper_configs() {
         let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
         let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
-        b.bench(&format!("full circuit q={} l={}", cfg.qubits, cfg.layers), || {
-            std::hint::black_box(simulate_fidelity(&cfg, &thetas, &data));
-        });
-        b.bench(&format!("fused circuit q={} l={}", cfg.qubits, cfg.layers), || {
-            std::hint::black_box(simulate_fidelity_fused(&cfg, &thetas, &data));
+        let tag = format!("q={} l={}", cfg.qubits, cfg.layers);
+        let seed_cps = b
+            .bench(&format!("seed circuit {tag}"), || {
+                std::hint::black_box(simulate_fidelity(&cfg, &thetas, &data));
+            })
+            .throughput_per_sec();
+        let fused_cps = b
+            .bench(&format!("fused circuit {tag}"), || {
+                std::hint::black_box(simulate_fidelity_fused(&cfg, &thetas, &data));
+            })
+            .throughput_per_sec();
+        let cold_cps = b
+            .bench(&format!("compiled cold {tag}"), || {
+                let program = CompiledProgram::compile(builder::build_quclassi_template(&cfg));
+                std::hint::black_box(program.bind(&thetas, &data).fidelity());
+            })
+            .throughput_per_sec();
+        let program = builder::compile_quclassi(&cfg);
+        let mut bound = program.bind_skeleton();
+        let mut scratch = State::zero(cfg.qubits);
+        let cached_cps = b
+            .bench(&format!("compiled cached {tag}"), || {
+                program.rebind(&mut bound, &thetas, &data);
+                std::hint::black_box(bound.fidelity_into(&mut scratch));
+            })
+            .throughput_per_sec();
+        rows.push(CircuitRow {
+            cfg,
+            stats: program.stats(),
+            seed_cps,
+            fused_cps,
+            cold_cps,
+            cached_cps,
         });
     }
 
-    // the fusion pass itself (amortized once per circuit shape)
+    // 3-qubit-block ablation on the largest config: same cached rebind
+    // loop, plan compiled with max_block 1 (singles/pairs kept apart),
+    // 2 (pairwise fusion parity) and 3 (8x8 blocks).
+    let cfg7 = QuClassiConfig::new(7, 3).unwrap();
+    let thetas7: Vec<f32> = (0..cfg7.n_params()).map(|_| rng.f32()).collect();
+    let data7: Vec<f32> = (0..cfg7.n_features()).map(|_| rng.f32()).collect();
+    let mut ablation = Vec::new();
+    for mb in [1usize, 2, 3] {
+        let program = CompiledProgram::compile_with(builder::build_quclassi_template(&cfg7), mb);
+        let mut bound = program.bind_skeleton();
+        let mut scratch = State::zero(cfg7.qubits);
+        let cps = b
+            .bench(&format!("compiled cached q=7 l=3 max_block={mb}"), || {
+                program.rebind(&mut bound, &thetas7, &data7);
+                std::hint::black_box(bound.fidelity_into(&mut scratch));
+            })
+            .throughput_per_sec();
+        ablation.push((mb, cps));
+    }
+
+    // one-off costs: the per-circuit fusion pass the compiled pipeline
+    // amortizes away, plan compilation (paid once per config via the
+    // plan cache), and gate-list construction (the seed path's
+    // per-circuit allocation).
+    let gates7 = build_quclassi(&cfg7, &thetas7, &data7);
     {
-        let cfg = QuClassiConfig::new(7, 3).unwrap();
-        let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
-        let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
-        let gates = build_quclassi(&cfg, &thetas, &data);
-        let program = fusion::fuse(&gates);
+        let fprog = fusion::fuse(&gates7);
         println!(
             "fusion q=7 l=3: {} gates -> {} fused ops ({} eliminated)",
-            gates.len(),
-            program.len(),
-            program.fused_away()
+            gates7.len(),
+            fprog.len(),
+            fprog.fused_away()
         );
-        b.bench("fusion pass q=7 l=3", || {
-            std::hint::black_box(fusion::fuse(&gates));
-        });
     }
-
-    // gate-list construction alone (allocation cost on the worker path)
-    let cfg = QuClassiConfig::new(7, 3).unwrap();
-    let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
-    let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
+    b.bench("fusion pass q=7 l=3", || {
+        std::hint::black_box(fusion::fuse(&gates7));
+    });
+    b.bench("plan compile q=7 l=3", || {
+        std::hint::black_box(CompiledProgram::compile(builder::build_quclassi_template(&cfg7)));
+    });
     b.bench("gate-list build q=7 l=3", || {
-        std::hint::black_box(build_quclassi(&cfg, &thetas, &data));
+        std::hint::black_box(build_quclassi(&cfg7, &thetas7, &data7));
     });
 
     print!("{}", b.report());
-    // circuits/sec summary for the DES calibration table
-    println!("\nimplied single-core circuit throughput:");
-    for r in b.results().iter().filter(|r| r.name.starts_with("full circuit")) {
-        println!("  {:<28} {:>10.0} circuits/s", r.name, r.throughput_per_sec());
+
+    // plan shapes: gates in -> ops out, and how many 8x8 blocks formed
+    println!("\ncompiled plan shapes:");
+    let mut shapes = Table::new(&["config", "gates", "plan ops", "8x8 blocks"]);
+    for r in &rows {
+        shapes.row(&[
+            format!("q={} l={}", r.cfg.qubits, r.cfg.layers),
+            r.stats.gates_in.to_string(),
+            r.stats.ops_out.to_string(),
+            r.stats.blocks3.to_string(),
+        ]);
     }
+    print!("{}", shapes.render());
+
+    // circuits/sec summary for the DES calibration table
+    println!("\nsingle-core circuit throughput (circuits/s):");
+    let mut thr =
+        Table::new(&["config", "seed", "fused", "compiled cold", "compiled cached", "speedup"]);
+    for r in &rows {
+        thr.row(&[
+            format!("q={} l={}", r.cfg.qubits, r.cfg.layers),
+            format!("{:.0}", r.seed_cps),
+            format!("{:.0}", r.fused_cps),
+            format!("{:.0}", r.cold_cps),
+            format!("{:.0}", r.cached_cps),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    print!("{}", thr.render());
 
     // shot-pool scaling: the acceptance target for the parallel engine is
     // >= 2x shot throughput at 4 threads vs the serial path (DESIGN.md §11)
-    println!("\nshot-pool scaling (q=7 l=3, {} shots):", SHOT_WORKLOAD);
-    let cfg = QuClassiConfig::new(7, 3).unwrap();
-    let thetas: Vec<f32> = (0..cfg.n_params()).map(|_| rng.f32()).collect();
-    let data: Vec<f32> = (0..cfg.n_features()).map(|_| rng.f32()).collect();
-    let gates = build_quclassi(&cfg, &thetas, &data);
+    println!("\nshot-pool scaling (q=7 l=3, {SHOT_WORKLOAD} shots):");
     let mut table = Table::new(&["threads", "wall(s)", "shots/s", "speedup vs serial"]);
-    let serial_secs = time_shots(&cfg, &gates, 1);
+    let serial_secs = time_shots(&cfg7, &gates7, 1);
     for threads in [1usize, 2, 4] {
-        let secs = if threads == 1 { serial_secs } else { time_shots(&cfg, &gates, threads) };
+        let secs = if threads == 1 { serial_secs } else { time_shots(&cfg7, &gates7, threads) };
         table.row(&[
             threads.to_string(),
             format!("{secs:.3}"),
@@ -98,11 +308,66 @@ fn main() {
         ]);
     }
     print!("{}", table.render());
+
+    // Serialize the trajectory point.
+    let out_default = "BENCH_qsim.json".to_string();
+    let out_path = std::env::var("DQ_BENCH_OUT").unwrap_or(out_default);
+    let payload = json::to_string_pretty(
+        &Value::obj()
+            .with("bench", "qsim")
+            .with("mode", mode)
+            .with("circuits", circuits_to_wire(&rows))
+            .with("kernel_2q", kernel_to_wire(&kernel_rows))
+            .with("ablation_q7_l3", ablation_to_wire(&ablation)),
+    );
+    std::fs::write(&out_path, payload).expect("write BENCH_qsim.json");
+    println!("\nwrote {out_path}");
+
+    // Speedup gate: on the largest paper config the cached compiled
+    // path must beat the seed gate-walk by >= 2x (ISSUE 6 acceptance).
+    let largest = rows
+        .iter()
+        .find(|r| r.cfg.qubits == 7 && r.cfg.layers == 3)
+        .expect("paper_configs must include q7 l3");
+    if largest.speedup() < 2.0 {
+        eprintln!(
+            "compiled-path regression: q7 l3 cached {:.0} c/s is {:.2}x seed {:.0} c/s (need 2x)",
+            largest.cached_cps,
+            largest.speedup(),
+            largest.seed_cps
+        );
+        std::process::exit(1);
+    }
+
+    // Regression gate against the committed baseline, if present.
+    let baseline_default = "../bench/baseline.json".to_string();
+    let baseline_path = std::env::var("DQ_BENCH_BASELINE").unwrap_or(baseline_default);
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => match json::parse(&text) {
+            Ok(baseline) => {
+                let failures = qsim_regressions(&rows, &baseline);
+                if failures.is_empty() {
+                    println!("baseline check OK ({baseline_path})");
+                } else {
+                    eprintln!("perf regression vs {baseline_path}:");
+                    for f in &failures {
+                        eprintln!("  {f}");
+                    }
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => {
+                eprintln!("baseline {baseline_path} unparseable: {e:?}");
+                std::process::exit(1);
+            }
+        },
+        Err(_) => println!("no baseline at {baseline_path}; skipping regression gate"),
+    }
 }
 
 const SHOT_WORKLOAD: usize = 400_000;
 
-fn time_shots(cfg: &QuClassiConfig, gates: &[dqulearn::qsim::gates::Gate], threads: usize) -> f64 {
+fn time_shots(cfg: &QuClassiConfig, gates: &[gates::Gate], threads: usize) -> f64 {
     // one warmup draw, then the timed run
     std::hint::black_box(shots::run_shots(cfg.qubits, gates, 10_000, threads, 3));
     let t = std::time::Instant::now();

@@ -4,7 +4,12 @@
 //! the Rust `qsim` fallback executor and the PJRT path are
 //! interchangeable (verified in `rust/tests/parity_pjrt_qsim.rs`).
 
+use std::sync::{Arc, OnceLock};
+
 use super::spec::QuClassiConfig;
+use crate::qsim::compile::{
+    CacheStats, CircuitTemplate, CompiledProgram, PlanCache, Slot, TemplateGate,
+};
 use crate::qsim::gates::Gate;
 use crate::qsim::State;
 
@@ -70,6 +75,101 @@ pub fn build_quclassi(config: &QuClassiConfig, thetas: &[f32], data: &[f32]) -> 
     gates
 }
 
+/// Build the parameter-slotted template of [`build_quclassi`]: the same
+/// gate sequence with [`Slot::Theta`]/[`Slot::Data`] markers instead of
+/// concrete angles. The structure depends only on `config`, so one
+/// template (and its compiled plan) serves every `(thetas, data)` pair —
+/// `CircuitTemplate::instantiate` reproduces the seed gate list exactly.
+pub fn build_quclassi_template(config: &QuClassiConfig) -> CircuitTemplate {
+    let s = config.s();
+    let state_qs = config.state_qubits();
+    let data_qs = config.data_qubits();
+    let mut gates = Vec::with_capacity(config.n_params() + config.n_features() + 2 * s + 2);
+    let slotted = |gate: Gate, slot: Slot| TemplateGate { gate, slot };
+
+    // Data encoding: Ry(x_{2i}) Rz(x_{2i+1}) on data qubit i.
+    for (i, &q) in data_qs.iter().enumerate() {
+        gates.push(slotted(Gate::Ry { q, theta: 0.0 }, Slot::Data(2 * i)));
+        gates.push(slotted(Gate::Rz { q, theta: 0.0 }, Slot::Data(2 * i + 1)));
+    }
+
+    // Layer 1: single-qubit unitary on each state qubit.
+    let mut p = 0;
+    for &q in &state_qs {
+        gates.push(slotted(Gate::Ry { q, theta: 0.0 }, Slot::Theta(p)));
+        gates.push(slotted(Gate::Rz { q, theta: 0.0 }, Slot::Theta(p + 1)));
+        p += 2;
+    }
+    // Layer 2: dual-qubit unitary on adjacent pairs.
+    if config.layers >= 2 {
+        for i in 0..s - 1 {
+            gates.push(slotted(
+                Gate::Ryy { q0: state_qs[i], q1: state_qs[i + 1], theta: 0.0 },
+                Slot::Theta(p),
+            ));
+            gates.push(slotted(
+                Gate::Rzz { q0: state_qs[i], q1: state_qs[i + 1], theta: 0.0 },
+                Slot::Theta(p + 1),
+            ));
+            p += 2;
+        }
+    }
+    // Layer 3: entanglement unitary on adjacent pairs.
+    if config.layers >= 3 {
+        for i in 0..s - 1 {
+            gates.push(slotted(
+                Gate::Cry { control: state_qs[i], target: state_qs[i + 1], theta: 0.0 },
+                Slot::Theta(p),
+            ));
+            gates.push(slotted(
+                Gate::Crz { control: state_qs[i], target: state_qs[i + 1], theta: 0.0 },
+                Slot::Theta(p + 1),
+            ));
+            p += 2;
+        }
+    }
+    debug_assert_eq!(p, config.n_params());
+
+    // Swap test.
+    gates.push(slotted(Gate::H { q: 0 }, Slot::Fixed));
+    for (sq, dq) in state_qs.iter().zip(data_qs.iter()) {
+        gates.push(slotted(Gate::Cswap { control: 0, a: *sq, b: *dq }, Slot::Fixed));
+    }
+    gates.push(slotted(Gate::H { q: 0 }, Slot::Fixed));
+    CircuitTemplate { n_qubits: config.qubits, gates }
+}
+
+/// Process-wide plan cache keyed by config. Shared by every executor in
+/// the process (`QsimExecutor` is a unit struct, so the cache cannot
+/// live on the instance), which also means every in-process worker of a
+/// cluster compiles each config exactly once.
+fn quclassi_plan_cache() -> &'static PlanCache<QuClassiConfig> {
+    static CACHE: OnceLock<PlanCache<QuClassiConfig>> = OnceLock::new();
+    CACHE.get_or_init(|| PlanCache::new(16))
+}
+
+/// Compiled (3q-block fused, parameter-slotted) program for `config`,
+/// from the process-wide plan cache — compile once, bind per pair.
+pub fn compile_quclassi(config: &QuClassiConfig) -> Arc<CompiledProgram> {
+    quclassi_plan_cache()
+        .get_or_compile(config, || CompiledProgram::compile(build_quclassi_template(config)))
+}
+
+/// Hit/miss/occupancy counters of the process-wide QuClassi plan cache.
+pub fn quclassi_plan_cache_stats() -> CacheStats {
+    quclassi_plan_cache().stats()
+}
+
+/// [`simulate_fidelity`] through the compiled pipeline: cached plan +
+/// parameter rebind + blocked kernels. Equal to the serial result up to
+/// float re-association (parity asserted to 1e-6 in
+/// `rust/tests/compiled_parity.rs`); the executor hot path.
+pub fn simulate_fidelity_compiled(config: &QuClassiConfig, thetas: &[f32], data: &[f32]) -> f32 {
+    let program = compile_quclassi(config);
+    let bound = program.bind(thetas, data);
+    bound.fidelity() as f32
+}
+
 /// Execute one QuClassi circuit on the Rust simulator and return the
 /// swap-test fidelity estimate (exact expectation).
 pub fn simulate_fidelity(config: &QuClassiConfig, thetas: &[f32], data: &[f32]) -> f32 {
@@ -110,6 +210,69 @@ mod tests {
             let s = cfg.s();
             // encoding(2S) + params(P) + H + S cswaps + H
             assert_eq!(gates.len(), 2 * s + cfg.n_params() + s + 2);
+        }
+    }
+
+    #[test]
+    fn template_instantiates_to_seed_gate_list() {
+        let mut rng = Rng::new(3);
+        for cfg in QuClassiConfig::paper_configs() {
+            let thetas = rand_vec(&mut rng, cfg.n_params());
+            let data = rand_vec(&mut rng, cfg.n_features());
+            let template = build_quclassi_template(&cfg);
+            assert_eq!(
+                template.instantiate(&thetas, &data),
+                build_quclassi(&cfg, &thetas, &data),
+                "{cfg:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_fidelity_matches_serial() {
+        let mut rng = Rng::new(5);
+        for cfg in QuClassiConfig::paper_configs() {
+            for _ in 0..4 {
+                let thetas = rand_vec(&mut rng, cfg.n_params());
+                let data = rand_vec(&mut rng, cfg.n_features());
+                let serial = simulate_fidelity(&cfg, &thetas, &data);
+                let compiled = simulate_fidelity_compiled(&cfg, &thetas, &data);
+                assert!(
+                    (serial - compiled).abs() < 1e-6,
+                    "{cfg:?}: serial={serial} compiled={compiled}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cache_serves_repeat_configs() {
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let a = compile_quclassi(&cfg);
+        let before = quclassi_plan_cache_stats();
+        let b = compile_quclassi(&cfg);
+        let after = quclassi_plan_cache_stats();
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "repeat config must hit the cache");
+        assert!(after.hits > before.hits);
+        assert!(after.len >= 1);
+    }
+
+    #[test]
+    fn quclassi_plans_shrink_and_block() {
+        // q7 l>=2 has a 3-wide state register whose layer gates all fuse
+        // into a single 8x8 block; every config's plan is smaller than
+        // its gate list.
+        for cfg in QuClassiConfig::paper_configs() {
+            let stats = compile_quclassi(&cfg).stats();
+            assert!(
+                stats.ops_out < stats.gates_in,
+                "{cfg:?}: {} ops from {} gates",
+                stats.ops_out,
+                stats.gates_in
+            );
+            if cfg.qubits == 7 && cfg.layers >= 2 {
+                assert!(stats.blocks3 >= 1, "{cfg:?} should form a 3q block");
+            }
         }
     }
 

@@ -14,6 +14,8 @@ pub mod spec;
 pub mod transpile;
 
 pub use bank::{CircuitBank, ShiftKind};
-pub use builder::build_quclassi;
+pub use builder::{
+    build_quclassi, build_quclassi_template, compile_quclassi, simulate_fidelity_compiled,
+};
 pub use spec::QuClassiConfig;
 pub use transpile::optimize;

@@ -15,6 +15,8 @@
 
 use crate::circuit::{builder, QuClassiConfig};
 use crate::error::DqError;
+use crate::qsim::compile::{CacheStats, CompiledProgram, PlanCache};
+use crate::qsim::State;
 
 /// One circuit = one (thetas, data) pair under a configuration.
 pub type CircuitPair = (Vec<f32>, Vec<f32>);
@@ -34,7 +36,12 @@ pub trait CircuitExecutor: Send + Sync {
     }
 }
 
-/// Local Rust statevector execution.
+/// Local Rust statevector execution through the compiled-circuit
+/// pipeline: the plan comes from the process-wide config-keyed cache
+/// ([`builder::compile_quclassi`]), each pair only rebinds parameters
+/// into a reused bound program, and one scratch statevector is reset
+/// per circuit — no per-circuit gate-list build, plan scan, or
+/// allocation (DESIGN.md §15).
 #[derive(Debug, Default)]
 pub struct QsimExecutor;
 
@@ -44,35 +51,43 @@ impl CircuitExecutor for QsimExecutor {
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<Vec<f32>, DqError> {
+        let program = builder::compile_quclassi(config);
+        let mut bound = program.bind_skeleton();
+        let mut scratch = State::zero(config.qubits);
         Ok(pairs
             .iter()
-            .map(|(thetas, data)| builder::simulate_fidelity(config, thetas, data))
+            .map(|(thetas, data)| {
+                program.rebind(&mut bound, thetas, data);
+                bound.fidelity_into(&mut scratch) as f32
+            })
             .collect())
     }
 
     fn describe(&self) -> String {
-        "qsim (rust statevector)".to_string()
+        "qsim (rust statevector, compiled plans)".to_string()
     }
 }
 
 /// Rust statevector execution fanned across a scoped worker-thread pool.
 ///
 /// Circuits in a bank are independent, so the bank is striped across
-/// `threads` OS threads via [`crate::util::pool::parallel_indexed`];
-/// every circuit is simulated by the same serial routine
-/// ([`builder::simulate_fidelity`]),
-/// which makes the output **bitwise identical** to [`QsimExecutor`] —
-/// only wall-clock changes. This is the worker-side lever behind the
-/// paper's circuits-per-second scaling (DESIGN.md §11).
+/// `threads` OS threads via [`crate::util::pool::parallel_indexed`].
+/// Plans come from a per-executor [`PlanCache`]; every circuit binds
+/// parameters into the shared compiled plan and runs the same blocked
+/// kernels as [`QsimExecutor`]'s serial loop, which keeps the output
+/// **bitwise identical** to [`QsimExecutor`] — only wall-clock changes.
+/// This is the worker-side lever behind the paper's circuits-per-second
+/// scaling (DESIGN.md §11).
 #[derive(Debug)]
 pub struct ParallelQsimExecutor {
     threads: usize,
+    cache: PlanCache<QuClassiConfig>,
 }
 
 impl ParallelQsimExecutor {
     /// Pool with a fixed thread budget (clamped to at least 1).
     pub fn new(threads: usize) -> ParallelQsimExecutor {
-        ParallelQsimExecutor { threads: threads.max(1) }
+        ParallelQsimExecutor { threads: threads.max(1), cache: PlanCache::new(16) }
     }
 
     /// Pool sized to the host's available parallelism.
@@ -83,6 +98,11 @@ impl ParallelQsimExecutor {
     /// The configured thread budget.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Hit/miss/occupancy counters of this executor's plan cache.
+    pub fn plan_cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 }
 
@@ -97,14 +117,21 @@ impl CircuitExecutor for ParallelQsimExecutor {
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<Vec<f32>, DqError> {
+        let program = self
+            .cache
+            .get_or_compile(config, || {
+                CompiledProgram::compile(builder::build_quclassi_template(config))
+            });
         Ok(crate::util::pool::parallel_indexed(pairs.len(), self.threads, |i| {
             let (thetas, data) = &pairs[i];
-            builder::simulate_fidelity(config, thetas, data)
+            // bind == skeleton + rebind, so a fresh per-circuit bind is
+            // bitwise identical to the serial executor's rebind loop.
+            program.bind(thetas, data).fidelity() as f32
         }))
     }
 
     fn describe(&self) -> String {
-        format!("qsim-par (rust statevector, {} threads)", self.threads)
+        format!("qsim-par (rust statevector, compiled plans, {} threads)", self.threads)
     }
 }
 
@@ -171,8 +198,25 @@ mod tests {
         let fids = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
         for (i, (t, d)) in pairs.iter().enumerate() {
             let want = builder::simulate_fidelity(&cfg, t, d);
-            assert!((fids[i] - want).abs() < 1e-7);
+            // compiled plans re-associate the float products; 1e-6 covers
+            // the f32 rounding of the ~1e-15 f64 drift with margin
+            assert!((fids[i] - want).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn parallel_executor_caches_plans_per_instance() {
+        let cfg = QuClassiConfig::new(5, 3).unwrap();
+        let exec = ParallelQsimExecutor::new(2);
+        let pair = (vec![0.3f32; cfg.n_params()], vec![0.1f32; cfg.n_features()]);
+        exec.execute_bank(&cfg, &[pair.clone()]).unwrap();
+        let first = exec.plan_cache_stats();
+        assert_eq!(first.misses, 1);
+        assert_eq!(first.len, 1);
+        exec.execute_bank(&cfg, &[pair]).unwrap();
+        let second = exec.plan_cache_stats();
+        assert_eq!(second.hits, first.hits + 1);
+        assert_eq!(second.misses, 1, "repeat config must not recompile");
     }
 
     #[test]

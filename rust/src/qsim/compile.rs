@@ -1,0 +1,830 @@
+//! Compiled-circuit pipeline: parameter-slotted fusion plans, cheap
+//! rebinding, and a config-keyed plan cache (DESIGN.md §15).
+//!
+//! A QuClassi circuit's *structure* — which gates act on which qubits, in
+//! which order — depends only on its `QuClassiConfig`; the `(thetas,
+//! data)` pair only changes rotation angles. The seed executor rebuilt
+//! the `Vec<Gate>` and re-ran the O(gates²) fusion scan for every single
+//! circuit. This module splits that work:
+//!
+//! 1. **Template** ([`CircuitTemplate`]): gates with parameter *slots*
+//!    ([`Slot::Theta`] / [`Slot::Data`]) instead of concrete angles.
+//! 2. **Plan** ([`CompiledProgram::compile`]): the backward-scan fusion
+//!    pass, run once per template. Each fused op records only *which
+//!    template gates* feed its product — no matrices yet. Fusion widens
+//!    up to 3-qubit (8x8) blocks; CSWAP stays a barrier.
+//! 3. **Bind** ([`CompiledProgram::bind`] / [`CompiledProgram::rebind`]):
+//!    resolve slots against one `(thetas, data)` pair and fold the small
+//!    2x2/4x4/8x8 matrix products. Per circuit this is a few thousand
+//!    complex multiplies — the plan scan and the gate-list allocation are
+//!    never repeated.
+//! 4. **Cache** ([`PlanCache`]): a small LRU keyed by config so every
+//!    executor (and every worker in the fleet) compiles each config once
+//!    per process.
+//!
+//! Determinism: [`CompiledProgram::bind`] is implemented as skeleton
+//! allocation + [`CompiledProgram::rebind`], and `rebind` recomputes
+//! every matrix entry from scratch in factor order — so a cache-hit
+//! rebind is bitwise identical to a cold compile-and-bind, and the
+//! serial/parallel executors stay bitwise interchangeable.
+
+use std::sync::{Arc, Mutex};
+
+use super::complex::C64;
+use super::fusion::{classify, lift_to_pair, mat2_mul, mat4_mul, Kind};
+use super::gates::{self, Gate, Mat2, Mat4, Mat8};
+use super::state::State;
+
+/// Where a template gate's rotation angle comes from at bind time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// `thetas[i]` — a trainable parameter.
+    Theta(usize),
+    /// `data[i]` — an encoder angle.
+    Data(usize),
+    /// Fixed at compile time (H, CX, CSWAP, or a frozen angle).
+    Fixed,
+}
+
+/// A gate whose angle is resolved from a parameter slot at bind time.
+/// For slotted gates the embedded angle is a placeholder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TemplateGate {
+    /// The gate shape (operands; angle ignored unless [`Slot::Fixed`]).
+    pub gate: Gate,
+    /// Angle source.
+    pub slot: Slot,
+}
+
+impl TemplateGate {
+    /// Resolve the concrete gate for one `(thetas, data)` pair.
+    pub fn resolve(&self, thetas: &[f32], data: &[f32]) -> Gate {
+        match self.slot {
+            Slot::Fixed => self.gate.clone(),
+            Slot::Theta(i) => self.gate.with_theta(thetas[i] as f64),
+            Slot::Data(i) => self.gate.with_theta(data[i] as f64),
+        }
+    }
+}
+
+/// A parameter-slotted circuit: the reusable structure shared by every
+/// `(thetas, data)` pair under one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CircuitTemplate {
+    /// Width of the statevector the template runs on.
+    pub n_qubits: usize,
+    /// Slotted gates in application order.
+    pub gates: Vec<TemplateGate>,
+}
+
+impl CircuitTemplate {
+    /// Wrap a concrete gate list as an all-[`Slot::Fixed`] template
+    /// (lets ad-hoc gate lists reuse the compiled kernels).
+    pub fn from_gates(n_qubits: usize, gate_list: &[Gate]) -> CircuitTemplate {
+        CircuitTemplate {
+            n_qubits,
+            gates: gate_list
+                .iter()
+                .map(|g| TemplateGate { gate: g.clone(), slot: Slot::Fixed })
+                .collect(),
+        }
+    }
+
+    /// Materialize the concrete gate list for one pair (the seed
+    /// `build_quclassi` output, reproduced from the template).
+    pub fn instantiate(&self, thetas: &[f32], data: &[f32]) -> Vec<Gate> {
+        self.gates.iter().map(|tg| tg.resolve(thetas, data)).collect()
+    }
+}
+
+/// One step of the fusion plan: either a fused product or a gate applied
+/// through normal dispatch.
+#[derive(Debug, Clone, PartialEq)]
+enum PlanOp {
+    /// Product over the sorted support `qs` (1..=3 qubits) of the
+    /// template gates `factors` (indices, application order).
+    Fused { qs: Vec<usize>, factors: Vec<usize> },
+    /// Unfusable gate (CSWAP): applied directly, acts as a barrier.
+    Apply { gate_idx: usize },
+}
+
+fn op_support(op: &PlanOp, template: &[TemplateGate]) -> Vec<usize> {
+    match op {
+        PlanOp::Fused { qs, .. } => qs.clone(),
+        PlanOp::Apply { gate_idx } => template[*gate_idx].gate.qubits(),
+    }
+}
+
+fn disjoint(a: &[usize], b: &[usize]) -> bool {
+    a.iter().all(|q| !b.contains(q))
+}
+
+fn subset(a: &[usize], b: &[usize]) -> bool {
+    a.iter().all(|q| b.contains(q))
+}
+
+fn sorted_union(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut u: Vec<usize> = a.to_vec();
+    for q in b {
+        if !u.contains(q) {
+            u.push(*q);
+        }
+    }
+    u.sort_unstable();
+    u
+}
+
+/// What the backward scan decided to do with an earlier op.
+enum Scan {
+    Skip,
+    Stop,
+    MergeInPlace,
+    Absorb(Vec<usize>),
+}
+
+/// Merge template gate `gi` into the plan. Backward-scan rules mirror
+/// [`super::fusion`], widened to `max_block` qubits: ops on disjoint
+/// supports commute past; a gate whose support is contained in an
+/// earlier fused op joins it in place; a support-growing merge removes
+/// the earlier op and re-emits the union at the tail — legal only when
+/// every op between the merge site and the tail is disjoint from the
+/// *union* (otherwise the move would reorder non-commuting ops).
+fn push_gate(ops: &mut Vec<PlanOp>, template: &[TemplateGate], gi: usize, max_block: usize) {
+    let g = &template[gi].gate;
+    if matches!(g, Gate::Cswap { .. }) {
+        ops.push(PlanOp::Apply { gate_idx: gi });
+        return;
+    }
+    let mut support = g.qubits();
+    support.sort_unstable();
+    let mut factors = vec![gi];
+    let mut i = ops.len();
+    while i > 0 {
+        i -= 1;
+        let decision = {
+            let oqs = op_support(&ops[i], template);
+            if disjoint(&oqs, &support) {
+                Scan::Skip
+            } else {
+                match &ops[i] {
+                    PlanOp::Apply { .. } => Scan::Stop,
+                    PlanOp::Fused { qs, .. } if subset(&support, qs) => Scan::MergeInPlace,
+                    PlanOp::Fused { qs, .. } => {
+                        let union = sorted_union(qs, &support);
+                        let tail_clear = ops[i + 1..]
+                            .iter()
+                            .all(|o| disjoint(&op_support(o, template), &union));
+                        if union.len() <= max_block && tail_clear {
+                            Scan::Absorb(union)
+                        } else {
+                            Scan::Stop
+                        }
+                    }
+                }
+            }
+        };
+        match decision {
+            Scan::Skip => continue,
+            Scan::Stop => break,
+            Scan::MergeInPlace => {
+                if let PlanOp::Fused { factors: f, .. } = &mut ops[i] {
+                    f.append(&mut factors);
+                }
+                return;
+            }
+            Scan::Absorb(union) => {
+                if let PlanOp::Fused { factors: mut f, .. } = ops.remove(i) {
+                    f.append(&mut factors);
+                    factors = f;
+                }
+                support = union;
+            }
+        }
+    }
+    ops.push(PlanOp::Fused { qs: support, factors });
+}
+
+/// Plan + template: the per-config compilation product. Compile once,
+/// bind per `(thetas, data)` pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledProgram {
+    template: CircuitTemplate,
+    ops: Vec<PlanOp>,
+    max_block: usize,
+}
+
+/// Plan shape counters (for benches, logs, and tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Template gates the plan was compiled from.
+    pub gates_in: usize,
+    /// Ops in the compiled plan.
+    pub ops_out: usize,
+    /// Fused ops over a 3-qubit support (8x8 blocks).
+    pub blocks3: usize,
+}
+
+impl CompiledProgram {
+    /// Compile with the default block width (3-qubit fused blocks).
+    pub fn compile(template: CircuitTemplate) -> CompiledProgram {
+        Self::compile_with(template, 3)
+    }
+
+    /// Compile with an explicit block-width cap (`max_block` in 1..=3;
+    /// `2` reproduces the pairwise fusion of [`super::fusion::fuse`]).
+    pub fn compile_with(template: CircuitTemplate, max_block: usize) -> CompiledProgram {
+        assert!((1..=3).contains(&max_block), "max_block must be 1..=3");
+        let mut ops = Vec::with_capacity(template.gates.len());
+        for gi in 0..template.gates.len() {
+            push_gate(&mut ops, &template.gates, gi, max_block);
+        }
+        CompiledProgram { template, ops, max_block }
+    }
+
+    /// The template this program was compiled from.
+    pub fn template(&self) -> &CircuitTemplate {
+        &self.template
+    }
+
+    /// The block-width cap the plan was compiled with.
+    pub fn max_block(&self) -> usize {
+        self.max_block
+    }
+
+    /// Plan shape counters.
+    pub fn stats(&self) -> PlanStats {
+        PlanStats {
+            gates_in: self.template.gates.len(),
+            ops_out: self.ops.len(),
+            blocks3: self
+                .ops
+                .iter()
+                .filter(|o| matches!(o, PlanOp::Fused { qs, .. } if qs.len() == 3))
+                .count(),
+        }
+    }
+
+    /// Allocate a bound-program skeleton (identity matrices, placeholder
+    /// gates). [`Self::rebind`] fills it in; [`Self::bind`] is exactly
+    /// skeleton + rebind, so the two paths cannot diverge.
+    pub fn bind_skeleton(&self) -> BoundProgram {
+        let ops = self
+            .ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::Apply { gate_idx } => {
+                    BoundOp::Apply { gate: self.template.gates[*gate_idx].gate.clone() }
+                }
+                PlanOp::Fused { qs, .. } => match qs.len() {
+                    1 => BoundOp::Single { q: qs[0], m: identity2() },
+                    2 => BoundOp::Pair { q0: qs[0], q1: qs[1], m: identity4() },
+                    _ => BoundOp::Block {
+                        qs: [qs[0], qs[1], qs[2]],
+                        m: Box::new(identity8()),
+                    },
+                },
+            })
+            .collect();
+        BoundProgram { n_qubits: self.template.n_qubits, ops }
+    }
+
+    /// Bind one `(thetas, data)` pair: resolve every slot and fold the
+    /// fused matrix products. Never re-runs the plan scan.
+    pub fn bind(&self, thetas: &[f32], data: &[f32]) -> BoundProgram {
+        let mut bound = self.bind_skeleton();
+        self.rebind(&mut bound, thetas, data);
+        bound
+    }
+
+    /// Recompute a previously bound program in place for a new pair —
+    /// the zero-allocation hot path for serial bank execution.
+    pub fn rebind(&self, bound: &mut BoundProgram, thetas: &[f32], data: &[f32]) {
+        debug_assert_eq!(bound.ops.len(), self.ops.len(), "skeleton/plan mismatch");
+        for (op, slot) in self.ops.iter().zip(bound.ops.iter_mut()) {
+            match (op, slot) {
+                (PlanOp::Apply { gate_idx }, BoundOp::Apply { gate }) => {
+                    *gate = self.template.gates[*gate_idx].resolve(thetas, data);
+                }
+                (PlanOp::Fused { qs, factors }, BoundOp::Single { m, .. }) => {
+                    *m = fold_single(&self.template.gates, factors, thetas, data);
+                    debug_assert_eq!(qs.len(), 1);
+                }
+                (PlanOp::Fused { qs, factors }, BoundOp::Pair { m, .. }) => {
+                    *m = fold_pair(&self.template.gates, factors, qs, thetas, data);
+                }
+                (PlanOp::Fused { qs, factors }, BoundOp::Block { m, .. }) => {
+                    fold_block(&self.template.gates, factors, qs, thetas, data, m);
+                }
+                _ => unreachable!("bound op shape diverged from plan"),
+            }
+        }
+    }
+}
+
+fn identity2() -> Mat2 {
+    [[C64::ONE, C64::ZERO], [C64::ZERO, C64::ONE]]
+}
+
+fn identity4() -> Mat4 {
+    let mut m = [[C64::ZERO; 4]; 4];
+    for (i, row) in m.iter_mut().enumerate() {
+        row[i] = C64::ONE;
+    }
+    m
+}
+
+fn identity8() -> Mat8 {
+    let mut m = [[C64::ZERO; 8]; 8];
+    for (i, row) in m.iter_mut().enumerate() {
+        row[i] = C64::ONE;
+    }
+    m
+}
+
+fn fold_single(
+    template: &[TemplateGate],
+    factors: &[usize],
+    thetas: &[f32],
+    data: &[f32],
+) -> Mat2 {
+    let mut acc = identity2();
+    for &gi in factors {
+        match classify(&template[gi].resolve(thetas, data)) {
+            Kind::One(_, m) => acc = mat2_mul(&m, &acc),
+            _ => unreachable!("non-1q factor in a single-qubit fused op"),
+        }
+    }
+    acc
+}
+
+fn fold_pair(
+    template: &[TemplateGate],
+    factors: &[usize],
+    qs: &[usize],
+    thetas: &[f32],
+    data: &[f32],
+) -> Mat4 {
+    let mut acc = identity4();
+    for &gi in factors {
+        match classify(&template[gi].resolve(thetas, data)) {
+            Kind::One(q, m) => {
+                let slot = if q == qs[0] { 0 } else { 1 };
+                acc = mat4_mul(&lift_to_pair(&m, slot), &acc);
+            }
+            Kind::Two(a, _, m) => {
+                // Matrix index is 2*b(a) + b(b); reindex when the operand
+                // order disagrees with the sorted support.
+                let m_ab = if a == qs[0] { m } else { gates::swap_pair_order(&m) };
+                acc = mat4_mul(&m_ab, &acc);
+            }
+            Kind::Other => unreachable!("barrier gate in a fused op"),
+        }
+    }
+    acc
+}
+
+fn fold_block(
+    template: &[TemplateGate],
+    factors: &[usize],
+    qs: &[usize],
+    thetas: &[f32],
+    data: &[f32],
+    acc: &mut Mat8,
+) {
+    *acc = identity8();
+    let pos = |q: usize| qs.iter().position(|&x| x == q).expect("factor outside block support");
+    for &gi in factors {
+        match classify(&template[gi].resolve(thetas, data)) {
+            Kind::One(q, m) => mul_lift1_left(acc, &m, pos(q)),
+            Kind::Two(a, b, m) => mul_lift2_left(acc, &m, pos(a), pos(b)),
+            Kind::Other => unreachable!("barrier gate in a fused op"),
+        }
+    }
+}
+
+/// `acc = LIFT(m) * acc` where the 1q matrix `m` targets block position
+/// `p` (block row bit `2 - p`, matching [`State::apply_3q`] indexing).
+/// Touches each row pair once — 2x2 work per column instead of an 8x8
+/// general multiply.
+fn mul_lift1_left(acc: &mut Mat8, m: &Mat2, p: usize) {
+    let bit = 1usize << (2 - p);
+    for r in 0..8 {
+        if r & bit != 0 {
+            continue;
+        }
+        let r1 = r | bit;
+        for c in 0..8 {
+            let a0 = acc[r][c];
+            let a1 = acc[r1][c];
+            acc[r][c] = m[0][0] * a0 + m[0][1] * a1;
+            acc[r1][c] = m[1][0] * a0 + m[1][1] * a1;
+        }
+    }
+}
+
+/// `acc = LIFT(m) * acc` where the 2q matrix `m`'s operands sit at block
+/// positions `p0` (more significant pair bit) and `p1`.
+fn mul_lift2_left(acc: &mut Mat8, m: &Mat4, p0: usize, p1: usize) {
+    let b0 = 1usize << (2 - p0);
+    let b1 = 1usize << (2 - p1);
+    for r in 0..8 {
+        if r & b0 != 0 || r & b1 != 0 {
+            continue;
+        }
+        let rows = [r, r | b1, r | b0, r | b0 | b1];
+        for c in 0..8 {
+            let a = [acc[rows[0]][c], acc[rows[1]][c], acc[rows[2]][c], acc[rows[3]][c]];
+            for (ri, &row) in rows.iter().enumerate() {
+                let mut s = C64::ZERO;
+                for (ci, &av) in a.iter().enumerate() {
+                    s += m[ri][ci] * av;
+                }
+                acc[row][c] = s;
+            }
+        }
+    }
+}
+
+/// One bound (angle-resolved) operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BoundOp {
+    /// Fused 2x2 product on one qubit.
+    Single { q: usize, m: Mat2 },
+    /// Fused 4x4 product on a sorted qubit pair.
+    Pair { q0: usize, q1: usize, m: Mat4 },
+    /// Fused 8x8 product on a sorted qubit triple (boxed: keeps the enum
+    /// small for the common Single/Pair ops).
+    Block { qs: [usize; 3], m: Box<Mat8> },
+    /// Unfusable gate through normal dispatch (CSWAP).
+    Apply { gate: Gate },
+}
+
+/// A fully bound circuit: matrices resolved, ready to apply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoundProgram {
+    n_qubits: usize,
+    ops: Vec<BoundOp>,
+}
+
+impl BoundProgram {
+    /// Statevector width.
+    pub fn n_qubits(&self) -> usize {
+        self.n_qubits
+    }
+
+    /// The bound op list (application order).
+    pub fn ops(&self) -> &[BoundOp] {
+        &self.ops
+    }
+
+    /// Apply the whole program to `state`.
+    pub fn apply(&self, state: &mut State) {
+        for op in &self.ops {
+            match op {
+                BoundOp::Single { q, m } => state.apply_1q(m, *q),
+                BoundOp::Pair { q0, q1, m } => state.apply_2q(m, *q0, *q1),
+                BoundOp::Block { qs, m } => state.apply_3q(m, qs[0], qs[1], qs[2]),
+                BoundOp::Apply { gate } => state.apply_gate(gate),
+            }
+        }
+    }
+
+    /// Reset `scratch` to |0...0>, run the program, and read the
+    /// swap-test fidelity — the per-circuit hot loop of the executors.
+    pub fn fidelity_into(&self, scratch: &mut State) -> f64 {
+        debug_assert_eq!(scratch.n_qubits(), self.n_qubits);
+        scratch.reset_zero();
+        self.apply(scratch);
+        2.0 * scratch.prob_zero(0) - 1.0
+    }
+
+    /// [`Self::fidelity_into`] with a freshly allocated statevector.
+    pub fn fidelity(&self) -> f64 {
+        let mut st = State::zero(self.n_qubits);
+        self.fidelity_into(&mut st)
+    }
+}
+
+/// Cache observability counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that compiled a fresh program.
+    pub misses: u64,
+    /// Programs currently cached.
+    pub len: usize,
+}
+
+struct CacheInner<K> {
+    /// LRU order: least recent first, most recent last.
+    entries: Vec<(K, Arc<CompiledProgram>)>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A small LRU of compiled programs keyed by circuit configuration.
+///
+/// Sized for the handful of live configs a tenant mix produces (the
+/// paper evaluates six); eviction only means a recompile, never an
+/// incorrect result — a key resolves to a program compiled from that
+/// key's template alone, so stale-entry invalidation cannot arise.
+pub struct PlanCache<K> {
+    cap: usize,
+    inner: Mutex<CacheInner<K>>,
+}
+
+impl<K> std::fmt::Debug for PlanCache<K> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        f.debug_struct("PlanCache")
+            .field("cap", &self.cap)
+            .field("len", &inner.entries.len())
+            .field("hits", &inner.hits)
+            .field("misses", &inner.misses)
+            .finish()
+    }
+}
+
+impl<K: Clone + PartialEq> PlanCache<K> {
+    /// Cache holding at most `cap` programs (clamped to at least 1).
+    pub fn new(cap: usize) -> PlanCache<K> {
+        PlanCache {
+            cap: cap.max(1),
+            inner: Mutex::new(CacheInner { entries: Vec::new(), hits: 0, misses: 0 }),
+        }
+    }
+
+    /// Fetch the program for `key`, compiling (and caching) on miss.
+    pub fn get_or_compile(
+        &self,
+        key: &K,
+        compile: impl FnOnce() -> CompiledProgram,
+    ) -> Arc<CompiledProgram> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(i) = inner.entries.iter().position(|(k, _)| k == key) {
+            inner.hits += 1;
+            // Refresh recency: move to the tail.
+            let entry = inner.entries.remove(i);
+            let prog = Arc::clone(&entry.1);
+            inner.entries.push(entry);
+            return prog;
+        }
+        inner.misses += 1;
+        let prog = Arc::new(compile());
+        inner.entries.push((key.clone(), Arc::clone(&prog)));
+        if inner.entries.len() > self.cap {
+            inner.entries.remove(0);
+        }
+        prog
+    }
+
+    /// Current hit/miss/occupancy counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        CacheStats { hits: inner.hits, misses: inner.misses, len: inner.entries.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_state(rng: &mut Rng, nq: usize) -> State {
+        let mut amps: Vec<C64> =
+            (0..1usize << nq).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let norm = amps.iter().map(|a| a.norm_sq()).sum::<f64>().sqrt();
+        for a in &mut amps {
+            *a = a.scale(1.0 / norm);
+        }
+        State::from_amps(amps)
+    }
+
+    fn assert_close(a: &State, b: &State, tol: f64) {
+        for (x, y) in a.amps().iter().zip(b.amps().iter()) {
+            assert!(
+                (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol,
+                "{x:?} != {y:?}"
+            );
+        }
+    }
+
+    fn check_parity(gate_list: &[Gate], nq: usize, seed: u64) {
+        let template = CircuitTemplate::from_gates(nq, gate_list);
+        let mut rng = Rng::new(seed);
+        for max_block in [1usize, 2, 3] {
+            let prog = CompiledProgram::compile_with(template.clone(), max_block);
+            let bound = prog.bind(&[], &[]);
+            for _ in 0..3 {
+                let base = random_state(&mut rng, nq);
+                let mut serial = base.clone();
+                serial.run(gate_list);
+                let mut compiled = base;
+                bound.apply(&mut compiled);
+                assert_close(&serial, &compiled, 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_blocks_match_serial_walk() {
+        check_parity(
+            &[
+                Gate::Ry { q: 0, theta: 0.4 },
+                Gate::Rz { q: 1, theta: -0.9 },
+                Gate::Ryy { q0: 0, q1: 1, theta: 0.7 },
+                Gate::Cry { control: 2, target: 1, theta: 1.1 },
+                Gate::H { q: 2 },
+                Gate::Rzz { q0: 2, q1: 0, theta: -0.3 },
+            ],
+            3,
+            11,
+        );
+    }
+
+    #[test]
+    fn cswap_stays_a_barrier() {
+        check_parity(
+            &[
+                Gate::H { q: 0 },
+                Gate::Ry { q: 1, theta: 0.8 },
+                Gate::Cswap { control: 0, a: 1, b: 2 },
+                Gate::H { q: 0 },
+                Gate::Ry { q: 1, theta: -0.8 },
+            ],
+            3,
+            13,
+        );
+    }
+
+    #[test]
+    fn three_qubit_chain_collapses_into_one_block() {
+        // (0,1) then (1,2) share only qubit 1: pairwise fusion must keep
+        // them apart, 3q fusion must merge them.
+        let gate_list = vec![
+            Gate::Ryy { q0: 0, q1: 1, theta: 0.3 },
+            Gate::Ryy { q0: 1, q1: 2, theta: 0.5 },
+            Gate::Crz { control: 0, target: 2, theta: -0.7 },
+        ];
+        let template = CircuitTemplate::from_gates(3, &gate_list);
+        let pairwise = CompiledProgram::compile_with(template.clone(), 2);
+        assert_eq!(pairwise.stats().ops_out, 3);
+        assert_eq!(pairwise.stats().blocks3, 0);
+        let blocked = CompiledProgram::compile_with(template, 3);
+        assert_eq!(blocked.stats().ops_out, 1);
+        assert_eq!(blocked.stats().blocks3, 1);
+        check_parity(&gate_list, 3, 17);
+    }
+
+    #[test]
+    fn support_growth_respects_intervening_ops() {
+        // The Ryy(1,2) wants to absorb the earlier Single(1)-adjacent
+        // pair, but H(3)... is disjoint; the blocker is Ry on qubit 2
+        // *between* the pair ops in a way that intersects the union.
+        let gate_list = vec![
+            Gate::Ryy { q0: 0, q1: 1, theta: 0.4 },
+            Gate::Cry { control: 1, target: 2, theta: 0.9 },
+            Gate::Ryy { q0: 0, q1: 3, theta: -0.6 },
+            Gate::Rzz { q0: 2, q1: 3, theta: 1.3 },
+        ];
+        check_parity(&gate_list, 4, 19);
+    }
+
+    #[test]
+    fn random_circuits_compiled_parity() {
+        let mut rng = Rng::new(29);
+        for _ in 0..40 {
+            let nq = 3 + rng.index(3);
+            let n_gates = 1 + rng.index(18);
+            let gate_list = random_gates(&mut rng, nq, n_gates);
+            check_parity(&gate_list, nq, rng.next_u64());
+        }
+    }
+
+    pub(crate) fn random_gates(rng: &mut Rng, nq: usize, n: usize) -> Vec<Gate> {
+        (0..n)
+            .map(|_| {
+                let theta = rng.range_f64(-3.0, 3.0);
+                let q = rng.index(nq);
+                let mut q1 = rng.index(nq);
+                while q1 == q {
+                    q1 = rng.index(nq);
+                }
+                match rng.below(8) {
+                    0 => Gate::H { q },
+                    1 => Gate::Rx { q, theta },
+                    2 => Gate::Ry { q, theta },
+                    3 => Gate::Rz { q, theta },
+                    4 => Gate::Ryy { q0: q, q1, theta },
+                    5 => Gate::Rzz { q0: q, q1, theta },
+                    6 => Gate::Cry { control: q, target: q1, theta },
+                    _ => {
+                        if nq >= 3 && rng.below(3) == 0 {
+                            let mut q2 = rng.index(nq);
+                            while q2 == q || q2 == q1 {
+                                q2 = rng.index(nq);
+                            }
+                            Gate::Cswap { control: q, a: q1, b: q2 }
+                        } else {
+                            Gate::Crz { control: q, target: q1, theta }
+                        }
+                    }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rebind_is_bitwise_identical_to_fresh_bind() {
+        let gate_list = vec![
+            Gate::Ry { q: 0, theta: 0.0 },
+            Gate::Ryy { q0: 0, q1: 1, theta: 0.0 },
+            Gate::Cry { control: 1, target: 2, theta: 0.0 },
+        ];
+        let mut template = CircuitTemplate::from_gates(3, &gate_list);
+        template.gates[0].slot = Slot::Theta(0);
+        template.gates[1].slot = Slot::Theta(1);
+        template.gates[2].slot = Slot::Data(0);
+        let prog = CompiledProgram::compile(template);
+        let mut reused = prog.bind(&[9.9, -9.9], &[9.9]);
+        for pair in [([0.3f32, -0.7], [1.1f32]), ([2.0, 0.1], [-0.4]), ([0.0, 0.0], [0.0])] {
+            prog.rebind(&mut reused, &pair.0, &pair.1);
+            let fresh = prog.bind(&pair.0, &pair.1);
+            assert_eq!(reused, fresh);
+        }
+    }
+
+    #[test]
+    fn template_slots_resolve_against_both_vectors() {
+        let tg = TemplateGate { gate: Gate::Ry { q: 1, theta: 0.0 }, slot: Slot::Theta(2) };
+        assert_eq!(tg.resolve(&[0.0, 0.0, 1.5], &[]), Gate::Ry { q: 1, theta: 1.5 });
+        let dg = TemplateGate { gate: Gate::Rz { q: 2, theta: 0.0 }, slot: Slot::Data(0) };
+        assert_eq!(dg.resolve(&[], &[-0.25]), Gate::Rz { q: 2, theta: -0.25 });
+        let fixed = TemplateGate { gate: Gate::H { q: 0 }, slot: Slot::Fixed };
+        assert_eq!(fixed.resolve(&[], &[]), Gate::H { q: 0 });
+    }
+
+    #[test]
+    fn plan_cache_hits_and_evicts() {
+        let cache: PlanCache<usize> = PlanCache::new(2);
+        let compile_for = |nq: usize| {
+            let gate_list = vec![Gate::H { q: 0 }];
+            CompiledProgram::compile(CircuitTemplate::from_gates(nq, &gate_list))
+        };
+        let a = cache.get_or_compile(&3, || compile_for(3));
+        let b = cache.get_or_compile(&3, || compile_for(3));
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must return the same program");
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+        cache.get_or_compile(&4, || compile_for(4));
+        cache.get_or_compile(&5, || compile_for(5)); // evicts key 3 (LRU)
+        assert_eq!(cache.stats().len, 2);
+        let c = cache.get_or_compile(&3, || compile_for(3));
+        assert!(!Arc::ptr_eq(&a, &c), "evicted key must recompile");
+        assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn lift_multiplies_match_general_embedding() {
+        // LIFT checks via action on a random 3-qubit state: folding a
+        // 1q/2q gate into an identity block and applying the block must
+        // equal applying the gate directly.
+        let mut rng = Rng::new(37);
+        for _ in 0..20 {
+            let base = random_state(&mut rng, 3);
+            let theta = rng.range_f64(-3.0, 3.0);
+            // 1q lift on each position
+            for (p, q) in [(0usize, 0usize), (1, 1), (2, 2)] {
+                let mut block = identity8();
+                mul_lift1_left(&mut block, &gates::ry_matrix(theta), p);
+                let mut via_block = base.clone();
+                via_block.apply_3q(&block, 0, 1, 2);
+                let mut direct = base.clone();
+                direct.apply_1q(&gates::ry_matrix(theta), q);
+                assert_close(&via_block, &direct, 1e-12);
+            }
+            // 2q lift on each ordered operand placement
+            for (p0, p1) in [(0usize, 1usize), (1, 2), (0, 2), (1, 0), (2, 0), (2, 1)] {
+                let mut block = identity8();
+                mul_lift2_left(&mut block, &gates::cry_matrix(theta), p0, p1);
+                let mut via_block = base.clone();
+                via_block.apply_3q(&block, 0, 1, 2);
+                let mut direct = base.clone();
+                direct.apply_gate(&Gate::Cry { control: p0, target: p1, theta });
+                assert_close(&via_block, &direct, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn instantiate_round_trips_fixed_gates() {
+        let gate_list = vec![
+            Gate::H { q: 0 },
+            Gate::Cry { control: 0, target: 1, theta: 0.5 },
+            Gate::Cswap { control: 0, a: 1, b: 2 },
+        ];
+        let template = CircuitTemplate::from_gates(3, &gate_list);
+        assert_eq!(template.instantiate(&[], &[]), gate_list);
+    }
+}

@@ -131,8 +131,8 @@ pub fn mat4_mul(a: &Mat4, b: &Mat4) -> Mat4 {
 
 /// Lift a 1q matrix onto a pair: `slot = 0` targets `q0` (the more
 /// significant pair-index bit, `kron(m, I)`), `slot = 1` targets `q1`
-/// (`kron(I, m)`).
-fn lift_to_pair(m: &Mat2, slot: usize) -> Mat4 {
+/// (`kron(I, m)`). Shared with the compiled pipeline (`super::compile`).
+pub(crate) fn lift_to_pair(m: &Mat2, slot: usize) -> Mat4 {
     debug_assert!(slot < 2);
     let mut out = [[C64::ZERO; 4]; 4];
     for r0 in 0..2 {
@@ -154,14 +154,19 @@ fn lift_to_pair(m: &Mat2, slot: usize) -> Mat4 {
     out
 }
 
-/// A gate classified for fusion.
-enum Kind {
+/// A gate classified for fusion: its dense matrix plus operand order.
+/// Shared with the compiled pipeline (`super::compile`).
+pub(crate) enum Kind {
+    /// 1q gate: (qubit, 2x2 matrix).
     One(usize, Mat2),
+    /// 2q gate: (first operand, second operand, 4x4 matrix indexed
+    /// `2*b(first) + b(second)`).
     Two(usize, usize, Mat4),
+    /// Unfusable (CSWAP).
     Other,
 }
 
-fn classify(g: &Gate) -> Kind {
+pub(crate) fn classify(g: &Gate) -> Kind {
     match *g {
         Gate::H { q } => Kind::One(q, gates::h_matrix()),
         Gate::Rx { q, theta } => Kind::One(q, gates::rx_matrix(theta)),

@@ -139,6 +139,9 @@ pub const INV_SQRT2: f64 = std::f64::consts::FRAC_1_SQRT_2;
 pub type Mat2 = [[C64; 2]; 2];
 /// 4x4 matrix in row-major order; index = 2*b(q0) + b(q1).
 pub type Mat4 = [[C64; 4]; 4];
+/// 8x8 matrix in row-major order; index = 4*b(q0) + 2*b(q1) + b(q2)
+/// with q0 < q1 < q2 (the fused 3-qubit block of `qsim::compile`).
+pub type Mat8 = [[C64; 8]; 8];
 
 /// Hadamard matrix.
 pub fn h_matrix() -> Mat2 {

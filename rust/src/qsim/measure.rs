@@ -31,25 +31,15 @@ pub fn sample_swap_test_fidelity(state: &State, shots: usize, rng: &mut Rng) -> 
 }
 
 /// Sample full computational-basis measurement outcomes (indices).
+///
+/// Delegates to the CDF helpers in [`super::shots`] — one shared
+/// inverse-CDF implementation, using `partition_point` rather than a
+/// `partial_cmp().unwrap()` comparator that could panic on NaN.
 pub fn sample_shots(state: &State, shots: usize, rng: &mut Rng) -> Vec<usize> {
-    // Inverse-CDF sampling over the amplitude distribution.
-    let probs: Vec<f64> = state.amps().iter().map(|a| a.norm_sq()).collect();
-    let mut cdf = Vec::with_capacity(probs.len());
-    let mut acc = 0.0;
-    for p in &probs {
-        acc += p;
-        cdf.push(acc);
-    }
-    let total = acc; // ~1.0; guard against drift
-    (0..shots)
-        .map(|_| {
-            let u = rng.f64() * total;
-            match cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
-                Ok(i) => i,
-                Err(i) => i.min(cdf.len() - 1),
-            }
-        })
-        .collect()
+    let (cdf, total) = super::shots::cumulative(state);
+    let mut out = Vec::with_capacity(shots);
+    super::shots::sample_into(&cdf, total, shots, rng, &mut out);
+    out
 }
 
 #[cfg(test)]

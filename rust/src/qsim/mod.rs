@@ -12,13 +12,20 @@
 //! qubit indexing (qubit 0 = most significant index bit), identical gate
 //! definitions, identical QuClassi register layout.
 //!
-//! Two execution paths exist on top of [`state::State`]: the serial
-//! gate-by-gate walk ([`State::run`]) and the fused path
-//! ([`fusion::fuse`] + [`FusedProgram::apply`]), which coalesces runs of
-//! adjacent one/two-qubit gates into single matrices. [`shots::run_shots`]
-//! builds on the fused path to fan measurement shots across an internal
-//! thread pool with deterministic per-chunk RNG streams (DESIGN.md §11).
+//! Three execution paths exist on top of [`state::State`]: the serial
+//! gate-by-gate walk ([`State::run`]), the fused path ([`fusion::fuse`]
+//! + [`FusedProgram::apply`]), which coalesces runs of adjacent
+//! one/two-qubit gates into single matrices, and the compiled path
+//! ([`compile::CompiledProgram`]), which runs the fusion plan once per
+//! circuit *structure*, widens fusion to 3-qubit (8x8) blocks, and
+//! rebinds parameters per circuit without re-planning — cached per
+//! config via [`compile::PlanCache`] (DESIGN.md §15). The executors
+//! (`model::exec`, `worker::backend`) all route through the compiled
+//! path; [`shots::run_shots`] compiles once and fans measurement shots
+//! across an internal thread pool with deterministic per-chunk RNG
+//! streams (DESIGN.md §11).
 
+pub mod compile;
 pub mod complex;
 pub mod fusion;
 pub mod gates;
@@ -27,9 +34,13 @@ pub mod noise;
 pub mod shots;
 pub mod state;
 
+pub use compile::{
+    BoundOp, BoundProgram, CacheStats, CircuitTemplate, CompiledProgram, PlanCache, PlanStats,
+    Slot, TemplateGate,
+};
 pub use complex::C64;
 pub use fusion::{fuse, FusedOp, FusedProgram};
 pub use measure::{sample_shots, swap_test_fidelity};
 pub use noise::NoiseModel;
-pub use shots::run_shots;
+pub use shots::{run_shots, sample_state};
 pub use state::State;

@@ -4,10 +4,11 @@
 //! A *shot* is one end-to-end execution of a circuit followed by a full
 //! computational-basis measurement — the unit a real quantum backend
 //! bills by and the unit the paper's circuits-per-second metric counts.
-//! [`run_shots`] fuses the circuit once ([`super::fusion`]), simulates
-//! the statevector once, then fans the sampling work out over the shared
-//! scoped-thread pool ([`crate::util::pool`]), with every thread reading
-//! the same cumulative distribution.
+//! [`run_shots`] compiles the circuit once ([`super::compile`], fused
+//! blocks + blocked kernels), simulates the statevector once, then fans
+//! the sampling work out over the shared scoped-thread pool
+//! ([`crate::util::pool`]), with every thread reading the same
+//! cumulative distribution.
 //!
 //! Determinism: shots are partitioned into fixed-size chunks
 //! ([`SHOT_CHUNK`]) and every chunk derives its own RNG stream from
@@ -15,7 +16,7 @@
 //! count, so the returned outcome sequence is bitwise identical for any
 //! `threads` value (asserted in `rust/tests/parallel_parity.rs`).
 
-use super::fusion;
+use super::compile::{CircuitTemplate, CompiledProgram};
 use super::gates::Gate;
 use super::state::State;
 use crate::util::{pool, Rng};
@@ -39,18 +40,28 @@ pub fn run_shots(
     if n_shots == 0 {
         return Vec::new();
     }
-    // Fuse and simulate exactly once; pool threads share the read-only
-    // cumulative distribution and sample disjoint chunks.
-    let program = fusion::fuse(gate_list);
+    // Compile (fused blocks + blocked kernels) and simulate exactly
+    // once; pool threads share the read-only cumulative distribution
+    // and sample disjoint chunks.
+    let program = CompiledProgram::compile(CircuitTemplate::from_gates(n_qubits, gate_list));
     let mut st = State::zero(n_qubits);
-    program.apply(&mut st);
-    let (cdf, total) = cumulative(&st);
+    program.bind(&[], &[]).apply(&mut st);
+    sample_state(&st, n_shots, threads, seed)
+}
 
+/// Sample `n_shots` computational-basis outcomes from an already
+/// evolved state, fanned over `threads` pool threads with the same
+/// chunked deterministic RNG streams as [`run_shots`].
+pub fn sample_state(st: &State, n_shots: usize, threads: usize, seed: u64) -> Vec<usize> {
+    if n_shots == 0 {
+        return Vec::new();
+    }
+    let (cdf, total) = cumulative(st);
     let n_chunks = n_shots.div_ceil(SHOT_CHUNK);
     let chunks = pool::parallel_indexed(n_chunks, threads, |c| {
         let range = chunk_range(c, n_shots);
         let mut out = Vec::with_capacity(range.len());
-        sample_chunk(&cdf, total, range, &mut chunk_rng(seed, c), &mut out);
+        sample_into(&cdf, total, range.len(), &mut chunk_rng(seed, c), &mut out);
         out
     });
     let mut out = Vec::with_capacity(n_shots);
@@ -92,8 +103,9 @@ fn chunk_rng(seed: u64, chunk: usize) -> Rng {
 }
 
 /// Cumulative measurement distribution of a state (plus its total, which
-/// is ~1.0 but guarded against float drift).
-fn cumulative(state: &State) -> (Vec<f64>, f64) {
+/// is ~1.0 but guarded against float drift). Shared with
+/// [`super::measure::sample_shots`] so there is exactly one CDF builder.
+pub(crate) fn cumulative(state: &State) -> (Vec<f64>, f64) {
     let mut cdf = Vec::with_capacity(state.amps().len());
     let mut acc = 0.0;
     for a in state.amps() {
@@ -103,15 +115,18 @@ fn cumulative(state: &State) -> (Vec<f64>, f64) {
     (cdf, acc)
 }
 
-/// Inverse-CDF sampling of one chunk into `out`.
-fn sample_chunk(
+/// Inverse-CDF sampling of `count` outcomes into `out`. Uses
+/// `partition_point` (total-order comparison on already-accumulated
+/// prefix sums), so it cannot panic on NaN the way a
+/// `partial_cmp().unwrap()` comparator would.
+pub(crate) fn sample_into(
     cdf: &[f64],
     total: f64,
-    range: std::ops::Range<usize>,
+    count: usize,
     rng: &mut Rng,
     out: &mut Vec<usize>,
 ) {
-    for _ in range {
+    for _ in 0..count {
         let u = rng.f64() * total;
         out.push(cdf.partition_point(|&c| c <= u).min(cdf.len() - 1));
     }

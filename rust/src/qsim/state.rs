@@ -75,9 +75,59 @@ impl State {
 
     /// Apply a dense two-qubit matrix to the ordered pair (q0, q1).
     /// The matrix row/column index is `2*b(q0) + b(q1)`.
+    ///
+    /// Base indices (both pair bits clear) are enumerated directly with
+    /// three nested strided loops — `2^(n-2)` iterations instead of the
+    /// `2^n` filtered scan of [`State::apply_2q_masked`] — visiting the
+    /// same bases in the same ascending order, so results are bitwise
+    /// identical to the masked scan.
     pub fn apply_2q(&mut self, m: &Mat4, q0: usize, q1: usize) {
         assert_ne!(q0, q1);
         // Normalize so s0 > s1 (q0 more significant in the pair index).
+        let (s0, s1, m_owned);
+        if q0 < q1 {
+            s0 = self.stride(q0);
+            s1 = self.stride(q1);
+            m_owned = *m;
+        } else {
+            s0 = self.stride(q1);
+            s1 = self.stride(q0);
+            m_owned = gates::swap_pair_order(m);
+        }
+        let m = &m_owned;
+        let n = self.amps.len();
+        // b0 walks regions with the s0 bit clear; b1 walks s1-clear
+        // sub-regions; the innermost range is a contiguous run of
+        // low-order offsets (cache-friendly unit stride).
+        let mut b0 = 0;
+        while b0 < n {
+            let mut b1 = b0;
+            while b1 < b0 + s0 {
+                for base in b1..b1 + s1 {
+                    let i00 = base;
+                    let i01 = base | s1;
+                    let i10 = base | s0;
+                    let i11 = base | s0 | s1;
+                    let a = [self.amps[i00], self.amps[i01], self.amps[i10], self.amps[i11]];
+                    for (r, &idx) in [i00, i01, i10, i11].iter().enumerate() {
+                        let mut acc = C64::ZERO;
+                        for (c, &ac) in a.iter().enumerate() {
+                            acc += m[r][c] * ac;
+                        }
+                        self.amps[idx] = acc;
+                    }
+                }
+                b1 += 2 * s1;
+            }
+            b0 += 2 * s0;
+        }
+    }
+
+    /// The seed implementation of [`State::apply_2q`]: scan all `2^n`
+    /// indices and mask-filter for clear pair bits. Kept as the kernel
+    /// oracle for tests and the ablation baseline for `micro_qsim`.
+    pub fn apply_2q_masked(&mut self, m: &Mat4, q0: usize, q1: usize) {
+        assert_ne!(q0, q1);
         let (s0, s1, m_owned);
         if q0 < q1 {
             s0 = self.stride(q0);
@@ -109,6 +159,65 @@ impl State {
             }
             i += 1;
         }
+    }
+
+    /// Apply a dense three-qubit matrix to the sorted triple
+    /// `q0 < q1 < q2`. The matrix row/column index is
+    /// `4*b(q0) + 2*b(q1) + b(q2)` — the fused-block convention of
+    /// `qsim::compile`. Enumerates the `2^(n-3)` base indices directly
+    /// with the same cache-blocked loop layout as [`State::apply_2q`]
+    /// (reference: `python/compile/kernels/statevector.py`).
+    pub fn apply_3q(&mut self, m: &gates::Mat8, q0: usize, q1: usize, q2: usize) {
+        assert!(q0 < q1 && q1 < q2, "apply_3q expects sorted distinct qubits");
+        let s0 = self.stride(q0);
+        let s1 = self.stride(q1);
+        let s2 = self.stride(q2);
+        let n = self.amps.len();
+        let mut b0 = 0;
+        while b0 < n {
+            let mut b1 = b0;
+            while b1 < b0 + s0 {
+                let mut b2 = b1;
+                while b2 < b1 + s1 {
+                    for base in b2..b2 + s2 {
+                        let idx = [
+                            base,
+                            base | s2,
+                            base | s1,
+                            base | s1 | s2,
+                            base | s0,
+                            base | s0 | s2,
+                            base | s0 | s1,
+                            base | s0 | s1 | s2,
+                        ];
+                        let mut a = [C64::ZERO; 8];
+                        for (k, &i) in idx.iter().enumerate() {
+                            a[k] = self.amps[i];
+                        }
+                        for (r, &i) in idx.iter().enumerate() {
+                            let mut acc = C64::ZERO;
+                            for (c, &ac) in a.iter().enumerate() {
+                                acc += m[r][c] * ac;
+                            }
+                            self.amps[i] = acc;
+                        }
+                    }
+                    b2 += 2 * s2;
+                }
+                b1 += 2 * s1;
+            }
+            b0 += 2 * s0;
+        }
+    }
+
+    /// Reset to |0...0> in place (no reallocation) — bitwise identical
+    /// to a fresh [`State::zero`] of the same width. The scratch-state
+    /// reset of the compiled executor hot loop.
+    pub fn reset_zero(&mut self) {
+        for a in &mut self.amps {
+            *a = C64::ZERO;
+        }
+        self.amps[0] = C64::ONE;
     }
 
     /// Fast path: Ry (real 2x2 rotation).
@@ -345,6 +454,76 @@ mod tests {
         let before = s.clone();
         s.apply_cswap(0, 1, 2);
         assert_states_eq(&s, &before);
+    }
+
+    #[test]
+    fn blocked_apply_2q_bitwise_matches_masked_scan() {
+        let mut rng = Rng::new(53);
+        for nq in 2..=6 {
+            for _ in 0..8 {
+                let q0 = rng.index(nq);
+                let mut q1 = rng.index(nq);
+                while q1 == q0 {
+                    q1 = rng.index(nq);
+                }
+                let theta = rng.range_f64(-3.0, 3.0);
+                let m = gates::ryy_matrix(theta);
+                let base = random_state(&mut rng, nq);
+                let mut blocked = base.clone();
+                blocked.apply_2q(&m, q0, q1);
+                let mut masked = base;
+                masked.apply_2q_masked(&m, q0, q1);
+                // bitwise: the loop layouts visit identical bases in
+                // identical order with identical arithmetic
+                assert_eq!(blocked, masked, "nq={nq} q0={q0} q1={q1}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_3q_matches_composed_small_gates() {
+        // A block built as kron-lifts of CRY(0,1) then Rzz(1,2) must act
+        // like applying the two gates in sequence.
+        let mut rng = Rng::new(59);
+        for _ in 0..6 {
+            let (ta, tb) = (rng.range_f64(-3.0, 3.0), rng.range_f64(-3.0, 3.0));
+            let base = random_state(&mut rng, 5);
+            // build the 8x8 by probing basis columns through the 2q ops
+            let mut block = [[C64::ZERO; 8]; 8];
+            for col in 0..8 {
+                let mut amps = vec![C64::ZERO; 8];
+                amps[col] = C64::ONE;
+                let mut probe = State::from_amps(amps);
+                probe.apply_2q(&gates::cry_matrix(ta), 0, 1);
+                probe.apply_2q(&gates::rzz_matrix(tb), 1, 2);
+                for (r, row) in block.iter_mut().enumerate() {
+                    row[col] = probe.amps()[r];
+                }
+            }
+            // apply on non-adjacent qubits of a larger register too
+            for (q0, q1, q2) in [(0usize, 1usize, 2usize), (1, 3, 4), (0, 2, 4)] {
+                let mut via_block = base.clone();
+                via_block.apply_3q(&block, q0, q1, q2);
+                let mut direct = base.clone();
+                direct.apply_2q(&gates::cry_matrix(ta), q0, q1);
+                direct.apply_2q(&gates::rzz_matrix(tb), q1, q2);
+                for (x, y) in via_block.amps().iter().zip(direct.amps().iter()) {
+                    assert!(
+                        (x.re - y.re).abs() < 1e-12 && (x.im - y.im).abs() < 1e-12,
+                        "({q0},{q1},{q2}): {x:?} != {y:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reset_zero_equals_fresh_state() {
+        let mut rng = Rng::new(61);
+        let mut s = random_state(&mut rng, 4);
+        s.apply_h(2);
+        s.reset_zero();
+        assert_eq!(s, State::zero(4));
     }
 
     #[test]

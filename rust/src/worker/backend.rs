@@ -69,11 +69,13 @@ impl WorkerBackend {
             WorkerBackend::ParallelQsim(pool) => pool.execute_bank(config, pairs),
             WorkerBackend::NoisyQsim(noise, seed) => {
                 // Trajectory simulation with per-gate Pauli noise. The
-                // trajectory stream is derived from the circuit inputs so
-                // repeated calls see fresh (but reproducible) noise draws
-                // rather than one frozen corruption pattern.
+                // trajectory stream is derived from *every* circuit in
+                // the batch so repeated calls see fresh (but
+                // reproducible) noise draws — hashing only the first
+                // pair would replay an identical noise stream for any
+                // two batches sharing pair 0.
                 let mut hash = 0xcbf2_9ce4_8422_2325u64 ^ seed;
-                for (t, d) in pairs.iter().take(1) {
+                for (t, d) in pairs.iter() {
                     for x in t.iter().chain(d.iter()) {
                         hash = (hash ^ x.to_bits() as u64).wrapping_mul(0x1000_0000_01b3);
                     }
@@ -158,6 +160,20 @@ mod tests {
         let diff: f32 =
             clean.iter().zip(noisy.iter()).map(|(a, b)| (a - b).abs()).sum::<f32>();
         assert!(diff > 1e-3, "noise had no effect");
+    }
+
+    #[test]
+    fn noise_stream_depends_on_every_pair() {
+        // Regression: the trajectory hash once read only pairs[0], so two
+        // batches sharing pair 0 replayed an identical noise stream.
+        let cfg = QuClassiConfig::new(5, 2).unwrap();
+        let ps = pairs(&cfg, 2);
+        let mut alt = ps.clone();
+        alt[1].0[0] += 1.0; // same pair 0, different pair 1
+        let noise = NoiseModel { p1: 0.2, p2: 0.3, readout: 0.0 };
+        let a = WorkerBackend::NoisyQsim(noise, 7).execute(&cfg, &ps).unwrap();
+        let b = WorkerBackend::NoisyQsim(noise, 7).execute(&cfg, &alt).unwrap();
+        assert_ne!(a[0], b[0], "noise stream must depend on later pairs too");
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Compiled-circuit pipeline parity (DESIGN.md §15).
+//!
+//! The plan cache and cache-blocked kernels are pure perf machinery:
+//! they must not move a single observable bit relative to the paths
+//! they replace. This suite pins that down from four angles:
+//!
+//! * the compiled+cached executor agrees with the seed
+//!   `simulate_fidelity` gate-walk within 1e-6 (f32 rounding of the
+//!   ~1e-15 f64 re-association drift) on every paper config;
+//! * fidelities are **bitwise** invariant across executor thread
+//!   counts, because `bind == bind_skeleton + rebind` is one code path;
+//! * rebinding parameters into a cache-hit plan is bitwise identical to
+//!   a cold compile+bind;
+//! * a property test over random gate lists — CSWAPs acting as fusion
+//!   barriers, chains that collapse into 3-qubit blocks — checks the
+//!   compiled program against the serial gate walk at every
+//!   `max_block` setting.
+
+use std::sync::Arc;
+
+use dqulearn::circuit::{builder, QuClassiConfig};
+use dqulearn::model::exec::{CircuitExecutor, CircuitPair, ParallelQsimExecutor, QsimExecutor};
+use dqulearn::qsim::gates::Gate;
+use dqulearn::qsim::{CircuitTemplate, CompiledProgram, State};
+use dqulearn::testlib;
+use dqulearn::util::Rng;
+
+fn random_pairs(cfg: &QuClassiConfig, n: usize, seed: u64) -> Vec<CircuitPair> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            (
+                (0..cfg.n_params()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+                (0..cfg.n_features()).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn compiled_executor_matches_seed_fidelity_on_all_paper_configs() {
+    for cfg in QuClassiConfig::paper_configs() {
+        let pairs = random_pairs(&cfg, 6, 0xC0FFEE ^ cfg.layers as u64);
+        let fids = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+        for (i, (thetas, data)) in pairs.iter().enumerate() {
+            let want = builder::simulate_fidelity(&cfg, thetas, data);
+            assert!(
+                (fids[i] - want).abs() < 1e-6,
+                "q={} l={} pair {i}: compiled {} vs seed {}",
+                cfg.qubits,
+                cfg.layers,
+                fids[i],
+                want
+            );
+            // the one-shot helper rides the same global plan cache and
+            // the same bind path, so it is bitwise identical
+            assert_eq!(builder::simulate_fidelity_compiled(&cfg, thetas, data), fids[i]);
+        }
+    }
+}
+
+#[test]
+fn fidelities_are_bitwise_invariant_across_thread_counts() {
+    let cfg = QuClassiConfig::new(7, 3).unwrap();
+    let pairs = random_pairs(&cfg, 17, 9);
+    let serial = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+    for threads in [1usize, 2, 3, 8] {
+        let parallel = ParallelQsimExecutor::new(threads).execute_bank(&cfg, &pairs).unwrap();
+        assert_eq!(serial, parallel, "threads={threads} diverged from serial");
+    }
+}
+
+#[test]
+fn cache_hit_rebinding_is_bitwise_identical_to_cold_compile() {
+    let cfg = QuClassiConfig::new(7, 2).unwrap();
+    let pairs = random_pairs(&cfg, 2, 31);
+    let (thetas, data) = &pairs[0];
+    let (alt_t, alt_d) = &pairs[1];
+
+    // cold: fresh template -> fresh plan -> bind
+    let cold = CompiledProgram::compile(builder::build_quclassi_template(&cfg))
+        .bind(thetas, data)
+        .fidelity();
+
+    // cached: the process-wide cache must serve one shared plan...
+    let first = builder::compile_quclassi(&cfg);
+    let hit = builder::compile_quclassi(&cfg);
+    assert!(Arc::ptr_eq(&first, &hit), "repeat config must hit the plan cache");
+
+    // ...and rebinding into it — including after binding *other*
+    // parameters — reproduces the cold result bit for bit.
+    let mut bound = hit.bind_skeleton();
+    hit.rebind(&mut bound, thetas, data);
+    assert_eq!(bound.fidelity(), cold);
+    hit.rebind(&mut bound, alt_t, alt_d);
+    hit.rebind(&mut bound, thetas, data);
+    assert_eq!(bound.fidelity(), cold, "stale state leaked through rebind");
+}
+
+/// A random gate drawn from the builder's vocabulary (plus CX), with
+/// qubit operands chosen so multi-qubit gates get distinct qubits.
+fn random_gate(rng: &mut Rng, nq: usize) -> Gate {
+    let distinct = |rng: &mut Rng, a: usize| loop {
+        let q = rng.index(nq);
+        if q != a {
+            break q;
+        }
+    };
+    let q = rng.index(nq);
+    let theta = rng.range_f64(-3.0, 3.0);
+    match rng.index(8) {
+        0 => Gate::H { q },
+        1 => Gate::Ry { q, theta },
+        2 => Gate::Rz { q, theta },
+        3 => Gate::Ryy { q0: q, q1: distinct(rng, q), theta },
+        4 => Gate::Rzz { q0: q, q1: distinct(rng, q), theta },
+        5 => Gate::Cry { control: q, target: distinct(rng, q), theta },
+        6 => Gate::Cx { control: q, target: distinct(rng, q) },
+        _ => {
+            let a = distinct(rng, q);
+            let b = loop {
+                let c = rng.index(nq);
+                if c != q && c != a {
+                    break c;
+                }
+            };
+            Gate::Cswap { control: q, a, b }
+        }
+    }
+}
+
+/// Serial oracle vs the compiled program at every block width.
+fn check_compiled_parity(nq: usize, gate_list: &[Gate]) -> Result<(), String> {
+    let mut oracle = State::zero(nq);
+    oracle.run(gate_list);
+    for max_block in [1usize, 2, 3] {
+        let program =
+            CompiledProgram::compile_with(CircuitTemplate::from_gates(nq, gate_list), max_block);
+        let mut st = State::zero(nq);
+        program.bind(&[], &[]).apply(&mut st);
+        for (i, (a, b)) in oracle.amps().iter().zip(st.amps().iter()).enumerate() {
+            let err = ((a.re - b.re).powi(2) + (a.im - b.im).powi(2)).sqrt();
+            if err > 1e-9 {
+                return Err(format!(
+                    "max_block={max_block} amp {i}: ({}, {}) vs ({}, {}), err {err:e}",
+                    a.re, a.im, b.re, b.im
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn property_random_circuits_compile_to_the_same_state() {
+    let gen = |rng: &mut Rng| {
+        let nq = 3 + rng.index(3); // 3..=5 qubits
+        let n_gates = 4 + rng.index(24);
+        let gate_list: Vec<Gate> = (0..n_gates).map(|_| random_gate(rng, nq)).collect();
+        (nq, gate_list)
+    };
+    testlib::forall(
+        "compiled program == serial gate walk",
+        0xD15C0,
+        testlib::DEFAULT_CASES,
+        gen,
+        |(nq, gate_list)| check_compiled_parity(*nq, gate_list),
+    );
+}
+
+#[test]
+fn cswap_barriers_and_3q_blocks_directed_case() {
+    // A chain that must collapse into an 8x8 block on each side of a
+    // CSWAP, which no fused op may absorb or cross.
+    let gate_list = vec![
+        Gate::Ry { q: 0, theta: 0.4 },
+        Gate::Ryy { q0: 0, q1: 1, theta: 0.7 },
+        Gate::Rzz { q0: 1, q1: 2, theta: -0.9 },
+        Gate::Cswap { control: 3, a: 0, b: 2 },
+        Gate::Cry { control: 2, target: 1, theta: 1.3 },
+        Gate::Ryy { q0: 0, q1: 1, theta: 0.2 },
+        Gate::H { q: 3 },
+    ];
+    check_compiled_parity(4, &gate_list).unwrap();
+    let program = CompiledProgram::compile(CircuitTemplate::from_gates(4, &gate_list));
+    let stats = program.stats();
+    assert!(stats.blocks3 >= 1, "expected an 8x8 block, got {stats:?}");
+    assert!(stats.ops_out < gate_list.len(), "no fusion happened: {stats:?}");
+}
