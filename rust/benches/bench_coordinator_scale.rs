@@ -14,8 +14,14 @@
 //! §14) — and is gated on steal-on throughput staying at or above
 //! steal-off.
 //!
+//! A third series measures the durability tax (DESIGN.md §16): the same
+//! 4 worker x 4 tenant load with the write-ahead bank journal off, at
+//! `sync=batch`, and at `sync=always`, hard-gated on batch-fsync
+//! journaling keeping at least 0.8x of the journal-off throughput.
+//!
 //! Results are serialized via `wire/json` to `BENCH_coordinator.json`
-//! (override with `DQ_BENCH_OUT`) with a `skewed` steal-on/off series,
+//! (override with `DQ_BENCH_OUT`) with `skewed` (steal-on/off) and
+//! `journal` (off/batch/always) series,
 //! seeding the repo's perf trajectory. When a committed baseline exists
 //! (`DQ_BENCH_BASELINE`, default `../bench/baseline.json` relative to
 //! the crate root), any cell whose throughput falls below **half** the
@@ -32,7 +38,9 @@ use std::time::{Duration, Instant};
 
 use dqulearn::benchlib::{BenchConfig, Table};
 use dqulearn::circuit::QuClassiConfig;
-use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel, WorkerProfile};
+use dqulearn::coordinator::{
+    JournalConfig, Manager, ManagerConfig, SyncPolicy, WorkerChannel, WorkerProfile,
+};
 use dqulearn::error::DqError;
 use dqulearn::model::exec::CircuitPair;
 use dqulearn::wire::{json, Value};
@@ -182,6 +190,116 @@ fn run_skewed_cell(steal: bool, circuits_per_tenant: usize, bank: usize) -> Skew
     }
 }
 
+/// One journal-overhead measurement (fixed 4 workers x 4 tenants).
+struct JournalCell {
+    sync: &'static str,
+    circuits: usize,
+    secs: f64,
+    throughput: f64,
+    journal_bytes: u64,
+}
+
+/// The `run_cell` shape at the 4x4 grid point with the write-ahead bank
+/// journal off / batch-fsync / fsync-per-append, measuring the
+/// durability tax on pure coordination throughput (DESIGN.md §16).
+fn run_journal_cell(
+    sync: Option<SyncPolicy>,
+    circuits_per_tenant: usize,
+    bank: usize,
+) -> JournalCell {
+    let label = match sync {
+        None => "off",
+        Some(SyncPolicy::Never) => "never",
+        Some(SyncPolicy::Batch) => "batch",
+        Some(SyncPolicy::Always) => "always",
+    };
+    let name = format!("dq_bench_journal_{}_{label}.log", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    let journal = sync.map(|s| JournalConfig::new(&path).sync(s));
+    let manager = Manager::new(ManagerConfig { max_batch: 8, journal, ..Default::default() });
+    for _ in 0..4 {
+        manager.register(WorkerProfile::new(5), Arc::new(MockChannel));
+    }
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs: Vec<CircuitPair> = (0..bank)
+        .map(|_| (vec![0.1; cfg.n_params()], vec![0.2; cfg.n_features()]))
+        .collect();
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let m = manager.clone();
+            let pairs = pairs.clone();
+            std::thread::spawn(move || {
+                let session = m.session();
+                let mut left = circuits_per_tenant;
+                while left > 0 {
+                    let n = left.min(pairs.len());
+                    let fids = session.execute(cfg, &pairs[..n]).expect("journal bank failed");
+                    assert_eq!(fids.len(), n);
+                    left -= n;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("tenant thread panicked");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    manager.shutdown();
+    let journal_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&path);
+
+    let circuits = 4 * circuits_per_tenant;
+    JournalCell {
+        sync: label,
+        circuits,
+        secs,
+        throughput: circuits as f64 / secs.max(1e-9),
+        journal_bytes,
+    }
+}
+
+fn journal_to_wire(cells: &[JournalCell]) -> Vec<Value> {
+    cells
+        .iter()
+        .map(|c| {
+            Value::obj()
+                .with("sync", c.sync)
+                .with("circuits", c.circuits)
+                .with("secs", c.secs)
+                .with("throughput", c.throughput)
+                .with("journal_bytes", c.journal_bytes)
+        })
+        .collect()
+}
+
+/// Baseline gate for the journal series (half-the-floor rule, matched
+/// by the sync label).
+fn journal_regressions(cells: &[JournalCell], baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(base) = baseline.get("journal").and_then(Value::as_arr) else {
+        return failures;
+    };
+    for b in base {
+        let (Some(sync), Some(thr)) = (
+            b.get("sync").and_then(Value::as_str),
+            b.get("throughput").and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        if let Some(c) = cells.iter().find(|c| c.sync == sync) {
+            if c.throughput < thr / 2.0 {
+                failures.push(format!(
+                    "journal sync={sync}: {:.0} c/s < half of baseline {thr:.0} c/s",
+                    c.throughput
+                ));
+            }
+        }
+    }
+    failures
+}
+
 fn skew_to_wire(cells: &[SkewCell]) -> Vec<Value> {
     cells
         .iter()
@@ -320,11 +438,34 @@ fn main() {
     println!("\nskewed load (1 slow + 3 fast workers):");
     print!("{}", skew_table.render());
 
-    // Serialize the trajectory point (grid + skewed steal series).
+    // Journal overhead: the 4x4 grid point with the write-ahead bank
+    // journal off, batch-fsynced, and fsynced per append.
+    let journal_cells = vec![
+        run_journal_cell(None, skew_budget, bank),
+        run_journal_cell(Some(SyncPolicy::Batch), skew_budget, bank),
+        run_journal_cell(Some(SyncPolicy::Always), skew_budget, bank),
+    ];
+    let mut journal_table =
+        Table::new(&["journal", "circuits", "secs", "circuits/s", "log bytes"]);
+    for c in &journal_cells {
+        journal_table.row(&[
+            c.sync.to_string(),
+            c.circuits.to_string(),
+            format!("{:.3}", c.secs),
+            format!("{:.0}", c.throughput),
+            c.journal_bytes.to_string(),
+        ]);
+    }
+    println!("\njournal overhead (4 workers x 4 tenants):");
+    print!("{}", journal_table.render());
+
+    // Serialize the trajectory point (grid + skewed steal + journal series).
     let out_default = "BENCH_coordinator.json".to_string();
     let out_path = std::env::var("DQ_BENCH_OUT").unwrap_or(out_default);
     let payload = json::to_string_pretty(
-        &cells_to_wire(mode, &cells).with("skewed", skew_to_wire(&skew_cells)),
+        &cells_to_wire(mode, &cells)
+            .with("skewed", skew_to_wire(&skew_cells))
+            .with("journal", journal_to_wire(&journal_cells)),
     );
     std::fs::write(&out_path, payload).expect("write BENCH_coordinator.json");
     println!("\nwrote {out_path}");
@@ -342,6 +483,18 @@ fn main() {
         std::process::exit(1);
     }
 
+    // Journal gate: batch-fsync journaling must keep at least 0.8x of
+    // the journal-off throughput — the durability-tax budget the
+    // default `SyncPolicy::Batch` is designed to fit (DESIGN.md §16).
+    let j_off = journal_cells[0].throughput;
+    let j_batch = journal_cells[1].throughput;
+    if j_batch < j_off * 0.8 {
+        eprintln!(
+            "journal regression: sync=batch {j_batch:.0} c/s < 0.8x journal-off {j_off:.0} c/s"
+        );
+        std::process::exit(1);
+    }
+
     // Regression gate against the committed baseline, if present.
     let baseline_default = "../bench/baseline.json".to_string();
     let baseline_path = std::env::var("DQ_BENCH_BASELINE").unwrap_or(baseline_default);
@@ -350,6 +503,7 @@ fn main() {
             Ok(baseline) => {
                 let mut failures = regressions(&cells, &baseline);
                 failures.extend(skew_regressions(&skew_cells, &baseline));
+                failures.extend(journal_regressions(&journal_cells, &baseline));
                 if failures.is_empty() {
                     println!("baseline check OK ({baseline_path})");
                 } else {

@@ -97,6 +97,7 @@ pub fn bank_status_to_wire(s: &BankStatus) -> Value {
         .with("completed", s.completed)
         .with("total", s.total)
         .with("partial_fids", fids)
+        .with("recovered", s.recovered)
 }
 
 /// Decode the wire form of [`BankStatus`].
@@ -111,6 +112,9 @@ pub fn bank_status_from_wire(v: &Value) -> Result<BankStatus, DqError> {
         completed: v.req_usize("completed")?,
         total: v.req_usize("total")?,
         partial_fids,
+        // Absent on pre-journal peers: a bank not marked recovered was
+        // submitted to the live manager incarnation (back-compat).
+        recovered: v.get("recovered").and_then(Value::as_bool).unwrap_or(false),
     })
 }
 
@@ -253,10 +257,24 @@ mod tests {
             completed: 2,
             total: 4,
             partial_fids: vec![Some(0.5), None, Some(0.25), None],
+            recovered: true,
         };
         let text = crate::wire::json::to_string(&bank_status_to_wire(&status));
         let parsed = crate::wire::json::parse(&text).unwrap();
         assert_eq!(bank_status_from_wire(&parsed).unwrap(), status);
+    }
+
+    #[test]
+    fn bank_status_recovered_defaults_false() {
+        // A pre-journal peer omits the field: decode must not fail and
+        // must report a non-recovered bank.
+        let v = Value::obj()
+            .with("pending", false)
+            .with("completed", 1u64)
+            .with("total", 1u64)
+            .with("partial_fids", vec![Value::Num(0.5)]);
+        let status = bank_status_from_wire(&v).unwrap();
+        assert!(!status.recovered);
     }
 
     #[test]

@@ -220,6 +220,12 @@ impl AdmissionQueue {
         (jobs, stamps)
     }
 
+    /// Every queued circuit, in no particular order (journal compaction
+    /// snapshots the pending set through this without draining it).
+    pub fn jobs(&self) -> impl Iterator<Item = &CircuitJob> {
+        self.tenants.values().flat_map(|tq| tq.jobs.iter().map(|qj| &qj.job))
+    }
+
     /// Remove every queued circuit of `bank` (cancel / unschedulable
     /// paths); returns how many were drained plus the owning tenant (a
     /// bank's circuits all belong to one client), so the manager can

@@ -15,6 +15,15 @@ struct BankState {
     fids: Vec<Option<f32>>,
     remaining: usize,
     failed: Option<DqError>,
+    /// Owning tenant (journal snapshots re-admit under this id).
+    client: u64,
+    /// Circuit width, carried for journal snapshots.
+    qubits: u32,
+    /// Variational layers, carried for journal snapshots.
+    layers: u32,
+    /// True when this bank was restored by `Manager::recover` rather
+    /// than submitted in this incarnation (surfaced via [`BankStatus`]).
+    recovered: bool,
 }
 
 /// The store's contents behind one lock: resident banks plus the ids of
@@ -45,6 +54,35 @@ pub struct BankStatus {
     /// Lets a training loop stream partial fidelities before the bank
     /// closes.
     pub partial_fids: Vec<Option<f32>>,
+    /// True when the bank was replayed from the journal by
+    /// `Manager::recover` — sessions can tell a replayed bank (whose
+    /// in-flight work may have been failed with `WorkerLost`) from one
+    /// submitted to the current manager incarnation.
+    pub recovered: bool,
+}
+
+/// One resident bank as captured for a journal snapshot
+/// (compaction); `None` entries in `fids` are resolved to
+/// pending/in-flight by the manager, which knows where each
+/// outstanding circuit currently lives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankSnap {
+    /// Bank id.
+    pub bank: u64,
+    /// Owning tenant.
+    pub client: u64,
+    /// Circuit width.
+    pub qubits: u32,
+    /// Variational layers.
+    pub layers: u32,
+    /// True when this bank was itself restored by a recovery.
+    pub recovered: bool,
+    /// True when the bank is cancelled (resident only as a tombstone).
+    pub cancelled: bool,
+    /// Bank-level failure, if any.
+    pub failed: Option<DqError>,
+    /// Per-circuit completion.
+    pub fids: Vec<Option<f32>>,
 }
 
 /// Thread-safe store of in-flight banks.
@@ -62,11 +100,102 @@ impl BankStore {
 
     /// Open a new bank expecting `size` results.
     pub fn open(&self, bank: u64, size: usize) {
+        self.open_for(bank, size, 0, 0, 0);
+    }
+
+    /// Open a new bank carrying its tenant and circuit shape, so a
+    /// journal snapshot taken later can re-describe it faithfully.
+    pub fn open_for(&self, bank: u64, size: usize, client: u64, qubits: u32, layers: u32) {
         let mut g = self.inner.lock().expect("bankstore poisoned");
-        let prev = g
-            .banks
-            .insert(bank, BankState { fids: vec![None; size], remaining: size, failed: None });
+        let prev = g.banks.insert(
+            bank,
+            BankState {
+                fids: vec![None; size],
+                remaining: size,
+                failed: None,
+                client,
+                qubits,
+                layers,
+                recovered: false,
+            },
+        );
         debug_assert!(prev.is_none(), "bank id reuse");
+    }
+
+    /// Re-create a bank from journal replay: already-completed circuits
+    /// keep their fidelities, a replayed failure is preserved, and the
+    /// bank is flagged `recovered`. Unlike [`BankStore::open_for`] this
+    /// may re-create a bank whose results are already all present (a
+    /// completed-but-unconsumed bank surviving a restart) — waiters are
+    /// notified so such a bank resolves immediately.
+    pub fn restore(
+        &self,
+        bank: u64,
+        fids: Vec<Option<f32>>,
+        client: u64,
+        qubits: u32,
+        layers: u32,
+        failed: Option<DqError>,
+    ) {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        let remaining = fids.iter().filter(|f| f.is_none()).count();
+        let prev = g.banks.insert(
+            bank,
+            BankState { fids, remaining, failed, client, qubits, layers, recovered: true },
+        );
+        debug_assert!(prev.is_none(), "bank id reuse during restore");
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Re-seed the cancelled-id tombstone set from journal replay. The
+    /// ids survive compaction exactly as they survive GC (DESIGN.md
+    /// §12): a late `try_poll`/`wait` after recovery still observes
+    /// `Cancelled`, never `Protocol`.
+    pub fn restore_cancelled<I: IntoIterator<Item = u64>>(&self, ids: I) {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        g.cancelled.extend(ids);
+    }
+
+    /// Ids of resident banks still awaiting results (not failed, not
+    /// cancelled) — the set `Manager::shutdown` sweeps into `Resolved`
+    /// journal records so a clean shutdown + recover re-admits nothing.
+    pub fn pending_banks(&self) -> Vec<u64> {
+        let g = self.inner.lock().expect("bankstore poisoned");
+        g.banks
+            .iter()
+            .filter(|(bank, b)| {
+                b.remaining > 0 && b.failed.is_none() && !g.cancelled.contains(*bank)
+            })
+            .map(|(bank, _)| *bank)
+            .collect()
+    }
+
+    /// Every resident bank, as journal-snapshot material.
+    pub fn snapshot(&self) -> Vec<BankSnap> {
+        let g = self.inner.lock().expect("bankstore poisoned");
+        g.banks
+            .iter()
+            .map(|(&bank, b)| BankSnap {
+                bank,
+                client: b.client,
+                qubits: b.qubits,
+                layers: b.layers,
+                recovered: b.recovered,
+                cancelled: g.cancelled.contains(&bank),
+                failed: b.failed.clone(),
+                fids: b.fids.clone(),
+            })
+            .collect()
+    }
+
+    /// Every bank id ever cancelled (sorted, for deterministic snapshot
+    /// encoding).
+    pub fn cancelled_ids(&self) -> Vec<u64> {
+        let g = self.inner.lock().expect("bankstore poisoned");
+        let mut ids: Vec<u64> = g.cancelled.iter().copied().collect();
+        ids.sort_unstable();
+        ids
     }
 
     /// Record one completed circuit. Results for unknown or cancelled
@@ -200,6 +329,7 @@ impl BankStore {
             completed: b.fids.len() - b.remaining,
             total: b.fids.len(),
             partial_fids: b.fids.clone(),
+            recovered: b.recovered,
         })
     }
 
@@ -341,6 +471,53 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         s.cancel(7);
         assert!(matches!(t.join().unwrap(), Err(DqError::Cancelled(_))));
+    }
+
+    #[test]
+    fn restore_marks_recovered_and_completes_immediately_when_full() {
+        let s = BankStore::new();
+        s.restore(21, vec![Some(0.1), Some(0.2)], 7, 5, 1, None);
+        let st = s.status(21).unwrap();
+        assert!(st.recovered && !st.pending);
+        assert_eq!(s.wait(21, Duration::from_millis(20)).unwrap(), vec![0.1, 0.2]);
+        // partially-complete restore stays pending and accepts results
+        s.restore(22, vec![Some(0.3), None], 7, 5, 1, None);
+        assert!(s.status(22).unwrap().pending);
+        s.complete(22, 1, 0.4);
+        assert_eq!(s.wait(22, Duration::from_millis(20)).unwrap(), vec![0.3, 0.4]);
+        // freshly-opened banks are not recovered
+        s.open(23, 1);
+        assert!(!s.status(23).unwrap().recovered);
+    }
+
+    #[test]
+    fn restored_tombstones_behave_like_live_cancellations() {
+        let s = BankStore::new();
+        s.restore_cancelled([31, 32]);
+        assert!(s.is_cancelled(31));
+        assert!(matches!(s.wait(31, Duration::from_millis(10)), Err(DqError::Cancelled(_))));
+        s.complete(32, 0, 0.5); // discarded, never resurrects
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn pending_banks_excludes_done_failed_and_cancelled() {
+        let s = BankStore::new();
+        s.open(41, 1); // stays pending
+        s.open(42, 1); // completes
+        s.complete(42, 0, 0.9);
+        s.open(43, 1); // fails
+        s.fail(43, DqError::Protocol("boom".into()));
+        s.open(44, 1); // cancelled
+        s.cancel(44);
+        assert_eq!(s.pending_banks(), vec![41]);
+        let snaps = s.snapshot();
+        assert_eq!(snaps.len(), 4);
+        let by_bank = |id: u64| snaps.iter().find(|b| b.bank == id).unwrap();
+        assert!(by_bank(44).cancelled && !by_bank(41).cancelled);
+        assert_eq!(by_bank(42).fids, vec![Some(0.9)]);
+        assert!(by_bank(43).failed.is_some());
+        assert_eq!(s.cancelled_ids(), vec![44]);
     }
 
     #[test]

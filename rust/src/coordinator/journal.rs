@@ -1,0 +1,973 @@
+//! Write-ahead bank journal (DESIGN.md §16): an append-only, checksummed
+//! log of every bank lifecycle transition, replayed by
+//! [`super::manager::Manager::recover`] so a restarted co-Manager loses
+//! no bank and re-executes no circuit.
+//!
+//! The file is a magic header followed by length-prefixed frames:
+//! `[u32 payload_len][u32 crc32][payload]`, all little-endian. A record
+//! is written *before* the in-memory transition it describes (and, for
+//! dispatch, before the batch reaches a worker channel), so the log is a
+//! true WAL: "no `Dispatched` record" implies "this circuit never
+//! executed", which is what makes post-crash re-admission safe.
+//!
+//! Durability model: every append reaches the file (and the OS page
+//! cache) immediately via `write_all`, so a *process* crash — the
+//! kill-and-replay suite in `tests/journal_recovery.rs` — loses at most
+//! the record being written when the process died (a torn tail, which
+//! replay truncates). The [`SyncPolicy`] knob only governs *machine*
+//! crashes: `Always` fsyncs per append, `Batch` every
+//! [`BATCH_SYNC_EVERY`] appends plus on flush/compaction/shutdown,
+//! `Never` leaves fsync to the OS.
+//!
+//! Compaction: [`Journal::compact`] writes a single [`Record::Snapshot`]
+//! to a temp file, fsyncs it, and atomically renames it over the
+//! journal, so the log stays bounded under churn (resolved and cancelled
+//! banks fall away; the cancelled-id *set* is carried in every snapshot
+//! — the tombstone invariant of DESIGN.md §12 survives compaction).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::DqError;
+use crate::model::exec::CircuitPair;
+
+/// File magic: identifies (and versions) the journal format.
+pub const MAGIC: &[u8; 8] = b"DQJRNL01";
+
+/// Upper bound on one record's payload; anything larger in a length
+/// prefix is treated as corruption (truncate point), not an allocation.
+const MAX_RECORD: u32 = 1 << 28;
+
+/// `SyncPolicy::Batch` fsyncs once per this many appends.
+pub const BATCH_SYNC_EVERY: u32 = 64;
+
+/// When the journal calls `fsync` (machine-crash durability; see the
+/// module docs — process-crash durability never depends on this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// Never fsync explicitly; the OS flushes on its own schedule.
+    Never,
+    /// Fsync every [`BATCH_SYNC_EVERY`] appends and on flush/compaction.
+    Batch,
+    /// Fsync after every append (slowest, strongest).
+    Always,
+}
+
+/// Journal knob for [`super::manager::ManagerConfig::journal`].
+#[derive(Debug, Clone)]
+pub struct JournalConfig {
+    /// Journal file path. Compaction writes `<path>.tmp` next to it.
+    pub path: PathBuf,
+    /// Fsync policy (default [`SyncPolicy::Batch`]).
+    pub sync: SyncPolicy,
+    /// Compaction trigger: the liveness thread snapshots+compacts once
+    /// the file exceeds this many bytes (default 4 MiB).
+    pub compact_bytes: u64,
+}
+
+impl JournalConfig {
+    /// Journal at `path` with the default policy (`Batch`, 4 MiB).
+    pub fn new(path: impl Into<PathBuf>) -> JournalConfig {
+        JournalConfig { path: path.into(), sync: SyncPolicy::Batch, compact_bytes: 4 << 20 }
+    }
+
+    /// Set the fsync policy.
+    pub fn sync(mut self, sync: SyncPolicy) -> JournalConfig {
+        self.sync = sync;
+        self
+    }
+
+    /// Set the compaction threshold in bytes.
+    pub fn compact_bytes(mut self, bytes: u64) -> JournalConfig {
+        self.compact_bytes = bytes;
+        self
+    }
+}
+
+/// A `(bank, circuit index)` pair naming one circuit in dispatch-shaped
+/// records.
+pub type Member = (u64, u32);
+
+/// One journal record. Field order in the binary encoding matches the
+/// declaration order here; see `tests/journal_recovery.rs` for the
+/// round-trip/corruption suite.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// A bank entered the system (written before the bank opens).
+    Submitted {
+        /// Bank id.
+        bank: u64,
+        /// Owning tenant.
+        client: u64,
+        /// Circuit width (odd, >= 3).
+        qubits: u32,
+        /// Variational layers (1..=3).
+        layers: u32,
+        /// FNV-1a digest of `pairs` — verified at decode, so payload
+        /// corruption that survives the CRC still truncates replay.
+        digest: u64,
+        /// The circuit payloads (theta/data per circuit, in bank order).
+        pairs: Vec<CircuitPair>,
+    },
+    /// A batch is about to reach a worker channel (written *before*
+    /// `execute`, so an executed circuit always has this record).
+    Dispatched {
+        /// Circuits in the batch.
+        members: Vec<Member>,
+    },
+    /// A batch's results arrived (written before the in-memory credit).
+    Completed {
+        /// `(bank, index, fidelity)` per circuit.
+        results: Vec<(u64, u32, f32)>,
+    },
+    /// In-flight circuits went back to the pending queue (failed
+    /// dispatch or worker eviction).
+    Requeued {
+        /// Circuits returned to the queue.
+        members: Vec<Member>,
+    },
+    /// A bank was cancelled (the id is a tombstone forever).
+    Cancelled {
+        /// Bank id.
+        bank: u64,
+    },
+    /// A whole bank failed (unschedulable, worker protocol violation).
+    Failed {
+        /// Bank id.
+        bank: u64,
+        /// The failure waiters observe.
+        error: DqError,
+    },
+    /// A bank left the store (consumed by a wait, or swept at clean
+    /// shutdown) — replay drops it.
+    Resolved {
+        /// Bank id.
+        bank: u64,
+    },
+    /// A full-state checkpoint; replay restarts from it (compaction).
+    Snapshot(Snapshot),
+}
+
+/// A checkpoint of the manager's durable state (see [`Record::Snapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Next bank id to allocate (ids never reuse across restarts).
+    pub next_bank: u64,
+    /// Next client id to allocate.
+    pub next_client: u64,
+    /// Every bank id ever cancelled (the tombstone set — survives
+    /// compaction by design; DESIGN.md §12/§16).
+    pub cancelled: Vec<u64>,
+    /// Live (resident, non-cancelled) banks.
+    pub banks: Vec<SnapBank>,
+}
+
+/// One live bank inside a [`Snapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapBank {
+    /// Bank id.
+    pub bank: u64,
+    /// Owning tenant.
+    pub client: u64,
+    /// Circuit width.
+    pub qubits: u32,
+    /// Variational layers.
+    pub layers: u32,
+    /// True when this bank was itself restored by a recovery.
+    pub recovered: bool,
+    /// The bank-level failure, if any.
+    pub failed: Option<DqError>,
+    /// Per-circuit state, in bank order.
+    pub circuits: Vec<CircuitState>,
+}
+
+/// Replay state of a single circuit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CircuitState {
+    /// Completed with this fidelity.
+    Done(f32),
+    /// Waiting in the admission queue; the payload re-admits it.
+    Pending(CircuitPair),
+    /// Handed to a worker channel; recovery must NOT re-run it (it may
+    /// have executed), so its bank fails with `WorkerLost`.
+    InFlight(CircuitPair),
+    /// Accounted to a failed bank — nothing left to do.
+    Gone,
+}
+
+/// Everything a replay reconstructed from the log.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveredState {
+    /// Live banks by id (insertion order = submission order).
+    pub banks: BTreeMap<u64, ReplayBank>,
+    /// The cancelled-id tombstone set.
+    pub cancelled: BTreeSet<u64>,
+    /// Highest bank id ever observed (next allocation starts above it).
+    pub max_bank: u64,
+    /// Highest client id ever observed.
+    pub max_client: u64,
+    /// Records successfully replayed.
+    pub records: u64,
+    /// Bytes truncated off the tail (torn/corrupt records).
+    pub truncated_bytes: u64,
+}
+
+/// One bank's replayed lifecycle state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayBank {
+    /// Owning tenant.
+    pub client: u64,
+    /// Circuit width.
+    pub qubits: u32,
+    /// Variational layers.
+    pub layers: u32,
+    /// True when the bank had already survived an earlier recovery.
+    pub recovered: bool,
+    /// Bank-level failure replayed from a `Failed` record.
+    pub failed: Option<DqError>,
+    /// Per-circuit state, in bank order.
+    pub circuits: Vec<CircuitState>,
+}
+
+impl RecoveredState {
+    /// Apply one record in log order. Transitions are monotone per
+    /// circuit — `Done` is terminal, `Dispatched` only moves `Pending`
+    /// forward, `Requeued` only moves `InFlight` back — so replaying a
+    /// log whose tail interleaves racing writers (completion vs.
+    /// eviction requeue) converges to the same state the live manager
+    /// reached.
+    pub fn apply(&mut self, rec: Record) {
+        match rec {
+            Record::Submitted { bank, client, qubits, layers, digest: _, pairs } => {
+                self.max_bank = self.max_bank.max(bank);
+                self.max_client = self.max_client.max(client);
+                if self.cancelled.contains(&bank) {
+                    return;
+                }
+                self.banks.insert(
+                    bank,
+                    ReplayBank {
+                        client,
+                        qubits,
+                        layers,
+                        recovered: false,
+                        failed: None,
+                        circuits: pairs.into_iter().map(CircuitState::Pending).collect(),
+                    },
+                );
+            }
+            Record::Dispatched { members } => {
+                for (bank, idx) in members {
+                    self.transition(bank, idx, |c| match c {
+                        CircuitState::Pending(p) => CircuitState::InFlight(p),
+                        other => other,
+                    });
+                }
+            }
+            Record::Completed { results } => {
+                for (bank, idx, fid) in results {
+                    self.transition(bank, idx, |c| match c {
+                        // first result wins, like the live store
+                        done @ CircuitState::Done(_) => done,
+                        _ => CircuitState::Done(fid),
+                    });
+                }
+            }
+            Record::Requeued { members } => {
+                for (bank, idx) in members {
+                    self.transition(bank, idx, |c| match c {
+                        CircuitState::InFlight(p) => CircuitState::Pending(p),
+                        other => other,
+                    });
+                }
+            }
+            Record::Cancelled { bank } => {
+                self.cancelled.insert(bank);
+                self.banks.remove(&bank);
+            }
+            Record::Failed { bank, error } => {
+                if let Some(b) = self.banks.get_mut(&bank) {
+                    if b.failed.is_none() {
+                        b.failed = Some(error);
+                    }
+                    for c in b.circuits.iter_mut() {
+                        if matches!(c, CircuitState::Pending(_) | CircuitState::InFlight(_)) {
+                            *c = CircuitState::Gone;
+                        }
+                    }
+                }
+            }
+            Record::Resolved { bank } => {
+                self.banks.remove(&bank);
+            }
+            Record::Snapshot(s) => {
+                self.banks.clear();
+                self.cancelled.clear();
+                self.max_bank = self.max_bank.max(s.next_bank.saturating_sub(1));
+                self.max_client = self.max_client.max(s.next_client.saturating_sub(1));
+                self.cancelled.extend(s.cancelled);
+                for sb in s.banks {
+                    self.max_bank = self.max_bank.max(sb.bank);
+                    self.max_client = self.max_client.max(sb.client);
+                    self.banks.insert(
+                        sb.bank,
+                        ReplayBank {
+                            client: sb.client,
+                            qubits: sb.qubits,
+                            layers: sb.layers,
+                            recovered: sb.recovered,
+                            failed: sb.failed,
+                            circuits: sb.circuits,
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    fn transition(&mut self, bank: u64, idx: u32, f: impl FnOnce(CircuitState) -> CircuitState) {
+        if let Some(b) = self.banks.get_mut(&bank) {
+            if let Some(c) = b.circuits.get_mut(idx as usize) {
+                let cur = std::mem::replace(c, CircuitState::Gone);
+                *c = f(cur);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// binary codec
+// ---------------------------------------------------------------------------
+
+const TAG_SUBMITTED: u8 = 1;
+const TAG_DISPATCHED: u8 = 2;
+const TAG_COMPLETED: u8 = 3;
+const TAG_REQUEUED: u8 = 4;
+const TAG_CANCELLED: u8 = 5;
+const TAG_FAILED: u8 = 6;
+const TAG_RESOLVED: u8 = 7;
+const TAG_SNAPSHOT: u8 = 8;
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u32(buf, v.len() as u32);
+    for x in v {
+        put_f32(buf, *x);
+    }
+}
+
+fn put_pair(buf: &mut Vec<u8>, p: &CircuitPair) {
+    put_f32s(buf, &p.0);
+    put_f32s(buf, &p.1);
+}
+
+fn put_error(buf: &mut Vec<u8>, e: &DqError) {
+    put_str(buf, e.kind());
+    put_str(buf, e.message());
+}
+
+fn put_members(buf: &mut Vec<u8>, members: &[Member]) {
+    put_u32(buf, members.len() as u32);
+    for (bank, idx) in members {
+        put_u64(buf, *bank);
+        put_u32(buf, *idx);
+    }
+}
+
+/// Bounded-read decode cursor; every accessor fails (instead of
+/// panicking) on short input, so a torn or corrupt payload becomes a
+/// truncate point, never a crash.
+struct Cur<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+type DecResult<T> = Result<T, String>;
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> DecResult<&'a [u8]> {
+        if self.b.len() - self.at < n {
+            return Err(format!("short payload: want {n} bytes at {}", self.at));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> DecResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> DecResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> DecResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> DecResult<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed count, sanity-bounded by the bytes that could
+    /// actually hold `elem_size`-byte elements.
+    fn count(&mut self, elem_size: usize) -> DecResult<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_size.max(1)) > self.b.len() - self.at {
+            return Err(format!("implausible count {n} at {}", self.at));
+        }
+        Ok(n)
+    }
+
+    fn str_(&mut self) -> DecResult<String> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("bad utf8: {e}"))
+    }
+
+    fn f32s(&mut self) -> DecResult<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn pair(&mut self) -> DecResult<CircuitPair> {
+        Ok((self.f32s()?, self.f32s()?))
+    }
+
+    fn error(&mut self) -> DecResult<DqError> {
+        let kind = self.str_()?;
+        let msg = self.str_()?;
+        Ok(match kind.as_str() {
+            "unschedulable" => DqError::Unschedulable(msg),
+            "worker_lost" => DqError::WorkerLost(msg),
+            "timeout" => DqError::Timeout(msg),
+            "cancelled" => DqError::Cancelled(msg),
+            "arity" => DqError::Arity(msg),
+            "io" => DqError::Io(msg),
+            _ => DqError::Protocol(msg),
+        })
+    }
+
+    fn members(&mut self) -> DecResult<Vec<Member>> {
+        let n = self.count(12)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push((self.u64()?, self.u32()?));
+        }
+        Ok(v)
+    }
+
+    fn done(&self) -> DecResult<()> {
+        if self.at != self.b.len() {
+            return Err(format!("{} trailing bytes", self.b.len() - self.at));
+        }
+        Ok(())
+    }
+}
+
+impl Record {
+    /// Binary payload (the frame's CRC covers exactly these bytes).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(32);
+        match self {
+            Record::Submitted { bank, client, qubits, layers, digest, pairs } => {
+                put_u8(&mut buf, TAG_SUBMITTED);
+                put_u64(&mut buf, *bank);
+                put_u64(&mut buf, *client);
+                put_u32(&mut buf, *qubits);
+                put_u32(&mut buf, *layers);
+                put_u64(&mut buf, *digest);
+                put_u32(&mut buf, pairs.len() as u32);
+                for p in pairs {
+                    put_pair(&mut buf, p);
+                }
+            }
+            Record::Dispatched { members } => {
+                put_u8(&mut buf, TAG_DISPATCHED);
+                put_members(&mut buf, members);
+            }
+            Record::Completed { results } => {
+                put_u8(&mut buf, TAG_COMPLETED);
+                put_u32(&mut buf, results.len() as u32);
+                for (bank, idx, fid) in results {
+                    put_u64(&mut buf, *bank);
+                    put_u32(&mut buf, *idx);
+                    put_f32(&mut buf, *fid);
+                }
+            }
+            Record::Requeued { members } => {
+                put_u8(&mut buf, TAG_REQUEUED);
+                put_members(&mut buf, members);
+            }
+            Record::Cancelled { bank } => {
+                put_u8(&mut buf, TAG_CANCELLED);
+                put_u64(&mut buf, *bank);
+            }
+            Record::Failed { bank, error } => {
+                put_u8(&mut buf, TAG_FAILED);
+                put_u64(&mut buf, *bank);
+                put_error(&mut buf, error);
+            }
+            Record::Resolved { bank } => {
+                put_u8(&mut buf, TAG_RESOLVED);
+                put_u64(&mut buf, *bank);
+            }
+            Record::Snapshot(s) => {
+                put_u8(&mut buf, TAG_SNAPSHOT);
+                put_u64(&mut buf, s.next_bank);
+                put_u64(&mut buf, s.next_client);
+                put_u32(&mut buf, s.cancelled.len() as u32);
+                for id in &s.cancelled {
+                    put_u64(&mut buf, *id);
+                }
+                put_u32(&mut buf, s.banks.len() as u32);
+                for b in &s.banks {
+                    put_u64(&mut buf, b.bank);
+                    put_u64(&mut buf, b.client);
+                    put_u32(&mut buf, b.qubits);
+                    put_u32(&mut buf, b.layers);
+                    put_u8(&mut buf, b.recovered as u8);
+                    match &b.failed {
+                        Some(e) => {
+                            put_u8(&mut buf, 1);
+                            put_error(&mut buf, e);
+                        }
+                        None => put_u8(&mut buf, 0),
+                    }
+                    put_u32(&mut buf, b.circuits.len() as u32);
+                    for c in &b.circuits {
+                        match c {
+                            CircuitState::Done(f) => {
+                                put_u8(&mut buf, 0);
+                                put_f32(&mut buf, *f);
+                            }
+                            CircuitState::Pending(p) => {
+                                put_u8(&mut buf, 1);
+                                put_pair(&mut buf, p);
+                            }
+                            CircuitState::InFlight(p) => {
+                                put_u8(&mut buf, 2);
+                                put_pair(&mut buf, p);
+                            }
+                            CircuitState::Gone => put_u8(&mut buf, 3),
+                        }
+                    }
+                }
+            }
+        }
+        buf
+    }
+
+    /// Decode one payload; any structural problem (short buffer, bad
+    /// tag, digest mismatch, trailing bytes) is an error — replay treats
+    /// it as a truncate point.
+    pub fn decode(payload: &[u8]) -> DecResult<Record> {
+        let mut c = Cur { b: payload, at: 0 };
+        let rec = match c.u8()? {
+            TAG_SUBMITTED => {
+                let bank = c.u64()?;
+                let client = c.u64()?;
+                let qubits = c.u32()?;
+                let layers = c.u32()?;
+                let digest = c.u64()?;
+                let n = c.count(8)?;
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    pairs.push(c.pair()?);
+                }
+                if payload_digest(&pairs) != digest {
+                    return Err(format!("bank {bank}: payload digest mismatch"));
+                }
+                Record::Submitted { bank, client, qubits, layers, digest, pairs }
+            }
+            TAG_DISPATCHED => Record::Dispatched { members: c.members()? },
+            TAG_COMPLETED => {
+                let n = c.count(16)?;
+                let mut results = Vec::with_capacity(n);
+                for _ in 0..n {
+                    results.push((c.u64()?, c.u32()?, c.f32()?));
+                }
+                Record::Completed { results }
+            }
+            TAG_REQUEUED => Record::Requeued { members: c.members()? },
+            TAG_CANCELLED => Record::Cancelled { bank: c.u64()? },
+            TAG_FAILED => Record::Failed { bank: c.u64()?, error: c.error()? },
+            TAG_RESOLVED => Record::Resolved { bank: c.u64()? },
+            TAG_SNAPSHOT => {
+                let next_bank = c.u64()?;
+                let next_client = c.u64()?;
+                let nc = c.count(8)?;
+                let mut cancelled = Vec::with_capacity(nc);
+                for _ in 0..nc {
+                    cancelled.push(c.u64()?);
+                }
+                let nb = c.count(26)?;
+                let mut banks = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    let bank = c.u64()?;
+                    let client = c.u64()?;
+                    let qubits = c.u32()?;
+                    let layers = c.u32()?;
+                    let recovered = c.u8()? != 0;
+                    let failed = match c.u8()? {
+                        0 => None,
+                        _ => Some(c.error()?),
+                    };
+                    let ncirc = c.count(1)?;
+                    let mut circuits = Vec::with_capacity(ncirc);
+                    for _ in 0..ncirc {
+                        circuits.push(match c.u8()? {
+                            0 => CircuitState::Done(c.f32()?),
+                            1 => CircuitState::Pending(c.pair()?),
+                            2 => CircuitState::InFlight(c.pair()?),
+                            3 => CircuitState::Gone,
+                            t => return Err(format!("bad circuit-state tag {t}")),
+                        });
+                    }
+                    banks.push(SnapBank { bank, client, qubits, layers, recovered, failed, circuits });
+                }
+                Record::Snapshot(Snapshot { next_bank, next_client, cancelled, banks })
+            }
+            t => return Err(format!("bad record tag {t}")),
+        };
+        c.done()?;
+        Ok(rec)
+    }
+}
+
+/// CRC-32 (IEEE 802.3), table-driven; covers each frame's payload.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// FNV-1a digest of a bank's circuit payloads (stored in `Submitted`
+/// records, re-verified at decode).
+pub fn payload_digest(pairs: &[CircuitPair]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |h: u64, bytes: &[u8]| -> u64 {
+        let mut h = h;
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+        h
+    };
+    for (thetas, data) in pairs {
+        for v in thetas {
+            h = eat(h, &v.to_bits().to_le_bytes());
+        }
+        h = eat(h, &[0xA5]);
+        for v in data {
+            h = eat(h, &v.to_bits().to_le_bytes());
+        }
+        h = eat(h, &[0x5A]);
+    }
+    h
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+// ---------------------------------------------------------------------------
+// the journal file
+// ---------------------------------------------------------------------------
+
+/// An open write-ahead journal (one per manager; behind the manager's
+/// innermost `journal` mutex — DESIGN.md §16 lock order).
+#[derive(Debug)]
+pub struct Journal {
+    cfg: JournalConfig,
+    file: File,
+    bytes: u64,
+    appends: u32,
+    dirty: bool,
+}
+
+impl Journal {
+    /// Create a *fresh* journal, truncating anything at the path. Used
+    /// by `Manager::new`/`with_clock`; to resume from existing records,
+    /// use [`Journal::recover`] (via `Manager::recover`).
+    pub fn create(cfg: &JournalConfig) -> Result<Journal, DqError> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&cfg.path)?;
+        file.write_all(MAGIC)?;
+        file.sync_data()?;
+        Ok(Journal { cfg: cfg.clone(), file, bytes: MAGIC.len() as u64, appends: 0, dirty: false })
+    }
+
+    /// Open (creating if absent) and replay the journal at `cfg.path`:
+    /// frames replay in order until the first short, checksum-failing,
+    /// or undecodable record; everything from that point on is a torn
+    /// tail and is truncated off, leaving the file ready for appends.
+    /// Replaying the same file repeatedly (recover → recover → recover)
+    /// yields the same state — recovery itself appends nothing.
+    pub fn recover(cfg: &JournalConfig) -> Result<(Journal, RecoveredState), DqError> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&cfg.path)?;
+        let mut data = Vec::new();
+        file.read_to_end(&mut data)?;
+        let mut state = RecoveredState::default();
+        let mut good: usize = 0;
+        if data.len() >= MAGIC.len() && &data[..MAGIC.len()] == MAGIC {
+            good = MAGIC.len();
+            loop {
+                let rest = &data[good..];
+                if rest.len() < 8 {
+                    break;
+                }
+                let len = u32::from_le_bytes(rest[0..4].try_into().unwrap());
+                let crc = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+                if len > MAX_RECORD {
+                    break;
+                }
+                let len = len as usize;
+                if rest.len() < 8 + len {
+                    break;
+                }
+                let payload = &rest[8..8 + len];
+                if crc32(payload) != crc {
+                    break;
+                }
+                let Ok(rec) = Record::decode(payload) else { break };
+                state.apply(rec);
+                state.records += 1;
+                good += 8 + len;
+            }
+        } else if !MAGIC.starts_with(&data[..data.len().min(MAGIC.len())]) {
+            // A full bad header is some other file — refuse to clobber
+            // it. (A short prefix of MAGIC is a torn first write of our
+            // own header: start over below.)
+            return Err(DqError::Io(format!(
+                "{}: not a DQuLearn journal (bad magic)",
+                cfg.path.display()
+            )));
+        }
+        state.truncated_bytes = (data.len() - good) as u64;
+        if good < MAGIC.len() {
+            file.set_len(0)?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(MAGIC)?;
+            good = MAGIC.len();
+        } else if state.truncated_bytes > 0 {
+            file.set_len(good as u64)?;
+            file.seek(SeekFrom::Start(good as u64))?;
+        } else {
+            file.seek(SeekFrom::End(0))?;
+        }
+        // Make the truncation itself durable before new appends land
+        // after it.
+        file.sync_data()?;
+        let journal =
+            Journal { cfg: cfg.clone(), file, bytes: good as u64, appends: 0, dirty: false };
+        Ok((journal, state))
+    }
+
+    /// Append one record. The bytes reach the file immediately
+    /// (process-crash durability); fsync follows [`SyncPolicy`].
+    pub fn append(&mut self, rec: &Record) -> Result<(), DqError> {
+        let payload = rec.encode();
+        debug_assert!((payload.len() as u64) < MAX_RECORD as u64);
+        let mut buf = Vec::with_capacity(payload.len() + 8);
+        put_u32(&mut buf, payload.len() as u32);
+        put_u32(&mut buf, crc32(&payload));
+        buf.extend_from_slice(&payload);
+        self.file.write_all(&buf)?;
+        self.bytes += buf.len() as u64;
+        self.dirty = true;
+        self.appends = self.appends.wrapping_add(1);
+        match self.cfg.sync {
+            SyncPolicy::Always => self.flush()?,
+            SyncPolicy::Batch if self.appends % BATCH_SYNC_EVERY == 0 => self.flush()?,
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Fsync pending appends (no-op when clean).
+    pub fn flush(&mut self) -> Result<(), DqError> {
+        if self.dirty {
+            self.file.sync_data()?;
+            self.dirty = false;
+        }
+        Ok(())
+    }
+
+    /// Current file length in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// True once the file exceeds the configured compaction threshold.
+    pub fn should_compact(&self) -> bool {
+        self.bytes > self.cfg.compact_bytes
+    }
+
+    /// Replace the log with a single snapshot record: written to
+    /// `<path>.tmp`, fsynced, then atomically renamed over the journal —
+    /// a crash at any point leaves either the old log or the new one,
+    /// never a mix. Appends continue on the renamed file.
+    pub fn compact(&mut self, snap: Snapshot) -> Result<(), DqError> {
+        let tmp = tmp_path(&self.cfg.path);
+        let mut f = OpenOptions::new().create(true).write(true).truncate(true).open(&tmp)?;
+        f.write_all(MAGIC)?;
+        let payload = Record::Snapshot(snap).encode();
+        let mut buf = Vec::with_capacity(payload.len() + 8);
+        put_u32(&mut buf, payload.len() as u32);
+        put_u32(&mut buf, crc32(&payload));
+        buf.extend_from_slice(&payload);
+        f.write_all(&buf)?;
+        f.sync_data()?;
+        std::fs::rename(&tmp, &self.cfg.path)?;
+        // Renaming keeps the inode: `f` now addresses the journal path,
+        // positioned at its end — keep appending through it.
+        self.file = f;
+        self.bytes = (MAGIC.len() + buf.len()) as u64;
+        self.appends = 0;
+        self.dirty = false;
+        // Best effort: make the rename itself durable.
+        if let Some(dir) = self.cfg.path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("dq_journal_unit_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn append_and_recover_round_trip() {
+        let path = tdir("roundtrip");
+        let cfg = JournalConfig::new(&path).sync(SyncPolicy::Never);
+        let mut j = Journal::create(&cfg).unwrap();
+        let pairs = vec![(vec![0.1, 0.2], vec![0.3, 0.4])];
+        j.append(&Record::Submitted {
+            bank: 1,
+            client: 7,
+            qubits: 5,
+            layers: 1,
+            digest: payload_digest(&pairs),
+            pairs,
+        })
+        .unwrap();
+        j.append(&Record::Dispatched { members: vec![(1, 0)] }).unwrap();
+        j.append(&Record::Completed { results: vec![(1, 0, 0.9)] }).unwrap();
+        j.flush().unwrap();
+        drop(j);
+        let (_j2, state) = Journal::recover(&cfg).unwrap();
+        assert_eq!(state.records, 3);
+        assert_eq!(state.truncated_bytes, 0);
+        let b = &state.banks[&1];
+        assert_eq!(b.client, 7);
+        assert_eq!(b.circuits, vec![CircuitState::Done(0.9)]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_preserves_state_and_shrinks_file() {
+        let path = tdir("compact");
+        let cfg = JournalConfig::new(&path).sync(SyncPolicy::Never);
+        let mut j = Journal::create(&cfg).unwrap();
+        for bank in 1..=50u64 {
+            let pairs = vec![(vec![bank as f32], vec![0.0])];
+            j.append(&Record::Submitted {
+                bank,
+                client: 1,
+                qubits: 5,
+                layers: 1,
+                digest: payload_digest(&pairs),
+                pairs,
+            })
+            .unwrap();
+            j.append(&Record::Resolved { bank }).unwrap();
+        }
+        let before = j.bytes();
+        j.compact(Snapshot {
+            next_bank: 51,
+            next_client: 2,
+            cancelled: vec![13],
+            banks: vec![],
+        })
+        .unwrap();
+        assert!(j.bytes() < before);
+        // the journal keeps accepting appends after the rename
+        j.append(&Record::Cancelled { bank: 51 }).unwrap();
+        drop(j);
+        let (_j2, state) = Journal::recover(&cfg).unwrap();
+        assert_eq!(state.max_bank, 50);
+        assert!(state.cancelled.contains(&13), "tombstone must survive compaction");
+        assert!(state.cancelled.contains(&51));
+        assert!(state.banks.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn foreign_file_is_refused() {
+        let path = tdir("foreign");
+        std::fs::write(&path, b"definitely not a journal").unwrap();
+        let cfg = JournalConfig::new(&path);
+        assert!(matches!(Journal::recover(&cfg), Err(DqError::Io(_))));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -24,7 +24,10 @@
 //! between `outboxes` and `in_flight` (the steal path holds `registry`
 //! → `outboxes` → one outbox queue → `stats`; DESIGN.md §14); the
 //! `events` counter is a leaf — taken momentarily with nothing else
-//! held.
+//! held. The `journal` mutex is the innermost leaf of all (after
+//! `stats`): appends on the hot path take it alone, and compaction
+//! takes it last under `queue` → `in_flight` so the snapshot is a
+//! consistent cut (DESIGN.md §16).
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -34,6 +37,10 @@ use std::time::{Duration, Instant};
 use super::admission::AdmissionQueue;
 use super::bankstore::{BankStatus, BankStore};
 use super::job::{CircuitJob, JobId};
+use super::journal::{
+    payload_digest, CircuitState, Journal, JournalConfig, Record, RecoveredState, SnapBank,
+    Snapshot,
+};
 use super::outbox::{Batch, Outbox, OutboxDirectory};
 use super::registry::{Registry, WorkerId, WorkerProfile, WorkerState};
 use super::scheduler;
@@ -92,6 +99,11 @@ pub struct ManagerConfig {
     /// with hysteresis at 1.5x this value (so the map is hard-bounded by
     /// `cap + cap/2` plus any active tenants). `0` disables pruning.
     pub max_tenant_stats: usize,
+    /// Durable write-ahead bank journal (DESIGN.md §16): `Some(cfg)`
+    /// logs every bank lifecycle transition to `cfg.path` so
+    /// [`Manager::recover`] can replay the manager's durable state after
+    /// a crash; `None` (the default) keeps all state in memory.
+    pub journal: Option<JournalConfig>,
 }
 
 impl Default for ManagerConfig {
@@ -106,8 +118,28 @@ impl Default for ManagerConfig {
             eviction_tick: Duration::from_millis(20),
             steal: true,
             max_tenant_stats: 1024,
+            journal: None,
         }
     }
+}
+
+/// What [`Manager::recover`] reconstructed from the journal.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecoveryReport {
+    /// Journal records replayed.
+    pub records: u64,
+    /// Bytes truncated off the journal tail (torn/corrupt records).
+    pub truncated_bytes: u64,
+    /// Banks restored into the store (including failed ones).
+    pub banks_restored: u64,
+    /// Restored banks that came back failed (in-flight work lost to the
+    /// crash fails with [`DqError::WorkerLost`]; clients resubmit).
+    pub banks_failed: u64,
+    /// Circuits re-admitted to the pending queue (never dispatched
+    /// before the crash, so re-running them cannot double-execute).
+    pub circuits_readmitted: u64,
+    /// Cancelled-bank tombstone ids restored.
+    pub cancelled_ids: u64,
 }
 
 /// Per-tenant counters (multi-tenant observability: who is submitting,
@@ -259,6 +291,8 @@ struct Inner {
     /// job), for eviction-time re-queueing of whole batches.
     batches: Mutex<HashMap<JobId, Vec<JobId>>>,
     stats: Mutex<ManagerStats>,
+    /// Write-ahead bank journal (innermost lock; `None` = not durable).
+    journal: Option<Mutex<Journal>>,
     next_bank: AtomicU64,
     next_job: AtomicU64,
     next_client: AtomicU64,
@@ -301,7 +335,53 @@ impl Manager {
     }
 
     /// Start a co-Manager on an explicit clock (virtual time in tests).
+    /// With [`ManagerConfig::journal`] set this starts a *fresh* journal
+    /// (truncating any previous one); use [`Manager::recover`] to resume
+    /// from existing records instead.
     pub fn with_clock(cfg: ManagerConfig, clock: Arc<dyn Clock>) -> Manager {
+        let journal = cfg
+            .journal
+            .as_ref()
+            .map(|jc| Mutex::new(Journal::create(jc).expect("create bank journal")));
+        Manager::build(cfg, clock, journal)
+    }
+
+    /// Restart a co-Manager from its journal: replays the log at
+    /// `cfg.journal` (required) into a consistent [`BankStore`] and
+    /// admission queue — circuits never dispatched are re-admitted and
+    /// will execute on the new incarnation's workers; banks with work
+    /// in flight at the crash fail with [`DqError::WorkerLost`] (a
+    /// dispatched circuit may have executed, so it is never re-run);
+    /// completed-but-unconsumed banks keep their results for late
+    /// waiters; cancelled ids stay tombstoned. Restored banks report
+    /// `recovered: true` in their [`BankStatus`]. Torn tail records are
+    /// truncated; a path holding something other than a journal is
+    /// refused ([`DqError::Io`]).
+    ///
+    /// Worker registrations are deliberately NOT durable: workers
+    /// re-register/re-heartbeat against the new incarnation (DESIGN.md
+    /// §16), which is also what re-dispatches the re-admitted circuits.
+    pub fn recover(cfg: ManagerConfig) -> Result<(Manager, RecoveryReport), DqError> {
+        Self::recover_with_clock(cfg, Arc::new(SystemClock::new()))
+    }
+
+    /// [`Manager::recover`] on an explicit clock (virtual time in tests).
+    pub fn recover_with_clock(
+        cfg: ManagerConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<(Manager, RecoveryReport), DqError> {
+        let Some(jc) = cfg.journal.clone() else {
+            return Err(DqError::Protocol(
+                "Manager::recover requires ManagerConfig::journal".to_string(),
+            ));
+        };
+        let (journal, state) = Journal::recover(&jc)?;
+        let m = Manager::build(cfg, clock, Some(Mutex::new(journal)));
+        let report = m.restore(state);
+        Ok((m, report))
+    }
+
+    fn build(cfg: ManagerConfig, clock: Arc<dyn Clock>, journal: Option<Mutex<Journal>>) -> Manager {
         let m = Manager {
             inner: Arc::new(Inner {
                 cfg,
@@ -316,6 +396,7 @@ impl Manager {
                 in_flight: Mutex::new(HashMap::new()),
                 batches: Mutex::new(HashMap::new()),
                 stats: Mutex::new(ManagerStats::default()),
+                journal,
                 next_bank: AtomicU64::new(1),
                 next_job: AtomicU64::new(1),
                 next_client: AtomicU64::new(1),
@@ -359,6 +440,224 @@ impl Manager {
     /// True once [`Manager::shutdown`] ran (outbox threads poll this).
     pub(crate) fn is_stopped(&self) -> bool {
         self.inner.stop.load(Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------------
+    // durable journal (DESIGN.md §16)
+    // ------------------------------------------------------------------
+
+    fn journaling(&self) -> bool {
+        self.inner.journal.is_some()
+    }
+
+    /// Best-effort journal append for paths that must not fail the
+    /// operation they ride on (dispatch, completion, requeue): an I/O
+    /// error degrades durability, not availability, and is logged.
+    fn journal_append(&self, rec: Record) {
+        if let Some(j) = &self.inner.journal {
+            if let Err(e) = j.lock().unwrap().append(&rec) {
+                crate::log_warn!("manager", "journal append failed: {e}");
+            }
+        }
+    }
+
+    /// Journal append for the submit path, where an append failure must
+    /// reject the submission — accepting a bank the journal never saw
+    /// would silently drop it at the next recovery.
+    fn try_journal_append(&self, rec: Record) -> Result<(), DqError> {
+        if let Some(j) = &self.inner.journal {
+            j.lock().unwrap().append(&rec)?;
+        }
+        Ok(())
+    }
+
+    /// A consuming wait removes the bank from the store on every
+    /// non-timeout outcome (results delivered, failure delivered, or
+    /// cancellation observed) — mirror that removal durably. Unknown
+    /// banks no-op at replay, and a `Resolved` on a cancelled bank is
+    /// harmless (the tombstone id set is what cancellation relies on).
+    fn journal_wait_outcome(&self, bank: u64, res: &Result<Vec<f32>, DqError>) {
+        if self.journaling() && !matches!(res, Err(DqError::Timeout(_))) {
+            self.journal_append(Record::Resolved { bank });
+        }
+    }
+
+    /// Replay a recovered journal state into the live structures (see
+    /// [`Manager::recover`] for the disposition rules).
+    fn restore(&self, state: RecoveredState) -> RecoveryReport {
+        let mut report = RecoveryReport {
+            records: state.records,
+            truncated_bytes: state.truncated_bytes,
+            cancelled_ids: state.cancelled.len() as u64,
+            ..RecoveryReport::default()
+        };
+        // Ids never reuse across incarnations: allocation resumes above
+        // everything the journal ever saw.
+        self.inner.next_bank.store(state.max_bank + 1, Ordering::Relaxed);
+        self.inner.next_client.store(state.max_client + 1, Ordering::Relaxed);
+        self.inner.banks.restore_cancelled(state.cancelled.iter().copied());
+        for (bank, rb) in state.banks {
+            if state.cancelled.contains(&bank) {
+                continue;
+            }
+            let mut fids: Vec<Option<f32>> = Vec::with_capacity(rb.circuits.len());
+            let mut pending: Vec<(usize, CircuitPair)> = Vec::new();
+            let mut lost_in_flight = false;
+            let mut gone = false;
+            for (index, c) in rb.circuits.into_iter().enumerate() {
+                match c {
+                    CircuitState::Done(f) => fids.push(Some(f)),
+                    CircuitState::Pending(p) => {
+                        fids.push(None);
+                        pending.push((index, p));
+                    }
+                    CircuitState::InFlight(_) => {
+                        fids.push(None);
+                        lost_in_flight = true;
+                    }
+                    CircuitState::Gone => {
+                        fids.push(None);
+                        gone = true;
+                    }
+                }
+            }
+            // Disposition: a replayed failure wins; otherwise any
+            // circuit that reached a worker channel poisons the bank
+            // (it may have executed — re-running it would double-count
+            // a training contribution), and its pending siblings are
+            // not re-admitted either since the waiter already fails.
+            let failed = match rb.failed {
+                Some(e) => Some(e),
+                None if lost_in_flight => Some(DqError::WorkerLost(format!(
+                    "bank {bank}: in-flight work lost in a manager crash; resubmit"
+                ))),
+                None if gone => {
+                    Some(DqError::Protocol(format!("bank {bank}: journal gap")))
+                }
+                None => None,
+            };
+            let readmit = failed.is_none() && !pending.is_empty();
+            if failed.is_some() {
+                report.banks_failed += 1;
+            }
+            report.banks_restored += 1;
+            self.inner.banks.restore(bank, fids, rb.client, rb.qubits, rb.layers, failed);
+            if !readmit {
+                continue;
+            }
+            let config = match QuClassiConfig::new(rb.qubits as usize, rb.layers as usize) {
+                Ok(c) => c,
+                Err(e) => {
+                    let err = DqError::Protocol(format!("bank {bank}: bad replayed config: {e}"));
+                    self.journal_append(Record::Failed { bank, error: err.clone() });
+                    self.inner.banks.fail(bank, err);
+                    report.banks_failed += 1;
+                    continue;
+                }
+            };
+            let jobs: Vec<CircuitJob> = pending
+                .into_iter()
+                .map(|(index, (thetas, data))| CircuitJob {
+                    id: self.inner.next_job.fetch_add(1, Ordering::Relaxed),
+                    client: rb.client,
+                    bank,
+                    index,
+                    config,
+                    thetas,
+                    data,
+                })
+                .collect();
+            report.circuits_readmitted += jobs.len() as u64;
+            self.inner.queue.lock().unwrap().push_bank(rb.client, jobs);
+        }
+        // Re-admitted work is schedulable as soon as workers register.
+        self.signal_event();
+        report
+    }
+
+    /// Rewrite the journal as a single snapshot record (atomic tmp-file
+    /// + rename), bounding its size under churn. Returns false (leaving
+    /// the old log intact) when no journal is configured or the rewrite
+    /// failed. Runs under `queue` → `in_flight` so the snapshot is a
+    /// consistent cut: nothing moves between queue, flight, and store
+    /// while it is taken.
+    pub fn compact_journal(&self) -> bool {
+        let Some(journal) = &self.inner.journal else {
+            return false;
+        };
+        let q = self.inner.queue.lock().unwrap();
+        let in_flight = self.inner.in_flight.lock().unwrap();
+        let mut outstanding: HashMap<(u64, u32), (bool, CircuitPair)> = HashMap::new();
+        for job in q.jobs() {
+            outstanding.insert(
+                (job.bank, job.index as u32),
+                (false, (job.thetas.clone(), job.data.clone())),
+            );
+        }
+        for job in in_flight.values() {
+            outstanding.insert(
+                (job.bank, job.index as u32),
+                (true, (job.thetas.clone(), job.data.clone())),
+            );
+        }
+        let mut banks = Vec::new();
+        for snap in self.inner.banks.snapshot() {
+            if snap.cancelled {
+                // Resident tombstones carry no replayable work; the id
+                // itself is preserved in the snapshot's cancelled set.
+                continue;
+            }
+            let circuits = snap
+                .fids
+                .iter()
+                .enumerate()
+                .map(|(index, f)| match f {
+                    Some(fid) => CircuitState::Done(*fid),
+                    None => match outstanding.get(&(snap.bank, index as u32)) {
+                        Some((true, p)) => CircuitState::InFlight(p.clone()),
+                        Some((false, p)) => CircuitState::Pending(p.clone()),
+                        None => CircuitState::Gone,
+                    },
+                })
+                .collect();
+            banks.push(SnapBank {
+                bank: snap.bank,
+                client: snap.client,
+                qubits: snap.qubits,
+                layers: snap.layers,
+                recovered: snap.recovered,
+                failed: snap.failed,
+                circuits,
+            });
+        }
+        let snap = Snapshot {
+            next_bank: self.inner.next_bank.load(Ordering::Relaxed),
+            next_client: self.inner.next_client.load(Ordering::Relaxed),
+            cancelled: self.inner.banks.cancelled_ids(),
+            banks,
+        };
+        let res = journal.lock().unwrap().compact(snap);
+        drop(in_flight);
+        drop(q);
+        match res {
+            Ok(()) => true,
+            Err(e) => {
+                crate::log_warn!("manager", "journal compaction failed: {e}");
+                false
+            }
+        }
+    }
+
+    /// Compact once the journal passed its size threshold (called from
+    /// the liveness tick).
+    fn maybe_compact_journal(&self) {
+        let due = match &self.inner.journal {
+            Some(j) => j.lock().unwrap().should_compact(),
+            None => return,
+        };
+        if due {
+            self.compact_journal();
+        }
     }
 
     // ------------------------------------------------------------------
@@ -457,7 +756,26 @@ impl Manager {
             }
         }
         let bank = self.inner.next_bank.fetch_add(1, Ordering::Relaxed);
-        self.inner.banks.open(bank, pairs.len());
+        // WAL: the bank is durable before it is visible anywhere —
+        // rejecting the submit on an append failure beats accepting a
+        // bank the next recovery would silently drop.
+        if self.journaling() {
+            self.try_journal_append(Record::Submitted {
+                bank,
+                client,
+                qubits: config.qubits as u32,
+                layers: config.layers as u32,
+                digest: payload_digest(pairs),
+                pairs: pairs.to_vec(),
+            })?;
+        }
+        self.inner.banks.open_for(
+            bank,
+            pairs.len(),
+            client,
+            config.qubits as u32,
+            config.layers as u32,
+        );
 
         // Backpressure: wait for queue space.
         let mut q = self.inner.queue.lock().unwrap();
@@ -513,7 +831,9 @@ impl Manager {
     /// queued circuits drain and its state does not leak in a
     /// long-running multi-tenant manager.
     pub fn wait_bank(&self, bank: u64) -> Result<Vec<f32>, DqError> {
-        match self.inner.banks.wait(bank, self.inner.cfg.wait_timeout) {
+        let res = self.inner.banks.wait(bank, self.inner.cfg.wait_timeout);
+        self.journal_wait_outcome(bank, &res);
+        match res {
             Err(e @ DqError::Timeout(_)) => {
                 self.cancel_bank(bank);
                 Err(e)
@@ -527,7 +847,9 @@ impl Manager {
     /// caller holds a handle and can retry, poll, or escalate to
     /// `cancel` — abandoning it without cancelling leaks the bank.
     pub fn wait_bank_timeout(&self, bank: u64, timeout: Duration) -> Result<Vec<f32>, DqError> {
-        self.inner.banks.wait(bank, timeout)
+        let res = self.inner.banks.wait(bank, timeout);
+        self.journal_wait_outcome(bank, &res);
+        res
     }
 
     /// Non-blocking progress snapshot of a bank (None once waited out).
@@ -553,6 +875,17 @@ impl Manager {
     /// does not leak. [`super::session::BankHandle`] keeps reporting
     /// `Cancelled` after the GC.
     pub fn cancel_bank(&self, bank: u64) -> usize {
+        // WAL-first: the tombstone is durable before any in-memory
+        // effect, so a crash mid-cancel can only *under*-cancel (the
+        // client retries), never resurrect a cancelled bank. Gated on
+        // residency so garbage ids from remote clients don't grow the
+        // log (mirroring BankStore::cancel's own no-op rule).
+        if self.journaling()
+            && !self.inner.banks.is_cancelled(bank)
+            && self.inner.banks.status(bank).is_some()
+        {
+            self.journal_append(Record::Cancelled { bank });
+        }
         let mut q = self.inner.queue.lock().unwrap();
         let (drained, owner) = q.drain_bank(bank);
         drop(q);
@@ -645,6 +978,21 @@ impl Manager {
         for ob in outboxes {
             ob.stop();
         }
+        // Clean shutdown resolves every still-pending bank durably and
+        // fsyncs before the in-memory failure sweep below: a recover()
+        // after this re-admits nothing (idempotent restart). Banks that
+        // completed but were never waited out are deliberately NOT
+        // resolved — their results survive into the next incarnation.
+        if self.journaling() {
+            for bank in self.inner.banks.pending_banks() {
+                self.journal_append(Record::Resolved { bank });
+            }
+            if let Some(j) = &self.inner.journal {
+                if let Err(e) = j.lock().unwrap().flush() {
+                    crate::log_warn!("manager", "journal flush at shutdown failed: {e}");
+                }
+            }
+        }
         self.inner.banks.fail_pending(DqError::Cancelled("manager stopped".to_string()));
     }
 
@@ -695,6 +1043,7 @@ impl Manager {
                     return;
                 }
                 m.evict_and_requeue();
+                m.maybe_compact_journal();
                 m.inner.cfg.eviction_tick
             };
             let mut slept = Duration::ZERO;
@@ -760,6 +1109,14 @@ impl Manager {
         }
         drop(stats);
         drop(batches);
+        if !orphans.is_empty() {
+            // WAL before the re-queue: replay moves these circuits back
+            // to pending, so a crash right after eviction re-admits them
+            // instead of failing their banks as in-flight-lost.
+            self.journal_append(Record::Requeued {
+                members: orphans.iter().map(|j| (j.bank, j.index as u32)).collect(),
+            });
+        }
         q.requeue_front(orphans);
         touched_banks.sort_unstable();
         touched_banks.dedup();
@@ -832,12 +1189,13 @@ impl Manager {
                     stats.per_tenant.entry(client).or_default().lost += drained as u64;
                     stats.prune_tenants(self.inner.cfg.max_tenant_stats);
                 }
-                self.inner.banks.fail(
-                    bank,
-                    DqError::Unschedulable(format!(
-                        "circuit needs {demand} qubits; no worker that large"
-                    )),
-                );
+                let err = DqError::Unschedulable(format!(
+                    "circuit needs {demand} qubits; no worker that large"
+                ));
+                // WAL the failure so recovery does not re-admit a bank
+                // that already failed as unschedulable.
+                self.journal_append(Record::Failed { bank, error: err.clone() });
+                self.inner.banks.fail(bank, err);
                 self.inner.space_cv.notify_all();
                 continue;
             }
@@ -968,6 +1326,13 @@ impl Manager {
     /// re-queue.
     pub(crate) fn run_batch(&self, worker: WorkerId, channel: &dyn WorkerChannel, batch: Batch) {
         let Batch { config, jobs, enqueued } = batch;
+        // WAL: the Dispatched record precedes the channel call, so "no
+        // Dispatched record in the journal" implies "this circuit never
+        // executed" — the invariant that makes post-crash re-admission
+        // safe (no circuit can ever run twice across a restart).
+        self.journal_append(Record::Dispatched {
+            members: jobs.iter().map(|j| (j.bank, j.index as u32)).collect(),
+        });
         // Dispatch + queue-wait accounting happens here — the moment the
         // batch reaches a worker channel — so the measured wait covers
         // outbox residency and survives a steal (the admission stamps
@@ -1007,6 +1372,17 @@ impl Manager {
                 self.abandon_batch(worker, &jobs, err);
             }
             Ok(fids) => {
+                // WAL before the in-memory credit: a crash after this
+                // append replays the results; a crash before it leaves
+                // the circuits in-flight (bank fails WorkerLost) — in
+                // neither case is a result lost after a client saw it.
+                self.journal_append(Record::Completed {
+                    results: jobs
+                        .iter()
+                        .zip(fids.iter())
+                        .map(|(j, f)| (j.bank, j.index as u32, *f))
+                        .collect(),
+                });
                 let key = jobs[0].id;
                 let mut reg = self.inner.registry.lock().unwrap();
                 let mut in_flight = self.inner.in_flight.lock().unwrap();
@@ -1085,6 +1461,7 @@ impl Manager {
         drop(in_flight);
         drop(reg);
         for bank in banks {
+            self.journal_append(Record::Failed { bank, error: err.clone() });
             // no-op for cancelled banks (fail never overrides a cancel)
             self.inner.banks.fail(bank, err.clone());
         }
@@ -1122,6 +1499,14 @@ impl Manager {
             keep.push(job);
         }
         drop(stats);
+        if !keep.is_empty() {
+            // WAL before the re-queue (same reasoning as the evictor's
+            // orphan pass): these circuits never executed, so replay may
+            // safely re-admit them.
+            self.journal_append(Record::Requeued {
+                members: keep.iter().map(|j| (j.bank, j.index as u32)).collect(),
+            });
+        }
         q.requeue_front(keep);
         self.gc_cancelled_banks(&banks, &in_flight);
         drop(in_flight);

@@ -30,10 +30,20 @@
 //! under the registry lock, the owning tenant keeps its wait/dispatch
 //! accounting, and `ManagerConfig::steal = false` pins batches to
 //! their assigned worker when placement policy must win.
+//!
+//! Durability (DESIGN.md §16): with `ManagerConfig::journal` set, every
+//! bank lifecycle transition is written ahead to an append-only
+//! checksummed log ([`journal::Journal`]) and a restarted
+//! [`manager::Manager::recover`] replays it — never-dispatched circuits
+//! are re-admitted, in-flight work fails with
+//! [`crate::DqError::WorkerLost`], cancelled ids stay tombstoned, and no
+//! circuit ever executes twice across the restart
+//! (`tests/journal_recovery.rs`).
 
 pub mod admission;
 pub mod bankstore;
 pub mod job;
+pub mod journal;
 pub mod manager;
 mod outbox;
 pub mod registry;
@@ -43,7 +53,10 @@ pub mod session;
 pub use admission::AdmissionQueue;
 pub use bankstore::BankStatus;
 pub use job::{CircuitJob, JobId};
-pub use manager::{Manager, ManagerConfig, ManagerStats, TenantStats, WorkerChannel};
+pub use journal::{Journal, JournalConfig, SyncPolicy};
+pub use manager::{
+    Manager, ManagerConfig, ManagerStats, RecoveryReport, TenantStats, WorkerChannel,
+};
 pub use registry::{Registry, WorkerId, WorkerProfile, WorkerState};
 pub use scheduler::{select_worker, SchedulerKind};
 pub use session::{BankHandle, ClientSession, SessionOps};

@@ -244,6 +244,7 @@ mod tests {
                 completed: n,
                 total: n,
                 partial_fids: vec![Some(0.5); n],
+                recovered: false,
             })
         }
 

@@ -1,0 +1,700 @@
+//! Kill-and-replay crash-recovery suite for the durable bank journal
+//! (DESIGN.md §16).
+//!
+//! The chaos harness simulates a manager crash without killing the
+//! process: it freezes every worker channel (no execution — and no
+//! marker logging — can happen after the freeze), snapshots the live
+//! journal file mid-flight with `fs::copy` (so the copy may end in a
+//! torn record, exactly like a real crash image), and recovers a second
+//! manager from the copy. The audit then holds the journal's contract
+//! across the "restart":
+//!
+//!  * no bank is lost — every unconsumed, uncancelled bank is resident
+//!    after recovery, flagged `recovered`, and resolves to either its
+//!    exact results or [`DqError::WorkerLost`];
+//!  * no circuit executes twice — each circuit carries a unique marker
+//!    (`data[0]`, echoed back as its fidelity) and the global execution
+//!    log across both incarnations never sees a marker twice;
+//!  * cancelled ids stay tombstoned, consumed banks stay gone.
+//!
+//! Directed tests pin the format itself: round-trip of every record
+//! variant, checksum rejection, torn-tail truncation at *every* byte
+//! offset, and recover-idempotency across three restarts.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::coordinator::journal::{payload_digest, CircuitState, Record, SnapBank, Snapshot};
+use dqulearn::coordinator::{
+    Journal, JournalConfig, Manager, ManagerConfig, SessionOps, SyncPolicy, WorkerChannel,
+    WorkerProfile,
+};
+use dqulearn::error::DqError;
+use dqulearn::model::exec::CircuitPair;
+use dqulearn::testlib::{forall, usize_in};
+use dqulearn::util::Rng;
+
+/// Fresh temp path namespaced by pid and test name (tests in one binary
+/// run concurrently; names must not collide).
+fn tpath(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("dq_jrec_{}_{name}.log", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Execution-audit channel: logs each circuit's marker (`data[0]`) and
+/// echoes it back as the fidelity, so a bank's result vector identifies
+/// exactly which executions produced it. Once `frozen` flips, every
+/// execute fails *before* logging — the freeze models the instant of a
+/// crash: work whose dispatch the journal copy never saw cannot have
+/// logged a marker (the `Dispatched` record is appended before the
+/// channel call, and the copy starts only after the freeze).
+struct AuditChannel {
+    frozen: Arc<AtomicBool>,
+    log: Arc<Mutex<Vec<u32>>>,
+}
+
+impl WorkerChannel for AuditChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        if self.frozen.load(Ordering::SeqCst) {
+            return Err(DqError::Io("worker frozen by crash harness".to_string()));
+        }
+        let mut log = self.log.lock().unwrap();
+        let mut fids = Vec::with_capacity(pairs.len());
+        for (_, data) in pairs {
+            log.push(data[0] as u32);
+            fids.push(data[0]);
+        }
+        Ok(fids)
+    }
+}
+
+/// `n` circuit pairs whose markers continue from `*next_marker`.
+fn marked_pairs(config: &QuClassiConfig, n: usize, next_marker: &mut u32) -> Vec<CircuitPair> {
+    (0..n)
+        .map(|_| {
+            let marker = *next_marker;
+            *next_marker += 1;
+            let mut data = vec![0.25f32; config.n_features()];
+            data[0] = marker as f32;
+            (vec![0.1; config.n_params()], data)
+        })
+        .collect()
+}
+
+/// What the harness knows about one pre-crash bank.
+struct BankExp {
+    bank: u64,
+    start: u32,
+    size: usize,
+    cancelled: bool,
+    /// A pre-crash wait resolved (consumed) the bank — it must be gone
+    /// after recovery.
+    consumed: bool,
+}
+
+/// One randomized kill-and-replay case; every seed is a distinct crash
+/// point (sync policy, compaction pressure, bank/cancel/consume
+/// schedule, and freeze/copy timing all derive from it).
+fn run_kill_and_replay(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let live = tpath("chaos_live");
+    let copy = tpath("chaos_copy");
+    let sync = [SyncPolicy::Never, SyncPolicy::Batch, SyncPolicy::Always][rng.index(3)];
+    let mut jc = JournalConfig::new(&live).sync(sync);
+    if rng.index(3) == 0 {
+        // Tiny threshold + fast tick: compaction races the crash copy.
+        jc = jc.compact_bytes(256 + rng.index(4096) as u64);
+    }
+    let manager = Manager::new(ManagerConfig {
+        eviction_tick: Duration::from_millis(2),
+        max_batch: 1 + rng.index(4),
+        journal: Some(jc),
+        ..Default::default()
+    });
+    let frozen = Arc::new(AtomicBool::new(false));
+    let log: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(Vec::new()));
+    for _ in 0..2 {
+        manager.register(
+            WorkerProfile::new(10).cru(rng.f64()),
+            Arc::new(AuditChannel { frozen: frozen.clone(), log: log.clone() }),
+        );
+    }
+
+    let client = manager.new_client();
+    let config = QuClassiConfig::new(5, 1).unwrap();
+    let mut next_marker: u32 = 0;
+    let mut banks: Vec<BankExp> = Vec::new();
+    for _ in 0..2 + rng.index(5) {
+        match rng.index(4) {
+            0 => std::thread::sleep(Duration::from_millis(rng.index(3) as u64)),
+            1 => {
+                if !banks.is_empty() {
+                    let i = rng.index(banks.len());
+                    if !banks[i].cancelled && !banks[i].consumed {
+                        manager.cancel_bank(banks[i].bank);
+                        banks[i].cancelled = true;
+                    }
+                }
+            }
+            2 => {
+                // Consume a bank pre-crash (non-timeout outcomes remove
+                // it from the store — and, durably, from the journal).
+                if !banks.is_empty() {
+                    let i = rng.index(banks.len());
+                    let bank = banks[i].bank;
+                    if !banks[i].consumed {
+                        match manager.wait_bank_timeout(bank, Duration::from_millis(100)) {
+                            Err(DqError::Timeout(_)) => {}
+                            Ok(_) if banks[i].cancelled => {
+                                return Err(format!(
+                                    "bank {bank}: cancelled bank completed Ok pre-crash"
+                                ));
+                            }
+                            _ => banks[i].consumed = true,
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        let size = 1 + rng.index(8);
+        let start = next_marker;
+        let pairs = marked_pairs(&config, size, &mut next_marker);
+        let bank = manager
+            .submit_bank(client, config, &pairs)
+            .map_err(|e| format!("submit failed: {e}"))?;
+        banks.push(BankExp { bank, start, size, cancelled: false, consumed: false });
+    }
+
+    // Optional racer: a submit in flight while the crash lands. Its bank
+    // has no deterministic pre-crash state, so only the loose outcome
+    // set and the exactly-once marker audit apply to it.
+    let racer = if rng.index(2) == 0 {
+        let m = manager.clone();
+        let start = next_marker;
+        let pairs = marked_pairs(&config, 4, &mut next_marker);
+        Some((start, std::thread::spawn(move || m.submit_bank(client, config, &pairs).ok())))
+    } else {
+        None
+    };
+
+    // Crash: freeze the workers, let the journal churn a little longer
+    // (requeue/dispatch records keep landing), then snapshot the file.
+    // Everything appended before the freeze is fully inside the copy;
+    // the copy's tail may be torn — both exactly as in a real crash.
+    if rng.index(2) == 0 {
+        std::thread::sleep(Duration::from_millis(rng.index(3) as u64));
+    }
+    frozen.store(true, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(rng.index(3) as u64));
+    std::fs::copy(&live, &copy).map_err(|e| format!("crash copy: {e}"))?;
+    manager.shutdown();
+    let racer = match racer {
+        Some((start, h)) => h.join().expect("racer thread").map(|bank| (start, bank)),
+        None => None,
+    };
+    drop(manager);
+
+    // Restart from the crash image. Workers are not durable: they
+    // re-register (fresh, unfrozen) against the new incarnation.
+    let (m2, report) = Manager::recover(ManagerConfig {
+        journal: Some(JournalConfig::new(&copy).sync(sync)),
+        ..Default::default()
+    })
+    .map_err(|e| format!("recover: {e}"))?;
+    for _ in 0..2 {
+        let unfrozen = Arc::new(AtomicBool::new(false));
+        m2.register(
+            WorkerProfile::new(10).cru(rng.f64()),
+            Arc::new(AuditChannel { frozen: unfrozen, log: log.clone() }),
+        );
+    }
+
+    let mut ok_ranges: Vec<(u32, u32)> = Vec::new();
+    for b in &banks {
+        if b.consumed {
+            if m2.bank_status(b.bank).is_some() {
+                return Err(format!("bank {}: consumed pre-crash but resident after", b.bank));
+            }
+            continue;
+        }
+        if b.cancelled {
+            if !m2.bank_cancelled(b.bank) {
+                return Err(format!("bank {}: cancel tombstone lost in recovery", b.bank));
+            }
+            match m2.wait_bank_timeout(b.bank, Duration::from_secs(10)) {
+                Err(DqError::Cancelled(_)) => {}
+                Ok(_) => return Err(format!("bank {}: cancelled bank resolved Ok", b.bank)),
+                Err(e) => return Err(format!("bank {}: cancelled bank failed {e}", b.bank)),
+            }
+            continue;
+        }
+        // Live bank: must be resident, flagged recovered, right-sized.
+        match m2.bank_status(b.bank) {
+            Some(st) => {
+                if !st.recovered {
+                    return Err(format!("bank {}: restored without recovered flag", b.bank));
+                }
+                if st.total != b.size {
+                    return Err(format!(
+                        "bank {}: restored with {} circuits, submitted {}",
+                        b.bank, st.total, b.size
+                    ));
+                }
+            }
+            None => return Err(format!("bank {}: lost across the crash", b.bank)),
+        }
+        match m2.wait_bank_timeout(b.bank, Duration::from_secs(10)) {
+            Ok(fids) => {
+                let end = b.start + b.size as u32;
+                let want: Vec<f32> = (b.start..end).map(|m| m as f32).collect();
+                if fids != want {
+                    return Err(format!("bank {}: wrong fids {fids:?} != {want:?}", b.bank));
+                }
+                ok_ranges.push((b.start, b.start + b.size as u32));
+            }
+            Err(DqError::WorkerLost(_)) => {}
+            Err(e) => return Err(format!("bank {}: unexpected post-recovery error {e}", b.bank)),
+        }
+    }
+    // The racer's bank may have missed the crash image entirely (its
+    // Submitted record raced the copy); any *consistent* fate is legal.
+    if let Some((start, bank)) = racer {
+        match m2.wait_bank_timeout(bank, Duration::from_secs(10)) {
+            Ok(fids) => {
+                let want: Vec<f32> = (start..start + 4).map(|m| m as f32).collect();
+                if fids != want {
+                    return Err(format!("racer bank {bank}: wrong fids {fids:?}"));
+                }
+                ok_ranges.push((start, start + 4));
+            }
+            Err(DqError::WorkerLost(_) | DqError::Protocol(_) | DqError::Cancelled(_)) => {}
+            Err(e) => return Err(format!("racer bank {bank}: unexpected error {e}")),
+        }
+    }
+    m2.shutdown();
+
+    // Global exactly-once audit across both incarnations.
+    let log = log.lock().unwrap();
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &marker in log.iter() {
+        *counts.entry(marker).or_insert(0) += 1;
+    }
+    for (&marker, &count) in &counts {
+        if count > 1 {
+            return Err(format!("circuit {marker} executed {count} times across the crash"));
+        }
+    }
+    for (lo, hi) in ok_ranges {
+        for marker in lo..hi {
+            if counts.get(&marker).copied().unwrap_or(0) != 1 {
+                return Err(format!("circuit {marker} of an Ok bank never executed"));
+            }
+        }
+    }
+    drop(log);
+    let report_sane = report.banks_restored >= report.banks_failed;
+    if !report_sane {
+        return Err(format!("inconsistent recovery report: {report:?}"));
+    }
+    let _ = std::fs::remove_file(&live);
+    let _ = std::fs::remove_file(&copy);
+    Ok(())
+}
+
+#[test]
+fn kill_and_replay_random_crash_points() {
+    // >= 100 randomized crash points (acceptance floor for this suite).
+    forall(
+        "kill-and-replay",
+        0xC4A5,
+        120,
+        usize_in(0, u32::MAX as usize),
+        |&seed| run_kill_and_replay(seed as u64),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// journal format: round-trip, corruption, torn tails, idempotency
+// ---------------------------------------------------------------------------
+
+fn sample_pairs() -> Vec<CircuitPair> {
+    vec![(vec![0.1, -0.2, 0.3], vec![1.0, 2.0]), (vec![], vec![0.5])]
+}
+
+#[test]
+fn record_codec_round_trips_every_variant() {
+    let pairs = sample_pairs();
+    let mut records = vec![
+        Record::Submitted {
+            bank: 7,
+            client: 3,
+            qubits: 5,
+            layers: 2,
+            digest: payload_digest(&pairs),
+            pairs: pairs.clone(),
+        },
+        Record::Dispatched { members: vec![(7, 0), (7, 1)] },
+        Record::Completed { results: vec![(7, 0, 0.25), (7, 1, 1.0)] },
+        Record::Requeued { members: vec![(7, 1)] },
+        Record::Cancelled { bank: 9 },
+        Record::Resolved { bank: 7 },
+        Record::Snapshot(Snapshot {
+            next_bank: 10,
+            next_client: 4,
+            cancelled: vec![2, 9],
+            banks: vec![
+                SnapBank {
+                    bank: 7,
+                    client: 3,
+                    qubits: 5,
+                    layers: 2,
+                    recovered: true,
+                    failed: Some(DqError::WorkerLost("crash".into())),
+                    circuits: vec![
+                        CircuitState::Done(0.75),
+                        CircuitState::Pending((vec![0.1], vec![0.2])),
+                        CircuitState::InFlight((vec![], vec![1.5])),
+                        CircuitState::Gone,
+                    ],
+                },
+                SnapBank {
+                    bank: 8,
+                    client: 1,
+                    qubits: 7,
+                    layers: 1,
+                    recovered: false,
+                    failed: None,
+                    circuits: vec![],
+                },
+            ],
+        }),
+    ];
+    // Failed must round-trip every error kind (the kind string is the
+    // wire tag; an unknown kind degrades to Protocol by design).
+    for err in [
+        DqError::Unschedulable("u".into()),
+        DqError::WorkerLost("w".into()),
+        DqError::Timeout("t".into()),
+        DqError::Cancelled("c".into()),
+        DqError::Protocol("p".into()),
+        DqError::Arity("a".into()),
+        DqError::Io("i".into()),
+    ] {
+        records.push(Record::Failed { bank: 11, error: err });
+    }
+    for rec in records {
+        let payload = rec.encode();
+        let back = Record::decode(&payload).expect("decode");
+        assert_eq!(back, rec);
+    }
+}
+
+#[test]
+fn decode_rejects_structural_corruption() {
+    // empty payload
+    assert!(Record::decode(&[]).is_err());
+    // unknown tag
+    assert!(Record::decode(&[42]).is_err());
+    // trailing garbage after a valid record
+    let mut payload = Record::Cancelled { bank: 1 }.encode();
+    payload.push(0);
+    assert!(Record::decode(&payload).is_err());
+    // short payload (truncated mid-field)
+    let full = Record::Resolved { bank: 1 }.encode();
+    assert!(Record::decode(&full[..full.len() - 1]).is_err());
+    // payload digest mismatch: CRC-clean bytes that lie about content
+    let pairs = sample_pairs();
+    let lying = Record::Submitted {
+        bank: 1,
+        client: 1,
+        qubits: 5,
+        layers: 1,
+        digest: payload_digest(&pairs) ^ 1,
+        pairs,
+    };
+    assert!(Record::decode(&lying.encode()).is_err());
+}
+
+/// Write a small journal, then recover from *every* byte-length prefix
+/// of it: replay must keep exactly the fully-framed records, report the
+/// rest as truncated, and leave the file appendable.
+#[test]
+fn torn_tails_truncate_at_every_chop_offset() {
+    let src = tpath("chop_src");
+    let cfg = JournalConfig::new(&src).sync(SyncPolicy::Never);
+    let mut j = Journal::create(&cfg).unwrap();
+    let pairs = vec![(vec![0.5f32], vec![1.5f32])];
+    j.append(&Record::Submitted {
+        bank: 1,
+        client: 2,
+        qubits: 5,
+        layers: 1,
+        digest: payload_digest(&pairs),
+        pairs,
+    })
+    .unwrap();
+    j.append(&Record::Dispatched { members: vec![(1, 0)] }).unwrap();
+    j.append(&Record::Completed { results: vec![(1, 0, 0.75)] }).unwrap();
+    j.append(&Record::Cancelled { bank: 2 }).unwrap();
+    j.flush().unwrap();
+    drop(j);
+    let full = std::fs::read(&src).unwrap();
+    // Frame boundaries from the length prefixes: [8, end1, end2, ...].
+    let mut ends = vec![8usize];
+    let mut at = 8usize;
+    while at < full.len() {
+        let len = u32::from_le_bytes(full[at..at + 4].try_into().unwrap()) as usize;
+        at += 8 + len;
+        ends.push(at);
+    }
+    assert_eq!(at, full.len(), "frame walk must cover the file");
+    assert_eq!(ends.len(), 5, "magic + four frames");
+
+    let cut_path = tpath("chop_cut");
+    let cut_cfg = JournalConfig::new(&cut_path).sync(SyncPolicy::Never);
+    for cut in 0..=full.len() {
+        std::fs::write(&cut_path, &full[..cut]).unwrap();
+        let (mut j, state) = Journal::recover(&cut_cfg).unwrap();
+        let frames = ends.iter().filter(|&&e| e > 8 && e <= cut).count() as u64;
+        assert_eq!(state.records, frames, "records at cut {cut}");
+        // A sub-header prefix re-initializes; otherwise replay keeps the
+        // longest fully-framed prefix and truncates the rest.
+        let good = if cut < 8 {
+            0
+        } else {
+            *ends.iter().filter(|&&e| e <= cut).max().unwrap()
+        };
+        assert_eq!(state.truncated_bytes, (cut - good) as u64, "truncated at cut {cut}");
+        // The truncated journal must accept appends and replay them.
+        j.append(&Record::Resolved { bank: 1 }).unwrap();
+        j.flush().unwrap();
+        drop(j);
+        let (_j2, state2) = Journal::recover(&cut_cfg).unwrap();
+        assert_eq!(state2.records, frames + 1, "re-recover at cut {cut}");
+        assert_eq!(state2.truncated_bytes, 0, "re-recover clean at cut {cut}");
+    }
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_file(&cut_path);
+}
+
+#[test]
+fn checksum_failure_is_a_truncate_point() {
+    let path = tpath("badcrc");
+    let cfg = JournalConfig::new(&path).sync(SyncPolicy::Never);
+    let mut j = Journal::create(&cfg).unwrap();
+    j.append(&Record::Cancelled { bank: 10 }).unwrap();
+    j.append(&Record::Cancelled { bank: 11 }).unwrap();
+    j.append(&Record::Cancelled { bank: 12 }).unwrap();
+    j.flush().unwrap();
+    drop(j);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let len0 = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let frame1 = 8 + 8 + len0;
+    bytes[frame1 + 4] ^= 0xFF; // corrupt the second frame's stored CRC
+    std::fs::write(&path, &bytes).unwrap();
+    let (mut j, state) = Journal::recover(&cfg).unwrap();
+    assert_eq!(state.records, 1, "replay stops at the bad checksum");
+    assert_eq!(state.truncated_bytes, (bytes.len() - frame1) as u64);
+    assert!(state.cancelled.contains(&10));
+    assert!(!state.cancelled.contains(&11), "corrupt record must not replay");
+    // the journal stays usable after truncation
+    j.append(&Record::Cancelled { bank: 13 }).unwrap();
+    j.flush().unwrap();
+    drop(j);
+    let (_j2, state2) = Journal::recover(&cfg).unwrap();
+    assert_eq!(state2.records, 2);
+    assert!(state2.cancelled.contains(&10) && state2.cancelled.contains(&13));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn triple_recover_is_idempotent() {
+    let path = tpath("triple");
+    let cfg = JournalConfig::new(&path).sync(SyncPolicy::Never);
+    let mut j = Journal::create(&cfg).unwrap();
+    let pairs = sample_pairs();
+    j.append(&Record::Submitted {
+        bank: 1,
+        client: 1,
+        qubits: 5,
+        layers: 1,
+        digest: payload_digest(&pairs),
+        pairs,
+    })
+    .unwrap();
+    j.append(&Record::Dispatched { members: vec![(1, 0)] }).unwrap();
+    j.append(&Record::Cancelled { bank: 2 }).unwrap();
+    j.append(&Record::Completed { results: vec![(1, 0, 0.5)] }).unwrap();
+    j.flush().unwrap();
+    drop(j);
+    // a torn half-header at the tail, as a crash would leave it
+    let mut bytes = std::fs::read(&path).unwrap();
+    let clean_len = bytes.len();
+    bytes.extend_from_slice(&[7, 0, 0, 0]);
+    std::fs::write(&path, &bytes).unwrap();
+
+    let (j1, s1) = Journal::recover(&cfg).unwrap();
+    drop(j1);
+    let (j2, s2) = Journal::recover(&cfg).unwrap();
+    drop(j2);
+    let (j3, s3) = Journal::recover(&cfg).unwrap();
+    drop(j3);
+    assert_eq!(s1.truncated_bytes, 4, "first recover chops the torn tail");
+    assert_eq!(std::fs::metadata(&path).unwrap().len(), clean_len as u64);
+    assert_eq!(s2.truncated_bytes, 0, "recovery appends nothing of its own");
+    let mut s1_clean = s1.clone();
+    s1_clean.truncated_bytes = 0;
+    assert_eq!(s1_clean, s2, "recover is idempotent modulo the chopped tail");
+    assert_eq!(s2, s3);
+    assert_eq!(s2.records, 4);
+    let circuits = &s2.banks[&1].circuits;
+    assert_eq!(circuits.len(), 2);
+    assert_eq!(circuits[0], CircuitState::Done(0.5));
+    assert!(matches!(circuits[1], CircuitState::Pending(_)));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn recover_requires_a_journal_config() {
+    let res = Manager::recover(ManagerConfig::default());
+    assert!(matches!(res, Err(DqError::Protocol(_))));
+}
+
+// ---------------------------------------------------------------------------
+// manager-level recovery semantics (the PR's satellite regressions)
+// ---------------------------------------------------------------------------
+
+/// Satellite: cancel tombstones survive journal compaction AND a
+/// restart — a late `try_poll`/wait after recovery still observes
+/// `Cancelled`, never "unknown bank". Also pins that a completed-but-
+/// unconsumed bank survives a clean restart with its results intact.
+#[test]
+fn cancel_tombstone_survives_compaction_and_restart() {
+    let path = tpath("tombstone");
+    let jc = JournalConfig::new(&path);
+    let m1 = Manager::new(ManagerConfig { journal: Some(jc.clone()), ..Default::default() });
+    let frozen = Arc::new(AtomicBool::new(false));
+    let log = Arc::new(Mutex::new(Vec::new()));
+    m1.register(
+        WorkerProfile::new(10),
+        Arc::new(AuditChannel { frozen: frozen.clone(), log: log.clone() }),
+    );
+    let client = m1.new_client();
+    let config = QuClassiConfig::new(5, 1).unwrap();
+    let mut next = 0u32;
+    let a = m1.submit_bank(client, config, &marked_pairs(&config, 2, &mut next)).unwrap();
+    let b = m1.submit_bank(client, config, &marked_pairs(&config, 2, &mut next)).unwrap();
+    m1.cancel_bank(b);
+    // Let A complete fully without consuming it (status, not wait).
+    let t0 = std::time::Instant::now();
+    loop {
+        let st = m1.bank_status(a).expect("bank A resident");
+        if st.completed == st.total {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "bank A never completed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(m1.compact_journal(), "compaction must succeed");
+    m1.shutdown();
+    drop(m1);
+
+    let (m2, report) =
+        Manager::recover(ManagerConfig { journal: Some(jc), ..Default::default() }).unwrap();
+    assert!(report.cancelled_ids >= 1, "tombstone id must survive: {report:?}");
+    assert!(m2.bank_cancelled(b), "cancel tombstone lost across compaction + restart");
+    // the satellite's regression shape: a late poll via the session ops
+    assert!(matches!(SessionOps::status(&m2, b), Err(DqError::Cancelled(_))));
+    let late = m2.wait_bank_timeout(b, Duration::from_secs(1));
+    assert!(matches!(late, Err(DqError::Cancelled(_))));
+    // the completed-unconsumed bank kept its results for the late waiter
+    let st = m2.bank_status(a).expect("completed bank must survive a clean restart");
+    assert!(st.recovered, "restored bank must be flagged recovered");
+    assert_eq!(m2.wait_bank_timeout(a, Duration::from_secs(1)).unwrap(), vec![0.0, 1.0]);
+    m2.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Satellite: `Manager::shutdown` resolves every pending bank in the
+/// journal (and fsyncs) before failing them in memory, so a clean
+/// shutdown + recover re-admits nothing.
+#[test]
+fn clean_shutdown_resolves_pending_banks_so_recovery_readmits_nothing() {
+    let path = tpath("clean_shutdown");
+    let jc = JournalConfig::new(&path);
+    let m1 = Manager::new(ManagerConfig { journal: Some(jc.clone()), ..Default::default() });
+    let client = m1.new_client();
+    let config = QuClassiConfig::new(5, 1).unwrap();
+    let mut next = 0u32;
+    // No workers registered: both banks sit pending, never dispatched.
+    let a = m1.submit_bank(client, config, &marked_pairs(&config, 3, &mut next)).unwrap();
+    let b = m1.submit_bank(client, config, &marked_pairs(&config, 2, &mut next)).unwrap();
+    m1.shutdown();
+    drop(m1);
+
+    let (m2, report) =
+        Manager::recover(ManagerConfig { journal: Some(jc), ..Default::default() }).unwrap();
+    assert_eq!(report.banks_restored, 0, "clean shutdown left banks behind: {report:?}");
+    assert_eq!(report.circuits_readmitted, 0);
+    assert_eq!(m2.queue_len(), 0);
+    assert!(m2.bank_status(a).is_none());
+    assert!(m2.bank_status(b).is_none());
+    m2.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A crash image taken before anything dispatched re-admits every
+/// circuit; work resumes as soon as a worker re-registers, and the
+/// restored bank is flagged `recovered` end to end.
+#[test]
+fn undispatched_banks_readmit_and_resume_after_recovery() {
+    let live = tpath("resume_live");
+    let copy = tpath("resume_copy");
+    let m1 = Manager::new(ManagerConfig {
+        journal: Some(JournalConfig::new(&live)),
+        ..Default::default()
+    });
+    let client = m1.new_client();
+    let config = QuClassiConfig::new(5, 1).unwrap();
+    let mut next = 0u32;
+    // No workers on m1: the bank cannot dispatch before the "crash".
+    let bank = m1.submit_bank(client, config, &marked_pairs(&config, 3, &mut next)).unwrap();
+    std::fs::copy(&live, &copy).unwrap();
+    m1.shutdown();
+    drop(m1);
+
+    let (m2, report) = Manager::recover(ManagerConfig {
+        journal: Some(JournalConfig::new(&copy)),
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(report.records, 1, "one Submitted record: {report:?}");
+    assert_eq!(report.banks_restored, 1);
+    assert_eq!(report.circuits_readmitted, 3);
+    assert_eq!(report.banks_failed, 0);
+    let st = m2.bank_status(bank).expect("bank resident after recovery");
+    assert!(st.recovered && st.pending);
+    assert_eq!((st.completed, st.total), (0, 3));
+    // Workers re-register against the new incarnation; work resumes.
+    let log = Arc::new(Mutex::new(Vec::new()));
+    m2.register(
+        WorkerProfile::new(10),
+        Arc::new(AuditChannel { frozen: Arc::new(AtomicBool::new(false)), log: log.clone() }),
+    );
+    let fids = m2.wait_bank_timeout(bank, Duration::from_secs(10)).unwrap();
+    assert_eq!(fids, vec![0.0, 1.0, 2.0]);
+    assert_eq!(*log.lock().unwrap(), vec![0, 1, 2]);
+    m2.shutdown();
+    let _ = std::fs::remove_file(&live);
+    let _ = std::fs::remove_file(&copy);
+}

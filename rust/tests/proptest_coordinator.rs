@@ -10,15 +10,21 @@
 //!  * exactly-once under chaos: arbitrary steal/evict/cancel
 //!    interleavings on the *live* manager never execute a circuit twice
 //!    and never lose one (completed + failed == submitted)
+//!  * crash conservation: with the bank journal on, freezing the workers
+//!    mid-flight and recovering a second incarnation from a copy of the
+//!    journal still resolves every submitted circuit exactly once
+//!    (completed + lost == submitted across both incarnations, no marker
+//!    executes twice — DESIGN.md §16, `tests/journal_recovery.rs`)
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use dqulearn::circuit::QuClassiConfig;
 use dqulearn::coordinator::registry::Registry;
 use dqulearn::coordinator::scheduler;
-use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel, WorkerProfile};
+use dqulearn::coordinator::{JournalConfig, Manager, ManagerConfig, WorkerChannel, WorkerProfile};
 use dqulearn::env::{scenarios, sim, Calibration, ClientJob, EnvParams, SimConfig, SimWorkerSpec, Tenancy};
 use dqulearn::error::DqError;
 use dqulearn::model::exec::CircuitPair;
@@ -381,6 +387,163 @@ fn steal_evict_cancel_interleavings_conserve_circuits() {
         16,
         usize_in(0, u32::MAX as usize),
         |&seed| run_steal_evict_cancel(seed as u64),
+    );
+}
+
+/// Journal-backed variant of [`AuditChannel`]: logs markers until the
+/// crash harness freezes it; a frozen execute fails *before* logging, so
+/// anything in the log provably dispatched (and journaled) pre-freeze.
+struct FreezeChannel {
+    frozen: Arc<AtomicBool>,
+    log: Arc<Mutex<Vec<u32>>>,
+}
+
+impl WorkerChannel for FreezeChannel {
+    fn execute(
+        &self,
+        _config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        if self.frozen.load(Ordering::SeqCst) {
+            return Err(DqError::Io("frozen".to_string()));
+        }
+        let mut log = self.log.lock().unwrap();
+        for (_, data) in pairs {
+            log.push(data[0] as u32);
+        }
+        Ok(vec![0.5; pairs.len()])
+    }
+}
+
+/// Crash/recover chaos arm (the durable-journal counterpart of the
+/// steal/evict/cancel property): random submits, cancels, and consuming
+/// waits race a simulated crash — workers freeze, the journal file is
+/// snapshotted mid-flight, and a second incarnation recovers from the
+/// copy. Quiescence must hold across both incarnations: every submitted
+/// circuit either completes (exactly once) or is lost to a cancel/crash
+/// failure, and no execution marker repeats.
+fn run_crash_recover_conservation(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let dir = std::env::temp_dir();
+    let live = dir.join(format!("dq_prop_crash_{}_{seed}.log", std::process::id()));
+    let copy = dir.join(format!("dq_prop_crash_{}_{seed}.copy", std::process::id()));
+    let manager = Manager::new(ManagerConfig {
+        max_batch: 1 + rng.index(4),
+        journal: Some(JournalConfig::new(&live)),
+        ..Default::default()
+    });
+    let frozen = Arc::new(AtomicBool::new(false));
+    let log: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(Vec::new()));
+    for _ in 0..1 + rng.index(2) {
+        manager.register(
+            WorkerProfile::new(10).cru(rng.f64()),
+            Arc::new(FreezeChannel { frozen: frozen.clone(), log: log.clone() }),
+        );
+    }
+    let client = manager.new_client();
+    let config = QuClassiConfig::new(5, 1).unwrap();
+    let mut marker: u32 = 0;
+    // (bank, size, pre-crash resolution: Some(completed?), cancelled)
+    let mut banks: Vec<(u64, usize, Option<bool>, bool)> = Vec::new();
+    for _ in 0..2 + rng.index(4) {
+        let size = 1 + rng.index(6);
+        let pairs: Vec<CircuitPair> = (0..size)
+            .map(|_| {
+                let m = marker;
+                marker += 1;
+                let mut data = vec![0.25f32; config.n_features()];
+                data[0] = m as f32;
+                (vec![0.1; config.n_params()], data)
+            })
+            .collect();
+        let bank = manager
+            .submit_bank(client, config, &pairs)
+            .map_err(|e| format!("submit: {e}"))?;
+        banks.push((bank, size, None, false));
+        match rng.index(3) {
+            0 => {
+                let i = rng.index(banks.len());
+                if banks[i].2.is_none() && !banks[i].3 {
+                    manager.cancel_bank(banks[i].0);
+                    banks[i].3 = true;
+                }
+            }
+            1 => {
+                let i = rng.index(banks.len());
+                if banks[i].2.is_none() {
+                    match manager.wait_bank_timeout(banks[i].0, Duration::from_millis(50)) {
+                        Err(DqError::Timeout(_)) => {}
+                        Ok(_) => banks[i].2 = Some(true),
+                        Err(_) => banks[i].2 = Some(false),
+                    }
+                }
+            }
+            _ => std::thread::sleep(Duration::from_millis(rng.index(2) as u64)),
+        }
+    }
+    // Crash: freeze executions, snapshot the journal mid-flight (the
+    // copy's tail may be torn), drop the first incarnation.
+    frozen.store(true, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(rng.index(2) as u64));
+    std::fs::copy(&live, &copy).map_err(|e| format!("crash copy: {e}"))?;
+    manager.shutdown();
+    drop(manager);
+
+    let (m2, _report) = Manager::recover(ManagerConfig {
+        journal: Some(JournalConfig::new(&copy)),
+        ..Default::default()
+    })
+    .map_err(|e| format!("recover: {e}"))?;
+    m2.register(
+        WorkerProfile::new(10).cru(rng.f64()),
+        Arc::new(FreezeChannel { frozen: Arc::new(AtomicBool::new(false)), log: log.clone() }),
+    );
+    let (mut submitted, mut completed, mut lost) = (0usize, 0usize, 0usize);
+    for (bank, size, pre, _) in &banks {
+        submitted += *size;
+        match pre {
+            Some(true) => completed += *size,
+            Some(false) => lost += *size,
+            None => match m2.wait_bank_timeout(*bank, Duration::from_secs(10)) {
+                Ok(fids) => {
+                    if fids.len() != *size {
+                        return Err(format!("bank {bank}: {} fids for {size}", fids.len()));
+                    }
+                    completed += *size;
+                }
+                Err(DqError::Cancelled(_) | DqError::WorkerLost(_)) => lost += *size,
+                Err(e) => return Err(format!("bank {bank}: unexpected outcome {e}")),
+            },
+        }
+    }
+    if completed + lost != submitted {
+        return Err(format!("conservation: {completed} + {lost} != {submitted}"));
+    }
+    m2.shutdown();
+    let log = log.lock().unwrap();
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &m in log.iter() {
+        *counts.entry(m).or_insert(0) += 1;
+    }
+    for (&m, &c) in &counts {
+        if c > 1 {
+            return Err(format!("circuit {m} executed {c} times across the crash"));
+        }
+    }
+    drop(log);
+    let _ = std::fs::remove_file(&live);
+    let _ = std::fs::remove_file(&copy);
+    Ok(())
+}
+
+#[test]
+fn crash_recover_interleavings_conserve_circuits() {
+    forall(
+        "crash-recover",
+        0xC4A54,
+        12,
+        usize_in(0, u32::MAX as usize),
+        |&seed| run_crash_recover_conservation(seed as u64),
     );
 }
 
