@@ -17,11 +17,20 @@
 //! A third series measures the durability tax (DESIGN.md §16): the same
 //! 4 worker x 4 tenant load with the write-ahead bank journal off, at
 //! `sync=batch`, and at `sync=always`, hard-gated on batch-fsync
-//! journaling keeping at least 0.8x of the journal-off throughput.
+//! journaling keeping at least 0.8x of the journal-off throughput. An
+//! `always16` row repeats `sync=always` with 16 concurrent submitters;
+//! its `fsyncs` column sitting far below the record count is the
+//! group-commit amortization at work (DESIGN.md §16/§17).
+//!
+//! A fourth series is the mux soak (DESIGN.md §17): 256 remote workers,
+//! each a real TCP connection through one shared [`Mux`] into one
+//! [`MuxServer`] park, driven by 4 tenant threads. The cell hard-fails
+//! if the transport ever needs more than 3 OS threads
+//! (`transport_thread_count`) — the whole point of the plane.
 //!
 //! Results are serialized via `wire/json` to `BENCH_coordinator.json`
-//! (override with `DQ_BENCH_OUT`) with `skewed` (steal-on/off) and
-//! `journal` (off/batch/always) series,
+//! (override with `DQ_BENCH_OUT`) with `skewed` (steal-on/off),
+//! `journal` (off/batch/always/always16) and `mux_soak` series,
 //! seeding the repo's perf trajectory. When a committed baseline exists
 //! (`DQ_BENCH_BASELINE`, default `../bench/baseline.json` relative to
 //! the crate root), any cell whose throughput falls below **half** the
@@ -38,12 +47,15 @@ use std::time::{Duration, Instant};
 
 use dqulearn::benchlib::{BenchConfig, Table};
 use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::MuxWorkerChannel;
 use dqulearn::coordinator::{
     JournalConfig, Manager, ManagerConfig, SyncPolicy, WorkerChannel, WorkerProfile,
 };
 use dqulearn::error::DqError;
 use dqulearn::model::exec::CircuitPair;
-use dqulearn::wire::{json, Value};
+use dqulearn::net::mux::transport_thread_count;
+use dqulearn::net::{Mux, MuxConfig, MuxServer};
+use dqulearn::wire::{bin, json, Value};
 
 /// Instant worker: returns a constant fidelity per circuit, so the
 /// bench measures coordination, not simulation.
@@ -190,20 +202,25 @@ fn run_skewed_cell(steal: bool, circuits_per_tenant: usize, bank: usize) -> Skew
     }
 }
 
-/// One journal-overhead measurement (fixed 4 workers x 4 tenants).
+/// One journal-overhead measurement (4 workers, `tenants` submitters).
 struct JournalCell {
-    sync: &'static str,
+    sync: String,
     circuits: usize,
     secs: f64,
     throughput: f64,
     journal_bytes: u64,
+    fsyncs: u64,
 }
 
-/// The `run_cell` shape at the 4x4 grid point with the write-ahead bank
-/// journal off / batch-fsync / fsync-per-append, measuring the
-/// durability tax on pure coordination throughput (DESIGN.md §16).
+/// The `run_cell` shape at the 4-worker grid point with the write-ahead
+/// bank journal off / batch-fsync / fsync-per-append, measuring the
+/// durability tax on pure coordination throughput (DESIGN.md §16). The
+/// 4-tenant rows keep their historical labels; other tenant counts get
+/// the count appended (`always16` = 16 concurrent submitters, the
+/// group-commit amortization row).
 fn run_journal_cell(
     sync: Option<SyncPolicy>,
+    tenants: usize,
     circuits_per_tenant: usize,
     bank: usize,
 ) -> JournalCell {
@@ -213,7 +230,8 @@ fn run_journal_cell(
         Some(SyncPolicy::Batch) => "batch",
         Some(SyncPolicy::Always) => "always",
     };
-    let name = format!("dq_bench_journal_{}_{label}.log", std::process::id());
+    let sync_label = if tenants == 4 { label.to_string() } else { format!("{label}{tenants}") };
+    let name = format!("dq_bench_journal_{}_{sync_label}.log", std::process::id());
     let path = std::env::temp_dir().join(name);
     let journal = sync.map(|s| JournalConfig::new(&path).sync(s));
     let manager = Manager::new(ManagerConfig { max_batch: 8, journal, ..Default::default() });
@@ -226,7 +244,7 @@ fn run_journal_cell(
         .collect();
 
     let start = Instant::now();
-    let handles: Vec<_> = (0..4)
+    let handles: Vec<_> = (0..tenants)
         .map(|_| {
             let m = manager.clone();
             let pairs = pairs.clone();
@@ -246,17 +264,97 @@ fn run_journal_cell(
         h.join().expect("tenant thread panicked");
     }
     let secs = start.elapsed().as_secs_f64();
+    let fsyncs = manager.journal_syncs().unwrap_or(0);
     manager.shutdown();
     let journal_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     let _ = std::fs::remove_file(&path);
 
-    let circuits = 4 * circuits_per_tenant;
+    let circuits = tenants * circuits_per_tenant;
     JournalCell {
-        sync: label,
+        sync: sync_label,
         circuits,
         secs,
         throughput: circuits as f64 / secs.max(1e-9),
         journal_bytes,
+        fsyncs,
+    }
+}
+
+/// The mux soak (DESIGN.md §17): `workers` real TCP endpoints served by
+/// one [`MuxServer`] park, all dialed through one shared [`Mux`], with
+/// the manager's outbox dispatchers on the enqueue-and-notify async
+/// path. Measures coordination + transport throughput and records the
+/// peak transport-thread count mid-run.
+struct SoakCell {
+    workers: usize,
+    circuits: usize,
+    secs: f64,
+    throughput: f64,
+    transport_threads: usize,
+}
+
+fn run_mux_soak(workers: usize, circuits_per_tenant: usize, bank: usize) -> SoakCell {
+    let service = Arc::new(|op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+        if op != bin::OP_EXECUTE {
+            return Err(DqError::Protocol(format!("soak: unknown op {op}")));
+        }
+        let jobs = bin::decode_jobs(payload)?;
+        Ok(bin::encode_fids(&vec![0.5; jobs.len()]))
+    });
+    let mut server = MuxServer::serve("127.0.0.1:0", service).expect("bind soak server");
+    let mux = Mux::new(MuxConfig::default());
+    // No heartbeats in this cell: a huge period keeps the evictor out
+    // of the measurement.
+    let manager = Manager::new(ManagerConfig {
+        max_batch: 8,
+        heartbeat_period: 3600.0,
+        ..Default::default()
+    });
+    for _ in 0..workers {
+        let conn = mux.connect(server.local_addr()).expect("soak connect");
+        let channel = Arc::new(MuxWorkerChannel::new(mux.clone(), conn.id));
+        manager.register(WorkerProfile::new(5), channel);
+    }
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs: Vec<CircuitPair> = (0..bank)
+        .map(|_| (vec![0.1; cfg.n_params()], vec![0.2; cfg.n_features()]))
+        .collect();
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let m = manager.clone();
+            let pairs = pairs.clone();
+            std::thread::spawn(move || {
+                let session = m.session();
+                let mut left = circuits_per_tenant;
+                while left > 0 {
+                    let n = left.min(pairs.len());
+                    let fids = session.execute(cfg, &pairs[..n]).expect("soak bank failed");
+                    assert_eq!(fids.len(), n);
+                    left -= n;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("tenant thread panicked");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    // Sampled while the plane is still up: one event loop, one
+    // completion runner, one server park.
+    let transport_threads = transport_thread_count();
+    manager.shutdown();
+    mux.shutdown();
+    server.shutdown();
+
+    let circuits = 4 * circuits_per_tenant;
+    SoakCell {
+        workers,
+        circuits,
+        secs,
+        throughput: circuits as f64 / secs.max(1e-9),
+        transport_threads,
     }
 }
 
@@ -265,11 +363,12 @@ fn journal_to_wire(cells: &[JournalCell]) -> Vec<Value> {
         .iter()
         .map(|c| {
             Value::obj()
-                .with("sync", c.sync)
+                .with("sync", c.sync.as_str())
                 .with("circuits", c.circuits)
                 .with("secs", c.secs)
                 .with("throughput", c.throughput)
                 .with("journal_bytes", c.journal_bytes)
+                .with("fsyncs", c.fsyncs)
         })
         .collect()
 }
@@ -359,6 +458,24 @@ fn skew_regressions(cells: &[SkewCell], baseline: &Value) -> Vec<String> {
     failures
 }
 
+/// Baseline gate for the mux soak (half-the-floor rule on throughput).
+fn soak_regressions(soak: &SoakCell, baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let thr = baseline
+        .get("mux_soak")
+        .and_then(|s| s.get("throughput"))
+        .and_then(Value::as_f64);
+    if let Some(thr) = thr {
+        if soak.throughput < thr / 2.0 {
+            failures.push(format!(
+                "mux_soak: {:.0} c/s < half of baseline {thr:.0} c/s",
+                soak.throughput
+            ));
+        }
+    }
+    failures
+}
+
 /// Compare against the committed baseline; returns the failing cells.
 fn regressions(cells: &[Cell], baseline: &Value) -> Vec<String> {
     let mut failures = Vec::new();
@@ -438,15 +555,18 @@ fn main() {
     println!("\nskewed load (1 slow + 3 fast workers):");
     print!("{}", skew_table.render());
 
-    // Journal overhead: the 4x4 grid point with the write-ahead bank
-    // journal off, batch-fsynced, and fsynced per append.
+    // Journal overhead: the 4-worker grid point with the write-ahead
+    // bank journal off, batch-fsynced, and fsynced per append — plus
+    // the 16-submitter fsync-per-append row, whose fsync count shows
+    // the group commit coalescing concurrent appends.
     let journal_cells = vec![
-        run_journal_cell(None, skew_budget, bank),
-        run_journal_cell(Some(SyncPolicy::Batch), skew_budget, bank),
-        run_journal_cell(Some(SyncPolicy::Always), skew_budget, bank),
+        run_journal_cell(None, 4, skew_budget, bank),
+        run_journal_cell(Some(SyncPolicy::Batch), 4, skew_budget, bank),
+        run_journal_cell(Some(SyncPolicy::Always), 4, skew_budget, bank),
+        run_journal_cell(Some(SyncPolicy::Always), 16, skew_budget / 4, bank),
     ];
     let mut journal_table =
-        Table::new(&["journal", "circuits", "secs", "circuits/s", "log bytes"]);
+        Table::new(&["journal", "circuits", "secs", "circuits/s", "log bytes", "fsyncs"]);
     for c in &journal_cells {
         journal_table.row(&[
             c.sync.to_string(),
@@ -454,21 +574,49 @@ fn main() {
             format!("{:.3}", c.secs),
             format!("{:.0}", c.throughput),
             c.journal_bytes.to_string(),
+            c.fsyncs.to_string(),
         ]);
     }
-    println!("\njournal overhead (4 workers x 4 tenants):");
+    println!("\njournal overhead (4 workers):");
     print!("{}", journal_table.render());
 
-    // Serialize the trajectory point (grid + skewed steal + journal series).
+    // Mux soak: 256 remote workers on one shared transport plane.
+    let soak_workers = 256;
+    let soak = run_mux_soak(soak_workers, skew_budget, bank);
+    println!(
+        "\nmux soak: {} workers, {} circuits in {:.3}s ({:.0} c/s), {} transport threads",
+        soak.workers, soak.circuits, soak.secs, soak.throughput, soak.transport_threads
+    );
+
+    // Serialize the trajectory point (grid + skewed steal + journal +
+    // mux soak series).
     let out_default = "BENCH_coordinator.json".to_string();
     let out_path = std::env::var("DQ_BENCH_OUT").unwrap_or(out_default);
+    let soak_wire = Value::obj()
+        .with("workers", soak.workers)
+        .with("circuits", soak.circuits)
+        .with("secs", soak.secs)
+        .with("throughput", soak.throughput)
+        .with("transport_threads", soak.transport_threads);
     let payload = json::to_string_pretty(
         &cells_to_wire(mode, &cells)
             .with("skewed", skew_to_wire(&skew_cells))
-            .with("journal", journal_to_wire(&journal_cells)),
+            .with("journal", journal_to_wire(&journal_cells))
+            .with("mux_soak", soak_wire),
     );
     std::fs::write(&out_path, payload).expect("write BENCH_coordinator.json");
     println!("\nwrote {out_path}");
+
+    // Mux gate: the soak must never need more than the fixed transport
+    // trio (event loop + completion runner + server park) no matter how
+    // many workers are connected — the plane's entire reason to exist.
+    if soak.transport_threads > 3 {
+        eprintln!(
+            "mux soak used {} transport threads for {} workers (budget: 3)",
+            soak.transport_threads, soak.workers
+        );
+        std::process::exit(1);
+    }
 
     // Steal gate: on the skewed pool, stealing must not lose throughput
     // (expected: a multiple; the 0.9 factor absorbs runner noise).
@@ -504,6 +652,7 @@ fn main() {
                 let mut failures = regressions(&cells, &baseline);
                 failures.extend(skew_regressions(&skew_cells, &baseline));
                 failures.extend(journal_regressions(&journal_cells, &baseline));
+                failures.extend(soak_regressions(&soak, &baseline));
                 if failures.is_empty() {
                     println!("baseline check OK ({baseline_path})");
                 } else {

@@ -1,6 +1,15 @@
 //! Microbenchmarks for the wire substrate: JSON encode/decode and frame
 //! round-trips — the per-message cost of the manager↔worker RPC — plus
-//! the manager `stats` payload (per-tenant wait histograms included).
+//! the manager `stats` payload (per-tenant wait histograms included)
+//! and the `wire/bin` binary plane measured against the same payloads.
+//!
+//! The binary series is a perf *gate*, not just a report: for the two
+//! hot payloads (the 32-circuit execute request and the fidelity batch
+//! result) the typed→bytes and bytes→typed costs through `wire/bin`
+//! must stay at or below half the JSON cost, with the ratio ceilings
+//! read from `bench/baseline.json` (`wire` section) when present.
+//! Results are serialized to `BENCH_wire.json` (`DQ_BENCH_OUT`
+//! overrides) for the CI artifact trail.
 //!
 //! This file is both a `harness = false` bench target and a harnessed
 //! test target (`micro_wire_tests` in Cargo.toml), so the round-trip
@@ -9,6 +18,7 @@
 //!
 //! ```bash
 //! cargo bench --bench micro_wire
+//! DQ_BENCH_FAST=1 cargo bench --bench micro_wire
 //! ```
 #![cfg_attr(test, allow(dead_code, unused_imports))]
 
@@ -19,7 +29,7 @@ use dqulearn::coordinator::job::CircuitJob;
 use dqulearn::coordinator::{ManagerStats, TenantStats};
 use dqulearn::net::frame::{read_frame, write_frame};
 use dqulearn::util::WaitHistogram;
-use dqulearn::wire::{self, Value};
+use dqulearn::wire::{self, bin, json, Value};
 
 fn sample_job(i: u64) -> CircuitJob {
     let config = QuClassiConfig::new(7, 3).unwrap();
@@ -35,7 +45,7 @@ fn sample_job(i: u64) -> CircuitJob {
 }
 
 fn main() {
-    let mut b = Bencher::new(BenchConfig::default());
+    let mut b = Bencher::new(BenchConfig::from_env());
 
     // single-job encode/decode
     let job = sample_job(1);
@@ -88,7 +98,144 @@ fn main() {
         std::hint::black_box(proto::manager_stats_from_wire(&parsed).unwrap());
     });
 
+    // -----------------------------------------------------------------
+    // binary plane (wire/bin) vs JSON on the two hot payloads, measured
+    // as the full typed→bytes / bytes→typed path either plane pays
+    // -----------------------------------------------------------------
+
+    let jobs: Vec<CircuitJob> = (0..32).map(sample_job).collect();
+    let bin_request = bin::encode_jobs(&jobs);
+    let json_request = wire::to_string(
+        &Value::obj().with("circuits", jobs.iter().map(CircuitJob::to_wire).collect::<Vec<_>>()),
+    );
+    println!(
+        "\n32-circuit execute request: {} bytes as json, {} bytes as wire/bin",
+        json_request.len(),
+        bin_request.len()
+    );
+    let submit_json_enc = b
+        .bench("typed->bytes 32-circuit request (json)", || {
+            let circuits: Vec<Value> = jobs.iter().map(CircuitJob::to_wire).collect();
+            std::hint::black_box(wire::to_string(&Value::obj().with("circuits", circuits)));
+        })
+        .mean_ns();
+    let submit_bin_enc = b
+        .bench("typed->bytes 32-circuit request (bin)", || {
+            std::hint::black_box(bin::encode_jobs(&jobs));
+        })
+        .mean_ns();
+    let submit_json_dec = b
+        .bench("bytes->typed 32-circuit request (json)", || {
+            let parsed = wire::parse(&json_request).unwrap();
+            let circuits = parsed.req_arr("circuits").unwrap();
+            let jobs: Vec<CircuitJob> =
+                circuits.iter().map(|c| CircuitJob::from_wire(c).unwrap()).collect();
+            std::hint::black_box(jobs);
+        })
+        .mean_ns();
+    let submit_bin_dec = b
+        .bench("bytes->typed 32-circuit request (bin)", || {
+            std::hint::black_box(bin::decode_jobs(&bin_request).unwrap());
+        })
+        .mean_ns();
+
+    let fids: Vec<f32> = (0..512).map(|i| i as f32 / 512.0).collect();
+    let bin_fids = bin::encode_fids(&fids);
+    let json_fids = wire::to_string(&Value::obj().with("fids", fids.as_slice()));
+    println!(
+        "512-fid result: {} bytes as json, {} bytes as wire/bin\n",
+        json_fids.len(),
+        bin_fids.len()
+    );
+    let fids_json_enc = b
+        .bench("typed->bytes 512-fid result (json)", || {
+            std::hint::black_box(wire::to_string(&Value::obj().with("fids", fids.as_slice())));
+        })
+        .mean_ns();
+    let fids_bin_enc = b
+        .bench("typed->bytes 512-fid result (bin)", || {
+            std::hint::black_box(bin::encode_fids(&fids));
+        })
+        .mean_ns();
+    let fids_json_dec = b
+        .bench("bytes->typed 512-fid result (json)", || {
+            let parsed = wire::parse(&json_fids).unwrap();
+            std::hint::black_box(parsed.req_f32_vec("fids").unwrap());
+        })
+        .mean_ns();
+    let fids_bin_dec = b
+        .bench("bytes->typed 512-fid result (bin)", || {
+            std::hint::black_box(bin::decode_fids(&bin_fids).unwrap());
+        })
+        .mean_ns();
+
     print!("{}", b.report());
+
+    let ratios = [
+        ("submit encode", submit_bin_enc / submit_json_enc),
+        ("submit decode", submit_bin_dec / submit_json_dec),
+        ("fids encode", fids_bin_enc / fids_json_enc),
+        ("fids decode", fids_bin_dec / fids_json_dec),
+    ];
+    println!("\nwire/bin cost as a fraction of json:");
+    for (name, r) in &ratios {
+        println!("  {name}: {r:.3}x");
+    }
+
+    // Serialize the trajectory point.
+    let out_path =
+        std::env::var("DQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_wire.json".to_string());
+    let ratio_rows: Vec<Value> =
+        ratios.iter().map(|(n, r)| Value::obj().with("name", *n).with("ratio", *r)).collect();
+    let payload = json::to_string_pretty(
+        &Value::obj()
+            .with("bench", "wire")
+            .with("submit_bytes_json", json_request.len())
+            .with("submit_bytes_bin", bin_request.len())
+            .with("fids_bytes_json", json_fids.len())
+            .with("fids_bytes_bin", bin_fids.len())
+            .with("ratios", ratio_rows),
+    );
+    std::fs::write(&out_path, payload).expect("write BENCH_wire.json");
+    println!("\nwrote {out_path}");
+
+    // Gate: the binary plane must beat JSON by at least 2x on the hot
+    // payloads (ceilings overridable via baseline.json's wire section).
+    let (submit_cap, fids_cap) = wire_ratio_caps();
+    let mut failed = false;
+    for (name, ratio, cap) in [
+        ("submit encode", ratios[0].1, submit_cap),
+        ("submit decode", ratios[1].1, submit_cap),
+        ("fids encode", ratios[2].1, fids_cap),
+        ("fids decode", ratios[3].1, fids_cap),
+    ] {
+        if ratio > cap {
+            eprintln!("wire/bin regression: {name} costs {ratio:.3}x of json (cap {cap})");
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("wire/bin vs json gate OK (submit cap {submit_cap}, fids cap {fids_cap})");
+}
+
+/// Ratio ceilings for the binary-vs-JSON gate, from the committed
+/// baseline's `wire` section when present (default: half the JSON cost).
+fn wire_ratio_caps() -> (f64, f64) {
+    let path = std::env::var("DQ_BENCH_BASELINE")
+        .unwrap_or_else(|_| "../bench/baseline.json".to_string());
+    let caps = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .and_then(|base| {
+            let wire = base.get("wire")?.clone();
+            Some((
+                wire.get("submit_max_ratio").and_then(Value::as_f64)?,
+                wire.get("fids_max_ratio").and_then(Value::as_f64)?,
+            ))
+        });
+    caps.unwrap_or((0.5, 0.5))
 }
 
 /// A stats snapshot with `tenants` retained tenants, all counters and

@@ -4,7 +4,8 @@
 //!   quickstart, benches). Runs the identical manager/scheduler code;
 //!   only the transport differs.
 //! * [`tcp`] — the distributed deployment: the manager's RPC server,
-//!   the manager→worker RPC channel, and the remote client.
+//!   the manager→worker channels (multiplexed binary plane with JSON
+//!   fallback), and the remote client.
 //! * [`proto`] — the typed client↔manager wire messages
 //!   (`SubmitRequest`/`SubmitResponse`, bank-status codecs).
 
@@ -14,4 +15,4 @@ pub mod tcp;
 
 pub use inproc::{InProcCluster, InProcClusterBuilder};
 pub use proto::{SubmitRequest, SubmitResponse};
-pub use tcp::{serve_manager, RemoteClient};
+pub use tcp::{serve_manager, MuxWorkerChannel, RemoteClient};

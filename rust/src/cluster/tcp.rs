@@ -23,7 +23,7 @@
 //! any peer that can reach the manager can wait on, poll, or cancel any
 //! bank. Deploy on a trusted network segment (DESIGN.md §12).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::proto::{self, SubmitRequest, SubmitResponse};
@@ -33,15 +33,45 @@ use crate::coordinator::session::{ClientSession, SessionOps};
 use crate::coordinator::{BankStatus, Manager, WorkerChannel, WorkerProfile};
 use crate::error::DqError;
 use crate::model::exec::{CircuitExecutor, CircuitPair};
-use crate::net::{RpcClient, RpcServer};
-use crate::wire::Value;
+use crate::net::{Mux, MuxConfig, RpcClient, RpcServer};
+use crate::wire::{bin, Value};
 
-/// Manager→worker channel over RPC. Executed on the worker's outbox
-/// dispatcher thread (DESIGN.md §13): the blocking RPC round trip ties
-/// up only this worker's outbox, so a slow or unreachable remote worker
-/// never delays dispatch to its siblings.
+/// Build the per-dispatch job list a worker executes (ids are
+/// per-dispatch ordinals; the manager's bookkeeping stays local).
+fn dispatch_jobs(config: &QuClassiConfig, pairs: &[CircuitPair]) -> Vec<CircuitJob> {
+    pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (thetas, data))| CircuitJob {
+            id: i as u64,
+            client: 0,
+            bank: 0,
+            index: i,
+            config: *config,
+            thetas: thetas.clone(),
+            data: data.clone(),
+        })
+        .collect()
+}
+
+/// Manager→worker channel over JSON RPC — the fallback plane. Executed
+/// on the worker's outbox dispatcher thread (DESIGN.md §13): the
+/// blocking RPC round trip ties up only this worker's outbox, so a slow
+/// or unreachable remote worker never delays dispatch to its siblings.
+///
+/// The connection self-heals: a connection-level failure drops the
+/// socket and redials under capped backoff + jitter (up to 3 attempts
+/// per execute), so a transient network blip or worker restart is not
+/// immediately escalated into a lost worker.
 struct RpcWorkerChannel {
-    client: RpcClient,
+    addr: String,
+    client: Mutex<Option<RpcClient>>,
+}
+
+impl RpcWorkerChannel {
+    fn new(addr: String, client: RpcClient) -> RpcWorkerChannel {
+        RpcWorkerChannel { addr, client: Mutex::new(Some(client)) }
+    }
 }
 
 impl WorkerChannel for RpcWorkerChannel {
@@ -50,30 +80,95 @@ impl WorkerChannel for RpcWorkerChannel {
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<Vec<f32>, DqError> {
-        let circuits: Vec<Value> = pairs
-            .iter()
-            .enumerate()
-            .map(|(i, (thetas, data))| {
-                CircuitJob {
-                    id: i as u64,
-                    client: 0,
-                    bank: 0,
-                    index: i,
-                    config: *config,
-                    thetas: thetas.clone(),
-                    data: data.clone(),
+        let circuits: Vec<Value> =
+            dispatch_jobs(config, pairs).iter().map(CircuitJob::to_wire).collect();
+        let params = Value::obj().with("circuits", circuits);
+        let mut last = DqError::Io(format!("worker {} unreachable", self.addr));
+        for _ in 0..3 {
+            let mut guard = self.client.lock().expect("rpc channel poisoned");
+            if guard.is_none() {
+                // RpcClient::connect retries under capped backoff +
+                // jitter for its whole budget before giving up.
+                match RpcClient::connect(self.addr.as_str(), Duration::from_secs(2)) {
+                    Ok(c) => *guard = Some(c),
+                    Err(e) => {
+                        last = e;
+                        continue;
+                    }
                 }
-                .to_wire()
-            })
-            .collect();
-        let resp = self.client.call("execute", Value::obj().with("circuits", circuits))?;
-        Ok(resp.req_f32_vec("fids")?)
+            }
+            let client = guard.as_ref().expect("client ensured above");
+            match client.call("execute", params.clone()) {
+                Ok(resp) => return Ok(resp.req_f32_vec("fids")?),
+                Err(DqError::Io(msg)) => {
+                    // Connection-level failure: drop the socket, redial.
+                    *guard = None;
+                    last = DqError::Io(msg);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last)
+    }
+}
+
+/// Manager→worker channel over the multiplexed binary plane. Async: the
+/// outbox dispatcher enqueues the request and returns immediately; the
+/// completion arrives on the mux transport threads. A torn-down
+/// connection (idle timeout, peer death) fails in flight and future
+/// requests with [`DqError::WorkerLost`], feeding the existing
+/// requeue/eviction path.
+pub struct MuxWorkerChannel {
+    mux: Arc<Mux>,
+    conn: u64,
+}
+
+impl MuxWorkerChannel {
+    pub fn new(mux: Arc<Mux>, conn: u64) -> MuxWorkerChannel {
+        MuxWorkerChannel { mux, conn }
+    }
+}
+
+impl WorkerChannel for MuxWorkerChannel {
+    fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        let payload = bin::encode_jobs(&dispatch_jobs(config, pairs));
+        let bytes = self.mux.call(self.conn, bin::OP_EXECUTE, payload)?;
+        bin::decode_fids(&bytes)
+    }
+
+    fn is_async(&self) -> bool {
+        true
+    }
+
+    fn execute_async(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+        done: Box<dyn FnOnce(Result<Vec<f32>, DqError>) + Send + 'static>,
+    ) {
+        let payload = bin::encode_jobs(&dispatch_jobs(config, pairs));
+        self.mux.request(
+            self.conn,
+            bin::OP_EXECUTE,
+            payload,
+            Box::new(move |res| done(res.and_then(|bytes| bin::decode_fids(&bytes)))),
+        );
     }
 }
 
 /// Expose a [`Manager`] on a TCP address. Returns the server handle
 /// (drop to stop accepting).
+///
+/// Worker dial-back negotiates the binary plane first: one shared
+/// [`Mux`] (created lazily on the first registration) multiplexes every
+/// worker that speaks it; a worker whose handshake fails — an old
+/// JSON-only build — gets the classic [`RpcClient`] channel instead.
 pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServer> {
+    let mux: Mutex<Option<Arc<Mux>>> = Mutex::new(None);
     let handler = move |op: &str, params: &Value| -> Result<Value, DqError> {
         match op {
             "register" => {
@@ -83,12 +178,26 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
                 // Optional thread budget (older workers omit it): sizes
                 // dispatch batches to the worker's real parallelism.
                 let threads = params.get("threads").and_then(Value::as_usize).unwrap_or(1);
-                let rpc = RpcClient::connect(addr.as_str(), Duration::from_secs(5))
-                    .map_err(|e| DqError::Io(format!("dial worker back: {e}")))?;
-                let id = manager.register(
-                    WorkerProfile::new(max_qubits).cru(cru).threads(threads),
-                    Arc::new(RpcWorkerChannel { client: rpc }),
-                );
+                let m = {
+                    let mut slot = mux.lock().expect("mux slot poisoned");
+                    slot.get_or_insert_with(|| Mux::new(MuxConfig::default())).clone()
+                };
+                let channel: Arc<dyn WorkerChannel> = match m.connect(addr.as_str()) {
+                    Ok(conn) => Arc::new(MuxWorkerChannel::new(m, conn.id)),
+                    Err(e) => {
+                        // JSON fallback: the worker predates the binary
+                        // plane (or refused the handshake).
+                        crate::log_info!(
+                            "cluster",
+                            "worker at {addr} falls back to JSON ({e})"
+                        );
+                        let rpc = RpcClient::connect(addr.as_str(), Duration::from_secs(5))
+                            .map_err(|e| DqError::Io(format!("dial worker back: {e}")))?;
+                        Arc::new(RpcWorkerChannel::new(addr, rpc))
+                    }
+                };
+                let id = manager
+                    .register(WorkerProfile::new(max_qubits).cru(cru).threads(threads), channel);
                 Ok(Value::obj().with("worker_id", id))
             }
             "heartbeat" => {

@@ -58,6 +58,28 @@ pub trait WorkerChannel: Send + Sync {
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<Vec<f32>, DqError>;
+
+    /// Does this channel complete asynchronously? `true` lets an outbox
+    /// dispatcher enqueue-and-notify through
+    /// [`WorkerChannel::execute_async`] instead of parking a transient
+    /// execution thread per in-flight batch (the mux plane).
+    fn is_async(&self) -> bool {
+        false
+    }
+
+    /// Asynchronous execute: `done` is invoked exactly once with the
+    /// outcome, possibly on a transport thread. The default adapts the
+    /// blocking [`WorkerChannel::execute`] inline, so synchronous
+    /// channels implement nothing — callers must consult
+    /// [`WorkerChannel::is_async`] before relying on a prompt return.
+    fn execute_async(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+        done: Box<dyn FnOnce(Result<Vec<f32>, DqError>) + Send + 'static>,
+    ) {
+        done(self.execute(config, pairs));
+    }
 }
 
 /// Manager tuning knobs.
@@ -450,23 +472,46 @@ impl Manager {
         self.inner.journal.is_some()
     }
 
+    /// Leader fsyncs issued by the journal's group committer so far
+    /// (`None` without a journal). Under `SyncPolicy::Always` with
+    /// concurrent submitters this sits well below the append count —
+    /// the amortization gauge the coordinator-scale bench reports.
+    pub fn journal_syncs(&self) -> Option<u64> {
+        self.inner.journal.as_ref().map(|j| j.lock().unwrap().sync_count())
+    }
+
     /// Best-effort journal append for paths that must not fail the
     /// operation they ride on (dispatch, completion, requeue): an I/O
     /// error degrades durability, not availability, and is logged.
+    ///
+    /// Two-phase under `SyncPolicy::Always`: the record is written under
+    /// the journal mutex, but the fsync happens *after* the mutex drops
+    /// — concurrent appenders coalesce onto one group commit instead of
+    /// serializing their fsyncs (DESIGN.md §16).
     fn journal_append(&self, rec: Record) {
         if let Some(j) = &self.inner.journal {
-            if let Err(e) = j.lock().unwrap().append(&rec) {
-                crate::log_warn!("manager", "journal append failed: {e}");
+            match j.lock().unwrap().append_async(&rec) {
+                Ok(None) => {}
+                Ok(Some(ticket)) => {
+                    if let Err(e) = ticket.commit() {
+                        crate::log_warn!("manager", "journal commit failed: {e}");
+                    }
+                }
+                Err(e) => crate::log_warn!("manager", "journal append failed: {e}"),
             }
         }
     }
 
     /// Journal append for the submit path, where an append failure must
     /// reject the submission — accepting a bank the journal never saw
-    /// would silently drop it at the next recovery.
+    /// would silently drop it at the next recovery. Same two-phase
+    /// group-commit discipline as [`Manager::journal_append`].
     fn try_journal_append(&self, rec: Record) -> Result<(), DqError> {
         if let Some(j) = &self.inner.journal {
-            j.lock().unwrap().append(&rec)?;
+            let ticket = j.lock().unwrap().append_async(&rec)?;
+            if let Some(t) = ticket {
+                t.commit()?;
+            }
         }
         Ok(())
     }
@@ -1325,6 +1370,20 @@ impl Manager {
     /// payloads into a protocol failure, transport errors into a
     /// re-queue.
     pub(crate) fn run_batch(&self, worker: WorkerId, channel: &dyn WorkerChannel, batch: Batch) {
+        let (config, jobs, pairs) = self.begin_batch(batch);
+        let res = channel.execute(&config, &pairs);
+        self.finish_batch(worker, jobs, res);
+    }
+
+    /// First half of [`Manager::run_batch`]: WAL the dispatch, account
+    /// dispatch/queue-wait stats, and build the wire payload. Split out
+    /// so an async channel (the mux plane) can run the channel call
+    /// enqueue-and-notify and feed the eventual outcome back through
+    /// [`Manager::finish_batch`] from a transport thread.
+    pub(crate) fn begin_batch(
+        &self,
+        batch: Batch,
+    ) -> (QuClassiConfig, Vec<CircuitJob>, Vec<CircuitPair>) {
         let Batch { config, jobs, enqueued } = batch;
         // WAL: the Dispatched record precedes the channel call, so "no
         // Dispatched record in the journal" implies "this circuit never
@@ -1357,7 +1416,19 @@ impl Manager {
         }
         let pairs: Vec<CircuitPair> =
             jobs.iter().map(|j| (j.thetas.clone(), j.data.clone())).collect();
-        match channel.execute(&config, &pairs) {
+        (config, jobs, pairs)
+    }
+
+    /// Second half of [`Manager::run_batch`]: route one channel outcome
+    /// for a batch that went through [`Manager::begin_batch`]. Runs on
+    /// whatever thread the channel completes on.
+    pub(crate) fn finish_batch(
+        &self,
+        worker: WorkerId,
+        jobs: Vec<CircuitJob>,
+        res: Result<Vec<f32>, DqError>,
+    ) {
+        match res {
             Ok(fids) if fids.len() != jobs.len() => {
                 // A short/overlong fids payload is a protocol violation:
                 // the per-circuit mapping is unknown, so fail every bank

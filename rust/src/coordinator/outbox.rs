@@ -182,11 +182,39 @@ impl Outbox {
         self.stop.load(Ordering::Relaxed) || manager.is_stopped()
     }
 
-    /// Hand one batch to the worker channel on a transient execution
-    /// thread. The caller must already have charged a channel slot
-    /// (`in_channel`); the thread releases it and re-wakes the
-    /// dispatcher when the channel returns.
+    /// Hand one batch to the worker channel. The caller must already
+    /// have charged a channel slot (`in_channel`); the completion
+    /// releases it and re-wakes the dispatcher.
+    ///
+    /// An async channel (the mux plane) is enqueue-and-notify: the
+    /// dispatch bookkeeping runs here on the dispatcher thread, the
+    /// channel call returns immediately, and the completion callback —
+    /// arriving on a mux transport thread — routes the outcome. A
+    /// blocking channel gets the historical behavior: a transient
+    /// execution thread parks on the call for its whole round trip.
     fn execute(me: &Arc<Outbox>, manager: &Manager, batch: Batch) {
+        if me.channel.is_async() {
+            let (config, jobs, pairs) = manager.begin_batch(batch);
+            let me2 = me.clone();
+            let weak = manager.downgrade();
+            let worker = me.worker;
+            me.channel.execute_async(
+                &config,
+                &pairs,
+                Box::new(move |res| {
+                    // A failed upgrade means the manager is gone
+                    // (shutdown); the outcome has nowhere to land.
+                    if let Some(m) = weak.upgrade() {
+                        m.finish_batch(worker, jobs, res);
+                    }
+                    let mut st = me2.state.lock().expect("outbox poisoned");
+                    st.in_channel -= 1;
+                    drop(st);
+                    me2.cv.notify_all();
+                }),
+            );
+            return;
+        }
         let me = me.clone();
         let m = manager.clone();
         std::thread::Builder::new()

@@ -1,0 +1,155 @@
+//! Capped exponential backoff with deterministic jitter.
+//!
+//! Transient network blips (a worker restarting, a listener backlog
+//! burst) used to surface immediately as [`DqError::Io`] from
+//! `RpcClient::connect` — one refused `connect(2)` and the dial failed.
+//! Every reconnecting call site now retries through [`retry`]: delays
+//! grow `base·2ⁿ` up to `cap`, and each delay is jittered into
+//! `[50%, 100%]` of its nominal value so a fleet of workers restarting
+//! together doesn't reconnect in lockstep (the thundering-herd rule).
+//!
+//! Jitter is driven by the crate's own [`Rng`] (std-only, no `rand`
+//! dependency), seeded per call site from a process-global counter —
+//! deterministic enough to test, distinct enough to decorrelate.
+//!
+//! [`DqError::Io`]: crate::error::DqError::Io
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::util::Rng;
+
+/// Capped exponential backoff schedule with multiplicative jitter.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// A schedule starting at `base`, doubling per attempt, capped at
+    /// `cap`. `seed` drives the jitter stream (see [`auto_seed`]).
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff { base, cap, attempt: 0, rng: Rng::new(seed) }
+    }
+
+    /// The next delay to sleep: `min(cap, base·2ⁿ)` jittered into
+    /// `[50%, 100%]`. Advances the attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        // 2^16 * any sane base already exceeds any sane cap; clamping the
+        // exponent keeps the shift well-defined without saturating math.
+        let nominal = self.base.saturating_mul(1u32 << self.attempt.min(16)).min(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        nominal.mul_f64(0.5 + 0.5 * self.rng.f64())
+    }
+
+    /// Restart the schedule (e.g. after a successful reconnect).
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// A fresh jitter seed: a process-global Weyl sequence, so concurrent
+/// dialers get decorrelated jitter without any shared clock or `rand`.
+pub fn auto_seed() -> u64 {
+    static SEED: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+    SEED.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
+}
+
+/// Retry `op` under a capped exponential backoff until it succeeds or
+/// `timeout` elapses; the last error is returned. The first attempt is
+/// immediate; sleeps never overshoot the deadline.
+pub fn retry<T, E>(
+    timeout: Duration,
+    base: Duration,
+    cap: Duration,
+    mut op: impl FnMut() -> Result<T, E>,
+) -> Result<T, E> {
+    let deadline = Instant::now() + timeout;
+    let mut backoff = Backoff::new(base, cap, auto_seed());
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff.next_delay().min(deadline - now));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_grow_then_cap() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(100), 7);
+        let mut prev_nominal_hit_cap = false;
+        for i in 0..12 {
+            let d = b.next_delay();
+            // jitter keeps every delay inside [50%, 100%] of the nominal
+            let nominal = Duration::from_millis(10)
+                .saturating_mul(1u32 << i.min(16))
+                .min(Duration::from_millis(100));
+            assert!(d <= nominal, "delay {d:?} above nominal {nominal:?}");
+            assert!(d >= nominal.mul_f64(0.5), "delay {d:?} under half of {nominal:?}");
+            prev_nominal_hit_cap |= nominal == Duration::from_millis(100);
+        }
+        assert!(prev_nominal_hit_cap, "schedule never reached its cap");
+    }
+
+    #[test]
+    fn jitter_streams_differ_across_seeds() {
+        let mut a = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 1);
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 2);
+        let differs = (0..8).any(|_| a.next_delay() != b.next_delay());
+        assert!(differs, "two seeds produced identical jitter streams");
+    }
+
+    #[test]
+    fn reset_restarts_the_schedule() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_secs(10), 3);
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        b.reset();
+        assert!(b.next_delay() <= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn retry_returns_first_success() {
+        let mut calls = 0;
+        let out: Result<u32, &str> = retry(
+            Duration::from_secs(5),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            || {
+                calls += 1;
+                if calls < 3 {
+                    Err("not yet")
+                } else {
+                    Ok(42)
+                }
+            },
+        );
+        assert_eq!(out, Ok(42));
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn retry_surfaces_last_error_at_deadline() {
+        let out: Result<(), String> = retry(
+            Duration::from_millis(5),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            || Err("still down".to_string()),
+        );
+        assert_eq!(out, Err("still down".to_string()));
+    }
+}

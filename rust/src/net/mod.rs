@@ -1,11 +1,20 @@
-//! RPC substrate: framed JSON over TCP (the paper used RPyC).
+//! RPC substrate: framed JSON over TCP (the paper used RPyC), plus the
+//! async multiplexed binary plane layered next to it.
 //!
 //! * [`frame`] — length-prefixed framing over any `Read + Write` stream.
 //! * [`rpc`] — request/response server and client on top of frames, plus
 //!   an in-process channel transport so tests and the `--in-proc` mode
 //!   run the identical protocol without sockets.
+//! * [`mux`] — the readiness-loop multiplexer: one event-loop thread
+//!   owns every worker socket, correlation-id frames keep hundreds of
+//!   RPCs in flight without parked threads (DESIGN.md §17).
+//! * [`backoff`] — capped exponential backoff + jitter for every
+//!   reconnecting dialer.
 
+pub mod backoff;
 pub mod frame;
+pub mod mux;
 pub mod rpc;
 
+pub use mux::{Mux, MuxConfig, MuxServer, MuxService};
 pub use rpc::{InProcHub, RpcClient, RpcHandler, RpcServer};

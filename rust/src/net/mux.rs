@@ -1,0 +1,1002 @@
+//! `net/mux` — the async multiplexed cluster plane (DESIGN.md §17).
+//!
+//! One event-loop thread owns every worker socket in nonblocking mode
+//! and multiplexes hundreds of in-flight RPCs over them; completions
+//! run on one dedicated runner thread. Compare the JSON plane
+//! (`net/rpc`), which parks one OS thread per in-flight call.
+//!
+//! **Readiness model (why std-only works).** The crate is
+//! dependency-free, so there is no `epoll`/`kqueue`. Instead the loop
+//! does a nonblocking readiness *scan*: each iteration drains the
+//! command queue, then for every connection flushes as much of the
+//! write queue as the socket accepts, reads whatever bytes are
+//! available, and parses complete frames out of the per-connection
+//! buffer. When an iteration makes no progress the loop parks on a
+//! condvar for 1 ms (command submitters notify it), so an idle plane
+//! costs ~1k wakeups/s on one thread — and a busy plane never sleeps.
+//!
+//! **Correlation ids.** Requests are tagged with a per-connection
+//! monotonically increasing correlation id; responses echo it. That is
+//! the whole multiplexing trick: any number of requests can be in
+//! flight per socket, and responses may arrive in any order.
+//!
+//! **Frame layout** (after the handshake, both directions):
+//!
+//! ```text
+//! [u32 body_len LE][u32 crc32 LE][body]
+//! body := kind:u8, corr:varint, (op:varint if kind==REQ), payload...
+//! kind := 0 REQ | 1 OK | 2 ERR | 3 PING | 4 PONG
+//! ```
+//!
+//! The crc32 (same polynomial as the journal) makes corruption —
+//! including single-bit flips — a deterministic connection-fatal
+//! `Protocol` error instead of a misparse.
+//!
+//! **Handshake / version negotiation.** A connecting peer sends
+//! `b"DQMX"` + version + feature bits; the server echoes the same
+//! shape and both sides speak `min(version)` with the feature
+//! intersection. The magic doubles as the downgrade detector: an old
+//! JSON-only server reads `b"DQMX"` as a big-endian frame length
+//! (≈1.1 GB > `MAX_FRAME`) and closes, the dialer sees EOF instead of
+//! a hello, and falls back to the JSON channel — old workers interop
+//! without any out-of-band capability registry. Symmetrically, the
+//! upgraded JSON server (`RpcServer::serve_bin`) sniffs the first four
+//! bytes of each accepted connection and routes magic to a binary
+//! session, anything else to the JSON loop.
+//!
+//! **Backpressure.** Each connection has a bounded write queue and a
+//! bounded pending-request map; a request that would exceed either
+//! fails *immediately* with `DqError::Io("mux backpressure…")` rather
+//! than queueing unboundedly — the co-Manager's outbox requeues the
+//! batch, which is exactly the load-shedding path it already has.
+//!
+//! **Liveness.** The loop pings a quiet connection every
+//! `ping_interval`; a connection silent past `idle_timeout` is torn
+//! down and every pending request on it fails `WorkerLost` — the same
+//! error the heartbeat evictor produces, so the manager's existing
+//! requeue/eviction path absorbs transport death with no new states.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::backoff;
+use super::frame::MAX_FRAME;
+use crate::coordinator::journal::crc32;
+use crate::error::DqError;
+use crate::wire::bin;
+
+/// Connection-hello magic. Chosen so a legacy JSON peer reads it as an
+/// oversized big-endian frame length and closes (see module docs).
+pub const MAGIC: [u8; 4] = *b"DQMX";
+
+/// Frame kinds.
+pub const KIND_REQ: u8 = 0;
+pub const KIND_OK: u8 = 1;
+pub const KIND_ERR: u8 = 2;
+pub const KIND_PING: u8 = 3;
+pub const KIND_PONG: u8 = 4;
+
+/// A binary-plane request handler: interned op id and raw payload in,
+/// raw payload (or typed error) out. The worker service and test parks
+/// implement this; `wire::bin` owns the payload codecs.
+pub trait MuxService: Send + Sync + 'static {
+    fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError>;
+}
+
+impl<F> MuxService for F
+where
+    F: Fn(u32, &[u8]) -> Result<Vec<u8>, DqError> + Send + Sync + 'static,
+{
+    fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError> {
+        self(op, payload)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transport-thread gauge
+// ---------------------------------------------------------------------------
+
+static TRANSPORT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many mux transport threads (event loops, completion runners,
+/// server parks) are alive right now, process-wide. The 256-worker
+/// soak bench asserts this stays ≤ 3 — the whole point of the plane.
+pub fn transport_thread_count() -> usize {
+    TRANSPORT_THREADS.load(Ordering::SeqCst)
+}
+
+struct TransportGuard;
+
+impl TransportGuard {
+    fn enter() -> TransportGuard {
+        TRANSPORT_THREADS.fetch_add(1, Ordering::SeqCst);
+        TransportGuard
+    }
+}
+
+impl Drop for TransportGuard {
+    fn drop(&mut self) {
+        TRANSPORT_THREADS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------------
+
+/// One parsed mux frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: u8,
+    pub corr: u64,
+    /// Interned op id; meaningful only for `KIND_REQ`.
+    pub op: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Encode one frame (checksummed, length-prefixed).
+pub fn encode_frame(kind: u8, corr: u64, op: u32, payload: &[u8]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(payload.len() + 12);
+    body.push(kind);
+    bin::put_varint(&mut body, corr);
+    if kind == KIND_REQ {
+        bin::put_varint(&mut body, u64::from(op));
+    }
+    body.extend_from_slice(payload);
+    let mut frame = Vec::with_capacity(body.len() + 8);
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&crc32(&body).to_le_bytes());
+    frame.extend_from_slice(&body);
+    frame
+}
+
+fn parse_body(body: &[u8]) -> Result<Frame, DqError> {
+    let mut c = bin::Cur::new(body);
+    let kind = c.take(1)?[0];
+    if kind > KIND_PONG {
+        return Err(DqError::Protocol(format!("mux: unknown frame kind {kind}")));
+    }
+    let corr = c.take_varint()?;
+    let op = if kind == KIND_REQ {
+        u32::try_from(c.take_varint()?)
+            .map_err(|_| DqError::Protocol("mux: op id exceeds u32".into()))?
+    } else {
+        0
+    };
+    let n = c.remaining();
+    let payload = c.take(n)?.to_vec();
+    Ok(Frame { kind, corr, op, payload })
+}
+
+/// Try to split one frame off the front of a receive buffer.
+/// `Ok(None)` means "need more bytes"; any structural violation
+/// (oversized length, checksum mismatch, bad body) is connection-fatal.
+pub fn take_frame(buf: &mut Vec<u8>) -> Result<Option<Frame>, DqError> {
+    if buf.len() < 8 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if len > MAX_FRAME {
+        return Err(DqError::Protocol(format!("mux: frame of {len} bytes exceeds cap")));
+    }
+    let total = 8 + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let crc = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    let frame = {
+        let body = &buf[8..total];
+        if crc32(body) != crc {
+            return Err(DqError::Protocol("mux: frame checksum mismatch".into()));
+        }
+        parse_body(body)?
+    };
+    buf.drain(..total);
+    Ok(Some(frame))
+}
+
+fn hello() -> [u8; 6] {
+    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], bin::BIN_VERSION, bin::FEAT_BIN_EXECUTE]
+}
+
+/// Outcome of the connect handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Negotiated {
+    /// `min(our version, peer version)`; never 0 on success.
+    pub version: u8,
+    /// Intersection of the feature bit sets.
+    pub features: u8,
+}
+
+fn negotiate(peer_version: u8, peer_features: u8) -> Result<Negotiated, DqError> {
+    let version = peer_version.min(bin::BIN_VERSION);
+    if version == 0 {
+        return Err(DqError::Protocol("mux: peer negotiated version 0".into()));
+    }
+    Ok(Negotiated { version, features: peer_features & bin::FEAT_BIN_EXECUTE })
+}
+
+/// Run the dialing side of the handshake on a blocking stream. An EOF
+/// here is the legacy-JSON-server signature (it read our magic as an
+/// oversized frame and closed) — callers treat any error as "fall back
+/// to the JSON channel".
+pub fn client_handshake(stream: &mut TcpStream, timeout: Duration) -> Result<Negotiated, DqError> {
+    stream.set_read_timeout(Some(timeout))?;
+    stream.write_all(&hello())?;
+    stream.flush()?;
+    let mut reply = [0u8; 6];
+    stream.read_exact(&mut reply).map_err(|e| {
+        DqError::Io(format!("mux handshake got no hello (JSON-only peer?): {e}"))
+    })?;
+    if reply[..4] != MAGIC {
+        return Err(DqError::Protocol("mux: bad handshake magic from peer".into()));
+    }
+    let negotiated = negotiate(reply[4], reply[5])?;
+    stream.set_read_timeout(None)?;
+    Ok(negotiated)
+}
+
+// ---------------------------------------------------------------------------
+// poll-tolerant exact reads (shared with net/rpc's sniffing loop)
+// ---------------------------------------------------------------------------
+
+/// Outcome of [`poll_read_exact`].
+pub(crate) enum PollRead {
+    /// Buffer fully read.
+    Done,
+    /// Clean EOF before the first byte.
+    Eof,
+    /// The stop flag was raised while waiting.
+    Stopped,
+}
+
+/// Read exactly `buf.len()` bytes, tolerating read-timeout polls
+/// (`WouldBlock`/`TimedOut`) without losing partial data — unlike
+/// `read_exact`, whose buffer state is unspecified on error. EOF after
+/// partial data is an error (a torn frame), EOF at offset 0 is clean.
+pub(crate) fn poll_read_exact(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> std::io::Result<PollRead> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(PollRead::Stopped);
+        }
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(PollRead::Eof),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside a frame",
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(PollRead::Done)
+}
+
+/// Serve one *binary* session on a thread-per-connection server
+/// (`RpcServer::serve_bin` routes here after sniffing the magic, which
+/// has already been consumed). Requests dispatch inline; malformed
+/// frames close the connection.
+pub(crate) fn serve_bin_connection(
+    mut reader: BufReader<TcpStream>,
+    mut writer: BufWriter<TcpStream>,
+    service: Arc<dyn MuxService>,
+    stop: Arc<AtomicBool>,
+) {
+    // Finish the handshake: 2 bytes of version+features follow the magic.
+    let mut rest = [0u8; 2];
+    if !matches!(poll_read_exact(&mut reader, &mut rest, &stop), Ok(PollRead::Done)) {
+        return;
+    }
+    if negotiate(rest[0], rest[1]).is_err() {
+        return;
+    }
+    if writer.write_all(&hello()).and_then(|_| writer.flush()).is_err() {
+        return;
+    }
+    while !stop.load(Ordering::Relaxed) {
+        let mut header = [0u8; 8];
+        if !matches!(poll_read_exact(&mut reader, &mut header, &stop), Ok(PollRead::Done)) {
+            return;
+        }
+        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+        let crc = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+        if len > MAX_FRAME {
+            return;
+        }
+        let mut body = vec![0u8; len as usize];
+        if !matches!(poll_read_exact(&mut reader, &mut body, &stop), Ok(PollRead::Done)) {
+            return;
+        }
+        if crc32(&body) != crc {
+            return;
+        }
+        let frame = match parse_body(&body) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let out = match frame.kind {
+            KIND_PING => encode_frame(KIND_PONG, frame.corr, 0, &[]),
+            KIND_REQ => match service.handle(frame.op, &frame.payload) {
+                Ok(p) => encode_frame(KIND_OK, frame.corr, 0, &p),
+                Err(e) => encode_frame(KIND_ERR, frame.corr, 0, &bin::encode_error(&e)),
+            },
+            _ => return, // only a dialer sends OK/ERR/PONG
+        };
+        if writer.write_all(&out).and_then(|_| writer.flush()).is_err() {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the multiplexer (dialing side: the co-Manager)
+// ---------------------------------------------------------------------------
+
+/// Tuning knobs for a [`Mux`].
+#[derive(Debug, Clone)]
+pub struct MuxConfig {
+    /// Ping a connection with no inbound traffic for this long.
+    pub ping_interval: Duration,
+    /// Tear a connection down (failing its pending requests
+    /// `WorkerLost`) after this long without any inbound traffic.
+    pub idle_timeout: Duration,
+    /// Per-connection cap on in-flight requests (backpressure).
+    pub max_inflight: usize,
+    /// Per-connection cap on queued unwritten bytes (backpressure).
+    pub write_high_water: usize,
+    /// Dial budget: TCP connect retries (capped backoff) + handshake.
+    pub connect_timeout: Duration,
+}
+
+impl Default for MuxConfig {
+    fn default() -> MuxConfig {
+        MuxConfig {
+            ping_interval: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(60),
+            max_inflight: 1024,
+            write_high_water: 8 << 20,
+            connect_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A connection handle returned by [`Mux::connect`].
+#[derive(Debug, Clone, Copy)]
+pub struct MuxConn {
+    pub id: u64,
+    pub negotiated: Negotiated,
+}
+
+type Callback = Box<dyn FnOnce(Result<Vec<u8>, DqError>) + Send + 'static>;
+
+struct Completion {
+    cb: Callback,
+    res: Result<Vec<u8>, DqError>,
+}
+
+enum Cmd {
+    Register { id: u64, stream: TcpStream },
+    Request { conn: u64, op: u32, payload: Vec<u8>, done: Callback },
+}
+
+struct Shared {
+    cmds: Mutex<Vec<Cmd>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    /// Connections the loop has torn down: requests fail fast.
+    dead: Mutex<std::collections::HashSet<u64>>,
+}
+
+/// The multiplexer: two threads total (event loop + completion runner)
+/// regardless of connection or in-flight-request count.
+pub struct Mux {
+    shared: Arc<Shared>,
+    cfg: MuxConfig,
+    next_conn: AtomicU64,
+    loop_thread: Mutex<Option<JoinHandle<()>>>,
+    runner_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Mux {
+    /// Spawn the event-loop and completion-runner threads.
+    pub fn new(cfg: MuxConfig) -> Arc<Mux> {
+        let shared = Arc::new(Shared {
+            cmds: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            dead: Mutex::new(std::collections::HashSet::new()),
+        });
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let shared2 = shared.clone();
+        let cfg2 = cfg.clone();
+        let loop_thread = std::thread::Builder::new()
+            .name("mux-loop".into())
+            .spawn(move || run_event_loop(shared2, cfg2, done_tx))
+            .expect("spawn mux-loop");
+        let runner_thread = std::thread::Builder::new()
+            .name("mux-done".into())
+            .spawn(move || {
+                let _gauge = TransportGuard::enter();
+                while let Ok(c) = done_rx.recv() {
+                    (c.cb)(c.res);
+                }
+            })
+            .expect("spawn mux-done");
+        Arc::new(Mux {
+            shared,
+            cfg,
+            next_conn: AtomicU64::new(1),
+            loop_thread: Mutex::new(Some(loop_thread)),
+            runner_thread: Mutex::new(Some(runner_thread)),
+        })
+    }
+
+    /// Dial a peer (TCP connect under capped backoff + jitter, then the
+    /// version handshake) and hand the socket to the event loop. Errors
+    /// mean "this peer does not speak mux" — callers fall back to JSON.
+    pub fn connect<A: ToSocketAddrs + Clone>(&self, addr: A) -> Result<MuxConn, DqError> {
+        if self.shared.stop.load(Ordering::Relaxed) {
+            return Err(DqError::Cancelled("mux is shut down".into()));
+        }
+        let mut stream = backoff::retry(
+            self.cfg.connect_timeout,
+            Duration::from_millis(10),
+            Duration::from_millis(500),
+            || TcpStream::connect(addr.clone()),
+        )
+        .map_err(|e| DqError::Io(format!("mux connect failed: {e}")))?;
+        stream.set_nodelay(true).map_err(|e| DqError::Io(e.to_string()))?;
+        let negotiated = client_handshake(&mut stream, self.cfg.connect_timeout)?;
+        stream.set_nonblocking(true).map_err(|e| DqError::Io(e.to_string()))?;
+        let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+        self.push(Cmd::Register { id, stream });
+        Ok(MuxConn { id, negotiated })
+    }
+
+    /// Enqueue-and-notify: hand a request to the event loop; `done`
+    /// runs on the completion-runner thread (or inline, if the plane is
+    /// already stopped). Never blocks on the network.
+    pub fn request(&self, conn: u64, op: u32, payload: Vec<u8>, done: Callback) {
+        if self.shared.stop.load(Ordering::Relaxed) {
+            done(Err(DqError::Cancelled("mux is shut down".into())));
+            return;
+        }
+        if self.is_dead(conn) {
+            done(Err(DqError::WorkerLost(format!("mux connection {conn} is closed"))));
+            return;
+        }
+        self.push(Cmd::Request { conn, op, payload, done });
+    }
+
+    /// Blocking convenience over [`Mux::request`].
+    pub fn call(&self, conn: u64, op: u32, payload: Vec<u8>) -> Result<Vec<u8>, DqError> {
+        let (tx, rx) = mpsc::channel();
+        self.request(
+            conn,
+            op,
+            payload,
+            Box::new(move |res| {
+                let _ = tx.send(res);
+            }),
+        );
+        rx.recv().unwrap_or_else(|_| Err(DqError::Cancelled("mux is shut down".into())))
+    }
+
+    /// Has the event loop torn this connection down?
+    pub fn is_dead(&self, conn: u64) -> bool {
+        self.shared.dead.lock().expect("mux dead set poisoned").contains(&conn)
+    }
+
+    /// Stop both threads, failing every pending request `Cancelled`.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(t) = self.loop_thread.lock().expect("mux join poisoned").take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.runner_thread.lock().expect("mux join poisoned").take() {
+            let _ = t.join();
+        }
+    }
+
+    fn push(&self, cmd: Cmd) {
+        self.shared.cmds.lock().expect("mux cmd queue poisoned").push(cmd);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for Mux {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    woff: usize,
+    pending: HashMap<u64, Callback>,
+    next_corr: u64,
+    last_rx: Instant,
+    last_ping: Instant,
+}
+
+impl Conn {
+    fn queued_bytes(&self) -> usize {
+        self.wbuf.len() - self.woff
+    }
+}
+
+fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Completion>) {
+    let _gauge = TransportGuard::enter();
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut progress = true;
+    let complete = |cb: Callback, res: Result<Vec<u8>, DqError>| {
+        let _ = done.send(Completion { cb, res });
+    };
+    loop {
+        // Drain commands; park 1 ms only when the last scan was idle.
+        let cmds: Vec<Cmd> = {
+            let mut q = shared.cmds.lock().expect("mux cmd queue poisoned");
+            if q.is_empty() && !progress && !shared.stop.load(Ordering::Relaxed) {
+                q = shared.cv.wait_timeout(q, Duration::from_millis(1)).expect("mux cv").0;
+            }
+            std::mem::take(&mut *q)
+        };
+        if shared.stop.load(Ordering::Relaxed) {
+            for (_, conn) in conns.drain() {
+                for (_, cb) in conn.pending {
+                    complete(cb, Err(DqError::Cancelled("mux is shut down".into())));
+                }
+            }
+            for cmd in cmds {
+                if let Cmd::Request { done: cb, .. } = cmd {
+                    complete(cb, Err(DqError::Cancelled("mux is shut down".into())));
+                }
+            }
+            return;
+        }
+        progress = false;
+        let now = Instant::now();
+        for cmd in cmds {
+            progress = true;
+            match cmd {
+                Cmd::Register { id, stream } => {
+                    conns.insert(
+                        id,
+                        Conn {
+                            stream,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            woff: 0,
+                            pending: HashMap::new(),
+                            next_corr: 1,
+                            last_rx: now,
+                            last_ping: now,
+                        },
+                    );
+                }
+                Cmd::Request { conn, op, payload, done: cb } => match conns.get_mut(&conn) {
+                    None => complete(
+                        cb,
+                        Err(DqError::WorkerLost(format!("mux connection {conn} is closed"))),
+                    ),
+                    Some(c) if c.pending.len() >= cfg.max_inflight => complete(
+                        cb,
+                        Err(DqError::Io(format!(
+                            "mux backpressure: {} requests in flight on connection {conn}",
+                            c.pending.len()
+                        ))),
+                    ),
+                    Some(c) if c.queued_bytes() > cfg.write_high_water => complete(
+                        cb,
+                        Err(DqError::Io(format!(
+                            "mux backpressure: {} bytes queued on connection {conn}",
+                            c.queued_bytes()
+                        ))),
+                    ),
+                    Some(c) => {
+                        let corr = c.next_corr;
+                        c.next_corr += 1;
+                        c.pending.insert(corr, cb);
+                        c.wbuf.extend_from_slice(&encode_frame(KIND_REQ, corr, op, &payload));
+                    }
+                },
+            }
+        }
+        let mut doomed: Vec<(u64, DqError)> = Vec::new();
+        for (&id, conn) in conns.iter_mut() {
+            // 1. flush the write queue as far as the socket accepts
+            while conn.woff < conn.wbuf.len() {
+                match conn.stream.write(&conn.wbuf[conn.woff..]) {
+                    Ok(0) => {
+                        doomed.push((id, DqError::WorkerLost("mux write end closed".into())));
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.woff += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        doomed.push((id, DqError::WorkerLost(format!("mux write failed: {e}"))));
+                        break;
+                    }
+                }
+            }
+            if conn.woff == conn.wbuf.len() {
+                conn.wbuf.clear();
+                conn.woff = 0;
+            } else if conn.woff > 64 * 1024 {
+                conn.wbuf.drain(..conn.woff);
+                conn.woff = 0;
+            }
+            if doomed.last().is_some_and(|(d, _)| *d == id) {
+                continue;
+            }
+            // 2. read whatever is available
+            loop {
+                match conn.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        doomed.push((id, DqError::WorkerLost("mux peer closed".into())));
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&scratch[..n]);
+                        conn.last_rx = now;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        doomed.push((id, DqError::WorkerLost(format!("mux read failed: {e}"))));
+                        break;
+                    }
+                }
+            }
+            if doomed.last().is_some_and(|(d, _)| *d == id) {
+                continue;
+            }
+            // 3. complete whole frames
+            loop {
+                match take_frame(&mut conn.rbuf) {
+                    Ok(None) => break,
+                    Ok(Some(f)) => match f.kind {
+                        KIND_OK => {
+                            if let Some(cb) = conn.pending.remove(&f.corr) {
+                                complete(cb, Ok(f.payload));
+                            }
+                        }
+                        KIND_ERR => {
+                            if let Some(cb) = conn.pending.remove(&f.corr) {
+                                let e = bin::decode_error(&f.payload).unwrap_or_else(|e| e);
+                                complete(cb, Err(e));
+                            }
+                        }
+                        KIND_PONG => {}
+                        _ => {
+                            doomed.push((
+                                id,
+                                DqError::Protocol(format!(
+                                    "mux: unexpected frame kind {} from responder",
+                                    f.kind
+                                )),
+                            ));
+                            break;
+                        }
+                    },
+                    Err(e) => {
+                        doomed.push((id, e));
+                        break;
+                    }
+                }
+            }
+            if doomed.last().is_some_and(|(d, _)| *d == id) {
+                continue;
+            }
+            // 4. liveness: ping quiet peers, doom silent ones
+            let quiet = now.saturating_duration_since(conn.last_rx);
+            if quiet > cfg.idle_timeout {
+                doomed.push((
+                    id,
+                    DqError::WorkerLost(format!(
+                        "mux idle timeout: no traffic for {:.1}s",
+                        quiet.as_secs_f64()
+                    )),
+                ));
+            } else if quiet >= cfg.ping_interval
+                && now.saturating_duration_since(conn.last_ping) >= cfg.ping_interval
+            {
+                conn.wbuf.extend_from_slice(&encode_frame(KIND_PING, 0, 0, &[]));
+                conn.last_ping = now;
+            }
+        }
+        for (id, err) in doomed {
+            if let Some(conn) = conns.remove(&id) {
+                crate::log_warn!("mux", "connection {id} torn down: {err}");
+                shared.dead.lock().expect("mux dead set poisoned").insert(id);
+                for (_, cb) in conn.pending {
+                    complete(cb, Err(err.clone()));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the single-threaded server park (answering side at scale)
+// ---------------------------------------------------------------------------
+
+/// A binary-only server that serves *all* accepted connections from one
+/// readiness-scan thread — the answering-side twin of [`Mux`]. The
+/// 256-worker soak bench parks every worker connection here, which is
+/// what keeps the whole transport at 3 threads. Handlers run inline on
+/// the loop thread, so they must be fast (decode + compute + encode).
+pub struct MuxServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MuxServer {
+    /// Bind (port 0 for ephemeral) and start the serve loop.
+    pub fn serve<A: ToSocketAddrs>(
+        addr: A,
+        service: Arc<dyn MuxService>,
+    ) -> std::io::Result<MuxServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("mux-server".into())
+            .spawn(move || run_server_loop(listener, service, stop2))
+            .expect("spawn mux-server");
+        Ok(MuxServer { addr: local, stop, thread: Some(thread) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop and join the serve loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for MuxServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct ServerConn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    woff: usize,
+    greeted: bool,
+    alive: bool,
+}
+
+fn run_server_loop(listener: TcpListener, service: Arc<dyn MuxService>, stop: Arc<AtomicBool>) {
+    let _gauge = TransportGuard::enter();
+    let mut conns: Vec<ServerConn> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut accepting = true;
+    while !stop.load(Ordering::Relaxed) {
+        let mut progress = false;
+        while accepting {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    conns.push(ServerConn {
+                        stream,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        woff: 0,
+                        greeted: false,
+                        alive: true,
+                    });
+                    progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    // Fatal listener error: stop accepting, keep serving
+                    // the connections that already exist.
+                    crate::log_warn!("mux", "mux-server accept failed fatally: {e}");
+                    accepting = false;
+                }
+            }
+        }
+        for conn in conns.iter_mut() {
+            progress |= serve_one(conn, &service, &mut scratch);
+        }
+        conns.retain(|c| c.alive);
+        if !progress {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+}
+
+/// One readiness pass over one server-side connection; returns whether
+/// any bytes moved.
+fn serve_one(conn: &mut ServerConn, service: &Arc<dyn MuxService>, scratch: &mut [u8]) -> bool {
+    let mut progress = false;
+    // flush pending responses
+    while conn.woff < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.woff..]) {
+            Ok(0) => {
+                conn.alive = false;
+                return progress;
+            }
+            Ok(n) => {
+                conn.woff += n;
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.alive = false;
+                return progress;
+            }
+        }
+    }
+    if conn.woff == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.woff = 0;
+    }
+    // read available bytes
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.alive = false;
+                return progress;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.alive = false;
+                return progress;
+            }
+        }
+    }
+    // handshake, then serve complete frames
+    if !conn.greeted {
+        if conn.rbuf.len() < 6 {
+            return progress;
+        }
+        if conn.rbuf[..4] != MAGIC || negotiate(conn.rbuf[4], conn.rbuf[5]).is_err() {
+            conn.alive = false;
+            return progress;
+        }
+        conn.rbuf.drain(..6);
+        conn.wbuf.extend_from_slice(&hello());
+        conn.greeted = true;
+        progress = true;
+    }
+    loop {
+        match take_frame(&mut conn.rbuf) {
+            Ok(None) => break,
+            Ok(Some(f)) => {
+                progress = true;
+                let out = match f.kind {
+                    KIND_PING => encode_frame(KIND_PONG, f.corr, 0, &[]),
+                    KIND_REQ => match service.handle(f.op, &f.payload) {
+                        Ok(p) => encode_frame(KIND_OK, f.corr, 0, &p),
+                        Err(e) => encode_frame(KIND_ERR, f.corr, 0, &bin::encode_error(&e)),
+                    },
+                    _ => {
+                        conn.alive = false;
+                        return progress;
+                    }
+                };
+                conn.wbuf.extend_from_slice(&out);
+            }
+            Err(_) => {
+                conn.alive = false;
+                return progress;
+            }
+        }
+    }
+    progress
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_service() -> Arc<dyn MuxService> {
+        Arc::new(|op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+            match op {
+                7 => Ok(payload.to_vec()),
+                8 => Err(DqError::Cancelled("op 8 always cancels".into())),
+                _ => Err(DqError::Protocol(format!("unknown op {op}"))),
+            }
+        })
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let mut buf = encode_frame(KIND_REQ, 42, 7, b"hello");
+        let f = take_frame(&mut buf).unwrap().unwrap();
+        assert_eq!(f, Frame { kind: KIND_REQ, corr: 42, op: 7, payload: b"hello".to_vec() });
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn partial_frame_wants_more_bytes() {
+        let full = encode_frame(KIND_OK, 1, 0, &[9u8; 100]);
+        for cut in 0..full.len() {
+            let mut partial = full[..cut].to_vec();
+            assert!(take_frame(&mut partial).unwrap().is_none(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn bit_flips_are_rejected() {
+        let full = encode_frame(KIND_OK, 3, 0, b"payload bytes");
+        // flip every bit of the checksummed region (crc + body)
+        for byte in 4..full.len() {
+            for bit in 0..8 {
+                let mut corrupt = full.clone();
+                corrupt[byte] ^= 1 << bit;
+                assert!(
+                    take_frame(&mut corrupt).is_err(),
+                    "flip at byte {byte} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn call_round_trips_over_server_park() {
+        let server = MuxServer::serve("127.0.0.1:0", echo_service()).unwrap();
+        let mux = Mux::new(MuxConfig::default());
+        let conn = mux.connect(server.local_addr()).unwrap();
+        assert_eq!(conn.negotiated.version, bin::BIN_VERSION);
+        let out = mux.call(conn.id, 7, b"ping pong".to_vec()).unwrap();
+        assert_eq!(out, b"ping pong");
+        assert!(matches!(mux.call(conn.id, 8, vec![]), Err(DqError::Cancelled(_))));
+    }
+
+    #[test]
+    fn shutdown_cancels_pending_and_rejects_new() {
+        let mux = Mux::new(MuxConfig::default());
+        mux.shutdown();
+        assert!(matches!(mux.call(1, 7, vec![]), Err(DqError::Cancelled(_))));
+    }
+}

@@ -18,6 +18,13 @@
 //!
 //! [`InProcHub`] provides the identical call interface between threads of
 //! one process without sockets — tests and `--in-proc` mode use it.
+//!
+//! **Dual codec.** [`RpcServer::serve_bin`] sniffs the first four bytes
+//! of each accepted connection: the mux magic routes the session to the
+//! binary plane (`net/mux`), anything else is the opening big-endian
+//! frame length of a JSON session — the two are unambiguous because the
+//! magic decodes as a length far above [`MAX_FRAME`]. JSON stays the
+//! debug/fallback path; old peers never see a byte they can't parse.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -26,9 +33,11 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::frame::{read_frame, write_frame, FrameError};
+use super::backoff;
+use super::frame::{read_frame, write_frame, FrameError, MAX_FRAME};
+use super::mux::{self, poll_read_exact, MuxService, PollRead};
 use crate::error::DqError;
-use crate::wire::Value;
+use crate::wire::{self, Value};
 
 impl From<FrameError> for DqError {
     fn from(e: FrameError) -> Self {
@@ -62,6 +71,25 @@ impl RpcServer {
     /// Bind and start serving. `addr` may use port 0 for an ephemeral port;
     /// the bound address is available via [`RpcServer::local_addr`].
     pub fn serve<A: ToSocketAddrs>(addr: A, handler: Arc<dyn RpcHandler>) -> std::io::Result<RpcServer> {
+        Self::serve_inner(addr, handler, None)
+    }
+
+    /// Like [`RpcServer::serve`], but dual-codec: a connection opening
+    /// with the mux magic becomes a binary session dispatched through
+    /// `service`; everything else speaks framed JSON as before.
+    pub fn serve_bin<A: ToSocketAddrs>(
+        addr: A,
+        handler: Arc<dyn RpcHandler>,
+        service: Arc<dyn MuxService>,
+    ) -> std::io::Result<RpcServer> {
+        Self::serve_inner(addr, handler, Some(service))
+    }
+
+    fn serve_inner<A: ToSocketAddrs>(
+        addr: A,
+        handler: Arc<dyn RpcHandler>,
+        service: Option<Arc<dyn MuxService>>,
+    ) -> std::io::Result<RpcServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -75,14 +103,20 @@ impl RpcServer {
                         Ok((stream, _peer)) => {
                             let h = handler.clone();
                             let stop3 = stop2.clone();
+                            let svc = service.clone();
                             let _ = std::thread::Builder::new()
                                 .name("rpc-conn".into())
-                                .spawn(move || serve_connection(stream, h, stop3));
+                                .spawn(move || serve_connection(stream, h, stop3, svc));
                         }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        Err(e) if is_transient_accept(&e) => {
                             std::thread::sleep(Duration::from_millis(5));
                         }
-                        Err(_) => break,
+                        Err(e) => {
+                            // A dead listener (EMFILE, EBADF, …) would
+                            // otherwise spin-sleep forever; stop cleanly.
+                            crate::log_warn!("rpc", "accept failed fatally, listener stops: {e}");
+                            break;
+                        }
                     }
                 }
             })
@@ -109,28 +143,76 @@ impl Drop for RpcServer {
     }
 }
 
-fn serve_connection(stream: TcpStream, handler: Arc<dyn RpcHandler>, stop: Arc<AtomicBool>) {
+/// Accept errors worth retrying (vs a dead listener worth stopping).
+fn is_transient_accept(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::Interrupted
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::ConnectionReset
+    )
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    handler: Arc<dyn RpcHandler>,
+    stop: Arc<AtomicBool>,
+    service: Option<Arc<dyn MuxService>>,
+) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
     let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = BufWriter::new(stream);
+    // Codec sniff: the first 4 bytes are either the mux magic or the
+    // opening big-endian JSON frame length (the magic is unambiguous —
+    // as a length it would exceed MAX_FRAME).
+    let mut first = [0u8; 4];
+    match poll_read_exact(&mut reader, &mut first, &stop) {
+        Ok(PollRead::Done) => {}
+        _ => return,
+    }
+    if first == mux::MAGIC {
+        if let Some(svc) = service {
+            mux::serve_bin_connection(reader, writer, svc, stop);
+        }
+        // No binary service configured: close; the dialer falls back to
+        // JSON exactly as it would against a legacy server.
+        return;
+    }
+    // JSON session; `first` is already the first frame's length prefix.
+    // Frames are read with poll_read_exact so a 200 ms read-timeout poll
+    // mid-frame never discards partial data (`read_exact` leaves the
+    // buffer unspecified on error).
+    let mut pending_len = Some(first);
     while !stop.load(Ordering::Relaxed) {
-        let req = match read_frame(&mut reader) {
-            Ok(Some(v)) => v,
-            Ok(None) => break, // peer closed
-            Err(FrameError::Io(e))
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                continue; // read timeout: poll the stop flag, keep waiting
+        let len_buf = match pending_len.take() {
+            Some(b) => b,
+            None => {
+                let mut b = [0u8; 4];
+                match poll_read_exact(&mut reader, &mut b, &stop) {
+                    Ok(PollRead::Done) => b,
+                    _ => return, // clean EOF, stop, or torn frame
+                }
             }
-            Err(_) => break,
+        };
+        let len = u32::from_be_bytes(len_buf);
+        if len > MAX_FRAME {
+            return;
+        }
+        let mut payload = vec![0u8; len as usize];
+        match poll_read_exact(&mut reader, &mut payload, &stop) {
+            Ok(PollRead::Done) => {}
+            _ => return,
+        }
+        let req = match std::str::from_utf8(&payload).ok().and_then(|t| wire::parse(t).ok()) {
+            Some(v) => v,
+            None => return,
         };
         let resp = dispatch(&*handler, &req);
         if write_frame(&mut writer, &resp).is_err() {
-            break;
+            return;
         }
     }
 }
@@ -176,30 +258,24 @@ enum ClientInner {
 }
 
 impl RpcClient {
-    /// Connect over TCP, retrying for up to `timeout` (server may still be
-    /// starting).
+    /// Connect over TCP, retrying under capped exponential backoff +
+    /// jitter for up to `timeout` (the server may still be starting, or
+    /// restarting — a transient refusal should not fail the dial).
     pub fn connect<A: ToSocketAddrs + Clone>(addr: A, timeout: Duration) -> Result<RpcClient, DqError> {
-        let deadline = std::time::Instant::now() + timeout;
-        loop {
-            match TcpStream::connect(addr.clone()) {
-                Ok(stream) => {
-                    let _ = stream.set_nodelay(true);
-                    let reader =
-                        BufReader::new(stream.try_clone().map_err(|e| DqError::Io(e.to_string()))?);
-                    let writer = BufWriter::new(stream);
-                    return Ok(RpcClient {
-                        inner: Mutex::new(ClientInner::Tcp { reader, writer }),
-                        next_id: AtomicU64::new(1),
-                    });
-                }
-                Err(e) => {
-                    if std::time::Instant::now() >= deadline {
-                        return Err(DqError::Io(format!("connect failed: {e}")));
-                    }
-                    std::thread::sleep(Duration::from_millis(20));
-                }
-            }
-        }
+        let stream = backoff::retry(
+            timeout,
+            Duration::from_millis(10),
+            Duration::from_millis(500),
+            || TcpStream::connect(addr.clone()),
+        )
+        .map_err(|e| DqError::Io(format!("connect failed: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone().map_err(|e| DqError::Io(e.to_string()))?);
+        let writer = BufWriter::new(stream);
+        Ok(RpcClient {
+            inner: Mutex::new(ClientInner::Tcp { reader, writer }),
+            next_id: AtomicU64::new(1),
+        })
     }
 
     /// Issue one call. `params` must be an object; `op` and `id` are
@@ -394,5 +470,31 @@ mod tests {
     fn server_shutdown_unblocks() {
         let mut server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
         server.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn dual_codec_server_speaks_json_and_binary() {
+        let svc: Arc<dyn MuxService> =
+            Arc::new(|_op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+                Ok(payload.to_vec())
+            });
+        let server = RpcServer::serve_bin("127.0.0.1:0", echo_handler(), svc).unwrap();
+        // JSON clients are served exactly as before…
+        let client = RpcClient::connect(server.local_addr(), Duration::from_secs(2)).unwrap();
+        let r = client.call("add", Value::obj().with("a", 1.0).with("b", 2.0)).unwrap();
+        assert_eq!(r.req_f64("sum").unwrap(), 3.0);
+        // …and a mux dialer negotiates a binary session on the same port.
+        let m = mux::Mux::new(mux::MuxConfig::default());
+        let conn = m.connect(server.local_addr()).unwrap();
+        assert_eq!(m.call(conn.id, 1, b"abc".to_vec()).unwrap(), b"abc");
+    }
+
+    #[test]
+    fn mux_dial_against_json_only_server_fails_cleanly() {
+        // A server without a binary service closes on the magic; the
+        // dialer gets a typed error and can fall back to JSON.
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let m = mux::Mux::new(mux::MuxConfig::default());
+        assert!(m.connect(server.local_addr()).is_err());
     }
 }

@@ -1,0 +1,631 @@
+//! `wire/bin` — the compact binary codec behind [`crate::cluster::proto`]
+//! (DESIGN.md §17).
+//!
+//! JSON (`wire/json`) remains the debug and compatibility path; this
+//! module is the negotiated fast path the mux transport (`net/mux`)
+//! carries once both peers advertise [`BIN_VERSION`] in the connect
+//! handshake. The encoding is deliberately boring:
+//!
+//! * unsigned integers are LEB128 varints (≤ 10 bytes, canonicalness
+//!   not required on decode);
+//! * `f32`/`f64` are raw little-endian IEEE bits — circuit parameter
+//!   vectors, the dominant payload, become a `memcpy` instead of a
+//!   float↔decimal round-trip;
+//! * strings and vectors are length-prefixed (varint count, then raw
+//!   elements);
+//! * op *names* never travel: the mux frame carries an interned op id
+//!   (see [`op_id`] / [`op_name`]).
+//!
+//! Decoding is strict and pure: every read is bounds-checked through
+//! [`Cur`], oversized counts are rejected before allocation, and each
+//! top-level `decode_*` requires the buffer to be fully consumed
+//! ([`Cur::done`]) so trailing garbage is a [`DqError::Protocol`], not
+//! a silent success. Field-level semantic checks mirror the JSON
+//! codecs exactly (config validation, circuit arity, histogram bucket
+//! count), so a value rejected by one codec is rejected by the other.
+
+use std::collections::BTreeMap;
+
+use crate::circuit::QuClassiConfig;
+use crate::cluster::proto::{SubmitRequest, SubmitResponse};
+use crate::coordinator::{BankStatus, CircuitJob, ManagerStats, TenantStats};
+use crate::error::DqError;
+use crate::util::stats::{WaitHistogram, WAIT_HIST_BUCKETS};
+
+/// Binary wire-format version advertised in the mux handshake. Peers
+/// speak `min(theirs, ours)`; version 0 (or no handshake at all) means
+/// framed JSON.
+pub const BIN_VERSION: u8 = 1;
+
+/// Feature bit: the peer accepts binary-encoded `execute` payloads
+/// ([`encode_jobs`] / [`encode_fids`]).
+pub const FEAT_BIN_EXECUTE: u8 = 0x01;
+
+/// Interned op-name table: the string ops of the JSON envelope, as mux
+/// frame op ids. Ids are append-only wire contract — never renumber.
+const OP_TABLE: &[(u32, &str)] = &[
+    (1, "execute"),
+    (2, "ping"),
+    (3, "register"),
+    (4, "heartbeat"),
+    (5, "new_client"),
+    (6, "submit_bank"),
+    (7, "wait_bank"),
+    (8, "bank_status"),
+    (9, "cancel_bank"),
+    (10, "stats"),
+];
+
+/// The interned id for `execute`, the one op the binary plane serves
+/// today (everything else stays on the JSON debug path).
+pub const OP_EXECUTE: u32 = 1;
+
+/// Interned id for an op name, if the table knows it.
+pub fn op_id(name: &str) -> Option<u32> {
+    OP_TABLE.iter().find(|(_, n)| *n == name).map(|(i, _)| *i)
+}
+
+/// Op name for an interned id, if the table knows it.
+pub fn op_name(id: u32) -> Option<&'static str> {
+    OP_TABLE.iter().find(|(i, _)| *i == id).map(|(_, n)| *n)
+}
+
+// ---------------------------------------------------------------------------
+// primitives: encode
+// ---------------------------------------------------------------------------
+
+/// Append a LEB128 varint.
+pub fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Append a bool as one byte (0/1).
+pub fn put_bool(buf: &mut Vec<u8>, b: bool) {
+    buf.push(u8::from(b));
+}
+
+/// Append raw little-endian `f32` bits.
+pub fn put_f32(buf: &mut Vec<u8>, x: f32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append raw little-endian `f64` bits.
+pub fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a varint-length-prefixed UTF-8 string.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Append a varint-count-prefixed raw-LE `f32` vector.
+pub fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_varint(buf, xs.len() as u64);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// primitives: decode
+// ---------------------------------------------------------------------------
+
+fn proto(msg: impl Into<String>) -> DqError {
+    DqError::Protocol(msg.into())
+}
+
+/// Bounds-checked read cursor over an encoded buffer. Every accessor
+/// returns [`DqError::Protocol`] on underrun; nothing panics and no
+/// count is trusted before the bytes it describes are proven present.
+pub struct Cur<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(data: &'a [u8]) -> Cur<'a> {
+        Cur { data, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    /// Take exactly `n` bytes or fail.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], DqError> {
+        if n > self.remaining() {
+            return Err(proto(format!("bin: short buffer (need {n}, have {})", self.remaining())));
+        }
+        let out = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read a LEB128 varint (≤ 10 bytes, overflow-checked).
+    pub fn take_varint(&mut self) -> Result<u64, DqError> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = self.take(1)?[0];
+            let bits = u64::from(byte & 0x7f);
+            if shift == 63 && bits > 1 {
+                return Err(proto("bin: varint overflows u64"));
+            }
+            v |= bits << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(proto("bin: varint longer than 10 bytes"))
+    }
+
+    /// Read a varint that must fit a `usize`.
+    pub fn take_len(&mut self) -> Result<usize, DqError> {
+        usize::try_from(self.take_varint()?).map_err(|_| proto("bin: length exceeds usize"))
+    }
+
+    /// Read a one-byte bool; any value other than 0/1 is malformed.
+    pub fn take_bool(&mut self) -> Result<bool, DqError> {
+        match self.take(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(proto(format!("bin: invalid bool byte {b:#04x}"))),
+        }
+    }
+
+    /// Read raw little-endian `f32` bits.
+    pub fn take_f32(&mut self) -> Result<f32, DqError> {
+        let raw = self.take(4)?;
+        Ok(f32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]))
+    }
+
+    /// Read raw little-endian `f64` bits.
+    pub fn take_f64(&mut self) -> Result<f64, DqError> {
+        let raw = self.take(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(raw);
+        Ok(f64::from_le_bytes(b))
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn take_str(&mut self) -> Result<String, DqError> {
+        let n = self.take_len()?;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| proto("bin: invalid UTF-8 in string"))
+    }
+
+    /// Read a count-prefixed raw-LE `f32` vector. The count is checked
+    /// against the remaining bytes *before* any allocation, so a
+    /// corrupted length can't balloon memory.
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>, DqError> {
+        let n = self.take_len()?;
+        let bytes = n.checked_mul(4).ok_or_else(|| proto("bin: f32 vector length overflow"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Require the buffer fully consumed (top-level decode postcondition).
+    pub fn done(&self) -> Result<(), DqError> {
+        if self.remaining() != 0 {
+            return Err(proto(format!("bin: {} trailing bytes after payload", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+fn read_config(c: &mut Cur<'_>) -> Result<QuClassiConfig, DqError> {
+    Ok(QuClassiConfig::new(c.take_len()?, c.take_len()?)?)
+}
+
+fn put_config(buf: &mut Vec<u8>, config: &QuClassiConfig) {
+    put_varint(buf, config.qubits as u64);
+    put_varint(buf, config.layers as u64);
+}
+
+// ---------------------------------------------------------------------------
+// typed codecs: one binary peer per cluster/proto JSON codec
+// ---------------------------------------------------------------------------
+
+/// Encode a [`SubmitRequest`]: `client, qubits, layers, n_pairs,
+/// (thetas, data)*`.
+pub fn encode_submit_request(r: &SubmitRequest) -> Vec<u8> {
+    let body: usize = r.pairs.iter().map(|(t, d)| 4 * (t.len() + d.len()) + 4).sum();
+    let mut buf = Vec::with_capacity(16 + body);
+    put_varint(&mut buf, r.client);
+    put_config(&mut buf, &r.config);
+    put_varint(&mut buf, r.pairs.len() as u64);
+    for (thetas, data) in &r.pairs {
+        put_f32s(&mut buf, thetas);
+        put_f32s(&mut buf, data);
+    }
+    buf
+}
+
+/// Decode a [`SubmitRequest`]; mirrors the JSON codec's config check.
+pub fn decode_submit_request(bytes: &[u8]) -> Result<SubmitRequest, DqError> {
+    let mut c = Cur::new(bytes);
+    let client = c.take_varint()?;
+    let config = read_config(&mut c)?;
+    let n = c.take_len()?;
+    let mut pairs = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        pairs.push((c.take_f32s()?, c.take_f32s()?));
+    }
+    c.done()?;
+    Ok(SubmitRequest { client, config, pairs })
+}
+
+/// Encode a [`SubmitResponse`]: `bank, total`.
+pub fn encode_submit_response(r: &SubmitResponse) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(12);
+    put_varint(&mut buf, r.bank);
+    put_varint(&mut buf, r.total as u64);
+    buf
+}
+
+/// Decode a [`SubmitResponse`].
+pub fn decode_submit_response(bytes: &[u8]) -> Result<SubmitResponse, DqError> {
+    let mut c = Cur::new(bytes);
+    let resp = SubmitResponse { bank: c.take_varint()?, total: c.take_len()? };
+    c.done()?;
+    Ok(resp)
+}
+
+/// Encode a [`BankStatus`]: `pending, completed, total, n_fids,
+/// (tag, f32?)*, recovered`.
+pub fn encode_bank_status(s: &BankStatus) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + 5 * s.partial_fids.len());
+    put_bool(&mut buf, s.pending);
+    put_varint(&mut buf, s.completed as u64);
+    put_varint(&mut buf, s.total as u64);
+    put_varint(&mut buf, s.partial_fids.len() as u64);
+    for f in &s.partial_fids {
+        match f {
+            None => buf.push(0),
+            Some(x) => {
+                buf.push(1);
+                put_f32(&mut buf, *x);
+            }
+        }
+    }
+    put_bool(&mut buf, s.recovered);
+    buf
+}
+
+/// Decode a [`BankStatus`].
+pub fn decode_bank_status(bytes: &[u8]) -> Result<BankStatus, DqError> {
+    let mut c = Cur::new(bytes);
+    let pending = c.take_bool()?;
+    let completed = c.take_len()?;
+    let total = c.take_len()?;
+    let n = c.take_len()?;
+    let mut partial_fids = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        partial_fids.push(match c.take(1)?[0] {
+            0 => None,
+            1 => Some(c.take_f32()?),
+            t => return Err(proto(format!("bin: invalid option tag {t:#04x}"))),
+        });
+    }
+    let recovered = c.take_bool()?;
+    c.done()?;
+    Ok(BankStatus { pending, completed, total, partial_fids, recovered })
+}
+
+fn put_tenant_stats(buf: &mut Vec<u8>, client: u64, t: &TenantStats) {
+    put_varint(buf, client);
+    put_varint(buf, t.submitted);
+    put_varint(buf, t.dispatched);
+    put_varint(buf, t.completed);
+    put_varint(buf, t.lost);
+    put_varint(buf, t.stolen);
+    put_f64(buf, t.wait_total_s);
+    put_f64(buf, t.wait_max_s);
+    put_varint(buf, WAIT_HIST_BUCKETS as u64);
+    for n in t.wait_hist.counts() {
+        put_varint(buf, *n);
+    }
+}
+
+fn read_tenant_stats(c: &mut Cur<'_>) -> Result<(u64, TenantStats), DqError> {
+    let client = c.take_varint()?;
+    let submitted = c.take_varint()?;
+    let dispatched = c.take_varint()?;
+    let completed = c.take_varint()?;
+    let lost = c.take_varint()?;
+    let stolen = c.take_varint()?;
+    let wait_total_s = c.take_f64()?;
+    let wait_max_s = c.take_f64()?;
+    let buckets = c.take_len()?;
+    if buckets != WAIT_HIST_BUCKETS {
+        return Err(proto(format!(
+            "bin: wait_hist needs {WAIT_HIST_BUCKETS} buckets, got {buckets}"
+        )));
+    }
+    let mut counts = [0u64; WAIT_HIST_BUCKETS];
+    for n in counts.iter_mut() {
+        *n = c.take_varint()?;
+    }
+    let wait_hist = match WaitHistogram::from_counts(&counts) {
+        Some(h) => h,
+        None => return Err(proto("bin: undecodable wait_hist")),
+    };
+    Ok((
+        client,
+        TenantStats {
+            submitted,
+            dispatched,
+            completed,
+            lost,
+            stolen,
+            wait_total_s,
+            wait_max_s,
+            wait_hist,
+        },
+    ))
+}
+
+/// Encode one tenant's counters (binary peer of
+/// [`crate::cluster::proto::tenant_stats_to_wire`]).
+pub fn encode_tenant_stats(client: u64, t: &TenantStats) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    put_tenant_stats(&mut buf, client, t);
+    buf
+}
+
+/// Decode one tenant's counters.
+pub fn decode_tenant_stats(bytes: &[u8]) -> Result<(u64, TenantStats), DqError> {
+    let mut c = Cur::new(bytes);
+    let out = read_tenant_stats(&mut c)?;
+    c.done()?;
+    Ok(out)
+}
+
+/// Encode a [`ManagerStats`]: 8 aggregate counters, the retired
+/// aggregate (client 0), then the per-tenant entries.
+pub fn encode_manager_stats(s: &ManagerStats) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(96 + 64 * s.per_tenant.len());
+    put_varint(&mut buf, s.submitted);
+    put_varint(&mut buf, s.completed);
+    put_varint(&mut buf, s.dispatches);
+    put_varint(&mut buf, s.requeues);
+    put_varint(&mut buf, s.evictions);
+    put_varint(&mut buf, s.cancelled);
+    put_varint(&mut buf, s.steals);
+    put_varint(&mut buf, s.pruned_tenants);
+    put_tenant_stats(&mut buf, 0, &s.retired);
+    put_varint(&mut buf, s.per_tenant.len() as u64);
+    for (client, t) in &s.per_tenant {
+        put_tenant_stats(&mut buf, *client, t);
+    }
+    buf
+}
+
+/// Decode a [`ManagerStats`].
+pub fn decode_manager_stats(bytes: &[u8]) -> Result<ManagerStats, DqError> {
+    let mut c = Cur::new(bytes);
+    let submitted = c.take_varint()?;
+    let completed = c.take_varint()?;
+    let dispatches = c.take_varint()?;
+    let requeues = c.take_varint()?;
+    let evictions = c.take_varint()?;
+    let cancelled = c.take_varint()?;
+    let steals = c.take_varint()?;
+    let pruned_tenants = c.take_varint()?;
+    let retired = read_tenant_stats(&mut c)?.1;
+    let n = c.take_len()?;
+    let mut per_tenant = BTreeMap::new();
+    for _ in 0..n {
+        let (client, t) = read_tenant_stats(&mut c)?;
+        per_tenant.insert(client, t);
+    }
+    c.done()?;
+    Ok(ManagerStats {
+        submitted,
+        completed,
+        dispatches,
+        requeues,
+        evictions,
+        cancelled,
+        steals,
+        pruned_tenants,
+        retired,
+        per_tenant,
+    })
+}
+
+fn put_job(buf: &mut Vec<u8>, j: &CircuitJob) {
+    put_varint(buf, j.id);
+    put_varint(buf, j.client);
+    put_varint(buf, j.bank);
+    put_varint(buf, j.index as u64);
+    put_config(buf, &j.config);
+    put_f32s(buf, &j.thetas);
+    put_f32s(buf, &j.data);
+}
+
+fn read_job(c: &mut Cur<'_>) -> Result<CircuitJob, DqError> {
+    let id = c.take_varint()?;
+    let client = c.take_varint()?;
+    let bank = c.take_varint()?;
+    let index = c.take_len()?;
+    let config = read_config(c)?;
+    let thetas = c.take_f32s()?;
+    let data = c.take_f32s()?;
+    if thetas.len() != config.n_params() {
+        return Err(DqError::Arity(format!(
+            "job theta arity {} != {}",
+            thetas.len(),
+            config.n_params()
+        )));
+    }
+    if data.len() != config.n_features() {
+        return Err(DqError::Arity(format!(
+            "job data arity {} != {}",
+            data.len(),
+            config.n_features()
+        )));
+    }
+    Ok(CircuitJob { id, client, bank, index, config, thetas, data })
+}
+
+/// Encode the manager→worker `execute` payload: a batch of
+/// [`CircuitJob`]s (binary peer of the JSON `circuits` array).
+pub fn encode_jobs(jobs: &[CircuitJob]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(
+        8 + jobs.iter().map(|j| 24 + 4 * (j.thetas.len() + j.data.len())).sum::<usize>(),
+    );
+    put_varint(&mut buf, jobs.len() as u64);
+    for j in jobs {
+        put_job(&mut buf, j);
+    }
+    buf
+}
+
+/// Decode an `execute` payload, validating per-job arity (mirrors
+/// [`CircuitJob::from_wire`]).
+pub fn decode_jobs(bytes: &[u8]) -> Result<Vec<CircuitJob>, DqError> {
+    let mut c = Cur::new(bytes);
+    let n = c.take_len()?;
+    let mut jobs = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        jobs.push(read_job(&mut c)?);
+    }
+    c.done()?;
+    Ok(jobs)
+}
+
+/// Encode the worker→manager `execute` result: the fidelity batch.
+pub fn encode_fids(fids: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + 4 * fids.len());
+    put_f32s(&mut buf, fids);
+    buf
+}
+
+/// Decode a fidelity batch.
+pub fn decode_fids(bytes: &[u8]) -> Result<Vec<f32>, DqError> {
+    let mut c = Cur::new(bytes);
+    let fids = c.take_f32s()?;
+    c.done()?;
+    Ok(fids)
+}
+
+/// Encode a [`DqError`] as `kind-tag, msg` (binary peer of
+/// [`DqError::to_wire`]'s `{"kind","msg"}` object).
+pub fn encode_error(e: &DqError) -> Vec<u8> {
+    let tag: u8 = match e {
+        DqError::Unschedulable(_) => 0,
+        DqError::WorkerLost(_) => 1,
+        DqError::Timeout(_) => 2,
+        DqError::Cancelled(_) => 3,
+        DqError::Protocol(_) => 4,
+        DqError::Arity(_) => 5,
+        DqError::Io(_) => 6,
+    };
+    let mut buf = Vec::with_capacity(2 + e.message().len());
+    buf.push(tag);
+    put_str(&mut buf, e.message());
+    buf
+}
+
+/// Decode a [`DqError`]. An unknown kind tag decodes as
+/// [`DqError::Protocol`] (nothing is dropped), mirroring the JSON path.
+pub fn decode_error(bytes: &[u8]) -> Result<DqError, DqError> {
+    let mut c = Cur::new(bytes);
+    let tag = c.take(1)?[0];
+    let msg = c.take_str()?;
+    c.done()?;
+    Ok(match tag {
+        0 => DqError::Unschedulable(msg),
+        1 => DqError::WorkerLost(msg),
+        2 => DqError::Timeout(msg),
+        3 => DqError::Cancelled(msg),
+        4 => DqError::Protocol(msg),
+        5 => DqError::Arity(msg),
+        6 => DqError::Io(msg),
+        t => DqError::Protocol(format!("undecodable error tag {t:#04x}: {msg}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trips_boundaries() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX - 1, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut c = Cur::new(&buf);
+            assert_eq!(c.take_varint().unwrap(), v);
+            c.done().unwrap();
+        }
+    }
+
+    #[test]
+    fn varint_overflow_rejected() {
+        // 11 continuation bytes: longer than any u64 varint.
+        let buf = [0x80u8; 11];
+        assert!(Cur::new(&buf).take_varint().is_err());
+        // 10 bytes whose top bits exceed 64: overflow.
+        let buf = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x7f];
+        assert!(Cur::new(&buf).take_varint().is_err());
+    }
+
+    #[test]
+    fn op_table_is_bijective() {
+        for (id, name) in OP_TABLE {
+            assert_eq!(op_id(name), Some(*id));
+            assert_eq!(op_name(*id), Some(*name));
+        }
+        assert_eq!(op_id("no_such_op"), None);
+        assert_eq!(op_name(0), None);
+    }
+
+    #[test]
+    fn submit_request_round_trips() {
+        let req = SubmitRequest {
+            client: 3,
+            config: QuClassiConfig::new(5, 2).unwrap(),
+            pairs: vec![
+                (vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6], vec![0.9; 4]),
+                (vec![0.0; 6], vec![-1.5, 0.25, 0.0, 2.0]),
+            ],
+        };
+        let bytes = encode_submit_request(&req);
+        assert_eq!(decode_submit_request(&bytes).unwrap(), req);
+        // trailing garbage is rejected, not ignored
+        let mut long = bytes;
+        long.push(0);
+        assert!(decode_submit_request(&long).is_err());
+    }
+
+    #[test]
+    fn error_round_trips_every_variant() {
+        for e in [
+            DqError::Unschedulable("u".into()),
+            DqError::WorkerLost("w".into()),
+            DqError::Timeout("t".into()),
+            DqError::Cancelled("c".into()),
+            DqError::Protocol("p".into()),
+            DqError::Arity("a".into()),
+            DqError::Io("i".into()),
+        ] {
+            assert_eq!(decode_error(&encode_error(&e)).unwrap(), e);
+        }
+        // unknown tag folds to Protocol, mirroring the JSON decoder
+        let mut buf = vec![200u8];
+        put_str(&mut buf, "future kind");
+        assert!(matches!(decode_error(&buf).unwrap(), DqError::Protocol(_)));
+    }
+}

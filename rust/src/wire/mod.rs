@@ -1,4 +1,5 @@
-//! Wire format substrate: a from-scratch JSON implementation.
+//! Wire format substrate: a from-scratch JSON implementation and a
+//! compact binary codec.
 //!
 //! The paper's manager↔worker channel is RPyC; ours is framed JSON over
 //! TCP (see `net/`). JSON was chosen over a custom binary format because
@@ -6,7 +7,12 @@
 //! both the RPC protocol and artifact metadata. The implementation is
 //! complete: escapes, unicode, nested containers, and a strict parser
 //! with byte-offset error reporting.
+//!
+//! [`bin`] is the negotiated fast path for the hot cluster ops (varint
+//! ints, raw little-endian floats, interned op names); JSON remains the
+//! debug/fallback codec and the interop path for old workers.
 
+pub mod bin;
 pub mod json;
 pub mod value;
 

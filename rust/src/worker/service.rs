@@ -17,8 +17,8 @@ use super::cru::{CruProbe, LoadModelCru};
 use crate::circuit::QuClassiConfig;
 use crate::coordinator::job::CircuitJob;
 use crate::error::DqError;
-use crate::net::{RpcClient, RpcServer};
-use crate::wire::Value;
+use crate::net::{MuxService, RpcClient, RpcServer};
+use crate::wire::{bin, Value};
 
 /// Worker startup options.
 #[derive(Debug, Clone)]
@@ -101,7 +101,39 @@ impl WorkerHandle {
                 other => Err(DqError::Protocol(format!("worker: unknown op '{other}'"))),
             }
         };
-        let server = RpcServer::serve(opts.listen.as_str(), Arc::new(handler))
+        // Binary-plane service for the same endpoint: a manager that
+        // negotiates the mux handshake dispatches `execute` through
+        // wire/bin; a JSON manager is served by `handler` above. Same
+        // validation rules on both planes.
+        let backend_bin = backend.clone();
+        let active_bin = active.clone();
+        let bin_service: Arc<dyn MuxService> =
+            Arc::new(move |op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+                if op != bin::OP_EXECUTE {
+                    return Err(DqError::Protocol(format!("worker: unknown bin op {op}")));
+                }
+                let jobs = bin::decode_jobs(payload)?;
+                let mut config: Option<QuClassiConfig> = None;
+                let mut pairs = Vec::with_capacity(jobs.len());
+                for job in jobs {
+                    if let Some(c) = config {
+                        if c != job.config {
+                            return Err(DqError::Protocol(
+                                "mixed configs in one execute".to_string(),
+                            ));
+                        }
+                    }
+                    config = Some(job.config);
+                    pairs.push((job.thetas, job.data));
+                }
+                let config =
+                    config.ok_or_else(|| DqError::Protocol("empty execute".to_string()))?;
+                active_bin.fetch_add(pairs.len(), Ordering::Relaxed);
+                let result = backend_bin.execute(&config, &pairs);
+                active_bin.fetch_sub(pairs.len(), Ordering::Relaxed);
+                Ok(bin::encode_fids(&result?))
+            });
+        let server = RpcServer::serve_bin(opts.listen.as_str(), Arc::new(handler), bin_service)
             .map_err(|e| DqError::Io(format!("worker listen: {e}")))?;
         let listen_addr = server.local_addr();
 

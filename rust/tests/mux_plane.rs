@@ -1,0 +1,355 @@
+//! Integration tests for the multiplexed cluster plane (DESIGN.md §17):
+//! many in-flight requests on a fixed transport-thread budget, liveness
+//! teardown, backpressure, and JSON↔binary cross-version interop in
+//! both directions (old JSON worker × new manager, old JSON manager ×
+//! new worker).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::{serve_manager, MuxWorkerChannel, RemoteClient};
+use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel};
+use dqulearn::model::exec::{CircuitExecutor, CircuitPair, QsimExecutor};
+use dqulearn::net::mux::transport_thread_count;
+use dqulearn::net::{Mux, MuxConfig, MuxServer, RpcClient, RpcServer};
+use dqulearn::wire::{bin, Value};
+use dqulearn::worker::{WorkerHandle, WorkerOptions};
+use dqulearn::DqError;
+
+/// The transport-thread gauge is process-wide, so tests that create mux
+/// planes serialize on this lock to keep the arithmetic honest.
+static GAUGE_LOCK: Mutex<()> = Mutex::new(());
+
+fn gauge_guard() -> std::sync::MutexGuard<'static, ()> {
+    GAUGE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A peer that completes the mux handshake and then swallows every
+/// byte without ever answering — the shape of a hung remote worker.
+fn silent_mux_peer() -> (SocketAddr, JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let thread = std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            let mut hello = [0u8; 6];
+            if s.read_exact(&mut hello).is_err() {
+                return;
+            }
+            let reply = [
+                dqulearn::net::mux::MAGIC[0],
+                dqulearn::net::mux::MAGIC[1],
+                dqulearn::net::mux::MAGIC[2],
+                dqulearn::net::mux::MAGIC[3],
+                bin::BIN_VERSION,
+                bin::FEAT_BIN_EXECUTE,
+            ];
+            let _ = s.write_all(&reply);
+            let mut sink = [0u8; 4096];
+            while matches!(s.read(&mut sink), Ok(n) if n > 0) {}
+        }
+    });
+    (addr, thread)
+}
+
+/// Stand-in manager endpoint so a real [`WorkerHandle`] can register.
+fn fake_manager() -> RpcServer {
+    let handler = |op: &str, _params: &Value| -> Result<Value, DqError> {
+        match op {
+            "register" => Ok(Value::obj().with("worker_id", 1u64)),
+            "heartbeat" => Ok(Value::obj()),
+            other => Err(DqError::Protocol(format!("unexpected {other}"))),
+        }
+    };
+    RpcServer::serve("127.0.0.1:0", Arc::new(handler)).unwrap()
+}
+
+fn qsim_worker(manager_addr: &str) -> WorkerHandle {
+    WorkerHandle::start(
+        manager_addr,
+        WorkerOptions {
+            max_qubits: 5,
+            artifact_dir: "/nonexistent".into(), // force the qsim backend
+            heartbeat_period: 0.5,
+            listen: "127.0.0.1:0".to_string(),
+            threads: 1,
+        },
+    )
+    .unwrap()
+}
+
+fn sample_pairs(cfg: &QuClassiConfig, n: usize) -> Vec<CircuitPair> {
+    (0..n)
+        .map(|i| {
+            let x = 0.1 + 0.05 * i as f32;
+            (vec![x; cfg.n_params()], vec![1.0 - x; cfg.n_features()])
+        })
+        .collect()
+}
+
+#[test]
+fn hundreds_of_inflight_requests_share_three_transport_threads() {
+    let _serial = gauge_guard();
+    let base = transport_thread_count();
+
+    // Echo service: varint(op) then the payload back.
+    let service = Arc::new(|op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+        let mut out = Vec::with_capacity(payload.len() + 5);
+        bin::put_varint(&mut out, u64::from(op));
+        out.extend_from_slice(payload);
+        Ok(out)
+    });
+    let mut server = MuxServer::serve("127.0.0.1:0", service).unwrap();
+    let mux = Mux::new(MuxConfig::default());
+
+    let conns: Vec<u64> = (0..8)
+        .map(|_| {
+            let conn = mux.connect(server.local_addr()).unwrap();
+            assert_eq!(conn.negotiated.version, bin::BIN_VERSION);
+            assert_eq!(conn.negotiated.features, bin::FEAT_BIN_EXECUTE);
+            conn.id
+        })
+        .collect();
+
+    const N: usize = 400;
+    let (tx, rx) = mpsc::channel::<(usize, Result<Vec<u8>, DqError>)>();
+    for i in 0..N {
+        let op = (i % 9 + 1) as u32;
+        let payload = (i as u64).to_le_bytes().to_vec();
+        let tx = tx.clone();
+        mux.request(
+            conns[i % conns.len()],
+            op,
+            payload,
+            Box::new(move |res| {
+                let _ = tx.send((i, res));
+            }),
+        );
+    }
+    drop(tx);
+
+    let mut seen = vec![false; N];
+    for _ in 0..N {
+        let (i, res) = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+        let bytes = res.unwrap();
+        let mut c = bin::Cur::new(&bytes);
+        assert_eq!(c.take_varint().unwrap(), (i % 9 + 1) as u64);
+        assert_eq!(c.take(8).unwrap(), (i as u64).to_le_bytes());
+        c.done().unwrap();
+        assert!(!seen[i], "duplicate completion for request {i}");
+        seen[i] = true;
+    }
+
+    // 400 in-flight requests over 8 connections cost exactly one event
+    // loop + one completion runner + one server park — never a thread
+    // per connection or per request.
+    assert!(
+        transport_thread_count() <= base + 3,
+        "transport grew past 3 threads: {} -> {}",
+        base,
+        transport_thread_count()
+    );
+
+    mux.shutdown();
+    server.shutdown();
+    assert_eq!(transport_thread_count(), base, "transport threads leaked");
+}
+
+#[test]
+fn idle_timeout_fails_pending_and_marks_the_connection_dead() {
+    let _serial = gauge_guard();
+    let (addr, peer) = silent_mux_peer();
+    let mux = Mux::new(MuxConfig {
+        ping_interval: Duration::from_millis(20),
+        idle_timeout: Duration::from_millis(300),
+        ..MuxConfig::default()
+    });
+    let conn = mux.connect(addr).unwrap();
+
+    let (tx, rx) = mpsc::channel();
+    mux.request(
+        conn.id,
+        bin::OP_EXECUTE,
+        b"never answered".to_vec(),
+        Box::new(move |res| {
+            let _ = tx.send(res);
+        }),
+    );
+    // The peer swallows the request (and the pings) without replying,
+    // so the idle timer is the only way out.
+    let res = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    match res {
+        Err(DqError::WorkerLost(msg)) => assert!(msg.contains("idle"), "unexpected msg: {msg}"),
+        other => panic!("expected WorkerLost(idle), got {other:?}"),
+    }
+    assert!(mux.is_dead(conn.id));
+
+    // Requests after teardown fail fast, without touching the network.
+    let err = mux.call(conn.id, bin::OP_EXECUTE, Vec::new()).unwrap_err();
+    assert!(matches!(err, DqError::WorkerLost(_)), "{err}");
+
+    mux.shutdown();
+    let _ = peer.join();
+}
+
+#[test]
+fn backpressure_rejects_the_request_over_the_inflight_cap() {
+    let _serial = gauge_guard();
+    let (addr, peer) = silent_mux_peer();
+    let mux = Mux::new(MuxConfig {
+        max_inflight: 4,
+        ping_interval: Duration::from_secs(30),
+        idle_timeout: Duration::from_secs(60),
+        ..MuxConfig::default()
+    });
+    let conn = mux.connect(addr).unwrap();
+
+    // Five requests against a cap of four: the peer never answers, so
+    // pending never drains and the fifth must bounce immediately.
+    let (tx, rx) = mpsc::channel::<(usize, Result<Vec<u8>, DqError>)>();
+    for i in 0..5 {
+        let tx = tx.clone();
+        mux.request(
+            conn.id,
+            bin::OP_EXECUTE,
+            vec![0u8; 64],
+            Box::new(move |res| {
+                let _ = tx.send((i, res));
+            }),
+        );
+    }
+    let (i, res) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(i, 4, "only the over-cap request may complete");
+    match res {
+        Err(DqError::Io(msg)) => assert!(msg.contains("backpressure"), "unexpected msg: {msg}"),
+        other => panic!("expected Io(backpressure), got {other:?}"),
+    }
+
+    mux.shutdown();
+    let _ = peer.join();
+}
+
+#[test]
+fn mux_worker_channel_executes_against_a_real_worker() {
+    let _serial = gauge_guard();
+    let mgr = fake_manager();
+    let mut worker = qsim_worker(&mgr.local_addr().to_string());
+
+    let mux = Mux::new(MuxConfig::default());
+    let conn = mux.connect(worker.listen_addr).unwrap();
+    let channel = MuxWorkerChannel::new(mux.clone(), conn.id);
+    assert!(channel.is_async());
+
+    let cfg = QuClassiConfig::new(5, 2).unwrap();
+    let pairs = sample_pairs(&cfg, 6);
+    let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+
+    // blocking path
+    let fids = channel.execute(&cfg, &pairs).unwrap();
+    assert_eq!(fids, want);
+
+    // async path (the one the outbox dispatcher uses)
+    let (tx, rx) = mpsc::channel();
+    channel.execute_async(
+        &cfg,
+        &pairs,
+        Box::new(move |res| {
+            let _ = tx.send(res);
+        }),
+    );
+    let fids = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    assert_eq!(fids, want);
+
+    // a worker-side validation error comes back typed over the wire
+    let err = mux.call(conn.id, bin::OP_EXECUTE, bin::encode_jobs(&[])).unwrap_err();
+    assert!(matches!(err, DqError::Protocol(ref m) if m.contains("empty")), "{err}");
+
+    mux.shutdown();
+    worker.stop();
+}
+
+#[test]
+fn old_json_worker_interops_with_a_new_manager() {
+    let _serial = gauge_guard();
+    let manager = Manager::new(ManagerConfig::default());
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // A worker predating the binary plane: framed-JSON RPC only. The
+    // manager's mux dial-back must fail its handshake cleanly and fall
+    // back to the JSON channel.
+    let worker_srv = {
+        let handler = |op: &str, params: &Value| -> Result<Value, DqError> {
+            match op {
+                "execute" => {
+                    let n = params.req_arr("circuits")?.len();
+                    Ok(Value::obj().with("fids", vec![0.25f32; n].as_slice()))
+                }
+                other => Err(DqError::Protocol(format!("unexpected {other}"))),
+            }
+        };
+        RpcServer::serve("127.0.0.1:0", Arc::new(handler)).unwrap()
+    };
+    let reg = RpcClient::connect(addr.as_str(), Duration::from_secs(5)).unwrap();
+    let resp = reg
+        .call(
+            "register",
+            Value::obj()
+                .with("max_qubits", 5usize)
+                .with("addr", worker_srv.local_addr().to_string())
+                .with("cru", 0.0)
+                .with("threads", 1usize),
+        )
+        .unwrap();
+    assert!(resp.req_u64("worker_id").unwrap() >= 1);
+
+    let client = RemoteClient::connect(&addr).unwrap();
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let fids = client.execute_bank(&cfg, &sample_pairs(&cfg, 4)).unwrap();
+    assert_eq!(fids, vec![0.25; 4]);
+
+    manager.shutdown();
+}
+
+#[test]
+fn old_json_manager_interops_with_a_new_worker() {
+    let _serial = gauge_guard();
+    let mgr = fake_manager();
+    let mut worker = qsim_worker(&mgr.local_addr().to_string());
+
+    // A manager predating the mux plane dials the worker with the
+    // framed-JSON client; the worker's dual-codec listener sniffs the
+    // first frame and serves the legacy path on the same port.
+    let json = RpcClient::connect(worker.listen_addr, Duration::from_secs(5)).unwrap();
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs = sample_pairs(&cfg, 3);
+    let jobs: Vec<Value> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (thetas, data))| {
+            dqulearn::coordinator::CircuitJob {
+                id: i as u64,
+                client: 0,
+                bank: 0,
+                index: i,
+                config: cfg,
+                thetas: thetas.clone(),
+                data: data.clone(),
+            }
+            .to_wire()
+        })
+        .collect();
+    let resp = json.call("execute", Value::obj().with("circuits", jobs)).unwrap();
+    let fids = resp.req_f32_vec("fids").unwrap();
+    assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
+
+    // …and the binary plane stays available on the very same socket.
+    let mux = Mux::new(MuxConfig::default());
+    let conn = mux.connect(worker.listen_addr).unwrap();
+    assert_eq!(conn.negotiated.version, bin::BIN_VERSION);
+    mux.shutdown();
+    worker.stop();
+}
