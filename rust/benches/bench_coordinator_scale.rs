@@ -28,10 +28,18 @@
 //! if the transport ever needs more than 3 OS threads
 //! (`transport_thread_count`) — the whole point of the plane.
 //!
+//! A fifth series is the shard scale (DESIGN.md §18): one-shot tenant
+//! churn (fresh session → one small bank → gone, 100k tenants in the
+//! full window) through a [`ShardManager`] at 1/2/4 shards over a
+//! constant 4-worker pool, on 16 driver threads. The contended resource
+//! is the per-shard manager lock, so churn throughput must scale with
+//! shard count: the run hard-fails unless the 4-shard cell at least
+//! doubles the 1-shard cell.
+//!
 //! Results are serialized via `wire/json` to `BENCH_coordinator.json`
 //! (override with `DQ_BENCH_OUT`) with `skewed` (steal-on/off),
-//! `journal` (off/batch/always/always16) and `mux_soak` series,
-//! seeding the repo's perf trajectory. When a committed baseline exists
+//! `journal` (off/batch/always/always16), `mux_soak` and `shard_scale`
+//! series, seeding the repo's perf trajectory. When a committed baseline exists
 //! (`DQ_BENCH_BASELINE`, default `../bench/baseline.json` relative to
 //! the crate root), any cell whose throughput falls below **half** the
 //! baseline value fails the run — the CI `bench-smoke` regression gate,
@@ -49,7 +57,8 @@ use dqulearn::benchlib::{BenchConfig, Table};
 use dqulearn::circuit::QuClassiConfig;
 use dqulearn::cluster::MuxWorkerChannel;
 use dqulearn::coordinator::{
-    JournalConfig, Manager, ManagerConfig, SyncPolicy, WorkerChannel, WorkerProfile,
+    JournalConfig, Manager, ManagerConfig, ShardConfig, ShardManager, SyncPolicy, WorkerChannel,
+    WorkerProfile,
 };
 use dqulearn::error::DqError;
 use dqulearn::model::exec::CircuitPair;
@@ -358,6 +367,110 @@ fn run_mux_soak(workers: usize, circuits_per_tenant: usize, bank: usize) -> Soak
     }
 }
 
+/// One shard-scale measurement: `tenants` one-shot tenants churn
+/// through a sharded pool (fresh session → one small bank → gone) on
+/// 16 driver threads over a constant 4-worker pool (least-populated
+/// registration spreads it across the shards). With instant workers,
+/// the contended resource is the per-shard manager lock — the series
+/// measures whether sharding actually buys dispatch parallelism.
+struct ShardScaleCell {
+    shards: usize,
+    tenants: usize,
+    circuits: usize,
+    secs: f64,
+    /// One-shot tenants (sessions) per second.
+    throughput: f64,
+    cross_steals: u64,
+}
+
+fn run_shard_scale_cell(shards: usize, tenants: usize, bank: usize) -> ShardScaleCell {
+    let sm = ShardManager::new(ShardConfig {
+        shards,
+        manager: ManagerConfig { max_batch: 8, ..Default::default() },
+        ..ShardConfig::default()
+    });
+    for _ in 0..4 {
+        sm.register(WorkerProfile::new(5), Arc::new(MockChannel));
+    }
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs: Vec<CircuitPair> = (0..bank)
+        .map(|_| (vec![0.1; cfg.n_params()], vec![0.2; cfg.n_features()]))
+        .collect();
+
+    let threads = 16usize;
+    let start = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let sm = sm.clone();
+            let pairs = pairs.clone();
+            let quota = tenants / threads + usize::from(t < tenants % threads);
+            std::thread::spawn(move || {
+                for _ in 0..quota {
+                    let session = sm.session();
+                    let fids = session.execute(cfg, &pairs).expect("shard-scale bank failed");
+                    assert_eq!(fids.len(), pairs.len());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("tenant thread panicked");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let cross_steals = sm.cross_steals();
+    sm.shutdown();
+
+    ShardScaleCell {
+        shards,
+        tenants,
+        circuits: tenants * bank,
+        secs,
+        throughput: tenants as f64 / secs.max(1e-9),
+        cross_steals,
+    }
+}
+
+fn shard_scale_to_wire(cells: &[ShardScaleCell]) -> Vec<Value> {
+    cells
+        .iter()
+        .map(|c| {
+            Value::obj()
+                .with("shards", c.shards)
+                .with("tenants", c.tenants)
+                .with("circuits", c.circuits)
+                .with("secs", c.secs)
+                .with("throughput", c.throughput)
+                .with("cross_steals", c.cross_steals)
+        })
+        .collect()
+}
+
+/// Baseline gate for the shard-scale series (half-the-floor rule,
+/// matched by shard count; throughput is one-shot tenants per second).
+fn shard_scale_regressions(cells: &[ShardScaleCell], baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let Some(base) = baseline.get("shard_scale").and_then(Value::as_arr) else {
+        return failures;
+    };
+    for b in base {
+        let (Some(shards), Some(thr)) = (
+            b.get("shards").and_then(Value::as_usize),
+            b.get("throughput").and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        if let Some(c) = cells.iter().find(|c| c.shards == shards) {
+            if c.throughput < thr / 2.0 {
+                failures.push(format!(
+                    "shard_scale shards={shards}: {:.0} tenants/s < half of baseline {thr:.0}",
+                    c.throughput
+                ));
+            }
+        }
+    }
+    failures
+}
+
 fn journal_to_wire(cells: &[JournalCell]) -> Vec<Value> {
     cells
         .iter()
@@ -588,8 +701,30 @@ fn main() {
         soak.workers, soak.circuits, soak.secs, soak.throughput, soak.transport_threads
     );
 
+    // Shard scale: one-shot tenant churn through the sharded co-Manager
+    // at 1/2/4 shards over a constant 4-worker pool (DESIGN.md §18).
+    let churn_tenants = bench_cfg.max_samples * 500; // 15k fast / 100k full
+    let shard_cells: Vec<ShardScaleCell> = [1usize, 2, 4]
+        .iter()
+        .map(|&s| run_shard_scale_cell(s, churn_tenants, 2))
+        .collect();
+    let mut shard_table =
+        Table::new(&["shards", "tenants", "circuits", "secs", "tenants/s", "cross steals"]);
+    for c in &shard_cells {
+        shard_table.row(&[
+            c.shards.to_string(),
+            c.tenants.to_string(),
+            c.circuits.to_string(),
+            format!("{:.3}", c.secs),
+            format!("{:.0}", c.throughput),
+            c.cross_steals.to_string(),
+        ]);
+    }
+    println!("\nshard scale ({churn_tenants} one-shot tenants, 4 workers):");
+    print!("{}", shard_table.render());
+
     // Serialize the trajectory point (grid + skewed steal + journal +
-    // mux soak series).
+    // mux soak + shard scale series).
     let out_default = "BENCH_coordinator.json".to_string();
     let out_path = std::env::var("DQ_BENCH_OUT").unwrap_or(out_default);
     let soak_wire = Value::obj()
@@ -602,7 +737,8 @@ fn main() {
         &cells_to_wire(mode, &cells)
             .with("skewed", skew_to_wire(&skew_cells))
             .with("journal", journal_to_wire(&journal_cells))
-            .with("mux_soak", soak_wire),
+            .with("mux_soak", soak_wire)
+            .with("shard_scale", shard_scale_to_wire(&shard_cells)),
     );
     std::fs::write(&out_path, payload).expect("write BENCH_coordinator.json");
     println!("\nwrote {out_path}");
@@ -643,6 +779,19 @@ fn main() {
         std::process::exit(1);
     }
 
+    // Shard gate: churn throughput must actually scale with shard count
+    // — the tentpole claim of the sharded co-Manager. The contended
+    // resource is the per-shard lock, so 4 shards must at least double
+    // the single-shard (single-lock) cell.
+    let t1 = shard_cells[0].throughput;
+    let t4 = shard_cells[2].throughput;
+    if t4 < 2.0 * t1 {
+        eprintln!(
+            "shard scaling regression: 4 shards {t4:.0} tenants/s < 2x 1 shard {t1:.0} tenants/s"
+        );
+        std::process::exit(1);
+    }
+
     // Regression gate against the committed baseline, if present.
     let baseline_default = "../bench/baseline.json".to_string();
     let baseline_path = std::env::var("DQ_BENCH_BASELINE").unwrap_or(baseline_default);
@@ -653,6 +802,7 @@ fn main() {
                 failures.extend(skew_regressions(&skew_cells, &baseline));
                 failures.extend(journal_regressions(&journal_cells, &baseline));
                 failures.extend(soak_regressions(&soak, &baseline));
+                failures.extend(shard_scale_regressions(&shard_cells, &baseline));
                 if failures.is_empty() {
                     println!("baseline check OK ({baseline_path})");
                 } else {

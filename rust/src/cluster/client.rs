@@ -1,0 +1,233 @@
+//! [`ClusterClient`] — one client surface over every deployment shape.
+//!
+//! Before this trait, each backend grew its own entry points
+//! (`Manager::session`, `InProcCluster::new_client`,
+//! `RemoteClient::manager_stats`, …) and code written against one could
+//! not run against another. `ClusterClient` unifies them: a training
+//! loop, a dashboard, or the principal federation layer takes
+//! `&dyn ClusterClient` (or `Arc<dyn ClusterClient>`) and works against
+//! a local [`Manager`], a sharded [`ShardManager`], an in-process
+//! cluster, a remote TCP manager, or a principal federating all of the
+//! above. See DESIGN.md §18 for the migration table from the deprecated
+//! per-backend constructors.
+
+use std::sync::Arc;
+
+use super::inproc::InProcCluster;
+use super::tcp::RemoteClient;
+use crate::coordinator::{
+    ClientSession, Manager, ManagerStats, ShardManager, WorkerChannel, WorkerId, WorkerProfile,
+};
+use crate::error::DqError;
+
+/// The unified cluster surface: sessions in, workers in, stats out.
+///
+/// Every backend keeps its richer inherent API (striping controls,
+/// recovery, plane introspection); this trait is the portable core that
+/// all of them share. Operations a backend cannot perform return a
+/// typed [`DqError`] instead of being absent — e.g. worker registration
+/// through a [`RemoteClient`] (workers register by dialing the manager
+/// themselves), so callers handle the refusal uniformly.
+pub trait ClusterClient: Send + Sync {
+    /// A typed session for a fresh tenant.
+    fn session(&self) -> Result<ClientSession, DqError>;
+
+    /// Register a worker channel with the pool; returns the worker id.
+    fn register(
+        &self,
+        profile: WorkerProfile,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> Result<WorkerId, DqError>;
+
+    /// Aggregate pool counters.
+    fn stats(&self) -> Result<ManagerStats, DqError>;
+
+    /// Live worker count (scheduling-capacity gauge; the principal uses
+    /// it to rebalance registrations across agents).
+    fn worker_count(&self) -> usize;
+
+    /// Stop the backend's threads. A no-op for connection handles whose
+    /// server is owned elsewhere (e.g. [`RemoteClient`]).
+    fn shutdown(&self);
+
+    /// Human-readable backend description.
+    fn describe(&self) -> String;
+}
+
+impl ClusterClient for Manager {
+    fn session(&self) -> Result<ClientSession, DqError> {
+        Ok(Manager::session(self))
+    }
+
+    fn register(
+        &self,
+        profile: WorkerProfile,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> Result<WorkerId, DqError> {
+        Ok(Manager::register(self, profile, channel))
+    }
+
+    fn stats(&self) -> Result<ManagerStats, DqError> {
+        Ok(Manager::stats(self))
+    }
+
+    fn worker_count(&self) -> usize {
+        Manager::worker_count(self)
+    }
+
+    fn shutdown(&self) {
+        Manager::shutdown(self)
+    }
+
+    fn describe(&self) -> String {
+        format!("co-manager ({} workers)", Manager::worker_count(self))
+    }
+}
+
+impl ClusterClient for ShardManager {
+    fn session(&self) -> Result<ClientSession, DqError> {
+        Ok(ShardManager::session(self))
+    }
+
+    fn register(
+        &self,
+        profile: WorkerProfile,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> Result<WorkerId, DqError> {
+        Ok(ShardManager::register(self, profile, channel))
+    }
+
+    fn stats(&self) -> Result<ManagerStats, DqError> {
+        Ok(ShardManager::stats(self))
+    }
+
+    fn worker_count(&self) -> usize {
+        ShardManager::worker_count(self)
+    }
+
+    fn shutdown(&self) {
+        ShardManager::shutdown(self)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sharded co-manager ({} shards, {} workers)",
+            ShardManager::shards(self),
+            ShardManager::worker_count(self)
+        )
+    }
+}
+
+impl ClusterClient for InProcCluster {
+    fn session(&self) -> Result<ClientSession, DqError> {
+        Ok(InProcCluster::session(self))
+    }
+
+    fn register(
+        &self,
+        profile: WorkerProfile,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> Result<WorkerId, DqError> {
+        Ok(self.manager.register(profile, channel))
+    }
+
+    fn stats(&self) -> Result<ManagerStats, DqError> {
+        Ok(self.manager.stats())
+    }
+
+    fn worker_count(&self) -> usize {
+        self.manager.worker_count()
+    }
+
+    fn shutdown(&self) {
+        InProcCluster::shutdown(self)
+    }
+
+    fn describe(&self) -> String {
+        format!("in-proc cluster ({} workers)", self.manager.worker_count())
+    }
+}
+
+impl ClusterClient for RemoteClient {
+    fn session(&self) -> Result<ClientSession, DqError> {
+        RemoteClient::session(self)
+    }
+
+    fn register(
+        &self,
+        _profile: WorkerProfile,
+        _channel: Arc<dyn WorkerChannel>,
+    ) -> Result<WorkerId, DqError> {
+        Err(DqError::Protocol(
+            "remote workers register by dialing the manager themselves \
+             (worker::WorkerHandle::start); a client connection cannot \
+             inject a channel"
+                .into(),
+        ))
+    }
+
+    fn stats(&self) -> Result<ManagerStats, DqError> {
+        RemoteClient::stats(self).map(|(s, _, _)| s)
+    }
+
+    fn worker_count(&self) -> usize {
+        RemoteClient::stats(self).map(|(_, w, _)| w as usize).unwrap_or(0)
+    }
+
+    fn shutdown(&self) {
+        // The server is owned by the remote process; dropping the
+        // connection is the only local teardown.
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "remote client #{} ({} plane)",
+            self.client_id(),
+            if self.is_binary() { "binary" } else { "json" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::QuClassiConfig;
+    use crate::coordinator::ManagerConfig;
+    use crate::model::exec::CircuitPair;
+
+    /// The same generic driver runs a bank against any backend — the
+    /// portability claim the trait exists for.
+    fn drive(cluster: &dyn ClusterClient) {
+        let session = cluster.session().unwrap();
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs: Vec<CircuitPair> = vec![(vec![0.2; 4], vec![0.7; 4]); 4];
+        let fids = session.execute(cfg, &pairs).unwrap();
+        assert_eq!(fids.len(), 4);
+        let stats = cluster.stats().unwrap();
+        assert!(stats.completed >= 4);
+        assert!(cluster.worker_count() >= 1);
+    }
+
+    #[test]
+    fn trait_objects_cover_local_backends() {
+        let inproc = InProcCluster::builder().workers(&[5]).build().unwrap();
+        drive(&inproc);
+        assert!(ClusterClient::describe(&inproc).contains("in-proc"));
+        inproc.shutdown();
+
+        let manager = Manager::new(ManagerConfig::default());
+        // reuse the in-proc worker channel shape via a sharded pool too
+        let sm = ShardManager::new(crate::coordinator::ShardConfig {
+            shards: 2,
+            manager: ManagerConfig::default(),
+            ..Default::default()
+        });
+        for pool in [&manager as &dyn ClusterClient, &sm as &dyn ClusterClient] {
+            let session = pool.session().unwrap();
+            assert!(session.id() >= 1);
+        }
+        assert!(ClusterClient::describe(&sm).contains("2 shards"));
+        manager.shutdown();
+        sm.shutdown();
+    }
+}

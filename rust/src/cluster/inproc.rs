@@ -146,7 +146,11 @@ impl InProcCluster {
         self.manager.session()
     }
 
-    /// A raw client id (prefer [`InProcCluster::session`]).
+    /// A raw client id.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use InProcCluster::session (typed, portable across every ClusterClient backend)"
+    )]
     pub fn new_client(&self) -> u64 {
         self.manager.new_client()
     }

@@ -1,18 +1,32 @@
 //! Cluster assembly: wire the co-Manager, workers, and clients together.
 //!
+//! * [`client`] — [`ClusterClient`], the unified surface every
+//!   deployment shape implements (local manager, sharded manager,
+//!   in-proc cluster, remote connection, principal federation).
 //! * [`inproc`] — manager + N worker threads in one process (tests,
 //!   quickstart, benches). Runs the identical manager/scheduler code;
 //!   only the transport differs.
-//! * [`tcp`] — the distributed deployment: the manager's RPC server,
-//!   the manager→worker channels (multiplexed binary plane with JSON
-//!   fallback), and the remote client.
+//! * [`tcp`] — the distributed deployment: the manager's dual-codec RPC
+//!   server ([`serve_pool`] fronts a [`crate::coordinator::Manager`] or
+//!   [`crate::coordinator::ShardManager`] alike), the manager→worker
+//!   channels (multiplexed binary plane with JSON fallback), and the
+//!   remote client (binary-first dial through one shared negotiate
+//!   helper).
+//! * [`principal`] — the principal manager federating agent managers:
+//!   tenant routing, registration rebalancing, failover (DESIGN.md §18).
 //! * [`proto`] — the typed client↔manager wire messages
 //!   (`SubmitRequest`/`SubmitResponse`, bank-status codecs).
 
+pub mod client;
 pub mod inproc;
+pub mod principal;
 pub mod proto;
 pub mod tcp;
 
+pub use client::ClusterClient;
 pub use inproc::{InProcCluster, InProcClusterBuilder};
+pub use principal::Principal;
 pub use proto::{SubmitRequest, SubmitResponse};
-pub use tcp::{serve_manager, MuxWorkerChannel, RemoteClient};
+pub use tcp::{
+    serve_manager, serve_pool, serve_pool_json, ManagedPool, MuxWorkerChannel, RemoteClient,
+};

@@ -1,0 +1,511 @@
+//! Principal manager: principal–agent federation over [`ClusterClient`]
+//! backends (DESIGN.md §18).
+//!
+//! A [`Principal`] fronts several *agent* managers — local
+//! [`crate::coordinator::Manager`]s or [`crate::coordinator::ShardManager`]s,
+//! in-process clusters, or remote TCP managers — behind the same
+//! [`ClusterClient`] surface the agents themselves implement, so
+//! federations nest (a principal can be another principal's agent).
+//!
+//! Routing model:
+//!
+//! * **Sessions** bind lazily: a principal-side tenant id is mapped to
+//!   an agent (round-robin over healthy agents) on its first submit, and
+//!   sticks there so per-tenant WRR fairness accrues on one agent.
+//! * **Banks** route by a principal-side bank id to the agent bank that
+//!   backs them; wait/status/cancel follow the stored route.
+//! * **Workers** register onto the agent with the fewest live workers —
+//!   the principal's rebalancing keeps agent pools level as workers
+//!   churn.
+//! * **Failover**: an agent that fails a dial or a submit with a
+//!   transport error is marked unhealthy and the tenant is re-bound to
+//!   the next healthy agent (the submit retries there). Unhealthy
+//!   agents are retried last, and re-marked healthy the first time they
+//!   answer again. Banks already in flight on a dead agent are *not*
+//!   replayed — their waits surface the agent's error, exactly like a
+//!   lost worker inside one manager.
+//!
+//! Linearizability caveat: the principal serializes nothing across
+//! agents. Two tenants on different agents see independent orderings,
+//! and aggregate [`Principal::stats`] is a merge of per-agent snapshots
+//! taken at different instants (counters are eventually consistent,
+//! never double-counted). Per-tenant keys from different agents may
+//! collide in the merged view — agent id spaces are independent — so
+//! per-tenant rows in the federated stats are best-effort.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::client::ClusterClient;
+use crate::circuit::QuClassiConfig;
+use crate::coordinator::session::{ClientSession, SessionOps};
+use crate::coordinator::{BankStatus, ManagerStats, WorkerChannel, WorkerId, WorkerProfile};
+use crate::error::DqError;
+use crate::model::exec::CircuitPair;
+
+/// One federated agent: a named [`ClusterClient`] with a health flag.
+struct Agent {
+    name: String,
+    backend: Arc<dyn ClusterClient>,
+    healthy: AtomicBool,
+}
+
+/// A tenant's sticky binding onto one agent.
+#[derive(Clone)]
+struct Binding {
+    agent: usize,
+    ops: Arc<dyn SessionOps>,
+    agent_client: u64,
+}
+
+/// A submitted bank's route back to the agent that runs it.
+#[derive(Clone)]
+struct BankRoute {
+    agent: usize,
+    ops: Arc<dyn SessionOps>,
+    agent_bank: u64,
+}
+
+struct PrincipalInner {
+    agents: Vec<Agent>,
+    /// principal client id → agent binding (lazy, sticky).
+    bindings: Mutex<HashMap<u64, Binding>>,
+    /// principal bank id → agent bank route.
+    banks: Mutex<HashMap<u64, BankRoute>>,
+    next_client: AtomicU64,
+    next_bank: AtomicU64,
+    rr: AtomicU64,
+    failovers: AtomicU64,
+}
+
+/// The principal manager: cheap to clone, shared across threads.
+#[derive(Clone)]
+pub struct Principal {
+    inner: Arc<PrincipalInner>,
+}
+
+impl Principal {
+    /// Federate the given named agents. Order matters only as the
+    /// round-robin seed; health is tracked per agent at runtime.
+    pub fn new(agents: Vec<(String, Arc<dyn ClusterClient>)>) -> Principal {
+        Principal {
+            inner: Arc::new(PrincipalInner {
+                agents: agents
+                    .into_iter()
+                    .map(|(name, backend)| Agent {
+                        name,
+                        backend,
+                        healthy: AtomicBool::new(true),
+                    })
+                    .collect(),
+                bindings: Mutex::new(HashMap::new()),
+                banks: Mutex::new(HashMap::new()),
+                next_client: AtomicU64::new(1),
+                next_bank: AtomicU64::new(1),
+                rr: AtomicU64::new(0),
+                failovers: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Number of federated agents.
+    pub fn agents(&self) -> usize {
+        self.inner.agents.len()
+    }
+
+    /// Agent names in registration order.
+    pub fn agent_names(&self) -> Vec<String> {
+        self.inner.agents.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Per-agent health snapshot (same order as [`Principal::agent_names`]).
+    pub fn health(&self) -> Vec<bool> {
+        self.inner.agents.iter().map(|a| a.healthy.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Tenant re-bindings forced by agent failures so far.
+    pub fn failovers(&self) -> u64 {
+        self.inner.failovers.load(Ordering::Relaxed)
+    }
+
+    /// A typed session on the federation. The tenant binds to an agent
+    /// on first submit and stays there while the agent stays healthy.
+    pub fn session(&self) -> ClientSession {
+        let client = self.inner.next_client.fetch_add(1, Ordering::Relaxed);
+        ClientSession::new(Arc::new(self.clone()), client)
+    }
+
+    /// Register a worker on the healthy agent with the fewest live
+    /// workers (registration rebalancing). The returned id is scoped to
+    /// that agent.
+    pub fn register(
+        &self,
+        profile: WorkerProfile,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> Result<WorkerId, DqError> {
+        let mut order: Vec<usize> = (0..self.inner.agents.len()).collect();
+        // fewest workers first; unhealthy agents sort last so capacity
+        // lands where it can be scheduled
+        order.sort_by_key(|&i| {
+            let a = &self.inner.agents[i];
+            (!a.healthy.load(Ordering::Relaxed), a.backend.worker_count())
+        });
+        let mut last = DqError::Unschedulable("principal has no agents".into());
+        for idx in order {
+            let agent = &self.inner.agents[idx];
+            match agent.backend.register(profile.clone(), channel.clone()) {
+                Ok(id) => {
+                    agent.healthy.store(true, Ordering::Relaxed);
+                    return Ok(id);
+                }
+                Err(e) => {
+                    agent.healthy.store(false, Ordering::Relaxed);
+                    last = e;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Merged counters across every agent that answers. Per-tenant rows
+    /// are best-effort (agent id spaces are independent; see module
+    /// docs); aggregate counters never double-count.
+    pub fn stats(&self) -> ManagerStats {
+        let mut out = ManagerStats::default();
+        for a in &self.inner.agents {
+            let Ok(s) = a.backend.stats() else { continue };
+            out.submitted += s.submitted;
+            out.completed += s.completed;
+            out.dispatches += s.dispatches;
+            out.requeues += s.requeues;
+            out.evictions += s.evictions;
+            out.cancelled += s.cancelled;
+            out.steals += s.steals;
+            out.pruned_tenants += s.pruned_tenants;
+            out.retired.merge(&s.retired);
+            for (client, t) in &s.per_tenant {
+                out.per_tenant.entry(*client).or_default().merge(t);
+            }
+        }
+        out
+    }
+
+    /// Live workers across all agents.
+    pub fn worker_count(&self) -> usize {
+        self.inner.agents.iter().map(|a| a.backend.worker_count()).sum()
+    }
+
+    /// Shut down every agent (the principal owns its federation's
+    /// lifecycle; wrap agents in a no-op [`ClusterClient`] if not).
+    pub fn shutdown(&self) {
+        for a in &self.inner.agents {
+            a.backend.shutdown();
+        }
+    }
+
+    /// An existing binding, or a fresh one on a healthy agent. Healthy
+    /// agents are tried first (round-robin from a moving seed); a second
+    /// pass retries the sick ones so a recovered agent rejoins without
+    /// operator action.
+    fn bind(&self, pclient: u64) -> Result<Binding, DqError> {
+        if let Some(b) = self.inner.bindings.lock().expect("bindings poisoned").get(&pclient) {
+            return Ok(b.clone());
+        }
+        let n = self.inner.agents.len();
+        if n == 0 {
+            return Err(DqError::Unschedulable("principal has no agents".into()));
+        }
+        let start = self.inner.rr.fetch_add(1, Ordering::Relaxed) as usize;
+        let mut last = DqError::Unschedulable("no healthy agent".into());
+        for pass in 0..2 {
+            for k in 0..n {
+                let idx = (start + k) % n;
+                let agent = &self.inner.agents[idx];
+                let healthy = agent.healthy.load(Ordering::Relaxed);
+                if (pass == 0) != healthy {
+                    continue;
+                }
+                match agent.backend.session() {
+                    Ok(session) => {
+                        agent.healthy.store(true, Ordering::Relaxed);
+                        let b = Binding {
+                            agent: idx,
+                            ops: session.ops(),
+                            agent_client: session.id(),
+                        };
+                        return Ok(self
+                            .inner
+                            .bindings
+                            .lock()
+                            .expect("bindings poisoned")
+                            .entry(pclient)
+                            .or_insert(b)
+                            .clone());
+                    }
+                    Err(e) => {
+                        agent.healthy.store(false, Ordering::Relaxed);
+                        crate::log_warn!(
+                            "principal",
+                            "agent '{}' failed session dial: {e}",
+                            agent.name
+                        );
+                        last = e;
+                    }
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Drop a failed binding and mark its agent unhealthy.
+    fn fail_over(&self, pclient: u64, agent: usize) {
+        self.inner.agents[agent].healthy.store(false, Ordering::Relaxed);
+        self.inner.bindings.lock().expect("bindings poisoned").remove(&pclient);
+        self.inner.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn route(&self, pbank: u64) -> Result<BankRoute, DqError> {
+        self.inner
+            .banks
+            .lock()
+            .expect("banks poisoned")
+            .get(&pbank)
+            .cloned()
+            .ok_or_else(|| DqError::Protocol(format!("unknown bank {pbank}")))
+    }
+}
+
+/// A transport-level failure: the *agent* (not a bank) is suspect.
+fn is_transport(e: &DqError) -> bool {
+    matches!(e, DqError::Io(_))
+}
+
+impl SessionOps for Principal {
+    fn submit(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<u64, DqError> {
+        let attempts = self.inner.agents.len().max(1);
+        let mut last = DqError::Unschedulable("principal has no agents".into());
+        for _ in 0..attempts {
+            let b = self.bind(client)?;
+            match b.ops.submit(b.agent_client, config, pairs) {
+                Ok(agent_bank) => {
+                    let pbank = self.inner.next_bank.fetch_add(1, Ordering::Relaxed);
+                    self.inner.banks.lock().expect("banks poisoned").insert(
+                        pbank,
+                        BankRoute { agent: b.agent, ops: b.ops, agent_bank },
+                    );
+                    return Ok(pbank);
+                }
+                Err(e) if is_transport(&e) => {
+                    crate::log_warn!(
+                        "principal",
+                        "agent '{}' lost mid-submit; re-binding tenant {client}: {e}",
+                        self.inner.agents[b.agent].name
+                    );
+                    self.fail_over(client, b.agent);
+                    last = e;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last)
+    }
+
+    fn wait(&self, bank: u64, timeout: Option<Duration>) -> Result<Vec<f32>, DqError> {
+        let r = self.route(bank)?;
+        let res = r.ops.wait(r.agent_bank, timeout);
+        if let Err(e) = &res {
+            if is_transport(e) {
+                self.inner.agents[r.agent].healthy.store(false, Ordering::Relaxed);
+            }
+        }
+        res
+    }
+
+    fn status(&self, bank: u64) -> Result<BankStatus, DqError> {
+        let r = self.route(bank)?;
+        r.ops.status(r.agent_bank)
+    }
+
+    fn cancel(&self, bank: u64) -> Result<usize, DqError> {
+        let r = self.route(bank)?;
+        r.ops.cancel(r.agent_bank)
+    }
+}
+
+impl ClusterClient for Principal {
+    fn session(&self) -> Result<ClientSession, DqError> {
+        Ok(Principal::session(self))
+    }
+
+    fn register(
+        &self,
+        profile: WorkerProfile,
+        channel: Arc<dyn WorkerChannel>,
+    ) -> Result<WorkerId, DqError> {
+        Principal::register(self, profile, channel)
+    }
+
+    fn stats(&self) -> Result<ManagerStats, DqError> {
+        Ok(Principal::stats(self))
+    }
+
+    fn worker_count(&self) -> usize {
+        Principal::worker_count(self)
+    }
+
+    fn shutdown(&self) {
+        Principal::shutdown(self)
+    }
+
+    fn describe(&self) -> String {
+        format!("principal ({} agents, {} workers)", self.agents(), self.worker_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::InProcCluster;
+
+    fn inproc_agent(qubits: usize) -> Arc<dyn ClusterClient> {
+        Arc::new(InProcCluster::builder().workers(&[qubits]).build().unwrap())
+    }
+
+    fn pairs(n: usize) -> Vec<CircuitPair> {
+        vec![(vec![0.25; 4], vec![0.5; 4]); n]
+    }
+
+    #[test]
+    fn principal_routes_and_completes_across_agents() {
+        let p = Principal::new(vec![
+            ("east".into(), inproc_agent(5)),
+            ("west".into(), inproc_agent(5)),
+        ]);
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        // several tenants: round-robin binding spreads them over agents
+        for _ in 0..4 {
+            let session = p.session();
+            let fids = session.execute(cfg, &pairs(3)).unwrap();
+            assert_eq!(fids.len(), 3);
+        }
+        let stats = p.stats();
+        assert_eq!(stats.submitted, 12);
+        assert_eq!(stats.completed, 12);
+        assert_eq!(p.worker_count(), 2);
+        assert_eq!(p.failovers(), 0);
+        p.shutdown();
+    }
+
+    /// An agent whose transport is down: sessions dial fine but every
+    /// submit fails with Io.
+    struct DeadOps;
+
+    impl SessionOps for DeadOps {
+        fn submit(
+            &self,
+            _client: u64,
+            _config: QuClassiConfig,
+            _pairs: &[CircuitPair],
+        ) -> Result<u64, DqError> {
+            Err(DqError::Io("agent unreachable".into()))
+        }
+        fn wait(&self, _bank: u64, _t: Option<Duration>) -> Result<Vec<f32>, DqError> {
+            Err(DqError::Io("agent unreachable".into()))
+        }
+        fn status(&self, _bank: u64) -> Result<BankStatus, DqError> {
+            Err(DqError::Io("agent unreachable".into()))
+        }
+        fn cancel(&self, _bank: u64) -> Result<usize, DqError> {
+            Err(DqError::Io("agent unreachable".into()))
+        }
+    }
+
+    struct DeadAgent;
+
+    impl ClusterClient for DeadAgent {
+        fn session(&self) -> Result<ClientSession, DqError> {
+            Ok(ClientSession::new(Arc::new(DeadOps), 1))
+        }
+        fn register(
+            &self,
+            _profile: WorkerProfile,
+            _channel: Arc<dyn WorkerChannel>,
+        ) -> Result<WorkerId, DqError> {
+            Err(DqError::Io("agent unreachable".into()))
+        }
+        fn stats(&self) -> Result<ManagerStats, DqError> {
+            Err(DqError::Io("agent unreachable".into()))
+        }
+        fn worker_count(&self) -> usize {
+            0
+        }
+        fn shutdown(&self) {}
+        fn describe(&self) -> String {
+            "dead agent".into()
+        }
+    }
+
+    #[test]
+    fn principal_fails_over_to_healthy_agent() {
+        // rr seed starts at agent 0 — the dead one — so the first submit
+        // exercises the failover path deterministically.
+        let p = Principal::new(vec![
+            ("dead".into(), Arc::new(DeadAgent) as Arc<dyn ClusterClient>),
+            ("live".into(), inproc_agent(5)),
+        ]);
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let session = p.session();
+        let fids = session.execute(cfg, &pairs(4)).unwrap();
+        assert_eq!(fids.len(), 4);
+        assert_eq!(p.failovers(), 1);
+        assert_eq!(p.health(), vec![false, true]);
+        // subsequent tenants bind straight to the live agent
+        let fids2 = p.session().execute(cfg, &pairs(2)).unwrap();
+        assert_eq!(fids2.len(), 2);
+        assert_eq!(p.failovers(), 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn registration_balances_onto_emptier_agent() {
+        // agent "big" starts with one worker; a fresh registration must
+        // land on "empty" (fewest live workers wins).
+        let empty: Arc<dyn ClusterClient> = Arc::new(
+            crate::coordinator::Manager::new(crate::coordinator::ManagerConfig::default()),
+        );
+        let big = inproc_agent(5);
+        let p = Principal::new(vec![("big".into(), big.clone()), ("empty".into(), empty.clone())]);
+        struct NoopChannel;
+        impl crate::coordinator::WorkerChannel for NoopChannel {
+            fn execute(
+                &self,
+                _config: &QuClassiConfig,
+                _pairs: &[CircuitPair],
+            ) -> Result<Vec<f32>, DqError> {
+                Ok(Vec::new())
+            }
+        }
+        p.register(WorkerProfile::new(7), Arc::new(NoopChannel)).unwrap();
+        assert_eq!(empty.worker_count(), 1);
+        assert_eq!(big.worker_count(), 1);
+        assert_eq!(p.worker_count(), 2);
+        p.shutdown();
+    }
+
+    #[test]
+    fn unknown_bank_is_a_typed_protocol_error() {
+        let p = Principal::new(vec![("only".into(), inproc_agent(5))]);
+        assert!(matches!(
+            SessionOps::wait(&p, 999, None),
+            Err(DqError::Protocol(_))
+        ));
+        p.shutdown();
+    }
+}

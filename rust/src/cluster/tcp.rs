@@ -1,8 +1,10 @@
 //! Distributed deployment over TCP: manager RPC server, manager→worker
 //! channel, and the remote client.
 //!
-//! Message flow (all framed JSON, `net::rpc` envelope; client↔manager
-//! payloads are the typed pairs in [`super::proto`]):
+//! Message flow (client↔manager payloads are the typed pairs in
+//! [`super::proto`]; each line exists on both planes — framed JSON
+//! through the `net::rpc` envelope, and the binary mux plane through the
+//! interned op ids in [`crate::wire::bin`]):
 //!
 //! ```text
 //! worker  -> manager : register {max_qubits, addr, cru, threads} -> {worker_id}
@@ -14,9 +16,17 @@
 //! manager -> worker  : execute {circuits}              -> {fids}
 //! ```
 //!
-//! Errors round-trip typed: a bank the manager fails with
-//! `DqError::Unschedulable` (or a client cancels to `Cancelled`) surfaces
-//! as that same variant on the remote side.
+//! **Negotiation is one code path.** Both dial directions — the
+//! manager's dial-back to a registering worker and
+//! [`RemoteClient::connect`] — go through
+//! [`crate::net::rpc::dial_plane`]: try the mux `DQMX` handshake first,
+//! fall back to framed JSON when the peer predates the binary plane.
+//! [`serve_pool`] serves both codecs on one port (the first four bytes
+//! of a connection disambiguate).
+//!
+//! Errors round-trip typed on either plane: a bank the manager fails
+//! with `DqError::Unschedulable` (or a client cancels to `Cancelled`)
+//! surfaces as that same variant on the remote side.
 //!
 //! Trust model: the protocol is *cooperative* — client ids, bank ids,
 //! and worker registration are unauthenticated sequential handles, so
@@ -30,10 +40,13 @@ use super::proto::{self, SubmitRequest, SubmitResponse};
 use crate::circuit::QuClassiConfig;
 use crate::coordinator::job::CircuitJob;
 use crate::coordinator::session::{ClientSession, SessionOps};
-use crate::coordinator::{BankStatus, Manager, WorkerChannel, WorkerProfile};
+use crate::coordinator::{
+    BankStatus, Manager, ManagerStats, ShardManager, WorkerChannel, WorkerId, WorkerProfile,
+};
 use crate::error::DqError;
 use crate::model::exec::{CircuitExecutor, CircuitPair};
-use crate::net::{Mux, MuxConfig, RpcClient, RpcServer};
+use crate::net::rpc::{dial_plane, Plane};
+use crate::net::{Mux, MuxConfig, MuxService, RpcClient, RpcServer};
 use crate::wire::{bin, Value};
 
 /// Build the per-dispatch job list a worker executes (ids are
@@ -65,11 +78,11 @@ fn dispatch_jobs(config: &QuClassiConfig, pairs: &[CircuitPair]) -> Vec<CircuitJ
 /// immediately escalated into a lost worker.
 struct RpcWorkerChannel {
     addr: String,
-    client: Mutex<Option<RpcClient>>,
+    client: Mutex<Option<Arc<RpcClient>>>,
 }
 
 impl RpcWorkerChannel {
-    fn new(addr: String, client: RpcClient) -> RpcWorkerChannel {
+    fn new(addr: String, client: Arc<RpcClient>) -> RpcWorkerChannel {
         RpcWorkerChannel { addr, client: Mutex::new(Some(client)) }
     }
 }
@@ -90,7 +103,7 @@ impl WorkerChannel for RpcWorkerChannel {
                 // RpcClient::connect retries under capped backoff +
                 // jitter for its whole budget before giving up.
                 match RpcClient::connect(self.addr.as_str(), Duration::from_secs(2)) {
-                    Ok(c) => *guard = Some(c),
+                    Ok(c) => *guard = Some(Arc::new(c)),
                     Err(e) => {
                         last = e;
                         continue;
@@ -160,16 +173,106 @@ impl WorkerChannel for MuxWorkerChannel {
     }
 }
 
-/// Expose a [`Manager`] on a TCP address. Returns the server handle
-/// (drop to stop accepting).
-///
-/// Worker dial-back negotiates the binary plane first: one shared
-/// [`Mux`] (created lazily on the first registration) multiplexes every
-/// worker that speaks it; a worker whose handshake fails — an old
-/// JSON-only build — gets the classic [`RpcClient`] channel instead.
-pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServer> {
+/// The manager surface the TCP plane serves. Implemented by the
+/// single-shard [`Manager`] and the sharded [`ShardManager`], so one
+/// server (and one wire protocol) fronts either deployment — remote
+/// peers cannot tell how many shards answer them.
+pub trait ManagedPool: Clone + Send + Sync + 'static {
+    /// Register a dialed-back worker channel; returns the worker id.
+    fn register(&self, profile: WorkerProfile, channel: Arc<dyn WorkerChannel>) -> WorkerId;
+    /// Record a worker heartbeat.
+    fn heartbeat(&self, worker: WorkerId, cru: f64) -> Result<(), DqError>;
+    /// Allocate a tenant id.
+    fn new_client(&self) -> u64;
+    /// Enqueue a bank of circuits.
+    fn submit_bank(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<u64, DqError>;
+    /// Block for a bank's fidelities (manager-configured timeout).
+    fn wait_bank(&self, bank: u64) -> Result<Vec<f32>, DqError>;
+    /// Block for a bank's fidelities with an explicit deadline.
+    fn wait_bank_timeout(&self, bank: u64, timeout: Duration) -> Result<Vec<f32>, DqError>;
+    /// Non-blocking bank snapshot.
+    fn bank_status(&self, bank: u64) -> Option<BankStatus>;
+    /// Was the bank cancelled (tombstone check)?
+    fn bank_cancelled(&self, bank: u64) -> bool;
+    /// Cancel a bank; returns queued circuits drained.
+    fn cancel_bank(&self, bank: u64) -> usize;
+    /// Aggregate counters.
+    fn stats(&self) -> ManagerStats;
+    /// Live worker count.
+    fn worker_count(&self) -> usize;
+    /// Pending circuit count.
+    fn queue_len(&self) -> usize;
+}
+
+macro_rules! impl_managed_pool {
+    ($ty:ty) => {
+        impl ManagedPool for $ty {
+            fn register(
+                &self,
+                profile: WorkerProfile,
+                channel: Arc<dyn WorkerChannel>,
+            ) -> WorkerId {
+                <$ty>::register(self, profile, channel)
+            }
+            fn heartbeat(&self, worker: WorkerId, cru: f64) -> Result<(), DqError> {
+                <$ty>::heartbeat(self, worker, cru)
+            }
+            fn new_client(&self) -> u64 {
+                <$ty>::new_client(self)
+            }
+            fn submit_bank(
+                &self,
+                client: u64,
+                config: QuClassiConfig,
+                pairs: &[CircuitPair],
+            ) -> Result<u64, DqError> {
+                <$ty>::submit_bank(self, client, config, pairs)
+            }
+            fn wait_bank(&self, bank: u64) -> Result<Vec<f32>, DqError> {
+                <$ty>::wait_bank(self, bank)
+            }
+            fn wait_bank_timeout(
+                &self,
+                bank: u64,
+                timeout: Duration,
+            ) -> Result<Vec<f32>, DqError> {
+                <$ty>::wait_bank_timeout(self, bank, timeout)
+            }
+            fn bank_status(&self, bank: u64) -> Option<BankStatus> {
+                <$ty>::bank_status(self, bank)
+            }
+            fn bank_cancelled(&self, bank: u64) -> bool {
+                <$ty>::bank_cancelled(self, bank)
+            }
+            fn cancel_bank(&self, bank: u64) -> usize {
+                <$ty>::cancel_bank(self, bank)
+            }
+            fn stats(&self) -> ManagerStats {
+                <$ty>::stats(self)
+            }
+            fn worker_count(&self) -> usize {
+                <$ty>::worker_count(self)
+            }
+            fn queue_len(&self) -> usize {
+                <$ty>::queue_len(self)
+            }
+        }
+    };
+}
+
+impl_managed_pool!(Manager);
+impl_managed_pool!(ShardManager);
+
+/// The JSON side of [`serve_pool`]: the classic envelope handler, shared
+/// by the dual-codec and JSON-only servers.
+fn json_handler<M: ManagedPool>(pool: M) -> Arc<dyn crate::net::RpcHandler> {
     let mux: Mutex<Option<Arc<Mux>>> = Mutex::new(None);
-    let handler = move |op: &str, params: &Value| -> Result<Value, DqError> {
+    Arc::new(move |op: &str, params: &Value| -> Result<Value, DqError> {
         match op {
             "register" => {
                 let max_qubits = params.req_usize("max_qubits")?;
@@ -182,77 +285,148 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
                     let mut slot = mux.lock().expect("mux slot poisoned");
                     slot.get_or_insert_with(|| Mux::new(MuxConfig::default())).clone()
                 };
-                let channel: Arc<dyn WorkerChannel> = match m.connect(addr.as_str()) {
-                    Ok(conn) => Arc::new(MuxWorkerChannel::new(m, conn.id)),
-                    Err(e) => {
-                        // JSON fallback: the worker predates the binary
-                        // plane (or refused the handshake).
-                        crate::log_info!(
-                            "cluster",
-                            "worker at {addr} falls back to JSON ({e})"
-                        );
-                        let rpc = RpcClient::connect(addr.as_str(), Duration::from_secs(5))
-                            .map_err(|e| DqError::Io(format!("dial worker back: {e}")))?;
-                        Arc::new(RpcWorkerChannel::new(addr, rpc))
-                    }
-                };
-                let id = manager
+                // Binary-first dial-back through the shared negotiate
+                // helper; a worker that predates the binary plane gets
+                // the classic JSON channel.
+                let channel: Arc<dyn WorkerChannel> =
+                    match dial_plane(&m, addr.as_str(), Duration::from_secs(5))
+                        .map_err(|e| DqError::Io(format!("dial worker back: {e}")))?
+                    {
+                        Plane::Bin { mux, conn } => Arc::new(MuxWorkerChannel::new(mux, conn)),
+                        Plane::Json(rpc) => Arc::new(RpcWorkerChannel::new(addr, rpc)),
+                    };
+                let id = pool
                     .register(WorkerProfile::new(max_qubits).cru(cru).threads(threads), channel);
                 Ok(Value::obj().with("worker_id", id))
             }
             "heartbeat" => {
                 let id = params.req_u64("worker_id")?;
                 let cru = params.req_f64("cru").unwrap_or(0.0);
-                manager.heartbeat(id, cru)?;
+                pool.heartbeat(id, cru)?;
                 Ok(Value::obj())
             }
-            "new_client" => Ok(Value::obj().with("client", manager.new_client())),
+            "new_client" => Ok(Value::obj().with("client", pool.new_client())),
             "submit_bank" => {
                 let req = SubmitRequest::from_wire(params)?;
-                let bank = manager.submit_bank(req.client, req.config, &req.pairs)?;
+                let bank = pool.submit_bank(req.client, req.config, &req.pairs)?;
                 Ok(SubmitResponse { bank, total: req.pairs.len() }.to_wire())
             }
             "wait_bank" => {
                 let bank = params.req_u64("bank")?;
                 let fids = match params.get("timeout_ms").and_then(Value::as_u64) {
-                    Some(ms) => manager.wait_bank_timeout(bank, Duration::from_millis(ms))?,
-                    None => manager.wait_bank(bank)?,
+                    Some(ms) => pool.wait_bank_timeout(bank, Duration::from_millis(ms))?,
+                    None => pool.wait_bank(bank)?,
                 };
                 Ok(Value::obj().with("fids", fids.as_slice()))
             }
             "bank_status" => {
                 let bank = params.req_u64("bank")?;
-                let status = manager.bank_status(bank).ok_or_else(|| {
-                    if manager.bank_cancelled(bank) {
-                        DqError::Cancelled(format!("bank {bank} cancelled"))
-                    } else {
-                        DqError::Protocol(format!("unknown bank {bank}"))
-                    }
-                })?;
+                let status = pool.bank_status(bank).ok_or_else(|| status_error(&pool, bank))?;
                 Ok(proto::bank_status_to_wire(&status))
             }
             "cancel_bank" => {
                 let bank = params.req_u64("bank")?;
-                Ok(Value::obj().with("drained", manager.cancel_bank(bank)))
+                Ok(Value::obj().with("drained", pool.cancel_bank(bank)))
             }
             "stats" => {
                 // The counters (incl. per-tenant wait histograms and
                 // steal/retention fields) serialize through the shared
                 // proto codec; the live pool/queue gauges ride on top.
-                Ok(proto::manager_stats_to_wire(&manager.stats())
-                    .with("workers", manager.worker_count())
-                    .with("queue", manager.queue_len()))
+                Ok(proto::manager_stats_to_wire(&pool.stats())
+                    .with("workers", pool.worker_count())
+                    .with("queue", pool.queue_len()))
             }
             other => Err(DqError::Protocol(format!("manager: unknown op '{other}'"))),
         }
-    };
-    RpcServer::serve(listen, Arc::new(handler))
+    })
 }
 
-/// [`SessionOps`] over the RPC connection: the transport behind remote
-/// [`ClientSession`]s.
+/// The binary side of [`serve_pool`]: the same ops keyed by the interned
+/// ids in [`crate::wire::bin`]. Handlers run inline on the connection's
+/// thread, so a blocking `wait_bank` stalls only its own connection —
+/// identical semantics to the JSON plane.
+fn bin_service<M: ManagedPool>(pool: M) -> Arc<dyn MuxService> {
+    Arc::new(move |op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+        match op {
+            bin::OP_NEW_CLIENT => Ok(bin::encode_u64(pool.new_client())),
+            bin::OP_SUBMIT_BANK => {
+                let req = bin::decode_submit_request(payload)?;
+                let bank = pool.submit_bank(req.client, req.config, &req.pairs)?;
+                Ok(bin::encode_submit_response(&SubmitResponse { bank, total: req.pairs.len() }))
+            }
+            bin::OP_WAIT_BANK => {
+                let (bank, timeout_ms) = bin::decode_wait_request(payload)?;
+                let fids = match timeout_ms {
+                    Some(ms) => pool.wait_bank_timeout(bank, Duration::from_millis(ms))?,
+                    None => pool.wait_bank(bank)?,
+                };
+                Ok(bin::encode_fids(&fids))
+            }
+            bin::OP_BANK_STATUS => {
+                let bank = bin::decode_u64(payload)?;
+                let status = pool.bank_status(bank).ok_or_else(|| status_error(&pool, bank))?;
+                Ok(bin::encode_bank_status(&status))
+            }
+            bin::OP_CANCEL_BANK => {
+                let bank = bin::decode_u64(payload)?;
+                Ok(bin::encode_u64(pool.cancel_bank(bank) as u64))
+            }
+            bin::OP_STATS => Ok(bin::encode_pool_stats(
+                &pool.stats(),
+                pool.worker_count() as u64,
+                pool.queue_len() as u64,
+            )),
+            other => Err(DqError::Protocol(format!("manager: unknown binary op {other}"))),
+        }
+    })
+}
+
+/// The typed error for a missing bank: cancelled tombstones surface as
+/// [`DqError::Cancelled`], anything else is an unknown id.
+fn status_error<M: ManagedPool>(pool: &M, bank: u64) -> DqError {
+    if pool.bank_cancelled(bank) {
+        DqError::Cancelled(format!("bank {bank} cancelled"))
+    } else {
+        DqError::Protocol(format!("unknown bank {bank}"))
+    }
+}
+
+/// Expose a [`Manager`] on a TCP address. Returns the server handle
+/// (drop to stop accepting). Shorthand for [`serve_pool`].
+pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServer> {
+    serve_pool(manager, listen)
+}
+
+/// Expose any [`ManagedPool`] — a [`Manager`] or a [`ShardManager`] — on
+/// a TCP address, serving both codecs on one port: connections opening
+/// with the mux magic get the binary plane, everything else framed JSON.
+///
+/// Worker dial-back likewise negotiates the binary plane first: one
+/// shared [`Mux`] (created lazily on the first registration) multiplexes
+/// every worker that speaks it; a worker whose handshake fails — an old
+/// JSON-only build — gets the classic [`RpcClient`] channel instead.
+pub fn serve_pool<M: ManagedPool>(pool: M, listen: &str) -> std::io::Result<RpcServer> {
+    RpcServer::serve_bin(listen, json_handler(pool.clone()), bin_service(pool))
+}
+
+/// [`serve_pool`] restricted to framed JSON — the legacy/debug surface.
+/// Dialers that try the binary handshake fall back cleanly, exactly as
+/// against a pre-binary build.
+pub fn serve_pool_json<M: ManagedPool>(pool: M, listen: &str) -> std::io::Result<RpcServer> {
+    RpcServer::serve(listen, json_handler(pool))
+}
+
+/// [`SessionOps`] over the negotiated connection: the transport behind
+/// remote [`ClientSession`]s. Every op exists on both planes; the match
+/// arms are the *entire* divergence between binary and JSON clients.
 struct RemoteOps {
-    rpc: Arc<RpcClient>,
+    plane: Arc<Plane>,
+}
+
+impl RemoteOps {
+    fn bin_call(mux: &Arc<Mux>, conn: u64, op: u32, payload: Vec<u8>) -> Result<Vec<u8>, DqError> {
+        mux.call(conn, op, payload)
+    }
 }
 
 impl SessionOps for RemoteOps {
@@ -263,66 +437,155 @@ impl SessionOps for RemoteOps {
         pairs: &[CircuitPair],
     ) -> Result<u64, DqError> {
         let req = SubmitRequest { client, config, pairs: pairs.to_vec() };
-        let resp = self.rpc.call("submit_bank", req.to_wire())?;
-        Ok(SubmitResponse::from_wire(&resp)?.bank)
+        match &*self.plane {
+            Plane::Bin { mux, conn } => {
+                let bytes =
+                    Self::bin_call(mux, *conn, bin::OP_SUBMIT_BANK, bin::encode_submit_request(&req))?;
+                Ok(bin::decode_submit_response(&bytes)?.bank)
+            }
+            Plane::Json(rpc) => {
+                let resp = rpc.call("submit_bank", req.to_wire())?;
+                Ok(SubmitResponse::from_wire(&resp)?.bank)
+            }
+        }
     }
 
     fn wait(&self, bank: u64, timeout: Option<Duration>) -> Result<Vec<f32>, DqError> {
-        let mut params = Value::obj().with("bank", bank);
-        if let Some(t) = timeout {
-            params.set("timeout_ms", t.as_millis() as u64);
+        let timeout_ms = timeout.map(|t| t.as_millis() as u64);
+        match &*self.plane {
+            Plane::Bin { mux, conn } => {
+                let bytes = Self::bin_call(
+                    mux,
+                    *conn,
+                    bin::OP_WAIT_BANK,
+                    bin::encode_wait_request(bank, timeout_ms),
+                )?;
+                bin::decode_fids(&bytes)
+            }
+            Plane::Json(rpc) => {
+                let mut params = Value::obj().with("bank", bank);
+                if let Some(ms) = timeout_ms {
+                    params.set("timeout_ms", ms);
+                }
+                let resp = rpc.call("wait_bank", params)?;
+                Ok(resp.req_f32_vec("fids")?)
+            }
         }
-        let resp = self.rpc.call("wait_bank", params)?;
-        Ok(resp.req_f32_vec("fids")?)
     }
 
     fn status(&self, bank: u64) -> Result<BankStatus, DqError> {
-        let resp = self.rpc.call("bank_status", Value::obj().with("bank", bank))?;
-        proto::bank_status_from_wire(&resp)
+        match &*self.plane {
+            Plane::Bin { mux, conn } => {
+                let bytes = Self::bin_call(mux, *conn, bin::OP_BANK_STATUS, bin::encode_u64(bank))?;
+                bin::decode_bank_status(&bytes)
+            }
+            Plane::Json(rpc) => {
+                let resp = rpc.call("bank_status", Value::obj().with("bank", bank))?;
+                proto::bank_status_from_wire(&resp)
+            }
+        }
     }
 
     fn cancel(&self, bank: u64) -> Result<usize, DqError> {
-        let resp = self.rpc.call("cancel_bank", Value::obj().with("bank", bank))?;
-        Ok(resp.req_usize("drained")?)
+        match &*self.plane {
+            Plane::Bin { mux, conn } => {
+                let bytes = Self::bin_call(mux, *conn, bin::OP_CANCEL_BANK, bin::encode_u64(bank))?;
+                Ok(bin::decode_u64(&bytes)? as usize)
+            }
+            Plane::Json(rpc) => {
+                let resp = rpc.call("cancel_bank", Value::obj().with("bank", bank))?;
+                Ok(resp.req_usize("drained")?)
+            }
+        }
     }
 }
 
 /// A client connected to a remote manager; hands out typed
 /// [`ClientSession`]s and implements [`CircuitExecutor`] itself so
 /// training code is deployment-agnostic.
+///
+/// The connection is negotiated binary-first through
+/// [`crate::net::rpc::dial_plane`]; [`RemoteClient::is_binary`] reports
+/// which plane answered.
 pub struct RemoteClient {
-    rpc: Arc<RpcClient>,
+    plane: Arc<Plane>,
     client_id: u64,
 }
 
 impl RemoteClient {
+    /// Dial a manager (binary-first, JSON fallback) and allocate this
+    /// connection's default client id.
     pub fn connect(manager_addr: &str) -> Result<RemoteClient, DqError> {
-        let rpc = RpcClient::connect(manager_addr, Duration::from_secs(5))
-            .map_err(|e| DqError::Io(format!("connect manager: {e}")))?;
-        let resp = rpc.call("new_client", Value::obj())?;
-        let client_id = resp.req_u64("client")?;
-        Ok(RemoteClient { rpc: Arc::new(rpc), client_id })
+        let mux = Mux::new(MuxConfig::default());
+        let plane = Arc::new(
+            dial_plane(&mux, manager_addr, Duration::from_secs(5))
+                .map_err(|e| DqError::Io(format!("connect manager: {e}")))?,
+        );
+        let client_id = Self::alloc_client(&plane)?;
+        Ok(RemoteClient { plane, client_id })
     }
 
+    fn alloc_client(plane: &Plane) -> Result<u64, DqError> {
+        match plane {
+            Plane::Bin { mux, conn } => {
+                bin::decode_u64(&mux.call(*conn, bin::OP_NEW_CLIENT, Vec::new())?)
+            }
+            Plane::Json(rpc) => Ok(rpc.call("new_client", Value::obj())?.req_u64("client")?),
+        }
+    }
+
+    /// This connection's default client id (the manager's tenant key).
     pub fn client_id(&self) -> u64 {
         self.client_id
     }
 
-    /// A typed session bound to this connection's client id. Multiple
-    /// calls allocate fresh tenant ids from the manager.
-    ///
-    /// Note: calls on one connection serialize; a long blocking `wait`
-    /// delays a concurrent `try_poll` issued through the same
-    /// `RemoteClient`. Poll-then-wait (or a second connection) if you
-    /// need overlap.
-    pub fn session(&self) -> Result<ClientSession, DqError> {
-        let resp = self.rpc.call("new_client", Value::obj())?;
-        let client = resp.req_u64("client")?;
-        Ok(ClientSession::new(Arc::new(RemoteOps { rpc: self.rpc.clone() }), client))
+    /// Did the dial negotiate the binary plane (vs JSON fallback)?
+    pub fn is_binary(&self) -> bool {
+        self.plane.is_binary()
     }
 
+    /// A typed session bound to a fresh tenant id. Multiple calls
+    /// allocate fresh tenant ids from the manager.
+    ///
+    /// Note: JSON-plane calls on one connection serialize, and
+    /// binary-plane handlers run inline on the server's per-connection
+    /// thread — either way a long blocking `wait` delays a concurrent
+    /// `try_poll` issued through the same `RemoteClient`. Poll-then-wait
+    /// (or a second connection) if you need overlap.
+    pub fn session(&self) -> Result<ClientSession, DqError> {
+        let client = Self::alloc_client(&self.plane)?;
+        Ok(ClientSession::new(Arc::new(RemoteOps { plane: self.plane.clone() }), client))
+    }
+
+    /// Typed pool statistics: aggregate counters plus the live worker
+    /// and queue-depth gauges. Works on either plane.
+    pub fn stats(&self) -> Result<(ManagerStats, u64, u64), DqError> {
+        match &*self.plane {
+            Plane::Bin { mux, conn } => {
+                bin::decode_pool_stats(&mux.call(*conn, bin::OP_STATS, Vec::new())?)
+            }
+            Plane::Json(rpc) => {
+                let v = rpc.call("stats", Value::obj())?;
+                let stats = proto::manager_stats_from_wire(&v)?;
+                Ok((stats, v.req_u64("workers")?, v.req_u64("queue")?))
+            }
+        }
+    }
+
+    /// Raw JSON stats envelope, kept for dashboards that scrape the
+    /// wire shape. On a binary connection the envelope is re-synthesized
+    /// locally from the typed stats.
+    #[deprecated(since = "0.1.0", note = "use RemoteClient::stats (typed, plane-agnostic)")]
     pub fn manager_stats(&self) -> Result<Value, DqError> {
-        self.rpc.call("stats", Value::obj())
+        match &*self.plane {
+            Plane::Json(rpc) => rpc.call("stats", Value::obj()),
+            Plane::Bin { .. } => {
+                let (stats, workers, queue) = self.stats()?;
+                Ok(proto::manager_stats_to_wire(&stats)
+                    .with("workers", workers)
+                    .with("queue", queue))
+            }
+        }
     }
 }
 
@@ -332,7 +595,7 @@ impl CircuitExecutor for RemoteClient {
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<Vec<f32>, DqError> {
-        let ops = RemoteOps { rpc: self.rpc.clone() };
+        let ops = RemoteOps { plane: self.plane.clone() };
         let bank = ops.submit(self.client_id, *config, pairs)?;
         ops.wait(bank, None)
     }
@@ -398,13 +661,102 @@ mod tests {
         let fids2 = handle.wait().unwrap();
         assert_eq!(fids2, fids);
 
-        let stats = client.manager_stats().unwrap();
-        assert_eq!(stats.req_u64("completed").unwrap(), 24);
-        assert_eq!(stats.req_u64("workers").unwrap(), 2);
+        // client↔manager negotiated the binary plane against the
+        // dual-codec server
+        assert!(client.is_binary());
+        let (stats, workers, _queue) = client.stats().unwrap();
+        assert_eq!(stats.completed, 24);
+        assert_eq!(workers, 2);
+        // the deprecated JSON-shaped envelope still answers
+        #[allow(deprecated)]
+        let raw = client.manager_stats().unwrap();
+        assert_eq!(raw.req_u64("completed").unwrap(), 24);
 
         w1.stop();
         w2.stop();
         manager.shutdown();
+    }
+
+    /// The same round trip against a JSON-only server: the client's
+    /// binary handshake fails, it falls back, and every op still works.
+    #[test]
+    fn json_fallback_cluster_end_to_end() {
+        let manager = Manager::new(ManagerConfig { heartbeat_period: 0.2, ..Default::default() });
+        let server = serve_pool_json(manager.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let mut w = WorkerHandle::start(
+            &addr,
+            WorkerOptions {
+                max_qubits: 5,
+                artifact_dir: "/nonexistent".into(),
+                heartbeat_period: 0.1,
+                listen: "127.0.0.1:0".to_string(),
+                threads: 1,
+            },
+        )
+        .unwrap();
+
+        let client = RemoteClient::connect(&addr).unwrap();
+        assert!(!client.is_binary());
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs: Vec<CircuitPair> = vec![(vec![0.3; 4], vec![0.6; 4]); 6];
+        let session = client.session().unwrap();
+        let fids = session.execute(cfg, &pairs).unwrap();
+        assert_eq!(fids.len(), 6);
+        let (stats, workers, _queue) = client.stats().unwrap();
+        assert_eq!(stats.completed, 6);
+        assert_eq!(workers, 1);
+
+        w.stop();
+        manager.shutdown();
+    }
+
+    /// A [`ShardManager`] behind the same server: remote clients and
+    /// workers cannot tell how many shards answer them, and the striped
+    /// routing completes banks end to end.
+    #[test]
+    fn sharded_pool_serves_tcp() {
+        use crate::coordinator::ShardConfig;
+        let sm = ShardManager::new(ShardConfig {
+            shards: 2,
+            manager: ManagerConfig { heartbeat_period: 0.2, ..Default::default() },
+            ..Default::default()
+        });
+        let server = serve_pool(sm.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let mk_worker = || {
+            WorkerHandle::start(
+                &addr,
+                WorkerOptions {
+                    max_qubits: 5,
+                    artifact_dir: "/nonexistent".into(),
+                    heartbeat_period: 0.1,
+                    listen: "127.0.0.1:0".to_string(),
+                    threads: 1,
+                },
+            )
+            .unwrap()
+        };
+        let mut w1 = mk_worker();
+        let mut w2 = mk_worker();
+
+        let client = RemoteClient::connect(&addr).unwrap();
+        assert!(client.is_binary());
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs: Vec<CircuitPair> = vec![(vec![0.1; 4], vec![0.9; 4]); 10];
+        // two sessions land on different shards (round-robin client ids)
+        for _ in 0..2 {
+            let session = client.session().unwrap();
+            let fids = session.execute(cfg, &pairs).unwrap();
+            assert_eq!(fids.len(), 10);
+        }
+        let (stats, workers, _queue) = client.stats().unwrap();
+        assert_eq!(stats.completed, 20);
+        assert_eq!(workers, 2);
+
+        w1.stop();
+        w2.stop();
+        sm.shutdown();
     }
 
     /// Kill a worker mid-run: heartbeats stop, the manager evicts it, and

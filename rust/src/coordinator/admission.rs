@@ -95,6 +95,15 @@ impl AdmissionQueue {
         }
     }
 
+    /// Every non-default tenant weight, sorted by client id (journal
+    /// snapshots persist WRR policy through this; default-weight tenants
+    /// have no entry by the release invariant of [`Self::set_weight`]).
+    pub fn weights(&self) -> Vec<(u64, u32)> {
+        let mut v: Vec<(u64, u32)> = self.weights.iter().map(|(&c, &w)| (c, w)).collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Append a tenant's jobs (one submitted bank, already stamped with
     /// the client id) to its sub-queue.
     pub fn push_bank(&mut self, client: u64, jobs: Vec<CircuitJob>) {

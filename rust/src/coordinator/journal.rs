@@ -150,6 +150,15 @@ pub enum Record {
     },
     /// A full-state checkpoint; replay restarts from it (compaction).
     Snapshot(Snapshot),
+    /// An operator set a tenant's WRR weight (written before the queue
+    /// mutation, so a recovered manager resumes the same fairness
+    /// shares). Weight 1 (the default) acts as a release tombstone.
+    TenantWeight {
+        /// Tenant whose weight changed.
+        client: u64,
+        /// The new weight (clamped to >= 1 by the admission queue).
+        weight: u32,
+    },
 }
 
 /// A checkpoint of the manager's durable state (see [`Record::Snapshot`]).
@@ -164,6 +173,9 @@ pub struct Snapshot {
     pub cancelled: Vec<u64>,
     /// Live (resident, non-cancelled) banks.
     pub banks: Vec<SnapBank>,
+    /// Non-default tenant WRR weights (`(client, weight)`), so fairness
+    /// policy survives compaction. Default-weight tenants are absent.
+    pub weights: Vec<(u64, u32)>,
 }
 
 /// One live bank inside a [`Snapshot`].
@@ -214,6 +226,9 @@ pub struct RecoveredState {
     pub records: u64,
     /// Bytes truncated off the tail (torn/corrupt records).
     pub truncated_bytes: u64,
+    /// Non-default tenant WRR weights replayed from `TenantWeight`
+    /// records and snapshots (weight-1 writes act as removals).
+    pub weights: BTreeMap<u64, u32>,
 }
 
 /// One bank's replayed lifecycle state.
@@ -304,9 +319,19 @@ impl RecoveredState {
             Record::Resolved { bank } => {
                 self.banks.remove(&bank);
             }
+            Record::TenantWeight { client, weight } => {
+                self.max_client = self.max_client.max(client);
+                if weight <= 1 {
+                    self.weights.remove(&client);
+                } else {
+                    self.weights.insert(client, weight);
+                }
+            }
             Record::Snapshot(s) => {
                 self.banks.clear();
                 self.cancelled.clear();
+                self.weights.clear();
+                self.weights.extend(s.weights);
                 self.max_bank = self.max_bank.max(s.next_bank.saturating_sub(1));
                 self.max_client = self.max_client.max(s.next_client.saturating_sub(1));
                 self.cancelled.extend(s.cancelled);
@@ -351,6 +376,7 @@ const TAG_CANCELLED: u8 = 5;
 const TAG_FAILED: u8 = 6;
 const TAG_RESOLVED: u8 = 7;
 const TAG_SNAPSHOT: u8 = 8;
+const TAG_TENANT_WEIGHT: u8 = 9;
 
 fn put_u8(buf: &mut Vec<u8>, v: u8) {
     buf.push(v);
@@ -582,6 +608,16 @@ impl Record {
                         }
                     }
                 }
+                put_u32(&mut buf, s.weights.len() as u32);
+                for (client, weight) in &s.weights {
+                    put_u64(&mut buf, *client);
+                    put_u32(&mut buf, *weight);
+                }
+            }
+            Record::TenantWeight { client, weight } => {
+                put_u8(&mut buf, TAG_TENANT_WEIGHT);
+                put_u64(&mut buf, *client);
+                put_u32(&mut buf, *weight);
             }
         }
         buf
@@ -655,8 +691,18 @@ impl Record {
                     }
                     banks.push(SnapBank { bank, client, qubits, layers, recovered, failed, circuits });
                 }
-                Record::Snapshot(Snapshot { next_bank, next_client, cancelled, banks })
+                // Weights trail the snapshot; pre-weight snapshots (older
+                // journals) simply end here, so their absence is legal.
+                let mut weights = Vec::new();
+                if c.done().is_err() {
+                    let nw = c.count(12)?;
+                    for _ in 0..nw {
+                        weights.push((c.u64()?, c.u32()?));
+                    }
+                }
+                Record::Snapshot(Snapshot { next_bank, next_client, cancelled, banks, weights })
             }
+            TAG_TENANT_WEIGHT => Record::TenantWeight { client: c.u64()?, weight: c.u32()? },
             t => return Err(format!("bad record tag {t}")),
         };
         c.done()?;
@@ -1125,6 +1171,7 @@ mod tests {
             next_client: 2,
             cancelled: vec![13],
             banks: vec![],
+            weights: vec![(7, 4)],
         })
         .unwrap();
         assert!(j.bytes() < before);
@@ -1136,6 +1183,7 @@ mod tests {
         assert!(state.cancelled.contains(&13), "tombstone must survive compaction");
         assert!(state.cancelled.contains(&51));
         assert!(state.banks.is_empty());
+        assert_eq!(state.weights.get(&7), Some(&4), "weights must survive compaction");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -318,6 +318,12 @@ struct Inner {
     next_bank: AtomicU64,
     next_job: AtomicU64,
     next_client: AtomicU64,
+    /// Id striping `(offset, stride)` for sharded deployments
+    /// (DESIGN.md §18): bank/client/worker ids allocate congruent to
+    /// `offset` modulo `stride`, so `id % stride` routes any id back to
+    /// the shard that owns it. `(0, 1)` — the default — is the
+    /// unsharded identity.
+    stripe: (u64, u64),
     stop: AtomicBool,
 }
 
@@ -350,6 +356,22 @@ impl WeakManager {
 /// that was dropped without `shutdown()` before its next upgrade check.
 const ASSIGNER_BACKSTOP: Duration = Duration::from_millis(100);
 
+/// Sentinel worker id for batches executing on a *sibling shard's*
+/// worker (cross-shard steal, DESIGN.md §18). No registry ever
+/// allocates it, and [`Registry::release`] on an unknown worker is a
+/// no-op, so routing a foreign outcome through [`Manager::finish_batch`]
+/// under this id runs only the in-flight/batch/bank bookkeeping.
+pub(crate) const FOREIGN_WORKER: WorkerId = u64::MAX;
+
+/// Smallest id `>= min` congruent to `off` modulo `stride` (id striping
+/// for sharded managers; `stride <= 1` is the unsharded identity).
+fn first_in_stripe(min: u64, off: u64, stride: u64) -> u64 {
+    if stride <= 1 {
+        return min;
+    }
+    min + (off % stride + stride - min % stride) % stride
+}
+
 impl Manager {
     /// Start a co-Manager on the system clock.
     pub fn new(cfg: ManagerConfig) -> Manager {
@@ -361,11 +383,24 @@ impl Manager {
     /// (truncating any previous one); use [`Manager::recover`] to resume
     /// from existing records instead.
     pub fn with_clock(cfg: ManagerConfig, clock: Arc<dyn Clock>) -> Manager {
+        Self::with_clock_striped(cfg, clock, (0, 1))
+    }
+
+    /// [`Manager::with_clock`] with id striping: shard `off` of `stride`
+    /// allocates bank/client/worker ids congruent to `off` modulo
+    /// `stride`, so sibling shards' id spaces never collide and
+    /// `id % stride` is the shard-routing function
+    /// ([`super::shard::ShardManager`]).
+    pub(crate) fn with_clock_striped(
+        cfg: ManagerConfig,
+        clock: Arc<dyn Clock>,
+        stripe: (u64, u64),
+    ) -> Manager {
         let journal = cfg
             .journal
             .as_ref()
             .map(|jc| Mutex::new(Journal::create(jc).expect("create bank journal")));
-        Manager::build(cfg, clock, journal)
+        Manager::build(cfg, clock, journal, stripe)
     }
 
     /// Restart a co-Manager from its journal: replays the log at
@@ -392,18 +427,37 @@ impl Manager {
         cfg: ManagerConfig,
         clock: Arc<dyn Clock>,
     ) -> Result<(Manager, RecoveryReport), DqError> {
+        Self::recover_striped(cfg, clock, (0, 1))
+    }
+
+    /// [`Manager::recover_with_clock`] with id striping (see
+    /// [`Manager::with_clock_striped`]): allocation resumes at the first
+    /// id above everything the journal saw that also lands in this
+    /// shard's stripe.
+    pub(crate) fn recover_striped(
+        cfg: ManagerConfig,
+        clock: Arc<dyn Clock>,
+        stripe: (u64, u64),
+    ) -> Result<(Manager, RecoveryReport), DqError> {
         let Some(jc) = cfg.journal.clone() else {
             return Err(DqError::Protocol(
                 "Manager::recover requires ManagerConfig::journal".to_string(),
             ));
         };
         let (journal, state) = Journal::recover(&jc)?;
-        let m = Manager::build(cfg, clock, Some(Mutex::new(journal)));
+        let m = Manager::build(cfg, clock, Some(Mutex::new(journal)), stripe);
         let report = m.restore(state);
         Ok((m, report))
     }
 
-    fn build(cfg: ManagerConfig, clock: Arc<dyn Clock>, journal: Option<Mutex<Journal>>) -> Manager {
+    fn build(
+        cfg: ManagerConfig,
+        clock: Arc<dyn Clock>,
+        journal: Option<Mutex<Journal>>,
+        stripe: (u64, u64),
+    ) -> Manager {
+        let stride = stripe.1.max(1);
+        let off = stripe.0 % stride;
         let m = Manager {
             inner: Arc::new(Inner {
                 cfg,
@@ -419,15 +473,17 @@ impl Manager {
                 batches: Mutex::new(HashMap::new()),
                 stats: Mutex::new(ManagerStats::default()),
                 journal,
-                next_bank: AtomicU64::new(1),
+                next_bank: AtomicU64::new(first_in_stripe(1, off, stride)),
                 next_job: AtomicU64::new(1),
-                next_client: AtomicU64::new(1),
+                next_client: AtomicU64::new(first_in_stripe(1, off, stride)),
+                stripe: (off, stride),
                 stop: AtomicBool::new(false),
             }),
         };
         {
             let mut reg = m.inner.registry.lock().unwrap();
             reg.heartbeat_period = m.inner.cfg.heartbeat_period;
+            reg.set_stripe(off, stride);
         }
         // Assigner: the event-driven Algorithm-2 loop. Both threads hold
         // weak handles so an un-shutdown manager can still be dropped.
@@ -537,10 +593,25 @@ impl Manager {
             ..RecoveryReport::default()
         };
         // Ids never reuse across incarnations: allocation resumes above
-        // everything the journal ever saw.
-        self.inner.next_bank.store(state.max_bank + 1, Ordering::Relaxed);
-        self.inner.next_client.store(state.max_client + 1, Ordering::Relaxed);
+        // everything the journal ever saw, re-aligned to this shard's
+        // stripe (a journal written unsharded replays fine into shard
+        // `off` of `stride` — only future allocations are striped).
+        let (off, stride) = self.inner.stripe;
+        self.inner
+            .next_bank
+            .store(first_in_stripe(state.max_bank + 1, off, stride), Ordering::Relaxed);
+        self.inner
+            .next_client
+            .store(first_in_stripe(state.max_client + 1, off, stride), Ordering::Relaxed);
         self.inner.banks.restore_cancelled(state.cancelled.iter().copied());
+        {
+            // WRR policy resumes before any re-admitted work queues, so
+            // the very first post-recovery service cycle is already fair.
+            let mut q = self.inner.queue.lock().unwrap();
+            for (&client, &weight) in &state.weights {
+                q.set_weight(client, weight);
+            }
+        }
         for (bank, rb) in state.banks {
             if state.cancelled.contains(&bank) {
                 continue;
@@ -680,6 +751,7 @@ impl Manager {
             next_client: self.inner.next_client.load(Ordering::Relaxed),
             cancelled: self.inner.banks.cancelled_ids(),
             banks,
+            weights: q.weights(),
         };
         let res = journal.lock().unwrap().compact(snap);
         drop(in_flight);
@@ -758,7 +830,7 @@ impl Manager {
 
     /// Allocate a raw client id (prefer [`Manager::session`]).
     pub fn new_client(&self) -> u64 {
-        self.inner.next_client.fetch_add(1, Ordering::Relaxed)
+        self.inner.next_client.fetch_add(self.inner.stripe.1, Ordering::Relaxed)
     }
 
     /// Set a tenant's weighted-round-robin weight (batches per service
@@ -767,7 +839,13 @@ impl Manager {
     /// drain faster without ever starving lighter ones. Non-default
     /// weights persist until reset; setting a tenant back to 1 releases
     /// its weight entry (bounded state under client churn).
+    ///
+    /// Weights are durable: with a journal configured, the change is
+    /// logged (WAL-before-effect, like every other transition) so a
+    /// recovered manager resumes the same WRR shares instead of
+    /// resetting every tenant to the default.
     pub fn set_tenant_weight(&self, client: u64, weight: u32) {
+        self.journal_append(Record::TenantWeight { client, weight: weight.max(1) });
         self.inner.queue.lock().unwrap().set_weight(client, weight);
     }
 
@@ -800,7 +878,7 @@ impl Manager {
                 )));
             }
         }
-        let bank = self.inner.next_bank.fetch_add(1, Ordering::Relaxed);
+        let bank = self.inner.next_bank.fetch_add(self.inner.stripe.1, Ordering::Relaxed);
         // WAL: the bank is durable before it is visible anywhere —
         // rejecting the submit on an append failure beats accepting a
         // bank the next recovery would silently drop.
@@ -1363,6 +1441,123 @@ impl Manager {
             return Some(batch);
         }
         None
+    }
+
+    /// Cross-shard steal, victim side (DESIGN.md §18): carve the next
+    /// WRR-fair batch whose qubit demand satisfies `fits` out of this
+    /// shard's *pending* queue and account it exactly like a local
+    /// dispatch — WAL `Dispatched`, in-flight/batch bookkeeping, steal
+    /// and dispatch/queue-wait counters — so bank routing, cancel GC,
+    /// and crash recovery treat it identically to home-shard work. The
+    /// exported batch holds no registry reservation here (the thief
+    /// shard reserves on its own pool), so this shard's evictor can
+    /// never reclaim it; its outcome must come back through
+    /// [`Manager::finish_exported`].
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn export_batch(
+        &self,
+        fits: &dyn Fn(usize) -> bool,
+    ) -> Option<(QuClassiConfig, Vec<CircuitJob>, Vec<CircuitPair>, usize)> {
+        if self.inner.stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        let (config, jobs, stamps, demand) = {
+            let mut q = self.inner.queue.lock().unwrap();
+            if q.is_empty() {
+                return None;
+            }
+            let mut pick: Option<(u64, QuClassiConfig, usize)> = None;
+            for client in q.service_order() {
+                let Some(head) = q.head_of(client) else { continue };
+                let demand = head.demand();
+                if fits(demand) {
+                    pick = Some((client, head.config, demand));
+                    break;
+                }
+            }
+            let (client, config, demand) = pick?;
+            let (jobs, stamps) = q.take_batch(client, config, self.inner.cfg.max_batch.max(1));
+            debug_assert!(!jobs.is_empty());
+            let key = jobs[0].id;
+            let mut in_flight = self.inner.in_flight.lock().unwrap();
+            for j in &jobs {
+                in_flight.insert(j.id, j.clone());
+            }
+            self.inner
+                .batches
+                .lock()
+                .unwrap()
+                .insert(key, jobs.iter().map(|j| j.id).collect());
+            drop(in_flight);
+            drop(q);
+            (config, jobs, stamps, demand)
+        };
+        // Queued work left the shard: release blocked submitters.
+        self.inner.space_cv.notify_all();
+        {
+            let mut stats = self.inner.stats.lock().unwrap();
+            stats.steals += 1;
+            stats.per_tenant.entry(jobs[0].client).or_default().stolen += jobs.len() as u64;
+        }
+        let (config, jobs, pairs) =
+            self.begin_batch(Batch { config, jobs, enqueued: stamps });
+        Some((config, jobs, pairs, demand))
+    }
+
+    /// Cross-shard steal, result import: route a foreign execution's
+    /// outcome for a batch carved by [`Manager::export_batch`] through
+    /// this shard's normal completion path. [`FOREIGN_WORKER`] never
+    /// matches a registry entry (release on it is a no-op), so a failed
+    /// foreign run re-queues the circuits here — on their home shard —
+    /// exactly like a failed local dispatch.
+    pub(crate) fn finish_exported(&self, jobs: Vec<CircuitJob>, res: Result<Vec<f32>, DqError>) {
+        self.finish_batch(FOREIGN_WORKER, jobs, res);
+    }
+
+    /// Cross-shard steal, thief side: execute a sibling shard's exported
+    /// batch on this shard's own pool. The qubit reservation is keyed by
+    /// a *locally* allocated job id (sibling shards number their own
+    /// jobs, so a foreign key could collide), held across the
+    /// synchronous channel call, and released before returning. An
+    /// eviction racing the call reclaims the reservation as an orphan
+    /// with no batch members — harmless, and the trailing release
+    /// no-ops.
+    pub(crate) fn run_foreign(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+        demand: usize,
+    ) -> Result<Vec<f32>, DqError> {
+        let key = self.inner.next_job.fetch_add(1, Ordering::Relaxed);
+        let (worker, channel) = {
+            let mut reg = self.inner.registry.lock().unwrap();
+            let selected = match self.inner.cfg.noise_aware_alpha {
+                Some(alpha) => scheduler::select_noise_aware(&reg, demand, alpha),
+                None => scheduler::select(&reg, demand),
+            };
+            let Some(worker) = selected else {
+                return Err(DqError::Unschedulable(format!(
+                    "foreign batch needs {demand} qubits; none available on this shard"
+                )));
+            };
+            reg.reserve(worker, key, demand).expect("capacity checked under the lock");
+            // outboxes nests directly inside registry (DESIGN.md §13).
+            let channel = self.inner.outboxes.lock().unwrap().get(worker).map(|ob| ob.channel());
+            match channel {
+                Some(c) => (worker, c),
+                None => {
+                    reg.release(worker, key);
+                    return Err(DqError::WorkerLost(format!(
+                        "worker w{worker} lost its outbox mid-steal"
+                    )));
+                }
+            }
+        };
+        let res = channel.execute(config, pairs);
+        self.inner.registry.lock().unwrap().release(worker, key);
+        // Capacity freed on this shard: wake its assigner.
+        self.signal_event();
+        res
     }
 
     /// Execute one batch on the calling thread (an outbox execution

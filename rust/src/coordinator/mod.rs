@@ -49,6 +49,7 @@ mod outbox;
 pub mod registry;
 pub mod scheduler;
 pub mod session;
+pub mod shard;
 
 pub use admission::AdmissionQueue;
 pub use bankstore::BankStatus;
@@ -60,3 +61,4 @@ pub use manager::{
 pub use registry::{Registry, WorkerId, WorkerProfile, WorkerState};
 pub use scheduler::{select_worker, SchedulerKind};
 pub use session::{BankHandle, ClientSession, SessionOps};
+pub use shard::{ShardConfig, ShardManager};

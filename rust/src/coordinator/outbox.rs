@@ -172,6 +172,13 @@ impl Outbox {
         self.state.lock().expect("outbox poisoned").batches.len()
     }
 
+    /// The worker channel behind this outbox (cross-shard steal: a
+    /// sibling shard executes an exported batch directly on the channel,
+    /// bypassing the queue — the reservation it holds is its own).
+    pub fn channel(&self) -> Arc<dyn WorkerChannel> {
+        self.channel.clone()
+    }
+
     /// Wake the dispatcher without queueing anything (steal opportunity
     /// appeared on a sibling).
     pub fn nudge(&self) {

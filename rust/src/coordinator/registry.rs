@@ -102,6 +102,10 @@ impl WorkerState {
 pub struct Registry {
     workers: BTreeMap<WorkerId, WorkerState>,
     next_id: WorkerId,
+    /// Worker-id allocation stride (id striping for sharded managers,
+    /// DESIGN.md §18): shard `off` of `stride` hands out ids congruent
+    /// to `off` modulo `stride`. 1 — the default — is unsharded.
+    id_stride: u64,
     /// Heartbeat period in seconds (paper: 5 s, configurable).
     pub heartbeat_period: f64,
     /// Heartbeats missed before eviction (paper: 3).
@@ -111,7 +115,26 @@ pub struct Registry {
 impl Registry {
     /// Empty registry with the given heartbeat period (seconds).
     pub fn new(heartbeat_period: f64) -> Registry {
-        Registry { workers: BTreeMap::new(), next_id: 1, heartbeat_period, max_missed: 3 }
+        Registry {
+            workers: BTreeMap::new(),
+            next_id: 1,
+            id_stride: 1,
+            heartbeat_period,
+            max_missed: 3,
+        }
+    }
+
+    /// Stripe worker-id allocation: ids become congruent to `off`
+    /// modulo `stride`. Call before any registration (the manager does,
+    /// at build time); ids already handed out are not re-aligned.
+    pub fn set_stripe(&mut self, off: u64, stride: u64) {
+        let stride = stride.max(1);
+        let off = off % stride;
+        self.id_stride = stride;
+        if stride > 1 {
+            self.next_id = self.next_id
+                + (off % stride + stride - self.next_id % stride) % stride;
+        }
     }
 
     /// New Worker Registration (Algorithm 2 lines 2-6): OR = 0,
@@ -135,7 +158,7 @@ impl Registry {
     /// clamped to >= 1).
     pub fn register_profile(&mut self, profile: &WorkerProfile, now: f64) -> WorkerId {
         let id = self.next_id;
-        self.next_id += 1;
+        self.next_id += self.id_stride;
         let threads = profile.threads.max(1);
         self.workers.insert(
             id,

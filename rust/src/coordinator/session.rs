@@ -102,6 +102,12 @@ impl ClientSession {
         self.client
     }
 
+    /// The transport behind this session (the principal manager re-wraps
+    /// an agent's session under its own routing ops; `cluster::principal`).
+    pub(crate) fn ops(&self) -> Arc<dyn SessionOps> {
+        self.ops.clone()
+    }
+
     /// Submit a bank of circuits; returns a [`BankHandle`] future
     /// immediately (blocks only on queue backpressure).
     pub fn submit(

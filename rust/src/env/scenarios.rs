@@ -50,8 +50,10 @@ pub fn ibmq_figure(qubits: usize, calib: &Calibration, seed: u64) -> Vec<FigureR
                 heartbeat_period: 5.0,
                 tenancy: Tenancy::MultiTenant,
                 // paper-faithful: the published co-Manager has no work
-                // stealing, so figure regeneration keeps it off
+                // stealing and one manager, so figure regeneration keeps
+                // both off
                 steal: false,
+                shards: 1,
                 seed: seed + layers as u64 * 10 + workers as u64,
             };
             let jobs = vec![ClientJob {
@@ -87,8 +89,10 @@ pub fn gcp_one_client_figure(qubits: usize, calib: &Calibration, seed: u64) -> V
                 heartbeat_period: 5.0,
                 tenancy: Tenancy::MultiTenant,
                 // paper-faithful: the published co-Manager has no work
-                // stealing, so figure regeneration keeps it off
+                // stealing and one manager, so figure regeneration keeps
+                // both off
                 steal: false,
+                shards: 1,
                 seed: seed + layers as u64 * 10 + workers as u64,
             };
             let jobs = vec![ClientJob {
@@ -169,6 +173,7 @@ pub fn multi_tenant_figure(calib: &Calibration, seed: u64) -> Vec<TenancyRow> {
                 tenancy,
                 // paper-faithful: no stealing in the published co-Manager
                 steal: false,
+                shards: 1,
                 seed,
             },
             &jobs,

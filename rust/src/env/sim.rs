@@ -122,6 +122,16 @@ pub struct SimConfig {
     /// reproduces the pre-steal schedule exactly (service times are
     /// drawn at bind time either way, so the RNG stream is identical).
     pub steal: bool,
+    /// Shard the pool, mirroring [`crate::coordinator::ShardManager`]
+    /// (DESIGN.md §18): workers join shards round-robin by registration
+    /// order (the DES analog of live least-populated placement), a
+    /// client's circuits bind only to its home shard `client % shards`,
+    /// and — with [`SimConfig::steal`] on — an idle FIFO worker whose
+    /// own shard has no stealable backlog steals *cross-shard* (the
+    /// analog of the broker's idle-only export path; counted in
+    /// [`SimResult::cross_shard_steals`]). `0` or `1` is the unsharded
+    /// identity: the exact pre-shard code path and schedule.
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -147,6 +157,9 @@ pub struct SimResult {
     pub per_client: Vec<ClientResult>,
     /// DES events executed (sanity/observability).
     pub events: u64,
+    /// Circuits stolen across shard boundaries (0 when `shards <= 1`;
+    /// mirrors `ShardManager::cross_steals`).
+    pub cross_shard_steals: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -192,6 +205,12 @@ struct SimState {
     tenancy: Tenancy,
     /// FIFO-backlog work stealing on/off (see [`SimConfig::steal`]).
     steal: bool,
+    /// Shard count (normalized: `>= 1`; see [`SimConfig::shards`]).
+    shards: usize,
+    /// Worker → shard assignment (round-robin by registration order).
+    shard_of: BTreeMap<WorkerId, usize>,
+    /// Cross-shard steals taken so far.
+    cross_steals: u64,
     rng: Rng,
     next_job: u64,
     clients: Vec<ClientState>,
@@ -234,19 +253,48 @@ impl SimState {
         job
     }
 
-    /// Algorithm-2 selection, restricted by tenancy.
+    /// Algorithm-2 selection, restricted by tenancy and (when sharded)
+    /// the job's home shard.
     fn select(&self, job: &SimJob) -> Option<WorkerId> {
         let demand = job.config.qubit_demand();
-        match self.tenancy {
-            Tenancy::MultiTenant => scheduler::select(&self.registry, demand),
-            Tenancy::SingleTenant => {
-                // Only the current occupant may execute circuits.
-                if self.active_client() != Some(job.client) {
-                    return None;
-                }
-                scheduler::select(&self.registry, demand)
-            }
+        if self.tenancy == Tenancy::SingleTenant && self.active_client() != Some(job.client) {
+            // Only the current occupant may execute circuits.
+            return None;
         }
+        if self.shards <= 1 {
+            // Unsharded: the exact live scheduler entry point.
+            return scheduler::select(&self.registry, demand);
+        }
+        self.select_in_shard(demand, job.client % self.shards)
+    }
+
+    /// [`scheduler::select`] restricted to one shard's workers: the same
+    /// two-pass rule (strict `AR > D`, then relaxed `AR >= D`) with the
+    /// same deterministic tie-break `(CRU asc, AR desc, id asc)` — only
+    /// the candidate set shrinks, exactly as each live shard's manager
+    /// sees only its own registry.
+    fn select_in_shard(&self, demand: usize, shard: usize) -> Option<WorkerId> {
+        let pick = |strict: bool| {
+            let mut best: Option<(f64, std::cmp::Reverse<usize>, WorkerId)> = None;
+            for w in self.registry.workers() {
+                if self.shard_of.get(&w.id) != Some(&shard) {
+                    continue;
+                }
+                let fits =
+                    if strict { w.available() > demand } else { w.available() >= demand };
+                if fits {
+                    let key = (w.cru, std::cmp::Reverse(w.available()), w.id);
+                    if best.is_none()
+                        || (key.0, key.1, key.2)
+                            < (best.unwrap().0, best.unwrap().1, best.unwrap().2)
+                    {
+                        best = Some(key);
+                    }
+                }
+            }
+            best.map(|(_, _, id)| id)
+        };
+        pick(true).or_else(|| pick(false))
     }
 
     /// Service time for one circuit starting now on `worker`.
@@ -343,6 +391,12 @@ fn start_fifo(des: &mut Des<SimState>, st: &mut SimState, worker: WorkerId, job:
 /// bind-time service draw by the speed ratio — the DES mirror of
 /// `Manager::steal_for` (DESIGN.md §14), so tenancy experiments see the
 /// same policy the live manager runs.
+///
+/// Sharded pools steal in two phases, mirroring `ShardManager`: the
+/// thief's own shard is scanned first, and only when *nothing* in the
+/// home shard fits does the scan widen to foreign shards (the broker's
+/// idle-only export rule, DESIGN.md §18). Cross-shard takes bump
+/// `SimState::cross_steals`.
 fn steal_from_sibling(st: &mut SimState, thief: WorkerId) -> Option<(SimJob, f64)> {
     let thief_avail = st.registry.get(thief)?.available();
     if thief_avail == 0 {
@@ -350,17 +404,22 @@ fn steal_from_sibling(st: &mut SimState, thief: WorkerId) -> Option<(SimJob, f64
     }
     let occupant = st.active_client();
     let single = st.tenancy == Tenancy::SingleTenant;
+    let thief_shard = st.shard_of.get(&thief).copied().unwrap_or(0);
     // Victims deepest-backlog-first (ties: lowest id), falling through
     // to shallower siblings when nothing in a deeper backlog fits —
-    // the same scan order as `Manager::steal_for`.
-    let mut victims: Vec<(usize, WorkerId)> = st
+    // the same scan order as `Manager::steal_for`. Home-shard victims
+    // form the whole first phase; foreign shards are phase two.
+    let mut victims: Vec<(usize, WorkerId, bool)> = st
         .models
         .iter()
         .filter(|(id, model)| **id != thief && !model.backlog.is_empty())
-        .map(|(id, model)| (model.backlog.len(), *id))
+        .map(|(id, model)| {
+            let foreign = st.shard_of.get(id).copied().unwrap_or(0) != thief_shard;
+            (model.backlog.len(), *id, foreign)
+        })
         .collect();
-    victims.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
-    for (_, victim) in victims {
+    victims.sort_by(|a, b| a.2.cmp(&b.2).then(b.0.cmp(&a.0)).then(a.1.cmp(&b.1)));
+    for (_, victim, foreign) in victims {
         let Some(idx) = st.models[&victim].backlog.iter().position(|(job, _)| {
             job.config.qubit_demand() <= thief_avail
                 && (!single || occupant == Some(job.client))
@@ -374,6 +433,9 @@ fn steal_from_sibling(st: &mut SimState, thief: WorkerId) -> Option<(SimJob, f64
         st.registry.reserve(thief, job.seq, demand).expect("steal capacity checked");
         st.models.get_mut(&victim).unwrap().concurrent -= 1;
         st.models.get_mut(&thief).unwrap().concurrent += 1;
+        if foreign {
+            st.cross_steals += 1;
+        }
         let victim_speed = st.models[&victim].spec.speed;
         let thief_speed = st.models[&thief].spec.speed;
         return Some((job, s * victim_speed / thief_speed));
@@ -456,14 +518,23 @@ fn heartbeat(des: &mut Des<SimState>, st: &mut SimState, period: f64) {
 
 /// Run one workload through the simulated cluster.
 pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
+    let shards = cfg.shards.max(1);
     // Upfront placement validation: an unplaceable job would leave the
-    // heartbeat loop live forever; fail loudly instead.
+    // heartbeat loop live forever; fail loudly instead. Sharded pools
+    // must place every job on its *home* shard: the DES steals at the
+    // backlog (bound-circuit) level, so a circuit that can never bind at
+    // home can never be exported either (the live broker exports from
+    // the admission queue and has no such restriction — DESIGN.md §18).
     for j in jobs {
         let d = j.config.qubit_demand();
-        let placeable = cfg.workers.iter().any(|w| w.max_qubits >= d);
+        let placeable = cfg
+            .workers
+            .iter()
+            .enumerate()
+            .any(|(i, w)| (shards == 1 || i % shards == j.client % shards) && w.max_qubits >= d);
         assert!(
             placeable,
-            "client {} job needs {d} qubits; no eligible worker under {:?}",
+            "client {} job needs {d} qubits; no eligible worker on its shard under {:?}",
             j.client, cfg.tenancy
         );
     }
@@ -472,9 +543,11 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
     let mut registry = Registry::new(cfg.heartbeat_period);
     let mut worker_ids = Vec::new();
     let mut models = BTreeMap::new();
-    for spec in &cfg.workers {
+    let mut shard_of = BTreeMap::new();
+    for (i, spec) in cfg.workers.iter().enumerate() {
         let id = registry.register(spec.max_qubits, 0.0, 0.0);
         worker_ids.push(id);
+        shard_of.insert(id, i % shards);
         models.insert(
             id,
             WorkerModel { spec: *spec, concurrent: 0, busy: false, backlog: VecDeque::new() },
@@ -503,6 +576,9 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
         calib: cfg.calib.clone(),
         tenancy: cfg.tenancy.clone(),
         steal: cfg.steal,
+        shards,
+        shard_of,
+        cross_steals: 0,
         rng: Rng::new(cfg.seed),
         next_job: 0,
         clients,
@@ -545,6 +621,7 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
         cps: total as f64 / makespan.max(1e-9),
         per_client,
         events: des.executed(),
+        cross_shard_steals: st.cross_steals,
     }
 }
 
@@ -560,6 +637,7 @@ mod tests {
             heartbeat_period: 5.0,
             tenancy,
             steal: true,
+            shards: 1,
             seed: 42,
         }
     }
@@ -724,6 +802,7 @@ mod tests {
             heartbeat_period: 5.0,
             tenancy: Tenancy::MultiTenant,
             steal,
+            shards: 1,
             seed: 9,
         };
         let on = simulate(&mk(true), &jobs);
@@ -757,5 +836,114 @@ mod tests {
         // processor sharing means the 20q worker is not 4x faster, but it
         // must not be slower than the 5q worker
         assert!(big.makespan <= small.makespan * 1.05);
+    }
+
+    #[test]
+    fn zero_shards_is_unsharded_identity() {
+        // `shards: 0` normalizes to 1 and takes the exact pre-shard code
+        // path — bit-identical schedule.
+        let jobs = one_client(QuClassiConfig::new(5, 2).unwrap(), 100);
+        let mut cfg = base_config(&[5, 5], Tenancy::MultiTenant, EnvParams::ibmq_uncontrolled());
+        let a = simulate(&cfg, &jobs);
+        cfg.shards = 0;
+        let b = simulate(&cfg, &jobs);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.cross_shard_steals, 0);
+        assert_eq!(b.cross_shard_steals, 0);
+    }
+
+    #[test]
+    fn sharded_routing_pins_clients_to_home_shards() {
+        // Two shards, one FIFO worker each; shard 0's worker is 4x
+        // slower. With steal off, identical clients are fully isolated:
+        // client 0 (home shard 0) must finish far later than client 1 —
+        // proof the router never spills onto the foreign shard.
+        let cfg5 = QuClassiConfig::new(5, 1).unwrap();
+        let jobs = vec![
+            ClientJob { client: 0, config: cfg5, n_circuits: 60, bank_size: 20 },
+            ClientJob { client: 1, config: cfg5, n_circuits: 60, bank_size: 20 },
+        ];
+        let cfg = SimConfig {
+            workers: vec![
+                SimWorkerSpec { max_qubits: 64, speed: 0.25 },
+                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
+            ],
+            env: fifo_env(),
+            calib: Calibration::qiskit_like(),
+            heartbeat_period: 5.0,
+            tenancy: Tenancy::MultiTenant,
+            steal: false,
+            shards: 2,
+            seed: 7,
+        };
+        let r = simulate(&cfg, &jobs);
+        assert_eq!(r.cross_shard_steals, 0);
+        assert!(
+            r.per_client[0].finish > 2.0 * r.per_client[1].finish,
+            "shard isolation broken: {} vs {}",
+            r.per_client[0].finish,
+            r.per_client[1].finish
+        );
+        let r2 = simulate(&cfg, &jobs);
+        assert_eq!(r.makespan, r2.makespan, "sharded schedule not deterministic");
+    }
+
+    #[test]
+    fn cross_shard_steal_drains_overloaded_shard() {
+        // Shard 0's client submits a huge epoch; shard 1's client a tiny
+        // one. With steal on, shard 1's worker drains its own circuits,
+        // finds its home shard dry, and pulls from shard 0's backlog —
+        // the broker's idle-only export rule — strictly improving the
+        // epoch over the isolated schedule.
+        let cfg5 = QuClassiConfig::new(5, 1).unwrap();
+        let jobs = vec![
+            ClientJob { client: 0, config: cfg5, n_circuits: 200, bank_size: 64 },
+            ClientJob { client: 1, config: cfg5, n_circuits: 8, bank_size: 8 },
+        ];
+        let mk = |steal: bool| SimConfig {
+            workers: vec![
+                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
+                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
+            ],
+            env: fifo_env(),
+            calib: Calibration::qiskit_like(),
+            heartbeat_period: 5.0,
+            tenancy: Tenancy::MultiTenant,
+            steal,
+            shards: 2,
+            seed: 11,
+        };
+        let on = simulate(&mk(true), &jobs);
+        let off = simulate(&mk(false), &jobs);
+        assert!(on.cross_shard_steals > 0, "no cross-shard steals recorded");
+        assert_eq!(off.cross_shard_steals, 0);
+        assert!(on.makespan < off.makespan, "steal on {} !< off {}", on.makespan, off.makespan);
+    }
+
+    #[test]
+    fn sharded_unplaceable_at_home_detected() {
+        // Shard 1 (client 1's home) only has the 5-qubit worker; a
+        // 7-qubit job there must fail fast even though shard 0 could
+        // host it — the DES steals bound circuits only, so the job
+        // could never bind (see the validation note in `simulate`).
+        let jobs = vec![
+            ClientJob {
+                client: 0,
+                config: QuClassiConfig::new(5, 1).unwrap(),
+                n_circuits: 2,
+                bank_size: 4,
+            },
+            ClientJob {
+                client: 1,
+                config: QuClassiConfig::new(7, 1).unwrap(),
+                n_circuits: 2,
+                bank_size: 4,
+            },
+        ];
+        let mut cfg = base_config(&[20, 5], Tenancy::MultiTenant, EnvParams::gcp_controlled());
+        cfg.shards = 2;
+        let result = std::panic::catch_unwind(|| simulate(&cfg, &jobs));
+        assert!(result.is_err(), "expected home-shard placement validation to fire");
     }
 }

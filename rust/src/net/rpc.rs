@@ -363,6 +363,50 @@ impl InProcHub {
     }
 }
 
+/// A negotiated connection to a dual-codec peer: the binary mux plane
+/// when the peer completed the `DQMX` handshake, framed JSON otherwise.
+///
+/// Both the manager's worker dial-back and `cluster::tcp::RemoteClient`
+/// dial through [`dial_plane`], so "binary-first, JSON-fallback" is one
+/// code path, not two reimplementations of the same negotiation.
+pub enum Plane {
+    /// Binary session on a shared [`mux::Mux`] reactor.
+    Bin {
+        mux: Arc<mux::Mux>,
+        conn: u64,
+    },
+    /// Framed-JSON session (legacy peer, or the mux dial failed).
+    Json(Arc<RpcClient>),
+}
+
+impl Plane {
+    /// Did the dial land on the binary plane?
+    pub fn is_binary(&self) -> bool {
+        matches!(self, Plane::Bin { .. })
+    }
+}
+
+/// Dial a dual-codec peer binary-first: try the mux `DQMX` handshake on
+/// `mux`'s reactor; if the peer closes or refuses (a JSON-only server, a
+/// version-0 peer), fall back to a plain [`RpcClient`] dial with
+/// `json_timeout`. The mux attempt is bounded by the mux's own
+/// `connect_timeout`, so a legacy server costs one quick failed
+/// handshake, not a stall.
+pub fn dial_plane<A: ToSocketAddrs + Clone>(
+    mux: &Arc<mux::Mux>,
+    addr: A,
+    json_timeout: Duration,
+) -> Result<Plane, DqError> {
+    match mux.connect(addr.clone()) {
+        Ok(conn) => Ok(Plane::Bin { mux: mux.clone(), conn: conn.id }),
+        Err(e) => {
+            crate::log_warn!("rpc", "binary dial failed ({e}); falling back to JSON");
+            let rpc = RpcClient::connect(addr, json_timeout)?;
+            Ok(Plane::Json(Arc::new(rpc)))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -496,5 +540,38 @@ mod tests {
         let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
         let m = mux::Mux::new(mux::MuxConfig::default());
         assert!(m.connect(server.local_addr()).is_err());
+    }
+
+    #[test]
+    fn dial_plane_negotiates_binary_against_dual_codec_server() {
+        let svc: Arc<dyn MuxService> =
+            Arc::new(|_op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+                Ok(payload.to_vec())
+            });
+        let server = RpcServer::serve_bin("127.0.0.1:0", echo_handler(), svc).unwrap();
+        let m = mux::Mux::new(mux::MuxConfig::default());
+        let plane = dial_plane(&m, server.local_addr(), Duration::from_secs(2)).unwrap();
+        assert!(plane.is_binary());
+        match plane {
+            Plane::Bin { mux, conn } => {
+                assert_eq!(mux.call(conn, 1, b"xy".to_vec()).unwrap(), b"xy");
+            }
+            Plane::Json(_) => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn dial_plane_falls_back_to_json_against_legacy_server() {
+        let server = RpcServer::serve("127.0.0.1:0", echo_handler()).unwrap();
+        let m = mux::Mux::new(mux::MuxConfig::default());
+        let plane = dial_plane(&m, server.local_addr(), Duration::from_secs(2)).unwrap();
+        assert!(!plane.is_binary());
+        match plane {
+            Plane::Json(rpc) => {
+                let r = rpc.call("add", Value::obj().with("a", 20.0).with("b", 22.0)).unwrap();
+                assert_eq!(r.req_f64("sum").unwrap(), 42.0);
+            }
+            Plane::Bin { .. } => unreachable!(),
+        }
     }
 }

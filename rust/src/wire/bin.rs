@@ -56,9 +56,25 @@ const OP_TABLE: &[(u32, &str)] = &[
     (10, "stats"),
 ];
 
-/// The interned id for `execute`, the one op the binary plane serves
-/// today (everything else stays on the JSON debug path).
+/// The interned id for `execute` (manager→worker batch dispatch).
 pub const OP_EXECUTE: u32 = 1;
+/// Interned id for `new_client` (client→manager, empty payload →
+/// [`encode_u64`] client id).
+pub const OP_NEW_CLIENT: u32 = 5;
+/// Interned id for `submit_bank` ([`encode_submit_request`] →
+/// [`encode_submit_response`]).
+pub const OP_SUBMIT_BANK: u32 = 6;
+/// Interned id for `wait_bank` ([`encode_wait_request`] →
+/// [`encode_fids`]).
+pub const OP_WAIT_BANK: u32 = 7;
+/// Interned id for `bank_status` ([`encode_u64`] bank id →
+/// [`encode_bank_status`]).
+pub const OP_BANK_STATUS: u32 = 8;
+/// Interned id for `cancel_bank` ([`encode_u64`] bank id →
+/// [`encode_u64`] drained count).
+pub const OP_CANCEL_BANK: u32 = 9;
+/// Interned id for `stats` (empty payload → [`encode_pool_stats`]).
+pub const OP_STATS: u32 = 10;
 
 /// Interned id for an op name, if the table knows it.
 pub fn op_id(name: &str) -> Option<u32> {
@@ -391,29 +407,23 @@ pub fn decode_tenant_stats(bytes: &[u8]) -> Result<(u64, TenantStats), DqError> 
     Ok(out)
 }
 
-/// Encode a [`ManagerStats`]: 8 aggregate counters, the retired
-/// aggregate (client 0), then the per-tenant entries.
-pub fn encode_manager_stats(s: &ManagerStats) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(96 + 64 * s.per_tenant.len());
-    put_varint(&mut buf, s.submitted);
-    put_varint(&mut buf, s.completed);
-    put_varint(&mut buf, s.dispatches);
-    put_varint(&mut buf, s.requeues);
-    put_varint(&mut buf, s.evictions);
-    put_varint(&mut buf, s.cancelled);
-    put_varint(&mut buf, s.steals);
-    put_varint(&mut buf, s.pruned_tenants);
-    put_tenant_stats(&mut buf, 0, &s.retired);
-    put_varint(&mut buf, s.per_tenant.len() as u64);
+fn put_manager_stats(buf: &mut Vec<u8>, s: &ManagerStats) {
+    put_varint(buf, s.submitted);
+    put_varint(buf, s.completed);
+    put_varint(buf, s.dispatches);
+    put_varint(buf, s.requeues);
+    put_varint(buf, s.evictions);
+    put_varint(buf, s.cancelled);
+    put_varint(buf, s.steals);
+    put_varint(buf, s.pruned_tenants);
+    put_tenant_stats(buf, 0, &s.retired);
+    put_varint(buf, s.per_tenant.len() as u64);
     for (client, t) in &s.per_tenant {
-        put_tenant_stats(&mut buf, *client, t);
+        put_tenant_stats(buf, *client, t);
     }
-    buf
 }
 
-/// Decode a [`ManagerStats`].
-pub fn decode_manager_stats(bytes: &[u8]) -> Result<ManagerStats, DqError> {
-    let mut c = Cur::new(bytes);
+fn read_manager_stats(c: &mut Cur<'_>) -> Result<ManagerStats, DqError> {
     let submitted = c.take_varint()?;
     let completed = c.take_varint()?;
     let dispatches = c.take_varint()?;
@@ -422,14 +432,13 @@ pub fn decode_manager_stats(bytes: &[u8]) -> Result<ManagerStats, DqError> {
     let cancelled = c.take_varint()?;
     let steals = c.take_varint()?;
     let pruned_tenants = c.take_varint()?;
-    let retired = read_tenant_stats(&mut c)?.1;
+    let retired = read_tenant_stats(c)?.1;
     let n = c.take_len()?;
     let mut per_tenant = BTreeMap::new();
     for _ in 0..n {
-        let (client, t) = read_tenant_stats(&mut c)?;
+        let (client, t) = read_tenant_stats(c)?;
         per_tenant.insert(client, t);
     }
-    c.done()?;
     Ok(ManagerStats {
         submitted,
         completed,
@@ -442,6 +451,43 @@ pub fn decode_manager_stats(bytes: &[u8]) -> Result<ManagerStats, DqError> {
         retired,
         per_tenant,
     })
+}
+
+/// Encode a [`ManagerStats`]: 8 aggregate counters, the retired
+/// aggregate (client 0), then the per-tenant entries.
+pub fn encode_manager_stats(s: &ManagerStats) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(96 + 64 * s.per_tenant.len());
+    put_manager_stats(&mut buf, s);
+    buf
+}
+
+/// Decode a [`ManagerStats`].
+pub fn decode_manager_stats(bytes: &[u8]) -> Result<ManagerStats, DqError> {
+    let mut c = Cur::new(bytes);
+    let out = read_manager_stats(&mut c)?;
+    c.done()?;
+    Ok(out)
+}
+
+/// Encode the `stats` RPC response: [`ManagerStats`] plus the pool
+/// gauges the JSON envelope carries alongside it (worker count, queue
+/// depth).
+pub fn encode_pool_stats(s: &ManagerStats, workers: u64, queue: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(112 + 64 * s.per_tenant.len());
+    put_manager_stats(&mut buf, s);
+    put_varint(&mut buf, workers);
+    put_varint(&mut buf, queue);
+    buf
+}
+
+/// Decode a `stats` response: `(stats, workers, queue_len)`.
+pub fn decode_pool_stats(bytes: &[u8]) -> Result<(ManagerStats, u64, u64), DqError> {
+    let mut c = Cur::new(bytes);
+    let stats = read_manager_stats(&mut c)?;
+    let workers = c.take_varint()?;
+    let queue = c.take_varint()?;
+    c.done()?;
+    Ok((stats, workers, queue))
 }
 
 fn put_job(buf: &mut Vec<u8>, j: &CircuitJob) {
@@ -518,6 +564,44 @@ pub fn decode_fids(bytes: &[u8]) -> Result<Vec<f32>, DqError> {
     let fids = c.take_f32s()?;
     c.done()?;
     Ok(fids)
+}
+
+/// Encode a bare id/count payload (client ids, bank ids, drain counts —
+/// the binary peer of the JSON envelope's single-field objects).
+pub fn encode_u64(v: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(10);
+    put_varint(&mut buf, v);
+    buf
+}
+
+/// Decode a bare id/count payload.
+pub fn decode_u64(bytes: &[u8]) -> Result<u64, DqError> {
+    let mut c = Cur::new(bytes);
+    let v = c.take_varint()?;
+    c.done()?;
+    Ok(v)
+}
+
+/// Encode a `wait_bank` request: the bank id plus an optional client
+/// deadline in milliseconds (`None` defers to the manager's configured
+/// wait timeout, exactly like the JSON envelope's absent `timeout_ms`).
+pub fn encode_wait_request(bank: u64, timeout_ms: Option<u64>) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(22);
+    put_varint(&mut buf, bank);
+    put_bool(&mut buf, timeout_ms.is_some());
+    if let Some(ms) = timeout_ms {
+        put_varint(&mut buf, ms);
+    }
+    buf
+}
+
+/// Decode a `wait_bank` request: `(bank, timeout_ms)`.
+pub fn decode_wait_request(bytes: &[u8]) -> Result<(u64, Option<u64>), DqError> {
+    let mut c = Cur::new(bytes);
+    let bank = c.take_varint()?;
+    let timeout_ms = if c.take_bool()? { Some(c.take_varint()?) } else { None };
+    c.done()?;
+    Ok((bank, timeout_ms))
 }
 
 /// Encode a [`DqError`] as `kind-tag, msg` (binary peer of
@@ -627,5 +711,33 @@ mod tests {
         let mut buf = vec![200u8];
         put_str(&mut buf, "future kind");
         assert!(matches!(decode_error(&buf).unwrap(), DqError::Protocol(_)));
+    }
+
+    #[test]
+    fn u64_and_wait_request_round_trip() {
+        for v in [0u64, 7, u64::MAX] {
+            assert_eq!(decode_u64(&encode_u64(v)).unwrap(), v);
+        }
+        assert!(decode_u64(&[0x01, 0x00]).is_err()); // trailing byte
+
+        for (bank, t) in [(1u64, None), (42, Some(0u64)), (u64::MAX, Some(600_000))] {
+            assert_eq!(decode_wait_request(&encode_wait_request(bank, t)).unwrap(), (bank, t));
+        }
+    }
+
+    #[test]
+    fn pool_stats_round_trips() {
+        let mut s = ManagerStats::default();
+        s.submitted = 100;
+        s.completed = 93;
+        s.steals = 4;
+        s.per_tenant.insert(3, TenantStats { submitted: 50, ..TenantStats::default() });
+        let bytes = encode_pool_stats(&s, 8, 17);
+        let (got, workers, queue) = decode_pool_stats(&bytes).unwrap();
+        assert_eq!(got.submitted, 100);
+        assert_eq!(got.per_tenant[&3].submitted, 50);
+        assert_eq!((workers, queue), (8, 17));
+        // plain manager stats still refuses the pool-gauge suffix
+        assert!(decode_manager_stats(&bytes).is_err());
     }
 }

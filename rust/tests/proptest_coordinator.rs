@@ -24,7 +24,9 @@ use std::time::Duration;
 use dqulearn::circuit::QuClassiConfig;
 use dqulearn::coordinator::registry::Registry;
 use dqulearn::coordinator::scheduler;
-use dqulearn::coordinator::{JournalConfig, Manager, ManagerConfig, WorkerChannel, WorkerProfile};
+use dqulearn::coordinator::{
+    JournalConfig, Manager, ManagerConfig, ShardConfig, ShardManager, WorkerChannel, WorkerProfile,
+};
 use dqulearn::env::{scenarios, sim, Calibration, ClientJob, EnvParams, SimConfig, SimWorkerSpec, Tenancy};
 use dqulearn::error::DqError;
 use dqulearn::model::exec::CircuitPair;
@@ -177,6 +179,10 @@ fn des_conserves_circuits_across_workloads() {
                 heartbeat_period: 5.0,
                 tenancy: Tenancy::MultiTenant,
                 steal: true,
+                // alternate sharded and unsharded pools: conservation
+                // (asserted inside `simulate`) must hold across shard
+                // routing and cross-shard steals too
+                shards: 1 + sizes.len() % 2,
                 seed: sizes.iter().sum::<usize>() as u64,
             };
             let result = sim::simulate(&cfg, &jobs);
@@ -390,6 +396,128 @@ fn steal_evict_cancel_interleavings_conserve_circuits() {
     );
 }
 
+/// Sharded-pool chaos arm (DESIGN.md §18): random shard counts, one-shot
+/// tenant churn (a fresh session per bank walks the round-robin shard
+/// router), random cancels, and both steal planes live — intra-shard
+/// backlog stealing plus the cross-shard broker. Conservation must hold
+/// pool-wide: completed + cancelled == submitted, no marker executes
+/// twice, and no qubit reservation leaks, regardless of which shard
+/// bound, stole, or imported a batch.
+fn run_sharded_churn_steal_cancel(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let shards = 2 + rng.index(3);
+    let sm = ShardManager::new(ShardConfig {
+        shards,
+        manager: ManagerConfig {
+            max_batch: 1 + rng.index(4),
+            steal: rng.index(2) == 0,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let gate = Arc::new((Mutex::new(true), Condvar::new()));
+    let log: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(Vec::new()));
+    // At least one worker per shard (registration is least-populated, so
+    // the first `shards` registrations land one per shard); every demand
+    // fits on every worker, so home-shard binding always succeeds.
+    for _ in 0..shards + rng.index(3) {
+        sm.register(
+            WorkerProfile::new([10, 20][rng.index(2)]).cru(rng.f64()),
+            Arc::new(AuditChannel { doomed: false, gate: gate.clone(), log: log.clone() }),
+        );
+    }
+
+    let mut next_marker: u32 = 0;
+    // (handle, size, first marker, cancelled)
+    let mut banks = Vec::new();
+    for _ in 0..4 + rng.index(6) {
+        let session = sm.session();
+        let config = QuClassiConfig::new([5, 7][rng.index(2)], 1).unwrap();
+        let size = 1 + rng.index(24);
+        let start = next_marker;
+        let pairs: Vec<CircuitPair> = (0..size)
+            .map(|_| {
+                let marker = next_marker;
+                next_marker += 1;
+                let mut data = vec![0.25f32; config.n_features()];
+                data[0] = marker as f32;
+                (vec![0.1; config.n_params()], data)
+            })
+            .collect();
+        let handle = session.submit(config, &pairs).map_err(|e| format!("submit: {e}"))?;
+        let mut cancelled = false;
+        if rng.index(4) == 0 {
+            handle.cancel().map_err(|e| format!("cancel: {e}"))?;
+            cancelled = true;
+        }
+        banks.push((handle, size, start, cancelled));
+    }
+
+    let mut ok_ranges: Vec<(u32, u32)> = Vec::new();
+    let (mut completed, mut failed, mut submitted) = (0usize, 0usize, 0usize);
+    for (handle, size, start, cancelled) in banks {
+        submitted += size;
+        match handle.wait_timeout(Duration::from_secs(10)) {
+            Ok(fids) => {
+                if fids.len() != size {
+                    return Err(format!("bank returned {} fids for {size} circuits", fids.len()));
+                }
+                if cancelled {
+                    return Err("cancelled bank completed as Ok".to_string());
+                }
+                completed += size;
+                ok_ranges.push((start, start + size as u32));
+            }
+            Err(DqError::Cancelled(_)) if cancelled => failed += size,
+            Err(e) => return Err(format!("bank failed unexpectedly: {e} (cancelled={cancelled})")),
+        }
+    }
+    if completed + failed != submitted {
+        return Err(format!("conservation: {completed} + {failed} != {submitted}"));
+    }
+
+    // Quiesce: every reservation on every shard must drain (a leak here
+    // means an intra- or cross-shard steal lost track of a batch).
+    let t0 = std::time::Instant::now();
+    while sm.worker_states().iter().map(|w| w.occupied).sum::<usize>() > 0 {
+        if t0.elapsed() > Duration::from_secs(5) {
+            return Err("qubit reservations leaked across shards".to_string());
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let log = log.lock().unwrap();
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &marker in log.iter() {
+        *counts.entry(marker).or_insert(0) += 1;
+    }
+    for (&marker, &count) in &counts {
+        if count > 1 {
+            return Err(format!("circuit {marker} executed {count} times"));
+        }
+    }
+    for (lo, hi) in ok_ranges {
+        for marker in lo..hi {
+            if counts.get(&marker).copied().unwrap_or(0) != 1 {
+                return Err(format!("circuit {marker} of a completed bank never executed"));
+            }
+        }
+    }
+    drop(log);
+    sm.shutdown();
+    Ok(())
+}
+
+#[test]
+fn sharded_churn_steal_cancel_conserves_circuits() {
+    forall(
+        "sharded-churn-steal-cancel",
+        0x5AA4D,
+        16,
+        usize_in(0, u32::MAX as usize),
+        |&seed| run_sharded_churn_steal_cancel(seed as u64),
+    );
+}
+
 /// Journal-backed variant of [`AuditChannel`]: logs markers until the
 /// crash harness freezes it; a frozen execute fails *before* logging, so
 /// anything in the log provably dispatched (and journaled) pre-freeze.
@@ -575,6 +703,7 @@ fn single_tenant_never_faster_overall() {
                 heartbeat_period: 5.0,
                 tenancy,
                 steal: true,
+                shards: 1,
                 seed: seed as u64,
             };
             let single = sim::simulate(&mk(Tenancy::SingleTenant), &jobs);

@@ -1,0 +1,191 @@
+//! Integration tests for the sharded co-Manager + principal federation
+//! (DESIGN.md §18): real backends behind the unified [`ClusterClient`]
+//! surface — heterogeneous agents under one principal, registration
+//! rebalancing, shard-striped session routing, and tenant-weight
+//! durability across a sharded journal recovery.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dqulearn::circuit::QuClassiConfig;
+use dqulearn::cluster::{ClusterClient, InProcCluster, Principal};
+use dqulearn::coordinator::{
+    Journal, JournalConfig, ManagerConfig, ShardConfig, ShardManager, WorkerChannel, WorkerProfile,
+};
+use dqulearn::error::DqError;
+use dqulearn::model::exec::{CircuitPair, QsimExecutor};
+use dqulearn::model::CircuitExecutor;
+use dqulearn::util::Rng;
+
+/// Worker channel backed by the reference simulator.
+struct SimChannel;
+
+impl WorkerChannel for SimChannel {
+    fn execute(
+        &self,
+        config: &QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<Vec<f32>, DqError> {
+        QsimExecutor.execute_bank(config, pairs)
+    }
+}
+
+fn pairs_for(config: &QuClassiConfig, n: usize) -> Vec<CircuitPair> {
+    let mut rng = Rng::new(23);
+    (0..n)
+        .map(|_| {
+            (
+                (0..config.n_params()).map(|_| rng.f32()).collect(),
+                (0..config.n_features()).map(|_| rng.f32()).collect(),
+            )
+        })
+        .collect()
+}
+
+/// One principal over two *different* backend shapes (an in-proc cluster
+/// and a sharded pool): tenants spread across both, every bank computes
+/// the reference result, and the merged stats account for all of it.
+#[test]
+fn principal_federates_heterogeneous_real_backends() {
+    let inproc = InProcCluster::builder().workers(&[12, 12]).build().unwrap();
+    let sm = ShardManager::new(ShardConfig { shards: 2, ..ShardConfig::default() });
+    for _ in 0..2 {
+        sm.register(WorkerProfile::new(12).threads(2), Arc::new(SimChannel));
+    }
+    let sm_handle = sm.clone();
+    let principal = Principal::new(vec![
+        ("inproc".to_string(), Arc::new(inproc) as Arc<dyn ClusterClient>),
+        ("sharded".to_string(), Arc::new(sm) as Arc<dyn ClusterClient>),
+    ]);
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs = pairs_for(&cfg, 4);
+    let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+    for _ in 0..6 {
+        let session = principal.session();
+        let fids = session.execute(cfg, &pairs).unwrap();
+        assert_eq!(fids, want, "federated execution diverged from the reference");
+    }
+    let stats = principal.stats();
+    assert_eq!(stats.submitted, 24);
+    assert_eq!(stats.completed, 24);
+    assert_eq!(principal.worker_count(), 4);
+    assert_eq!(principal.failovers(), 0);
+    assert!(principal.health().iter().all(|&h| h));
+    // round-robin binding must have routed tenants to both agents
+    assert!(sm_handle.stats().completed > 0, "sharded agent never served a tenant");
+    principal.shutdown();
+}
+
+/// Worker registration through the principal lands on the agent with the
+/// fewest workers — the federation-level analog of least-populated shard
+/// placement.
+#[test]
+fn principal_registration_lands_on_emptiest_agent() {
+    let inproc = InProcCluster::builder().workers(&[12, 12]).build().unwrap();
+    let sm = ShardManager::new(ShardConfig { shards: 2, ..ShardConfig::default() });
+    let sm_handle = sm.clone();
+    let principal = Principal::new(vec![
+        ("busy".to_string(), Arc::new(inproc) as Arc<dyn ClusterClient>),
+        ("empty".to_string(), Arc::new(sm) as Arc<dyn ClusterClient>),
+    ]);
+    // The bare sharded pool has 0 workers; both registrations must land
+    // there (0 then 1 workers — still fewer than the in-proc agent's 2).
+    principal.register(WorkerProfile::new(12), Arc::new(SimChannel)).unwrap();
+    principal.register(WorkerProfile::new(12), Arc::new(SimChannel)).unwrap();
+    assert_eq!(sm_handle.worker_count(), 2, "registrations did not rebalance");
+    assert_eq!(principal.worker_count(), 4);
+    principal.shutdown();
+}
+
+/// Sessions minted through the trait surface stripe over shards exactly
+/// like the inherent API: client ids cover every residue class mod N.
+#[test]
+fn sharded_sessions_stripe_over_shards() {
+    let sm = ShardManager::new(ShardConfig { shards: 2, ..ShardConfig::default() });
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..4 {
+        seen.insert(ClusterClient::session(&sm).unwrap().id() % 2);
+    }
+    assert_eq!(seen.len(), 2, "sessions did not spread over both shards");
+    sm.shutdown();
+}
+
+/// The whole federation is drivable through `&dyn ClusterClient` — the
+/// API-unification claim of this layer, principal included.
+#[test]
+fn cluster_client_covers_principal_over_sharded_pool() {
+    let sm = ShardManager::new(ShardConfig { shards: 2, ..ShardConfig::default() });
+    for _ in 0..2 {
+        sm.register(WorkerProfile::new(12).threads(2), Arc::new(SimChannel));
+    }
+    let principal =
+        Principal::new(vec![("pool".to_string(), Arc::new(sm) as Arc<dyn ClusterClient>)]);
+    let cluster: &dyn ClusterClient = &principal;
+    assert!(cluster.describe().contains("principal"));
+    let session = cluster.session().unwrap();
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs = pairs_for(&cfg, 2);
+    assert_eq!(session.execute(cfg, &pairs).unwrap().len(), 2);
+    assert_eq!(cluster.stats().unwrap().completed, 2);
+    cluster.shutdown();
+}
+
+/// Tenant WRR weights journal to the owning shard's segment only and
+/// survive a sharded kill-and-replay recovery (DESIGN.md §16 + §18).
+#[test]
+fn tenant_weights_survive_sharded_recovery() {
+    let path =
+        std::env::temp_dir().join(format!("dq_fed_weights_{}.log", std::process::id()));
+    let seg = |i: usize| {
+        let mut p = path.as_os_str().to_owned();
+        p.push(format!(".shard{i}"));
+        std::path::PathBuf::from(p)
+    };
+    for i in 0..2 {
+        let _ = std::fs::remove_file(seg(i));
+    }
+    let mk = || ShardConfig {
+        shards: 2,
+        manager: ManagerConfig { journal: Some(JournalConfig::new(&path)), ..Default::default() },
+        ..ShardConfig::default()
+    };
+    let sm = ShardManager::new(mk());
+    for _ in 0..2 {
+        sm.register(WorkerProfile::new(12).threads(2), Arc::new(SimChannel));
+    }
+    // One tenant per shard; the shard-1 tenant gets a WRR weight of 4.
+    let c0 = sm.shard(0).new_client();
+    let c1 = sm.shard(1).new_client();
+    assert_eq!(c0 % 2, 0);
+    assert_eq!(c1 % 2, 1);
+    sm.set_tenant_weight(c1, 4);
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs = pairs_for(&cfg, 3);
+    for &c in &[c0, c1] {
+        let bank = sm.submit_bank(c, cfg, &pairs).unwrap();
+        assert_eq!(sm.wait_bank_timeout(bank, Duration::from_secs(30)).unwrap().len(), 3);
+    }
+    sm.shutdown();
+    drop(sm);
+
+    // The weight lives in the owning shard's segment, and only there.
+    let (j1, s1) = Journal::recover(&JournalConfig::new(seg(1))).unwrap();
+    assert_eq!(s1.weights.get(&c1), Some(&4), "weight lost from shard 1's journal");
+    drop(j1);
+    let (j0, s0) = Journal::recover(&JournalConfig::new(seg(0))).unwrap();
+    assert!(s0.weights.is_empty(), "weight leaked into shard 0's journal");
+    drop(j0);
+
+    // A recovered incarnation keeps serving the striped id spaces.
+    let (sm2, report) = ShardManager::recover(mk()).unwrap();
+    assert_eq!(report.truncated_bytes, 0);
+    for _ in 0..2 {
+        sm2.register(WorkerProfile::new(12).threads(2), Arc::new(SimChannel));
+    }
+    let bank = sm2.submit_bank(c1, cfg, &pairs).unwrap();
+    assert_eq!(sm2.wait_bank_timeout(bank, Duration::from_secs(30)).unwrap().len(), 3);
+    sm2.shutdown();
+    for i in 0..2 {
+        let _ = std::fs::remove_file(seg(i));
+    }
+}
