@@ -20,7 +20,7 @@ use dqulearn::model::exec::{CircuitExecutor, QsimExecutor};
 use dqulearn::qsim::NoiseModel;
 use dqulearn::util::Rng;
 
-fn mean_abs_error(alpha: Option<f64>, n: usize) -> (f64, f64, f64) {
+fn mean_abs_error(alpha: Option<f64>, steal: bool, n: usize) -> (f64, f64, f64) {
     let noisy = NoiseModel { p1: 0.004, p2: 0.04, readout: 0.03 };
     let cluster = InProcCluster::builder()
         .workers_with_noise(&[
@@ -29,12 +29,14 @@ fn mean_abs_error(alpha: Option<f64>, n: usize) -> (f64, f64, f64) {
             (10, Some(noisy)),
             (10, Some(noisy)),
         ])
-        // steal=false isolates the placement policy under ablation: an
-        // idle noisy worker must not blur the alpha rows by stealing a
-        // clean worker's queued batches (DESIGN.md §14).
+        // `steal` is a row parameter: `steal_for` applies the same
+        // noise-compatibility predicate as placement (DESIGN.md §14),
+        // so the steal-on α=1.0 row must match the steal-off row — an
+        // idle noisy worker cannot blur the ablation by lifting a clean
+        // worker's queued batches.
         .manager_config(ManagerConfig {
             noise_aware_alpha: alpha,
-            steal: false,
+            steal,
             ..Default::default()
         })
         .build()
@@ -69,12 +71,13 @@ fn main() {
     println!("== noise-aware scheduling ablation (2 ideal + 2 noisy workers, q5l2, {n} circuits) ==");
     let mut table = Table::new(&["policy", "mean |Δfid|", "max |Δfid|", "circuits/s"]);
     let mut results = Vec::new();
-    for (label, alpha) in [
-        ("CRU-only (paper)", None),
-        ("noise-aware α=0.5", Some(0.5)),
-        ("noise-aware α=1.0", Some(1.0)),
+    for (label, alpha, steal) in [
+        ("CRU-only (paper)", None, false),
+        ("noise-aware α=0.5", Some(0.5), false),
+        ("noise-aware α=1.0", Some(1.0), false),
+        ("noise-aware α=1.0 + steal", Some(1.0), true),
     ] {
-        let (mean, max, cps) = mean_abs_error(alpha, n);
+        let (mean, max, cps) = mean_abs_error(alpha, steal, n);
         results.push((label, mean, cps));
         table.row(&[
             label.to_string(),
@@ -90,6 +93,11 @@ fn main() {
     assert!(
         aware < blind * 0.25,
         "noise-aware routing should cut fidelity error substantially: {aware:.4} vs {blind:.4}"
+    );
+    let aware_steal = results[3].1;
+    assert!(
+        aware_steal < blind * 0.25,
+        "steal-gated routing must hold the noise line: {aware_steal:.4} vs {blind:.4}"
     );
     println!(
         "\nnoise-aware (α=1.0) eliminates the fidelity error (mean {blind:.4} -> {aware:.4}) \

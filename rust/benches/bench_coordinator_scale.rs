@@ -28,6 +28,16 @@
 //! if the transport ever needs more than 3 OS threads
 //! (`transport_thread_count`) — the whole point of the plane.
 //!
+//! Two self-healing cells ride the soak (DESIGN.md §19): the
+//! *reconnect storm* re-runs an 8-worker soak through a severing proxy
+//! that hard-closes every worker link every 50 ms — in-place revival
+//! must absorb every flap with zero coordinator requeues/evictions and
+//! the same 3-thread transport budget — and the *client park* drives
+//! the manager's dual-codec listener with 256 binary clients on one
+//! shared client mux, hard-failing unless the whole plane still fits
+//! in 3 transport threads (pre-park, that was one server thread per
+//! client).
+//!
 //! A fifth series is the shard scale (DESIGN.md §18): one-shot tenant
 //! churn (fresh session → one small bank → gone, 100k tenants in the
 //! full window) through a [`ShardManager`] at 1/2/4 shards over a
@@ -50,12 +60,15 @@
 //! DQ_BENCH_FAST=1 cargo bench --bench bench_coordinator_scale
 //! ```
 
-use std::sync::Arc;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use dqulearn::benchlib::{BenchConfig, Table};
 use dqulearn::circuit::QuClassiConfig;
-use dqulearn::cluster::MuxWorkerChannel;
+use dqulearn::cluster::{serve_manager, MuxWorkerChannel, SubmitRequest};
 use dqulearn::coordinator::{
     JournalConfig, Manager, ManagerConfig, ShardConfig, ShardManager, SyncPolicy, WorkerChannel,
     WorkerProfile,
@@ -367,6 +380,293 @@ fn run_mux_soak(workers: usize, circuits_per_tenant: usize, bank: usize) -> Soak
     }
 }
 
+/// A TCP proxy with a kill switch: `sever` hard-closes every live
+/// proxied socket pair while the listener keeps accepting, so a
+/// redialing mux reconnects through the same address. The bench-side
+/// twin of the reconnect suite's flaky link (`tests/mux_plane.rs`).
+struct SeverProxy {
+    addr: SocketAddr,
+    live: Arc<Mutex<Vec<TcpStream>>>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+fn proxy_pump(mut from: TcpStream, mut to: TcpStream) {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = to.shutdown(Shutdown::Both);
+    let _ = from.shutdown(Shutdown::Both);
+}
+
+impl SeverProxy {
+    fn start(upstream: SocketAddr) -> SeverProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+        let addr = listener.local_addr().expect("proxy addr");
+        listener.set_nonblocking(true).expect("proxy nonblocking");
+        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (live2, stop2) = (live.clone(), stop.clone());
+        let thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((down, _)) => {
+                        let Ok(up) = TcpStream::connect(upstream) else { continue };
+                        let _ = down.set_nodelay(true);
+                        let _ = up.set_nodelay(true);
+                        let (Ok(d2), Ok(u2)) = (down.try_clone(), up.try_clone()) else {
+                            continue;
+                        };
+                        {
+                            let mut g = live2.lock().unwrap_or_else(|e| e.into_inner());
+                            if let (Ok(d3), Ok(u3)) = (down.try_clone(), up.try_clone()) {
+                                g.push(d3);
+                                g.push(u3);
+                            }
+                        }
+                        std::thread::spawn(move || proxy_pump(down, u2));
+                        std::thread::spawn(move || proxy_pump(up, d2));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        SeverProxy { addr, live, stop, thread: Some(thread) }
+    }
+
+    fn sever(&self) {
+        let mut g = self.live.lock().unwrap_or_else(|e| e.into_inner());
+        for s in g.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for SeverProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.sever();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The reconnect storm (DESIGN.md §19): the soak topology dialed
+/// through a severing proxy whose flapper thread hard-closes every
+/// worker link at a fixed cadence mid-run. In-place revival must
+/// absorb every flap — all banks complete, zero requeues/evictions at
+/// the coordinator — and the measured throughput (the price of the
+/// redial/replay churn) is gated against the committed baseline.
+struct ReconnectCell {
+    workers: usize,
+    circuits: usize,
+    flaps: usize,
+    secs: f64,
+    throughput: f64,
+    transport_threads: usize,
+    requeues: u64,
+    evictions: u64,
+}
+
+fn run_mux_reconnect(
+    workers: usize,
+    circuits_per_tenant: usize,
+    bank: usize,
+    flap_ms: u64,
+) -> ReconnectCell {
+    let service = Arc::new(|op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+        if op != bin::OP_EXECUTE {
+            return Err(DqError::Protocol(format!("reconnect: unknown op {op}")));
+        }
+        let jobs = bin::decode_jobs(payload)?;
+        Ok(bin::encode_fids(&vec![0.5; jobs.len()]))
+    });
+    let mut server = MuxServer::serve("127.0.0.1:0", service).expect("bind reconnect server");
+    let proxy = SeverProxy::start(server.local_addr());
+    let mux = Mux::new(MuxConfig::default());
+    let manager = Manager::new(ManagerConfig {
+        max_batch: 8,
+        heartbeat_period: 3600.0,
+        ..Default::default()
+    });
+    for _ in 0..workers {
+        let conn = mux.connect(proxy.addr).expect("reconnect connect");
+        let channel = Arc::new(MuxWorkerChannel::new(mux.clone(), conn.id));
+        manager.register(WorkerProfile::new(5), channel);
+    }
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs: Vec<CircuitPair> = (0..bank)
+        .map(|_| (vec![0.1; cfg.n_params()], vec![0.2; cfg.n_features()]))
+        .collect();
+
+    // Flapper: first sever lands 5 ms in — while the opening banks are
+    // in flight — then every `flap_ms` until the tenants drain.
+    let running = Arc::new(AtomicBool::new(true));
+    let flapper = {
+        let running = running.clone();
+        let live = proxy.live.clone();
+        std::thread::spawn(move || {
+            let mut flaps = 0usize;
+            std::thread::sleep(Duration::from_millis(5));
+            while running.load(Ordering::Relaxed) {
+                {
+                    let mut g = live.lock().unwrap_or_else(|e| e.into_inner());
+                    for s in g.drain(..) {
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
+                }
+                flaps += 1;
+                std::thread::sleep(Duration::from_millis(flap_ms));
+            }
+            flaps
+        })
+    };
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let m = manager.clone();
+            let pairs = pairs.clone();
+            std::thread::spawn(move || {
+                let session = m.session();
+                let mut left = circuits_per_tenant;
+                while left > 0 {
+                    let n = left.min(pairs.len());
+                    let fids =
+                        session.execute(cfg, &pairs[..n]).expect("reconnect bank failed");
+                    assert_eq!(fids.len(), n);
+                    left -= n;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("tenant thread panicked");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    running.store(false, Ordering::SeqCst);
+    let flaps = flapper.join().expect("flapper panicked");
+    let transport_threads = transport_thread_count();
+    let stats = manager.stats();
+    manager.shutdown();
+    mux.shutdown();
+    server.shutdown();
+
+    let circuits = 4 * circuits_per_tenant;
+    ReconnectCell {
+        workers,
+        circuits,
+        flaps,
+        secs,
+        throughput: circuits as f64 / secs.max(1e-9),
+        transport_threads,
+        requeues: stats.requeues,
+        evictions: stats.evictions,
+    }
+}
+
+/// The server-side park (DESIGN.md §19): `clients` binary clients —
+/// one shared [`Mux`], one connection each — drive the manager's
+/// dual-codec listener with raw `new_client`/`submit_bank`/`wait_bank`
+/// frames. Pre-park, 256 clients meant 256 server threads; the cell
+/// hard-fails unless the whole plane (client event loop + completion
+/// runner + server park) still fits in 3 transport threads.
+struct ParkCell {
+    clients: usize,
+    circuits: usize,
+    secs: f64,
+    throughput: f64,
+    transport_threads: usize,
+}
+
+fn run_client_park(clients: usize, circuits_per_client: usize, bank: usize) -> ParkCell {
+    let manager = Manager::new(ManagerConfig {
+        max_batch: 8,
+        heartbeat_period: 3600.0,
+        ..Default::default()
+    });
+    for _ in 0..4 {
+        manager.register(WorkerProfile::new(5), Arc::new(MockChannel));
+    }
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").expect("bind manager");
+    let addr = server.local_addr();
+    let mux = Mux::new(MuxConfig::default());
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    let pairs: Vec<CircuitPair> = (0..bank)
+        .map(|_| (vec![0.1; cfg.n_params()], vec![0.2; cfg.n_features()]))
+        .collect();
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let mux = mux.clone();
+            let pairs = pairs.clone();
+            std::thread::spawn(move || {
+                let conn = mux.connect(addr).expect("park connect");
+                let client = bin::decode_u64(
+                    &mux.call(conn.id, bin::OP_NEW_CLIENT, Vec::new()).expect("new_client"),
+                )
+                .expect("client id");
+                let mut left = circuits_per_client;
+                while left > 0 {
+                    let n = left.min(pairs.len());
+                    let req = SubmitRequest {
+                        client,
+                        config: cfg,
+                        pairs: pairs[..n].to_vec(),
+                    };
+                    let resp = mux
+                        .call(conn.id, bin::OP_SUBMIT_BANK, bin::encode_submit_request(&req))
+                        .expect("submit_bank");
+                    let bank_id = bin::decode_submit_response(&resp).expect("submit resp").bank;
+                    let fids = bin::decode_fids(
+                        &mux.call(
+                            conn.id,
+                            bin::OP_WAIT_BANK,
+                            bin::encode_wait_request(bank_id, None),
+                        )
+                        .expect("wait_bank"),
+                    )
+                    .expect("fids");
+                    assert_eq!(fids.len(), n);
+                    left -= n;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let secs = start.elapsed().as_secs_f64();
+    // Sampled with the plane still up: client event loop + completion
+    // runner + the manager's adoptive server park.
+    let transport_threads = transport_thread_count();
+    mux.shutdown();
+    manager.shutdown();
+    drop(server);
+
+    let circuits = clients * circuits_per_client;
+    ParkCell {
+        clients,
+        circuits,
+        secs,
+        throughput: circuits as f64 / secs.max(1e-9),
+        transport_threads,
+    }
+}
+
 /// One shard-scale measurement: `tenants` one-shot tenants churn
 /// through a sharded pool (fresh session → one small bank → gone) on
 /// 16 driver threads over a constant 4-worker pool (least-populated
@@ -589,6 +889,44 @@ fn soak_regressions(soak: &SoakCell, baseline: &Value) -> Vec<String> {
     failures
 }
 
+/// Baseline gate for the reconnect storm (half-the-floor rule on
+/// throughput).
+fn reconnect_regressions(cell: &ReconnectCell, baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let thr = baseline
+        .get("mux_reconnect")
+        .and_then(|s| s.get("throughput"))
+        .and_then(Value::as_f64);
+    if let Some(thr) = thr {
+        if cell.throughput < thr / 2.0 {
+            failures.push(format!(
+                "mux_reconnect: {:.0} c/s < half of baseline {thr:.0} c/s",
+                cell.throughput
+            ));
+        }
+    }
+    failures
+}
+
+/// Baseline gate for the client park (half-the-floor rule on
+/// throughput).
+fn park_regressions(cell: &ParkCell, baseline: &Value) -> Vec<String> {
+    let mut failures = Vec::new();
+    let thr = baseline
+        .get("client_park")
+        .and_then(|s| s.get("throughput"))
+        .and_then(Value::as_f64);
+    if let Some(thr) = thr {
+        if cell.throughput < thr / 2.0 {
+            failures.push(format!(
+                "client_park: {:.0} c/s < half of baseline {thr:.0} c/s",
+                cell.throughput
+            ));
+        }
+    }
+    failures
+}
+
 /// Compare against the committed baseline; returns the failing cells.
 fn regressions(cells: &[Cell], baseline: &Value) -> Vec<String> {
     let mut failures = Vec::new();
@@ -701,6 +1039,29 @@ fn main() {
         soak.workers, soak.circuits, soak.secs, soak.throughput, soak.transport_threads
     );
 
+    // Reconnect storm: the soak topology through a severing proxy that
+    // hard-closes every worker link every 50 ms (DESIGN.md §19).
+    let reconnect = run_mux_reconnect(8, skew_budget / 2, bank, 50);
+    println!(
+        "mux reconnect: {} workers, {} circuits across {} flaps in {:.3}s ({:.0} c/s), \
+         {} transport threads, {} requeues, {} evictions",
+        reconnect.workers,
+        reconnect.circuits,
+        reconnect.flaps,
+        reconnect.secs,
+        reconnect.throughput,
+        reconnect.transport_threads,
+        reconnect.requeues,
+        reconnect.evictions
+    );
+
+    // Client park: 256 binary clients on the manager's server mux.
+    let park = run_client_park(256, 16, 8);
+    println!(
+        "client park: {} clients, {} circuits in {:.3}s ({:.0} c/s), {} transport threads",
+        park.clients, park.circuits, park.secs, park.throughput, park.transport_threads
+    );
+
     // Shard scale: one-shot tenant churn through the sharded co-Manager
     // at 1/2/4 shards over a constant 4-worker pool (DESIGN.md §18).
     let churn_tenants = bench_cfg.max_samples * 500; // 15k fast / 100k full
@@ -733,11 +1094,28 @@ fn main() {
         .with("secs", soak.secs)
         .with("throughput", soak.throughput)
         .with("transport_threads", soak.transport_threads);
+    let reconnect_wire = Value::obj()
+        .with("workers", reconnect.workers)
+        .with("circuits", reconnect.circuits)
+        .with("flaps", reconnect.flaps)
+        .with("secs", reconnect.secs)
+        .with("throughput", reconnect.throughput)
+        .with("transport_threads", reconnect.transport_threads)
+        .with("requeues", reconnect.requeues)
+        .with("evictions", reconnect.evictions);
+    let park_wire = Value::obj()
+        .with("clients", park.clients)
+        .with("circuits", park.circuits)
+        .with("secs", park.secs)
+        .with("throughput", park.throughput)
+        .with("transport_threads", park.transport_threads);
     let payload = json::to_string_pretty(
         &cells_to_wire(mode, &cells)
             .with("skewed", skew_to_wire(&skew_cells))
             .with("journal", journal_to_wire(&journal_cells))
             .with("mux_soak", soak_wire)
+            .with("mux_reconnect", reconnect_wire)
+            .with("client_park", park_wire)
             .with("shard_scale", shard_scale_to_wire(&shard_cells)),
     );
     std::fs::write(&out_path, payload).expect("write BENCH_coordinator.json");
@@ -750,6 +1128,40 @@ fn main() {
         eprintln!(
             "mux soak used {} transport threads for {} workers (budget: 3)",
             soak.transport_threads, soak.workers
+        );
+        std::process::exit(1);
+    }
+
+    // Reconnect gate: every flap must heal in place — invisible to the
+    // coordinator (no requeues, no evictions) and inside the same
+    // transport budget (transient redialers are not transport threads).
+    if reconnect.flaps == 0 {
+        eprintln!("reconnect storm produced zero flaps; the scenario no longer exercises revival");
+        std::process::exit(1);
+    }
+    if reconnect.requeues != 0 || reconnect.evictions != 0 {
+        eprintln!(
+            "reconnect storm leaked into the coordinator: {} requeues, {} evictions \
+             (in-place revival must be invisible)",
+            reconnect.requeues, reconnect.evictions
+        );
+        std::process::exit(1);
+    }
+    if reconnect.transport_threads > 3 {
+        eprintln!(
+            "reconnect storm used {} transport threads (budget: 3)",
+            reconnect.transport_threads
+        );
+        std::process::exit(1);
+    }
+
+    // Park gate: 256 binary clients on the manager's server mux must
+    // still fit the fixed transport trio — the server half of the
+    // thread-budget claim (the soak covers the worker half).
+    if park.transport_threads > 3 {
+        eprintln!(
+            "client park used {} transport threads for {} clients (budget: 3)",
+            park.transport_threads, park.clients
         );
         std::process::exit(1);
     }
@@ -802,6 +1214,8 @@ fn main() {
                 failures.extend(skew_regressions(&skew_cells, &baseline));
                 failures.extend(journal_regressions(&journal_cells, &baseline));
                 failures.extend(soak_regressions(&soak, &baseline));
+                failures.extend(reconnect_regressions(&reconnect, &baseline));
+                failures.extend(park_regressions(&park, &baseline));
                 failures.extend(shard_scale_regressions(&shard_cells, &baseline));
                 if failures.is_empty() {
                     println!("baseline check OK ({baseline_path})");

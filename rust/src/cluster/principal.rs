@@ -277,7 +277,19 @@ impl Principal {
     }
 }
 
-/// A transport-level failure: the *agent* (not a bank) is suspect.
+/// A fault that makes the *agent* (not a bank) suspect on the dial and
+/// submit paths. `Io` is a refused/torn connection; `Timeout` is the
+/// partition shape — packets silently dropped, the RPC deadline fires
+/// instead of the socket erroring. Both must re-bind the tenant
+/// (PR 10 satellite: Timeout previously wedged tenants on a partitioned
+/// agent).
+fn is_agent_fault(e: &DqError) -> bool {
+    matches!(e, DqError::Io(_) | DqError::Timeout(_))
+}
+
+/// A transport-level failure on the *wait* path. Deliberately Io-only:
+/// a waited bank timing out is a legitimate bank-level outcome (slow
+/// fleet, bounded deadline) and says nothing about the agent's health.
 fn is_transport(e: &DqError) -> bool {
     matches!(e, DqError::Io(_))
 }
@@ -302,7 +314,7 @@ impl SessionOps for Principal {
                     );
                     return Ok(pbank);
                 }
-                Err(e) if is_transport(&e) => {
+                Err(e) if is_agent_fault(&e) => {
                     crate::log_warn!(
                         "principal",
                         "agent '{}' lost mid-submit; re-binding tenant {client}: {e}",
@@ -496,6 +508,123 @@ mod tests {
         assert_eq!(empty.worker_count(), 1);
         assert_eq!(big.worker_count(), 1);
         assert_eq!(p.worker_count(), 2);
+        p.shutdown();
+    }
+
+    /// [`SessionOps`] shim that delegates to a real agent until the
+    /// partition flag flips, then *times out* every call — the packet-
+    /// dropping partition shape, as opposed to [`DeadOps`]' hard refusal.
+    struct PartitionableOps {
+        inner: Arc<dyn SessionOps>,
+        inner_client: u64,
+        partitioned: Arc<AtomicBool>,
+    }
+
+    impl PartitionableOps {
+        fn check(&self) -> Result<(), DqError> {
+            if self.partitioned.load(Ordering::Relaxed) {
+                Err(DqError::Timeout("agent partitioned: rpc deadline elapsed".into()))
+            } else {
+                Ok(())
+            }
+        }
+    }
+
+    impl SessionOps for PartitionableOps {
+        fn submit(
+            &self,
+            _client: u64,
+            config: QuClassiConfig,
+            pairs: &[CircuitPair],
+        ) -> Result<u64, DqError> {
+            self.check()?;
+            self.inner.submit(self.inner_client, config, pairs)
+        }
+        fn wait(&self, bank: u64, t: Option<Duration>) -> Result<Vec<f32>, DqError> {
+            self.check()?;
+            self.inner.wait(bank, t)
+        }
+        fn status(&self, bank: u64) -> Result<BankStatus, DqError> {
+            self.check()?;
+            self.inner.status(bank)
+        }
+        fn cancel(&self, bank: u64) -> Result<usize, DqError> {
+            self.check()?;
+            self.inner.cancel(bank)
+        }
+    }
+
+    struct PartitionableAgent {
+        backend: Arc<dyn ClusterClient>,
+        partitioned: Arc<AtomicBool>,
+    }
+
+    impl ClusterClient for PartitionableAgent {
+        fn session(&self) -> Result<ClientSession, DqError> {
+            if self.partitioned.load(Ordering::Relaxed) {
+                return Err(DqError::Timeout("agent partitioned: dial deadline elapsed".into()));
+            }
+            let inner = self.backend.session()?;
+            let ops = Arc::new(PartitionableOps {
+                inner: inner.ops(),
+                inner_client: inner.id(),
+                partitioned: self.partitioned.clone(),
+            });
+            Ok(ClientSession::new(ops, inner.id()))
+        }
+        fn register(
+            &self,
+            profile: WorkerProfile,
+            channel: Arc<dyn WorkerChannel>,
+        ) -> Result<WorkerId, DqError> {
+            self.backend.register(profile, channel)
+        }
+        fn stats(&self) -> Result<ManagerStats, DqError> {
+            self.backend.stats()
+        }
+        fn worker_count(&self) -> usize {
+            self.backend.worker_count()
+        }
+        fn shutdown(&self) {
+            self.backend.shutdown()
+        }
+        fn describe(&self) -> String {
+            "partitionable agent".into()
+        }
+    }
+
+    /// Regression (PR 10 satellite): an agent that *times out* — a
+    /// network partition, not a refused connection — must trip failover
+    /// exactly like a hard `Io` fault. Previously only `Io` re-bound the
+    /// tenant, so a partitioned agent wedged everyone stuck to it.
+    #[test]
+    fn partitioned_agent_fails_over_mid_churn() {
+        let partitioned = Arc::new(AtomicBool::new(false));
+        let flaky: Arc<dyn ClusterClient> = Arc::new(PartitionableAgent {
+            backend: inproc_agent(5),
+            partitioned: partitioned.clone(),
+        });
+        // rr seed starts at agent 0 — the partitionable one — so the
+        // first tenant deterministically binds there while it is healthy.
+        let p = Principal::new(vec![("flaky".into(), flaky), ("live".into(), inproc_agent(5))]);
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let session = p.session();
+        assert_eq!(session.execute(cfg, &pairs(2)).unwrap().len(), 2);
+        assert_eq!(p.failovers(), 0);
+
+        // Partition mid-churn: the tenant's sticky binding is now stale.
+        partitioned.store(true, Ordering::Relaxed);
+        // The same tenant's next submit times out on the stale binding,
+        // fails over, and completes on the healthy sibling.
+        assert_eq!(session.execute(cfg, &pairs(3)).unwrap().len(), 3);
+        assert!(p.failovers() >= 1, "Timeout must count as an agent fault");
+        assert_eq!(p.health(), vec![false, true]);
+
+        // Fresh tenants bind straight to the live agent — no extra
+        // failovers while the partition persists.
+        let before = p.failovers();
+        assert_eq!(p.session().execute(cfg, &pairs(2)).unwrap().len(), 2);
+        assert_eq!(p.failovers(), before);
         p.shutdown();
     }
 

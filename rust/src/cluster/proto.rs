@@ -6,7 +6,8 @@
 //! codecs (and round-trip tests). The manager→worker `execute` payload
 //! is already typed by [`crate::coordinator::CircuitJob`].
 //!
-//! Protocol ops (all framed JSON, `net::rpc` envelope):
+//! Protocol ops (framed JSON, `net::rpc` envelope; each has a binary
+//! twin in `wire::bin` served from the same port's mux plane):
 //!
 //! ```text
 //! client -> manager : new_client {}                      -> {client}
@@ -16,6 +17,22 @@
 //! client -> manager : cancel_bank {bank}                 -> {drained}
 //! client -> manager : stats {}                           -> <ManagerStats wire>
 //! ```
+//!
+//! Binary-only ops (no JSON twin — they need the mux plane's push
+//! frames and reconnect machinery, DESIGN.md §19):
+//!
+//! ```text
+//! client -> manager : subscribe_bank {bank}    -> stream of <BankEvent>
+//!                     (unsolicited server-push frames on the request's
+//!                      correlation id; terminal event closes the stream)
+//! client -> manager : attach {token}           -> {token, resumed, last_req_corr}
+//!                     (re-binds a torn-down connection to its server
+//!                      session; the watermark drives exactly-once replay)
+//! ```
+//!
+//! JSON peers fall back to polling `bank_status`; `BankHandle::try_poll`
+//! on a push-negotiated connection answers from the streamed events
+//! without touching the wire.
 //!
 //! The `stats` payload carries the full [`ManagerStats`] — aggregate
 //! counters (incl. `steals` and retention fields) plus one entry per

@@ -16,6 +16,13 @@
 //! manager -> worker  : execute {circuits}              -> {fids}
 //! ```
 //!
+//! The binary plane additionally streams: `subscribe_bank {bank}` opens
+//! a push stream on its correlation id, and every completed circuit
+//! arrives as an unsolicited `BankEvent` frame (DESIGN.md §19) — a
+//! binary client's `try_poll`/bounded `wait` are answered from the
+//! locally accumulated events with **zero** `bank_status` polls on the
+//! wire. JSON peers keep the poll loop.
+//!
 //! **Negotiation is one code path.** Both dial directions — the
 //! manager's dial-back to a registering worker and
 //! [`RemoteClient::connect`] — go through
@@ -33,7 +40,9 @@
 //! any peer that can reach the manager can wait on, poll, or cancel any
 //! bank. Deploy on a trusted network segment (DESIGN.md §12).
 
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use super::proto::{self, SubmitRequest, SubmitResponse};
@@ -41,10 +50,12 @@ use crate::circuit::QuClassiConfig;
 use crate::coordinator::job::CircuitJob;
 use crate::coordinator::session::{ClientSession, SessionOps};
 use crate::coordinator::{
-    BankStatus, Manager, ManagerStats, ShardManager, WorkerChannel, WorkerId, WorkerProfile,
+    BankEvent, BankStatus, BankWatcher, Manager, ManagerStats, ShardManager, WorkerChannel,
+    WorkerId, WorkerProfile,
 };
 use crate::error::DqError;
 use crate::model::exec::{CircuitExecutor, CircuitPair};
+use crate::net::mux::Pusher;
 use crate::net::rpc::{dial_plane, Plane};
 use crate::net::{Mux, MuxConfig, MuxService, RpcClient, RpcServer};
 use crate::wire::{bin, Value};
@@ -201,6 +212,9 @@ pub trait ManagedPool: Clone + Send + Sync + 'static {
     fn bank_cancelled(&self, bank: u64) -> bool;
     /// Cancel a bank; returns queued circuits drained.
     fn cancel_bank(&self, bank: u64) -> usize;
+    /// Register a progress watcher on a bank (false for a bank the pool
+    /// has never seen). Backs the binary plane's `subscribe_bank`.
+    fn watch_bank(&self, bank: u64, w: BankWatcher) -> bool;
     /// Aggregate counters.
     fn stats(&self) -> ManagerStats;
     /// Live worker count.
@@ -252,6 +266,9 @@ macro_rules! impl_managed_pool {
             fn cancel_bank(&self, bank: u64) -> usize {
                 <$ty>::cancel_bank(self, bank)
             }
+            fn watch_bank(&self, bank: u64, w: BankWatcher) -> bool {
+                <$ty>::watch_bank(self, bank, w)
+            }
             fn stats(&self) -> ManagerStats {
                 <$ty>::stats(self)
             }
@@ -292,7 +309,7 @@ fn json_handler<M: ManagedPool>(pool: M) -> Arc<dyn crate::net::RpcHandler> {
                     match dial_plane(&m, addr.as_str(), Duration::from_secs(5))
                         .map_err(|e| DqError::Io(format!("dial worker back: {e}")))?
                     {
-                        Plane::Bin { mux, conn } => Arc::new(MuxWorkerChannel::new(mux, conn)),
+                        Plane::Bin { mux, conn, .. } => Arc::new(MuxWorkerChannel::new(mux, conn)),
                         Plane::Json(rpc) => Arc::new(RpcWorkerChannel::new(addr, rpc)),
                     };
                 let id = pool
@@ -342,11 +359,18 @@ fn json_handler<M: ManagedPool>(pool: M) -> Arc<dyn crate::net::RpcHandler> {
 }
 
 /// The binary side of [`serve_pool`]: the same ops keyed by the interned
-/// ids in [`crate::wire::bin`]. Handlers run inline on the connection's
-/// thread, so a blocking `wait_bank` stalls only its own connection —
-/// identical semantics to the JSON plane.
-fn bin_service<M: ManagedPool>(pool: M) -> Arc<dyn MuxService> {
-    Arc::new(move |op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
+/// ids in [`crate::wire::bin`], served from the shared mux park. Fast
+/// ops run inline on the park's transport thread; `wait_bank` is
+/// deferred to a transient thread (it blocks for up to the bank
+/// timeout); `subscribe_bank` opens a push stream wired straight into
+/// the bank store's watcher list.
+struct PoolBinService<M: ManagedPool> {
+    pool: M,
+}
+
+impl<M: ManagedPool> MuxService for PoolBinService<M> {
+    fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError> {
+        let pool = &self.pool;
         match op {
             bin::OP_NEW_CLIENT => Ok(bin::encode_u64(pool.new_client())),
             bin::OP_SUBMIT_BANK => {
@@ -364,7 +388,7 @@ fn bin_service<M: ManagedPool>(pool: M) -> Arc<dyn MuxService> {
             }
             bin::OP_BANK_STATUS => {
                 let bank = bin::decode_u64(payload)?;
-                let status = pool.bank_status(bank).ok_or_else(|| status_error(&pool, bank))?;
+                let status = pool.bank_status(bank).ok_or_else(|| status_error(pool, bank))?;
                 Ok(bin::encode_bank_status(&status))
             }
             bin::OP_CANCEL_BANK => {
@@ -378,7 +402,44 @@ fn bin_service<M: ManagedPool>(pool: M) -> Arc<dyn MuxService> {
             )),
             other => Err(DqError::Protocol(format!("manager: unknown binary op {other}"))),
         }
-    })
+    }
+
+    /// `wait_bank` blocks up to the bank timeout — run it off the park's
+    /// transport thread so one waiting client never stalls the plane.
+    fn defer(&self, op: u32) -> bool {
+        op == bin::OP_WAIT_BANK
+    }
+
+    /// `subscribe_bank {bank}` — register a store watcher that encodes
+    /// every [`BankEvent`] as a push frame. Terminal events also finish
+    /// the stream (OK for `Done`, the typed error otherwise), closing
+    /// the client-side correlation id. The watcher runs under the bank
+    /// store's lock and only appends to the connection's out-queue.
+    fn open_stream(&self, op: u32, payload: &[u8], pusher: Pusher) -> Option<Result<(), DqError>> {
+        if op != bin::OP_SUBSCRIBE_BANK {
+            return None;
+        }
+        let bank = match bin::decode_u64(payload) {
+            Ok(b) => b,
+            Err(e) => return Some(Err(e)),
+        };
+        let watcher: BankWatcher = Box::new(move |ev: &BankEvent| {
+            pusher.push(&bin::encode_bank_event(ev));
+            match ev {
+                BankEvent::Fid { .. } => {}
+                BankEvent::Done => pusher.finish(Ok(Vec::new())),
+                BankEvent::Failed(e) => pusher.finish(Err(e.clone())),
+                BankEvent::Cancelled => {
+                    pusher.finish(Err(DqError::Cancelled(format!("bank {bank} cancelled"))))
+                }
+            }
+        });
+        if self.pool.watch_bank(bank, watcher) {
+            Some(Ok(()))
+        } else {
+            Some(Err(DqError::Protocol(format!("unknown bank {bank}"))))
+        }
+    }
 }
 
 /// The typed error for a missing bank: cancelled tombstones surface as
@@ -406,7 +467,7 @@ pub fn serve_manager(manager: Manager, listen: &str) -> std::io::Result<RpcServe
 /// every worker that speaks it; a worker whose handshake fails — an old
 /// JSON-only build — gets the classic [`RpcClient`] channel instead.
 pub fn serve_pool<M: ManagedPool>(pool: M, listen: &str) -> std::io::Result<RpcServer> {
-    RpcServer::serve_bin(listen, json_handler(pool.clone()), bin_service(pool))
+    RpcServer::serve_bin(listen, json_handler(pool.clone()), Arc::new(PoolBinService { pool }))
 }
 
 /// [`serve_pool`] restricted to framed JSON — the legacy/debug surface.
@@ -416,44 +477,168 @@ pub fn serve_pool_json<M: ManagedPool>(pool: M, listen: &str) -> std::io::Result
     RpcServer::serve(listen, json_handler(pool))
 }
 
-/// [`SessionOps`] over the negotiated connection: the transport behind
-/// remote [`ClientSession`]s. Every op exists on both planes; the match
-/// arms are the *entire* divergence between binary and JSON clients.
-struct RemoteOps {
-    plane: Arc<Plane>,
+/// Locally accumulated view of a subscribed bank: filled in by the push
+/// stream's events, consulted by `status`/`wait` without touching the
+/// wire.
+struct WatchState {
+    fids: Vec<Option<f32>>,
+    completed: usize,
+    terminal: Option<Result<(), DqError>>,
 }
 
-impl RemoteOps {
-    fn bin_call(mux: &Arc<Mux>, conn: u64, op: u32, payload: Vec<u8>) -> Result<Vec<u8>, DqError> {
-        mux.call(conn, op, payload)
-    }
+/// Client-side sink for one bank's `subscribe_bank` push stream.
+struct BankWatch {
+    state: Mutex<WatchState>,
+    cv: Condvar,
 }
 
-impl SessionOps for RemoteOps {
-    fn submit(
-        &self,
-        client: u64,
-        config: QuClassiConfig,
-        pairs: &[CircuitPair],
-    ) -> Result<u64, DqError> {
-        let req = SubmitRequest { client, config, pairs: pairs.to_vec() };
-        match &*self.plane {
-            Plane::Bin { mux, conn } => {
-                let bytes =
-                    Self::bin_call(mux, *conn, bin::OP_SUBMIT_BANK, bin::encode_submit_request(&req))?;
-                Ok(bin::decode_submit_response(&bytes)?.bank)
-            }
-            Plane::Json(rpc) => {
-                let resp = rpc.call("submit_bank", req.to_wire())?;
-                Ok(SubmitResponse::from_wire(&resp)?.bank)
-            }
+impl BankWatch {
+    fn new(total: usize) -> BankWatch {
+        BankWatch {
+            state: Mutex::new(WatchState {
+                fids: vec![None; total],
+                completed: 0,
+                terminal: None,
+            }),
+            cv: Condvar::new(),
         }
     }
 
-    fn wait(&self, bank: u64, timeout: Option<Duration>) -> Result<Vec<f32>, DqError> {
-        let timeout_ms = timeout.map(|t| t.as_millis() as u64);
+    /// Fold one pushed event into the local view (push frames arrive in
+    /// emit order — the completion runner preserves it).
+    fn apply(&self, ev: &BankEvent) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        match ev {
+            BankEvent::Fid { index, fid, .. } => {
+                let i = *index;
+                if i < s.fids.len() && s.fids[i].is_none() {
+                    s.fids[i] = Some(*fid);
+                    s.completed += 1;
+                }
+            }
+            BankEvent::Done => {
+                if s.terminal.is_none() {
+                    s.terminal = Some(Ok(()));
+                }
+            }
+            BankEvent::Failed(e) => {
+                if s.terminal.is_none() {
+                    s.terminal = Some(Err(e.clone()));
+                }
+            }
+            BankEvent::Cancelled => {
+                if s.terminal.is_none() {
+                    s.terminal = Some(Err(DqError::Cancelled("bank cancelled".to_string())));
+                }
+            }
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Terminal from the stream's done callback (first write wins — the
+    /// terminal *event* usually lands first via `apply`).
+    fn finish(&self, res: Result<(), DqError>) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if s.terminal.is_none() {
+            s.terminal = Some(res);
+        }
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Block until the bank reaches a terminal state or `timeout`
+    /// elapses. Returns whether a terminal state was reached.
+    fn wait_terminal(&self, timeout: Duration) -> bool {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let deadline = std::time::Instant::now() + timeout;
+        while s.terminal.is_none() {
+            let left = match deadline.checked_duration_since(std::time::Instant::now()) {
+                Some(d) if !d.is_zero() => d,
+                _ => return false,
+            };
+            let (guard, _) = self
+                .cv
+                .wait_timeout(s, left)
+                .unwrap_or_else(|e| e.into_inner());
+            s = guard;
+        }
+        true
+    }
+
+    /// Snapshot the local view as a [`BankStatus`] (zero network traffic).
+    fn status(&self) -> BankStatus {
+        let s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        BankStatus {
+            pending: s.terminal.is_none(),
+            completed: s.completed,
+            total: s.fids.len(),
+            partial_fids: s.fids.clone(),
+            recovered: false,
+        }
+    }
+}
+
+/// [`SessionOps`] over the negotiated connection: the transport behind
+/// remote [`ClientSession`]s. Every op exists on both planes; the match
+/// arms are the *entire* divergence between binary and JSON clients.
+///
+/// On a binary plane that negotiated [`bin::FEAT_PUSH`], every submitted
+/// bank is immediately subscribed: partial fidelities stream in as push
+/// frames and `status`/bounded `wait` are answered from the local
+/// [`BankWatch`] — zero `bank_status` polls on the wire
+/// (`status_polls` counts the network fallbacks; the push test pins it
+/// at 0).
+struct RemoteOps {
+    plane: Arc<Plane>,
+    watches: Mutex<HashMap<u64, Arc<BankWatch>>>,
+    status_polls: Arc<AtomicU64>,
+}
+
+impl RemoteOps {
+    fn new(plane: Arc<Plane>, status_polls: Arc<AtomicU64>) -> RemoteOps {
+        RemoteOps { plane, watches: Mutex::new(HashMap::new()), status_polls }
+    }
+
+    fn bin_call(mux: &Arc<Mux>, conn: u64, op: u32, payload: Vec<u8>) -> Result<Vec<u8>, DqError> {
+        mux.call(conn, op, payload)
+    }
+
+    fn watch(&self, bank: u64) -> Option<Arc<BankWatch>> {
+        self.watches.lock().unwrap_or_else(|e| e.into_inner()).get(&bank).cloned()
+    }
+
+    fn drop_watch(&self, bank: u64) {
+        self.watches.lock().unwrap_or_else(|e| e.into_inner()).remove(&bank);
+    }
+
+    /// Open the push stream for a freshly submitted bank.
+    fn subscribe(&self, mux: &Arc<Mux>, conn: u64, bank: u64, total: usize) {
+        let watch = Arc::new(BankWatch::new(total));
+        self.watches
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(bank, watch.clone());
+        let apply_watch = watch.clone();
+        mux.request_stream(
+            conn,
+            bin::OP_SUBSCRIBE_BANK,
+            bin::encode_u64(bank),
+            Arc::new(move |bytes: Vec<u8>| {
+                if let Ok(ev) = bin::decode_bank_event(&bytes) {
+                    apply_watch.apply(&ev);
+                }
+            }),
+            Box::new(move |res| watch.finish(res.map(|_| ()))),
+        );
+    }
+
+    /// The single consuming network wait issued once the local watch is
+    /// terminal: instant server-side (the bank is done) and it performs
+    /// the same bank GC a poll-driven client would.
+    fn net_wait(&self, bank: u64, timeout_ms: Option<u64>) -> Result<Vec<f32>, DqError> {
         match &*self.plane {
-            Plane::Bin { mux, conn } => {
+            Plane::Bin { mux, conn, .. } => {
                 let bytes = Self::bin_call(
                     mux,
                     *conn,
@@ -472,10 +657,68 @@ impl SessionOps for RemoteOps {
             }
         }
     }
+}
+
+impl SessionOps for RemoteOps {
+    fn submit(
+        &self,
+        client: u64,
+        config: QuClassiConfig,
+        pairs: &[CircuitPair],
+    ) -> Result<u64, DqError> {
+        let req = SubmitRequest { client, config, pairs: pairs.to_vec() };
+        match &*self.plane {
+            Plane::Bin { mux, conn, features } => {
+                let bytes =
+                    Self::bin_call(mux, *conn, bin::OP_SUBMIT_BANK, bin::encode_submit_request(&req))?;
+                let bank = bin::decode_submit_response(&bytes)?.bank;
+                if features & bin::FEAT_PUSH != 0 {
+                    self.subscribe(mux, *conn, bank, req.pairs.len());
+                }
+                Ok(bank)
+            }
+            Plane::Json(rpc) => {
+                let resp = rpc.call("submit_bank", req.to_wire())?;
+                Ok(SubmitResponse::from_wire(&resp)?.bank)
+            }
+        }
+    }
+
+    fn wait(&self, bank: u64, timeout: Option<Duration>) -> Result<Vec<f32>, DqError> {
+        let timeout_ms = timeout.map(|t| t.as_millis() as u64);
+        match (timeout, self.watch(bank)) {
+            // Bounded wait on a subscribed bank: block on the locally
+            // streamed events, touch the wire only once terminal.
+            (Some(t), Some(watch)) => {
+                if !watch.wait_terminal(t) {
+                    return Err(DqError::Timeout(format!(
+                        "bank {bank} not complete after {:?}",
+                        t
+                    )));
+                }
+                self.drop_watch(bank);
+                self.net_wait(bank, timeout_ms)
+            }
+            // Unbounded wait: let the server block for us (the park
+            // defers it), then retire the watch.
+            _ => {
+                let res = self.net_wait(bank, timeout_ms);
+                if !matches!(res, Err(DqError::Timeout(_))) {
+                    // terminal either way — a timed-out bank stays live
+                    self.drop_watch(bank);
+                }
+                res
+            }
+        }
+    }
 
     fn status(&self, bank: u64) -> Result<BankStatus, DqError> {
+        if let Some(watch) = self.watch(bank) {
+            return Ok(watch.status());
+        }
+        self.status_polls.fetch_add(1, Ordering::Relaxed);
         match &*self.plane {
-            Plane::Bin { mux, conn } => {
+            Plane::Bin { mux, conn, .. } => {
                 let bytes = Self::bin_call(mux, *conn, bin::OP_BANK_STATUS, bin::encode_u64(bank))?;
                 bin::decode_bank_status(&bytes)
             }
@@ -487,16 +730,18 @@ impl SessionOps for RemoteOps {
     }
 
     fn cancel(&self, bank: u64) -> Result<usize, DqError> {
-        match &*self.plane {
-            Plane::Bin { mux, conn } => {
+        let drained = match &*self.plane {
+            Plane::Bin { mux, conn, .. } => {
                 let bytes = Self::bin_call(mux, *conn, bin::OP_CANCEL_BANK, bin::encode_u64(bank))?;
-                Ok(bin::decode_u64(&bytes)? as usize)
+                bin::decode_u64(&bytes)? as usize
             }
             Plane::Json(rpc) => {
                 let resp = rpc.call("cancel_bank", Value::obj().with("bank", bank))?;
-                Ok(resp.req_usize("drained")?)
+                resp.req_usize("drained")?
             }
-        }
+        };
+        self.drop_watch(bank);
+        Ok(drained)
     }
 }
 
@@ -510,6 +755,7 @@ impl SessionOps for RemoteOps {
 pub struct RemoteClient {
     plane: Arc<Plane>,
     client_id: u64,
+    status_polls: Arc<AtomicU64>,
 }
 
 impl RemoteClient {
@@ -522,12 +768,12 @@ impl RemoteClient {
                 .map_err(|e| DqError::Io(format!("connect manager: {e}")))?,
         );
         let client_id = Self::alloc_client(&plane)?;
-        Ok(RemoteClient { plane, client_id })
+        Ok(RemoteClient { plane, client_id, status_polls: Arc::new(AtomicU64::new(0)) })
     }
 
     fn alloc_client(plane: &Plane) -> Result<u64, DqError> {
         match plane {
-            Plane::Bin { mux, conn } => {
+            Plane::Bin { mux, conn, .. } => {
                 bin::decode_u64(&mux.call(*conn, bin::OP_NEW_CLIENT, Vec::new())?)
             }
             Plane::Json(rpc) => Ok(rpc.call("new_client", Value::obj())?.req_u64("client")?),
@@ -539,6 +785,14 @@ impl RemoteClient {
         self.client_id
     }
 
+    /// How many `bank_status` calls actually hit the wire across every
+    /// session of this client. On a push-negotiated binary plane,
+    /// subscribed banks answer `status`/`try_poll` locally — the mux
+    /// reconnect suite pins this counter at zero.
+    pub fn status_polls(&self) -> u64 {
+        self.status_polls.load(Ordering::Relaxed)
+    }
+
     /// Did the dial negotiate the binary plane (vs JSON fallback)?
     pub fn is_binary(&self) -> bool {
         self.plane.is_binary()
@@ -547,21 +801,24 @@ impl RemoteClient {
     /// A typed session bound to a fresh tenant id. Multiple calls
     /// allocate fresh tenant ids from the manager.
     ///
-    /// Note: JSON-plane calls on one connection serialize, and
-    /// binary-plane handlers run inline on the server's per-connection
-    /// thread — either way a long blocking `wait` delays a concurrent
-    /// `try_poll` issued through the same `RemoteClient`. Poll-then-wait
-    /// (or a second connection) if you need overlap.
+    /// On the binary plane blocking `wait`s are deferred off the
+    /// server's transport threads and `try_poll` answers from the push
+    /// stream locally, so waits and polls through one `RemoteClient`
+    /// overlap freely. JSON-plane calls on one connection still
+    /// serialize — poll-then-wait (or a second connection) there.
     pub fn session(&self) -> Result<ClientSession, DqError> {
         let client = Self::alloc_client(&self.plane)?;
-        Ok(ClientSession::new(Arc::new(RemoteOps { plane: self.plane.clone() }), client))
+        Ok(ClientSession::new(
+            Arc::new(RemoteOps::new(self.plane.clone(), self.status_polls.clone())),
+            client,
+        ))
     }
 
     /// Typed pool statistics: aggregate counters plus the live worker
     /// and queue-depth gauges. Works on either plane.
     pub fn stats(&self) -> Result<(ManagerStats, u64, u64), DqError> {
         match &*self.plane {
-            Plane::Bin { mux, conn } => {
+            Plane::Bin { mux, conn, .. } => {
                 bin::decode_pool_stats(&mux.call(*conn, bin::OP_STATS, Vec::new())?)
             }
             Plane::Json(rpc) => {
@@ -595,7 +852,7 @@ impl CircuitExecutor for RemoteClient {
         config: &QuClassiConfig,
         pairs: &[CircuitPair],
     ) -> Result<Vec<f32>, DqError> {
-        let ops = RemoteOps { plane: self.plane.clone() };
+        let ops = RemoteOps::new(self.plane.clone(), self.status_polls.clone());
         let bank = ops.submit(self.client_id, *config, pairs)?;
         ops.wait(bank, None)
     }

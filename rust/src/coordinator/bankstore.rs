@@ -26,6 +26,27 @@ struct BankState {
     recovered: bool,
 }
 
+/// One bank lifecycle event, streamed to registered [`BankWatcher`]s
+/// (the payload behind the binary plane's `subscribe_bank` pushes).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BankEvent {
+    /// Circuit `index` finished with fidelity `fid`; `remaining`
+    /// circuits are still outstanding after it.
+    Fid { index: usize, fid: f32, remaining: usize },
+    /// Every circuit completed; the watcher is deregistered.
+    Done,
+    /// The bank failed; the watcher is deregistered.
+    Failed(DqError),
+    /// The bank was cancelled; the watcher is deregistered.
+    Cancelled,
+}
+
+/// A bank progress observer. Invoked **under the store lock**, so a
+/// watcher must be cheap and must never call back into the store — the
+/// push plane's watchers only append an encoded frame to a
+/// per-connection outbound queue.
+pub type BankWatcher = Box<dyn Fn(&BankEvent) + Send>;
+
 /// The store's contents behind one lock: resident banks plus the ids of
 /// every bank that was ever cancelled. Cancellation must outlive the
 /// bank's residency — in-flight results can arrive, dispatches can fail,
@@ -34,10 +55,41 @@ struct BankState {
 /// `DqError::Cancelled`), never a resurrected bank or a GC-timing-
 /// dependent `Protocol` error. The set costs 8 bytes per cancelled bank
 /// for the store's lifetime.
-#[derive(Debug, Default)]
+#[derive(Default)]
 struct Store {
     banks: HashMap<u64, BankState>,
     cancelled: HashSet<u64>,
+    watchers: HashMap<u64, Vec<BankWatcher>>,
+}
+
+impl std::fmt::Debug for Store {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Store")
+            .field("banks", &self.banks)
+            .field("cancelled", &self.cancelled)
+            .field("watchers", &self.watchers.len())
+            .finish()
+    }
+}
+
+impl Store {
+    /// Fire an event at a bank's watchers (under the store lock).
+    fn notify_watchers(&self, bank: u64, ev: &BankEvent) {
+        if let Some(ws) = self.watchers.get(&bank) {
+            for w in ws {
+                w(ev);
+            }
+        }
+    }
+
+    /// Fire a terminal event and drop the bank's watchers.
+    fn close_watchers(&mut self, bank: u64, ev: &BankEvent) {
+        if let Some(ws) = self.watchers.remove(&bank) {
+            for w in ws {
+                w(ev);
+            }
+        }
+    }
 }
 
 /// Point-in-time snapshot of a bank's progress (the `try_poll` payload).
@@ -205,14 +257,26 @@ impl BankStore {
         if g.cancelled.contains(&bank) {
             return;
         }
-        if let Some(b) = g.banks.get_mut(&bank) {
-            if b.fids[index].is_none() {
-                b.fids[index] = Some(fid);
-                b.remaining -= 1;
-                if b.remaining == 0 {
-                    self.cv.notify_all();
+        let remaining = {
+            let Store { banks, watchers, .. } = &mut *g;
+            match banks.get_mut(&bank) {
+                Some(b) if b.fids[index].is_none() => {
+                    b.fids[index] = Some(fid);
+                    b.remaining -= 1;
+                    if let Some(ws) = watchers.get(&bank) {
+                        let ev = BankEvent::Fid { index, fid, remaining: b.remaining };
+                        for w in ws {
+                            w(&ev);
+                        }
+                    }
+                    Some(b.remaining)
                 }
+                _ => None,
             }
+        };
+        if remaining == Some(0) {
+            g.close_watchers(bank, &BankEvent::Done);
+            self.cv.notify_all();
         }
     }
 
@@ -224,10 +288,15 @@ impl BankStore {
         if g.cancelled.contains(&bank) {
             return;
         }
+        let mut resident = false;
         if let Some(b) = g.banks.get_mut(&bank) {
+            resident = true;
             if b.failed.is_none() {
-                b.failed = Some(reason);
+                b.failed = Some(reason.clone());
             }
+        }
+        if resident {
+            g.close_watchers(bank, &BankEvent::Failed(reason));
             self.cv.notify_all();
         }
     }
@@ -239,11 +308,18 @@ impl BankStore {
     /// their original outcome.
     pub fn fail_pending(&self, reason: DqError) {
         let mut g = self.inner.lock().expect("bankstore poisoned");
-        let Store { banks, cancelled } = &mut *g;
-        for (bank, b) in banks.iter_mut() {
-            if b.remaining > 0 && b.failed.is_none() && !cancelled.contains(bank) {
-                b.failed = Some(reason.clone());
+        let mut swept: Vec<u64> = Vec::new();
+        {
+            let Store { banks, cancelled, .. } = &mut *g;
+            for (bank, b) in banks.iter_mut() {
+                if b.remaining > 0 && b.failed.is_none() && !cancelled.contains(bank) {
+                    b.failed = Some(reason.clone());
+                    swept.push(*bank);
+                }
             }
+        }
+        for bank in swept {
+            g.close_watchers(bank, &BankEvent::Failed(reason.clone()));
         }
         drop(g);
         self.cv.notify_all();
@@ -262,6 +338,7 @@ impl BankStore {
             return false;
         }
         let first = g.cancelled.insert(bank);
+        g.close_watchers(bank, &BankEvent::Cancelled);
         self.cv.notify_all();
         first
     }
@@ -304,6 +381,49 @@ impl BankStore {
         }
     }
 
+    /// Register a progress watcher on a bank. Returns false for a bank
+    /// the store has never seen (nothing to watch). Registration is
+    /// race-free against concurrent results: fidelities that already
+    /// landed are *replayed* to the watcher (in index order, with the
+    /// historical `remaining` countdown), and a bank that is already
+    /// terminal fires `Done`/`Failed`/`Cancelled` immediately instead
+    /// of registering. The watcher runs under the store lock — see
+    /// [`BankWatcher`].
+    pub fn watch(&self, bank: u64, w: BankWatcher) -> bool {
+        let mut g = self.inner.lock().expect("bankstore poisoned");
+        if g.cancelled.contains(&bank) {
+            w(&BankEvent::Cancelled);
+            return true;
+        }
+        let Some(b) = g.banks.get(&bank) else {
+            return false;
+        };
+        let mut remaining = b.fids.len();
+        for (index, f) in b.fids.iter().enumerate() {
+            if let Some(fid) = f {
+                remaining -= 1;
+                // replay in index order with a strictly decreasing
+                // countdown ending at the bank's current `remaining`
+                w(&BankEvent::Fid { index, fid: *fid, remaining });
+            }
+        }
+        if let Some(e) = &b.failed {
+            w(&BankEvent::Failed(e.clone()));
+        } else if b.remaining == 0 {
+            w(&BankEvent::Done);
+        } else {
+            g.watchers.entry(bank).or_default().push(w);
+        }
+        true
+    }
+
+    /// Number of live watchers on a bank (test observability).
+    #[doc(hidden)]
+    pub fn watcher_count(&self, bank: u64) -> usize {
+        let g = self.inner.lock().expect("bankstore poisoned");
+        g.watchers.get(&bank).map_or(0, |ws| ws.len())
+    }
+
     /// True when the bank has ever been cancelled (outlives residency —
     /// see [`BankStore::cancel`]).
     pub fn is_cancelled(&self, bank: u64) -> bool {
@@ -317,6 +437,7 @@ impl BankStore {
     pub fn discard(&self, bank: u64) {
         let mut g = self.inner.lock().expect("bankstore poisoned");
         g.banks.remove(&bank);
+        g.watchers.remove(&bank);
         // wake any waiter so it observes the removal instead of blocking
         self.cv.notify_all();
     }
@@ -518,6 +639,103 @@ mod tests {
         assert_eq!(by_bank(42).fids, vec![Some(0.9)]);
         assert!(by_bank(43).failed.is_some());
         assert_eq!(s.cancelled_ids(), vec![44]);
+    }
+
+    fn recording_watcher() -> (BankWatcher, Arc<Mutex<Vec<BankEvent>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        (Box::new(move |ev: &BankEvent| log2.lock().unwrap().push(ev.clone())), log)
+    }
+
+    #[test]
+    fn watcher_streams_fids_in_order_then_done() {
+        let s = BankStore::new();
+        s.open(50, 3);
+        let (w, log) = recording_watcher();
+        assert!(s.watch(50, w));
+        s.complete(50, 1, 0.1);
+        s.complete(50, 0, 0.2);
+        s.complete(50, 2, 0.3);
+        let got = log.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![
+                BankEvent::Fid { index: 1, fid: 0.1, remaining: 2 },
+                BankEvent::Fid { index: 0, fid: 0.2, remaining: 1 },
+                BankEvent::Fid { index: 2, fid: 0.3, remaining: 0 },
+                BankEvent::Done,
+            ]
+        );
+        assert_eq!(s.watcher_count(50), 0, "Done deregisters the watcher");
+        // a straggler duplicate never re-fires
+        s.complete(50, 1, 0.9);
+        assert_eq!(log.lock().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn watcher_replays_partials_present_at_registration() {
+        let s = BankStore::new();
+        s.open(51, 3);
+        s.complete(51, 2, 0.9);
+        s.complete(51, 0, 0.7);
+        let (w, log) = recording_watcher();
+        assert!(s.watch(51, w));
+        assert_eq!(
+            log.lock().unwrap().clone(),
+            vec![
+                BankEvent::Fid { index: 0, fid: 0.7, remaining: 2 },
+                BankEvent::Fid { index: 2, fid: 0.9, remaining: 1 },
+            ]
+        );
+        // an already-complete bank fires Done immediately, no registration
+        let s2 = BankStore::new();
+        s2.open(52, 1);
+        s2.complete(52, 0, 0.5);
+        let (w2, log2) = recording_watcher();
+        assert!(s2.watch(52, w2));
+        assert_eq!(
+            log2.lock().unwrap().clone(),
+            vec![BankEvent::Fid { index: 0, fid: 0.5, remaining: 0 }, BankEvent::Done]
+        );
+        assert_eq!(s2.watcher_count(52), 0);
+    }
+
+    #[test]
+    fn watcher_observes_failure_cancellation_and_sweeps() {
+        let s = BankStore::new();
+        s.open(53, 2);
+        let (w, log) = recording_watcher();
+        s.watch(53, w);
+        s.fail(53, DqError::WorkerLost("gone".into()));
+        assert_eq!(
+            log.lock().unwrap().clone(),
+            vec![BankEvent::Failed(DqError::WorkerLost("gone".into()))]
+        );
+        assert_eq!(s.watcher_count(53), 0);
+
+        s.open(54, 2);
+        let (w, log) = recording_watcher();
+        s.watch(54, w);
+        s.cancel(54);
+        assert_eq!(log.lock().unwrap().clone(), vec![BankEvent::Cancelled]);
+
+        s.open(55, 2);
+        let (w, log) = recording_watcher();
+        s.watch(55, w);
+        s.fail_pending(DqError::Cancelled("manager stopped".into()));
+        assert_eq!(
+            log.lock().unwrap().clone(),
+            vec![BankEvent::Failed(DqError::Cancelled("manager stopped".into()))]
+        );
+
+        // watching a cancelled-but-GC'd bank still observes Cancelled;
+        // a never-seen bank is unwatchable
+        s.discard(54);
+        let (w, log) = recording_watcher();
+        assert!(s.watch(54, w));
+        assert_eq!(log.lock().unwrap().clone(), vec![BankEvent::Cancelled]);
+        let (w, _) = recording_watcher();
+        assert!(!s.watch(9999, w));
     }
 
     #[test]

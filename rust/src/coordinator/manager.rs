@@ -327,6 +327,16 @@ struct Inner {
     stop: AtomicBool,
 }
 
+/// Lock the journal, recovering from mutex poisoning. A panic while a
+/// journal op was mid-append leaves the file in whatever prefix state the
+/// write reached — exactly what crash recovery's tail-truncation already
+/// handles — so later appends and a clean `recover()` must keep working
+/// instead of cascading `PoisonError` panics (same policy as
+/// `PlanCache`).
+fn journal_lock(j: &Mutex<Journal>) -> std::sync::MutexGuard<'_, Journal> {
+    j.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// The co-Manager. Cheap to clone (shared state).
 #[derive(Clone)]
 pub struct Manager {
@@ -533,7 +543,7 @@ impl Manager {
     /// concurrent submitters this sits well below the append count —
     /// the amortization gauge the coordinator-scale bench reports.
     pub fn journal_syncs(&self) -> Option<u64> {
-        self.inner.journal.as_ref().map(|j| j.lock().unwrap().sync_count())
+        self.inner.journal.as_ref().map(|j| journal_lock(j).sync_count())
     }
 
     /// Best-effort journal append for paths that must not fail the
@@ -546,7 +556,7 @@ impl Manager {
     /// serializing their fsyncs (DESIGN.md §16).
     fn journal_append(&self, rec: Record) {
         if let Some(j) = &self.inner.journal {
-            match j.lock().unwrap().append_async(&rec) {
+            match journal_lock(j).append_async(&rec) {
                 Ok(None) => {}
                 Ok(Some(ticket)) => {
                     if let Err(e) = ticket.commit() {
@@ -564,7 +574,7 @@ impl Manager {
     /// group-commit discipline as [`Manager::journal_append`].
     fn try_journal_append(&self, rec: Record) -> Result<(), DqError> {
         if let Some(j) = &self.inner.journal {
-            let ticket = j.lock().unwrap().append_async(&rec)?;
+            let ticket = journal_lock(j).append_async(&rec)?;
             if let Some(t) = ticket {
                 t.commit()?;
             }
@@ -753,7 +763,7 @@ impl Manager {
             banks,
             weights: q.weights(),
         };
-        let res = journal.lock().unwrap().compact(snap);
+        let res = journal_lock(journal).compact(snap);
         drop(in_flight);
         drop(q);
         match res {
@@ -769,7 +779,7 @@ impl Manager {
     /// the liveness tick).
     fn maybe_compact_journal(&self) {
         let due = match &self.inner.journal {
-            Some(j) => j.lock().unwrap().should_compact(),
+            Some(j) => journal_lock(j).should_compact(),
             None => return,
         };
         if due {
@@ -980,6 +990,15 @@ impl Manager {
         self.inner.banks.status(bank)
     }
 
+    /// Register a progress watcher on a bank: already-landed fidelities
+    /// replay immediately, then every completion (and the terminal
+    /// outcome) fires as it happens. `false` for a bank the store has
+    /// never seen. Backs the binary plane's `subscribe_bank` push stream
+    /// (DESIGN.md §19).
+    pub fn watch_bank(&self, bank: u64, w: super::bankstore::BankWatcher) -> bool {
+        self.inner.banks.watch(bank, w)
+    }
+
     /// True when the bank was ever cancelled — outlives the tombstone, so
     /// status/poll paths can answer [`DqError::Cancelled`] (not "unknown
     /// bank") after the GC.
@@ -1111,7 +1130,7 @@ impl Manager {
                 self.journal_append(Record::Resolved { bank });
             }
             if let Some(j) = &self.inner.journal {
-                if let Err(e) = j.lock().unwrap().flush() {
+                if let Err(e) = journal_lock(j).flush() {
                     crate::log_warn!("manager", "journal flush at shutdown failed: {e}");
                 }
             }
@@ -1411,6 +1430,18 @@ impl Manager {
         let thief_avail = reg.get(thief)?.available();
         if thief_avail == 0 {
             return None;
+        }
+        // Noise-aware placement composes with stealing: a worker the
+        // assigner would refuse under `noise_aware_alpha` must not
+        // acquire the same circuits through the steal side door. Same
+        // cutoff as `select_noise_aware`, computed under the same
+        // registry-lock hold (PR 5's documented bypass, closed).
+        if let Some(alpha) = self.inner.cfg.noise_aware_alpha {
+            let thief_noise = reg.get(thief)?.noise;
+            match scheduler::noise_cutoff(&reg, alpha) {
+                Some(cutoff) if thief_noise <= cutoff => {}
+                _ => return None,
+            }
         }
         let victims = self.inner.outboxes.lock().unwrap().victims(thief);
         for (victim, ob) in victims {
@@ -2290,5 +2321,53 @@ mod tests {
         let fids = handle.wait().unwrap();
         assert_eq!(fids, QsimExecutor.execute_bank(&cfg, &pairs).unwrap());
         m.shutdown();
+    }
+
+    /// Regression (PR 10 satellite): a panic while the journal mutex is
+    /// held must not poison every later append/flush/compact into a
+    /// panic cascade — `journal_lock` recovers the guard, the same
+    /// policy the plan cache uses. The on-disk file is at worst a clean
+    /// prefix (recovery's tail truncation owns torn records), so
+    /// continuing to append is safe.
+    #[test]
+    fn journal_survives_mutex_poisoning() {
+        let path =
+            std::env::temp_dir().join(format!("dqulearn_poison_{}.journal", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let jc = JournalConfig::new(&path);
+        let m = Manager::new(ManagerConfig { journal: Some(jc.clone()), ..Default::default() });
+        let client = m.new_client();
+        let cfg = QuClassiConfig::new(5, 1).unwrap();
+        let pairs = pairs_for(&cfg, 2);
+        let _a = m.submit_bank(client, cfg, &pairs).unwrap();
+
+        // Poison the journal mutex the way a panicking append would:
+        // panic on a thread that holds the lock.
+        let held = m.clone();
+        let _ = std::thread::spawn(move || {
+            let j = held.inner.journal.as_ref().expect("journaling on");
+            let _guard = j.lock().unwrap();
+            panic!("injected panic mid-append");
+        })
+        .join();
+        assert!(
+            m.inner.journal.as_ref().unwrap().lock().is_err(),
+            "mutex must actually be poisoned for this regression to bite"
+        );
+
+        // Later appends still work: the submit path (append-or-reject)
+        // and cancel's WAL-first tombstone both cross the journal lock.
+        let b = m.submit_bank(client, cfg, &pairs).unwrap();
+        m.cancel_bank(b);
+        m.shutdown(); // resolves pendings + flushes through the same lock
+        drop(m);
+
+        // And recovery stays clean: the tombstone appended *after* the
+        // poisoning survived to disk.
+        let (m2, _report) =
+            Manager::recover(ManagerConfig { journal: Some(jc), ..Default::default() }).unwrap();
+        assert!(m2.bank_cancelled(b), "append after mutex poisoning was lost");
+        m2.shutdown();
+        let _ = std::fs::remove_file(&path);
     }
 }

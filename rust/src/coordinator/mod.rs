@@ -52,7 +52,7 @@ pub mod session;
 pub mod shard;
 
 pub use admission::AdmissionQueue;
-pub use bankstore::BankStatus;
+pub use bankstore::{BankEvent, BankStatus, BankWatcher};
 pub use job::{CircuitJob, JobId};
 pub use journal::{Journal, JournalConfig, SyncPolicy};
 pub use manager::{

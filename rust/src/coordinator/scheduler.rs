@@ -102,6 +102,26 @@ fn f64_key(x: f64) -> u64 {
     (x.max(0.0) * 1e12) as u64
 }
 
+/// The pool's noise eligibility bound under `alpha`: a worker qualifies
+/// for noise-aware placement — and, since PR 10, for *stealing* work —
+/// only if its noise is ≤ `lo + (1 - alpha)·(hi - lo)` over the
+/// registered fleet (plus an epsilon so the cleanest worker always
+/// qualifies). `None` when the registry is empty. Shared by
+/// [`select_noise_aware`], `Manager::steal_for`, and the DES mirror so
+/// the placement and steal policies can never drift apart.
+pub fn noise_cutoff(registry: &Registry, alpha: f64) -> Option<f64> {
+    let alpha = alpha.clamp(0.0, 1.0);
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for w in registry.workers() {
+        lo = lo.min(w.noise);
+        hi = hi.max(w.noise);
+    }
+    if !lo.is_finite() {
+        return None;
+    }
+    Some(lo + (1.0 - alpha) * (hi - lo) + 1e-12)
+}
+
 /// Noise-aware selection (extension — the paper's Discussion lists
 /// noise-awareness as future work).
 ///
@@ -113,16 +133,7 @@ fn f64_key(x: f64) -> u64 {
 /// fidelity/latency trade-off quantified in `ablation_noise`). Within
 /// the eligible set, ranking is Algorithm 2's CRU-ascending.
 pub fn select_noise_aware(registry: &Registry, demand: usize, alpha: f64) -> Option<WorkerId> {
-    let alpha = alpha.clamp(0.0, 1.0);
-    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
-    for w in registry.workers() {
-        lo = lo.min(w.noise);
-        hi = hi.max(w.noise);
-    }
-    if !lo.is_finite() {
-        return None;
-    }
-    let cutoff = lo + (1.0 - alpha) * (hi - lo) + 1e-12;
+    let cutoff = noise_cutoff(registry, alpha)?;
     let mut best: Option<(u64, std::cmp::Reverse<usize>, WorkerId)> = None;
     let pass = |strict: bool, best: &mut Option<(u64, std::cmp::Reverse<usize>, WorkerId)>| {
         for w in registry.workers() {

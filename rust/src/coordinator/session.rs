@@ -185,6 +185,11 @@ impl BankHandle {
     /// Non-blocking snapshot: completed/total counts and per-circuit
     /// partial fidelities. Completion counts are monotonically
     /// non-decreasing across calls while the bank runs.
+    ///
+    /// On a push-negotiated binary connection this answers from the
+    /// locally streamed `subscribe_bank` events — no `bank_status`
+    /// round trip (DESIGN.md §19); in-process and JSON sessions poll the
+    /// manager as before.
     pub fn try_poll(&self) -> Result<BankStatus, DqError> {
         self.ops.status(self.bank)
     }

@@ -285,6 +285,13 @@ impl ShardManager {
         self.route(bank).bank_cancelled(bank)
     }
 
+    /// Progress watcher registration on the bank's owning shard (the
+    /// binary plane's `subscribe_bank`; events stream from that shard's
+    /// bank store exactly as in the single-shard manager).
+    pub fn watch_bank(&self, bank: u64, w: super::bankstore::BankWatcher) -> bool {
+        self.route(bank).watch_bank(bank, w)
+    }
+
     /// Cancel a bank on its owning shard.
     pub fn cancel_bank(&self, bank: u64) -> usize {
         self.route(bank).cancel_bank(bank)

@@ -44,7 +44,7 @@ pub fn ibmq_figure(qubits: usize, calib: &Calibration, seed: u64) -> Vec<FigureR
                 // "unrestricted quantum workers, without maximum qubit
                 // constraints" — give each backend ample qubits but FIFO
                 // service (cpu_share = false).
-                workers: vec![SimWorkerSpec { max_qubits: 64, speed: 1.0 }; workers],
+                workers: vec![SimWorkerSpec { max_qubits: 64, speed: 1.0, noise: 0.0 }; workers],
                 env: EnvParams::ibmq_uncontrolled(),
                 calib: calib.clone(),
                 heartbeat_period: 5.0,
@@ -54,6 +54,7 @@ pub fn ibmq_figure(qubits: usize, calib: &Calibration, seed: u64) -> Vec<FigureR
                 // both off
                 steal: false,
                 shards: 1,
+                noise_aware_alpha: None,
                 seed: seed + layers as u64 * 10 + workers as u64,
             };
             let jobs = vec![ClientJob {
@@ -83,7 +84,7 @@ pub fn gcp_one_client_figure(qubits: usize, calib: &Calibration, seed: u64) -> V
         let n = epoch_circuits(qubits, layers);
         for workers in [1usize, 2, 4] {
             let sim = SimConfig {
-                workers: vec![SimWorkerSpec { max_qubits: qubits, speed: 1.0 }; workers],
+                workers: vec![SimWorkerSpec { max_qubits: qubits, speed: 1.0, noise: 0.0 }; workers],
                 env: EnvParams::gcp_controlled(),
                 calib: calib.clone(),
                 heartbeat_period: 5.0,
@@ -93,6 +94,7 @@ pub fn gcp_one_client_figure(qubits: usize, calib: &Calibration, seed: u64) -> V
                 // both off
                 steal: false,
                 shards: 1,
+                noise_aware_alpha: None,
                 seed: seed + layers as u64 * 10 + workers as u64,
             };
             let jobs = vec![ClientJob {
@@ -161,7 +163,7 @@ pub fn multi_tenant_figure(calib: &Calibration, seed: u64) -> Vec<TenancyRow> {
         .collect();
     let workers: Vec<SimWorkerSpec> = [5usize, 10, 15, 20]
         .iter()
-        .map(|&q| SimWorkerSpec { max_qubits: q, speed: 1.0 })
+        .map(|&q| SimWorkerSpec { max_qubits: q, speed: 1.0, noise: 0.0 })
         .collect();
     let run = |tenancy: Tenancy, seed: u64| {
         crate::env::sim::simulate(
@@ -174,6 +176,7 @@ pub fn multi_tenant_figure(calib: &Calibration, seed: u64) -> Vec<TenancyRow> {
                 // paper-faithful: no stealing in the published co-Manager
                 steal: false,
                 shards: 1,
+                noise_aware_alpha: None,
                 seed,
             },
             &jobs,

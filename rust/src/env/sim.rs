@@ -22,6 +22,9 @@ pub struct SimWorkerSpec {
     pub max_qubits: usize,
     /// Relative speed (1.0 = calibration baseline).
     pub speed: f64,
+    /// Reported noise estimate (0.0 = ideal backend). Only consulted
+    /// when [`SimConfig::noise_aware_alpha`] is set.
+    pub noise: f64,
 }
 
 /// Environment parameters.
@@ -132,6 +135,14 @@ pub struct SimConfig {
     /// [`SimResult::cross_shard_steals`]). `0` or `1` is the unsharded
     /// identity: the exact pre-shard code path and schedule.
     pub shards: usize,
+    /// Noise-aware placement gate, mirroring
+    /// `ManagerConfig::noise_aware_alpha`: `Some(alpha)` restricts both
+    /// Algorithm-2 selection *and* backlog stealing to workers within
+    /// [`scheduler::noise_cutoff`] — the same shared predicate the live
+    /// manager and `Manager::steal_for` consult (PR 10), so the DES
+    /// quantifies the same fidelity/latency trade-off. `None` is the
+    /// paper's CRU-only rule.
+    pub noise_aware_alpha: Option<f64>,
     pub seed: u64,
 }
 
@@ -211,6 +222,8 @@ struct SimState {
     shard_of: BTreeMap<WorkerId, usize>,
     /// Cross-shard steals taken so far.
     cross_steals: u64,
+    /// Noise-aware gate (see [`SimConfig::noise_aware_alpha`]).
+    noise_alpha: Option<f64>,
     rng: Rng,
     next_job: u64,
     clients: Vec<ClientState>,
@@ -262,8 +275,12 @@ impl SimState {
             return None;
         }
         if self.shards <= 1 {
-            // Unsharded: the exact live scheduler entry point.
-            return scheduler::select(&self.registry, demand);
+            // Unsharded: the exact live scheduler entry points,
+            // including the manager's noise-aware dispatch switch.
+            return match self.noise_alpha {
+                Some(alpha) => scheduler::select_noise_aware(&self.registry, demand, alpha),
+                None => scheduler::select(&self.registry, demand),
+            };
         }
         self.select_in_shard(demand, job.client % self.shards)
     }
@@ -274,11 +291,21 @@ impl SimState {
     /// the candidate set shrinks, exactly as each live shard's manager
     /// sees only its own registry.
     fn select_in_shard(&self, demand: usize, shard: usize) -> Option<WorkerId> {
+        // Noise gate via the shared cutoff (computed over the whole
+        // registry — in the single-registry DES that is the pool the
+        // cutoff is defined on; each live shard computes it over its own
+        // registry, which *is* its whole pool).
+        let cutoff = self.noise_alpha.and_then(|a| scheduler::noise_cutoff(&self.registry, a));
         let pick = |strict: bool| {
             let mut best: Option<(f64, std::cmp::Reverse<usize>, WorkerId)> = None;
             for w in self.registry.workers() {
                 if self.shard_of.get(&w.id) != Some(&shard) {
                     continue;
+                }
+                if let Some(c) = cutoff {
+                    if w.noise > c {
+                        continue;
+                    }
                 }
                 let fits =
                     if strict { w.available() > demand } else { w.available() >= demand };
@@ -401,6 +428,17 @@ fn steal_from_sibling(st: &mut SimState, thief: WorkerId) -> Option<(SimJob, f64
     let thief_avail = st.registry.get(thief)?.available();
     if thief_avail == 0 {
         return None;
+    }
+    // PR 10: noise-aware placement composes with stealing — a thief the
+    // assigner would refuse under `noise_aware_alpha` cannot pull work
+    // through the steal path either (the exact predicate
+    // `Manager::steal_for` checks, via the shared cutoff).
+    if let Some(alpha) = st.noise_alpha {
+        let thief_noise = st.registry.get(thief)?.noise;
+        match scheduler::noise_cutoff(&st.registry, alpha) {
+            Some(cutoff) if thief_noise <= cutoff => {}
+            _ => return None,
+        }
     }
     let occupant = st.active_client();
     let single = st.tenancy == Tenancy::SingleTenant;
@@ -545,7 +583,7 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
     let mut models = BTreeMap::new();
     let mut shard_of = BTreeMap::new();
     for (i, spec) in cfg.workers.iter().enumerate() {
-        let id = registry.register(spec.max_qubits, 0.0, 0.0);
+        let id = registry.register_with_noise(spec.max_qubits, 0.0, spec.noise, 0.0);
         worker_ids.push(id);
         shard_of.insert(id, i % shards);
         models.insert(
@@ -579,6 +617,7 @@ pub fn simulate(cfg: &SimConfig, jobs: &[ClientJob]) -> SimResult {
         shards,
         shard_of,
         cross_steals: 0,
+        noise_alpha: cfg.noise_aware_alpha,
         rng: Rng::new(cfg.seed),
         next_job: 0,
         clients,
@@ -631,13 +670,17 @@ mod tests {
 
     fn base_config(workers: &[usize], tenancy: Tenancy, env: EnvParams) -> SimConfig {
         SimConfig {
-            workers: workers.iter().map(|&q| SimWorkerSpec { max_qubits: q, speed: 1.0 }).collect(),
+            workers: workers
+                .iter()
+                .map(|&q| SimWorkerSpec { max_qubits: q, speed: 1.0, noise: 0.0 })
+                .collect(),
             env,
             calib: Calibration::qiskit_like(),
             heartbeat_period: 5.0,
             tenancy,
             steal: true,
             shards: 1,
+            noise_aware_alpha: None,
             seed: 42,
         }
     }
@@ -794,8 +837,8 @@ mod tests {
         let jobs = one_client(QuClassiConfig::new(5, 1).unwrap(), 200);
         let mk = |steal: bool| SimConfig {
             workers: vec![
-                SimWorkerSpec { max_qubits: 64, speed: 0.25 },
-                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
+                SimWorkerSpec { max_qubits: 64, speed: 0.25, noise: 0.0 },
+                SimWorkerSpec { max_qubits: 64, speed: 1.0, noise: 0.0 },
             ],
             env: fifo_env(),
             calib: Calibration::qiskit_like(),
@@ -803,6 +846,7 @@ mod tests {
             tenancy: Tenancy::MultiTenant,
             steal,
             shards: 1,
+            noise_aware_alpha: None,
             seed: 9,
         };
         let on = simulate(&mk(true), &jobs);
@@ -866,8 +910,8 @@ mod tests {
         ];
         let cfg = SimConfig {
             workers: vec![
-                SimWorkerSpec { max_qubits: 64, speed: 0.25 },
-                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
+                SimWorkerSpec { max_qubits: 64, speed: 0.25, noise: 0.0 },
+                SimWorkerSpec { max_qubits: 64, speed: 1.0, noise: 0.0 },
             ],
             env: fifo_env(),
             calib: Calibration::qiskit_like(),
@@ -875,6 +919,7 @@ mod tests {
             tenancy: Tenancy::MultiTenant,
             steal: false,
             shards: 2,
+            noise_aware_alpha: None,
             seed: 7,
         };
         let r = simulate(&cfg, &jobs);
@@ -903,8 +948,8 @@ mod tests {
         ];
         let mk = |steal: bool| SimConfig {
             workers: vec![
-                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
-                SimWorkerSpec { max_qubits: 64, speed: 1.0 },
+                SimWorkerSpec { max_qubits: 64, speed: 1.0, noise: 0.0 },
+                SimWorkerSpec { max_qubits: 64, speed: 1.0, noise: 0.0 },
             ],
             env: fifo_env(),
             calib: Calibration::qiskit_like(),
@@ -912,6 +957,7 @@ mod tests {
             tenancy: Tenancy::MultiTenant,
             steal,
             shards: 2,
+            noise_aware_alpha: None,
             seed: 11,
         };
         let on = simulate(&mk(true), &jobs);
@@ -945,5 +991,58 @@ mod tests {
         cfg.shards = 2;
         let result = std::panic::catch_unwind(|| simulate(&cfg, &jobs));
         assert!(result.is_err(), "expected home-shard placement validation to fire");
+    }
+
+    #[test]
+    fn noise_aware_alpha_gates_placement_and_stealing() {
+        // Mirror of the live manager's PR 10 composition: `Some(alpha)`
+        // threads `scheduler::noise_cutoff` through Algorithm-2 selection
+        // *and* the steal path. Two identical-speed 20q FIFO workers, one
+        // ideal and one noisy. With alpha = 1.0 the whole epoch is
+        // confined to the clean backend — the noisy worker receives no
+        // work by placement, and the steal gate keeps it from pulling any
+        // through the back door — so the epoch takes ~2x the CRU-only
+        // schedule. alpha = 0.0 admits the full pool and reproduces the
+        // paper rule's schedule exactly (same selections, same event
+        // count), proving the gate's pass-through arm is the identity.
+        let jobs = one_client(QuClassiConfig::new(5, 1).unwrap(), 64);
+        let env = EnvParams {
+            client_overhead: 0.0,
+            jitter_sigma: 0.0,
+            queue_delay_mean: 0.0,
+            cpu_share: false,
+            fifo: true,
+            cru_per_circuit: 0.45,
+        };
+        let mk = |alpha: Option<f64>| SimConfig {
+            workers: vec![
+                SimWorkerSpec { max_qubits: 20, speed: 1.0, noise: 0.0 },
+                SimWorkerSpec { max_qubits: 20, speed: 1.0, noise: 0.05 },
+            ],
+            env,
+            calib: Calibration::qiskit_like(),
+            heartbeat_period: 5.0,
+            tenancy: Tenancy::MultiTenant,
+            steal: true,
+            shards: 1,
+            noise_aware_alpha: alpha,
+            seed: 13,
+        };
+        let paper = simulate(&mk(None), &jobs);
+        let gated = simulate(&mk(Some(1.0)), &jobs);
+        let zero = simulate(&mk(Some(0.0)), &jobs);
+        assert!(
+            gated.makespan >= 1.9 * paper.makespan,
+            "noise gate did not confine the epoch: gated {} vs paper {}",
+            gated.makespan,
+            paper.makespan
+        );
+        assert!(
+            (zero.makespan - paper.makespan).abs() < 1e-9,
+            "alpha = 0 drifted off the paper rule: {} vs {}",
+            zero.makespan,
+            paper.makespan
+        );
+        assert_eq!(zero.events, paper.events, "alpha = 0 changed the event schedule");
     }
 }

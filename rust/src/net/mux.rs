@@ -1,4 +1,4 @@
-//! `net/mux` — the async multiplexed cluster plane (DESIGN.md §17).
+//! `net/mux` — the async multiplexed cluster plane (DESIGN.md §17, §19).
 //!
 //! One event-loop thread owns every worker socket in nonblocking mode
 //! and multiplexes hundreds of in-flight RPCs over them; completions
@@ -19,13 +19,14 @@
 //! monotonically increasing correlation id; responses echo it. That is
 //! the whole multiplexing trick: any number of requests can be in
 //! flight per socket, and responses may arrive in any order.
+//! Correlation id 0 is reserved for the `attach` exchange.
 //!
 //! **Frame layout** (after the handshake, both directions):
 //!
 //! ```text
 //! [u32 body_len LE][u32 crc32 LE][body]
 //! body := kind:u8, corr:varint, (op:varint if kind==REQ), payload...
-//! kind := 0 REQ | 1 OK | 2 ERR | 3 PING | 4 PONG
+//! kind := 0 REQ | 1 OK | 2 ERR | 3 PING | 4 PONG | 5 PUSH
 //! ```
 //!
 //! The crc32 (same polynomial as the journal) makes corruption —
@@ -41,8 +42,30 @@
 //! a hello, and falls back to the JSON channel — old workers interop
 //! without any out-of-band capability registry. Symmetrically, the
 //! upgraded JSON server (`RpcServer::serve_bin`) sniffs the first four
-//! bytes of each accepted connection and routes magic to a binary
-//! session, anything else to the JSON loop.
+//! bytes of each accepted connection and routes magic to the binary
+//! park, anything else to the JSON loop.
+//!
+//! **Resumable sessions + in-place reconnect (DESIGN.md §19).** When
+//! both sides negotiated `FEAT_RESUME`, the dialer's first request is
+//! `attach` (correlation id 0) carrying a session token (0 = fresh);
+//! the server replies with the token and its *request watermark* — the
+//! highest request correlation id it ever received on the session. A
+//! connection torn down by a transport fault (read/write error, EOF)
+//! is then *revived in place*: a `net/backoff`-driven redialer
+//! re-dials, re-handshakes, and re-attaches with the same token, the
+//! loop swaps the socket under the same connection id, re-sends only
+//! the retained request frames **above** the watermark (TCP delivers
+//! requests in corr order, so the watermark is a complete receipt
+//! record), and keeps waiting on the rest — their replies were parked
+//! in the server-side session and flush after re-attach. Callers never
+//! observe the flap: no `WorkerLost`, no re-registration, exactly-once
+//! request dispatch. Idle timeouts and protocol violations stay fatal.
+//!
+//! **Unsolicited pushes.** A streaming request (`subscribe_bank`)
+//! leaves its correlation id open: the server pushes `KIND_PUSH`
+//! frames on it (bank progress events) and closes it with a final
+//! OK/ERR. Pushes ride the session out-queue, so they survive a
+//! reconnect like any parked reply.
 //!
 //! **Backpressure.** Each connection has a bounded write queue and a
 //! bounded pending-request map; a request that would exceed either
@@ -56,10 +79,10 @@
 //! error the heartbeat evictor produces, so the manager's existing
 //! requeue/eviction path absorbs transport death with no new states.
 
-use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -80,12 +103,109 @@ pub const KIND_OK: u8 = 1;
 pub const KIND_ERR: u8 = 2;
 pub const KIND_PING: u8 = 3;
 pub const KIND_PONG: u8 = 4;
+/// Unsolicited server→client event on a streaming request's
+/// correlation id (`FEAT_PUSH`).
+pub const KIND_PUSH: u8 = 5;
+
+// ---------------------------------------------------------------------------
+// server-side out-queues and push handles
+// ---------------------------------------------------------------------------
+
+/// A connection's (or session's) outbound byte queue. Everything a
+/// service produces — inline replies, deferred replies, pushes — lands
+/// here; the park loop drains it into the owning connection's write
+/// buffer. Because the queue belongs to the *session* (when one is
+/// attached), bytes produced while the transport is down are parked,
+/// not lost, and flush after an in-place reconnect.
+struct OutQueue {
+    buf: Mutex<Vec<u8>>,
+}
+
+impl OutQueue {
+    fn new() -> Arc<OutQueue> {
+        Arc::new(OutQueue { buf: Mutex::new(Vec::new()) })
+    }
+
+    fn append(&self, bytes: &[u8]) {
+        // recover from poison: a panicking service thread must not
+        // brick the connection (same discipline as the plan cache)
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).extend_from_slice(bytes);
+    }
+
+    /// Move queued bytes into `wbuf`; true when anything moved.
+    fn drain_into(&self, wbuf: &mut Vec<u8>) -> bool {
+        let mut g = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        if g.is_empty() {
+            return false;
+        }
+        wbuf.extend_from_slice(&g);
+        g.clear();
+        true
+    }
+
+    fn len(&self) -> usize {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+/// Encode a request's terminal reply frame.
+fn reply_frame(corr: u64, res: Result<Vec<u8>, DqError>) -> Vec<u8> {
+    match res {
+        Ok(p) => encode_frame(KIND_OK, corr, 0, &p),
+        Err(e) => encode_frame(KIND_ERR, corr, 0, &bin::encode_error(&e)),
+    }
+}
+
+/// Handle a streaming service holds to emit events on an open
+/// correlation id (see [`MuxService::open_stream`]). Cheap to clone
+/// into watcher closures; safe to use from any thread — frames are
+/// appended whole, so pushes never interleave mid-frame.
+#[derive(Clone)]
+pub struct Pusher {
+    out: Arc<OutQueue>,
+    corr: u64,
+}
+
+impl Pusher {
+    /// Emit one `KIND_PUSH` event.
+    pub fn push(&self, payload: &[u8]) {
+        self.out.append(&encode_frame(KIND_PUSH, self.corr, 0, payload));
+    }
+
+    /// Close the stream with its terminal OK/ERR reply.
+    pub fn finish(&self, res: Result<Vec<u8>, DqError>) {
+        self.out.append(&reply_frame(self.corr, res));
+    }
+}
 
 /// A binary-plane request handler: interned op id and raw payload in,
-/// raw payload (or typed error) out. The worker service and test parks
-/// implement this; `wire::bin` owns the payload codecs.
+/// raw payload (or typed error) out. The worker service and the
+/// manager's pool service implement this; `wire::bin` owns the payload
+/// codecs.
 pub trait MuxService: Send + Sync + 'static {
     fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError>;
+
+    /// Ops whose `handle` may block (`wait_bank`, worker `execute`):
+    /// the park runs them on a transient thread and the reply rides
+    /// the session out-queue, so one blocked handler never stalls the
+    /// transport. Defaults to "everything is fast, run inline".
+    fn defer(&self, _op: u32) -> bool {
+        false
+    }
+
+    /// Streaming ops: claim the request by returning `Some` — either
+    /// `Ok(())` (the stream is open; events flow through `pusher`, and
+    /// the service must eventually `finish` it) or an immediate error.
+    /// `None` means "not a streaming op", falling through to
+    /// [`MuxService::handle`].
+    fn open_stream(
+        &self,
+        _op: u32,
+        _payload: &[u8],
+        _pusher: Pusher,
+    ) -> Option<Result<(), DqError>> {
+        None
+    }
 }
 
 impl<F> MuxService for F
@@ -106,6 +226,8 @@ static TRANSPORT_THREADS: AtomicUsize = AtomicUsize::new(0);
 /// How many mux transport threads (event loops, completion runners,
 /// server parks) are alive right now, process-wide. The 256-worker
 /// soak bench asserts this stays ≤ 3 — the whole point of the plane.
+/// Transient helpers (redialers, deferred handlers) are deliberately
+/// not transport threads: they exist per event, not per connection.
 pub fn transport_thread_count() -> usize {
     TRANSPORT_THREADS.load(Ordering::SeqCst)
 }
@@ -158,7 +280,7 @@ pub fn encode_frame(kind: u8, corr: u64, op: u32, payload: &[u8]) -> Vec<u8> {
 fn parse_body(body: &[u8]) -> Result<Frame, DqError> {
     let mut c = bin::Cur::new(body);
     let kind = c.take(1)?[0];
-    if kind > KIND_PONG {
+    if kind > KIND_PUSH {
         return Err(DqError::Protocol(format!("mux: unknown frame kind {kind}")));
     }
     let corr = c.take_varint()?;
@@ -201,7 +323,7 @@ pub fn take_frame(buf: &mut Vec<u8>) -> Result<Option<Frame>, DqError> {
 }
 
 fn hello() -> [u8; 6] {
-    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], bin::BIN_VERSION, bin::FEAT_BIN_EXECUTE]
+    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], bin::BIN_VERSION, bin::FEAT_ALL]
 }
 
 /// Outcome of the connect handshake.
@@ -218,7 +340,7 @@ fn negotiate(peer_version: u8, peer_features: u8) -> Result<Negotiated, DqError>
     if version == 0 {
         return Err(DqError::Protocol("mux: peer negotiated version 0".into()));
     }
-    Ok(Negotiated { version, features: peer_features & bin::FEAT_BIN_EXECUTE })
+    Ok(Negotiated { version, features: peer_features & bin::FEAT_ALL })
 }
 
 /// Run the dialing side of the handshake on a blocking stream. An EOF
@@ -239,6 +361,51 @@ pub fn client_handshake(stream: &mut TcpStream, timeout: Duration) -> Result<Neg
     let negotiated = negotiate(reply[4], reply[5])?;
     stream.set_read_timeout(None)?;
     Ok(negotiated)
+}
+
+/// Read exactly one frame from a blocking stream (attach exchange only
+/// — everything after it is nonblocking and loop-driven).
+fn read_frame_blocking(stream: &mut TcpStream) -> Result<Frame, DqError> {
+    let mut header = [0u8; 8];
+    stream.read_exact(&mut header).map_err(|e| DqError::Io(format!("mux attach read: {e}")))?;
+    let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    if len > MAX_FRAME {
+        return Err(DqError::Protocol(format!("mux: frame of {len} bytes exceeds cap")));
+    }
+    let crc = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    let mut body = vec![0u8; len as usize];
+    stream.read_exact(&mut body).map_err(|e| DqError::Io(format!("mux attach read: {e}")))?;
+    if crc32(&body) != crc {
+        return Err(DqError::Protocol("mux: frame checksum mismatch".into()));
+    }
+    parse_body(&body)
+}
+
+/// Run the attach exchange on a fresh handshaken (still blocking)
+/// stream: send `attach(token)` as correlation id 0, read the reply.
+/// Returns `(token, resumed, last_req_corr)`.
+fn client_attach(
+    stream: &mut TcpStream,
+    token: u64,
+    timeout: Duration,
+) -> Result<(u64, bool, u64), DqError> {
+    stream.set_read_timeout(Some(timeout))?;
+    let frame = encode_frame(KIND_REQ, 0, bin::OP_ATTACH, &bin::encode_attach_request(token));
+    stream.write_all(&frame)?;
+    stream.flush()?;
+    let reply = read_frame_blocking(stream)?;
+    let out = match reply.kind {
+        KIND_OK if reply.corr == 0 => bin::decode_attach_ok(&reply.payload)?,
+        KIND_ERR => return Err(bin::decode_error(&reply.payload).unwrap_or_else(|e| e)),
+        k => {
+            return Err(DqError::Protocol(format!(
+                "mux: expected attach reply, got frame kind {k} corr {}",
+                reply.corr
+            )))
+        }
+    };
+    stream.set_read_timeout(None)?;
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -291,62 +458,6 @@ pub(crate) fn poll_read_exact(
     Ok(PollRead::Done)
 }
 
-/// Serve one *binary* session on a thread-per-connection server
-/// (`RpcServer::serve_bin` routes here after sniffing the magic, which
-/// has already been consumed). Requests dispatch inline; malformed
-/// frames close the connection.
-pub(crate) fn serve_bin_connection(
-    mut reader: BufReader<TcpStream>,
-    mut writer: BufWriter<TcpStream>,
-    service: Arc<dyn MuxService>,
-    stop: Arc<AtomicBool>,
-) {
-    // Finish the handshake: 2 bytes of version+features follow the magic.
-    let mut rest = [0u8; 2];
-    if !matches!(poll_read_exact(&mut reader, &mut rest, &stop), Ok(PollRead::Done)) {
-        return;
-    }
-    if negotiate(rest[0], rest[1]).is_err() {
-        return;
-    }
-    if writer.write_all(&hello()).and_then(|_| writer.flush()).is_err() {
-        return;
-    }
-    while !stop.load(Ordering::Relaxed) {
-        let mut header = [0u8; 8];
-        if !matches!(poll_read_exact(&mut reader, &mut header, &stop), Ok(PollRead::Done)) {
-            return;
-        }
-        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
-        let crc = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
-        if len > MAX_FRAME {
-            return;
-        }
-        let mut body = vec![0u8; len as usize];
-        if !matches!(poll_read_exact(&mut reader, &mut body, &stop), Ok(PollRead::Done)) {
-            return;
-        }
-        if crc32(&body) != crc {
-            return;
-        }
-        let frame = match parse_body(&body) {
-            Ok(f) => f,
-            Err(_) => return,
-        };
-        let out = match frame.kind {
-            KIND_PING => encode_frame(KIND_PONG, frame.corr, 0, &[]),
-            KIND_REQ => match service.handle(frame.op, &frame.payload) {
-                Ok(p) => encode_frame(KIND_OK, frame.corr, 0, &p),
-                Err(e) => encode_frame(KIND_ERR, frame.corr, 0, &bin::encode_error(&e)),
-            },
-            _ => return, // only a dialer sends OK/ERR/PONG
-        };
-        if writer.write_all(&out).and_then(|_| writer.flush()).is_err() {
-            return;
-        }
-    }
-}
-
 // ---------------------------------------------------------------------------
 // the multiplexer (dialing side: the co-Manager)
 // ---------------------------------------------------------------------------
@@ -365,6 +476,14 @@ pub struct MuxConfig {
     pub write_high_water: usize,
     /// Dial budget: TCP connect retries (capped backoff) + handshake.
     pub connect_timeout: Duration,
+    /// How long a transport-faulted resumable connection may redial
+    /// before its pending requests fail with the original error.
+    /// `Duration::ZERO` disables in-place reconnect.
+    pub revive_window: Duration,
+    /// Cap on the torn-down-connection id set (oldest entries are
+    /// pruned) so week-long processes under worker churn don't leak
+    /// one entry per flap.
+    pub max_dead: usize,
 }
 
 impl Default for MuxConfig {
@@ -375,6 +494,8 @@ impl Default for MuxConfig {
             max_inflight: 1024,
             write_high_water: 8 << 20,
             connect_timeout: Duration::from_secs(5),
+            revive_window: Duration::from_secs(2),
+            max_dead: 1024,
         }
     }
 }
@@ -388,22 +509,114 @@ pub struct MuxConn {
 
 type Callback = Box<dyn FnOnce(Result<Vec<u8>, DqError>) + Send + 'static>;
 
-struct Completion {
-    cb: Callback,
-    res: Result<Vec<u8>, DqError>,
+/// Push-event observer for a streaming request (shared, re-invocable).
+pub type PushFn = Arc<dyn Fn(Vec<u8>) + Send + Sync + 'static>;
+
+/// Completion-side callback of a pending request.
+enum PendingCb {
+    /// Plain request: one reply, then done.
+    Oneshot(Callback),
+    /// Streaming request: `push` per `KIND_PUSH`, `done` on OK/ERR.
+    Stream { push: PushFn, done: Callback },
 }
 
+impl PendingCb {
+    fn into_done(self) -> Callback {
+        match self {
+            PendingCb::Oneshot(cb) => cb,
+            PendingCb::Stream { done, .. } => done,
+        }
+    }
+}
+
+/// One in-flight request. The encoded frame is retained on resumable
+/// connections until the reply arrives, so an in-place reconnect can
+/// re-send exactly the frames the server never received.
+struct Pending {
+    frame: Vec<u8>,
+    cb: PendingCb,
+}
+
+/// A deferred unit of completion work (callbacks and push events run on
+/// the `mux-done` thread, in the order the loop produced them — which
+/// preserves per-stream push order).
+type DoneTask = Box<dyn FnOnce() + Send + 'static>;
+
 enum Cmd {
-    Register { id: u64, stream: TcpStream },
-    Request { conn: u64, op: u32, payload: Vec<u8>, done: Callback },
+    Register {
+        id: u64,
+        stream: TcpStream,
+        token: Option<u64>,
+        addr: Option<SocketAddr>,
+    },
+    Request {
+        conn: u64,
+        op: u32,
+        payload: Vec<u8>,
+        cb: PendingCb,
+    },
+    /// A redialer brought a torn-down connection back.
+    Revived {
+        id: u64,
+        stream: TcpStream,
+        token: u64,
+        resumed: bool,
+        last_req_corr: u64,
+    },
+    /// A redialer exhausted its window.
+    ReviveFailed {
+        id: u64,
+        err: DqError,
+    },
+}
+
+/// The capped set of permanently torn-down connection ids. Bounded:
+/// entries are pruned oldest-first past `cap`, and a successfully
+/// revived connection never enters at all.
+struct DeadSet {
+    order: VecDeque<u64>,
+    set: HashSet<u64>,
+    cap: usize,
+}
+
+impl DeadSet {
+    fn new(cap: usize) -> DeadSet {
+        DeadSet { order: VecDeque::new(), set: HashSet::new(), cap: cap.max(1) }
+    }
+
+    fn insert(&mut self, id: u64) {
+        if self.set.insert(id) {
+            self.order.push_back(id);
+            while self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.set.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.set.contains(&id)
+    }
+
+    fn len(&self) -> usize {
+        self.set.len()
+    }
 }
 
 struct Shared {
     cmds: Mutex<Vec<Cmd>>,
     cv: Condvar,
     stop: AtomicBool,
-    /// Connections the loop has torn down: requests fail fast.
-    dead: Mutex<std::collections::HashSet<u64>>,
+    /// Connections the loop has torn down for good: requests fail fast.
+    dead: Mutex<DeadSet>,
+}
+
+impl Shared {
+    fn push(&self, cmd: Cmd) {
+        self.cmds.lock().expect("mux cmd queue poisoned").push(cmd);
+        self.cv.notify_all();
+    }
 }
 
 /// The multiplexer: two threads total (event loop + completion runner)
@@ -411,7 +624,7 @@ struct Shared {
 pub struct Mux {
     shared: Arc<Shared>,
     cfg: MuxConfig,
-    next_conn: AtomicU64,
+    next_conn: std::sync::atomic::AtomicU64,
     loop_thread: Mutex<Option<JoinHandle<()>>>,
     runner_thread: Mutex<Option<JoinHandle<()>>>,
 }
@@ -423,9 +636,9 @@ impl Mux {
             cmds: Mutex::new(Vec::new()),
             cv: Condvar::new(),
             stop: AtomicBool::new(false),
-            dead: Mutex::new(std::collections::HashSet::new()),
+            dead: Mutex::new(DeadSet::new(cfg.max_dead)),
         });
-        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let (done_tx, done_rx) = mpsc::channel::<DoneTask>();
         let shared2 = shared.clone();
         let cfg2 = cfg.clone();
         let loop_thread = std::thread::Builder::new()
@@ -436,22 +649,23 @@ impl Mux {
             .name("mux-done".into())
             .spawn(move || {
                 let _gauge = TransportGuard::enter();
-                while let Ok(c) = done_rx.recv() {
-                    (c.cb)(c.res);
+                while let Ok(task) = done_rx.recv() {
+                    task();
                 }
             })
             .expect("spawn mux-done");
         Arc::new(Mux {
             shared,
             cfg,
-            next_conn: AtomicU64::new(1),
+            next_conn: std::sync::atomic::AtomicU64::new(1),
             loop_thread: Mutex::new(Some(loop_thread)),
             runner_thread: Mutex::new(Some(runner_thread)),
         })
     }
 
     /// Dial a peer (TCP connect under capped backoff + jitter, then the
-    /// version handshake) and hand the socket to the event loop. Errors
+    /// version handshake and — when `FEAT_RESUME` is negotiated — the
+    /// attach exchange) and hand the socket to the event loop. Errors
     /// mean "this peer does not speak mux" — callers fall back to JSON.
     pub fn connect<A: ToSocketAddrs + Clone>(&self, addr: A) -> Result<MuxConn, DqError> {
         if self.shared.stop.load(Ordering::Relaxed) {
@@ -466,9 +680,17 @@ impl Mux {
         .map_err(|e| DqError::Io(format!("mux connect failed: {e}")))?;
         stream.set_nodelay(true).map_err(|e| DqError::Io(e.to_string()))?;
         let negotiated = client_handshake(&mut stream, self.cfg.connect_timeout)?;
+        let (token, peer) = if negotiated.features & bin::FEAT_RESUME != 0 {
+            let peer = stream.peer_addr().map_err(|e| DqError::Io(e.to_string()))?;
+            let (token, _resumed, _last) =
+                client_attach(&mut stream, 0, self.cfg.connect_timeout)?;
+            (Some(token), Some(peer))
+        } else {
+            (None, None)
+        };
         stream.set_nonblocking(true).map_err(|e| DqError::Io(e.to_string()))?;
         let id = self.next_conn.fetch_add(1, Ordering::Relaxed);
-        self.push(Cmd::Register { id, stream });
+        self.shared.push(Cmd::Register { id, stream, token, addr: peer });
         Ok(MuxConn { id, negotiated })
     }
 
@@ -476,15 +698,33 @@ impl Mux {
     /// runs on the completion-runner thread (or inline, if the plane is
     /// already stopped). Never blocks on the network.
     pub fn request(&self, conn: u64, op: u32, payload: Vec<u8>, done: Callback) {
+        self.submit(conn, op, payload, PendingCb::Oneshot(done));
+    }
+
+    /// Streaming request: `on_push` runs (on the completion runner, in
+    /// arrival order) for every `KIND_PUSH` frame the server emits on
+    /// this correlation id; `done` runs once on the final OK/ERR.
+    pub fn request_stream(
+        &self,
+        conn: u64,
+        op: u32,
+        payload: Vec<u8>,
+        on_push: PushFn,
+        done: Callback,
+    ) {
+        self.submit(conn, op, payload, PendingCb::Stream { push: on_push, done });
+    }
+
+    fn submit(&self, conn: u64, op: u32, payload: Vec<u8>, cb: PendingCb) {
         if self.shared.stop.load(Ordering::Relaxed) {
-            done(Err(DqError::Cancelled("mux is shut down".into())));
+            cb.into_done()(Err(DqError::Cancelled("mux is shut down".into())));
             return;
         }
         if self.is_dead(conn) {
-            done(Err(DqError::WorkerLost(format!("mux connection {conn} is closed"))));
+            cb.into_done()(Err(DqError::WorkerLost(format!("mux connection {conn} is closed"))));
             return;
         }
-        self.push(Cmd::Request { conn, op, payload, done });
+        self.shared.push(Cmd::Request { conn, op, payload, cb });
     }
 
     /// Blocking convenience over [`Mux::request`].
@@ -501,9 +741,16 @@ impl Mux {
         rx.recv().unwrap_or_else(|_| Err(DqError::Cancelled("mux is shut down".into())))
     }
 
-    /// Has the event loop torn this connection down?
+    /// Has the event loop torn this connection down for good? (False
+    /// while an in-place revival is still in flight — requests queue.)
     pub fn is_dead(&self, conn: u64) -> bool {
-        self.shared.dead.lock().expect("mux dead set poisoned").contains(&conn)
+        self.shared.dead.lock().expect("mux dead set poisoned").contains(conn)
+    }
+
+    /// Size of the torn-down-connection set (bounded by
+    /// [`MuxConfig::max_dead`]; regression-tested under churn).
+    pub fn dead_len(&self) -> usize {
+        self.shared.dead.lock().expect("mux dead set poisoned").len()
     }
 
     /// Stop both threads, failing every pending request `Cancelled`.
@@ -516,11 +763,6 @@ impl Mux {
         if let Some(t) = self.runner_thread.lock().expect("mux join poisoned").take() {
             let _ = t.join();
         }
-    }
-
-    fn push(&self, cmd: Cmd) {
-        self.shared.cmds.lock().expect("mux cmd queue poisoned").push(cmd);
-        self.shared.cv.notify_all();
     }
 }
 
@@ -535,25 +777,104 @@ struct Conn {
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
     woff: usize,
-    pending: HashMap<u64, Callback>,
+    pending: HashMap<u64, Pending>,
     next_corr: u64,
     last_rx: Instant,
     last_ping: Instant,
+    /// Session token (resumable connections only).
+    token: Option<u64>,
+    /// Peer address, for in-place redial.
+    addr: Option<SocketAddr>,
 }
 
 impl Conn {
     fn queued_bytes(&self) -> usize {
         self.wbuf.len() - self.woff
     }
+
+    fn resumable(&self) -> bool {
+        self.token.is_some() && self.addr.is_some()
+    }
 }
 
-fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Completion>) {
+/// A torn-down connection whose socket is being redialed in place. New
+/// requests keep accumulating here (they are re-sent on revival, being
+/// above the server's watermark by construction).
+struct Reviving {
+    pending: HashMap<u64, Pending>,
+    next_corr: u64,
+    addr: SocketAddr,
+}
+
+/// Dial + handshake + re-attach, once. Any error is retried by the
+/// redialer under backoff until its window closes.
+fn try_revive(
+    addr: SocketAddr,
+    token: u64,
+    timeout: Duration,
+) -> Result<(TcpStream, u64, bool, u64), DqError> {
+    let mut stream =
+        TcpStream::connect_timeout(&addr, timeout).map_err(|e| DqError::Io(e.to_string()))?;
+    stream.set_nodelay(true).map_err(|e| DqError::Io(e.to_string()))?;
+    let negotiated = client_handshake(&mut stream, timeout)?;
+    if negotiated.features & bin::FEAT_RESUME == 0 {
+        return Err(DqError::Protocol("mux: peer no longer supports session resume".into()));
+    }
+    let (tok, resumed, last) = client_attach(&mut stream, token, timeout)?;
+    stream.set_nonblocking(true).map_err(|e| DqError::Io(e.to_string()))?;
+    Ok((stream, tok, resumed, last))
+}
+
+/// Transient (non-transport-gauged) redial thread for one torn-down
+/// connection: capped-backoff dial attempts until the revive window
+/// closes, then report either way through the command queue.
+fn spawn_redialer(shared: Arc<Shared>, cfg: &MuxConfig, id: u64, addr: SocketAddr, token: u64, cause: DqError) {
+    let window = cfg.revive_window;
+    let attempt_timeout = cfg.connect_timeout.min(Duration::from_millis(500)).max(Duration::from_millis(50));
+    let _ = std::thread::Builder::new().name(format!("mux-redial-{id}")).spawn(move || {
+        let deadline = Instant::now() + window;
+        let mut backoff = backoff::Backoff::new(
+            Duration::from_millis(25),
+            Duration::from_millis(250),
+            backoff::auto_seed(),
+        );
+        loop {
+            if shared.stop.load(Ordering::Relaxed) {
+                return; // the loop drains `reviving` on shutdown
+            }
+            match try_revive(addr, token, attempt_timeout) {
+                Ok((stream, tok, resumed, last_req_corr)) => {
+                    shared.push(Cmd::Revived { id, stream, token: tok, resumed, last_req_corr });
+                    return;
+                }
+                Err(_) if Instant::now() < deadline => {
+                    let nap = backoff
+                        .next_delay()
+                        .min(deadline.saturating_duration_since(Instant::now()));
+                    std::thread::sleep(nap);
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "mux",
+                        "connection {id} revival gave up after {window:?}: {e} (drop cause: {cause})"
+                    );
+                    shared.push(Cmd::ReviveFailed { id, err: cause });
+                    return;
+                }
+            }
+        }
+    });
+}
+
+fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<DoneTask>) {
     let _gauge = TransportGuard::enter();
     let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut reviving: HashMap<u64, Reviving> = HashMap::new();
     let mut scratch = vec![0u8; 64 * 1024];
     let mut progress = true;
-    let complete = |cb: Callback, res: Result<Vec<u8>, DqError>| {
-        let _ = done.send(Completion { cb, res });
+    let complete = |cb: PendingCb, res: Result<Vec<u8>, DqError>| {
+        let cb = cb.into_done();
+        let _ = done.send(Box::new(move || cb(res)));
     };
     loop {
         // Drain commands; park 1 ms only when the last scan was idle.
@@ -566,12 +887,17 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
         };
         if shared.stop.load(Ordering::Relaxed) {
             for (_, conn) in conns.drain() {
-                for (_, cb) in conn.pending {
-                    complete(cb, Err(DqError::Cancelled("mux is shut down".into())));
+                for (_, p) in conn.pending {
+                    complete(p.cb, Err(DqError::Cancelled("mux is shut down".into())));
+                }
+            }
+            for (_, r) in reviving.drain() {
+                for (_, p) in r.pending {
+                    complete(p.cb, Err(DqError::Cancelled("mux is shut down".into())));
                 }
             }
             for cmd in cmds {
-                if let Cmd::Request { done: cb, .. } = cmd {
+                if let Cmd::Request { cb, .. } = cmd {
                     complete(cb, Err(DqError::Cancelled("mux is shut down".into())));
                 }
             }
@@ -582,7 +908,7 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
         for cmd in cmds {
             progress = true;
             match cmd {
-                Cmd::Register { id, stream } => {
+                Cmd::Register { id, stream, token, addr } => {
                     conns.insert(
                         id,
                         Conn {
@@ -594,14 +920,34 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                             next_corr: 1,
                             last_rx: now,
                             last_ping: now,
+                            token,
+                            addr,
                         },
                     );
                 }
-                Cmd::Request { conn, op, payload, done: cb } => match conns.get_mut(&conn) {
-                    None => complete(
-                        cb,
-                        Err(DqError::WorkerLost(format!("mux connection {conn} is closed"))),
-                    ),
+                Cmd::Request { conn, op, payload, cb } => match conns.get_mut(&conn) {
+                    None => match reviving.get_mut(&conn) {
+                        // mid-revival: park the request; it re-sends on
+                        // the fresh socket (its corr is above the
+                        // watermark by construction)
+                        Some(r) if r.pending.len() >= cfg.max_inflight => complete(
+                            cb,
+                            Err(DqError::Io(format!(
+                                "mux backpressure: {} requests in flight on connection {conn}",
+                                r.pending.len()
+                            ))),
+                        ),
+                        Some(r) => {
+                            let corr = r.next_corr;
+                            r.next_corr += 1;
+                            let frame = encode_frame(KIND_REQ, corr, op, &payload);
+                            r.pending.insert(corr, Pending { frame, cb });
+                        }
+                        None => complete(
+                            cb,
+                            Err(DqError::WorkerLost(format!("mux connection {conn} is closed"))),
+                        ),
+                    },
                     Some(c) if c.pending.len() >= cfg.max_inflight => complete(
                         cb,
                         Err(DqError::Io(format!(
@@ -619,19 +965,91 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                     Some(c) => {
                         let corr = c.next_corr;
                         c.next_corr += 1;
-                        c.pending.insert(corr, cb);
-                        c.wbuf.extend_from_slice(&encode_frame(KIND_REQ, corr, op, &payload));
+                        let frame = encode_frame(KIND_REQ, corr, op, &payload);
+                        c.wbuf.extend_from_slice(&frame);
+                        // retain the frame only where a revival could
+                        // ever re-send it
+                        let retained = if c.resumable() { frame } else { Vec::new() };
+                        c.pending.insert(corr, Pending { frame: retained, cb });
                     }
                 },
+                Cmd::Revived { id, stream, token, resumed, last_req_corr } => {
+                    let Some(mut r) = reviving.remove(&id) else {
+                        continue; // already failed/stopped; drop the socket
+                    };
+                    let mut wbuf = Vec::new();
+                    let mut pending = std::mem::take(&mut r.pending);
+                    if resumed {
+                        // Re-send exactly the frames the server never
+                        // received, in correlation order; everything at
+                        // or below the watermark has a parked reply
+                        // coming.
+                        let mut corrs: Vec<u64> =
+                            pending.keys().copied().filter(|c| *c > last_req_corr).collect();
+                        corrs.sort_unstable();
+                        for corr in &corrs {
+                            wbuf.extend_from_slice(&pending[corr].frame);
+                        }
+                        crate::log_warn!(
+                            "mux",
+                            "connection {id} revived in place (resumed session, {} of {} pending re-sent)",
+                            corrs.len(),
+                            pending.len()
+                        );
+                    } else {
+                        // The server lost the session (restart, linger
+                        // expiry): in-flight effects are unknowable, so
+                        // fail them — but the connection itself
+                        // continues fresh under the same id.
+                        crate::log_warn!(
+                            "mux",
+                            "connection {id} reconnected but the session expired; failing {} pending",
+                            pending.len()
+                        );
+                        for (_, p) in pending.drain() {
+                            complete(
+                                p.cb,
+                                Err(DqError::WorkerLost(
+                                    "mux session expired across reconnect".into(),
+                                )),
+                            );
+                        }
+                    }
+                    conns.insert(
+                        id,
+                        Conn {
+                            stream,
+                            rbuf: Vec::new(),
+                            wbuf,
+                            woff: 0,
+                            pending,
+                            next_corr: r.next_corr,
+                            last_rx: now,
+                            last_ping: now,
+                            token: Some(token),
+                            addr: Some(r.addr),
+                        },
+                    );
+                }
+                Cmd::ReviveFailed { id, err } => {
+                    if let Some(r) = reviving.remove(&id) {
+                        shared.dead.lock().expect("mux dead set poisoned").insert(id);
+                        for (_, p) in r.pending {
+                            complete(p.cb, Err(err.clone()));
+                        }
+                    }
+                }
             }
         }
-        let mut doomed: Vec<(u64, DqError)> = Vec::new();
+        // (id, error, transport_fault): transport faults on resumable
+        // connections are revived in place; everything else is fatal.
+        let mut doomed: Vec<(u64, DqError, bool)> = Vec::new();
         for (&id, conn) in conns.iter_mut() {
             // 1. flush the write queue as far as the socket accepts
             while conn.woff < conn.wbuf.len() {
                 match conn.stream.write(&conn.wbuf[conn.woff..]) {
                     Ok(0) => {
-                        doomed.push((id, DqError::WorkerLost("mux write end closed".into())));
+                        doomed.push((id, DqError::WorkerLost("mux write end closed".into()), true));
                         break;
                     }
                     Ok(n) => {
@@ -641,7 +1059,11 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                     Err(e) => {
-                        doomed.push((id, DqError::WorkerLost(format!("mux write failed: {e}"))));
+                        doomed.push((
+                            id,
+                            DqError::WorkerLost(format!("mux write failed: {e}")),
+                            true,
+                        ));
                         break;
                     }
                 }
@@ -653,14 +1075,14 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                 conn.wbuf.drain(..conn.woff);
                 conn.woff = 0;
             }
-            if doomed.last().is_some_and(|(d, _)| *d == id) {
+            if doomed.last().is_some_and(|(d, _, _)| *d == id) {
                 continue;
             }
             // 2. read whatever is available
             loop {
                 match conn.stream.read(&mut scratch) {
                     Ok(0) => {
-                        doomed.push((id, DqError::WorkerLost("mux peer closed".into())));
+                        doomed.push((id, DqError::WorkerLost("mux peer closed".into()), true));
                         break;
                     }
                     Ok(n) => {
@@ -671,12 +1093,16 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                     Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                     Err(e) => {
-                        doomed.push((id, DqError::WorkerLost(format!("mux read failed: {e}"))));
+                        doomed.push((
+                            id,
+                            DqError::WorkerLost(format!("mux read failed: {e}")),
+                            true,
+                        ));
                         break;
                     }
                 }
             }
-            if doomed.last().is_some_and(|(d, _)| *d == id) {
+            if doomed.last().is_some_and(|(d, _, _)| *d == id) {
                 continue;
             }
             // 3. complete whole frames
@@ -685,14 +1111,26 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                     Ok(None) => break,
                     Ok(Some(f)) => match f.kind {
                         KIND_OK => {
-                            if let Some(cb) = conn.pending.remove(&f.corr) {
-                                complete(cb, Ok(f.payload));
+                            if let Some(p) = conn.pending.remove(&f.corr) {
+                                complete(p.cb, Ok(f.payload));
                             }
                         }
                         KIND_ERR => {
-                            if let Some(cb) = conn.pending.remove(&f.corr) {
+                            if let Some(p) = conn.pending.remove(&f.corr) {
                                 let e = bin::decode_error(&f.payload).unwrap_or_else(|e| e);
-                                complete(cb, Err(e));
+                                complete(p.cb, Err(e));
+                            }
+                        }
+                        KIND_PUSH => {
+                            // unsolicited event on an open stream; the
+                            // done channel serializes pushes with
+                            // completions, preserving arrival order
+                            if let Some(p) = conn.pending.get(&f.corr) {
+                                if let PendingCb::Stream { push, .. } = &p.cb {
+                                    let push = push.clone();
+                                    let payload = f.payload;
+                                    let _ = done.send(Box::new(move || push(payload)));
+                                }
                             }
                         }
                         KIND_PONG => {}
@@ -703,17 +1141,18 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                                     "mux: unexpected frame kind {} from responder",
                                     f.kind
                                 )),
+                                false,
                             ));
                             break;
                         }
                     },
                     Err(e) => {
-                        doomed.push((id, e));
+                        doomed.push((id, e, false));
                         break;
                     }
                 }
             }
-            if doomed.last().is_some_and(|(d, _)| *d == id) {
+            if doomed.last().is_some_and(|(d, _, _)| *d == id) {
                 continue;
             }
             // 4. liveness: ping quiet peers, doom silent ones
@@ -725,6 +1164,9 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                         "mux idle timeout: no traffic for {:.1}s",
                         quiet.as_secs_f64()
                     )),
+                    // the peer is reachable-but-silent: redialing it
+                    // would just recreate the hang, so stay fatal
+                    false,
                 ));
             } else if quiet >= cfg.ping_interval
                 && now.saturating_duration_since(conn.last_ping) >= cfg.ping_interval
@@ -733,12 +1175,31 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
                 conn.last_ping = now;
             }
         }
-        for (id, err) in doomed {
+        for (id, err, transport_fault) in doomed {
             if let Some(conn) = conns.remove(&id) {
-                crate::log_warn!("mux", "connection {id} torn down: {err}");
-                shared.dead.lock().expect("mux dead set poisoned").insert(id);
-                for (_, cb) in conn.pending {
-                    complete(cb, Err(err.clone()));
+                let revivable = transport_fault
+                    && conn.resumable()
+                    && cfg.revive_window > Duration::ZERO
+                    && !shared.stop.load(Ordering::Relaxed);
+                if revivable {
+                    let token = conn.token.unwrap();
+                    let addr = conn.addr.unwrap();
+                    crate::log_warn!(
+                        "mux",
+                        "connection {id} dropped ({err}); redialing in place ({} pending retained)",
+                        conn.pending.len()
+                    );
+                    reviving.insert(
+                        id,
+                        Reviving { pending: conn.pending, next_corr: conn.next_corr, addr },
+                    );
+                    spawn_redialer(shared.clone(), &cfg, id, addr, token, err);
+                } else {
+                    crate::log_warn!("mux", "connection {id} torn down: {err}");
+                    shared.dead.lock().expect("mux dead set poisoned").insert(id);
+                    for (_, p) in conn.pending {
+                        complete(p.cb, Err(err.clone()));
+                    }
                 }
             }
         }
@@ -749,14 +1210,27 @@ fn run_event_loop(shared: Arc<Shared>, cfg: MuxConfig, done: mpsc::Sender<Comple
 // the single-threaded server park (answering side at scale)
 // ---------------------------------------------------------------------------
 
-/// A binary-only server that serves *all* accepted connections from one
-/// readiness-scan thread — the answering-side twin of [`Mux`]. The
-/// 256-worker soak bench parks every worker connection here, which is
-/// what keeps the whole transport at 3 threads. Handlers run inline on
-/// the loop thread, so they must be fast (decode + compute + encode).
+/// How long a detached session (its connection dropped, nobody
+/// re-attached yet) is retained before being reaped.
+const SESSION_LINGER: Duration = Duration::from_secs(30);
+
+/// Cap on a detached session's parked bytes; past it the session is
+/// dropped (the client's re-attach starts fresh) rather than growing
+/// unboundedly while nobody drains it.
+const SESSION_BUF_CAP: usize = 32 << 20;
+
+/// A binary-only server that serves *all* accepted (or adopted)
+/// connections from one readiness-scan thread — the answering-side twin
+/// of [`Mux`]. The 256-client scale bench parks every connection here,
+/// which is what keeps the whole transport at 3 threads. Fast handlers
+/// run inline on the loop thread; blocking ops ([`MuxService::defer`])
+/// run on transient threads and reply through the session out-queue;
+/// streaming ops ([`MuxService::open_stream`]) push unsolicited frames
+/// the same way.
 pub struct MuxServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    adopt: Arc<Mutex<Vec<(TcpStream, Vec<u8>)>>>,
     thread: Option<JoinHandle<()>>,
 }
 
@@ -769,13 +1243,47 @@ impl MuxServer {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        Ok(Self::start(Some(listener), local, service))
+    }
+
+    /// A listener-less park: connections arrive only through
+    /// [`MuxServer::adopt`] (the dual-codec `RpcServer` sniffs the
+    /// magic on its own listener, then hands the socket over). This is
+    /// how *every* `serve_bin` endpoint — manager and worker alike —
+    /// now serves its binary clients from one transport thread.
+    pub fn adoptive(service: Arc<dyn MuxService>) -> MuxServer {
+        let placeholder: SocketAddr = ([0, 0, 0, 0], 0).into();
+        Self::start(None, placeholder, service)
+    }
+
+    fn start(
+        listener: Option<TcpListener>,
+        local: SocketAddr,
+        service: Arc<dyn MuxService>,
+    ) -> MuxServer {
         let stop = Arc::new(AtomicBool::new(false));
+        let adopt: Arc<Mutex<Vec<(TcpStream, Vec<u8>)>>> = Arc::new(Mutex::new(Vec::new()));
         let stop2 = stop.clone();
+        let adopt2 = adopt.clone();
         let thread = std::thread::Builder::new()
             .name("mux-server".into())
-            .spawn(move || run_server_loop(listener, service, stop2))
+            .spawn(move || run_server_loop(listener, service, stop2, adopt2))
             .expect("spawn mux-server");
-        Ok(MuxServer { addr: local, stop, thread: Some(thread) })
+        MuxServer { addr: local, stop, adopt, thread: Some(thread) }
+    }
+
+    /// Hand an accepted socket to the park. `consumed` is whatever the
+    /// caller already read while sniffing the codec (the 4 magic
+    /// bytes); it seeds the connection's receive buffer so the in-band
+    /// hello parses exactly as if the park had read it itself.
+    pub fn adopt(&self, stream: TcpStream, consumed: &[u8]) {
+        let _ = stream.set_nonblocking(true);
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(None);
+        self.adopt
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push((stream, consumed.to_vec()));
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -797,6 +1305,19 @@ impl Drop for MuxServer {
     }
 }
 
+/// Server-side resumable session state, owned by the park loop.
+struct Session {
+    out: Arc<OutQueue>,
+    /// Highest request correlation id ever received (the watermark the
+    /// attach reply reports; requests at or below it are duplicates).
+    last_req_corr: u64,
+    /// Bumped on every attach; only the connection holding the current
+    /// epoch may drain `out` (a half-open predecessor is killed).
+    epoch: u64,
+    attached: bool,
+    detached_at: Option<Instant>,
+}
+
 struct ServerConn {
     stream: TcpStream,
     rbuf: Vec<u8>,
@@ -804,54 +1325,165 @@ struct ServerConn {
     woff: usize,
     greeted: bool,
     alive: bool,
+    /// Reply/push queue; replaced by the session's queue on attach.
+    out: Arc<OutQueue>,
+    /// Attached session token + the epoch this connection holds it at.
+    token: Option<u64>,
+    epoch: u64,
+    /// Superseded by a newer attach: die without detaching the session.
+    stale: bool,
 }
 
-fn run_server_loop(listener: TcpListener, service: Arc<dyn MuxService>, stop: Arc<AtomicBool>) {
+impl ServerConn {
+    fn new(stream: TcpStream, seed: Vec<u8>) -> ServerConn {
+        ServerConn {
+            stream,
+            rbuf: seed,
+            wbuf: Vec::new(),
+            woff: 0,
+            greeted: false,
+            alive: true,
+            out: OutQueue::new(),
+            token: None,
+            epoch: 0,
+            stale: false,
+        }
+    }
+}
+
+fn run_server_loop(
+    listener: Option<TcpListener>,
+    service: Arc<dyn MuxService>,
+    stop: Arc<AtomicBool>,
+    adopt: Arc<Mutex<Vec<(TcpStream, Vec<u8>)>>>,
+) {
     let _gauge = TransportGuard::enter();
     let mut conns: Vec<ServerConn> = Vec::new();
+    let mut sessions: HashMap<u64, Session> = HashMap::new();
+    let mut next_token: u64 = 1;
     let mut scratch = vec![0u8; 64 * 1024];
-    let mut accepting = true;
+    let mut accepting = listener.is_some();
     while !stop.load(Ordering::Relaxed) {
         let mut progress = false;
-        while accepting {
-            match listener.accept() {
-                Ok((stream, _peer)) => {
-                    let _ = stream.set_nonblocking(true);
-                    let _ = stream.set_nodelay(true);
-                    conns.push(ServerConn {
-                        stream,
-                        rbuf: Vec::new(),
-                        wbuf: Vec::new(),
-                        woff: 0,
-                        greeted: false,
-                        alive: true,
-                    });
-                    progress = true;
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-                Err(e) => {
-                    // Fatal listener error: stop accepting, keep serving
-                    // the connections that already exist.
-                    crate::log_warn!("mux", "mux-server accept failed fatally: {e}");
-                    accepting = false;
+        if let Some(listener) = &listener {
+            while accepting {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let _ = stream.set_nonblocking(true);
+                        let _ = stream.set_nodelay(true);
+                        conns.push(ServerConn::new(stream, Vec::new()));
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        // Fatal listener error: stop accepting, keep serving
+                        // the connections that already exist.
+                        crate::log_warn!("mux", "mux-server accept failed fatally: {e}");
+                        accepting = false;
+                    }
                 }
             }
         }
+        {
+            let mut q = adopt.lock().unwrap_or_else(|e| e.into_inner());
+            for (stream, seed) in q.drain(..) {
+                conns.push(ServerConn::new(stream, seed));
+                progress = true;
+            }
+        }
         for conn in conns.iter_mut() {
-            progress |= serve_one(conn, &service, &mut scratch);
+            // a newer attach stole this connection's session: kill the
+            // half-open predecessor without touching the session
+            if let Some(tok) = conn.token {
+                let current = sessions.get(&tok).map(|s| s.epoch);
+                if current != Some(conn.epoch) {
+                    conn.alive = false;
+                    conn.stale = true;
+                }
+            }
+            if conn.alive {
+                progress |=
+                    serve_park_conn(conn, &service, &mut scratch, &mut sessions, &mut next_token);
+            }
+        }
+        for conn in conns.iter() {
+            if !conn.alive && !conn.stale {
+                if let Some(tok) = conn.token {
+                    if let Some(s) = sessions.get_mut(&tok) {
+                        if s.epoch == conn.epoch && s.attached {
+                            s.attached = false;
+                            s.detached_at = Some(Instant::now());
+                        }
+                    }
+                }
+            }
         }
         conns.retain(|c| c.alive);
+        sessions.retain(|_, s| {
+            s.attached
+                || (s.detached_at.is_some_and(|t| t.elapsed() < SESSION_LINGER)
+                    && s.out.len() <= SESSION_BUF_CAP)
+        });
         if !progress {
             std::thread::sleep(Duration::from_micros(500));
         }
     }
 }
 
+/// Handle one attach request on a park connection.
+fn park_attach(
+    conn: &mut ServerConn,
+    payload: &[u8],
+    sessions: &mut HashMap<u64, Session>,
+    next_token: &mut u64,
+) -> Result<Vec<u8>, DqError> {
+    if conn.token.is_some() {
+        return Err(DqError::Protocol("mux: connection is already attached".into()));
+    }
+    let want = bin::decode_attach_request(payload)?;
+    if want != 0 {
+        if let Some(s) = sessions.get_mut(&want) {
+            s.epoch += 1;
+            s.attached = true;
+            s.detached_at = None;
+            conn.token = Some(want);
+            conn.epoch = s.epoch;
+            conn.out = s.out.clone();
+            return Ok(bin::encode_attach_ok(want, true, s.last_req_corr));
+        }
+        // unknown/expired token: fall through to a fresh session — the
+        // dialer fails its old pendings and carries on
+    }
+    let token = *next_token;
+    *next_token += 1;
+    sessions.insert(
+        token,
+        Session {
+            out: conn.out.clone(),
+            last_req_corr: 0,
+            epoch: 1,
+            attached: true,
+            detached_at: None,
+        },
+    );
+    conn.token = Some(token);
+    conn.epoch = 1;
+    Ok(bin::encode_attach_ok(token, false, 0))
+}
+
 /// One readiness pass over one server-side connection; returns whether
 /// any bytes moved.
-fn serve_one(conn: &mut ServerConn, service: &Arc<dyn MuxService>, scratch: &mut [u8]) -> bool {
+fn serve_park_conn(
+    conn: &mut ServerConn,
+    service: &Arc<dyn MuxService>,
+    scratch: &mut [u8],
+    sessions: &mut HashMap<u64, Session>,
+    next_token: &mut u64,
+) -> bool {
     let mut progress = false;
+    // stage queued replies/pushes (session or connection queue)
+    progress |= conn.out.drain_into(&mut conn.wbuf);
     // flush pending responses
     while conn.woff < conn.wbuf.len() {
         match conn.stream.write(&conn.wbuf[conn.woff..]) {
@@ -913,18 +1545,36 @@ fn serve_one(conn: &mut ServerConn, service: &Arc<dyn MuxService>, scratch: &mut
             Ok(None) => break,
             Ok(Some(f)) => {
                 progress = true;
-                let out = match f.kind {
-                    KIND_PING => encode_frame(KIND_PONG, f.corr, 0, &[]),
-                    KIND_REQ => match service.handle(f.op, &f.payload) {
-                        Ok(p) => encode_frame(KIND_OK, f.corr, 0, &p),
-                        Err(e) => encode_frame(KIND_ERR, f.corr, 0, &bin::encode_error(&e)),
-                    },
+                match f.kind {
+                    KIND_PING => {
+                        conn.wbuf.extend_from_slice(&encode_frame(KIND_PONG, f.corr, 0, &[]));
+                    }
+                    KIND_REQ if f.op == bin::OP_ATTACH => {
+                        // the attach reply goes straight to the write
+                        // buffer so it precedes any parked bytes the
+                        // resumed session drains on the next pass
+                        let reply = park_attach(conn, &f.payload, sessions, next_token);
+                        conn.wbuf.extend_from_slice(&reply_frame(f.corr, reply));
+                    }
+                    KIND_REQ => {
+                        // session watermark: skip requests the session
+                        // already received (a re-sent duplicate after
+                        // reconnect) — exactly-once dispatch
+                        if let Some(tok) = conn.token {
+                            if let Some(s) = sessions.get_mut(&tok) {
+                                if f.corr <= s.last_req_corr {
+                                    continue;
+                                }
+                                s.last_req_corr = f.corr;
+                            }
+                        }
+                        dispatch_park_req(conn, service, f);
+                    }
                     _ => {
                         conn.alive = false;
                         return progress;
                     }
-                };
-                conn.wbuf.extend_from_slice(&out);
+                }
             }
             Err(_) => {
                 conn.alive = false;
@@ -932,7 +1582,43 @@ fn serve_one(conn: &mut ServerConn, service: &Arc<dyn MuxService>, scratch: &mut
             }
         }
     }
+    // anything a handler queued this pass goes out without waiting for
+    // the next loop iteration
+    progress |= conn.out.drain_into(&mut conn.wbuf);
     progress
+}
+
+/// Route one non-attach request: streaming ops keep their correlation
+/// id open, deferred ops run on a transient thread, everything else
+/// dispatches inline. All replies ride the out-queue so they interleave
+/// with pushes in production order (and park across a reconnect).
+fn dispatch_park_req(conn: &mut ServerConn, service: &Arc<dyn MuxService>, f: Frame) {
+    let pusher = Pusher { out: conn.out.clone(), corr: f.corr };
+    match service.open_stream(f.op, &f.payload, pusher) {
+        Some(Ok(())) => {} // stream open; the service finishes it later
+        Some(Err(e)) => {
+            conn.out.append(&reply_frame(f.corr, Err(e)));
+        }
+        None if service.defer(f.op) => {
+            let svc = service.clone();
+            let out = conn.out.clone();
+            let (op, corr, payload) = (f.op, f.corr, f.payload);
+            let spawned = std::thread::Builder::new().name("mux-defer".into()).spawn(move || {
+                let res = svc.handle(op, &payload);
+                out.append(&reply_frame(corr, res));
+            });
+            if spawned.is_err() {
+                conn.out.append(&reply_frame(
+                    f.corr,
+                    Err(DqError::Io("mux: failed to spawn deferred handler".into())),
+                ));
+            }
+        }
+        None => {
+            let res = service.handle(f.op, &f.payload);
+            conn.out.append(&reply_frame(f.corr, res));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -955,6 +1641,16 @@ mod tests {
         let f = take_frame(&mut buf).unwrap().unwrap();
         assert_eq!(f, Frame { kind: KIND_REQ, corr: 42, op: 7, payload: b"hello".to_vec() });
         assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn push_frames_parse() {
+        let mut buf = encode_frame(KIND_PUSH, 9, 0, b"event");
+        let f = take_frame(&mut buf).unwrap().unwrap();
+        assert_eq!(f, Frame { kind: KIND_PUSH, corr: 9, op: 0, payload: b"event".to_vec() });
+        // kinds past PUSH stay connection-fatal
+        let mut bad = encode_frame(KIND_PUSH + 1, 1, 0, &[]);
+        assert!(take_frame(&mut bad).is_err());
     }
 
     #[test]
@@ -988,6 +1684,7 @@ mod tests {
         let mux = Mux::new(MuxConfig::default());
         let conn = mux.connect(server.local_addr()).unwrap();
         assert_eq!(conn.negotiated.version, bin::BIN_VERSION);
+        assert_eq!(conn.negotiated.features, bin::FEAT_ALL);
         let out = mux.call(conn.id, 7, b"ping pong".to_vec()).unwrap();
         assert_eq!(out, b"ping pong");
         assert!(matches!(mux.call(conn.id, 8, vec![]), Err(DqError::Cancelled(_))));
@@ -998,5 +1695,127 @@ mod tests {
         let mux = Mux::new(MuxConfig::default());
         mux.shutdown();
         assert!(matches!(mux.call(1, 7, vec![]), Err(DqError::Cancelled(_))));
+    }
+
+    /// A service where op 21 opens a stream that pushes the payload
+    /// twice and finishes OK, and op 22 is deferred.
+    struct StreamingEcho;
+
+    impl MuxService for StreamingEcho {
+        fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError> {
+            match op {
+                7 | 22 => Ok(payload.to_vec()),
+                _ => Err(DqError::Protocol(format!("unknown op {op}"))),
+            }
+        }
+
+        fn defer(&self, op: u32) -> bool {
+            op == 22
+        }
+
+        fn open_stream(
+            &self,
+            op: u32,
+            payload: &[u8],
+            pusher: Pusher,
+        ) -> Option<Result<(), DqError>> {
+            if op != 21 {
+                return None;
+            }
+            if payload.is_empty() {
+                return Some(Err(DqError::Protocol("empty stream payload".into())));
+            }
+            pusher.push(payload);
+            pusher.push(payload);
+            pusher.finish(Ok(b"fin".to_vec()));
+            Some(Ok(()))
+        }
+    }
+
+    #[test]
+    fn streams_push_in_order_then_finish() {
+        let server = MuxServer::serve("127.0.0.1:0", Arc::new(StreamingEcho)).unwrap();
+        let mux = Mux::new(MuxConfig::default());
+        let conn = mux.connect(server.local_addr()).unwrap();
+
+        let events = Arc::new(Mutex::new(Vec::<Vec<u8>>::new()));
+        let (tx, rx) = mpsc::channel();
+        let ev2 = events.clone();
+        mux.request_stream(
+            conn.id,
+            21,
+            b"ev".to_vec(),
+            Arc::new(move |p| ev2.lock().unwrap().push(p)),
+            Box::new(move |res| {
+                let _ = tx.send(res);
+            }),
+        );
+        let fin = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert_eq!(fin, b"fin");
+        assert_eq!(*events.lock().unwrap(), vec![b"ev".to_vec(), b"ev".to_vec()]);
+
+        // a rejected stream comes back as a typed error
+        let (tx, rx) = mpsc::channel();
+        mux.request_stream(
+            conn.id,
+            21,
+            Vec::new(),
+            Arc::new(|_| {}),
+            Box::new(move |res| {
+                let _ = tx.send(res);
+            }),
+        );
+        let err = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap_err();
+        assert!(matches!(err, DqError::Protocol(_)), "{err}");
+
+        // deferred ops still answer on the same connection
+        assert_eq!(mux.call(conn.id, 22, b"slowpoke".to_vec()).unwrap(), b"slowpoke");
+        // and plain inline ops interleave fine
+        assert_eq!(mux.call(conn.id, 7, b"quick".to_vec()).unwrap(), b"quick");
+    }
+
+    #[test]
+    fn dead_set_is_bounded_under_connection_churn() {
+        let mux = Mux::new(MuxConfig {
+            // no revival: every teardown goes straight to the dead set
+            revive_window: Duration::ZERO,
+            max_dead: 4,
+            ..MuxConfig::default()
+        });
+        let mut ids = Vec::new();
+        for _ in 0..10 {
+            let server = MuxServer::serve("127.0.0.1:0", echo_service()).unwrap();
+            let conn = mux.connect(server.local_addr()).unwrap();
+            ids.push(conn.id);
+            drop(server); // peer closes; the loop reads EOF and tears down
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while !mux.is_dead(conn.id) && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert!(mux.is_dead(conn.id), "teardown not observed");
+        }
+        assert!(
+            mux.dead_len() <= 4,
+            "dead set must stay bounded under churn, got {}",
+            mux.dead_len()
+        );
+        // the newest corpses are still queryable; the oldest were pruned
+        assert!(mux.is_dead(*ids.last().unwrap()));
+        assert!(!mux.is_dead(ids[0]));
+        mux.shutdown();
+    }
+
+    #[test]
+    fn dead_set_prunes_oldest_first() {
+        let mut d = DeadSet::new(3);
+        for id in 1..=5 {
+            d.insert(id);
+        }
+        assert_eq!(d.len(), 3);
+        assert!(!d.contains(1) && !d.contains(2));
+        assert!(d.contains(3) && d.contains(4) && d.contains(5));
+        d.insert(5); // duplicate insert must not evict anything
+        assert_eq!(d.len(), 3);
+        assert!(d.contains(3));
     }
 }

@@ -20,11 +20,15 @@
 //! one process without sockets — tests and `--in-proc` mode use it.
 //!
 //! **Dual codec.** [`RpcServer::serve_bin`] sniffs the first four bytes
-//! of each accepted connection: the mux magic routes the session to the
-//! binary plane (`net/mux`), anything else is the opening big-endian
-//! frame length of a JSON session — the two are unambiguous because the
-//! magic decodes as a length far above [`MAX_FRAME`]. JSON stays the
-//! debug/fallback path; old peers never see a byte they can't parse.
+//! of each accepted connection: the mux magic hands the socket to a
+//! lazily-created [`mux::MuxServer`] *accept park* — one readiness-scan
+//! thread serving every binary client, shared across all of this
+//! server's connections — while anything else is the opening big-endian
+//! frame length of a JSON session and stays on the thread-per-connection
+//! loop below. The two are unambiguous because the magic decodes as a
+//! length far above [`MAX_FRAME`]. JSON stays the debug/fallback path;
+//! old peers never see a byte they can't parse — and binary clients now
+//! cost zero threads each (DESIGN.md §19).
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -60,11 +64,15 @@ where
     }
 }
 
-/// Thread-per-connection TCP RPC server.
+/// Thread-per-connection TCP RPC server (JSON sessions); binary
+/// sessions are adopted into a shared single-threaded mux park.
 pub struct RpcServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// Lazily-created binary accept park — no transport thread is spent
+    /// until the first `DQMX` client actually shows up.
+    park: Arc<Mutex<Option<mux::MuxServer>>>,
 }
 
 impl RpcServer {
@@ -95,6 +103,8 @@ impl RpcServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let park: Arc<Mutex<Option<mux::MuxServer>>> = Arc::new(Mutex::new(None));
+        let park2 = park.clone();
         let accept_thread = std::thread::Builder::new()
             .name("rpc-accept".into())
             .spawn(move || {
@@ -104,9 +114,10 @@ impl RpcServer {
                             let h = handler.clone();
                             let stop3 = stop2.clone();
                             let svc = service.clone();
+                            let prk = park2.clone();
                             let _ = std::thread::Builder::new()
                                 .name("rpc-conn".into())
-                                .spawn(move || serve_connection(stream, h, stop3, svc));
+                                .spawn(move || serve_connection(stream, h, stop3, svc, prk));
                         }
                         Err(e) if is_transient_accept(&e) => {
                             std::thread::sleep(Duration::from_millis(5));
@@ -121,19 +132,22 @@ impl RpcServer {
                 }
             })
             .expect("spawn rpc-accept");
-        Ok(RpcServer { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(RpcServer { addr: local, stop, accept_thread: Some(accept_thread), park })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.addr
     }
 
-    /// Signal shutdown and join the accept loop.
+    /// Signal shutdown and join the accept loop (and the binary accept
+    /// park, if any `DQMX` client ever caused one to exist).
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        let park = self.park.lock().unwrap_or_else(|e| e.into_inner()).take();
+        drop(park); // MuxServer::drop joins its serve loop
     }
 }
 
@@ -160,27 +174,36 @@ fn serve_connection(
     handler: Arc<dyn RpcHandler>,
     stop: Arc<AtomicBool>,
     service: Option<Arc<dyn MuxService>>,
+    park: Arc<Mutex<Option<mux::MuxServer>>>,
 ) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
-    let mut writer = BufWriter::new(stream);
-    // Codec sniff: the first 4 bytes are either the mux magic or the
-    // opening big-endian JSON frame length (the magic is unambiguous —
-    // as a length it would exceed MAX_FRAME).
+    // Codec sniff — straight off the stream, *before* any buffering, so
+    // an adopted socket carries no bytes hidden in a BufReader. The
+    // first 4 bytes are either the mux magic or the opening big-endian
+    // JSON frame length (the magic is unambiguous — as a length it
+    // would exceed MAX_FRAME).
     let mut first = [0u8; 4];
-    match poll_read_exact(&mut reader, &mut first, &stop) {
+    match poll_read_exact(&mut (&stream), &mut first, &stop) {
         Ok(PollRead::Done) => {}
         _ => return,
     }
     if first == mux::MAGIC {
         if let Some(svc) = service {
-            mux::serve_bin_connection(reader, writer, svc, stop);
+            // Hand the socket to the shared binary park (created on the
+            // first binary client) and let this thread exit: binary
+            // sessions cost zero threads each.
+            park.lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .get_or_insert_with(|| mux::MuxServer::adoptive(svc))
+                .adopt(stream, &first);
         }
         // No binary service configured: close; the dialer falls back to
         // JSON exactly as it would against a legacy server.
         return;
     }
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = BufWriter::new(stream);
     // JSON session; `first` is already the first frame's length prefix.
     // Frames are read with poll_read_exact so a 200 ms read-timeout poll
     // mid-frame never discards partial data (`read_exact` leaves the
@@ -374,6 +397,9 @@ pub enum Plane {
     Bin {
         mux: Arc<mux::Mux>,
         conn: u64,
+        /// Negotiated feature bits (`wire::bin::FEAT_*`) — callers gate
+        /// push subscriptions on `FEAT_PUSH` here.
+        features: u8,
     },
     /// Framed-JSON session (legacy peer, or the mux dial failed).
     Json(Arc<RpcClient>),
@@ -398,7 +424,11 @@ pub fn dial_plane<A: ToSocketAddrs + Clone>(
     json_timeout: Duration,
 ) -> Result<Plane, DqError> {
     match mux.connect(addr.clone()) {
-        Ok(conn) => Ok(Plane::Bin { mux: mux.clone(), conn: conn.id }),
+        Ok(conn) => Ok(Plane::Bin {
+            mux: mux.clone(),
+            conn: conn.id,
+            features: conn.negotiated.features,
+        }),
         Err(e) => {
             crate::log_warn!("rpc", "binary dial failed ({e}); falling back to JSON");
             let rpc = RpcClient::connect(addr, json_timeout)?;
@@ -553,7 +583,8 @@ mod tests {
         let plane = dial_plane(&m, server.local_addr(), Duration::from_secs(2)).unwrap();
         assert!(plane.is_binary());
         match plane {
-            Plane::Bin { mux, conn } => {
+            Plane::Bin { mux, conn, features } => {
+                assert_eq!(features, crate::wire::bin::FEAT_ALL);
                 assert_eq!(mux.call(conn, 1, b"xy".to_vec()).unwrap(), b"xy");
             }
             Plane::Json(_) => unreachable!(),

@@ -28,6 +28,7 @@ use std::collections::BTreeMap;
 
 use crate::circuit::QuClassiConfig;
 use crate::cluster::proto::{SubmitRequest, SubmitResponse};
+use crate::coordinator::bankstore::BankEvent;
 use crate::coordinator::{BankStatus, CircuitJob, ManagerStats, TenantStats};
 use crate::error::DqError;
 use crate::util::stats::{WaitHistogram, WAIT_HIST_BUCKETS};
@@ -40,6 +41,21 @@ pub const BIN_VERSION: u8 = 1;
 /// Feature bit: the peer accepts binary-encoded `execute` payloads
 /// ([`encode_jobs`] / [`encode_fids`]).
 pub const FEAT_BIN_EXECUTE: u8 = 0x01;
+
+/// Feature bit: the peer understands unsolicited `KIND_PUSH` frames —
+/// the server may stream [`encode_bank_event`] payloads on a
+/// correlation id opened with `subscribe_bank`.
+pub const FEAT_PUSH: u8 = 0x02;
+
+/// Feature bit: the peer supports resumable sessions. A dialer that
+/// negotiated this sends `attach` (correlation id 0) as its first
+/// request; after a transport drop it re-dials and re-attaches with
+/// the same token, resuming the server-side session in place.
+pub const FEAT_RESUME: u8 = 0x04;
+
+/// Every feature bit this build implements (the hello's advertisement;
+/// [`negotiate`](crate::net::mux) intersects it with the peer's).
+pub const FEAT_ALL: u8 = FEAT_BIN_EXECUTE | FEAT_PUSH | FEAT_RESUME;
 
 /// Interned op-name table: the string ops of the JSON envelope, as mux
 /// frame op ids. Ids are append-only wire contract — never renumber.
@@ -54,6 +70,8 @@ const OP_TABLE: &[(u32, &str)] = &[
     (8, "bank_status"),
     (9, "cancel_bank"),
     (10, "stats"),
+    (11, "attach"),
+    (12, "subscribe_bank"),
 ];
 
 /// The interned id for `execute` (manager→worker batch dispatch).
@@ -75,6 +93,14 @@ pub const OP_BANK_STATUS: u32 = 8;
 pub const OP_CANCEL_BANK: u32 = 9;
 /// Interned id for `stats` (empty payload → [`encode_pool_stats`]).
 pub const OP_STATS: u32 = 10;
+/// Interned id for `attach` ([`encode_attach_request`] →
+/// [`encode_attach_ok`]; always correlation id 0, always the first
+/// request on a [`FEAT_RESUME`] connection).
+pub const OP_ATTACH: u32 = 11;
+/// Interned id for `subscribe_bank` ([`encode_u64`] bank id; the reply
+/// is a *stream* of `KIND_PUSH` [`encode_bank_event`] frames on the
+/// request's correlation id, closed by a final OK/ERR).
+pub const OP_SUBSCRIBE_BANK: u32 = 12;
 
 /// Interned id for an op name, if the table knows it.
 pub fn op_id(name: &str) -> Option<u32> {
@@ -604,6 +630,84 @@ pub fn decode_wait_request(bytes: &[u8]) -> Result<(u64, Option<u64>), DqError> 
     Ok((bank, timeout_ms))
 }
 
+/// Encode an `attach` request: the session token granted by a previous
+/// attachment, or 0 to open a fresh session.
+pub fn encode_attach_request(token: u64) -> Vec<u8> {
+    encode_u64(token)
+}
+
+/// Decode an `attach` request token.
+pub fn decode_attach_request(bytes: &[u8]) -> Result<u64, DqError> {
+    decode_u64(bytes)
+}
+
+/// Encode an `attach` reply: `(token, resumed, last_req_corr)`. When
+/// `resumed` the server has the session and `last_req_corr` is the
+/// highest request correlation id it received before the drop — the
+/// dialer re-sends only retained frames *above* it (TCP delivered
+/// requests in corr order, so the watermark is a complete receipt
+/// record) and keeps waiting on the rest (their replies were parked).
+pub fn encode_attach_ok(token: u64, resumed: bool, last_req_corr: u64) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(22);
+    put_varint(&mut buf, token);
+    put_bool(&mut buf, resumed);
+    put_varint(&mut buf, last_req_corr);
+    buf
+}
+
+/// Decode an `attach` reply: `(token, resumed, last_req_corr)`.
+pub fn decode_attach_ok(bytes: &[u8]) -> Result<(u64, bool, u64), DqError> {
+    let mut c = Cur::new(bytes);
+    let token = c.take_varint()?;
+    let resumed = c.take_bool()?;
+    let last_req_corr = c.take_varint()?;
+    c.done()?;
+    Ok((token, resumed, last_req_corr))
+}
+
+/// Encode a [`BankEvent`] push payload (`subscribe_bank` stream):
+/// `tag, fields…` — `0` Fid, `1` Done, `2` Failed(error), `3` Cancelled.
+pub fn encode_bank_event(ev: &BankEvent) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16);
+    match ev {
+        BankEvent::Fid { index, fid, remaining } => {
+            buf.push(0);
+            put_varint(&mut buf, *index as u64);
+            put_f32(&mut buf, *fid);
+            put_varint(&mut buf, *remaining as u64);
+        }
+        BankEvent::Done => buf.push(1),
+        BankEvent::Failed(e) => {
+            buf.push(2);
+            buf.extend_from_slice(&encode_error(e));
+        }
+        BankEvent::Cancelled => buf.push(3),
+    }
+    buf
+}
+
+/// Decode a [`BankEvent`] push payload.
+pub fn decode_bank_event(bytes: &[u8]) -> Result<BankEvent, DqError> {
+    let mut c = Cur::new(bytes);
+    let tag = c.take(1)?[0];
+    let ev = match tag {
+        0 => BankEvent::Fid {
+            index: c.take_len()?,
+            fid: c.take_f32()?,
+            remaining: c.take_len()?,
+        },
+        1 => BankEvent::Done,
+        2 => {
+            let n = c.remaining();
+            return Ok(BankEvent::Failed(decode_error(c.take(n)?)?));
+        }
+        3 => BankEvent::Cancelled,
+        t => return Err(proto(format!("bin: unknown bank-event tag {t:#04x}"))),
+    };
+    c.done()?;
+    Ok(ev)
+}
+
 /// Encode a [`DqError`] as `kind-tag, msg` (binary peer of
 /// [`DqError::to_wire`]'s `{"kind","msg"}` object).
 pub fn encode_error(e: &DqError) -> Vec<u8> {
@@ -664,6 +768,38 @@ mod tests {
         // 10 bytes whose top bits exceed 64: overflow.
         let buf = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x7f];
         assert!(Cur::new(&buf).take_varint().is_err());
+    }
+
+    #[test]
+    fn attach_codecs_round_trip() {
+        assert_eq!(decode_attach_request(&encode_attach_request(0)).unwrap(), 0);
+        assert_eq!(decode_attach_request(&encode_attach_request(981)).unwrap(), 981);
+        for (token, resumed, corr) in [(7u64, true, 41u64), (1, false, 0), (u64::MAX, true, 1 << 40)] {
+            let wire = encode_attach_ok(token, resumed, corr);
+            assert_eq!(decode_attach_ok(&wire).unwrap(), (token, resumed, corr));
+        }
+        assert!(decode_attach_ok(&[0]).is_err());
+    }
+
+    #[test]
+    fn bank_event_codecs_round_trip() {
+        let events = [
+            BankEvent::Fid { index: 0, fid: 0.5, remaining: 7 },
+            BankEvent::Fid { index: 300, fid: -1.0, remaining: 0 },
+            BankEvent::Done,
+            BankEvent::Failed(DqError::WorkerLost("w3 gone".into())),
+            BankEvent::Cancelled,
+        ];
+        for ev in &events {
+            let wire = encode_bank_event(ev);
+            let back = decode_bank_event(&wire).unwrap();
+            assert_eq!(format!("{back:?}"), format!("{ev:?}"));
+        }
+        // unknown tag and trailing garbage are both rejected
+        assert!(decode_bank_event(&[9]).is_err());
+        let mut wire = encode_bank_event(&BankEvent::Done);
+        wire.push(0);
+        assert!(decode_bank_event(&wire).is_err());
     }
 
     #[test]

@@ -49,6 +49,44 @@ impl Default for WorkerOptions {
     }
 }
 
+/// The worker's binary-plane request handler (mux park service).
+struct WorkerBinService {
+    backend: Arc<WorkerBackend>,
+    active: Arc<AtomicUsize>,
+}
+
+impl MuxService for WorkerBinService {
+    fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError> {
+        if op != bin::OP_EXECUTE {
+            return Err(DqError::Protocol(format!("worker: unknown bin op {op}")));
+        }
+        let jobs = bin::decode_jobs(payload)?;
+        let mut config: Option<QuClassiConfig> = None;
+        let mut pairs = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            if let Some(c) = config {
+                if c != job.config {
+                    return Err(DqError::Protocol("mixed configs in one execute".to_string()));
+                }
+            }
+            config = Some(job.config);
+            pairs.push((job.thetas, job.data));
+        }
+        let config = config.ok_or_else(|| DqError::Protocol("empty execute".to_string()))?;
+        self.active.fetch_add(pairs.len(), Ordering::Relaxed);
+        let result = self.backend.execute(&config, &pairs);
+        self.active.fetch_sub(pairs.len(), Ordering::Relaxed);
+        Ok(bin::encode_fids(&result?))
+    }
+
+    /// Simulations block for arbitrarily long: run them off the park's
+    /// transport thread so other connections (and re-adoptions after a
+    /// socket flap) stay live mid-execute.
+    fn defer(&self, op: u32) -> bool {
+        op == bin::OP_EXECUTE
+    }
+}
+
 /// Handle to a running worker (drop/stop to shut down).
 pub struct WorkerHandle {
     pub worker_id: u64,
@@ -104,35 +142,14 @@ impl WorkerHandle {
         // Binary-plane service for the same endpoint: a manager that
         // negotiates the mux handshake dispatches `execute` through
         // wire/bin; a JSON manager is served by `handler` above. Same
-        // validation rules on both planes.
-        let backend_bin = backend.clone();
-        let active_bin = active.clone();
-        let bin_service: Arc<dyn MuxService> =
-            Arc::new(move |op: u32, payload: &[u8]| -> Result<Vec<u8>, DqError> {
-                if op != bin::OP_EXECUTE {
-                    return Err(DqError::Protocol(format!("worker: unknown bin op {op}")));
-                }
-                let jobs = bin::decode_jobs(payload)?;
-                let mut config: Option<QuClassiConfig> = None;
-                let mut pairs = Vec::with_capacity(jobs.len());
-                for job in jobs {
-                    if let Some(c) = config {
-                        if c != job.config {
-                            return Err(DqError::Protocol(
-                                "mixed configs in one execute".to_string(),
-                            ));
-                        }
-                    }
-                    config = Some(job.config);
-                    pairs.push((job.thetas, job.data));
-                }
-                let config =
-                    config.ok_or_else(|| DqError::Protocol("empty execute".to_string()))?;
-                active_bin.fetch_add(pairs.len(), Ordering::Relaxed);
-                let result = backend_bin.execute(&config, &pairs);
-                active_bin.fetch_sub(pairs.len(), Ordering::Relaxed);
-                Ok(bin::encode_fids(&result?))
-            });
+        // validation rules on both planes. `execute` is deferred so a
+        // long simulation never stalls the park's transport thread —
+        // and its reply rides the session out-queue, which parks across
+        // a connection flap and replays after the in-place reconnect.
+        let bin_service: Arc<dyn MuxService> = Arc::new(WorkerBinService {
+            backend: backend.clone(),
+            active: active.clone(),
+        });
         let server = RpcServer::serve_bin(opts.listen.as_str(), Arc::new(handler), bin_service)
             .map_err(|e| DqError::Io(format!("worker listen: {e}")))?;
         let listen_addr = server.local_addr();

@@ -4,8 +4,10 @@
 //! both directions (old JSON worker × new manager, old JSON manager ×
 //! new worker).
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -15,7 +17,7 @@ use dqulearn::cluster::{serve_manager, MuxWorkerChannel, RemoteClient};
 use dqulearn::coordinator::{Manager, ManagerConfig, WorkerChannel};
 use dqulearn::model::exec::{CircuitExecutor, CircuitPair, QsimExecutor};
 use dqulearn::net::mux::transport_thread_count;
-use dqulearn::net::{Mux, MuxConfig, MuxServer, RpcClient, RpcServer};
+use dqulearn::net::{Mux, MuxConfig, MuxServer, MuxService, RpcClient, RpcServer};
 use dqulearn::wire::{bin, Value};
 use dqulearn::worker::{WorkerHandle, WorkerOptions};
 use dqulearn::DqError;
@@ -109,7 +111,7 @@ fn hundreds_of_inflight_requests_share_three_transport_threads() {
         .map(|_| {
             let conn = mux.connect(server.local_addr()).unwrap();
             assert_eq!(conn.negotiated.version, bin::BIN_VERSION);
-            assert_eq!(conn.negotiated.features, bin::FEAT_BIN_EXECUTE);
+            assert_eq!(conn.negotiated.features, bin::FEAT_ALL);
             conn.id
         })
         .collect();
@@ -352,4 +354,339 @@ fn old_json_manager_interops_with_a_new_worker() {
     assert_eq!(conn.negotiated.version, bin::BIN_VERSION);
     mux.shutdown();
     worker.stop();
+}
+
+// ---------------------------------------------------------------------------
+// in-place reconnect (DESIGN.md §19): kill the socket, not the worker
+// ---------------------------------------------------------------------------
+
+/// A TCP proxy with a kill switch. [`FlakyProxy::sever`] hard-closes the
+/// live downstream↔upstream socket pair — the peer processes stay
+/// healthy, only the link dies — and the listener keeps accepting, so a
+/// redialing mux reconnects through the same address. This is the
+/// network flap the reconnect suite injects.
+struct FlakyProxy {
+    addr: SocketAddr,
+    live: Arc<Mutex<Vec<TcpStream>>>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+fn proxy_pump(mut from: TcpStream, mut to: TcpStream) {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = to.shutdown(Shutdown::Both);
+    let _ = from.shutdown(Shutdown::Both);
+}
+
+impl FlakyProxy {
+    fn start(upstream: SocketAddr) -> FlakyProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (live2, stop2) = (live.clone(), stop.clone());
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((down, _peer)) => {
+                        let Ok(up) = TcpStream::connect(upstream) else { continue };
+                        let _ = down.set_nodelay(true);
+                        let _ = up.set_nodelay(true);
+                        let (Ok(d2), Ok(u2)) = (down.try_clone(), up.try_clone()) else {
+                            continue;
+                        };
+                        {
+                            let mut g = live2.lock().unwrap_or_else(|e| e.into_inner());
+                            if let (Ok(d3), Ok(u3)) = (down.try_clone(), up.try_clone()) {
+                                g.push(d3);
+                                g.push(u3);
+                            }
+                        }
+                        std::thread::spawn(move || proxy_pump(down, u2));
+                        std::thread::spawn(move || proxy_pump(up, d2));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        FlakyProxy { addr, live, stop, accept_thread: Some(accept_thread) }
+    }
+
+    /// Tear down every live proxied socket pair (both directions).
+    fn sever(&self) {
+        let mut g = self.live.lock().unwrap_or_else(|e| e.into_inner());
+        for s in g.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for FlakyProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.sever();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Mux-level reconnect: requests issued across repeated link kills all
+/// complete exactly once on the same connection id — the dead set never
+/// grows because the connection never actually dies.
+#[test]
+fn mux_connection_heals_in_place_through_a_flaky_link() {
+    let _serial = gauge_guard();
+
+    /// op 7 echoes inline; op 30 echoes after a nap on a deferred
+    /// thread, so severs land while requests are genuinely in flight.
+    struct SlowEcho;
+
+    impl MuxService for SlowEcho {
+        fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError> {
+            match op {
+                7 => Ok(payload.to_vec()),
+                30 => {
+                    std::thread::sleep(Duration::from_millis(40));
+                    Ok(payload.to_vec())
+                }
+                _ => Err(DqError::Protocol(format!("unknown op {op}"))),
+            }
+        }
+
+        fn defer(&self, op: u32) -> bool {
+            op == 30
+        }
+    }
+
+    let server = MuxServer::serve("127.0.0.1:0", Arc::new(SlowEcho)).unwrap();
+    let proxy = FlakyProxy::start(server.local_addr());
+    let mux = Mux::new(MuxConfig::default());
+    let conn = mux.connect(proxy.addr).unwrap();
+    assert_eq!(
+        conn.negotiated.features & bin::FEAT_RESUME,
+        bin::FEAT_RESUME,
+        "resume must be negotiated for in-place reconnect"
+    );
+
+    const N: usize = 20;
+    let (tx, rx) = mpsc::channel::<(usize, Result<Vec<u8>, DqError>)>();
+    for i in 0..N {
+        let tx = tx.clone();
+        mux.request(
+            conn.id,
+            30,
+            vec![i as u8; 8],
+            Box::new(move |res| {
+                let _ = tx.send((i, res));
+            }),
+        );
+        if i % 5 == 4 {
+            proxy.sever(); // mid-stream link kill, requests in flight
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(tx);
+
+    let mut seen = vec![false; N];
+    for _ in 0..N {
+        let (i, res) = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(res.unwrap(), vec![i as u8; 8], "request {i} corrupted across reconnect");
+        assert!(!seen[i], "duplicate completion for request {i}");
+        seen[i] = true;
+    }
+
+    // The connection healed in place: same id, never in the dead set,
+    // and still answering.
+    assert!(!mux.is_dead(conn.id), "flapped connection must not be torn down");
+    assert_eq!(mux.dead_len(), 0, "in-place revival must not populate the dead set");
+    assert_eq!(mux.call(conn.id, 7, b"still alive".to_vec()).unwrap(), b"still alive");
+
+    mux.shutdown();
+}
+
+/// A mux worker endpoint that records how many times each circuit
+/// (keyed by its unique `thetas[0]` marker) executed, and serializes
+/// batches so a bank spans real wall-clock time.
+#[derive(Default)]
+struct CountingWorker {
+    counts: Mutex<HashMap<u32, u32>>,
+}
+
+impl MuxService for CountingWorker {
+    fn handle(&self, op: u32, payload: &[u8]) -> Result<Vec<u8>, DqError> {
+        if op != bin::OP_EXECUTE {
+            return Err(DqError::Protocol(format!("unknown op {op}")));
+        }
+        let jobs = bin::decode_jobs(payload)?;
+        // hold the lock across the nap: batches serialize, so the bank
+        // stays in flight long enough for severs to land mid-bank
+        let mut counts = self.counts.lock().unwrap_or_else(|e| e.into_inner());
+        std::thread::sleep(Duration::from_millis(25));
+        let mut fids = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            *counts.entry(job.thetas[0].to_bits()).or_insert(0) += 1;
+            fids.push(job.thetas[0]);
+        }
+        Ok(bin::encode_fids(&fids))
+    }
+
+    fn defer(&self, op: u32) -> bool {
+        op == bin::OP_EXECUTE // executes block; keep them off the park thread
+    }
+}
+
+/// The tentpole acceptance test: sever the manager→worker socket
+/// repeatedly mid-bank (the worker process stays healthy). The mux must
+/// heal the link in place — no re-registration, no `WorkerLost` bank
+/// failure, every circuit executed exactly once, partial fidelities
+/// streamed in order with zero `bank_status` polls on the wire.
+#[test]
+fn severed_worker_socket_heals_in_place() {
+    let _serial = gauge_guard();
+    let manager = Manager::new(ManagerConfig {
+        heartbeat_period: 1000.0, // evictor effectively off: flaps, not death
+        max_batch: 2,
+        ..Default::default()
+    });
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    // The "worker": a counting mux endpoint behind the flaky proxy. The
+    // manager dials the proxy address back, so severing the proxy kills
+    // exactly the manager→worker socket.
+    let worker = Arc::new(CountingWorker::default());
+    let worker_park = MuxServer::serve("127.0.0.1:0", worker.clone()).unwrap();
+    let proxy = FlakyProxy::start(worker_park.local_addr());
+
+    let reg = RpcClient::connect(addr.as_str(), Duration::from_secs(5)).unwrap();
+    let resp = reg
+        .call(
+            "register",
+            Value::obj()
+                .with("max_qubits", 5usize)
+                .with("addr", proxy.addr.to_string())
+                .with("cru", 0.0)
+                .with("threads", 1usize),
+        )
+        .unwrap();
+    assert!(resp.req_u64("worker_id").unwrap() >= 1);
+    assert_eq!(manager.worker_count(), 1);
+
+    let client = RemoteClient::connect(&addr).unwrap();
+    assert!(client.is_binary());
+    let session = client.session().unwrap();
+    let cfg = QuClassiConfig::new(5, 1).unwrap();
+    // Each circuit carries a unique marker in thetas[0]; the counting
+    // worker echoes it as the fidelity, so the final vector doubles as
+    // a routing/ordering audit.
+    let marker = |i: usize| (i as f32 + 1.0) / 64.0;
+    let pairs: Vec<CircuitPair> = (0..24)
+        .map(|i| {
+            let mut thetas = vec![0.0f32; cfg.n_params()];
+            thetas[0] = marker(i);
+            (thetas, vec![0.5f32; cfg.n_features()])
+        })
+        .collect();
+    let handle = session.submit(cfg, &pairs).unwrap();
+
+    // Kill the socket (not the worker) several times mid-bank, at
+    // staggered offsets, checking invariants between flaps.
+    let mut last_completed = 0usize;
+    for nap_ms in [45u64, 60, 75, 90] {
+        std::thread::sleep(Duration::from_millis(nap_ms));
+        proxy.sever();
+        assert_eq!(manager.worker_count(), 1, "flap must not evict the worker");
+        let st = handle.try_poll().unwrap();
+        assert!(
+            st.completed >= last_completed,
+            "completion count went backwards: {} -> {}",
+            last_completed,
+            st.completed
+        );
+        last_completed = st.completed;
+        // streamed partials carry the right marker at the right index
+        for (i, f) in st.partial_fids.iter().enumerate() {
+            if let Some(f) = f {
+                assert_eq!(*f, marker(i), "streamed fidelity out of order at index {i}");
+            }
+        }
+    }
+
+    // The bank completes without WorkerLost, in submission order.
+    let fids = handle.wait().unwrap();
+    assert_eq!(fids, (0..24).map(marker).collect::<Vec<f32>>());
+
+    // Exactly-once execution: every marker ran once, nothing twice.
+    {
+        let counts = worker.counts.lock().unwrap();
+        assert_eq!(counts.len(), 24, "circuits lost or never executed");
+        for (key, n) in counts.iter() {
+            assert_eq!(*n, 1, "circuit {key:#x} executed {n} times (exactly-once violated)");
+        }
+    }
+
+    // No re-registration, no eviction, no requeue-on-WorkerLost; and
+    // every progress observation came from the push stream, not polls.
+    assert_eq!(manager.worker_count(), 1);
+    let stats = manager.stats();
+    assert_eq!(stats.evictions, 0, "flaps must not evict");
+    assert_eq!(stats.requeues, 0, "flaps must not trigger WorkerLost requeues");
+    assert_eq!(client.status_polls(), 0, "binary plane must not poll bank_status");
+
+    manager.shutdown();
+}
+
+/// Push-stream protocol on a healthy link: a submitted bank streams its
+/// partial fidelities; `try_poll` answers locally and the wire sees
+/// zero `bank_status` calls.
+#[test]
+fn partial_fidelities_stream_without_status_polls() {
+    let _serial = gauge_guard();
+    let manager = Manager::new(ManagerConfig { heartbeat_period: 0.5, ..Default::default() });
+    let server = serve_manager(manager.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let mut worker = qsim_worker(&addr);
+
+    let client = RemoteClient::connect(&addr).unwrap();
+    assert!(client.is_binary());
+    let session = client.session().unwrap();
+    let cfg = QuClassiConfig::new(5, 2).unwrap();
+    let pairs = sample_pairs(&cfg, 8);
+    let want = QsimExecutor.execute_bank(&cfg, &pairs).unwrap();
+
+    let handle = session.submit(cfg, &pairs).unwrap();
+    // Poll aggressively while the bank runs: every answer must come
+    // from the locally accumulated push events.
+    let mut last = 0usize;
+    loop {
+        let st = handle.try_poll().unwrap();
+        assert!(st.completed >= last, "completed went backwards");
+        assert_eq!(st.total, 8);
+        last = st.completed;
+        if !st.pending {
+            assert_eq!(st.completed, 8, "terminal bank must report all circuits");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(handle.wait_timeout(Duration::from_secs(30)).unwrap(), want);
+    assert_eq!(client.status_polls(), 0, "push-negotiated plane must never poll");
+
+    worker.stop();
+    manager.shutdown();
 }

@@ -171,8 +171,8 @@ fn des_conserves_circuits_across_workloads() {
                 .collect();
             let cfg = SimConfig {
                 workers: vec![
-                    SimWorkerSpec { max_qubits: 10, speed: 1.0 },
-                    SimWorkerSpec { max_qubits: 20, speed: 1.0 },
+                    SimWorkerSpec { max_qubits: 10, speed: 1.0, noise: 0.0 },
+                    SimWorkerSpec { max_qubits: 20, speed: 1.0, noise: 0.0 },
                 ],
                 env: EnvParams::gcp_controlled(),
                 calib: Calibration::qiskit_like(),
@@ -183,6 +183,7 @@ fn des_conserves_circuits_across_workloads() {
                 // (asserted inside `simulate`) must hold across shard
                 // routing and cross-shard steals too
                 shards: 1 + sizes.len() % 2,
+                noise_aware_alpha: None,
                 seed: sizes.iter().sum::<usize>() as u64,
             };
             let result = sim::simulate(&cfg, &jobs);
@@ -697,13 +698,14 @@ fn single_tenant_never_faster_overall() {
                 })
                 .collect();
             let mk = |tenancy: Tenancy| SimConfig {
-                workers: vec![SimWorkerSpec { max_qubits: 10, speed: 1.0 }; 3],
+                workers: vec![SimWorkerSpec { max_qubits: 10, speed: 1.0, noise: 0.0 }; 3],
                 env: EnvParams::gcp_controlled(),
                 calib: Calibration::qiskit_like(),
                 heartbeat_period: 5.0,
                 tenancy,
                 steal: true,
                 shards: 1,
+                noise_aware_alpha: None,
                 seed: seed as u64,
             };
             let single = sim::simulate(&mk(Tenancy::SingleTenant), &jobs);
